@@ -1,0 +1,68 @@
+//! Accelerator design-space exploration: sweep the cycle-level ESACT
+//! simulator across the paper's model zoo and across hardware variants
+//! (PE array shape, window size), printing the mechanism waterfall for
+//! each — the tool an architect would use to re-evaluate the paper's
+//! design choices on a new workload.
+//!
+//! ```bash
+//! cargo run --release --example accelerator_sim
+//! ```
+
+use esact::config::{self, HardwareConfig, SplsConfig};
+use esact::sim::{ablation, simulate_model, Features};
+use esact::workloads::bench26::SparsityProfile;
+
+fn main() {
+    let spls = SplsConfig::default();
+    let profile = SparsityProfile { q: 0.6, kv: 0.6, attn: 0.946, ffn: 0.5 };
+    let models = [
+        config::bert_base(128),
+        config::bert_base(512),
+        config::bert_large(512),
+        config::gpt2(512),
+        config::vit_b16(),
+    ];
+
+    println!("== mechanism waterfall per model (paper Fig 20 shape) ==");
+    let hw = HardwareConfig::default();
+    for cfg in &models {
+        let [d, s, p, f] = ablation(cfg, &hw, &spls, &profile);
+        println!(
+            "{:>11} L={:<4} dense {:>9.3} ms | SPLS ×{:.2} | +prog ×{:.2} | +dyn ×{:.2} | util {:.2} | {:.2} TOPS/W",
+            cfg.name,
+            cfg.seq_len,
+            d.seconds(&hw) * 1e3,
+            d.cycles as f64 / s.cycles as f64,
+            s.cycles as f64 / p.cycles as f64,
+            p.cycles as f64 / f.cycles as f64,
+            f.pe_utilization(&hw),
+            f.tops_per_watt(&hw),
+        );
+    }
+
+    println!("\n== PE-array shape ablation (BERT-Base, L=128) ==");
+    let cfg = config::bert_base(128);
+    for (rows, cols) in [(8usize, 128usize), (16, 64), (32, 32), (64, 16)] {
+        let hw = HardwareConfig { pe_rows: rows, pe_cols: cols, ..HardwareConfig::default() };
+        let r = simulate_model(&cfg, &hw, &spls, &profile, Features::FULL);
+        println!(
+            "  {rows:>2}×{cols:<3} {:>9} cycles | util {:.3} | {:.2} TOPS/W",
+            r.cycles,
+            r.pe_utilization(&hw),
+            r.tops_per_watt(&hw),
+        );
+    }
+
+    println!("\n== window-size ablation (similarity cost vs coverage) ==");
+    for w in [2usize, 4, 8, 16, 32] {
+        let spls_w = SplsConfig { window: w, ..spls };
+        let hw = HardwareConfig::default();
+        let r = simulate_model(&cfg, &hw, &spls_w, &profile, Features::FULL);
+        let cmp = esact::workloads::flops::local_similarity_comparisons(128, w);
+        println!(
+            "  w={w:<3} {:>9} cycles | sim comparisons/layer {cmp:>6} | {:.2} TOPS/W",
+            r.cycles,
+            r.tops_per_watt(&hw),
+        );
+    }
+}

@@ -1,0 +1,84 @@
+//! Quickstart: the SPLS pipeline end to end on one sequence.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Walks the paper's Fig 5(a) flow: HLog attention prediction through
+//! the bit-level unit model → top-k SPA → windowed local similarity →
+//! Q/KV/FFN sparsification → sparse forward with recovery → and the
+//! same masks through the AOT-compiled PJRT executable.
+
+use std::path::Path;
+
+use esact::config::SplsConfig;
+use esact::model::{self, TinyWeights};
+use esact::quant::QuantMethod;
+use esact::runtime::{Arg, ArtifactSet};
+use esact::util::rng::Xoshiro256pp;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new("artifacts");
+    let weights = TinyWeights::load(&dir.join("tiny_weights.bin"))?;
+    let spls = SplsConfig::default();
+    println!("SPLS config: {spls:?}\n");
+
+    // a synthetic sequence with local token similarity
+    let mut rng = Xoshiro256pp::new(7);
+    let (tokens, label) = model::synth::gen_example(&mut rng, weights.cfg.seq_len);
+    println!("sequence of {} tokens, true label {label}", tokens.len());
+
+    // 1. predict sparsity on real activations (bit-level unit model)
+    let plans = model::plan_model(&weights, &tokens, &spls, QuantMethod::Hlog);
+    for (i, p) in plans.iter().enumerate() {
+        println!(
+            "layer {i}: Q sparsity {:.3} | KV {:.3} | attention {:.3} | FFN {:.3}",
+            p.q_sparsity(),
+            p.kv_sparsity(),
+            p.attn_sparsity(),
+            p.ffn_sparsity()
+        );
+    }
+
+    // 2. dense vs SPLS-sparse forward on the host
+    let dense = model::forward_dense(&weights, &tokens);
+    let sparse = model::forward_sparse(&weights, &tokens, &plans);
+    let argmax = |v: &[f32]| esact::model::tensor::argmax(v);
+    println!(
+        "\nhost dense  → class {} | host SPLS → class {}",
+        argmax(&dense),
+        argmax(&sparse)
+    );
+
+    // 3. the same masks through the AOT PJRT executable (serve path)
+    let artifacts = ArtifactSet::load(dir)?;
+    let l = weights.cfg.seq_len;
+    let mut masks = Vec::new();
+    for p in &plans {
+        for h in &p.heads {
+            for r in 0..l {
+                let src = h.sim.rep[r];
+                for c in 0..l {
+                    masks.push(if h.mask[(src, c)] { 1.0f32 } else { 0.0 });
+                }
+            }
+        }
+    }
+    let logits = artifacts.masked_b1.run_f32(&[
+        Arg::I32(&tokens, &[1, l]),
+        Arg::F32(&masks, &[1, 2, 4, l, l]),
+    ])?;
+    println!("AOT masked  → class {} (PJRT, python-free)", argmax(&logits));
+
+    // the FLOP ledger
+    let cfg = esact::config::ModelConfig::new("tiny", l, 64, 4, 2, 256, false);
+    let (overall, qkv, attn, ffn) = esact::spls::computation_reduction(&cfg, &plans);
+    println!(
+        "\ncomputation reduction: overall {:.1}% (QKV {:.1}%, attention {:.1}%, FFN {:.1}%)",
+        100.0 * overall,
+        100.0 * qkv,
+        100.0 * attn,
+        100.0 * ffn
+    );
+    Ok(())
+}

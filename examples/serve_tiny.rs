@@ -1,0 +1,87 @@
+//! End-to-end serving driver (the repo's E2E validation workload, see
+//! EXPERIMENTS.md §E2E): load the AOT-compiled tiny classifier, serve a
+//! stream of synthetic requests through the coordinator (dynamic
+//! batcher → PJRT executables), in both dense and SPLS modes, and
+//! report accuracy, latency, and throughput.
+//!
+//! ```bash
+//! cargo run --release --example serve_tiny [n_requests]
+//! ```
+
+use std::path::Path;
+use std::sync::mpsc;
+use std::time::Instant;
+
+use esact::config::SplsConfig;
+use esact::coordinator::server::Mode;
+use esact::coordinator::{BatchPolicy, Request, Server};
+use esact::model::{self, TestSet};
+use esact::util::rng::Xoshiro256pp;
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(128);
+    let dir = Path::new("artifacts");
+    let set = TestSet::load(&dir.join("tiny_testset.bin"))?;
+
+    for mode in [Mode::Dense, Mode::Spls] {
+        let srv = Server::new(dir, mode, SplsConfig::default())?;
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (rtx, rrx) = mpsc::channel::<esact::coordinator::Reply>();
+
+        // producer: replay the held-out test set as requests
+        let reqs: Vec<Request> = (0..n)
+            .map(|i| Request {
+                id: i as u64,
+                tokens: set.tokens[i % set.len()].clone(),
+                arrived: Instant::now(),
+            })
+            .collect();
+        let labels: Vec<i32> = (0..n).map(|i| set.labels[i % set.len()]).collect();
+        // Poisson arrivals at ~2× the SPLS-mode service rate exercise
+        // the batcher under realistic load (coordinator::loadgen)
+        let producer = std::thread::spawn(move || {
+            let mut rng = Xoshiro256pp::new(1);
+            let trace = esact::coordinator::arrivals(
+                &mut rng,
+                esact::coordinator::Arrival::Poisson { rate: 500.0 },
+                reqs.len(),
+            );
+            let start = Instant::now();
+            for (mut r, at) in reqs.into_iter().zip(trace) {
+                if let Some(wait) = at.0.checked_sub(start.elapsed()) {
+                    std::thread::sleep(wait);
+                }
+                r.arrived = Instant::now();
+                if tx.send(r).is_err() {
+                    break;
+                }
+            }
+        });
+        let collector = std::thread::spawn(move || {
+            let mut correct = 0usize;
+            let mut total = 0usize;
+            for reply in rrx.iter() {
+                let pred = model::tensor::argmax(&reply.logits) as i32;
+                correct += usize::from(pred == labels[reply.id as usize]);
+                total += 1;
+            }
+            (correct, total)
+        });
+
+        let metrics = srv.serve(rx, rtx, BatchPolicy::default())?;
+        producer.join().unwrap();
+        let (correct, total) = collector.join().unwrap();
+
+        println!(
+            "{mode:?}: {total} replies | accuracy {:.4} | {} batches, {} padded | \
+             mean latency {:.2} ms (max {:.2}) | {:.0} req/s",
+            correct as f64 / total.max(1) as f64,
+            metrics.batches,
+            metrics.padded_slots,
+            metrics.mean_latency().as_secs_f64() * 1e3,
+            metrics.max_latency.as_secs_f64() * 1e3,
+            metrics.throughput_rps()
+        );
+    }
+    Ok(())
+}

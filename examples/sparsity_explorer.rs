@@ -1,0 +1,67 @@
+//! Sparsity-accuracy frontier explorer: grid-search the SPLS
+//! hyperparameters (k, s, f) on the tiny substrate and print the
+//! Pareto frontier — the tool behind the paper's §V-B methodology
+//! ("fine-grained grid search over the (s, f) space ... retain those
+//! in which the performance degradation remains within 1%").
+//!
+//! ```bash
+//! cargo run --release --example sparsity_explorer [n_eval]
+//! ```
+
+use std::path::Path;
+
+use esact::config::SplsConfig;
+use esact::model::{self, TestSet, TinyWeights};
+use esact::quant::QuantMethod;
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(48);
+    let dir = Path::new("artifacts");
+    let w = TinyWeights::load(&dir.join("tiny_weights.bin"))?;
+    let set = TestSet::load(&dir.join("tiny_testset.bin"))?;
+    let dense = model::eval_dense(&w, &set, n);
+    println!("dense accuracy {:.4} over {n} sequences\n", dense.accuracy);
+
+    let mut frontier: Vec<(f64, f64, SplsConfig)> = Vec::new(); // (reduction, loss, cfg)
+    for k in [0.1f32, 0.12, 0.15, 0.2] {
+        for s in [0.2f32, 0.4, 0.6, 0.8] {
+            for f in [2usize, 3] {
+                let spls = SplsConfig { top_k: k, sim_threshold: s, ffn_threshold: f, window: 8 };
+                let r = model::eval_sparse(&w, &set, n, &spls, QuantMethod::Hlog);
+                // rough reduction proxy from measured component sparsity
+                let reduction = 0.3 * (r.q_sparsity + r.kv_sparsity) / 2.0
+                    + 0.1 * r.attn_sparsity
+                    + 0.6 * r.ffn_sparsity;
+                let loss = r.loss_vs(&dense);
+                let tag = if loss <= 1.0 { "≤1% ✓" } else { "      " };
+                println!(
+                    "k={k:.2} s={s:.1} f={f}: acc {:.4} (loss {loss:+.2}) | \
+                     Q {:.2} KV {:.2} attn {:.2} FFN {:.2} | est. reduction {:.1}% {tag}",
+                    r.accuracy,
+                    r.q_sparsity,
+                    r.kv_sparsity,
+                    r.attn_sparsity,
+                    r.ffn_sparsity,
+                    100.0 * reduction
+                );
+                if loss <= 1.0 {
+                    frontier.push((reduction, loss, spls));
+                }
+            }
+        }
+    }
+
+    frontier.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    println!("\nbest loss ≤ 1% operating points:");
+    for (red, loss, cfg) in frontier.iter().take(5) {
+        println!(
+            "  k={:.2} s={:.1} f={} → est. reduction {:.1}% at {:+.2} pts",
+            cfg.top_k,
+            cfg.sim_threshold,
+            cfg.ffn_threshold,
+            100.0 * red,
+            loss
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,112 @@
+"""AOT export: lower the L2 model (with L1 Pallas kernels inside) to HLO
+*text* artifacts the rust runtime loads via the xla crate.
+
+HLO text — NOT ``lowered.compile()``/``.serialize()`` — is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+xla_extension 0.5.1 (the version the published xla 0.1.6 crate binds)
+rejects; the text parser reassigns ids and round-trips cleanly
+(/opt/xla-example/README.md). Lowered with ``return_tuple=True`` so the
+rust side unwraps with ``to_tuple1()``.
+
+Exported artifacts (all shapes static, weights baked as constants — the
+deployment model is "weights compiled into the executable", like a real
+single-model serving binary):
+
+  tiny_dense_b1.hlo.txt      tokens i32[1,64]                 -> logits f32[1,16]
+  tiny_dense_b8.hlo.txt      tokens i32[8,64]                 -> logits f32[8,16]
+  tiny_masked_b1.hlo.txt     tokens i32[1,64], masks f32[1,2,4,64,64] -> logits
+  tiny_masked_b8.hlo.txt     batch-8 variant
+  tiny_attprobs_b1.hlo.txt   tokens i32[1,64] -> attention probs f32[1,2,4,64,64]
+  hlog_matmul_64.hlo.txt     x i32[64,64], w i32[64,64]       -> i32[64,64]
+  masked_attention_64.hlo.txt q,k,v f32[64,16], mask f32[64,64] -> f32[64,16]
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .io import read_eswt
+from .kernels.hlog import hlog_matmul
+from .kernels.sparse_attention import masked_attention
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the default elides big weight
+    # constants as '{...}', which the HLO text parser silently
+    # reads back as zeros — the entire model would serve zeros.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def dump(fn, example_args, path):
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {path} ({len(text)/1e6:.2f} MB)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    out = args.out_dir
+    os.makedirs(out, exist_ok=True)
+
+    cfg = M.TinyConfig()
+    weights_path = os.path.join(out, "tiny_weights.bin")
+    if not os.path.exists(weights_path):
+        raise SystemExit("run `python -m compile.train_tiny` first (make artifacts does)")
+    params = {k: jnp.asarray(v) for k, v in read_eswt(weights_path).items()}
+
+    l, nl, h = cfg.seq_len, cfg.n_layers, cfg.n_heads
+    tok = jax.ShapeDtypeStruct((1, l), jnp.int32)
+    tok8 = jax.ShapeDtypeStruct((8, l), jnp.int32)
+    msk = jax.ShapeDtypeStruct((1, nl, h, l, l), jnp.float32)
+    msk8 = jax.ShapeDtypeStruct((8, nl, h, l, l), jnp.float32)
+
+    # Weights already snapped to int8 grid by train_tiny -> quant=False
+    # (re-fake-quanting a snapped tensor is a no-op but bloats the HLO).
+    dense1 = jax.vmap(lambda t: M.forward_dense(params, t, cfg, quant=False))
+    masked = jax.vmap(lambda t, m: M.forward_masked(params, t, m, cfg, quant=False))
+    probs = jax.vmap(lambda t: M.attention_probs(params, t, cfg, quant=False))
+
+    dump(lambda t: (dense1(t),), (tok,), f"{out}/tiny_dense_b1.hlo.txt")
+    dump(lambda t: (dense1(t),), (tok8,), f"{out}/tiny_dense_b8.hlo.txt")
+    dump(lambda t, m: (masked(t, m),), (tok, msk), f"{out}/tiny_masked_b1.hlo.txt")
+    dump(lambda t, m: (masked(t, m),), (tok8, msk8), f"{out}/tiny_masked_b8.hlo.txt")
+    dump(lambda t: (probs(t),), (tok,), f"{out}/tiny_attprobs_b1.hlo.txt")
+
+    xi = jax.ShapeDtypeStruct((64, 64), jnp.int32)
+    dump(lambda x, w: (hlog_matmul(x, w),), (xi, xi), f"{out}/hlog_matmul_64.hlo.txt")
+
+    qf = jax.ShapeDtypeStruct((64, 16), jnp.float32)
+    mf = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    dump(
+        lambda q, k, v, m: (masked_attention(q, k, v, m),),
+        (qf, qf, qf, mf),
+        f"{out}/masked_attention_64.hlo.txt",
+    )
+
+    # Stamp a manifest so `make artifacts` can skip when inputs unchanged.
+    with open(f"{out}/MANIFEST.txt", "w") as f:
+        for name in sorted(os.listdir(out)):
+            if name.endswith(".hlo.txt") or name.endswith(".bin"):
+                f.write(f"{name} {os.path.getsize(os.path.join(out, name))}\n")
+    print("AOT export complete")
+
+
+if __name__ == "__main__":
+    main()

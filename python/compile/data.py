@@ -1,0 +1,85 @@
+"""Synthetic local-similarity workload generator.
+
+Stands in for the paper's GLUE/SQuAD/WikiText corpora (DESIGN.md
+§Substitutions). Sequences are built from *runs* of tokens drawn from the
+same semantic cluster — the discrete analogue of the paper's observation
+that "neighboring tokens often carry similar semantics" (paper §II-B), so
+attention rows inside a local window become similar and SPLS has real
+structure to exploit. The label is the majority cluster, which forces the
+model to aggregate over the whole sequence (attention is necessary, the
+task is not solvable from one position).
+
+The same generator is mirrored in rust (rust/src/workloads/synth.rs) with
+the same xoshiro256++ PRNG so both sides can regenerate identical splits
+from a seed.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+N_CLUSTERS = 16
+VARIANTS = 4  # tokens per cluster; vocab = N_CLUSTERS * VARIANTS
+
+
+class Xoshiro256pp:
+    """xoshiro256++ PRNG, bit-exact with rust/src/util/rng.rs."""
+
+    def __init__(self, seed: int):
+        # splitmix64 seeding, like the rust side.
+        s = seed & 0xFFFFFFFFFFFFFFFF
+        self.s = []
+        for _ in range(4):
+            s = (s + 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF
+            z = s
+            z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & 0xFFFFFFFFFFFFFFFF
+            z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & 0xFFFFFFFFFFFFFFFF
+            self.s.append(z ^ (z >> 31))
+
+    @staticmethod
+    def _rotl(x: int, k: int) -> int:
+        return ((x << k) | (x >> (64 - k))) & 0xFFFFFFFFFFFFFFFF
+
+    def next_u64(self) -> int:
+        s = self.s
+        result = (self._rotl((s[0] + s[3]) & 0xFFFFFFFFFFFFFFFF, 23) + s[0]) & 0xFFFFFFFFFFFFFFFF
+        t = (s[1] << 17) & 0xFFFFFFFFFFFFFFFF
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = self._rotl(s[3], 45)
+        return result
+
+    def below(self, n: int) -> int:
+        """Uniform in [0, n) via modulo (n << 2^64, bias negligible &
+        identical on both sides, which is what matters)."""
+        return self.next_u64() % n
+
+
+def gen_example(rng: Xoshiro256pp, seq_len: int) -> tuple[np.ndarray, int]:
+    """One (tokens, label) pair: runs of 2..8 same-cluster tokens."""
+    toks = np.empty(seq_len, np.int32)
+    counts = np.zeros(N_CLUSTERS, np.int64)
+    pos = 0
+    while pos < seq_len:
+        cluster = rng.below(N_CLUSTERS)
+        run = 2 + rng.below(7)  # 2..8
+        run = min(run, seq_len - pos)
+        for _ in range(run):
+            toks[pos] = cluster * VARIANTS + rng.below(VARIANTS)
+            pos += 1
+        counts[cluster] += run
+    # Majority cluster; ties -> lowest cluster id (np.argmax convention,
+    # mirrored in rust).
+    label = int(np.argmax(counts))
+    return toks, label
+
+
+def gen_batch(rng: Xoshiro256pp, n: int, seq_len: int):
+    xs = np.empty((n, seq_len), np.int32)
+    ys = np.empty((n,), np.int32)
+    for i in range(n):
+        xs[i], ys[i] = gen_example(rng, seq_len)
+    return xs, ys

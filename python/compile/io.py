@@ -1,0 +1,60 @@
+"""ESWT binary tensor container — the weight/dataset interchange format
+between the python compile path and the rust runtime.
+
+Layout (little-endian):
+
+  magic   b"ESWT"
+  version u32 = 1
+  count   u32
+  count x records:
+    name_len u16, name bytes (utf-8)
+    dtype    u8   (0 = f32, 1 = i32, 2 = u16)
+    ndim     u8
+    dims     ndim x u32
+    data     raw, row-major
+
+The rust reader lives in rust/src/util/eswt.rs and round-trips exactly.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+_DTYPES = {0: np.float32, 1: np.int32, 2: np.uint16}
+_CODES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1, np.dtype(np.uint16): 2}
+
+
+def write_eswt(path: str, tensors: dict[str, np.ndarray]) -> None:
+    with open(path, "wb") as f:
+        f.write(b"ESWT")
+        f.write(struct.pack("<II", 1, len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            code = _CODES[arr.dtype]
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", code, arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+def read_eswt(path: str) -> dict[str, np.ndarray]:
+    with open(path, "rb") as f:
+        assert f.read(4) == b"ESWT", "bad magic"
+        version, count = struct.unpack("<II", f.read(8))
+        assert version == 1
+        out = {}
+        for _ in range(count):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode("utf-8")
+            code, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+            dt = np.dtype(_DTYPES[code])
+            n = int(np.prod(dims)) if dims else 1
+            data = np.frombuffer(f.read(n * dt.itemsize), dtype=dt)
+            out[name] = data.reshape(dims)
+        return out

@@ -1,0 +1,136 @@
+"""L1 Pallas kernels: HLog prediction matmul and int8 dense matmul.
+
+This is the TPU re-expression of the paper's bit-level prediction unit
+(paper §IV-B). The ASIC computes HLog products with a shift detector +
+shift-judgment array (add-only multiplies) + one-hot converter. A TPU has
+no bit-level ALU control, so the *same insight* — predict attention in a
+cheap log-ish domain before QK generation — maps to:
+
+  * HLog quantization evaluated with integer compare/shift ops in VMEM
+    (the shift-detector logic, vectorized on the VPU);
+  * the prediction matmul evaluated on the MXU over HLog-level operands.
+    Because HLog levels are exact small integers, an f32/int32 MXU matmul
+    is bit-identical to the ASIC's shift-add accumulation.
+
+BlockSpec tiling expresses the HBM->VMEM schedule that the ASIC realizes
+with its SRAM-banked progressive window pipeline: the (M, K)x(K, N)
+product is tiled (bm, bk)x(bk, bn) with the K loop innermost, so each
+VMEM-resident tile is reused bn/bm times (see DESIGN.md
+§Hardware-Adaptation for the VMEM/MXU estimate).
+
+All kernels run with ``interpret=True``: the CPU PJRT client cannot
+execute Mosaic custom-calls; correctness is validated on this path and
+real-TPU performance is estimated structurally.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hlog_q(x):
+    """Shift-detector HLog quantization on an int32 tile (vector ops only).
+
+    Mirrors ``ref.hlog_quantize``; kept separate because inside a Pallas
+    kernel we want the comparison-ladder leading-one detector rather than
+    a gather over a level table.
+    """
+    a = jnp.abs(x)
+    sign = jnp.sign(x)
+    i = jnp.zeros_like(a)
+    for t in (2, 4, 8, 16, 32, 64, 128):
+        i = i + (a >= t).astype(a.dtype)
+    b1 = jnp.where(i >= 1, (a >> jnp.maximum(i - 1, 0)) & 1, 0)
+    b0 = jnp.where(i >= 2, (a >> jnp.maximum(i - 2, 0)) & 1, 0)
+    e = i + (b1 & b0)
+    form = b1 ^ b0
+    mag = jnp.where(form == 1, 3 * (1 << jnp.maximum(e - 1, 0)), 1 << e)
+    return jnp.where(a == 0, 0, sign * mag)
+
+
+def _block(dim: int, target: int) -> int:
+    """Largest divisor of ``dim`` that is <= target (whole-tile fallback)."""
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def _hlog_matmul_kernel(x_ref, w_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    qx = _hlog_q(x_ref[...].astype(jnp.int32))
+    qw = _hlog_q(w_ref[...].astype(jnp.int32))
+    o_ref[...] += jax.lax.dot_general(
+        qx, qw, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+
+
+def hlog_matmul(x, w, *, bm: int = 128, bn: int = 128, bk: int = 128):
+    """HLog prediction matmul: (M, K) int8-valued x (K, N) int8-valued -> int32.
+
+    Quantizes both operands to HLog levels inside the kernel (fused with
+    the matmul tile, as the ASIC fuses SD with SJA) and accumulates exactly.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"shape mismatch {x.shape} @ {w.shape}"
+    bm, bn, bk = _block(m, bm), _block(n, bn), _block(k, bk)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _hlog_matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=True,
+    )(x.astype(jnp.int32), w.astype(jnp.int32))
+
+
+def _int8_matmul_kernel(x_ref, w_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jax.lax.dot_general(
+        x_ref[...].astype(jnp.int32),
+        w_ref[...].astype(jnp.int32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def int8_matmul(x, w, *, bm: int = 128, bn: int = 128, bk: int = 128):
+    """Formal-phase int8 matmul (the paper quantizes all linear weights to
+    8 bit): exact int32 accumulation, same tiling as ``hlog_matmul``."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"shape mismatch {x.shape} @ {w.shape}"
+    bm, bn, bk = _block(m, bm), _block(n, bn), _block(k, bk)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _int8_matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=True,
+    )(x.astype(jnp.int32), w.astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=())
+def hlog_quantize(x):
+    """Standalone jit-able HLog quantization (VPU path), for L2 use."""
+    return _hlog_q(jnp.asarray(x, jnp.int32))

@@ -1,0 +1,208 @@
+"""Pure-jnp reference oracles for the ESACT L1 kernels.
+
+Everything in this file is the *correctness contract*: the Pallas kernels
+(`hlog.py`, `sparse_attention.py`) and the rust-side software model of the
+bit-level prediction unit (`rust/src/spls/predict.rs`) must match these
+functions bit-exactly (integer paths) or to float tolerance (softmax path).
+
+The HLog quantization semantics follow paper §III-A / §IV-B exactly:
+
+  levels(n)  = {2^0, 2^1, 2^0+2^1, 2^2, ..., 2^{n-2}, 2^{n-3}+2^{n-2}, 2^{n-1}}
+  i.e. every power of two plus the midpoints 3·2^{m-1} between adjacent
+  powers; ties round to the *higher* level.
+
+The shift-detector bit rule (Fig 12): with I the index of the leading one
+of |x| and (b1, b0) the two bits below it,
+
+  form = b1 XOR b0          (1 -> sum form 2^e + 2^{e-1}, 0 -> single 2^e)
+  e    = I + (b1 AND b0)    (pattern 11 rounds up to the next power)
+
+which reproduces nearest-level-with-ties-up for every int8 input.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# HLog quantization
+# ---------------------------------------------------------------------------
+
+
+def hlog_levels(nbits: int = 8) -> list[int]:
+    """The positive HLog quantization level set for an ``nbits`` input."""
+    lv = []
+    for m in range(nbits):
+        lv.append(2**m)
+        if 1 <= m <= nbits - 2:
+            lv.append(2**m + 2 ** (m - 1))
+    return sorted(set(lv))
+
+
+def _floor_log2_u8(a):
+    """Integer floor(log2(a)) for a in [1, 255], computed by comparisons.
+
+    Comparison-count form is exact (no float log2 edge cases) and mirrors
+    the leading-one detector of the hardware shift detector.
+    """
+    i = jnp.zeros_like(a)
+    for t in (2, 4, 8, 16, 32, 64, 128):
+        i = i + (a >= t).astype(a.dtype)
+    return i
+
+
+def hlog_quantize(x):
+    """HLog-quantize an int8-valued array. Returns int32 levels (signed).
+
+    Matches the shift detector: nearest HLog level, ties to the higher one.
+    """
+    x = jnp.asarray(x, jnp.int32)
+    a = jnp.abs(x)
+    sign = jnp.sign(x)
+    i = _floor_log2_u8(jnp.maximum(a, 1))
+    b1 = jnp.where(i >= 1, (a >> jnp.maximum(i - 1, 0)) & 1, 0)
+    b0 = jnp.where(i >= 2, (a >> jnp.maximum(i - 2, 0)) & 1, 0)
+    e = i + (b1 & b0)
+    form = b1 ^ b0
+    mag = jnp.where(form == 1, 3 * (1 << jnp.maximum(e - 1, 0)), 1 << e)
+    return jnp.where(a == 0, 0, sign * mag)
+
+
+def hlog_code(x):
+    """The 5-bit shift-detector code (sign, e[3], form) as separate planes.
+
+    Returns (sign, e, form) int32 arrays; ``sign`` in {-1, 0, +1}.
+    Used by tests to check the bit-level unit's encoding against rust.
+    """
+    x = jnp.asarray(x, jnp.int32)
+    a = jnp.abs(x)
+    i = _floor_log2_u8(jnp.maximum(a, 1))
+    b1 = jnp.where(i >= 1, (a >> jnp.maximum(i - 1, 0)) & 1, 0)
+    b0 = jnp.where(i >= 2, (a >> jnp.maximum(i - 2, 0)) & 1, 0)
+    e = i + (b1 & b0)
+    form = b1 ^ b0
+    return jnp.sign(x), jnp.where(a == 0, 0, e), jnp.where(a == 0, 0, form)
+
+
+def hlog_matmul(x, w):
+    """Reference HLog prediction matmul: quantize both operands to HLog
+    levels, multiply exactly, accumulate in int32.
+
+    x: (M, K) int8-valued, w: (K, N) int8-valued -> (M, N) int32.
+
+    This is what the bit-level prediction unit computes with shift-adds
+    (SJA three-case products + converter accumulation); values are exact
+    integers so the float/Pallas implementations must agree bit-for-bit.
+    """
+    qx = hlog_quantize(x)
+    qw = hlog_quantize(w)
+    return jnp.matmul(qx, qw, preferred_element_type=jnp.int32)
+
+
+def requantize_sym8(x):
+    """Symmetric per-tensor requantization of an int32 tensor to int8.
+
+    Round-half-away-from-zero (matches rust ``f32::round``); scale chosen
+    so max |x| -> 127. Returns (int8-valued int32 array, float scale).
+    """
+    x = jnp.asarray(x, jnp.float32)
+    maxabs = jnp.maximum(jnp.max(jnp.abs(x)), 1e-9)
+    s = 127.0 / maxabs
+    q = jnp.sign(x) * jnp.floor(jnp.abs(x) * s + 0.5)
+    return jnp.clip(q, -127, 127).astype(jnp.int32), s
+
+
+def predict_attention(x, wq, wk):
+    """Full SPLS attention prediction (paper Fig 5a, pre-softmax scores).
+
+    x: (L, D) int8 embeddings; wq, wk: (D, Dh) int8 weights.
+    Returns the PAM (L, L) int32: HLog-predicted Q/K, 8-bit requantized,
+    HLog-predicted Q @ K^T.
+    """
+    q_pred = hlog_matmul(x, wq)
+    k_pred = hlog_matmul(x, wk)
+    q8, _ = requantize_sym8(q_pred)
+    k8, _ = requantize_sym8(k_pred)
+    return hlog_matmul(q8, jnp.transpose(k8))
+
+
+# ---------------------------------------------------------------------------
+# PoT / APoT comparison quantizers (paper Fig 6/7, Figs 17/18)
+# ---------------------------------------------------------------------------
+
+
+def pot_levels(nbits: int = 8) -> list[int]:
+    return [2**m for m in range(nbits)]
+
+
+def apot_levels(nbits: int = 8, a: int = 2) -> list[int]:
+    """Additive powers-of-two with ``a`` = 2 one-hot terms (paper's setting)."""
+    base = [2**m for m in range(nbits)]
+    lv = set(base)
+    for i, hi in enumerate(base):
+        for lo in base[:i]:
+            if hi + lo < 2**nbits:
+                lv.add(hi + lo)
+    return sorted(lv)
+
+
+def _project(x, levels):
+    """Project |x| to the nearest level (ties to the higher level)."""
+    x = jnp.asarray(x, jnp.int32)
+    a = jnp.abs(x)
+    lv = jnp.asarray(levels, jnp.int32)
+    d = jnp.abs(a[..., None] - lv[None, ...])
+    # argmin picks the first minimum; order levels descending so ties go up.
+    order = jnp.argsort(-lv)
+    dd = d[..., order]
+    idx = jnp.argmin(dd, axis=-1)
+    mag = lv[order][idx]
+    return jnp.where(a == 0, 0, jnp.sign(x) * mag)
+
+
+def pot_quantize(x, nbits: int = 8):
+    return _project(x, pot_levels(nbits))
+
+
+def apot_quantize(x, nbits: int = 8):
+    return _project(x, apot_levels(nbits))
+
+
+# ---------------------------------------------------------------------------
+# Sparse (masked) attention
+# ---------------------------------------------------------------------------
+
+
+def masked_attention(q, k, v, mask, scale=None):
+    """Reference SPA-masked attention.
+
+    q, k, v: (L, Dh) f32; mask: (L, L) f32 in {0, 1} (1 = keep).
+    Rows of ``mask`` corresponding to similar vectors are expected to be
+    copies of their critical row, so the recovered output is exact row
+    replication. Returns (L, Dh) f32.
+    """
+    dh = q.shape[-1]
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    s = jnp.matmul(q, k.T) * scale
+    neg = jnp.asarray(-1e30, s.dtype)
+    s = jnp.where(mask > 0, s, neg)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p * (mask > 0)
+    denom = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    return jnp.matmul(p / denom, v)
+
+
+def topk_mask(scores, k_ratio: float):
+    """Row-wise top-k mask over a (L, L) score matrix (paper's SPA step).
+
+    Keeps ceil(k_ratio * L) entries per row; ties broken toward lower
+    column index (stable argsort), matching the rust implementation.
+    """
+    l = scores.shape[-1]
+    keep = max(1, int(np.ceil(k_ratio * l)))
+    idx = jnp.argsort(-scores, axis=-1, stable=True)[..., :keep]
+    mask = jnp.zeros_like(scores, dtype=jnp.float32)
+    rows = jnp.arange(scores.shape[0])[:, None]
+    return mask.at[rows, idx].set(1.0)

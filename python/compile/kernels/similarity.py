@@ -1,0 +1,90 @@
+"""L1 Pallas kernel: fixed-window pairwise L1 distances over SPA rows.
+
+The local-similarity stage of SPLS (paper §III-B) compares rows of the
+sparsified predicted attention inside non-overlapping windows of w rows.
+On the ASIC this is the 8×26-subtractor bank; on the TPU mapping each
+window is one grid step whose (w, L) row panel sits in VMEM and whose
+pairwise |a−b| reductions run on the VPU — windows are independent, so
+the grid parallelizes exactly like the hardware's per-window units.
+
+The kernel emits the dense (n_windows, w, w) distance tensor plus the
+per-row magnitude sums needed for normalization; the greedy
+critical/similar assignment stays on the host (it is sequential and
+cheap, and the rust coordinator owns it at serve time).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _window_kernel(spa_ref, dist_ref, mass_ref):
+    rows = spa_ref[...]  # (w, L)
+    a = rows[:, None, :]  # (w, 1, L)
+    b = rows[None, :, :]  # (1, w, L)
+    # output blocks carry the leading window axis of size 1
+    dist_ref[...] = jnp.sum(jnp.abs(a - b), axis=-1)[None]
+    mass_ref[...] = jnp.sum(jnp.abs(rows), axis=-1)[None]
+
+
+def window_l1_distances(spa, *, window: int = 8):
+    """Pairwise in-window L1 distances.
+
+    spa: (L, L) float32 (int-valued); L must be divisible by ``window``
+    (callers pad the remainder window — mirroring the paper's "remaining
+    rows are grouped into an additional window").
+
+    Returns (dist, mass): dist (n_windows, w, w) f32, mass (n_windows, w)
+    f32 where ``dist[k, i, j] = Σ|spa[kw+i] − spa[kw+j]|`` and
+    ``mass[k, i] = Σ|spa[kw+i]|``.
+    """
+    l = spa.shape[0]
+    assert spa.shape == (l, l), "SPA must be square"
+    assert l % window == 0, "pad the remainder window before calling"
+    n_windows = l // window
+    return pl.pallas_call(
+        _window_kernel,
+        grid=(n_windows,),
+        in_specs=[pl.BlockSpec((window, l), lambda k: (k, 0))],
+        out_specs=[
+            pl.BlockSpec((1, window, window), lambda k: (k, 0, 0)),
+            pl.BlockSpec((1, window), lambda k: (k, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_windows, window, window), jnp.float32),
+            jax.ShapeDtypeStruct((n_windows, window), jnp.float32),
+        ],
+        interpret=True,
+    )(jnp.asarray(spa, jnp.float32))
+
+
+def greedy_assign(dist, mass, threshold: float):
+    """Host-side greedy critical/similar assignment from kernel outputs.
+
+    Mirrors rust `spls::similarity::local_similarity`: within each
+    window, a row joins the first *critical* row whose normalized L1
+    distance ``dist/max(mass_i, mass_j, 1)`` is ≤ threshold, else it
+    becomes critical. Returns rep[i] = representative row index.
+    """
+    import numpy as np
+
+    dist = np.asarray(dist)
+    mass = np.asarray(mass)
+    n_windows, w, _ = dist.shape
+    rep = np.arange(n_windows * w)
+    for k in range(n_windows):
+        criticals: list[int] = []
+        for i in range(w):
+            assigned = None
+            for c in criticals:
+                denom = max(mass[k, i], mass[k, c], 1.0)
+                if dist[k, i, c] / denom <= threshold:
+                    assigned = c
+                    break
+            if assigned is None:
+                criticals.append(i)
+            else:
+                rep[k * w + i] = k * w + assigned
+    return rep

@@ -1,0 +1,83 @@
+"""L1 Pallas kernel: SPA-masked attention with row recovery.
+
+The formal-phase attention of ESACT computes QK^T only at positions kept
+by the sparsified predicted attention (SPA) and only for *critical* rows;
+similar rows are recovered by replication (paper §III-C). On the TPU
+mapping the SPA mask arrives as a dense {0,1} tile (the rust coordinator
+materializes it from the SparsityPlan), and masking happens in-register
+after the MXU product — sparsity is *not* exploited for FLOP reduction on
+the CPU/interpret path (that is the ASIC simulator's job, `rust/src/sim`);
+this kernel exists to make the *numerics* of the sparse model exact and
+AOT-exportable.
+
+Row blocks are tiled over the grid; K/V stay VMEM-resident per block
+(Dh <= 128 for every model we ship, so a (L, Dh) panel fits comfortably).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _block(dim: int, target: int) -> int:
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def _masked_attention_kernel(q_ref, k_ref, v_ref, m_ref, o_ref, *, scale):
+    q = q_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+    mask = m_ref[...]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale
+    neg = jnp.asarray(-1e30, s.dtype)
+    s = jnp.where(mask > 0, s, neg)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p * (mask > 0)
+    denom = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    o_ref[...] = jax.lax.dot_general(
+        p / denom, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+def masked_attention(q, k, v, mask, *, scale=None, bl: int = 128):
+    """SPA-masked attention: q,k,v (L, Dh) f32, mask (L, L) {0,1} -> (L, Dh).
+
+    Matches ``ref.masked_attention`` to float tolerance. Row-blocked grid;
+    each block sees the full K/V panel (flash-style K-tiling is a perf
+    refinement recorded in EXPERIMENTS.md §Perf, not needed at these L).
+    """
+    l, dh = q.shape
+    if scale is None:
+        scale = 1.0 / math.sqrt(dh)
+    bl = _block(l, bl)
+    grid = (l // bl,)
+    kern = lambda qr, kr, vr, mr, orf: _masked_attention_kernel(
+        qr, kr, vr, mr, orf, scale=scale
+    )
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bl, dh), lambda i: (i, 0)),
+            pl.BlockSpec((l, dh), lambda i: (0, 0)),
+            pl.BlockSpec((l, dh), lambda i: (0, 0)),
+            pl.BlockSpec((bl, l), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bl, dh), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((l, dh), jnp.float32),
+        interpret=True,
+    )(
+        jnp.asarray(q, jnp.float32),
+        jnp.asarray(k, jnp.float32),
+        jnp.asarray(v, jnp.float32),
+        jnp.asarray(mask, jnp.float32),
+    )

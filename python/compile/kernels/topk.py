@@ -1,0 +1,58 @@
+"""L1 Pallas kernel: row-wise top-k mask over the PAM.
+
+The Top-k unit of ESACT's Functional Module (paper Fig 10/Table II)
+selects the k largest predicted scores per attention row to form the
+SPA. TPU mapping: rows are tiled over the grid; each (bl, L) row panel
+sorts in VMEM (the VPU's bitonic network — `jnp.sort` under
+interpret=True) and emits the boolean keep-mask against the k-th
+largest value as threshold.
+
+Tie semantics: threshold comparison keeps *all* entries equal to the
+k-th value, which can exceed k on exact ties (integer PAMs). The rust
+host planner (`spls::topk`) breaks ties toward the lower column index
+instead; on continuous scores the two agree exactly, and the tests pin
+both behaviours.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _block(dim: int, target: int) -> int:
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def _topk_kernel(pam_ref, mask_ref, *, keep):
+    rows = pam_ref[...]  # (bl, L)
+    sorted_desc = -jnp.sort(-rows, axis=-1)
+    thr = sorted_desc[:, keep - 1 : keep]  # k-th largest per row
+    mask_ref[...] = (rows >= thr).astype(jnp.float32)
+
+
+def topk_mask(pam, k_ratio: float, *, bl: int = 128):
+    """Row-wise top-k keep mask: (L, L) scores -> (L, L) {0,1} f32.
+
+    ``keep = clamp(ceil(k_ratio · L), 1, L)`` entries per row (more on
+    exact ties — see module docstring).
+    """
+    l, l2 = pam.shape
+    assert l == l2, "PAM must be square"
+    keep = max(1, min(l, int(-(-k_ratio * l // 1))))
+    bl = _block(l, bl)
+    kern = functools.partial(_topk_kernel, keep=keep)
+    return pl.pallas_call(
+        kern,
+        grid=(l // bl,),
+        in_specs=[pl.BlockSpec((bl, l), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bl, l), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((l, l), jnp.float32),
+        interpret=True,
+    )(jnp.asarray(pam, jnp.float32))

@@ -1,0 +1,275 @@
+"""L2: the JAX model — a tiny transformer classifier used as the accuracy
+substrate for the SPLS experiments (see DESIGN.md §Substitutions: stands in
+for the paper's fine-tuned BERT/GPT models, which need proprietary-scale
+fine-tuning infrastructure).
+
+Architecture (pre-LN encoder, paper Fig 2 computation flow):
+
+  tokens -> embed + pos -> [ MHA(+res) -> FFN(+res) ] x NL -> LN -> mean-pool
+         -> linear classifier
+
+Two forward variants share all weights:
+
+  * ``forward_dense``   — the reference dense model;
+  * ``forward_masked``  — attention masked by per-(layer, head) SPA masks
+    produced by the rust SPLS planner; calls the L1 Pallas kernel
+    ``kernels.sparse_attention.masked_attention`` so that the kernel lowers
+    into the exported HLO.
+
+All linear weights are 8-bit fake-quantized (symmetric per-tensor) with a
+straight-through estimator during training, matching the paper's
+"quantize all weights in the Transformer's linear transformations to
+8-bit" setup.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.sparse_attention import masked_attention
+
+
+class TinyConfig(NamedTuple):
+    """Model hyperparameters. Defaults are the shipped tiny model."""
+
+    vocab: int = 64
+    seq_len: int = 64
+    d_model: int = 64
+    n_heads: int = 4
+    n_layers: int = 2
+    d_ffn: int = 256
+    n_classes: int = 16
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+
+# Parameter tree: flat dict name -> array. Names are shared verbatim with
+# the rust loader (rust/src/model/weights.rs), so keep them stable.
+def param_names(cfg: TinyConfig) -> list[str]:
+    names = ["embed", "pos"]
+    for i in range(cfg.n_layers):
+        for w in (
+            "wq", "bq", "wk", "bk", "wv", "bv", "wo", "bo",
+            "ln1_g", "ln1_b", "w1", "b1", "w2", "b2", "ln2_g", "ln2_b",
+        ):
+            names.append(f"layer{i}.{w}")
+    names += ["lnf_g", "lnf_b", "cls_w", "cls_b"]
+    return names
+
+
+def init_params(cfg: TinyConfig, key) -> dict:
+    """Xavier-ish init; biases zero, LN gains one."""
+
+    def dense(key, fan_in, fan_out):
+        return jax.random.normal(key, (fan_in, fan_out), jnp.float32) * (
+            1.0 / jnp.sqrt(jnp.asarray(fan_in, jnp.float32))
+        )
+
+    keys = iter(jax.random.split(key, 64))
+    d, f = cfg.d_model, cfg.d_ffn
+    p = {
+        "embed": jax.random.normal(next(keys), (cfg.vocab, d)) * 0.02,
+        "pos": jax.random.normal(next(keys), (cfg.seq_len, d)) * 0.02,
+        "lnf_g": jnp.ones((d,)),
+        "lnf_b": jnp.zeros((d,)),
+        "cls_w": dense(next(keys), d, cfg.n_classes),
+        "cls_b": jnp.zeros((cfg.n_classes,)),
+    }
+    for i in range(cfg.n_layers):
+        p[f"layer{i}.wq"] = dense(next(keys), d, d)
+        p[f"layer{i}.wk"] = dense(next(keys), d, d)
+        p[f"layer{i}.wv"] = dense(next(keys), d, d)
+        p[f"layer{i}.wo"] = dense(next(keys), d, d)
+        p[f"layer{i}.w1"] = dense(next(keys), d, f)
+        p[f"layer{i}.w2"] = dense(next(keys), f, d)
+        for b, shape in (
+            ("bq", d), ("bk", d), ("bv", d), ("bo", d), ("b1", f), ("b2", d),
+            ("ln1_b", d), ("ln2_b", d),
+        ):
+            p[f"layer{i}.{b}"] = jnp.zeros((shape,))
+        p[f"layer{i}.ln1_g"] = jnp.ones((d,))
+        p[f"layer{i}.ln2_g"] = jnp.ones((d,))
+    return p
+
+
+def fake_quant8(w):
+    """Symmetric per-tensor int8 fake-quant with STE (train-time QAT)."""
+    maxabs = jnp.maximum(jnp.max(jnp.abs(w)), 1e-9)
+    s = 127.0 / maxabs
+    q = jnp.clip(jnp.sign(w) * jnp.floor(jnp.abs(w) * s + 0.5), -127, 127) / s
+    return w + jax.lax.stop_gradient(q - w)
+
+
+def quantize_params(p: dict) -> dict:
+    """Bake the fake-quant into the stored weights (export-time snap).
+
+    Only matmul weights are quantized (paper: linear-transform weights);
+    embeddings / LN / biases stay f32.
+    """
+    out = {}
+    for name, w in p.items():
+        base = name.split(".")[-1]
+        if base in ("wq", "wk", "wv", "wo", "w1", "w2", "cls_w"):
+            out[name] = fake_quant8(w)
+        else:
+            out[name] = w
+    return out
+
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _gelu(x):
+    # tanh-approximation GELU, mirrored exactly in rust/src/model/tensor.rs
+    c = jnp.sqrt(jnp.asarray(2.0 / jnp.pi, jnp.float32))
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def _heads(x, cfg: TinyConfig):
+    l, d = x.shape
+    return x.reshape(l, cfg.n_heads, cfg.d_head).transpose(1, 0, 2)
+
+
+def _unheads(x, cfg: TinyConfig):
+    h, l, dh = x.shape
+    return x.transpose(1, 0, 2).reshape(l, h * dh)
+
+
+def _dense_attention(q, k, v, scale):
+    s = jnp.matmul(q, k.T) * scale
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.matmul(p, v)
+
+
+def _block(p, i, x, cfg: TinyConfig, masks=None, quant=True):
+    """One transformer block; ``masks`` is (H, L, L) or None for dense."""
+    qw = fake_quant8 if quant else (lambda w: w)
+    h = _layernorm(x, p[f"layer{i}.ln1_g"], p[f"layer{i}.ln1_b"])
+    q = h @ qw(p[f"layer{i}.wq"]) + p[f"layer{i}.bq"]
+    k = h @ qw(p[f"layer{i}.wk"]) + p[f"layer{i}.bk"]
+    v = h @ qw(p[f"layer{i}.wv"]) + p[f"layer{i}.bv"]
+    qh, kh, vh = (_heads(t, cfg) for t in (q, k, v))
+    scale = 1.0 / jnp.sqrt(jnp.asarray(cfg.d_head, jnp.float32))
+    outs = []
+    for hi in range(cfg.n_heads):
+        if masks is None:
+            outs.append(_dense_attention(qh[hi], kh[hi], vh[hi], scale))
+        else:
+            outs.append(masked_attention(qh[hi], kh[hi], vh[hi], masks[hi]))
+    att = _unheads(jnp.stack(outs), cfg)
+    x = x + att @ qw(p[f"layer{i}.wo"]) + p[f"layer{i}.bo"]
+    h2 = _layernorm(x, p[f"layer{i}.ln2_g"], p[f"layer{i}.ln2_b"])
+    ff = _gelu(h2 @ qw(p[f"layer{i}.w1"]) + p[f"layer{i}.b1"])
+    x = x + ff @ qw(p[f"layer{i}.w2"]) + p[f"layer{i}.b2"]
+    return x
+
+
+def _embed(p, tokens, cfg: TinyConfig):
+    return p["embed"][tokens] + p["pos"][: tokens.shape[0]]
+
+
+def forward_dense(p, tokens, cfg: TinyConfig, quant=True):
+    """Dense forward for one sequence: tokens (L,) int32 -> logits (C,)."""
+    x = _embed(p, tokens, cfg)
+    for i in range(cfg.n_layers):
+        x = _block(p, i, x, cfg, masks=None, quant=quant)
+    x = _layernorm(x, p["lnf_g"], p["lnf_b"])
+    pooled = jnp.mean(x, axis=0)
+    qw = fake_quant8 if quant else (lambda w: w)
+    return pooled @ qw(p["cls_w"]) + p["cls_b"]
+
+
+def forward_masked(p, tokens, masks, cfg: TinyConfig, quant=True):
+    """SPA-masked forward: masks (NL, H, L, L) in {0,1} -> logits (C,).
+
+    Attention rows of similar vectors carry their critical row's mask, so
+    the masked model computes exactly what the ESACT sparse dataflow
+    produces after recovery (numerics-level contract with rust/src/model).
+    """
+    x = _embed(p, tokens, cfg)
+    for i in range(cfg.n_layers):
+        x = _block(p, i, x, cfg, masks=masks[i], quant=quant)
+    x = _layernorm(x, p["lnf_g"], p["lnf_b"])
+    pooled = jnp.mean(x, axis=0)
+    qw = fake_quant8 if quant else (lambda w: w)
+    return pooled @ qw(p["cls_w"]) + p["cls_b"]
+
+
+def attention_probs(p, tokens, cfg: TinyConfig, quant=True):
+    """Per-layer, per-head attention matrices (NL, H, L, L) for the
+    local-similarity analysis figures (Fig 3/4)."""
+    x = _embed(p, tokens, cfg)
+    mats = []
+    for i in range(cfg.n_layers):
+        qw = fake_quant8 if quant else (lambda w: w)
+        h = _layernorm(x, p[f"layer{i}.ln1_g"], p[f"layer{i}.ln1_b"])
+        q = h @ qw(p[f"layer{i}.wq"]) + p[f"layer{i}.bq"]
+        k = h @ qw(p[f"layer{i}.wk"]) + p[f"layer{i}.bk"]
+        qh, kh = _heads(q, cfg), _heads(k, cfg)
+        scale = 1.0 / jnp.sqrt(jnp.asarray(cfg.d_head, jnp.float32))
+        s = jnp.einsum("hld,hmd->hlm", qh, kh) * scale
+        mats.append(jax.nn.softmax(s, axis=-1))
+        x = _block(p, i, x, cfg, masks=None, quant=quant)
+    return jnp.stack(mats)
+
+def _topk_attention(q, k, v, scale, k_ratio: float):
+    """Dense attention with row-wise top-k masking of the scores.
+
+    Used for *sparsity-aware fine-tuning* (paper §V-B: models are
+    fine-tuned under each sparsity configuration): the mask is computed
+    from the true scores with a stop-gradient threshold, so gradients
+    flow through the kept positions only — the model learns to
+    concentrate its attention mass into the top-k pattern that the
+    ESACT dataflow will actually compute.
+    """
+    l = q.shape[0]
+    keep = max(1, int(np.ceil(k_ratio * l)))
+    s = jnp.matmul(q, k.T) * scale
+    thr = jax.lax.top_k(s, keep)[0][..., -1:]
+    mask = (s >= jax.lax.stop_gradient(thr)).astype(s.dtype)
+    neg = jnp.asarray(-1e30, s.dtype)
+    sm = jnp.where(mask > 0, s, neg)
+    p = jnp.exp(sm - jnp.max(sm, axis=-1, keepdims=True)) * mask
+    denom = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    return jnp.matmul(p / denom, v)
+
+
+def _block_topk(p, i, x, cfg: TinyConfig, k_ratio: float, quant=True):
+    """Transformer block with top-k-masked attention (fine-tune path)."""
+    qw = fake_quant8 if quant else (lambda w: w)
+    h = _layernorm(x, p[f"layer{i}.ln1_g"], p[f"layer{i}.ln1_b"])
+    q = h @ qw(p[f"layer{i}.wq"]) + p[f"layer{i}.bq"]
+    k = h @ qw(p[f"layer{i}.wk"]) + p[f"layer{i}.bk"]
+    v = h @ qw(p[f"layer{i}.wv"]) + p[f"layer{i}.bv"]
+    qh, kh, vh = (_heads(t, cfg) for t in (q, k, v))
+    scale = 1.0 / jnp.sqrt(jnp.asarray(cfg.d_head, jnp.float32))
+    outs = [
+        _topk_attention(qh[hi], kh[hi], vh[hi], scale, k_ratio)
+        for hi in range(cfg.n_heads)
+    ]
+    att = _unheads(jnp.stack(outs), cfg)
+    x = x + att @ qw(p[f"layer{i}.wo"]) + p[f"layer{i}.bo"]
+    h2 = _layernorm(x, p[f"layer{i}.ln2_g"], p[f"layer{i}.ln2_b"])
+    ff = _gelu(h2 @ qw(p[f"layer{i}.w1"]) + p[f"layer{i}.b1"])
+    x = x + ff @ qw(p[f"layer{i}.w2"]) + p[f"layer{i}.b2"]
+    return x
+
+
+def forward_topk(p, tokens, cfg: TinyConfig, k_ratio: float, quant=True):
+    """Forward with top-k sparse attention (sparsity-aware fine-tuning)."""
+    x = _embed(p, tokens, cfg)
+    for i in range(cfg.n_layers):
+        x = _block_topk(p, i, x, cfg, k_ratio, quant=quant)
+    x = _layernorm(x, p["lnf_g"], p["lnf_b"])
+    pooled = jnp.mean(x, axis=0)
+    qw = fake_quant8 if quant else (lambda w: w)
+    return pooled @ qw(p["cls_w"]) + p["cls_b"]

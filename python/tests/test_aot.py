@@ -1,0 +1,53 @@
+"""AOT-export path tests: HLO text round-trips with constants intact.
+
+Regression coverage for the elided-constants bug: `as_hlo_text()`
+defaults to printing large constants as `{...}`, which the XLA text
+parser silently reads back as zeros — the deployed model would serve
+garbage while every python-side test stays green.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile.aot import to_hlo_text
+
+
+def _lower(fn, *specs):
+    return jax.jit(fn).lower(*specs)
+
+
+def test_large_constants_not_elided():
+    w = np.arange(256 * 256, dtype=np.float32).reshape(256, 256)
+    lowered = _lower(
+        lambda x: (x @ w,), jax.ShapeDtypeStruct((4, 256), jnp.float32)
+    )
+    text = to_hlo_text(lowered)
+    assert "{...}" not in text, "large constants were elided"
+    # a known interior value must appear verbatim in the text
+    assert "65535" in text
+
+
+def test_hlo_text_is_parseable_entry_module():
+    lowered = _lower(
+        lambda x: (x * 2.0 + 1.0,), jax.ShapeDtypeStruct((8,), jnp.float32)
+    )
+    text = to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # return_tuple=True -> tuple-shaped root
+    assert "(f32[8]" in text.replace("{1,0}", "")
+
+
+def test_pallas_kernel_lowers_to_plain_hlo():
+    # interpret=True Pallas must lower to ordinary HLO ops (no custom
+    # calls the CPU PJRT client can't run)
+    from compile.kernels.hlog import hlog_matmul
+
+    spec = jax.ShapeDtypeStruct((64, 64), jnp.int32)
+    lowered = _lower(lambda x, w: (hlog_matmul(x, w),), spec, spec)
+    text = to_hlo_text(lowered)
+    assert "custom-call" not in text.lower() or "mosaic" not in text.lower()
+    assert "dot(" in text or "dot." in text or "dot " in text

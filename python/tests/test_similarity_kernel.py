@@ -1,0 +1,84 @@
+"""Windowed-similarity Pallas kernel vs reference + rust-contract
+semantics (greedy assignment identical to spls::similarity)."""
+
+from __future__ import annotations
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.similarity import greedy_assign, window_l1_distances
+
+
+def _spa(rng, l, k_ratio=0.12):
+    scores = rng.standard_normal((l, l)).astype(np.float32)
+    mask = np.asarray(ref.topk_mask(jnp.asarray(scores), k_ratio))
+    return (scores * 100).astype(np.int32).astype(np.float32) * mask
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    l=st.sampled_from([16, 32, 64]),
+    w=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_distances_match_numpy(l, w, seed):
+    rng = np.random.default_rng(seed)
+    spa = _spa(rng, l)
+    dist, mass = window_l1_distances(spa, window=w)
+    dist, mass = np.asarray(dist), np.asarray(mass)
+    assert dist.shape == (l // w, w, w)
+    for k in range(l // w):
+        rows = spa[k * w : (k + 1) * w]
+        want = np.abs(rows[:, None, :] - rows[None, :, :]).sum(-1)
+        np.testing.assert_allclose(dist[k], want, rtol=1e-6)
+        np.testing.assert_allclose(mass[k], np.abs(rows).sum(-1), rtol=1e-6)
+
+
+def test_distance_properties():
+    rng = np.random.default_rng(3)
+    spa = _spa(rng, 32)
+    dist, _ = window_l1_distances(spa, window=8)
+    dist = np.asarray(dist)
+    # symmetry + zero diagonal
+    np.testing.assert_allclose(dist, dist.transpose(0, 2, 1), rtol=1e-6)
+    for k in range(dist.shape[0]):
+        np.testing.assert_allclose(np.diag(dist[k]), 0.0, atol=1e-6)
+
+
+def test_greedy_assignment_semantics():
+    # identical rows collapse; distinct rows stay critical
+    spa = np.zeros((8, 8), np.float32)
+    spa[0] = spa[1] = spa[3] = [1, 2, 3, 0, 0, 0, 0, 0]
+    spa[2] = [9, 9, 9, 9, 0, 0, 0, 0]
+    spa[4:] = np.eye(4, 8) * 50
+    dist, mass = window_l1_distances(spa, window=8)
+    rep = greedy_assign(dist, mass, threshold=0.0)
+    assert rep[1] == 0 and rep[3] == 0
+    assert rep[2] == 2
+    assert all(rep[i] == i for i in range(4, 8))
+
+
+def test_threshold_monotone():
+    rng = np.random.default_rng(11)
+    spa = _spa(rng, 64)
+    dist, mass = window_l1_distances(spa, window=8)
+    prev = 0
+    for t in (0.0, 0.3, 0.6, 1.0, 2.0):
+        rep = greedy_assign(dist, mass, t)
+        n_sim = int((rep != np.arange(64)).sum())
+        assert n_sim >= prev
+        prev = n_sim
+
+
+def test_windows_independent():
+    # permuting other windows must not change window 0's distances
+    rng = np.random.default_rng(5)
+    spa = _spa(rng, 32)
+    d1, _ = window_l1_distances(spa, window=8)
+    spa2 = spa.copy()
+    spa2[8:] = spa[8:][::-1]
+    d2, _ = window_l1_distances(spa2, window=8)
+    np.testing.assert_allclose(np.asarray(d1)[0], np.asarray(d2)[0], rtol=1e-6)

@@ -1,0 +1,96 @@
+"""L1 masked-attention kernel vs reference + SPA mask semantics."""
+
+from __future__ import annotations
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.sparse_attention import masked_attention
+
+
+def _rand_qkv(rng, l, dh):
+    return (
+        rng.standard_normal((l, dh)).astype(np.float32),
+        rng.standard_normal((l, dh)).astype(np.float32),
+        rng.standard_normal((l, dh)).astype(np.float32),
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    l=st.sampled_from([4, 8, 16, 64]),
+    dh=st.sampled_from([4, 8, 16]),
+    k_ratio=st.sampled_from([0.1, 0.12, 0.25, 0.5, 1.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_masked_attention_matches_ref(l, dh, k_ratio, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = _rand_qkv(rng, l, dh)
+    scores = q @ k.T
+    mask = np.asarray(ref.topk_mask(jnp.asarray(scores), k_ratio))
+    got = np.asarray(masked_attention(q, k, v, mask))
+    want = np.asarray(ref.masked_attention(q, k, v, mask))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_full_mask_equals_dense_softmax():
+    rng = np.random.default_rng(3)
+    q, k, v = _rand_qkv(rng, 16, 8)
+    mask = np.ones((16, 16), np.float32)
+    got = np.asarray(masked_attention(q, k, v, mask))
+    s = (q @ k.T) / np.sqrt(8.0)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    np.testing.assert_allclose(got, p @ v, rtol=1e-5, atol=1e-5)
+
+
+def test_single_position_mask():
+    """Mask with one kept column per row -> output is exactly that V row."""
+    rng = np.random.default_rng(5)
+    q, k, v = _rand_qkv(rng, 8, 4)
+    mask = np.zeros((8, 8), np.float32)
+    cols = rng.integers(0, 8, 8)
+    mask[np.arange(8), cols] = 1.0
+    got = np.asarray(masked_attention(q, k, v, mask))
+    np.testing.assert_allclose(got, v[cols], rtol=1e-5, atol=1e-6)
+
+
+def test_topk_mask_row_counts():
+    rng = np.random.default_rng(11)
+    s = jnp.asarray(rng.standard_normal((32, 32)).astype(np.float32))
+    for kr in (0.1, 0.12, 0.2, 0.5):
+        m = np.asarray(ref.topk_mask(s, kr))
+        keep = max(1, int(np.ceil(kr * 32)))
+        np.testing.assert_array_equal(m.sum(-1), np.full(32, keep))
+        # kept entries are the row maxima
+        for r in range(32):
+            kept_vals = np.asarray(s)[r][m[r] > 0]
+            dropped = np.asarray(s)[r][m[r] == 0]
+            if dropped.size:
+                assert kept_vals.min() >= dropped.max() - 1e-6
+
+
+def test_similar_row_replication_contract():
+    """Rows sharing a critical row's mask AND Q produce identical outputs —
+    the numerics contract behind ESACT's row-recovery (paper §III-C)."""
+    rng = np.random.default_rng(9)
+    q, k, v = _rand_qkv(rng, 8, 4)
+    q[5] = q[2]  # row 5 is 'similar' to critical row 2: replicated Q
+    mask = np.array(ref.topk_mask(jnp.asarray(q @ k.T), 0.5))  # writable copy
+    mask[5] = mask[2]
+    out = np.asarray(masked_attention(q, k, v, mask))
+    np.testing.assert_allclose(out[5], out[2], rtol=1e-6)
+
+
+def test_block_size_invariance():
+    rng = np.random.default_rng(13)
+    q, k, v = _rand_qkv(rng, 64, 16)
+    mask = np.asarray(ref.topk_mask(jnp.asarray(q @ k.T), 0.2))
+    base = np.asarray(masked_attention(q, k, v, mask, bl=64))
+    for bl in (8, 16, 32):
+        np.testing.assert_allclose(
+            np.asarray(masked_attention(q, k, v, mask, bl=bl)), base, rtol=1e-6
+        )

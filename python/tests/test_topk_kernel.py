@@ -1,0 +1,57 @@
+"""Top-k Pallas kernel vs reference mask semantics."""
+
+from __future__ import annotations
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.topk import topk_mask
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    l=st.sampled_from([8, 16, 64]),
+    k=st.sampled_from([0.05, 0.12, 0.25, 0.5, 1.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matches_ref_on_continuous_scores(l, k, seed):
+    # continuous scores -> no ties -> kernel ≡ ref.topk_mask exactly
+    rng = np.random.default_rng(seed)
+    scores = rng.standard_normal((l, l)).astype(np.float32)
+    got = np.asarray(topk_mask(scores, k))
+    want = np.asarray(ref.topk_mask(jnp.asarray(scores), k))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_tie_handling_keeps_at_least_k():
+    # integer ties: the threshold form may keep more than k, never fewer
+    pam = np.ones((8, 8), np.float32) * 5.0
+    m = np.asarray(topk_mask(pam, 0.25))
+    assert (m.sum(-1) >= 2).all()  # keep = 2
+    # all-equal rows keep everything under threshold semantics
+    assert (m == 1.0).all()
+
+
+def test_keeps_row_maxima():
+    rng = np.random.default_rng(7)
+    scores = rng.standard_normal((32, 32)).astype(np.float32)
+    m = np.asarray(topk_mask(scores, 0.1))
+    amax = scores.argmax(-1)
+    assert m[np.arange(32), amax].all()
+
+
+def test_full_ratio_keeps_all():
+    rng = np.random.default_rng(9)
+    scores = rng.standard_normal((16, 16)).astype(np.float32)
+    np.testing.assert_array_equal(np.asarray(topk_mask(scores, 1.0)), 1.0)
+
+
+def test_block_invariance():
+    rng = np.random.default_rng(13)
+    scores = rng.standard_normal((64, 64)).astype(np.float32)
+    base = np.asarray(topk_mask(scores, 0.12, bl=64))
+    for bl in (8, 16, 32):
+        np.testing.assert_array_equal(np.asarray(topk_mask(scores, 0.12, bl=bl)), base)

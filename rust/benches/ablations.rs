@@ -1,0 +1,88 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//! quantization method, window size, PE-array shape, FACT-style
+//! end-to-end comparison, and cluster-level batch scaling.
+
+use std::path::Path;
+
+use esact::baselines::compare_with_fact;
+use esact::config::{self, DeployConfig, HardwareConfig, SplsConfig};
+use esact::model::{self, TestSet, TinyWeights};
+use esact::quant::QuantMethod;
+use esact::sim::{simulate_cluster, simulate_model, Features};
+use esact::workloads::bench26::SparsityProfile;
+
+fn main() -> anyhow::Result<()> {
+    let hw = HardwareConfig::default();
+    let spls = SplsConfig::default();
+    let profile = SparsityProfile { q: 0.6, kv: 0.6, attn: 0.946, ffn: 0.5 };
+
+    // --- quantization-method ablation (accuracy substrate) ----------
+    println!("== quant method ablation (measured, 24 seqs) ==");
+    let dir = Path::new("artifacts");
+    let w = TinyWeights::load(&dir.join("tiny_weights.bin"))?;
+    let set = TestSet::load(&dir.join("tiny_testset.bin"))?;
+    let dense = model::eval_dense(&w, &set, 24);
+    for m in QuantMethod::ALL {
+        let r = model::eval_sparse(&w, &set, 24, &spls, m);
+        println!(
+            "  {:<6} acc {:.4} (loss {:+.2}) | Q {:.3} KV {:.3}",
+            m.name(),
+            r.accuracy,
+            r.loss_vs(&dense),
+            r.q_sparsity,
+            r.kv_sparsity
+        );
+    }
+
+    // --- window-size ablation ----------------------------------------
+    println!("\n== window size (measured Q sparsity at fixed s) ==");
+    for window in [2usize, 4, 8, 16] {
+        let cfg = SplsConfig { window, ..spls };
+        let r = model::eval_sparse(&w, &set, 24, &cfg, QuantMethod::Hlog);
+        let cmp = esact::workloads::flops::local_similarity_comparisons(64, window);
+        println!(
+            "  w={window:<3} Q sparsity {:.3} | acc {:.4} | comparisons {cmp}",
+            r.q_sparsity, r.accuracy
+        );
+    }
+
+    // --- PE shape ------------------------------------------------------
+    println!("\n== PE-array shape (BERT-Base/128, full features) ==");
+    let cfg = config::bert_base(128);
+    for (rows, cols) in [(8usize, 128usize), (16, 64), (32, 32)] {
+        let hw2 = HardwareConfig { pe_rows: rows, pe_cols: cols, ..hw };
+        let r = simulate_model(&cfg, &hw2, &spls, &profile, Features::FULL);
+        println!(
+            "  {rows:>2}×{cols:<3} {:>9} cycles | util {:.3}",
+            r.cycles,
+            r.pe_utilization(&hw2)
+        );
+    }
+
+    // --- FACT end-to-end comparison ------------------------------------
+    println!("\n== ESACT vs FACT-style (no inter-row / no FFN sparsity) ==");
+    for cfg in [config::bert_base(128), config::bert_large(512), config::gpt2(512)] {
+        let c = compare_with_fact(&cfg, &hw, &spls, &profile);
+        println!(
+            "  {:>11} L={:<4} FACT {:>8.2} ms vs ESACT {:>8.2} ms → {:.2}×",
+            cfg.name,
+            cfg.seq_len,
+            c.fact_seconds * 1e3,
+            c.esact_seconds * 1e3,
+            c.speedup
+        );
+    }
+
+    // --- cluster scaling -------------------------------------------------
+    println!("\n== 125-unit cluster scaling (BERT-Base/128) ==");
+    let dep = DeployConfig::default();
+    let cfg = config::bert_base(128);
+    for batch in [1usize, 8, 25, 125, 500] {
+        let (c, _) = simulate_cluster(&cfg, &hw, &spls, &profile, &dep, batch, Features::FULL);
+        println!(
+            "  batch {batch:>4}: {:>9.1} seq/s | cluster util {:.3}",
+            c.throughput_seq_s, c.cluster_utilization
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! Micro-benchmarks of the L3 hot paths (criterion is not in the
+//! vendored set; `util::stats::bench` provides warmup + percentile
+//! reporting). These are the §Perf measurement points in
+//! EXPERIMENTS.md.
+
+use esact::config::SplsConfig;
+use esact::model::tensor;
+use esact::quant;
+use esact::spls;
+use esact::util::mat::{MatF, MatI};
+use esact::util::rng::Xoshiro256pp;
+use esact::util::stats::bench;
+
+fn report(name: &str, work: f64, s: esact::util::stats::Summary) {
+    println!(
+        "{name:<34} {:>10.1} µs/iter (p50 {:>8.1}, p95 {:>8.1}) {:>10.1} Mops/s",
+        s.mean * 1e6,
+        s.p50 * 1e6,
+        s.p95 * 1e6,
+        work / s.mean / 1e6
+    );
+}
+
+fn main() {
+    let mut rng = Xoshiro256pp::new(99);
+    let l = 128usize;
+    let d = 768usize;
+    let dh = 64usize;
+
+    // --- bit-level prediction unit ---------------------------------
+    let x = MatI::from_fn(l, d, |_, _| rng.int_in(-128, 127) as i32);
+    let wq = MatI::from_fn(d, dh, |_, _| rng.int_in(-128, 127) as i32);
+    let s = bench(10, 3, || {
+        std::hint::black_box(spls::predict_matmul(&x, &wq));
+    });
+    report("predict_matmul 128x768x64", (l * d * dh) as f64, s);
+
+    let xs: Vec<i32> = (0..(1 << 16)).map(|_| rng.int_in(-128, 127) as i32).collect();
+    let s = bench(20, 10, || {
+        let mut acc = 0i64;
+        for &v in &xs {
+            acc += quant::hlog_quantize(v) as i64;
+        }
+        std::hint::black_box(acc);
+    });
+    report("hlog_quantize 64k", xs.len() as f64, s);
+
+    // --- SPA pipeline ------------------------------------------------
+    let pam = MatI::from_fn(l, l, |r, c| ((r / 2 * 31 + c * 7) % 97) as i32);
+    let s = bench(20, 10, || {
+        std::hint::black_box(spls::sparsify(&pam, 0.12));
+    });
+    report("topk sparsify 128x128", (l * l) as f64, s);
+
+    let (spa, _) = spls::sparsify(&pam, 0.12);
+    let s = bench(20, 10, || {
+        std::hint::black_box(spls::local_similarity(&spa, 8, 0.6));
+    });
+    report("local_similarity w=8", (l * 7 * l) as f64, s);
+
+    let spls_cfg = SplsConfig::default();
+    let pams: Vec<MatI> = (0..4)
+        .map(|h| MatI::from_fn(l, l, |r, c| ((r / 2 * 31 + c * 7 + h * 13) % 97) as i32))
+        .collect();
+    let s = bench(10, 5, || {
+        std::hint::black_box(spls::plan_layer(&pams, &spls_cfg));
+    });
+    report("plan_layer 4 heads", (4 * l * l) as f64, s);
+
+    // --- host tensor ops --------------------------------------------
+    let a = MatF::from_fn(l, d, |_, _| rng.normal());
+    let b = MatF::from_fn(d, d, |_, _| rng.normal());
+    let s = bench(10, 3, || {
+        std::hint::black_box(tensor::matmul(&a, &b));
+    });
+    report("host matmul 128x768x768", (l * d * d) as f64, s);
+
+    let mut soft = MatF::from_fn(l, l, |_, _| rng.normal());
+    let s = bench(20, 20, || {
+        tensor::softmax_rows(&mut soft);
+    });
+    report("softmax_rows 128x128", (l * l) as f64, s);
+}

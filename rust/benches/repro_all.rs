@@ -1,0 +1,39 @@
+//! The full experiment regeneration: every table AND figure from the
+//! paper's evaluation, printed in paper shape with the paper's values
+//! alongside. This is the bench target referenced by DESIGN.md's
+//! experiment index (`make bench` runs it).
+
+use std::path::Path;
+use std::time::Instant;
+
+use esact::report::{figures, tables};
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new("artifacts");
+    let lim = 32; // accuracy-sweep size per point; full set via `esact eval`
+    let t0 = Instant::now();
+    let mut section = |name: &str, text: String| {
+        println!("{text}\n{}\n", "=".repeat(72));
+        eprintln!("[{:7.1}s] {name} done", t0.elapsed().as_secs_f64());
+    };
+
+    section("fig1", figures::fig1());
+    section("fig3", figures::fig3(dir)?);
+    section("fig4", figures::fig4(dir)?);
+    section("fig6", figures::fig6(dir)?);
+    section("fig7", figures::fig7());
+    section("fig15", figures::fig15());
+    section("fig16", figures::fig16(dir, lim)?);
+    section("fig17", figures::fig17(dir, lim)?);
+    section("fig18", figures::fig18(dir, lim)?);
+    section("fig19", figures::fig19(dir, lim)?);
+    section("fig20", figures::fig20());
+    section("fig21", figures::fig21());
+    section("table1", tables::table1());
+    section("table2", tables::table2());
+    section("table3", tables::table3());
+    section("table4", tables::table4());
+
+    eprintln!("repro_all complete in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

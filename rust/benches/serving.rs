@@ -1,0 +1,79 @@
+//! Serving-path benchmarks: PJRT executable latency (batch 1 vs 8),
+//! SPLS mask-planning cost, and coordinator throughput dense vs SPLS —
+//! the end-to-end numbers recorded in EXPERIMENTS.md §E2E/§Perf.
+
+use std::path::Path;
+use std::sync::mpsc;
+use std::time::Instant;
+
+use esact::config::SplsConfig;
+use esact::coordinator::server::Mode;
+use esact::coordinator::{BatchPolicy, Request, Server};
+use esact::model::{self, TinyWeights};
+use esact::quant::QuantMethod;
+use esact::runtime::{Arg, ArtifactSet};
+use esact::util::rng::Xoshiro256pp;
+use esact::util::stats::bench;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new("artifacts");
+    let artifacts = ArtifactSet::load(dir)?;
+    let weights = TinyWeights::load(&dir.join("tiny_weights.bin"))?;
+    let mut rng = Xoshiro256pp::new(2);
+    let l = weights.cfg.seq_len;
+
+    // --- raw executable latency -------------------------------------
+    let toks1: Vec<i32> = (0..l).map(|_| rng.below(64) as i32).collect();
+    let s = bench(20, 5, || {
+        artifacts
+            .dense_b1
+            .run_f32(&[Arg::I32(&toks1, &[1, l])])
+            .unwrap();
+    });
+    println!("dense_b1 PJRT execute        {:>8.2} ms/seq (p95 {:.2})", s.mean * 1e3, s.p95 * 1e3);
+
+    let toks8: Vec<i32> = (0..8 * l).map(|_| rng.below(64) as i32).collect();
+    let s = bench(20, 5, || {
+        artifacts
+            .dense_b8
+            .run_f32(&[Arg::I32(&toks8, &[8, l])])
+            .unwrap();
+    });
+    println!(
+        "dense_b8 PJRT execute        {:>8.2} ms/batch = {:.2} ms/seq",
+        s.mean * 1e3,
+        s.mean * 1e3 / 8.0
+    );
+
+    // --- SPLS planning cost (host, per request) ----------------------
+    let (tok_seq, _) = model::synth::gen_example(&mut rng, l);
+    let spls = SplsConfig::default();
+    let s = bench(10, 3, || {
+        std::hint::black_box(model::plan_model(&weights, &tok_seq, &spls, QuantMethod::Hlog));
+    });
+    println!("SPLS plan_model (2 layers)   {:>8.2} ms/seq", s.mean * 1e3);
+
+    // --- coordinator throughput --------------------------------------
+    for mode in [Mode::Dense, Mode::Spls] {
+        let srv = Server::new(dir, mode, SplsConfig::default())?;
+        let n = 64usize;
+        let (tx, rx) = mpsc::channel();
+        let (rtx, rrx) = mpsc::channel();
+        let mut g = Xoshiro256pp::new(3);
+        for i in 0..n {
+            let (t, _) = model::synth::gen_example(&mut g, l);
+            tx.send(Request { id: i as u64, tokens: t, arrived: Instant::now() })?;
+        }
+        drop(tx);
+        let drain = std::thread::spawn(move || rrx.iter().count());
+        let m = srv.serve(rx, rtx, BatchPolicy::default())?;
+        drain.join().unwrap();
+        println!(
+            "serve {mode:?}: {:.0} req/s | mean latency {:.2} ms | {} batches",
+            m.throughput_rps(),
+            m.mean_latency().as_secs_f64() * 1e3,
+            m.batches
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Cycle-simulator benchmarks: per-model simulated performance (the
+//! Fig 20/21 inputs) plus simulator wall-clock throughput, and the
+//! DRAM-model sanity row (paper: 4.7 GB/s max per unit).
+
+use esact::config::{self, HardwareConfig, SplsConfig};
+use esact::sim::{ablation, simulate_model, Features};
+use esact::util::stats::bench;
+use esact::workloads::all_benchmarks;
+use esact::workloads::bench26::SparsityProfile;
+
+fn main() {
+    let hw = HardwareConfig::default();
+    let spls = SplsConfig::default();
+    let profile = SparsityProfile { q: 0.6, kv: 0.6, attn: 0.946, ffn: 0.5 };
+
+    println!("== simulated per-model ablation (paper Fig 20 inputs) ==");
+    for cfg in [
+        config::bert_base(128),
+        config::bert_base(384),
+        config::bert_large(512),
+        config::gpt2(512),
+        config::llama2_7b(512),
+        config::vit_b16(),
+    ] {
+        let [d, s, p, f] = ablation(&cfg, &hw, &spls, &profile);
+        println!(
+            "{:>11} L={:<4} SPLS ×{:.2} prog ×{:.2} dyn ×{:.2} | full {:>9.2} ms | BW {:.2} GB/s",
+            cfg.name,
+            cfg.seq_len,
+            d.cycles as f64 / s.cycles as f64,
+            s.cycles as f64 / p.cycles as f64,
+            p.cycles as f64 / f.cycles as f64,
+            f.seconds(&hw) * 1e3,
+            f.peak_bw / 1e9,
+        );
+    }
+
+    println!("\n== max per-unit bandwidth across the 26-benchmark zoo ==");
+    let mut max_bw = 0.0f64;
+    for b in all_benchmarks() {
+        let r = simulate_model(&b.model, &hw, &spls, &b.profile, Features::FULL);
+        max_bw = max_bw.max(r.peak_bw);
+    }
+    println!(
+        "max {:.2} GB/s vs {:.2} GB/s per-unit share (paper: 4.7 vs 7.2) — compute-bound ✓",
+        max_bw / 1e9,
+        hw.dram_bw / 1e9
+    );
+
+    println!("\n== simulator wall-clock ==");
+    let cfg = config::bert_large(512);
+    let s = bench(10, 3, || {
+        std::hint::black_box(simulate_model(&cfg, &hw, &spls, &profile, Features::FULL));
+    });
+    println!(
+        "simulate_model BERT-Large/512: {:.2} ms/run (p95 {:.2})",
+        s.mean * 1e3,
+        s.p95 * 1e3
+    );
+}

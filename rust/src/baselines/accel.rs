@@ -1,0 +1,177 @@
+//! SOTA attention-accelerator baselines (Table IV): SpAtten and Sanger
+//! published figures, technology-normalized to 28 nm, next to ESACT's
+//! simulated attention-level throughput.
+
+use crate::config::{HardwareConfig, SplsConfig};
+use crate::energy::scaling::{scale_design, TechNode};
+use crate::sim::pe::gemm_irregular;
+
+
+/// One accelerator row of Table IV.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AccelSpec {
+    pub name: &'static str,
+    pub accuracy_loss_pct: f64,
+    pub tech_nm: f64,
+    pub freq_hz: f64,
+    pub area_mm2: f64,
+    pub power_w: f64,
+    /// Attention throughput in dense-equivalent GOPS.
+    pub attn_gops: f64,
+}
+
+impl AccelSpec {
+    pub fn energy_eff(&self) -> f64 {
+        self.attn_gops / self.power_w
+    }
+
+    pub fn area_eff(&self) -> f64 {
+        self.attn_gops / self.area_mm2
+    }
+
+    /// Normalize to 28 nm (the Table IV methodology, after [45]).
+    pub fn normalized_28nm(&self) -> AccelSpec {
+        let (gops, power, area) = scale_design(
+            self.attn_gops,
+            self.power_w,
+            self.area_mm2,
+            TechNode(self.tech_nm),
+            TechNode::NM28,
+        );
+        AccelSpec {
+            tech_nm: 28.0,
+            freq_hz: self.freq_hz * self.tech_nm / 28.0,
+            area_mm2: area,
+            power_w: power,
+            attn_gops: gops,
+            ..*self
+        }
+    }
+}
+
+/// SpAtten's published figures (40 nm, 1 GHz).
+pub const SPATTEN: AccelSpec = AccelSpec {
+    name: "SpAtten",
+    accuracy_loss_pct: 0.7,
+    tech_nm: 40.0,
+    freq_hz: 1e9,
+    area_mm2: 1.55,
+    power_w: 0.325,
+    attn_gops: 360.0,
+};
+
+/// Sanger's published figures (55 nm, 500 MHz).
+pub const SANGER: AccelSpec = AccelSpec {
+    name: "Sanger",
+    accuracy_loss_pct: 0.1,
+    tech_nm: 55.0,
+    freq_hz: 500e6,
+    area_mm2: 16.9,
+    power_w: 2.76,
+    attn_gops: 2116.0,
+};
+
+/// ESACT's attention-level throughput from the cycle model: dense
+/// attention ops retired per second under SPLS sparsity (inter-row 60%
+/// similar + intra-row top-k ≈ 0.15 on critical rows — the paper's
+/// Verilator calibration workload).
+///
+/// Attention-level accounting (what SpAtten/Sanger report): the QKᵀ and
+/// A·V products plus the *exposed* slice of the attention-prediction
+/// pipeline and the row-pipelined softmax. QKV-generation prediction is
+/// excluded (SpAtten/Sanger don't do it — it belongs to the end-to-end
+/// numbers of Figs 20/21). With the progressive scheme the per-window
+/// attention prediction overlaps generation of the previous window;
+/// ~10% remains exposed (first window + drain).
+pub fn esact_attention_entry(hw: &HardwareConfig, _spls: &SplsConfig) -> AccelSpec {
+    let l = 128usize;
+    let dh = 64usize;
+    let h = 12usize;
+    // per-row kept counts: 40% critical rows with ceil(0.15·L) kept
+    let kept = (0.15 * l as f64).ceil() as usize;
+    let n_crit = (0.4 * l as f64).round() as usize;
+    let keep: Vec<usize> = (0..l).map(|r| if r < n_crit { kept } else { 0 }).collect();
+    let qk = gemm_irregular(hw, &keep, dh, true);
+    let av = gemm_irregular(hw, &keep, dh, true);
+    // attention prediction (L×Dh × Dh×L through the bit-level unit);
+    // ≈10% exposed past the progressive overlap
+    let a_pred = crate::sim::prediction_unit::predict_gemm(hw, l, dh, l);
+    let pred_exposed = a_pred.cycles / 10;
+    // softmax over kept entries, row-pipelined (1 row/cycle + fill)
+    let softmax = n_crit as u64 + 10;
+    let cycles_per_head = qk.cycles + av.cycles + pred_exposed + softmax;
+    let cycles = cycles_per_head as f64 * h as f64;
+    let dense_ops = 2.0 * (2 * l * l * dh * h) as f64;
+    let secs = cycles / hw.freq_hz;
+    let gops = dense_ops / secs / 1e9;
+    AccelSpec {
+        name: "ESACT",
+        accuracy_loss_pct: 0.2,
+        tech_nm: 28.0,
+        freq_hz: hw.freq_hz,
+        area_mm2: 5.09,
+        power_w: 0.792,
+        attn_gops: gops,
+    }
+}
+
+/// The three rows of Table IV, SpAtten/Sanger normalized to 28 nm.
+pub fn attention_accelerators(hw: &HardwareConfig, spls: &SplsConfig) -> Vec<AccelSpec> {
+    vec![
+        SPATTEN.normalized_28nm(),
+        SANGER.normalized_28nm(),
+        esact_attention_entry(hw, spls),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn defaults() -> (HardwareConfig, SplsConfig) {
+        (HardwareConfig::default(), SplsConfig::default())
+    }
+
+    #[test]
+    fn published_efficiencies_normalize_to_paper_values() {
+        // Table IV: SpAtten 2261 GOPS/W, Sanger 2958 GOPS/W after scaling
+        let sp = SPATTEN.normalized_28nm();
+        let sa = SANGER.normalized_28nm();
+        assert!((sp.energy_eff() - 2261.0).abs() / 2261.0 < 0.35, "{}", sp.energy_eff());
+        assert!((sa.energy_eff() - 2958.0).abs() / 2958.0 < 0.35, "{}", sa.energy_eff());
+    }
+
+    #[test]
+    fn esact_attention_throughput_magnitude() {
+        // Table IV: ESACT 5288 GOPS attention throughput
+        let (hw, spls) = defaults();
+        let e = esact_attention_entry(&hw, &spls);
+        assert!(
+            (e.attn_gops - 5288.0).abs() / 5288.0 < 0.4,
+            "attention GOPS {}",
+            e.attn_gops
+        );
+    }
+
+    #[test]
+    fn esact_beats_both_in_energy_efficiency() {
+        // Table IV headline: 2.95× over SpAtten, 2.26× over Sanger
+        let (hw, spls) = defaults();
+        let v = attention_accelerators(&hw, &spls);
+        let eff = |n: &str| v.iter().find(|a| a.name == n).unwrap().energy_eff();
+        let r_spatten = eff("ESACT") / eff("SpAtten");
+        let r_sanger = eff("ESACT") / eff("Sanger");
+        assert!((1.8..4.5).contains(&r_spatten), "vs SpAtten {r_spatten}");
+        assert!((1.5..3.5).contains(&r_sanger), "vs Sanger {r_sanger}");
+    }
+
+    #[test]
+    fn esact_area_efficiency_near_sanger() {
+        let (hw, spls) = defaults();
+        let v = attention_accelerators(&hw, &spls);
+        let ae = |n: &str| v.iter().find(|a| a.name == n).unwrap().area_eff();
+        let ratio = ae("ESACT") / ae("Sanger");
+        assert!((0.6..1.6).contains(&ratio), "area-eff ratio {ratio}");
+        assert!(ae("ESACT") > ae("SpAtten"));
+    }
+}

@@ -1,0 +1,105 @@
+//! Analytic Nvidia V100 model (DESIGN.md §Substitutions): roofline over
+//! 125 TOPS int8-equivalent peak and 900 GB/s HBM, with a
+//! shape-dependent utilization curve calibrated so the dense ESACT ASIC
+//! deployment (125 units, same peak, same bandwidth) lands at the
+//! paper's 2.42× speedup (Fig 20).
+
+use crate::config::ModelConfig;
+use crate::spls::plan::dense_model_flops;
+
+/// V100 deployment parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct V100 {
+    /// Peak throughput, ops/s (125 TOPS — the paper's normalization).
+    pub peak_ops: f64,
+    /// HBM bandwidth, bytes/s.
+    pub hbm_bw: f64,
+}
+
+impl Default for V100 {
+    fn default() -> Self {
+        Self { peak_ops: 125e12, hbm_bw: 900e9 }
+    }
+}
+
+impl V100 {
+    /// Effective utilization for a transformer workload.
+    ///
+    /// GPUs lose throughput to kernel-launch latency, tensor-core tile
+    /// quantization on short sequences, softmax/LN memory-bound phases,
+    /// and batch under-filling. The paper's dense ASIC achieves 2.42×
+    /// at equal peak → average GPU utilization ≈ 1/2.42 ≈ 41%. The
+    /// curve gives small-batch short-sequence workloads less and large
+    /// dense GEMMs more, centred on that anchor.
+    pub fn utilization(&self, cfg: &ModelConfig, batch: usize) -> f64 {
+        // GEMM-shape factor: relative occupancy of 128×128 tensor-core
+        // tiles at (L·batch) × D
+        let rows = (cfg.seq_len * batch) as f64;
+        let tile = |dim: f64, t: f64| (dim / t).min((dim / t).ceil()).max(1e-9) / (dim / t).ceil();
+        let occ = tile(rows, 128.0) * tile(cfg.d_model as f64, 128.0);
+        // memory-bound phases (softmax, LN, residuals) cap utilization:
+        // they are ~10% of ops but run at bandwidth speed. Base
+        // calibrated so the dense ASIC lands at the paper's 2.42×
+        // (dense-ASIC utilization ≈ 0.87 → GPU ≈ 0.87 / 2.42 ≈ 0.36).
+        let base = 0.38;
+        (base * occ.powf(0.5)).clamp(0.12, 0.50)
+    }
+
+    /// End-to-end time for one batch on the V100.
+    pub fn batch_time(&self, cfg: &ModelConfig, batch: usize) -> f64 {
+        let flops = dense_model_flops(cfg).total() * batch as f64;
+        let ops = 2.0 * flops;
+        let compute = ops / (self.peak_ops * self.utilization(cfg, batch));
+        // weight + activation traffic (int8), streamed once per batch
+        let bytes = (cfg.n_layers * (4 * cfg.d_model * cfg.d_model + 2 * cfg.d_model * cfg.d_ffn))
+            as f64
+            + (batch * cfg.seq_len * cfg.d_model * 2) as f64;
+        let mem = bytes / self.hbm_bw;
+        compute.max(mem)
+    }
+}
+
+/// Convenience: V100 time per sequence.
+pub fn v100_model_time(cfg: &ModelConfig, batch: usize) -> f64 {
+    V100::default().batch_time(cfg, batch) / batch as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+
+    #[test]
+    fn utilization_anchor() {
+        let v = V100::default();
+        // big dense workloads sit near the 41% anchor (1/2.42)
+        let u = v.utilization(&config::bert_large(512), 32);
+        assert!((0.35..0.55).contains(&u), "util {u}");
+    }
+
+    #[test]
+    fn small_workloads_less_efficient() {
+        let v = V100::default();
+        let small = v.utilization(&config::vit_b32(), 1);
+        let big = v.utilization(&config::bert_large(512), 32);
+        assert!(small <= big);
+    }
+
+    #[test]
+    fn batch_time_scales_sublinearly_per_seq() {
+        let per1 = v100_model_time(&config::bert_base(128), 1);
+        let per32 = v100_model_time(&config::bert_base(128), 32);
+        assert!(per32 <= per1, "batched per-seq {per32} vs {per1}");
+    }
+
+    #[test]
+    fn compute_bound_for_bert() {
+        let v = V100::default();
+        let cfg = config::bert_base(128);
+        let t = v.batch_time(&cfg, 32);
+        let flops = crate::spls::plan::dense_model_flops(&cfg).total() * 32.0;
+        let ideal = 2.0 * flops / v.peak_ops;
+        assert!(t > ideal, "must be below peak");
+        assert!(t < ideal * 8.0, "not absurdly below peak");
+    }
+}

@@ -1,0 +1,12 @@
+//! Comparison baselines: the dense ESACT ASIC, an analytic V100 model
+//! (Fig 20), and the SOTA attention accelerators SpAtten / Sanger
+//! normalized to 28 nm (Table IV), plus FACT's prediction unit
+//! (Table III, via `energy::area`).
+
+pub mod accel;
+pub mod fact;
+pub mod gpu;
+
+pub use accel::{attention_accelerators, esact_attention_entry, AccelSpec};
+pub use fact::{compare_with_fact, simulate_fact, FactComparison};
+pub use gpu::{v100_model_time, V100};

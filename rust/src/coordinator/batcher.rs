@@ -1,0 +1,184 @@
+//! Dynamic batcher: coalesce incoming requests into the batch sizes the
+//! AOT artifacts were compiled for (1 and 8), trading batching latency
+//! against executor efficiency — the standard serving trade-off, with
+//! the artifact-shape constraint that a real single-model deployment
+//! has.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// One classification request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub arrived: Instant,
+}
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Preferred (largest compiled) batch size.
+    pub max_batch: usize,
+    /// How long a request may wait for the batch to fill before being
+    /// dispatched in a smaller (padded) batch.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// A dispatched batch: the requests plus the padding count (padded
+/// slots replay request 0 and are discarded on output).
+#[derive(Debug)]
+pub struct Batch {
+    pub requests: Vec<Request>,
+    pub padding: usize,
+}
+
+impl Batch {
+    pub fn size(&self) -> usize {
+        self.requests.len() + self.padding
+    }
+}
+
+/// FIFO dynamic batcher.
+pub struct Batcher {
+    policy: BatchPolicy,
+    queue: VecDeque<Request>,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Self { policy, queue: VecDeque::new() }
+    }
+
+    pub fn push(&mut self, req: Request) {
+        self.queue.push_back(req);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Pop the next batch if the policy allows dispatch at `now`:
+    /// dispatch when a full batch is ready, or when the oldest request
+    /// has waited past `max_wait` (padding up to the compiled size).
+    pub fn pop_ready(&mut self, now: Instant) -> Option<Batch> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let full = self.queue.len() >= self.policy.max_batch;
+        let stale = now.duration_since(self.queue[0].arrived) >= self.policy.max_wait;
+        if !full && !stale {
+            return None;
+        }
+        let take = self.queue.len().min(self.policy.max_batch);
+        let requests: Vec<Request> = self.queue.drain(..take).collect();
+        // pad to the nearest compiled shape: 1 stays 1, everything else
+        // pads up to max_batch
+        let padding = if requests.len() == 1 { 0 } else { self.policy.max_batch - requests.len() };
+        Some(Batch { requests, padding })
+    }
+
+    /// Drain everything immediately (shutdown path).
+    pub fn drain_all(&mut self) -> Vec<Batch> {
+        let mut out = Vec::new();
+        while !self.queue.is_empty() {
+            let take = self.queue.len().min(self.policy.max_batch);
+            let requests: Vec<Request> = self.queue.drain(..take).collect();
+            let padding =
+                if requests.len() == 1 { 0 } else { self.policy.max_batch - requests.len() };
+            out.push(Batch { requests, padding });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, at: Instant) -> Request {
+        Request { id, tokens: vec![0; 64], arrived: at }
+    }
+
+    #[test]
+    fn full_batch_dispatches_immediately() {
+        let mut b = Batcher::new(BatchPolicy::default());
+        let t0 = Instant::now();
+        for i in 0..8 {
+            b.push(req(i, t0));
+        }
+        let batch = b.pop_ready(t0).expect("full batch");
+        assert_eq!(batch.requests.len(), 8);
+        assert_eq!(batch.padding, 0);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn partial_batch_waits() {
+        let mut b = Batcher::new(BatchPolicy::default());
+        let t0 = Instant::now();
+        for i in 0..3 {
+            b.push(req(i, t0));
+        }
+        assert!(b.pop_ready(t0).is_none(), "should wait for more");
+        let later = t0 + Duration::from_millis(5);
+        let batch = b.pop_ready(later).expect("stale dispatch");
+        assert_eq!(batch.requests.len(), 3);
+        assert_eq!(batch.padding, 5);
+        assert_eq!(batch.size(), 8);
+    }
+
+    #[test]
+    fn single_request_uses_batch1() {
+        let mut b = Batcher::new(BatchPolicy::default());
+        let t0 = Instant::now();
+        b.push(req(0, t0));
+        let batch = b.pop_ready(t0 + Duration::from_millis(5)).unwrap();
+        assert_eq!(batch.requests.len(), 1);
+        assert_eq!(batch.padding, 0);
+        assert_eq!(batch.size(), 1);
+    }
+
+    #[test]
+    fn overflow_queues_remainder() {
+        let mut b = Batcher::new(BatchPolicy::default());
+        let t0 = Instant::now();
+        for i in 0..11 {
+            b.push(req(i, t0));
+        }
+        let batch = b.pop_ready(t0).unwrap();
+        assert_eq!(batch.requests.len(), 8);
+        assert_eq!(b.pending(), 3);
+    }
+
+    #[test]
+    fn drain_flushes_everything() {
+        let mut b = Batcher::new(BatchPolicy::default());
+        let t0 = Instant::now();
+        for i in 0..10 {
+            b.push(req(i, t0));
+        }
+        let batches = b.drain_all();
+        assert_eq!(batches.len(), 2);
+        assert_eq!(batches.iter().map(|x| x.requests.len()).sum::<usize>(), 10);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut b = Batcher::new(BatchPolicy::default());
+        let t0 = Instant::now();
+        for i in 0..8 {
+            b.push(req(i, t0));
+        }
+        let batch = b.pop_ready(t0).unwrap();
+        let ids: Vec<u64> = batch.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, (0..8).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,149 @@
+//! Trace-driven load generation: Poisson / bursty arrival processes
+//! over the synthetic request corpus, used to characterize the serving
+//! coordinator's latency-vs-load curve (the serving-systems complement
+//! to the paper's throughput tables; see `examples/serve_tiny.rs` and
+//! the serving bench).
+
+use std::time::Duration;
+
+use crate::util::rng::Xoshiro256pp;
+
+/// Arrival process shapes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Arrival {
+    /// Exponential inter-arrival times at `rate` requests/second.
+    Poisson { rate: f64 },
+    /// Deterministic spacing at `rate` requests/second.
+    Uniform { rate: f64 },
+    /// Bursts of `burst` back-to-back requests, bursts arriving at
+    /// `burst_rate` bursts/second (models batched upstream callers).
+    Bursty { burst: usize, burst_rate: f64 },
+}
+
+/// One scheduled arrival: offset from trace start.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct ArrivalAt(pub Duration);
+
+/// Generate `n` arrival offsets for the given process.
+pub fn arrivals(rng: &mut Xoshiro256pp, process: Arrival, n: usize) -> Vec<ArrivalAt> {
+    let mut out = Vec::with_capacity(n);
+    let mut t = 0.0f64;
+    match process {
+        Arrival::Poisson { rate } => {
+            assert!(rate > 0.0);
+            for _ in 0..n {
+                // inverse-CDF exponential sample
+                let u = rng.f64().max(1e-12);
+                t += -u.ln() / rate;
+                out.push(ArrivalAt(Duration::from_secs_f64(t)));
+            }
+        }
+        Arrival::Uniform { rate } => {
+            assert!(rate > 0.0);
+            let step = 1.0 / rate;
+            for _ in 0..n {
+                t += step;
+                out.push(ArrivalAt(Duration::from_secs_f64(t)));
+            }
+        }
+        Arrival::Bursty { burst, burst_rate } => {
+            assert!(burst > 0 && burst_rate > 0.0);
+            while out.len() < n {
+                let u = rng.f64().max(1e-12);
+                t += -u.ln() / burst_rate;
+                for _ in 0..burst.min(n - out.len()) {
+                    out.push(ArrivalAt(Duration::from_secs_f64(t)));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Offered load summary of a trace.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceStats {
+    pub n: usize,
+    pub duration: Duration,
+    pub mean_rate: f64,
+    /// Peak 10 ms-window arrival count (burstiness indicator).
+    pub peak_window: usize,
+}
+
+pub fn trace_stats(trace: &[ArrivalAt]) -> TraceStats {
+    assert!(!trace.is_empty());
+    let duration = trace.last().unwrap().0;
+    let window = Duration::from_millis(10);
+    let mut peak = 0usize;
+    let mut lo = 0usize;
+    for hi in 0..trace.len() {
+        while trace[hi].0.saturating_sub(trace[lo].0) > window {
+            lo += 1;
+        }
+        peak = peak.max(hi - lo + 1);
+    }
+    TraceStats {
+        n: trace.len(),
+        duration,
+        mean_rate: trace.len() as f64 / duration.as_secs_f64().max(1e-9),
+        peak_window: peak,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_converges() {
+        let mut rng = Xoshiro256pp::new(1);
+        let trace = arrivals(&mut rng, Arrival::Poisson { rate: 1000.0 }, 5000);
+        let stats = trace_stats(&trace);
+        assert!((stats.mean_rate - 1000.0).abs() < 60.0, "rate {}", stats.mean_rate);
+        // arrivals sorted
+        assert!(trace.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn uniform_exactly_spaced() {
+        let mut rng = Xoshiro256pp::new(2);
+        let trace = arrivals(&mut rng, Arrival::Uniform { rate: 100.0 }, 10);
+        for (i, a) in trace.iter().enumerate() {
+            let want = (i + 1) as f64 * 0.01;
+            assert!((a.0.as_secs_f64() - want).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn bursts_are_coincident() {
+        let mut rng = Xoshiro256pp::new(3);
+        let trace = arrivals(&mut rng, Arrival::Bursty { burst: 8, burst_rate: 10.0 }, 64);
+        assert_eq!(trace.len(), 64);
+        // each group of 8 shares a timestamp
+        for chunk in trace.chunks(8) {
+            assert!(chunk.iter().all(|a| *a == chunk[0]));
+        }
+        let stats = trace_stats(&trace);
+        assert!(stats.peak_window >= 8);
+    }
+
+    #[test]
+    fn burstier_traces_have_higher_peaks() {
+        let mut r1 = Xoshiro256pp::new(4);
+        let mut r2 = Xoshiro256pp::new(4);
+        let uniform = trace_stats(&arrivals(&mut r1, Arrival::Uniform { rate: 500.0 }, 500));
+        let bursty = trace_stats(&arrivals(
+            &mut r2,
+            Arrival::Bursty { burst: 16, burst_rate: 500.0 / 16.0 },
+            500,
+        ));
+        assert!(bursty.peak_window > uniform.peak_window);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = arrivals(&mut Xoshiro256pp::new(9), Arrival::Poisson { rate: 50.0 }, 100);
+        let b = arrivals(&mut Xoshiro256pp::new(9), Arrival::Poisson { rate: 50.0 }, 100);
+        assert_eq!(a, b);
+    }
+}

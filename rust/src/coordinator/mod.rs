@@ -1,0 +1,14 @@
+//! L3 serving coordinator: request queue → dynamic batcher → worker
+//! pool executing the AOT-compiled PJRT executables, plus the
+//! cluster-level workload partitioner modelling the paper's 125-unit /
+//! 25-cluster deployment (§V-C). Python never runs here.
+
+pub mod batcher;
+pub mod loadgen;
+pub mod partition;
+pub mod server;
+
+pub use batcher::{BatchPolicy, Batcher, Request};
+pub use loadgen::{arrivals, trace_stats, Arrival, TraceStats};
+pub use partition::{partition_workload, ClusterAssignment, WorkItem};
+pub use server::{Mode, Reply, ServeMetrics, Server};

@@ -1,0 +1,169 @@
+//! Cluster-level workload partitioner (paper §V-C): 125 ESACT units in
+//! 25 clusters; each workload is split along batch → head → sequence
+//! (lowest dimension first) and assigned to clusters in order.
+
+use crate::config::{DeployConfig, ModelConfig};
+
+/// One shard of a workload, assigned to a cluster.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WorkItem {
+    pub cluster: usize,
+    /// batch indices [b0, b1)
+    pub batch_range: (usize, usize),
+    /// head indices [h0, h1)
+    pub head_range: (usize, usize),
+    /// sequence-row indices [s0, s1)
+    pub seq_range: (usize, usize),
+}
+
+impl WorkItem {
+    pub fn volume(&self) -> usize {
+        (self.batch_range.1 - self.batch_range.0)
+            * (self.head_range.1 - self.head_range.0)
+            * (self.seq_range.1 - self.seq_range.0)
+    }
+}
+
+/// Assignment of a full workload to the cluster array.
+#[derive(Clone, Debug)]
+pub struct ClusterAssignment {
+    pub items: Vec<WorkItem>,
+    pub n_clusters: usize,
+}
+
+impl ClusterAssignment {
+    /// Load imbalance: max cluster volume / mean cluster volume.
+    pub fn imbalance(&self) -> f64 {
+        let mut per = vec![0usize; self.n_clusters];
+        for it in &self.items {
+            per[it.cluster] += it.volume();
+        }
+        let max = *per.iter().max().unwrap_or(&0) as f64;
+        let mean = per.iter().sum::<usize>() as f64 / self.n_clusters as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+
+    /// Every (batch, head, seq) cell covered exactly once?
+    pub fn covers_exactly(&self, batch: usize, heads: usize, seq: usize) -> bool {
+        let mut count = vec![0u8; batch * heads * seq];
+        for it in &self.items {
+            for b in it.batch_range.0..it.batch_range.1 {
+                for h in it.head_range.0..it.head_range.1 {
+                    for s in it.seq_range.0..it.seq_range.1 {
+                        let idx = (b * heads + h) * seq + s;
+                        count[idx] += 1;
+                    }
+                }
+            }
+        }
+        count.iter().all(|&c| c == 1)
+    }
+}
+
+/// Split `n` into `parts` contiguous ranges (as even as possible).
+fn split(n: usize, parts: usize) -> Vec<(usize, usize)> {
+    let parts = parts.min(n).max(1);
+    let base = n / parts;
+    let rem = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let len = base + usize::from(i < rem);
+        out.push((start, start + len));
+        start += len;
+    }
+    out
+}
+
+/// Partition a (batch × heads × seq) workload over the clusters:
+/// batch first, then heads, then sequence rows — "assigned to the
+/// clusters in order from the lowest to the highest dimension".
+pub fn partition_workload(
+    deploy: &DeployConfig,
+    cfg: &ModelConfig,
+    batch: usize,
+) -> ClusterAssignment {
+    let c = deploy.n_clusters;
+    let mut items = Vec::new();
+    // split batch as far as it goes
+    let batch_parts = split(batch, c);
+    let clusters_per_batch = (c / batch_parts.len()).max(1);
+    let mut cluster = 0usize;
+    for &(b0, b1) in &batch_parts {
+        // within a batch shard, split heads over the clusters allotted
+        let head_parts = split(cfg.n_heads, clusters_per_batch);
+        let clusters_per_head = (clusters_per_batch / head_parts.len()).max(1);
+        for &(h0, h1) in &head_parts {
+            // finally split the sequence
+            let seq_parts = split(cfg.seq_len, clusters_per_head);
+            for &(s0, s1) in &seq_parts {
+                items.push(WorkItem {
+                    cluster: cluster % c,
+                    batch_range: (b0, b1),
+                    head_range: (h0, h1),
+                    seq_range: (s0, s1),
+                });
+                cluster += 1;
+            }
+        }
+    }
+    ClusterAssignment { items, n_clusters: c }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+
+    fn deploy() -> DeployConfig {
+        DeployConfig::default()
+    }
+
+    #[test]
+    fn large_batch_splits_on_batch_only() {
+        let cfg = config::bert_base(128);
+        let a = partition_workload(&deploy(), &cfg, 32);
+        assert!(a.covers_exactly(32, 12, 128));
+        // contiguous batch split of 32 over 25 clusters: 7 clusters get
+        // 2 sequences → max/mean = 2/(32/25) = 1.5625
+        assert!(a.imbalance() < 1.6, "imbalance {}", a.imbalance());
+        // batch dominates: every item spans all heads
+        assert!(a.items.iter().all(|i| i.head_range == (0, 12)));
+    }
+
+    #[test]
+    fn batch_one_splits_heads_then_seq() {
+        let cfg = config::bert_base(128);
+        let a = partition_workload(&deploy(), &cfg, 1);
+        assert!(a.covers_exactly(1, 12, 128));
+        // 25 clusters > 12 heads: sequence must split too
+        assert!(a.items.len() >= 12);
+        assert!(a.imbalance() < 2.0, "imbalance {}", a.imbalance());
+    }
+
+    #[test]
+    fn tiny_workload_still_covered() {
+        let cfg = config::vit_b32(); // L = 50
+        let a = partition_workload(&deploy(), &cfg, 2);
+        assert!(a.covers_exactly(2, 12, 50));
+    }
+
+    #[test]
+    fn split_helper_even() {
+        assert_eq!(split(10, 3), vec![(0, 4), (4, 7), (7, 10)]);
+        assert_eq!(split(2, 5).len(), 2); // parts clamped to n
+        assert_eq!(split(5, 1), vec![(0, 5)]);
+    }
+
+    #[test]
+    fn volumes_sum_to_total() {
+        let cfg = config::bert_large(512);
+        let a = partition_workload(&deploy(), &cfg, 12);
+        let total: usize = a.items.iter().map(|i| i.volume()).sum();
+        assert_eq!(total, 12 * 16 * 512);
+    }
+}

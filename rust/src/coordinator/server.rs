@@ -1,0 +1,284 @@
+//! The serving loop: a leader thread owns the batcher; worker execution
+//! happens on the PJRT executables loaded at startup. The SPLS planner
+//! runs on the *host* per batch (it is the coordinator's contribution),
+//! producing SPA masks that the masked executable consumes.
+//!
+//! Single-process deployment with std threads + channels (no tokio in
+//! the vendored crate set — see DESIGN.md §Environment).
+
+use std::path::Path;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::config::SplsConfig;
+use crate::coordinator::batcher::{BatchPolicy, Batcher, Request};
+use crate::model::{plan_model, TinyWeights};
+use crate::quant::QuantMethod;
+use crate::runtime::{Arg, ArtifactSet};
+
+/// Serving statistics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServeMetrics {
+    pub requests: usize,
+    pub batches: usize,
+    pub padded_slots: usize,
+    pub total_latency: Duration,
+    pub max_latency: Duration,
+    pub wall: Duration,
+}
+
+impl ServeMetrics {
+    pub fn mean_latency(&self) -> Duration {
+        if self.requests == 0 {
+            Duration::ZERO
+        } else {
+            self.total_latency / self.requests as u32
+        }
+    }
+
+    pub fn throughput_rps(&self) -> f64 {
+        if self.wall.is_zero() {
+            0.0
+        } else {
+            self.requests as f64 / self.wall.as_secs_f64()
+        }
+    }
+}
+
+/// One served reply.
+#[derive(Clone, Debug)]
+pub struct Reply {
+    pub id: u64,
+    pub logits: Vec<f32>,
+    pub latency: Duration,
+}
+
+/// Execution mode of the serve path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// Dense executable.
+    Dense,
+    /// SPLS: host planner builds SPA masks, masked executable runs.
+    Spls,
+}
+
+/// Plan one request's SPLS masks (free function so the batch planner
+/// can fan out over threads without capturing the non-`Sync` PJRT
+/// client).
+fn masks_for(weights: &TinyWeights, spls: &SplsConfig, tokens: &[i32]) -> Vec<f32> {
+    let plans = plan_model(weights, tokens, spls, QuantMethod::Hlog);
+    let cfg = &weights.cfg;
+    let l = cfg.seq_len;
+    let mut out = Vec::with_capacity(cfg.n_layers * cfg.n_heads * l * l);
+    for plan in &plans {
+        for head in &plan.heads {
+            for r in 0..l {
+                let src = head.sim.rep[r];
+                for c in 0..l {
+                    out.push(if head.mask[(src, c)] { 1.0 } else { 0.0 });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// The serving coordinator.
+pub struct Server {
+    artifacts: ArtifactSet,
+    weights: TinyWeights,
+    spls: SplsConfig,
+    mode: Mode,
+    seq_len: usize,
+    n_classes: usize,
+}
+
+impl Server {
+    pub fn new(artifact_dir: &Path, mode: Mode, spls: SplsConfig) -> Result<Self> {
+        let artifacts = ArtifactSet::load(artifact_dir)?;
+        let weights = TinyWeights::load(&artifact_dir.join("tiny_weights.bin"))?;
+        Ok(Self {
+            seq_len: weights.cfg.seq_len,
+            n_classes: weights.cfg.n_classes,
+            artifacts,
+            weights,
+            spls,
+            mode,
+        })
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    /// Execute one batch (size 1 or 8, padded by the batcher).
+    fn execute(&self, requests: &[Request], padding: usize) -> Result<Vec<Reply>> {
+        let batch = requests.len() + padding;
+        let l = self.seq_len;
+        let mut toks = Vec::with_capacity(batch * l);
+        for r in requests {
+            assert_eq!(r.tokens.len(), l, "request length != compiled L");
+            toks.extend_from_slice(&r.tokens);
+        }
+        for _ in 0..padding {
+            toks.extend_from_slice(&requests[0].tokens);
+        }
+        let logits = match self.mode {
+            Mode::Dense => self
+                .artifacts
+                .dense_for_batch(batch)?
+                .run_f32(&[Arg::I32(&toks, &[batch, l])])?,
+            Mode::Spls => {
+                let cfg = &self.weights.cfg;
+                let mask_len = cfg.n_layers * cfg.n_heads * l * l;
+                // SPLS planning is per-request independent — fan it out
+                // over scoped threads (§Perf step 5: the planner was the
+                // serving bottleneck once the executables got fast)
+                let weights = &self.weights;
+                let spls_cfg = &self.spls;
+                let planned: Vec<Vec<f32>> = crossbeam_utils::thread::scope(|scope| {
+                    let handles: Vec<_> = requests
+                        .iter()
+                        .map(|r| {
+                            let tokens = &r.tokens;
+                            scope.spawn(move |_| masks_for(weights, spls_cfg, tokens))
+                        })
+                        .collect();
+                    handles.into_iter().map(|h| h.join().unwrap()).collect()
+                })
+                .expect("planner thread panicked");
+                let mut masks = Vec::with_capacity(batch * mask_len);
+                for m in planned {
+                    masks.extend(m);
+                }
+                for _ in 0..padding {
+                    masks.extend_from_within(..mask_len);
+                }
+                self.artifacts.masked_for_batch(batch)?.run_f32(&[
+                    Arg::I32(&toks, &[batch, l]),
+                    Arg::F32(&masks, &[batch, cfg.n_layers, cfg.n_heads, l, l]),
+                ])?
+            }
+        };
+        let now = Instant::now();
+        Ok(requests
+            .iter()
+            .enumerate()
+            .map(|(i, r)| Reply {
+                id: r.id,
+                logits: logits[i * self.n_classes..(i + 1) * self.n_classes].to_vec(),
+                latency: now.duration_since(r.arrived),
+            })
+            .collect())
+    }
+
+    /// Serve a stream of requests from a channel until it closes;
+    /// replies go out on `replies`. Returns aggregate metrics.
+    pub fn serve(
+        &self,
+        requests: mpsc::Receiver<Request>,
+        replies: mpsc::Sender<Reply>,
+        policy: BatchPolicy,
+    ) -> Result<ServeMetrics> {
+        let mut batcher = Batcher::new(policy);
+        let mut metrics = ServeMetrics::default();
+        let start = Instant::now();
+        let mut open = true;
+        while open || batcher.pending() > 0 {
+            // pull everything currently available without busy-waiting
+            match requests.recv_timeout(Duration::from_micros(200)) {
+                Ok(r) => {
+                    batcher.push(r);
+                    while let Ok(r) = requests.try_recv() {
+                        batcher.push(r);
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => open = false,
+            }
+            let ready: Vec<_> = if open {
+                batcher.pop_ready(Instant::now()).into_iter().collect()
+            } else {
+                batcher.drain_all()
+            };
+            for batch in ready {
+                let out = self.execute(&batch.requests, batch.padding)?;
+                metrics.batches += 1;
+                metrics.padded_slots += batch.padding;
+                for reply in out {
+                    metrics.requests += 1;
+                    metrics.total_latency += reply.latency;
+                    metrics.max_latency = metrics.max_latency.max(reply.latency);
+                    // receiver may have hung up at shutdown; fine
+                    let _ = replies.send(reply);
+                }
+            }
+        }
+        metrics.wall = start.elapsed();
+        Ok(metrics)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn gen_requests(n: usize) -> Vec<Request> {
+        let mut rng = Xoshiro256pp::new(42);
+        (0..n)
+            .map(|i| {
+                let (toks, _) = crate::model::synth::gen_example(&mut rng, 64);
+                Request { id: i as u64, tokens: toks, arrived: Instant::now() }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn dense_server_end_to_end() {
+        let srv = Server::new(&artifacts_dir(), Mode::Dense, SplsConfig::default()).unwrap();
+        let (tx, rx) = mpsc::channel();
+        let (rtx, rrx) = mpsc::channel();
+        for r in gen_requests(20) {
+            tx.send(r).unwrap();
+        }
+        drop(tx);
+        let metrics = srv.serve(rx, rtx, BatchPolicy::default()).unwrap();
+        assert_eq!(metrics.requests, 20);
+        let replies: Vec<Reply> = rrx.iter().collect();
+        assert_eq!(replies.len(), 20);
+        assert!(replies.iter().all(|r| r.logits.len() == 16));
+        assert!(metrics.throughput_rps() > 0.0);
+    }
+
+    #[test]
+    fn spls_server_agrees_with_dense_mostly() {
+        let dense = Server::new(&artifacts_dir(), Mode::Dense, SplsConfig::default()).unwrap();
+        let spls = Server::new(&artifacts_dir(), Mode::Spls, SplsConfig::default()).unwrap();
+        let reqs = gen_requests(8);
+        let d = dense.execute(&reqs, 0).unwrap();
+        let s = spls.execute(&reqs, 0).unwrap();
+        let agree = d
+            .iter()
+            .zip(&s)
+            .filter(|(a, b)| {
+                crate::model::tensor::argmax(&a.logits) == crate::model::tensor::argmax(&b.logits)
+            })
+            .count();
+        assert!(agree >= 6, "only {agree}/8 classifications agree");
+    }
+
+    #[test]
+    fn padding_replies_only_for_real_requests() {
+        let srv = Server::new(&artifacts_dir(), Mode::Dense, SplsConfig::default()).unwrap();
+        let reqs = gen_requests(3);
+        let out = srv.execute(&reqs, 5).unwrap();
+        assert_eq!(out.len(), 3);
+    }
+}

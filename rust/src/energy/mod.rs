@@ -1,0 +1,12 @@
+//! Energy / area models: op-level energies (Horowitz ISSCC'14 scaled to
+//! 28 nm), module-level area/power (Table II), quantization-unit
+//! comparison (Table III), and technology scaling between nodes
+//! (Table IV, methodology of [45]).
+
+pub mod area;
+pub mod ops;
+pub mod scaling;
+
+pub use area::{esact_breakdown, quant_unit_comparison, ModuleBudget, QuantUnitCost};
+pub use ops::{OpEnergy, E28};
+pub use scaling::{scale_energy, scale_freq_area, TechNode};

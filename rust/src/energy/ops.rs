@@ -1,0 +1,128 @@
+//! Op-level energy numbers.
+//!
+//! Basis: Horowitz, "Computing's energy problem" (ISSCC 2014), 45 nm
+//! numbers, scaled to 28 nm with the standard ~0.5× dynamic-energy
+//! factor per full node (capacitance·V² scaling); SRAM/DRAM numbers
+//! follow the same convention the paper's comparison baselines use.
+//! Absolute pJ values are model inputs, not synthesis measurements —
+//! Tables II-IV are reproduced *structurally* (ratios, rankings).
+
+/// Energy per operation in picojoules at a given node.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OpEnergy {
+    /// 8-bit integer add.
+    pub add8: f64,
+    /// 16-bit integer add (converter count accumulation).
+    pub add16: f64,
+    /// 32-bit integer add.
+    pub add32: f64,
+    /// 8-bit integer multiply.
+    pub mul8: f64,
+    /// 8-bit MAC (mul8 + add16 accumulate).
+    pub mac8: f64,
+    /// 4-bit multiply (Sanger's predictor).
+    pub mul4: f64,
+    /// comparison / mux (quantization ladders).
+    pub cmp8: f64,
+    /// flip-flop toggle (pipeline registers, FIFO cell).
+    pub reg: f64,
+    /// 64-bit SRAM read per byte (on-chip buffers).
+    pub sram_byte: f64,
+    /// DRAM access per byte.
+    pub dram_byte: f64,
+}
+
+/// 28 nm op energies (pJ). Horowitz 45 nm × ~0.5 node factor:
+/// add8 0.03→0.015, mul8 0.2→0.1, add32 0.1→0.05; SRAM ~0.6 pJ/byte
+/// (32 KB macro read / 8 bytes), DRAM ~10 pJ/byte (LPDDR-class).
+pub const E28: OpEnergy = OpEnergy {
+    add8: 0.015,
+    add16: 0.025,
+    add32: 0.05,
+    mul8: 0.10,
+    mac8: 0.125,
+    mul4: 0.03,
+    cmp8: 0.012,
+    reg: 0.003,
+    sram_byte: 0.6,
+    dram_byte: 10.0,
+};
+
+impl OpEnergy {
+    /// Energy of the bit-level prediction unit per HLog product:
+    /// SD encode (2 gate-level ops ≈ 1 cmp) + SJA exponent add (add8)
+    /// + converter counter increments (2 × add16 amortized).
+    pub fn hlog_product(&self) -> f64 {
+        self.cmp8 + self.add8 + 2.0 * self.add16
+    }
+
+    /// Energy per predicted output element given K accumulated products
+    /// (converter binary conversion + sign-group subtract amortized).
+    pub fn hlog_dot(&self, k: usize) -> f64 {
+        k as f64 * self.hlog_product() + 2.0 * self.add32
+    }
+
+    /// Energy per int8 MAC in the formal phase (PE array).
+    pub fn pe_mac(&self) -> f64 {
+        self.mac8 + self.reg
+    }
+
+    /// Sanger-style 4-bit quantized prediction per product.
+    pub fn lin4_product(&self) -> f64 {
+        self.mul4 + self.add16
+    }
+
+    /// APoT (Enhance) per product: position detection (3 cmp) + two
+    /// exponent adds + adder-tree accumulation (2 add16). The paper
+    /// notes the APoT transform itself retains >40% of multiply energy.
+    pub fn apot_product(&self) -> f64 {
+        3.0 * self.cmp8 + 2.0 * self.add8 + 2.0 * self.add16
+    }
+
+    /// PoT (FACT) per product: LDZ detect (1 cmp) + exponent add +
+    /// one-hot counter increment.
+    pub fn pot_product(&self) -> f64 {
+        self.cmp8 + self.add8 + self.add16
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prediction_cheaper_than_mac() {
+        // the whole premise: HLog prediction product ≪ int8 MAC
+        assert!(E28.hlog_product() < E28.pe_mac());
+        assert!(E28.hlog_product() / E28.pe_mac() < 0.7);
+    }
+
+    #[test]
+    fn quant_method_energy_ranking() {
+        // paper Table III power ranking: FACT(PoT) < ESACT(HLog) < Enhance(APoT) ≈ Sanger(4-bit)
+        let pot = E28.pot_product();
+        let hlog = E28.hlog_product();
+        let apot = E28.apot_product();
+        let lin4 = E28.lin4_product();
+        assert!(pot < hlog, "pot {pot} hlog {hlog}");
+        assert!(hlog < apot, "hlog {hlog} apot {apot}");
+        // APoT's transform keeps a large share of the multiply energy
+        // (paper cites >40% [43,44]); per-product it can even exceed the
+        // bare 4-bit multiply — parity at the *unit* level (Table III)
+        // comes from the shared adder tree, asserted in energy::area.
+        assert!(apot <= lin4 * 2.5, "apot {apot} lin4 {lin4}");
+    }
+
+    #[test]
+    fn memory_hierarchy_ordering() {
+        assert!(E28.reg < E28.sram_byte);
+        assert!(E28.sram_byte < E28.dram_byte);
+        assert!(E28.dram_byte / E28.sram_byte > 10.0);
+    }
+
+    #[test]
+    fn hlog_dot_scales_with_k() {
+        assert!(E28.hlog_dot(128) > 100.0 * E28.hlog_product());
+        assert!(E28.hlog_dot(1) < 10.0 * E28.pe_mac());
+    }
+}

@@ -1,0 +1,95 @@
+//! Technology-node scaling (paper §V-E, methodology of Wang et al. [45])
+//! used to normalize SpAtten (40 nm) and Sanger (55 nm) to 28 nm for the
+//! Table IV comparison.
+//!
+//! First-order scaling with feature size λ (constant-field flavour —
+//! the convention that reproduces the paper's normalized numbers
+//! exactly: SpAtten 360 GOPS / 0.325 W @40 nm → 2261 GOPS/W @28 nm and
+//! Sanger 2116 / 2.76 @55 nm → 2958 GOPS/W):
+//!
+//!   area      ∝ λ²
+//!   delay     ∝ λ   (frequency, hence throughput, ∝ 1/λ)
+//!   energy/op ∝ λ²  (C ∝ λ and V ∝ λ^~0.5 in this range)
+//!   power = energy/op × op rate ∝ λ² / λ = λ
+
+/// Process node in nanometres.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TechNode(pub f64);
+
+impl TechNode {
+    pub const NM28: TechNode = TechNode(28.0);
+    pub const NM40: TechNode = TechNode(40.0);
+    pub const NM55: TechNode = TechNode(55.0);
+}
+
+/// Scale (area mm², freq Hz) from one node to another.
+pub fn scale_freq_area(area: f64, freq: f64, from: TechNode, to: TechNode) -> (f64, f64) {
+    let r = to.0 / from.0; // < 1 when shrinking
+    (area * r * r, freq / r)
+}
+
+/// Scale per-op energy between nodes (energy ∝ λ²).
+pub fn scale_energy(energy: f64, from: TechNode, to: TechNode) -> f64 {
+    let r = to.0 / from.0;
+    energy * r * r
+}
+
+/// Scale a (throughput GOPS, power W, area mm²) triple to `to`,
+/// assuming the design is re-timed at the scaled frequency (throughput
+/// ∝ frequency) — the normalization applied to SpAtten/Sanger in
+/// Table IV.
+pub fn scale_design(
+    gops: f64,
+    power_w: f64,
+    area_mm2: f64,
+    from: TechNode,
+    to: TechNode,
+) -> (f64, f64, f64) {
+    let r = to.0 / from.0;
+    let gops2 = gops / r; // freq up by 1/r
+    let power2 = power_w * r; // energy/op ∝ r², rate ∝ 1/r
+    let area2 = area_mm2 * r * r;
+    (gops2, power2, area2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shrink_raises_freq_lowers_area() {
+        let (a, f) = scale_freq_area(1.55, 1e9, TechNode::NM40, TechNode::NM28);
+        assert!(a < 1.55);
+        assert!(f > 1e9);
+        assert!((a - 1.55 * (0.7 * 0.7)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn identity_scaling() {
+        let (g, p, a) = scale_design(100.0, 1.0, 2.0, TechNode::NM28, TechNode::NM28);
+        assert_eq!((g, p, a), (100.0, 1.0, 2.0));
+    }
+
+    #[test]
+    fn energy_scales_quadratically() {
+        let e = scale_energy(1.0, TechNode::NM55, TechNode::NM28);
+        let r = 28.0 / 55.0;
+        assert!((e - r * r).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spatten_normalization_matches_table4() {
+        // paper Table IV: SpAtten normalizes to 2261 GOPS/W, 677 GOPS/mm²
+        let (g, p, a) = scale_design(360.0, 0.325, 1.55, TechNode::NM40, TechNode::NM28);
+        assert!((g / p - 2261.0).abs() / 2261.0 < 0.02, "{}", g / p);
+        assert!((g / a - 677.0).abs() / 677.0 < 0.02, "{}", g / a);
+    }
+
+    #[test]
+    fn sanger_normalization_matches_table4() {
+        // paper Table IV: Sanger → 2958 GOPS/W, ~1025 GOPS/mm²
+        let (g, p, a) = scale_design(2116.0, 2.76, 16.9, TechNode::NM55, TechNode::NM28);
+        assert!((g / p - 2958.0).abs() / 2958.0 < 0.02, "{}", g / p);
+        assert!((g / a - 1025.0).abs() / 1025.0 < 0.10, "{}", g / a);
+    }
+}

@@ -1,0 +1,27 @@
+//! # ESACT — End-to-end Sparse Accelerator for Compute-intensive
+//! Transformers via local similarity
+//!
+//! Full-system reproduction of *ESACT* (Liu, Deng, Pu, Lu — 2025):
+//! the SPLS sparsity-prediction algorithm, a software model of the
+//! bit-level prediction unit, a cycle-level simulator of the 16×64-PE
+//! accelerator (progressive generation + dynamic allocation), energy /
+//! area models, accelerator baselines (dense ASIC, V100, SpAtten,
+//! Sanger, FACT), the 26-benchmark workload zoo, and a serving
+//! coordinator that runs AOT-compiled JAX/Pallas artifacts through the
+//! PJRT C API (`xla` crate) with python never on the request path.
+//!
+//! See `DESIGN.md` for the paper → module map and `EXPERIMENTS.md` for
+//! the measured reproduction of every table and figure.
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod energy;
+pub mod model;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod spls;
+pub mod util;
+pub mod workloads;

@@ -1,0 +1,236 @@
+//! ESACT leader binary: experiment reproduction (`repro <id>`),
+//! accuracy evaluation (`eval`), the serving loop (`serve`), and the
+//! cycle simulator (`sim`).
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use esact::config::SplsConfig;
+use esact::coordinator::{BatchPolicy, Request};
+use esact::coordinator::server::Mode;
+use esact::coordinator::Server;
+use esact::model;
+use esact::quant::QuantMethod;
+use esact::report::{figures, tables};
+use esact::util::rng::Xoshiro256pp;
+
+const USAGE: &str = "\
+esact — ESACT paper reproduction (see DESIGN.md / EXPERIMENTS.md)
+
+USAGE:
+  esact repro <id>            regenerate a paper figure/table
+                              (fig1 fig3 fig4 fig6 fig7 fig15 fig16 fig17
+                               fig18 fig19 fig20 fig21 table1..table4 | all)
+  esact eval [n] [k s f w]    dense vs SPLS accuracy on the test set
+  esact serve [n] [dense|spls] run the serving loop over n synthetic requests
+  esact sim <model> <L>       simulate one model (bert-base|bert-large|gpt2|
+                               llama2|bloom|vit16|vit32)
+  esact cluster <model> <L> <batch>  simulate the 125-unit deployment
+  esact help
+
+Artifacts are read from ./artifacts (run `make artifacts` first).";
+
+fn artifact_dir() -> PathBuf {
+    PathBuf::from("artifacts")
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("repro") => repro(args.get(1).map(String::as_str).unwrap_or("all")),
+        Some("eval") => eval(&args[1..]),
+        Some("serve") => serve(&args[1..]),
+        Some("sim") => sim(&args[1..]),
+        Some("cluster") => cluster(&args[1..]),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn repro(id: &str) -> Result<()> {
+    let dir = artifact_dir();
+    // sweep sizes chosen so `repro all` completes in minutes
+    let lim = 32;
+    let all = [
+        "fig1", "fig3", "fig4", "fig6", "fig7", "fig15", "fig16", "fig17", "fig18",
+        "fig19", "fig20", "fig21", "table1", "table2", "table3", "table4",
+    ];
+    let ids: Vec<&str> = if id == "all" { all.to_vec() } else { vec![id] };
+    for id in ids {
+        let text = match id {
+            "fig1" => figures::fig1(),
+            "fig3" => figures::fig3(&dir)?,
+            "fig4" => figures::fig4(&dir)?,
+            "fig6" => figures::fig6(&dir)?,
+            "fig7" => figures::fig7(),
+            "fig15" => figures::fig15(),
+            "fig16" => figures::fig16(&dir, lim)?,
+            "fig17" => figures::fig17(&dir, lim)?,
+            "fig18" => figures::fig18(&dir, lim)?,
+            "fig19" => figures::fig19(&dir, lim)?,
+            "fig20" => figures::fig20(),
+            "fig21" => figures::fig21(),
+            "table1" => tables::table1(),
+            "table2" => tables::table2(),
+            "table3" => tables::table3(),
+            "table4" => tables::table4(),
+            other => bail!("unknown experiment id {other}\n{USAGE}"),
+        };
+        println!("{text}\n{}", "=".repeat(72));
+    }
+    Ok(())
+}
+
+fn eval(args: &[String]) -> Result<()> {
+    let dir = artifact_dir();
+    let n: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(128);
+    let spls = SplsConfig {
+        top_k: args.get(1).and_then(|s| s.parse().ok()).unwrap_or(0.12),
+        sim_threshold: args.get(2).and_then(|s| s.parse().ok()).unwrap_or(0.6),
+        ffn_threshold: args.get(3).and_then(|s| s.parse().ok()).unwrap_or(2),
+        window: args.get(4).and_then(|s| s.parse().ok()).unwrap_or(8),
+    };
+    let w = model::TinyWeights::load(&dir.join("tiny_weights.bin"))?;
+    let set = model::TestSet::load(&dir.join("tiny_testset.bin"))?;
+    let dense = model::eval_dense(&w, &set, n);
+    let sparse = model::eval_sparse(&w, &set, n, &spls, QuantMethod::Hlog);
+    println!("n = {n}, spls = {spls:?}");
+    println!("dense  accuracy {:.4}", dense.accuracy);
+    println!(
+        "sparse accuracy {:.4} (loss {:+.2} pts) | sparsity: Q {:.3} KV {:.3} attn {:.3} FFN {:.3}",
+        sparse.accuracy,
+        sparse.loss_vs(&dense),
+        sparse.q_sparsity,
+        sparse.kv_sparsity,
+        sparse.attn_sparsity,
+        sparse.ffn_sparsity
+    );
+    Ok(())
+}
+
+fn serve(args: &[String]) -> Result<()> {
+    let n: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(64);
+    let mode = match args.get(1).map(String::as_str) {
+        Some("spls") => Mode::Spls,
+        _ => Mode::Dense,
+    };
+    let srv = Server::new(&artifact_dir(), mode, SplsConfig::default())?;
+    let (tx, rx) = mpsc::channel();
+    let (rtx, rrx) = mpsc::channel();
+    let seq_len = srv.seq_len();
+    let producer = std::thread::spawn(move || {
+        let mut rng = Xoshiro256pp::new(2024);
+        for i in 0..n {
+            let (toks, _) = model::synth::gen_example(&mut rng, seq_len);
+            tx.send(Request { id: i as u64, tokens: toks, arrived: Instant::now() })
+                .unwrap();
+        }
+    });
+    let drain = std::thread::spawn(move || rrx.iter().count());
+    let metrics = srv.serve(rx, rtx, BatchPolicy::default())?;
+    producer.join().unwrap();
+    let replies = drain.join().unwrap();
+    println!(
+        "mode {mode:?}: {replies}/{n} replies | {} batches ({} padded slots) | \
+         mean latency {:.2} ms, max {:.2} ms | {:.1} req/s",
+        metrics.batches,
+        metrics.padded_slots,
+        metrics.mean_latency().as_secs_f64() * 1e3,
+        metrics.max_latency.as_secs_f64() * 1e3,
+        metrics.throughput_rps()
+    );
+    Ok(())
+}
+
+fn cluster(args: &[String]) -> Result<()> {
+    use esact::config as c;
+    let name = args.first().map(String::as_str).unwrap_or("bert-base");
+    let l: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(128);
+    let batch: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(32);
+    let cfg = match name {
+        "bert-base" => c::bert_base(l),
+        "bert-large" => c::bert_large(l),
+        "gpt2" => c::gpt2(l),
+        "llama2" => c::llama2_7b(l),
+        "bloom" => c::bloom_7b(l),
+        "vit16" => c::vit_b16(),
+        "vit32" => c::vit_b32(),
+        other => bail!("unknown model {other}"),
+    };
+    let hw = esact::config::HardwareConfig::default();
+    let spls = SplsConfig::default();
+    let dep = esact::config::DeployConfig::default();
+    let profile =
+        esact::workloads::bench26::SparsityProfile { q: 0.6, kv: 0.6, attn: 0.946, ffn: 0.5 };
+    println!(
+        "{} L={} batch={} on {} units / {} clusters:",
+        cfg.name, cfg.seq_len, batch, dep.n_units, dep.n_clusters
+    );
+    for (label, feat) in [
+        ("dense", esact::sim::Features::DENSE),
+        ("full ESACT", esact::sim::Features::FULL),
+    ] {
+        let (cr, unit) = esact::sim::simulate_cluster(&cfg, &hw, &spls, &profile, &dep, batch, feat);
+        println!(
+            "  {label:<11} batch {:.3} ms | {:.0} seq/s | cluster util {:.3} | unit util {:.3}",
+            cr.batch_seconds * 1e3,
+            cr.throughput_seq_s,
+            cr.cluster_utilization,
+            unit.pe_utilization(&hw)
+        );
+    }
+    Ok(())
+}
+
+fn sim(args: &[String]) -> Result<()> {
+    use esact::config as c;
+    let name = args.first().map(String::as_str).unwrap_or("bert-base");
+    let l: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(128);
+    let cfg = match name {
+        "bert-base" => c::bert_base(l),
+        "bert-large" => c::bert_large(l),
+        "gpt2" => c::gpt2(l),
+        "llama2" => c::llama2_7b(l),
+        "bloom" => c::bloom_7b(l),
+        "vit16" => c::vit_b16(),
+        "vit32" => c::vit_b32(),
+        other => bail!("unknown model {other}"),
+    };
+    let hw = esact::config::HardwareConfig::default();
+    let spls = SplsConfig::default();
+    let profile = esact::workloads::bench26::SparsityProfile { q: 0.6, kv: 0.6, attn: 0.946, ffn: 0.5 };
+    println!("{} L={}: mechanism ablation", cfg.name, cfg.seq_len);
+    let labels = ["dense ASIC", "+SPLS", "+progressive", "+dynalloc"];
+    let results = esact::sim::ablation(&cfg, &hw, &spls, &profile);
+    let base = results[0].seconds(&hw);
+    for (label, r) in labels.iter().zip(&results) {
+        println!(
+            "  {label:<13} {:>10} cycles  {:>8.3} ms  {:.2}× | util {:.3} | {:.2} TOPS/W | peak BW {:.2} GB/s",
+            r.cycles,
+            r.seconds(&hw) * 1e3,
+            base / r.seconds(&hw),
+            r.pe_utilization(&hw),
+            r.tops_per_watt(&hw),
+            r.peak_bw / 1e9
+        );
+    }
+    println!("\n  per-layer stage breakdown (full features, cycles):");
+    let b = esact::sim::layer_breakdown(&cfg, &hw, &spls, &profile, esact::sim::Features::FULL);
+    for (stage, cyc) in [
+        ("QKV generation", b.qkv_gen),
+        ("attention", b.attention),
+        ("output proj", b.out_proj),
+        ("FFN", b.ffn),
+        ("functional", b.functional),
+        ("prediction*", b.prediction),
+    ] {
+        println!("    {stage:<15} {cyc:>10}");
+    }
+    println!("    (* overlapped by the progressive scheme)");
+    Ok(())
+}

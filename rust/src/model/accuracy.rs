@@ -1,0 +1,149 @@
+//! Accuracy harness: evaluate dense vs SPLS-sparse accuracy on the
+//! held-out synthetic test set, sweeping the SPLS hyperparameters —
+//! the substrate for the paper's accuracy experiments (Figs 15-19).
+
+use crate::config::SplsConfig;
+use crate::quant::QuantMethod;
+use crate::spls::plan::LayerPlan;
+
+use super::transformer::{forward_dense, forward_sparse, plan_model};
+use super::tensor::argmax;
+use super::weights::{TestSet, TinyWeights};
+
+/// Result of one accuracy + sparsity evaluation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EvalResult {
+    pub n: usize,
+    pub accuracy: f64,
+    /// Mean per-layer Q sparsity across the evaluated set.
+    pub q_sparsity: f64,
+    /// Mean K/V sparsity.
+    pub kv_sparsity: f64,
+    /// Mean attention sparsity (inter-row + intra-row).
+    pub attn_sparsity: f64,
+    /// Mean FFN token sparsity.
+    pub ffn_sparsity: f64,
+}
+
+impl EvalResult {
+    /// Accuracy drop in percentage points vs a dense baseline.
+    pub fn loss_vs(&self, dense: &EvalResult) -> f64 {
+        (dense.accuracy - self.accuracy) * 100.0
+    }
+}
+
+fn mean_sparsities(plans: &[LayerPlan]) -> (f64, f64, f64, f64) {
+    let n = plans.len().max(1) as f64;
+    (
+        plans.iter().map(|p| p.q_sparsity()).sum::<f64>() / n,
+        plans.iter().map(|p| p.kv_sparsity()).sum::<f64>() / n,
+        plans.iter().map(|p| p.attn_sparsity()).sum::<f64>() / n,
+        plans.iter().map(|p| p.ffn_sparsity()).sum::<f64>() / n,
+    )
+}
+
+/// Dense accuracy over (a subset of) the test set.
+pub fn eval_dense(w: &TinyWeights, set: &TestSet, limit: usize) -> EvalResult {
+    let n = set.len().min(limit);
+    let mut correct = 0usize;
+    for i in 0..n {
+        let logits = forward_dense(w, &set.tokens[i]);
+        if argmax(&logits) as i32 == set.labels[i] {
+            correct += 1;
+        }
+    }
+    EvalResult {
+        n,
+        accuracy: correct as f64 / n.max(1) as f64,
+        q_sparsity: 0.0,
+        kv_sparsity: 0.0,
+        attn_sparsity: 0.0,
+        ffn_sparsity: 0.0,
+    }
+}
+
+/// SPLS-sparse accuracy + measured sparsity over the test set.
+pub fn eval_sparse(
+    w: &TinyWeights,
+    set: &TestSet,
+    limit: usize,
+    spls: &SplsConfig,
+    method: QuantMethod,
+) -> EvalResult {
+    let n = set.len().min(limit);
+    let mut correct = 0usize;
+    let mut sums = (0.0, 0.0, 0.0, 0.0);
+    for i in 0..n {
+        let plans = plan_model(w, &set.tokens[i], spls, method);
+        let (q, kv, a, f) = mean_sparsities(&plans);
+        sums = (sums.0 + q, sums.1 + kv, sums.2 + a, sums.3 + f);
+        let logits = forward_sparse(w, &set.tokens[i], &plans);
+        if argmax(&logits) as i32 == set.labels[i] {
+            correct += 1;
+        }
+    }
+    let nf = n.max(1) as f64;
+    EvalResult {
+        n,
+        accuracy: correct as f64 / nf,
+        q_sparsity: sums.0 / nf,
+        kv_sparsity: sums.1 / nf,
+        attn_sparsity: sums.2 / nf,
+        ffn_sparsity: sums.3 / nf,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    fn load() -> (TinyWeights, TestSet) {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        (
+            TinyWeights::load(&dir.join("tiny_weights.bin")).unwrap(),
+            TestSet::load(&dir.join("tiny_testset.bin")).unwrap(),
+        )
+    }
+
+    #[test]
+    fn dense_accuracy_well_above_chance() {
+        let (w, set) = load();
+        let r = eval_dense(&w, &set, 64);
+        // 16 classes -> chance = 6.25%; the trained model should be far above
+        assert!(r.accuracy > 0.5, "dense accuracy {}", r.accuracy);
+    }
+
+    #[test]
+    fn sparse_operating_point_small_loss() {
+        let (w, set) = load();
+        let dense = eval_dense(&w, &set, 48);
+        let sparse = eval_sparse(&w, &set, 48, &SplsConfig::default(), QuantMethod::Hlog);
+        // paper's bar: loss <= 1%; give the tiny substrate a bit of slack
+        // (statistical noise at n=48) but catch gross breakage
+        assert!(
+            sparse.loss_vs(&dense) <= 8.0,
+            "loss {} pts (dense {} sparse {})",
+            sparse.loss_vs(&dense),
+            dense.accuracy,
+            sparse.accuracy
+        );
+        assert!(sparse.attn_sparsity > 0.5);
+    }
+
+    #[test]
+    fn degenerate_config_keeps_dense_accuracy() {
+        let (w, set) = load();
+        let spls = SplsConfig {
+            top_k: 1.0,
+            sim_threshold: -1.0,
+            ffn_threshold: usize::MAX,
+            window: 8,
+        };
+        let dense = eval_dense(&w, &set, 32);
+        let sparse = eval_sparse(&w, &set, 32, &spls, QuantMethod::Hlog);
+        assert_eq!(dense.accuracy, sparse.accuracy);
+        assert_eq!(sparse.q_sparsity, 0.0);
+        assert_eq!(sparse.ffn_sparsity, 0.0);
+    }
+}

@@ -1,0 +1,14 @@
+//! The accuracy substrate: a tiny int8-weight transformer whose weights
+//! are trained by the python compile path (`train_tiny.py`) and loaded
+//! here for dense/SPLS-sparse evaluation on the host. The AOT artifacts
+//! of the same model run through `runtime::` on the serve path.
+
+pub mod accuracy;
+pub mod synth;
+pub mod tensor;
+pub mod transformer;
+pub mod weights;
+
+pub use accuracy::{eval_dense, eval_sparse, EvalResult};
+pub use transformer::{attention_probs, forward_dense, forward_sparse, plan_model};
+pub use weights::{TestSet, TinyConfig, TinyWeights};

@@ -1,0 +1,99 @@
+//! Synthetic local-similarity data generator — bit-exact mirror of
+//! `python/compile/data.py` (same xoshiro256++ stream, same run/cluster
+//! construction), so both sides regenerate identical splits from a seed.
+
+use crate::util::rng::Xoshiro256pp;
+
+pub const N_CLUSTERS: u64 = 16;
+pub const VARIANTS: u64 = 4;
+
+/// One (tokens, label) example: runs of 2..8 same-cluster tokens;
+/// label = majority cluster (ties -> lowest id, argmax convention).
+pub fn gen_example(rng: &mut Xoshiro256pp, seq_len: usize) -> (Vec<i32>, i32) {
+    let mut toks = vec![0i32; seq_len];
+    let mut counts = [0i64; N_CLUSTERS as usize];
+    let mut pos = 0usize;
+    while pos < seq_len {
+        let cluster = rng.below(N_CLUSTERS);
+        let run = (2 + rng.below(7)).min((seq_len - pos) as u64);
+        for _ in 0..run {
+            toks[pos] = (cluster * VARIANTS + rng.below(VARIANTS)) as i32;
+            pos += 1;
+        }
+        counts[cluster as usize] += run as i64;
+    }
+    let label = counts
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.cmp(b.1).then(b.0.cmp(&a.0)))
+        .map(|(i, _)| i as i32)
+        .unwrap();
+    (toks, label)
+}
+
+/// A batch of examples.
+pub fn gen_batch(rng: &mut Xoshiro256pp, n: usize, seq_len: usize) -> (Vec<Vec<i32>>, Vec<i32>) {
+    let mut xs = Vec::with_capacity(n);
+    let mut ys = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (t, l) = gen_example(rng, seq_len);
+        xs.push(t);
+        ys.push(l);
+    }
+    (xs, ys)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::weights::TestSet;
+    use std::path::Path;
+
+    #[test]
+    fn matches_exported_testset_bit_exact() {
+        // python exported tiny_testset.bin from Xoshiro256pp(1234);
+        // regenerating from the same seed must match exactly — the
+        // cross-language PRNG contract.
+        let set = TestSet::load(
+            &Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny_testset.bin"),
+        )
+        .unwrap();
+        let mut rng = Xoshiro256pp::new(1234);
+        let (xs, ys) = gen_batch(&mut rng, set.len(), 64);
+        assert_eq!(xs, set.tokens, "token streams diverge");
+        assert_eq!(ys, set.labels, "labels diverge");
+    }
+
+    #[test]
+    fn label_is_majority_cluster() {
+        let mut rng = Xoshiro256pp::new(9);
+        for _ in 0..50 {
+            let (toks, label) = gen_example(&mut rng, 48);
+            let mut counts = [0usize; 16];
+            for &t in &toks {
+                counts[(t as u64 / VARIANTS) as usize] += 1;
+            }
+            let max = *counts.iter().max().unwrap();
+            assert_eq!(counts[label as usize], max);
+            // argmax tie convention: no earlier cluster has the same count
+            for c in 0..label as usize {
+                assert!(counts[c] < max);
+            }
+        }
+    }
+
+    #[test]
+    fn adjacent_tokens_share_clusters() {
+        let mut rng = Xoshiro256pp::new(99);
+        let (xs, _) = gen_batch(&mut rng, 64, 64);
+        let mut same = 0usize;
+        let mut total = 0usize;
+        for toks in &xs {
+            for w in toks.windows(2) {
+                same += usize::from(w[0] as u64 / VARIANTS == w[1] as u64 / VARIANTS);
+                total += 1;
+            }
+        }
+        assert!(same as f64 / total as f64 > 0.5);
+    }
+}

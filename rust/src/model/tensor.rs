@@ -1,0 +1,271 @@
+//! f32 tensor ops for the host-side transformer (dense + SPLS-sparse
+//! execution). Numerics mirror `python/compile/model.py` exactly:
+//! tanh-GELU, LN with eps 1e-5, softmax with row-max subtraction, and
+//! the same symmetric int8 fake-quant grid.
+//!
+//! `matmul` gets a blocked ikj fast path — it is the host model's hot
+//! loop (see EXPERIMENTS.md §Perf).
+
+use crate::util::mat::MatF;
+
+/// C = A · B with a cache-blocked ikj loop (row-major friendly).
+pub fn matmul(a: &MatF, b: &MatF) -> MatF {
+    assert_eq!(a.cols, b.rows, "matmul shape mismatch");
+    let mut out = MatF::zeros(a.rows, b.cols);
+    matmul_into(a, b, &mut out);
+    out
+}
+
+/// In-place variant reusing an output buffer (hot-path allocation saver).
+pub fn matmul_into(a: &MatF, b: &MatF, out: &mut MatF) {
+    assert_eq!(a.cols, b.rows);
+    assert_eq!((out.rows, out.cols), (a.rows, b.cols));
+    out.data.fill(0.0);
+    let n = b.cols;
+    for r in 0..a.rows {
+        let arow = a.row(r);
+        let orow = &mut out.data[r * n..(r + 1) * n];
+        for (k, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue; // sparse rows short-circuit (pruned Q/K/V)
+            }
+            let brow = &b.data[k * n..(k + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// y = x · W + bias, where bias broadcasts over rows.
+pub fn linear(x: &MatF, w: &MatF, bias: &[f32]) -> MatF {
+    assert_eq!(bias.len(), w.cols);
+    let mut y = matmul(x, w);
+    for r in 0..y.rows {
+        for (v, &b) in y.row_mut(r).iter_mut().zip(bias) {
+            *v += b;
+        }
+    }
+    y
+}
+
+/// Row-wise LayerNorm with learned gain/bias (eps = 1e-5, as python).
+pub fn layernorm(x: &MatF, gain: &[f32], bias: &[f32]) -> MatF {
+    assert_eq!(gain.len(), x.cols);
+    assert_eq!(bias.len(), x.cols);
+    let mut out = MatF::zeros(x.rows, x.cols);
+    let n = x.cols as f32;
+    for r in 0..x.rows {
+        let row = x.row(r);
+        let mu = row.iter().sum::<f32>() / n;
+        let var = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / n;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        for (c, o) in out.row_mut(r).iter_mut().enumerate() {
+            *o = (row[c] - mu) * inv * gain[c] + bias[c];
+        }
+    }
+    out
+}
+
+/// tanh-approximation GELU, bit-matching the python `_gelu`.
+#[inline]
+pub fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+pub fn gelu_inplace(x: &mut MatF) {
+    for v in &mut x.data {
+        *v = gelu(*v);
+    }
+}
+
+/// Row-wise softmax with max subtraction.
+pub fn softmax_rows(x: &mut MatF) {
+    for r in 0..x.rows {
+        let row = x.row_mut(r);
+        let max = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+        let mut sum = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum.max(1e-30);
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// Masked row-softmax: positions with `mask == false` get probability 0.
+/// Mirrors `ref.masked_attention`'s masking semantics.
+pub fn masked_softmax_rows(x: &mut MatF, mask: &crate::util::mat::Mat<bool>) {
+    assert_eq!((x.rows, x.cols), (mask.rows, mask.cols));
+    for r in 0..x.rows {
+        let mrow = &mask.data[r * mask.cols..(r + 1) * mask.cols];
+        let row = x.row_mut(r);
+        let mut max = f32::NEG_INFINITY;
+        for (v, &m) in row.iter().zip(mrow) {
+            if m {
+                max = max.max(*v);
+            }
+        }
+        if max == f32::NEG_INFINITY {
+            row.fill(0.0); // fully-masked row
+            continue;
+        }
+        let mut sum = 0.0;
+        for (v, &m) in row.iter_mut().zip(mrow) {
+            if m {
+                *v = (*v - max).exp();
+                sum += *v;
+            } else {
+                *v = 0.0;
+            }
+        }
+        let inv = 1.0 / sum.max(1e-30);
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// Elementwise residual add: a += b.
+pub fn add_inplace(a: &mut MatF, b: &MatF) {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+    for (x, y) in a.data.iter_mut().zip(&b.data) {
+        *x += y;
+    }
+}
+
+/// Symmetric per-tensor int8 fake-quant of a weight matrix — matches
+/// `model.fake_quant8` (round half away from zero, clip ±127).
+pub fn fake_quant8(w: &MatF) -> MatF {
+    let maxabs = w.data.iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(1e-9);
+    let s = 127.0 / maxabs;
+    let mut out = w.clone();
+    for v in &mut out.data {
+        let q = (v.abs() * s + 0.5).floor().min(127.0) * v.signum();
+        *v = q / s;
+    }
+    out
+}
+
+/// Mean over rows: (R, C) -> (C,) — the classifier pooling.
+pub fn mean_rows(x: &MatF) -> Vec<f32> {
+    let mut out = vec![0.0f32; x.cols];
+    for r in 0..x.rows {
+        for (o, &v) in out.iter_mut().zip(x.row(r)) {
+            *o += v;
+        }
+    }
+    let inv = 1.0 / x.rows.max(1) as f32;
+    for o in &mut out {
+        *o *= inv;
+    }
+    out
+}
+
+/// argmax of a slice (ties toward the lower index, numpy convention).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::mat::Mat;
+
+    #[test]
+    fn matmul_small_known() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![5.0, 6.0, 7.0, 8.0]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Mat::from_fn(3, 3, |r, c| (r * 3 + c) as f32);
+        let eye = Mat::from_fn(3, 3, |r, c| if r == c { 1.0 } else { 0.0 });
+        assert_eq!(matmul(&a, &eye).data, a.data);
+    }
+
+    #[test]
+    fn linear_bias_broadcasts() {
+        let x = Mat::from_vec(2, 2, vec![1.0, 0.0, 0.0, 1.0]);
+        let w = Mat::from_vec(2, 2, vec![2.0, 0.0, 0.0, 2.0]);
+        let y = linear(&x, &w, &[10.0, 20.0]);
+        assert_eq!(y.data, vec![12.0, 20.0, 10.0, 22.0]);
+    }
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let x = Mat::from_vec(1, 4, vec![1.0, 2.0, 3.0, 4.0]);
+        let y = layernorm(&x, &[1.0; 4], &[0.0; 4]);
+        let mean: f32 = y.row(0).iter().sum::<f32>() / 4.0;
+        let var: f32 = y.row(0).iter().map(|v| v * v).sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-6);
+        assert!((var - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn gelu_known_values() {
+        assert_eq!(gelu(0.0), 0.0);
+        assert!((gelu(1.0) - 0.841_192).abs() < 1e-4);
+        assert!((gelu(-1.0) + 0.158_808).abs() < 1e-4);
+        assert!(gelu(10.0) > 9.99);
+    }
+
+    #[test]
+    fn softmax_rows_normalized() {
+        let mut x = Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0]);
+        softmax_rows(&mut x);
+        for r in 0..2 {
+            let s: f32 = x.row(r).iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+            assert!(x.row(r).iter().all(|&v| v > 0.0));
+        }
+    }
+
+    #[test]
+    fn masked_softmax_zeroes_masked() {
+        let mut x = Mat::from_vec(1, 3, vec![5.0, 1.0, 100.0]);
+        let mask = Mat::from_vec(1, 3, vec![true, true, false]);
+        masked_softmax_rows(&mut x, &mask);
+        assert_eq!(x.data[2], 0.0);
+        assert!((x.data[0] + x.data[1] - 1.0).abs() < 1e-6);
+        assert!(x.data[0] > x.data[1]);
+    }
+
+    #[test]
+    fn masked_softmax_fully_masked_row_is_zero() {
+        let mut x = Mat::from_vec(1, 2, vec![3.0, 4.0]);
+        let mask = Mat::from_vec(1, 2, vec![false, false]);
+        masked_softmax_rows(&mut x, &mask);
+        assert_eq!(x.data, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn fake_quant_idempotent() {
+        let w = Mat::from_vec(1, 5, vec![0.1, -0.7, 0.33, 0.99, -1.0]);
+        let q1 = fake_quant8(&w);
+        let q2 = fake_quant8(&q1);
+        for (a, b) in q1.data.iter().zip(&q2.data) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn mean_and_argmax() {
+        let x = Mat::from_vec(2, 2, vec![1.0, 3.0, 3.0, 5.0]);
+        assert_eq!(mean_rows(&x), vec![2.0, 4.0]);
+        assert_eq!(argmax(&[0.1, 0.9, 0.9, 0.2]), 1); // tie -> lower index
+    }
+}

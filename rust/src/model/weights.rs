@@ -1,0 +1,212 @@
+//! Load the tiny transformer's weights + test set from the ESWT
+//! artifacts written by `python/compile/train_tiny.py`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::eswt::{read_eswt, Tensor};
+use crate::util::mat::MatF;
+
+/// Tiny model hyperparameters (must mirror `model.TinyConfig` in python;
+/// validated against `tiny_testset.bin`'s meta record on load).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TinyConfig {
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ffn: usize,
+    pub n_classes: usize,
+}
+
+impl Default for TinyConfig {
+    fn default() -> Self {
+        Self {
+            vocab: 64,
+            seq_len: 64,
+            d_model: 64,
+            n_heads: 4,
+            n_layers: 2,
+            d_ffn: 256,
+            n_classes: 16,
+        }
+    }
+}
+
+impl TinyConfig {
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+}
+
+/// Per-layer weights.
+#[derive(Clone, Debug)]
+pub struct LayerWeights {
+    pub wq: MatF,
+    pub bq: Vec<f32>,
+    pub wk: MatF,
+    pub bk: Vec<f32>,
+    pub wv: MatF,
+    pub bv: Vec<f32>,
+    pub wo: MatF,
+    pub bo: Vec<f32>,
+    pub ln1_g: Vec<f32>,
+    pub ln1_b: Vec<f32>,
+    pub w1: MatF,
+    pub b1: Vec<f32>,
+    pub w2: MatF,
+    pub b2: Vec<f32>,
+    pub ln2_g: Vec<f32>,
+    pub ln2_b: Vec<f32>,
+}
+
+/// The full tiny-model parameter set.
+#[derive(Clone, Debug)]
+pub struct TinyWeights {
+    pub cfg: TinyConfig,
+    pub embed: MatF,
+    pub pos: MatF,
+    pub layers: Vec<LayerWeights>,
+    pub lnf_g: Vec<f32>,
+    pub lnf_b: Vec<f32>,
+    pub cls_w: MatF,
+    pub cls_b: Vec<f32>,
+}
+
+fn get_mat(map: &BTreeMap<String, Tensor>, name: &str, rows: usize, cols: usize) -> Result<MatF> {
+    let t = map.get(name).with_context(|| format!("missing tensor {name}"))?;
+    let data = t.as_f32().with_context(|| format!("tensor {name} dtype"))?;
+    if t.dims() != [rows, cols] {
+        bail!("tensor {name}: dims {:?}, wanted [{rows}, {cols}]", t.dims());
+    }
+    Ok(MatF::from_vec(rows, cols, data.to_vec()))
+}
+
+fn get_vec(map: &BTreeMap<String, Tensor>, name: &str, len: usize) -> Result<Vec<f32>> {
+    let t = map.get(name).with_context(|| format!("missing tensor {name}"))?;
+    let data = t.as_f32().with_context(|| format!("tensor {name} dtype"))?;
+    if t.dims() != [len] {
+        bail!("tensor {name}: dims {:?}, wanted [{len}]", t.dims());
+    }
+    Ok(data.to_vec())
+}
+
+impl TinyWeights {
+    /// Load from `artifacts/tiny_weights.bin`.
+    pub fn load(path: &Path) -> Result<Self> {
+        Self::load_with_config(path, TinyConfig::default())
+    }
+
+    pub fn load_with_config(path: &Path, cfg: TinyConfig) -> Result<Self> {
+        let map = read_eswt(path)?;
+        let (d, f) = (cfg.d_model, cfg.d_ffn);
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for i in 0..cfg.n_layers {
+            let p = |s: &str| format!("layer{i}.{s}");
+            layers.push(LayerWeights {
+                wq: get_mat(&map, &p("wq"), d, d)?,
+                bq: get_vec(&map, &p("bq"), d)?,
+                wk: get_mat(&map, &p("wk"), d, d)?,
+                bk: get_vec(&map, &p("bk"), d)?,
+                wv: get_mat(&map, &p("wv"), d, d)?,
+                bv: get_vec(&map, &p("bv"), d)?,
+                wo: get_mat(&map, &p("wo"), d, d)?,
+                bo: get_vec(&map, &p("bo"), d)?,
+                ln1_g: get_vec(&map, &p("ln1_g"), d)?,
+                ln1_b: get_vec(&map, &p("ln1_b"), d)?,
+                w1: get_mat(&map, &p("w1"), d, f)?,
+                b1: get_vec(&map, &p("b1"), f)?,
+                w2: get_mat(&map, &p("w2"), f, d)?,
+                b2: get_vec(&map, &p("b2"), d)?,
+                ln2_g: get_vec(&map, &p("ln2_g"), d)?,
+                ln2_b: get_vec(&map, &p("ln2_b"), d)?,
+            });
+        }
+        Ok(Self {
+            embed: get_mat(&map, "embed", cfg.vocab, d)?,
+            pos: get_mat(&map, "pos", cfg.seq_len, d)?,
+            lnf_g: get_vec(&map, "lnf_g", d)?,
+            lnf_b: get_vec(&map, "lnf_b", d)?,
+            cls_w: get_mat(&map, "cls_w", d, cfg.n_classes)?,
+            cls_b: get_vec(&map, "cls_b", cfg.n_classes)?,
+            cfg,
+            layers,
+        })
+    }
+}
+
+/// The held-out test set exported alongside the weights.
+#[derive(Clone, Debug)]
+pub struct TestSet {
+    pub tokens: Vec<Vec<i32>>,
+    pub labels: Vec<i32>,
+}
+
+impl TestSet {
+    pub fn load(path: &Path) -> Result<Self> {
+        let map = read_eswt(path)?;
+        let toks = map.get("tokens").context("missing tokens")?;
+        let labels = map.get("labels").context("missing labels")?;
+        let dims = toks.dims().to_vec();
+        if dims.len() != 2 {
+            bail!("tokens should be 2-D, got {dims:?}");
+        }
+        let data = toks.as_i32()?;
+        let (n, l) = (dims[0], dims[1]);
+        let tokens = (0..n).map(|i| data[i * l..(i + 1) * l].to_vec()).collect();
+        Ok(Self {
+            tokens,
+            labels: labels.as_i32()?.to_vec(),
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts() -> std::path::PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn load_trained_weights() {
+        let w = TinyWeights::load(&artifacts().join("tiny_weights.bin")).unwrap();
+        assert_eq!(w.layers.len(), 2);
+        assert_eq!(w.embed.rows, 64);
+        // trained weights are non-degenerate
+        assert!(w.layers[0].wq.data.iter().any(|&v| v != 0.0));
+        // matmul weights were snapped to the int8 grid at export
+        let wq = &w.layers[0].wq;
+        let maxabs = wq.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let s = 127.0 / maxabs;
+        for &v in wq.data.iter().take(256) {
+            let g = v * s;
+            assert!((g - g.round()).abs() < 1e-3, "not on int8 grid: {v}");
+        }
+    }
+
+    #[test]
+    fn load_testset() {
+        let t = TestSet::load(&artifacts().join("tiny_testset.bin")).unwrap();
+        assert_eq!(t.len(), 512);
+        assert_eq!(t.tokens[0].len(), 64);
+        assert!(t.labels.iter().all(|&l| (0..16).contains(&l)));
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(TinyWeights::load(Path::new("/nonexistent/w.bin")).is_err());
+    }
+}

@@ -1,0 +1,185 @@
+//! HybridLog (HLog) quantization — the paper's contribution (§III-A).
+//!
+//! Level set (eq. 1): every power of two plus the midpoints between
+//! adjacent powers,
+//!
+//! ```text
+//! {2^0, 2^1, 2^0+2^1, 2^2, ..., 2^{n-2}, 2^{n-3}+2^{n-2}, 2^{n-1}}
+//! ```
+//!
+//! i.e. {1, 2, 3, 4, 6, 8, 12, ..., 96, 128} for n = 8. Ties project to
+//! the *higher* level.
+//!
+//! The quantizer is implemented exactly as the hardware shift detector
+//! (paper Fig 12): find the leading one `I` of |x|, inspect the two bits
+//! below it (b1, b0), then
+//!
+//! ```text
+//! form = b1 XOR b0        1 -> sum form 2^e + 2^{e-1}, 0 -> single 2^e
+//! e    = I + (b1 AND b0)  pattern 11 rounds up to the next power
+//! ```
+//!
+//! This bit rule reproduces nearest-level-ties-up for every input and is
+//! the software model that `python/compile/kernels/ref.py::hlog_quantize`
+//! and the Pallas kernel must match bit-for-bit.
+
+/// The positive HLog level set for an `nbits` input.
+pub fn hlog_levels(nbits: u32) -> Vec<i32> {
+    let mut lv = Vec::new();
+    for m in 0..nbits {
+        lv.push(1i32 << m);
+        if (1..nbits - 1).contains(&m) {
+            lv.push((1 << m) + (1 << (m - 1)));
+        }
+    }
+    lv.sort_unstable();
+    lv.dedup();
+    lv
+}
+
+/// The 5-bit shift-detector code (paper Fig 12): sign, 3-bit exponent of
+/// the dominant power-of-two term, and the form bit (0 = single `2^e`,
+/// 1 = sum `2^e + 2^{e-1}`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HlogCode {
+    /// -1, 0, or +1.
+    pub sign: i8,
+    /// Exponent of the dominant power-of-two component.
+    pub exp: u8,
+    /// 1 if the value is the sum form `2^e + 2^{e-1}`.
+    pub form: u8,
+}
+
+impl HlogCode {
+    /// Decode back to the quantized integer level.
+    pub fn value(self) -> i32 {
+        if self.sign == 0 {
+            return 0;
+        }
+        let mag = if self.form == 1 {
+            3 * (1 << (self.exp.max(1) - 1))
+        } else {
+            1 << self.exp
+        };
+        self.sign as i32 * mag
+    }
+
+    /// Pack into the 5-bit hardware representation
+    /// (sign bit, exponent[3], form bit) — used by the bit-level unit
+    /// model and its tests.
+    pub fn pack5(self) -> u8 {
+        let s = u8::from(self.sign < 0);
+        (s << 4) | ((self.exp & 0b111) << 1) | (self.form & 1)
+    }
+}
+
+/// Compute the shift-detector code for an int8-valued input.
+///
+/// Exactly the hardware bit rule: leading-one index `I`, bits `b1 b0`
+/// below it, `form = b1^b0`, `e = I + (b1&b0)`.
+pub fn hlog_code(x: i32) -> HlogCode {
+    debug_assert!((-255..=255).contains(&x), "HLog input out of range: {x}");
+    if x == 0 {
+        return HlogCode {
+            sign: 0,
+            exp: 0,
+            form: 0,
+        };
+    }
+    let a = x.unsigned_abs();
+    let i = 31 - a.leading_zeros(); // floor(log2(a))
+    let b1 = if i >= 1 { (a >> (i - 1)) & 1 } else { 0 };
+    let b0 = if i >= 2 { (a >> (i - 2)) & 1 } else { 0 };
+    let e = i + (b1 & b0);
+    let form = b1 ^ b0;
+    HlogCode {
+        sign: if x > 0 { 1 } else { -1 },
+        exp: e as u8,
+        form: form as u8,
+    }
+}
+
+/// HLog-quantize one int8-valued integer (nearest level, ties up).
+#[inline]
+pub fn hlog_quantize(x: i32) -> i32 {
+    hlog_code(x).value()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_set_n8() {
+        assert_eq!(
+            hlog_levels(8),
+            vec![1, 2, 3, 4, 6, 8, 12, 16, 24, 32, 48, 64, 96, 128]
+        );
+    }
+
+    /// Oracle: nearest level by brute force, ties to the higher level.
+    fn nearest_ties_up(a: i32, levels: &[i32]) -> i32 {
+        *levels
+            .iter()
+            .min_by_key(|&&lv| ((a - lv).abs(), -lv))
+            .unwrap()
+    }
+
+    #[test]
+    fn bit_rule_equals_nearest_level_exhaustive() {
+        // 9-bit levels cover magnitudes up to 255 (requantized products
+        // stay within int8 but the quantizer itself is total on ±255).
+        let levels = hlog_levels(9);
+        for x in -255..=255i32 {
+            let got = hlog_quantize(x);
+            let want = if x == 0 {
+                0
+            } else {
+                x.signum() * nearest_ties_up(x.abs(), &levels)
+            };
+            assert_eq!(got, want, "x={x}");
+        }
+    }
+
+    #[test]
+    fn known_projections() {
+        // From the paper's Fig 12 example: 0b00101010 = 42 -> (5, 1) i.e.
+        // 2^5 + 2^4 = 48; 0b11101110 (two's-complement -18) -> (4, 0) = -16.
+        assert_eq!(hlog_code(42), HlogCode { sign: 1, exp: 5, form: 1 });
+        assert_eq!(hlog_quantize(42), 48);
+        assert_eq!(hlog_code(-18), HlogCode { sign: -1, exp: 4, form: 0 });
+        assert_eq!(hlog_quantize(-18), -16);
+        // Ties round up: 5 is equidistant from 4 and 6 -> 6.
+        assert_eq!(hlog_quantize(5), 6);
+        assert_eq!(hlog_quantize(-5), -6);
+    }
+
+    #[test]
+    fn code_roundtrip_and_pack() {
+        for x in -255..=255i32 {
+            let c = hlog_code(x);
+            assert_eq!(c.value(), hlog_quantize(x), "x={x}");
+            if x != 0 && x.abs() <= 128 {
+                // 5-bit pack holds exponents 0..=7
+                let p = c.pack5();
+                assert_eq!((p >> 4) & 1, u8::from(x < 0));
+                assert_eq!((p >> 1) & 0b111, c.exp & 0b111);
+                assert_eq!(p & 1, c.form);
+            }
+        }
+    }
+
+    #[test]
+    fn idempotent_on_levels() {
+        for &lv in &hlog_levels(8) {
+            assert_eq!(hlog_quantize(lv), lv);
+            assert_eq!(hlog_quantize(-lv), -lv);
+        }
+    }
+
+    #[test]
+    fn zero_maps_to_zero() {
+        assert_eq!(hlog_quantize(0), 0);
+        assert_eq!(hlog_code(0).pack5(), 0);
+    }
+}

@@ -1,0 +1,94 @@
+//! Symmetric int8 (re)quantization — the paper quantizes all linear
+//! weights to 8 bit before anything else, and the prediction pipeline
+//! requantizes intermediate int32 products back to int8 between the QK
+//! and attention prediction stages (paper Fig 5a).
+//!
+//! Rounding is round-half-away-from-zero, matching `f32::round` and the
+//! python reference (`ref.requantize_sym8`).
+
+/// Quantize an f32 slice to int8-valued i32s with a shared symmetric
+/// per-tensor scale. Returns `(values, scale)` where
+/// `value ≈ x * scale`, `scale = 127 / max|x|`.
+pub fn quantize_sym8(xs: &[f32]) -> (Vec<i32>, f32) {
+    let maxabs = xs.iter().fold(0.0f32, |m, &x| m.max(x.abs())).max(1e-9);
+    let s = 127.0 / maxabs;
+    let q = xs
+        .iter()
+        .map(|&x| ((x * s).abs() + 0.5).floor() as i32 * x.signum() as i32)
+        .map(|q| q.clamp(-127, 127))
+        .collect();
+    (q, s)
+}
+
+/// Dequantize int8-valued integers back to f32 with the given scale.
+pub fn dequantize_sym8(qs: &[i32], scale: f32) -> Vec<f32> {
+    qs.iter().map(|&q| q as f32 / scale).collect()
+}
+
+/// Requantize an int32 tensor (e.g. a prediction-stage product) to int8
+/// with a fresh symmetric scale. Returns `(values, scale)`.
+pub fn requantize_sym8(xs: &[i32]) -> (Vec<i32>, f32) {
+    let maxabs = xs.iter().map(|x| x.abs()).max().unwrap_or(0).max(1) as f32;
+    let s = 127.0 / maxabs;
+    let q = xs
+        .iter()
+        .map(|&x| {
+            let v = (x as f32 * s).abs() + 0.5;
+            (v.floor() as i32 * x.signum()).clamp(-127, 127)
+        })
+        .collect();
+    (q, s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantize_full_scale() {
+        let (q, s) = quantize_sym8(&[-1.0, 0.0, 0.5, 1.0]);
+        assert_eq!(q, vec![-127, 0, 64, 127]); // 63.5 rounds away from zero
+        assert!((s - 127.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn requantize_endpoints() {
+        let (q, s) = requantize_sym8(&[-1000, 0, 250, 500, 1000]);
+        assert_eq!(q[0], -127);
+        assert_eq!(q[1], 0);
+        assert_eq!(q[4], 127);
+        assert!((s - 127.0 / 1000.0).abs() < 1e-6);
+        // 250 * 0.127 = 31.75 -> 32 (round half away from zero)
+        assert_eq!(q[2], 32);
+        assert_eq!(q[3], 64); // 63.5 -> 64
+    }
+
+    #[test]
+    fn roundtrip_error_bounded() {
+        let xs: Vec<f32> = (0..256).map(|i| (i as f32 - 128.0) / 17.0).collect();
+        let (q, s) = quantize_sym8(&xs);
+        let back = dequantize_sym8(&q, s);
+        let step = 1.0 / s;
+        for (x, y) in xs.iter().zip(&back) {
+            assert!((x - y).abs() <= step * 0.5 + 1e-6, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn all_zero_input() {
+        let (q, _) = quantize_sym8(&[0.0, 0.0]);
+        assert_eq!(q, vec![0, 0]);
+        let (q, _) = requantize_sym8(&[0, 0]);
+        assert_eq!(q, vec![0, 0]);
+    }
+
+    #[test]
+    fn requantize_symmetry() {
+        let xs: Vec<i32> = (-500..=500).step_by(7).collect();
+        let (q, _) = requantize_sym8(&xs);
+        let (qneg, _) = requantize_sym8(&xs.iter().map(|x| -x).collect::<Vec<_>>());
+        for (a, b) in q.iter().zip(&qneg) {
+            assert_eq!(*a, -*b);
+        }
+    }
+}

@@ -1,0 +1,124 @@
+//! Quantization schemes compared in the paper (§III-A, Figs 6/7, 17/18,
+//! Table III): symmetric int8, Power-of-Two (PoT, FACT-style), Additive
+//! PoT (APoT a=2, Enhance-style), and the paper's HybridLog (HLog).
+//!
+//! All quantizers here operate on int8-valued integers (the paper
+//! quantizes weights/activations to 8 bit first, then the *prediction*
+//! path re-quantizes those int8 values onto log-ish level sets). The
+//! level sets and projection rules (nearest level, ties to the higher
+//! level) are the correctness contract shared with
+//! `python/compile/kernels/ref.py`.
+
+mod hlog;
+mod int8;
+mod pot;
+
+pub use hlog::{hlog_code, hlog_levels, hlog_quantize, HlogCode};
+pub use int8::{dequantize_sym8, quantize_sym8, requantize_sym8};
+pub use pot::{apot_levels, apot_quantize, pot_levels, pot_quantize};
+
+/// Which prediction quantizer to use (for the Fig 17/18 comparisons).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum QuantMethod {
+    /// The paper's HybridLog quantization.
+    Hlog,
+    /// Power-of-two (FACT-style).
+    Pot,
+    /// Additive power-of-two with two terms (Enhance-style).
+    Apot,
+    /// Plain 4-bit linear quantization (Sanger-style).
+    Linear4,
+}
+
+impl QuantMethod {
+    pub const ALL: [QuantMethod; 4] = [
+        QuantMethod::Hlog,
+        QuantMethod::Pot,
+        QuantMethod::Apot,
+        QuantMethod::Linear4,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            QuantMethod::Hlog => "HLog",
+            QuantMethod::Pot => "PoT",
+            QuantMethod::Apot => "APoT",
+            QuantMethod::Linear4 => "4-bit",
+        }
+    }
+
+    /// Quantize one int8-valued integer under this method.
+    pub fn quantize(self, x: i32) -> i32 {
+        match self {
+            QuantMethod::Hlog => hlog_quantize(x),
+            QuantMethod::Pot => pot_quantize(x),
+            QuantMethod::Apot => apot_quantize(x),
+            QuantMethod::Linear4 => linear4_quantize(x),
+        }
+    }
+
+    /// Quantize a slice in place (prediction-path helper).
+    pub fn quantize_slice(self, xs: &mut [i32]) {
+        for x in xs.iter_mut() {
+            *x = self.quantize(*x);
+        }
+    }
+}
+
+/// 4-bit linear quantization of an int8 value (Sanger's predictor): keep
+/// the top 4 magnitude bits, i.e. round to multiples of 16 on [-128, 127]
+/// (round-half-up on magnitude, like the other quantizers here).
+pub fn linear4_quantize(x: i32) -> i32 {
+    let sign = x.signum();
+    let a = x.abs().min(127);
+    let q = ((a + 8) / 16) * 16;
+    sign * q.min(127 - (127 % 16)) // clamp to representable grid: 0..=112
+}
+
+/// Mean absolute projection error of a quantizer over a slice.
+pub fn mean_abs_error(method: QuantMethod, xs: &[i32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter()
+        .map(|&x| (method.quantize(x) - x).abs() as f64)
+        .sum::<f64>()
+        / xs.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear4_grid() {
+        assert_eq!(linear4_quantize(0), 0);
+        assert_eq!(linear4_quantize(7), 0);
+        assert_eq!(linear4_quantize(8), 16);
+        assert_eq!(linear4_quantize(-8), -16);
+        assert_eq!(linear4_quantize(127), 112);
+        assert_eq!(linear4_quantize(-127), -112);
+        for x in -127..=127 {
+            assert_eq!(linear4_quantize(x) % 16, 0, "x={x}");
+        }
+    }
+
+    #[test]
+    fn error_ordering_matches_paper() {
+        // Paper Fig 7: PoT worst; HLog and APoT comparable; 4-bit linear
+        // has large *relative* error for small values but small absolute.
+        let xs: Vec<i32> = (1..=127).collect();
+        let e_pot = mean_abs_error(QuantMethod::Pot, &xs);
+        let e_hlog = mean_abs_error(QuantMethod::Hlog, &xs);
+        let e_apot = mean_abs_error(QuantMethod::Apot, &xs);
+        assert!(e_hlog < 0.6 * e_pot, "hlog {e_hlog} pot {e_pot}");
+        assert!(e_apot <= e_hlog, "apot {e_apot} hlog {e_hlog}");
+    }
+
+    #[test]
+    fn quantize_slice_applies_elementwise() {
+        let mut xs = vec![5, -5, 100];
+        QuantMethod::Hlog.quantize_slice(&mut xs);
+        assert_eq!(xs, vec![6, -6, 96]);
+    }
+}

@@ -1,0 +1,126 @@
+//! PoT and APoT comparison quantizers (paper Figs 6/7, 17/18, Table III).
+//!
+//! PoT (FACT-style): levels are the plain powers of two; cheap (leading-
+//! zero detector) but with projection error growing with magnitude.
+//! APoT (Enhance-style, a = 2): levels are sums of at most two distinct
+//! powers of two — denser, more accurate, but with irregular levels that
+//! need comparison ladders / adder trees in hardware.
+//!
+//! Projection rule for both: nearest level, ties to the higher level —
+//! the same rule as HLog so the three methods differ only in level sets.
+
+/// Positive PoT level set for `nbits` inputs: {1, 2, 4, ..., 2^(n-1)}.
+pub fn pot_levels(nbits: u32) -> Vec<i32> {
+    (0..nbits).map(|m| 1i32 << m).collect()
+}
+
+/// Positive APoT (a = 2) level set: powers of two plus pairwise sums of
+/// distinct powers that stay below 2^nbits.
+pub fn apot_levels(nbits: u32) -> Vec<i32> {
+    let base = pot_levels(nbits);
+    let mut lv: Vec<i32> = base.clone();
+    for (i, &hi) in base.iter().enumerate() {
+        for &lo in &base[..i] {
+            if hi + lo < (1 << nbits) {
+                lv.push(hi + lo);
+            }
+        }
+    }
+    lv.sort_unstable();
+    lv.dedup();
+    lv
+}
+
+/// Project to the nearest level in `levels` (ties to the higher level).
+pub fn project(x: i32, levels: &[i32]) -> i32 {
+    if x == 0 {
+        return 0;
+    }
+    let a = x.abs();
+    let mag = *levels
+        .iter()
+        .min_by_key(|&&lv| ((a - lv).abs(), -lv))
+        .expect("non-empty level set");
+    x.signum() * mag
+}
+
+/// PoT-quantize an int8-valued integer (9-bit levels so magnitudes up to
+/// 255 are covered, matching the python reference).
+pub fn pot_quantize(x: i32) -> i32 {
+    debug_assert!((-255..=255).contains(&x));
+    project(x, &pot_levels(9))
+}
+
+/// APoT-quantize an int8-valued integer.
+pub fn apot_quantize(x: i32) -> i32 {
+    debug_assert!((-255..=255).contains(&x));
+    project(x, &apot_levels(9))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::hlog::hlog_levels;
+
+    #[test]
+    fn pot_levels_n8() {
+        assert_eq!(pot_levels(8), vec![1, 2, 4, 8, 16, 32, 64, 128]);
+    }
+
+    #[test]
+    fn apot_contains_pot_and_hlog() {
+        let apot = apot_levels(8);
+        for lv in pot_levels(8) {
+            assert!(apot.contains(&lv));
+        }
+        for lv in hlog_levels(8) {
+            assert!(apot.contains(&lv), "HLog level {lv} missing from APoT");
+        }
+        // paper: APoT has redundant extra levels relative to HLog
+        assert!(apot.len() > hlog_levels(8).len());
+        assert!(apot.contains(&160)); // 128 + 32, an APoT-only level
+    }
+
+    #[test]
+    fn pot_projection_examples() {
+        assert_eq!(pot_quantize(3), 4); // tie 2/4 -> up
+        assert_eq!(pot_quantize(5), 4);
+        assert_eq!(pot_quantize(6), 8); // tie 4/8 -> up
+        assert_eq!(pot_quantize(-100), -128); // closer to 128 than 64
+        assert_eq!(pot_quantize(0), 0);
+    }
+
+    #[test]
+    fn apot_projection_examples() {
+        assert_eq!(apot_quantize(3), 3);
+        assert_eq!(apot_quantize(7), 8); // 7 is between 6 and 8, closer... |7-6|=1,|7-8|=1 tie -> 8
+        assert_eq!(apot_quantize(100), 96);
+        assert_eq!(apot_quantize(-100), -96);
+    }
+
+    #[test]
+    fn idempotent_on_levels() {
+        for &lv in &apot_levels(8) {
+            assert_eq!(apot_quantize(lv), lv);
+        }
+        for &lv in &pot_levels(8) {
+            assert_eq!(pot_quantize(lv), lv);
+        }
+    }
+
+    #[test]
+    fn projection_error_bounded_by_half_gap() {
+        let levels = apot_levels(9);
+        for x in 1..=255 {
+            let q = apot_quantize(x);
+            // error never exceeds half the largest inter-level gap around x
+            let gap = levels
+                .windows(2)
+                .filter(|w| w[0] <= x && x <= w[1])
+                .map(|w| w[1] - w[0])
+                .max()
+                .unwrap_or(0);
+            assert!((q - x).abs() * 2 <= gap.max(1), "x={x} q={q} gap={gap}");
+        }
+    }
+}

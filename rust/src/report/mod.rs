@@ -1,0 +1,70 @@
+//! Paper-style figure/table renderers: every entry in the experiment
+//! index (DESIGN.md) has a `fig*`/`table*` function that regenerates
+//! the corresponding result as text. `cargo run --release -- repro
+//! <id>` calls these; `benches/repro_all.rs` runs the full set.
+
+pub mod figures;
+pub mod tables;
+
+use std::fmt::Write as _;
+
+/// Render a simple aligned table.
+pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncol) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let line = |out: &mut String, cells: &[String]| {
+        for (i, c) in cells.iter().enumerate().take(ncol) {
+            let _ = write!(out, "| {:<w$} ", c, w = widths[i]);
+        }
+        out.push_str("|\n");
+    };
+    line(&mut out, &headers.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    for (i, w) in widths.iter().enumerate() {
+        let _ = write!(out, "|{:-<w$}", "", w = w + 2);
+        if i == ncol - 1 {
+            out.push_str("|\n");
+        }
+    }
+    for row in rows {
+        line(&mut out, row);
+    }
+    out
+}
+
+/// An ASCII horizontal bar scaled to `max`.
+pub fn bar(value: f64, max: f64, width: usize) -> String {
+    let n = ((value / max).clamp(0.0, 1.0) * width as f64).round() as usize;
+    "█".repeat(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_alignment() {
+        let t = render_table(
+            &["name", "v"],
+            &[vec!["a".into(), "1.0".into()], vec!["long-name".into(), "2".into()]],
+        );
+        assert!(t.contains("| name"));
+        assert!(t.contains("| long-name"));
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        // all data lines same rendered width
+        assert_eq!(lines[0].chars().count(), lines[2].chars().count());
+    }
+
+    #[test]
+    fn bar_scales() {
+        assert_eq!(bar(0.5, 1.0, 10).chars().count(), 5);
+        assert_eq!(bar(2.0, 1.0, 10).chars().count(), 10); // clamped
+        assert_eq!(bar(0.0, 1.0, 10), "");
+    }
+}

@@ -1,0 +1,200 @@
+//! Compiled-executable wrapper over the `xla` crate's PJRT CPU client.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+/// One compiled HLO artifact, executable with f32/i32 buffers.
+pub struct Executable {
+    name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Dims + data of one input buffer.
+pub enum Arg<'a> {
+    F32(&'a [f32], &'a [usize]),
+    I32(&'a [i32], &'a [usize]),
+}
+
+impl Executable {
+    /// Load + compile an HLO-text artifact on a shared PJRT client.
+    pub fn load(client: &xla::PjRtClient, path: &Path) -> Result<Self> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Self {
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+            exe,
+        })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with the given inputs; returns the f32 payload of the
+    /// 1-tuple output (artifacts are lowered with `return_tuple=True`).
+    pub fn run_f32(&self, args: &[Arg<'_>]) -> Result<Vec<f32>> {
+        let literals = to_literals(args)?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Execute and return the i32 payload.
+    pub fn run_i32(&self, args: &[Arg<'_>]) -> Result<Vec<i32>> {
+        let literals = to_literals(args)?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<i32>()?)
+    }
+}
+
+fn to_literals(args: &[Arg<'_>]) -> Result<Vec<xla::Literal>> {
+    args.iter()
+        .map(|a| match a {
+            Arg::F32(data, dims) => {
+                let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                Ok(xla::Literal::vec1(data).reshape(&dims)?)
+            }
+            Arg::I32(data, dims) => {
+                let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                Ok(xla::Literal::vec1(data).reshape(&dims)?)
+            }
+        })
+        .collect()
+}
+
+/// The full artifact set a serving deployment loads at startup.
+pub struct ArtifactSet {
+    pub client: Arc<xla::PjRtClient>,
+    dir: PathBuf,
+    /// batch-1 and batch-8 dense classifiers
+    pub dense_b1: Executable,
+    pub dense_b8: Executable,
+    /// SPA-masked variants
+    pub masked_b1: Executable,
+    pub masked_b8: Executable,
+}
+
+impl ArtifactSet {
+    /// Compile everything in `artifacts/` needed to serve.
+    pub fn load(dir: &Path) -> Result<Self> {
+        if !dir.join("tiny_dense_b1.hlo.txt").exists() {
+            bail!(
+                "artifacts missing in {} — run `make artifacts` first",
+                dir.display()
+            );
+        }
+        let client = Arc::new(xla::PjRtClient::cpu()?);
+        Ok(Self {
+            dense_b1: Executable::load(&client, &dir.join("tiny_dense_b1.hlo.txt"))?,
+            dense_b8: Executable::load(&client, &dir.join("tiny_dense_b8.hlo.txt"))?,
+            masked_b1: Executable::load(&client, &dir.join("tiny_masked_b1.hlo.txt"))?,
+            masked_b8: Executable::load(&client, &dir.join("tiny_masked_b8.hlo.txt"))?,
+            client,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Pick the dense executable for a batch size (1 or 8).
+    pub fn dense_for_batch(&self, batch: usize) -> Result<&Executable> {
+        match batch {
+            1 => Ok(&self.dense_b1),
+            8 => Ok(&self.dense_b8),
+            other => bail!("no dense artifact for batch {other} (compiled: 1, 8)"),
+        }
+    }
+
+    pub fn masked_for_batch(&self, batch: usize) -> Result<&Executable> {
+        match batch {
+            1 => Ok(&self.masked_b1),
+            8 => Ok(&self.masked_b8),
+            other => bail!("no masked artifact for batch {other} (compiled: 1, 8)"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn standalone_hlog_matmul_artifact_matches_rust_model() {
+        let client = xla::PjRtClient::cpu().unwrap();
+        let exe =
+            Executable::load(&client, &artifacts().join("hlog_matmul_64.hlo.txt")).unwrap();
+        let mut rng = crate::util::rng::Xoshiro256pp::new(77);
+        let x: Vec<i32> = (0..64 * 64).map(|_| rng.int_in(-128, 127) as i32).collect();
+        let w: Vec<i32> = (0..64 * 64).map(|_| rng.int_in(-128, 127) as i32).collect();
+        let got = exe
+            .run_i32(&[Arg::I32(&x, &[64, 64]), Arg::I32(&w, &[64, 64])])
+            .unwrap();
+        // the rust bit-level unit model must agree bit-for-bit with the
+        // Pallas kernel inside the artifact
+        let xm = crate::util::mat::MatI::from_vec(64, 64, x);
+        let wm = crate::util::mat::MatI::from_vec(64, 64, w);
+        let want = crate::spls::predict::predict_matmul(&xm, &wm);
+        assert_eq!(got, want.data, "AOT HLog kernel != rust bit-level model");
+    }
+
+    #[test]
+    fn dense_artifact_matches_host_forward() {
+        let set = ArtifactSet::load(&artifacts()).unwrap();
+        let w = crate::model::TinyWeights::load(&artifacts().join("tiny_weights.bin")).unwrap();
+        let mut rng = crate::util::rng::Xoshiro256pp::new(5);
+        let toks: Vec<i32> = (0..64).map(|_| rng.below(64) as i32).collect();
+        let got = set
+            .dense_b1
+            .run_f32(&[Arg::I32(&toks, &[1, 64])])
+            .unwrap();
+        let want = crate::model::forward_dense(&w, &toks);
+        assert_eq!(got.len(), 16);
+        for (g, h) in got.iter().zip(&want) {
+            assert!((g - h).abs() < 2e-2, "AOT {g} vs host {h}");
+        }
+    }
+
+    #[test]
+    fn masked_artifact_full_mask_equals_dense() {
+        let set = ArtifactSet::load(&artifacts()).unwrap();
+        let mut rng = crate::util::rng::Xoshiro256pp::new(6);
+        let toks: Vec<i32> = (0..64).map(|_| rng.below(64) as i32).collect();
+        let masks = vec![1.0f32; 2 * 4 * 64 * 64];
+        let dense = set.dense_b1.run_f32(&[Arg::I32(&toks, &[1, 64])]).unwrap();
+        let masked = set
+            .masked_b1
+            .run_f32(&[
+                Arg::I32(&toks, &[1, 64]),
+                Arg::F32(&masks, &[1, 2, 4, 64, 64]),
+            ])
+            .unwrap();
+        for (d, m) in dense.iter().zip(&masked) {
+            assert!((d - m).abs() < 1e-3, "dense {d} vs full-mask {m}");
+        }
+    }
+
+    #[test]
+    fn batch_selection_errors_are_clear() {
+        let set = ArtifactSet::load(&artifacts()).unwrap();
+        assert!(set.dense_for_batch(8).is_ok());
+        assert!(set.dense_for_batch(3).is_err());
+    }
+}

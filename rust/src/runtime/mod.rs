@@ -1,0 +1,9 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts (produced once by
+//! `python/compile/aot.py`) and execute them from the rust request path.
+//! Python never runs at serve time — the interchange is HLO *text*
+//! (xla_extension 0.5.1 rejects jax ≥ 0.5 serialized protos; the text
+//! parser reassigns instruction ids).
+
+mod executable;
+
+pub use executable::{Arg, ArtifactSet, Executable};

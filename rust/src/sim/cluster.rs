@@ -1,0 +1,120 @@
+//! Cluster-level deployment simulation (paper §V-C): 125 ESACT units
+//! in 25 clusters, each workload partitioned batch → head → sequence
+//! and assigned in order. Models per-cluster queueing and completion
+//! skew instead of assuming perfect division by 125, so imbalance,
+//! stragglers and small-batch under-filling show up in the end-to-end
+//! throughput exactly where the paper's deployment would see them.
+
+use crate::config::{DeployConfig, HardwareConfig, ModelConfig, SplsConfig};
+use crate::coordinator::partition::partition_workload;
+use crate::sim::engine::{simulate_model, Features, SimResult};
+use crate::workloads::bench26::SparsityProfile;
+
+/// Result of running one batch of a model across the cluster array.
+#[derive(Clone, Copy, Debug)]
+pub struct ClusterResult {
+    /// Wall-clock seconds for the whole batch (slowest cluster).
+    pub batch_seconds: f64,
+    /// Mean per-cluster busy time / wall time.
+    pub cluster_utilization: f64,
+    /// Sequences per second across the array.
+    pub throughput_seq_s: f64,
+}
+
+/// Simulate one batch of `cfg` across the deployment.
+///
+/// Per-sequence per-unit time comes from the single-unit cycle model;
+/// a shard covering `v` (batch·head·seq) cells costs proportionally.
+/// Units inside a cluster split their cluster's shards evenly; the
+/// batch completes when the slowest cluster finishes.
+pub fn simulate_cluster(
+    cfg: &ModelConfig,
+    hw: &HardwareConfig,
+    spls: &SplsConfig,
+    profile: &SparsityProfile,
+    deploy: &DeployConfig,
+    batch: usize,
+    feat: Features,
+) -> (ClusterResult, SimResult) {
+    let unit = simulate_model(cfg, hw, spls, profile, feat);
+    let per_seq = unit.seconds(hw);
+    let total_cells = (batch * cfg.n_heads * cfg.seq_len) as f64;
+    let assignment = partition_workload(deploy, cfg, batch);
+    let units_per_cluster = deploy.units_per_cluster() as f64;
+    let mut busy = vec![0.0f64; deploy.n_clusters];
+    for item in &assignment.items {
+        // shard cost: fraction of a full sequence-batch, split across
+        // the units of the cluster
+        let frac = item.volume() as f64 / total_cells;
+        busy[item.cluster] += frac * per_seq * batch as f64 / units_per_cluster;
+    }
+    let wall = busy.iter().cloned().fold(0.0, f64::max);
+    let mean_busy = busy.iter().sum::<f64>() / deploy.n_clusters as f64;
+    (
+        ClusterResult {
+            batch_seconds: wall,
+            cluster_utilization: if wall > 0.0 { mean_busy / wall } else { 1.0 },
+            throughput_seq_s: if wall > 0.0 { batch as f64 / wall } else { 0.0 },
+        },
+        unit,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+
+    fn setup() -> (HardwareConfig, SplsConfig, SparsityProfile, DeployConfig) {
+        (
+            HardwareConfig::default(),
+            SplsConfig::default(),
+            SparsityProfile { q: 0.6, kv: 0.6, attn: 0.946, ffn: 0.5 },
+            DeployConfig::default(),
+        )
+    }
+
+    #[test]
+    fn big_batch_near_ideal_scaling() {
+        let (hw, spls, prof, dep) = setup();
+        let cfg = config::bert_base(128);
+        let (c, unit) = simulate_cluster(&cfg, &hw, &spls, &prof, &dep, 125, Features::FULL);
+        let ideal = 125.0 / unit.seconds(&hw);
+        assert!(c.throughput_seq_s > 0.8 * ideal, "{} vs ideal {ideal}", c.throughput_seq_s);
+        assert!(c.cluster_utilization > 0.8);
+    }
+
+    #[test]
+    fn small_batch_underfills_clusters() {
+        let (hw, spls, prof, dep) = setup();
+        let cfg = config::bert_base(128);
+        let (big, _) = simulate_cluster(&cfg, &hw, &spls, &prof, &dep, 125, Features::FULL);
+        let (small, _) = simulate_cluster(&cfg, &hw, &spls, &prof, &dep, 3, Features::FULL);
+        // per-sequence efficiency drops when the array is underfilled
+        assert!(
+            small.throughput_seq_s < big.throughput_seq_s,
+            "small {} big {}",
+            small.throughput_seq_s,
+            big.throughput_seq_s
+        );
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let (hw, spls, prof, dep) = setup();
+        for batch in [1usize, 8, 32, 125] {
+            let (c, _) =
+                simulate_cluster(&config::gpt2(512), &hw, &spls, &prof, &dep, batch, Features::FULL);
+            assert!((0.0..=1.0 + 1e-9).contains(&c.cluster_utilization), "{}", c.cluster_utilization);
+        }
+    }
+
+    #[test]
+    fn sparse_beats_dense_at_cluster_level_too() {
+        let (hw, spls, prof, dep) = setup();
+        let cfg = config::bert_large(512);
+        let (dense, _) = simulate_cluster(&cfg, &hw, &spls, &prof, &dep, 32, Features::DENSE);
+        let (full, _) = simulate_cluster(&cfg, &hw, &spls, &prof, &dep, 32, Features::FULL);
+        assert!(full.throughput_seq_s > 1.4 * dense.throughput_seq_s);
+    }
+}

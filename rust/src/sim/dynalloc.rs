@@ -1,0 +1,133 @@
+//! Dynamic allocation strategy (paper §IV-D, Fig 14): after multi-head
+//! concatenation, the number of preserved critical vectors differs per
+//! row, unbalancing the PE lines. The strategy compresses the
+//! concatenated map and dynamically matches work to PE lines, with a
+//! FIFO-based recovery that reconstructs similar vectors' partial sums
+//! from their critical rows.
+
+use crate::config::HardwareConfig;
+use crate::sim::pe::{gemm_irregular, GemmCycles};
+
+/// Per-row work after concatenation: how many head-blocks of partial
+/// sums each output row needs computed (critical) vs recovered.
+#[derive(Clone, Debug, Default)]
+pub struct ConcatLoad {
+    /// `work[r]` = number of Psum blocks row r computes explicitly.
+    pub work: Vec<usize>,
+    /// blocks recovered via FIFO replication (free on the PE array,
+    /// one FIFO push each).
+    pub recovered: u64,
+}
+
+/// Build the concatenated load from per-head critical/similar maps:
+/// for each head, critical rows contribute one block of work at their
+/// row; similar rows contribute a recovery.
+pub fn concat_load(head_reps: &[Vec<usize>]) -> ConcatLoad {
+    assert!(!head_reps.is_empty());
+    let l = head_reps[0].len();
+    let mut work = vec![0usize; l];
+    let mut recovered = 0u64;
+    for rep in head_reps {
+        assert_eq!(rep.len(), l);
+        for (r, &c) in rep.iter().enumerate() {
+            if r == c {
+                work[r] += 1;
+            } else {
+                recovered += 1;
+            }
+        }
+    }
+    ConcatLoad { work, recovered }
+}
+
+/// Output-projection cycles for the concatenated attention under a
+/// static (round-robin rows → PE lines, stragglers stall) or dynamic
+/// (compressed + matched) allocation. `dh` is the per-block depth.
+pub fn projection_cycles(
+    hw: &HardwareConfig,
+    load: &ConcatLoad,
+    dh: usize,
+    dynamic: bool,
+) -> GemmCycles {
+    let mut g = gemm_irregular(hw, &load.work, dh, dynamic);
+    // FIFO recovery: one push per recovered block, hidden behind
+    // compute when dynamic (the FIFOs fill while the lines crunch);
+    // serialized on the critical path when static.
+    if !dynamic {
+        g.cycles += load.recovered.div_ceil(hw.pe_rows as u64);
+    }
+    g
+}
+
+/// Speedup of dynamic over static allocation for a given load.
+pub fn dynalloc_speedup(hw: &HardwareConfig, load: &ConcatLoad, dh: usize) -> f64 {
+    let stat = projection_cycles(hw, load, dh, false);
+    let dynm = projection_cycles(hw, load, dh, true);
+    stat.cycles as f64 / dynm.cycles.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HardwareConfig;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn hw() -> HardwareConfig {
+        HardwareConfig::default()
+    }
+
+    #[test]
+    fn concat_load_counts() {
+        // 2 heads, 4 rows; head0: row1 similar to 0; head1: all critical
+        let load = concat_load(&[vec![0, 0, 2, 3], vec![0, 1, 2, 3]]);
+        assert_eq!(load.work, vec![2, 1, 2, 2]);
+        assert_eq!(load.recovered, 1);
+    }
+
+    #[test]
+    fn balanced_loads_gain_nothing() {
+        let load = ConcatLoad { work: vec![8; 64], recovered: 0 };
+        let s = dynalloc_speedup(&hw(), &load, 64);
+        assert!((0.95..=1.1).contains(&s), "speedup {s}");
+    }
+
+    #[test]
+    fn skewed_loads_gain() {
+        // highly irregular per-row work — the case Fig 14 targets
+        let mut rng = Xoshiro256pp::new(5);
+        let work: Vec<usize> = (0..128)
+            .map(|_| if rng.below(4) == 0 { 12 } else { 1 })
+            .collect();
+        let load = ConcatLoad { work, recovered: 300 };
+        let s = dynalloc_speedup(&hw(), &load, 64);
+        assert!(s > 1.2, "speedup {s}");
+    }
+
+    #[test]
+    fn paper_magnitude_speedup() {
+        // Fig 20: dynamic allocation contributes ≈1.04× end-to-end; at
+        // the attention-concat stage itself the local gain is modest —
+        // mild head-dependent skew (paper: similarity differs per head)
+        let mut rng = Xoshiro256pp::new(11);
+        let reps: Vec<Vec<usize>> = (0..12)
+            .map(|_| {
+                (0..128)
+                    .map(|r| if rng.below(5) < 2 && r % 8 != 0 { r - (r % 8) } else { r })
+                    .collect()
+            })
+            .collect();
+        let load = concat_load(&reps);
+        let s = dynalloc_speedup(&hw(), &load, 64);
+        // local stage gain exceeds the paper's 1.04× *end-to-end* figure
+        // because the projection stage is a small slice of a layer
+        assert!((1.0..2.2).contains(&s), "speedup {s}");
+    }
+
+    #[test]
+    fn recovery_hidden_when_dynamic() {
+        let load = ConcatLoad { work: vec![4; 32], recovered: 1000 };
+        let d = projection_cycles(&hw(), &load, 64, true);
+        let st = projection_cycles(&hw(), &load, 64, false);
+        assert!(st.cycles > d.cycles);
+    }
+}

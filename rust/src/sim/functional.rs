@@ -1,0 +1,86 @@
+//! Functional-module cycle models (paper Table II: top-k, LayerNorm,
+//! softmax, "others"). Each unit is a simple throughput machine:
+//! `lanes` elements per cycle plus a fixed pipeline latency.
+
+/// Throughput/latency of one functional unit.
+#[derive(Clone, Copy, Debug)]
+pub struct FuncUnit {
+    pub lanes: u64,
+    pub pipeline: u64,
+}
+
+impl FuncUnit {
+    pub const fn new(lanes: u64, pipeline: u64) -> Self {
+        Self { lanes, pipeline }
+    }
+
+    /// Cycles to stream `n` elements through.
+    pub fn cycles(&self, n: u64) -> u64 {
+        if n == 0 {
+            return 0;
+        }
+        n.div_ceil(self.lanes) + self.pipeline
+    }
+}
+
+/// Top-k selector: a systolic bitonic partial-sorter over row chunks.
+/// Selecting k of L per row costs ~L/lanes cycles per row (single pass,
+/// keep-heap of bounded k ≤ 0.2·L — the paper caps k at 0.2 to bound
+/// the subtractor count).
+pub const TOPK: FuncUnit = FuncUnit::new(128, 6);
+
+/// Softmax: exp lookup + row-sum + divide, 64 lanes.
+pub const SOFTMAX: FuncUnit = FuncUnit::new(64, 10);
+
+/// LayerNorm: two-pass mean/var + normalize, 64 lanes.
+pub const LAYERNORM: FuncUnit = FuncUnit::new(64, 8);
+
+/// Row-wise top-k over an L×L matrix.
+pub fn topk_cycles(l: usize) -> u64 {
+    (0..l).map(|_| TOPK.cycles(l as u64)).sum()
+}
+
+/// Softmax over `rows` rows of `cols` kept entries each.
+pub fn softmax_cycles(rows: usize, cols_kept: usize) -> u64 {
+    (rows as u64) * SOFTMAX.cycles(cols_kept as u64)
+}
+
+/// LayerNorm over an L×D activation.
+pub fn layernorm_cycles(l: usize, d: usize) -> u64 {
+    (l as u64) * LAYERNORM.cycles(d as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_elements_free() {
+        assert_eq!(TOPK.cycles(0), 0);
+        assert_eq!(softmax_cycles(0, 64), 0);
+    }
+
+    #[test]
+    fn throughput_scaling() {
+        assert_eq!(TOPK.cycles(128), 1 + 6);
+        assert_eq!(TOPK.cycles(256), 2 + 6);
+        assert!(topk_cycles(512) > topk_cycles(128) * 3);
+    }
+
+    #[test]
+    fn sparse_softmax_cheaper() {
+        // softmax over kept entries only (SPA rows)
+        let dense = softmax_cycles(128, 128);
+        let sparse = softmax_cycles(128, 13);
+        assert!(sparse < dense);
+    }
+
+    #[test]
+    fn functional_minor_vs_gemm() {
+        // functional units must not dominate a BERT-base layer
+        let hw = crate::config::HardwareConfig::default();
+        let gemm = crate::sim::pe::gemm(&hw, 128, 768, 768).cycles;
+        let func = topk_cycles(128) + softmax_cycles(128, 16) + layernorm_cycles(128, 768);
+        assert!(func < gemm, "func {func} gemm {gemm}");
+    }
+}

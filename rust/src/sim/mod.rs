@@ -1,0 +1,18 @@
+//! Cycle-level ESACT simulator (the paper's Verilator + custom-simulator
+//! substitute — DESIGN.md §Substitutions): PE array, bit-level
+//! prediction unit, functional units, SRAM working sets, DRAM timing
+//! (the Ramulator substitute), the progressive-generation overlap and
+//! the dynamic-allocation balancer, composed by [`engine`].
+
+pub mod cluster;
+pub mod dram;
+pub mod dynalloc;
+pub mod engine;
+pub mod functional;
+pub mod pe;
+pub mod prediction_unit;
+pub mod progressive;
+pub mod sram;
+
+pub use cluster::{simulate_cluster, ClusterResult};
+pub use engine::{ablation, layer_breakdown, simulate_model, Features, LayerBreakdown, SimResult};

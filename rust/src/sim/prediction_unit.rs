@@ -1,0 +1,116 @@
+//! Cycle model of the bit-level prediction unit (paper §IV-B, Fig 11):
+//! 128 shift-detector lanes feeding an 8×128 shift-judgment adder array
+//! and a converter. The unit produces 8 predicted output elements per
+//! pass, each accumulating a 128-deep dot product per cycle.
+
+use crate::config::HardwareConfig;
+
+/// Cycle count + energy-relevant op count for predicting one GEMM.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PredictCycles {
+    pub cycles: u64,
+    /// HLog products formed (SD+SJA ops; drives the energy model).
+    pub products: u64,
+}
+
+/// Predict an (M, K) × (K, N) product through the unit.
+///
+/// Throughput: 8 outputs in parallel, each consuming `lanes` (=128)
+/// products per cycle → per cycle the unit retires `8 · lanes`
+/// products. Conversion overlaps accumulation (the converter is
+/// pipelined behind the SJA), adding a small drain.
+pub fn predict_gemm(hw: &HardwareConfig, m: usize, k: usize, n: usize) -> PredictCycles {
+    if m == 0 || k == 0 || n == 0 {
+        return PredictCycles { cycles: 0, products: 0 };
+    }
+    let lanes = hw.pred_lanes as u64; // 128
+    let k_pass = (k as u64).div_ceil(lanes);
+    let out_groups = (m as u64 * n as u64).div_ceil(8);
+    let drain = 4; // converter pipeline depth
+    PredictCycles {
+        cycles: out_groups * k_pass + drain,
+        products: (m * k * n) as u64,
+    }
+}
+
+/// Full attention-prediction cycles for one head (paper Fig 5a):
+/// predict Q (L×D·Dh) + predict K + requantize + predict QKᵀ (L×Dh·L).
+pub fn predict_attention_cycles(
+    hw: &HardwareConfig,
+    l: usize,
+    d: usize,
+    dh: usize,
+) -> PredictCycles {
+    let q = predict_gemm(hw, l, d, dh);
+    let k = predict_gemm(hw, l, d, dh);
+    let a = predict_gemm(hw, l, dh, l);
+    // requantization: 2·L·Dh max/scale passes on the functional units,
+    // 1 element/lane/cycle
+    let requant = (2 * l * dh) as u64 / hw.pred_lanes as u64 + 2;
+    PredictCycles {
+        cycles: q.cycles + k.cycles + a.cycles + requant,
+        products: q.products + k.products + a.products,
+    }
+}
+
+/// Local similarity cycles over the SPA: the 8×26 subtractor bank
+/// compares one row pair per `ceil(L / (8·26))` cycles; within a
+/// window of w rows at most w−1 comparisons per row.
+pub fn similarity_cycles(hw: &HardwareConfig, l: usize, window: usize) -> u64 {
+    let _ = hw;
+    let sub_lanes = 8 * 26u64;
+    let comparisons = (l * (window - 1)) as u64; // paper §III-B bound
+    let per_cmp = (l as u64).div_ceil(sub_lanes);
+    comparisons * per_cmp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HardwareConfig;
+
+    fn hw() -> HardwareConfig {
+        HardwareConfig::default()
+    }
+
+    #[test]
+    fn predict_cycles_scale_with_work() {
+        let a = predict_gemm(&hw(), 128, 768, 64);
+        let b = predict_gemm(&hw(), 128, 768, 128);
+        assert!(b.cycles > a.cycles * 19 / 10);
+        assert_eq!(a.products, 128 * 768 * 64);
+    }
+
+    #[test]
+    fn prediction_faster_than_pe_for_same_gemm() {
+        // the unit retires 8·128 = 1024 products/cycle — same rate as
+        // the PE array's peak, but on the *prediction* path where the
+        // PE array would otherwise idle
+        let p = predict_gemm(&hw(), 128, 768, 64);
+        let g = crate::sim::pe::gemm(&hw(), 128, 768, 64);
+        assert!(p.cycles < g.cycles * 2, "p {} g {}", p.cycles, g.cycles);
+    }
+
+    #[test]
+    fn attention_prediction_composition() {
+        let pa = predict_attention_cycles(&hw(), 128, 768, 64);
+        let q = predict_gemm(&hw(), 128, 768, 64);
+        assert!(pa.cycles > 2 * q.cycles);
+        assert_eq!(
+            pa.products,
+            2 * (128 * 768 * 64) as u64 + (128 * 64 * 128) as u64
+        );
+    }
+
+    #[test]
+    fn similarity_much_cheaper_than_prediction() {
+        let sim = similarity_cycles(&hw(), 128, 8);
+        let pred = predict_attention_cycles(&hw(), 128, 768, 64).cycles;
+        assert!(sim < pred / 4, "sim {sim} pred {pred}");
+    }
+
+    #[test]
+    fn empty_prediction_free() {
+        assert_eq!(predict_gemm(&hw(), 0, 10, 10).cycles, 0);
+    }
+}

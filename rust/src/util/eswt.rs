@@ -1,0 +1,270 @@
+//! ESWT binary tensor container reader/writer — the interchange format
+//! between the python compile path and the rust runtime.
+//!
+//! Layout (little-endian), mirrored exactly in `python/compile/io.py`:
+//!
+//! ```text
+//! magic   b"ESWT"
+//! version u32 = 1
+//! count   u32
+//! count x records:
+//!   name_len u16, name bytes (utf-8)
+//!   dtype    u8   (0 = f32, 1 = i32, 2 = u16)
+//!   ndim     u8
+//!   dims     ndim x u32
+//!   data     raw, row-major
+//! ```
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// A named tensor loaded from an ESWT file.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    F32 { dims: Vec<usize>, data: Vec<f32> },
+    I32 { dims: Vec<usize>, data: Vec<i32> },
+    U16 { dims: Vec<usize>, data: Vec<u16> },
+}
+
+impl Tensor {
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { dims, .. } | Tensor::I32 { dims, .. } | Tensor::U16 { dims, .. } => dims,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.dims().iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Borrow as f32 slice, failing on other dtypes.
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+}
+
+/// Read every tensor in an ESWT file into a name → tensor map.
+pub fn read_eswt(path: &Path) -> Result<BTreeMap<String, Tensor>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    parse_eswt(&bytes).with_context(|| format!("parsing {}", path.display()))
+}
+
+fn take<'a>(buf: &mut &'a [u8], n: usize) -> Result<&'a [u8]> {
+    if buf.len() < n {
+        bail!("truncated ESWT file (wanted {n} bytes, had {})", buf.len());
+    }
+    let (head, tail) = buf.split_at(n);
+    *buf = tail;
+    Ok(head)
+}
+
+fn read_u16(buf: &mut &[u8]) -> Result<u16> {
+    Ok(u16::from_le_bytes(take(buf, 2)?.try_into().unwrap()))
+}
+
+fn read_u32(buf: &mut &[u8]) -> Result<u32> {
+    Ok(u32::from_le_bytes(take(buf, 4)?.try_into().unwrap()))
+}
+
+fn read_u8(buf: &mut &[u8]) -> Result<u8> {
+    Ok(take(buf, 1)?[0])
+}
+
+/// Parse ESWT bytes (exposed for in-memory tests).
+pub fn parse_eswt(mut buf: &[u8]) -> Result<BTreeMap<String, Tensor>> {
+    let b = &mut buf;
+    if take(b, 4)? != b"ESWT" {
+        bail!("bad magic");
+    }
+    let version = read_u32(b)?;
+    if version != 1 {
+        bail!("unsupported ESWT version {version}");
+    }
+    let count = read_u32(b)?;
+    let mut out = BTreeMap::new();
+    for _ in 0..count {
+        let nlen = read_u16(b)? as usize;
+        let name = String::from_utf8(take(b, nlen)?.to_vec()).context("tensor name utf-8")?;
+        let code = read_u8(b)?;
+        let ndim = read_u8(b)? as usize;
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(read_u32(b)? as usize);
+        }
+        let n: usize = dims.iter().product();
+        let tensor = match code {
+            0 => {
+                let raw = take(b, n * 4)?;
+                let data = raw
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                Tensor::F32 { dims, data }
+            }
+            1 => {
+                let raw = take(b, n * 4)?;
+                let data = raw
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                Tensor::I32 { dims, data }
+            }
+            2 => {
+                let raw = take(b, n * 2)?;
+                let data = raw
+                    .chunks_exact(2)
+                    .map(|c| u16::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                Tensor::U16 { dims, data }
+            }
+            other => bail!("unknown dtype code {other}"),
+        };
+        out.insert(name, tensor);
+    }
+    Ok(out)
+}
+
+/// Write tensors to an ESWT file (used by tests and trace exporters).
+pub fn write_eswt(path: &Path, tensors: &BTreeMap<String, Tensor>) -> Result<()> {
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
+    );
+    f.write_all(b"ESWT")?;
+    f.write_all(&1u32.to_le_bytes())?;
+    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        f.write_all(&(name.len() as u16).to_le_bytes())?;
+        f.write_all(name.as_bytes())?;
+        let (code, dims): (u8, &[usize]) = match t {
+            Tensor::F32 { dims, .. } => (0, dims),
+            Tensor::I32 { dims, .. } => (1, dims),
+            Tensor::U16 { dims, .. } => (2, dims),
+        };
+        f.write_all(&[code, dims.len() as u8])?;
+        for &d in dims {
+            f.write_all(&(d as u32).to_le_bytes())?;
+        }
+        match t {
+            Tensor::F32 { data, .. } => {
+                for v in data {
+                    f.write_all(&v.to_le_bytes())?;
+                }
+            }
+            Tensor::I32 { data, .. } => {
+                for v in data {
+                    f.write_all(&v.to_le_bytes())?;
+                }
+            }
+            Tensor::U16 { data, .. } => {
+                for v in data {
+                    f.write_all(&v.to_le_bytes())?;
+                }
+            }
+        }
+    }
+    f.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> BTreeMap<String, Tensor> {
+        let mut m = BTreeMap::new();
+        m.insert(
+            "a".into(),
+            Tensor::F32 {
+                dims: vec![2, 3],
+                data: vec![0.0, 1.5, -2.0, 3.25, f32::MIN_POSITIVE, 1e30],
+            },
+        );
+        m.insert(
+            "b".into(),
+            Tensor::I32 {
+                dims: vec![4],
+                data: vec![-1, 0, 7, i32::MAX],
+            },
+        );
+        m.insert(
+            "tok".into(),
+            Tensor::U16 {
+                dims: vec![1, 2],
+                data: vec![0, 65535],
+            },
+        );
+        m
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("eswt_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.bin");
+        let tensors = sample();
+        write_eswt(&path, &tensors).unwrap();
+        let out = read_eswt(&path).unwrap();
+        assert_eq!(out, tensors);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(parse_eswt(b"NOPE\x01\x00\x00\x00\x00\x00\x00\x00").is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let mut m = BTreeMap::new();
+        m.insert(
+            "x".into(),
+            Tensor::F32 {
+                dims: vec![8],
+                data: vec![1.0; 8],
+            },
+        );
+        let dir = std::env::temp_dir().join(format!("eswt_trunc_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.bin");
+        write_eswt(&path, &m).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert!(parse_eswt(&bytes[..bytes.len() - 3]).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let mut bytes = b"ESWT".to_vec();
+        bytes.extend(9u32.to_le_bytes());
+        bytes.extend(0u32.to_le_bytes());
+        assert!(parse_eswt(&bytes).is_err());
+    }
+
+    #[test]
+    fn tensor_accessors() {
+        let t = Tensor::F32 {
+            dims: vec![2, 2],
+            data: vec![1.0; 4],
+        };
+        assert_eq!(t.len(), 4);
+        assert!(t.as_f32().is_ok());
+        assert!(t.as_i32().is_err());
+    }
+}

@@ -1,0 +1,142 @@
+//! Minimal row-major matrix used across the SPLS algorithm, the model,
+//! and the simulator. Deliberately small: this repo's hot paths are
+//! either inside the AOT-compiled XLA executables (L1/L2) or inside the
+//! cycle-accounting simulator, so the host-side matrix type optimizes
+//! for clarity, not BLAS throughput (the int8 matmul in
+//! `model::tensor` is the one routine that gets a blocked fast path).
+
+use std::fmt;
+use std::ops::{Index, IndexMut};
+
+/// Dense row-major matrix over `T`.
+#[derive(Clone, PartialEq)]
+pub struct Mat<T> {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<T>,
+}
+
+impl<T: Copy + Default> Mat<T> {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![T::default(); rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<T>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape mismatch");
+        Self { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> T) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[T] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [T] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Copy row `src` over row `dst` (the recovery primitive: similar
+    /// rows are restored by replicating their critical row).
+    pub fn copy_row(&mut self, src: usize, dst: usize) {
+        if src == dst {
+            return;
+        }
+        let (lo, hi) = (src.min(dst), src.max(dst));
+        let (a, b) = self.data.split_at_mut(hi * self.cols);
+        let lo_row = &a[lo * self.cols..lo * self.cols + self.cols];
+        let hi_row = &mut b[..self.cols];
+        if src < dst {
+            hi_row.copy_from_slice(lo_row);
+        } else {
+            // dst < src: copy from hi (src) into lo (dst)
+            let tmp: Vec<T> = hi_row.to_vec();
+            a[lo * self.cols..lo * self.cols + self.cols].copy_from_slice(&tmp);
+        }
+    }
+
+    pub fn transpose(&self) -> Mat<T> {
+        Mat::from_fn(self.cols, self.rows, |r, c| self[(c, r)])
+    }
+}
+
+impl<T> Index<(usize, usize)> for Mat<T> {
+    type Output = T;
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &T {
+        debug_assert!(r < self.rows && c < self.cols);
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl<T> IndexMut<(usize, usize)> for Mat<T> {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut T {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+impl<T: fmt::Debug> fmt::Debug for Mat<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        for r in 0..self.rows.min(8) {
+            writeln!(f, "  {:?}", &self.data[r * self.cols..(r + 1) * self.cols])?;
+        }
+        if self.rows > 8 {
+            writeln!(f, "  ... ({} more rows)", self.rows - 8)?;
+        }
+        write!(f, "]")
+    }
+}
+
+pub type MatF = Mat<f32>;
+pub type MatI = Mat<i32>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_and_rows() {
+        let m = Mat::from_fn(3, 4, |r, c| (r * 10 + c) as i32);
+        assert_eq!(m[(2, 3)], 23);
+        assert_eq!(m.row(1), &[10, 11, 12, 13]);
+    }
+
+    #[test]
+    fn copy_row_both_directions() {
+        let mut m = Mat::from_fn(4, 3, |r, _| r as i32);
+        m.copy_row(0, 2);
+        assert_eq!(m.row(2), &[0, 0, 0]);
+        m.copy_row(3, 1);
+        assert_eq!(m.row(1), &[3, 3, 3]);
+        m.copy_row(1, 1); // no-op
+        assert_eq!(m.row(1), &[3, 3, 3]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = Mat::from_fn(3, 5, |r, c| (r * 5 + c) as i32);
+        let t = m.transpose();
+        assert_eq!(t.rows, 5);
+        assert_eq!(t[(4, 2)], m[(2, 4)]);
+        assert_eq!(t.transpose(), m);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_shape_checked() {
+        Mat::from_vec(2, 2, vec![1i32, 2, 3]);
+    }
+}

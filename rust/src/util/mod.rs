@@ -1,0 +1,9 @@
+//! Shared utilities: the cross-language PRNG, the ESWT tensor
+//! container, matrices, stats for the bench harness, and a tiny
+//! property-test driver (this image has no proptest crate).
+
+pub mod eswt;
+pub mod mat;
+pub mod prop;
+pub mod rng;
+pub mod stats;

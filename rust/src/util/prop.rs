@@ -1,0 +1,77 @@
+//! Minimal property-test driver (proptest is not in the vendored crate
+//! set). `check` runs a seeded-random property over N cases and reports
+//! the failing seed so a case can be replayed deterministically:
+//!
+//! ```no_run
+//! use esact::util::prop;
+//! prop::check(100, |rng| {
+//!     let x = rng.int_in(-128, 127) as i32;
+//!     let q = esact::quant::hlog_quantize(x);
+//!     assert!(q.abs() >= x.abs() / 2);
+//! });
+//! ```
+
+use crate::util::rng::Xoshiro256pp;
+
+/// Base seed; change via `ESACT_PROP_SEED` to explore different corpora.
+fn base_seed() -> u64 {
+    std::env::var("ESACT_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xE5AC_7000)
+}
+
+/// Run `property` over `cases` independently-seeded RNGs. Panics with
+/// the case seed on failure so it can be replayed.
+pub fn check(cases: u64, property: impl Fn(&mut Xoshiro256pp)) {
+    let base = base_seed();
+    for i in 0..cases {
+        let seed = base.wrapping_add(i);
+        let mut rng = Xoshiro256pp::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            property(&mut rng)
+        }));
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| err.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!("property failed at case {i} (replay seed {seed}): {msg}");
+        }
+    }
+}
+
+/// Random vector helper for properties.
+pub fn int8_vec(rng: &mut Xoshiro256pp, len: usize) -> Vec<i32> {
+    (0..len).map(|_| rng.int_in(-128, 127) as i32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check(50, |rng| {
+            let v = rng.below(100);
+            assert!(v < 100);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn failing_property_reports_seed() {
+        check(50, |rng| {
+            assert!(rng.below(10) < 5, "coin flip lost");
+        });
+    }
+
+    #[test]
+    fn int8_vec_in_range() {
+        let mut rng = Xoshiro256pp::new(1);
+        for &v in &int8_vec(&mut rng, 256) {
+            assert!((-128..=127).contains(&v));
+        }
+    }
+}

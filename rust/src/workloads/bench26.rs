@@ -1,0 +1,241 @@
+//! The 26-benchmark evaluation zoo (paper §V-A).
+//!
+//! Reconstruction: BERT-Base and BERT-Large on eight GLUE tasks
+//! (WNLI excluded; MNLI counted matched + mismatched), SQuAD v1.1 and
+//! CLOTH; GPT-2, Llama2-7b and Bloom-7b on WikiText-2; ViT-B/16 and
+//! ViT-B/32 on ImageNet-1K. Sequence lengths follow the paper: 128 for
+//! GLUE, 384 for SQuAD, 512 for CLOTH/WikiText-2.
+//!
+//! Each benchmark carries the **sparsity profile at its loss ≤ 1%
+//! operating point**. The paper reports only the cross-benchmark
+//! averages (Fig 15: QKV 65.66%, attention 94.65%, FFN 50.33%, overall
+//! 51.7%); per-benchmark values here are deterministic, task-dependent
+//! deviations around those averages (longer sequences → more attention
+//! redundancy; decoder LMs → slightly less FFN similarity; ViT → more),
+//! constructed so the 26-benchmark averages land on the paper's numbers
+//! (asserted in tests). The tiny-model substrate (`model::accuracy`)
+//! provides *measured* sparsity for the trend figures (16-19).
+
+use crate::config::{self, ModelConfig};
+use crate::spls::plan::{dense_model_flops, prediction_overhead_ops};
+use crate::config::SplsConfig;
+
+/// Task family (determines metric + sequence length).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskDomain {
+    Glue,
+    Squad,
+    Cloth,
+    WikiText,
+    ImageNet,
+}
+
+impl TaskDomain {
+    pub fn metric(self) -> &'static str {
+        match self {
+            TaskDomain::Glue => "acc/F1",
+            TaskDomain::Squad => "F1",
+            TaskDomain::Cloth => "acc",
+            TaskDomain::WikiText => "ppl",
+            TaskDomain::ImageNet => "acc",
+        }
+    }
+
+    pub fn batch(self) -> usize {
+        match self {
+            TaskDomain::Glue => 32,
+            TaskDomain::Squad => 12,
+            TaskDomain::Cloth => 3,
+            TaskDomain::WikiText | TaskDomain::ImageNet => 8,
+        }
+    }
+}
+
+/// Component sparsity fractions at the loss ≤ 1% operating point.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SparsityProfile {
+    pub q: f64,
+    pub kv: f64,
+    pub attn: f64,
+    pub ffn: f64,
+}
+
+impl SparsityProfile {
+    /// QKV-component sparsity: of the four L·D·D GEMMs, Q + output
+    /// projection scale with q, K + V with kv.
+    pub fn qkv(&self) -> f64 {
+        (2.0 * self.q + 2.0 * self.kv) / 4.0
+    }
+}
+
+/// One evaluation benchmark.
+#[derive(Clone, Copy, Debug)]
+pub struct Benchmark {
+    pub task: &'static str,
+    pub domain: TaskDomain,
+    pub model: ModelConfig,
+    pub profile: SparsityProfile,
+}
+
+impl Benchmark {
+    /// Overall net computation reduction: component sparsities applied
+    /// to the dense FLOP breakdown, minus the prediction overhead.
+    pub fn overall_reduction(&self) -> f64 {
+        let dense = dense_model_flops(&self.model);
+        let sparse = dense.qkv * (1.0 - self.profile.qkv())
+            + dense.attn * (1.0 - self.profile.attn)
+            + dense.ffn * (1.0 - self.profile.ffn);
+        let overhead = prediction_overhead_ops(&self.model, &SplsConfig::default());
+        1.0 - (sparse + overhead) / dense.total()
+    }
+}
+
+/// Deterministic per-benchmark deviation around the paper's averages.
+///
+/// `i` indexes the benchmark within its family; deviations are balanced
+/// (mean ≈ 0 across the zoo by construction, verified in tests).
+fn profile(base_q: f64, base_kv: f64, base_attn: f64, base_ffn: f64, i: usize) -> SparsityProfile {
+    // symmetric offsets in [-0.06, +0.06], cycle of 8 with zero mean
+    const OFF: [f64; 8] = [0.00, 0.04, -0.04, 0.06, -0.06, 0.02, -0.02, 0.00];
+    let o = OFF[i % 8];
+    let clamp = |v: f64| v.clamp(0.0, 0.995);
+    SparsityProfile {
+        q: clamp(base_q + o),
+        kv: clamp(base_kv + o * 0.5),
+        attn: clamp(base_attn + o * 0.15),
+        ffn: clamp(base_ffn + o * 1.2),
+    }
+}
+
+/// The eight GLUE tasks (WNLI excluded). MNLI is scored matched +
+/// mismatched on BERT-Base (the extra entry that brings the zoo to the
+/// paper's count of 26).
+const GLUE_TASKS: [&str; 8] = [
+    "CoLA", "SST-2", "MRPC", "STS-B", "QQP", "MNLI-m", "QNLI", "RTE",
+];
+
+/// Construct the full 26-benchmark zoo.
+pub fn all_benchmarks() -> Vec<Benchmark> {
+    // Paper averages (Fig 15): QKV 65.66% → with the 2q+2kv/4 split and
+    // kv driven purely by top-k column occupancy, q ≈ 0.62, kv ≈ 0.69;
+    // attention 94.65%; FFN 50.33%.
+    let (bq, bkv, ba, bf) = (0.62, 0.695, 0.9465, 0.5033);
+    let mut v = Vec::with_capacity(26);
+    let mut i = 0usize;
+    // 8 GLUE tasks × {BERT-Base, BERT-Large}, L = 128 → 16
+    for task in GLUE_TASKS {
+        for model in [config::bert_base(128), config::bert_large(128)] {
+            v.push(Benchmark {
+                task,
+                domain: TaskDomain::Glue,
+                model,
+                profile: profile(bq, bkv, ba, bf, i),
+            });
+            i += 1;
+        }
+    }
+    // SQuAD (L = 384) and CLOTH (L = 512) on both BERT sizes → +4
+    for (task, domain, l) in [
+        ("SQuAD", TaskDomain::Squad, 384),
+        ("CLOTH", TaskDomain::Cloth, 512),
+    ] {
+        for model in [config::bert_base(l), config::bert_large(l)] {
+            // longer sequences expose more attention redundancy
+            let mut p = profile(bq + 0.02, bkv + 0.02, ba + 0.004, bf, i);
+            p.attn = p.attn.min(0.985);
+            v.push(Benchmark { task, domain, model, profile: p });
+            i += 1;
+        }
+    }
+    // MNLI-mismatched on BERT-Base → +1 (reaches the paper's 26)
+    v.push(Benchmark {
+        task: "MNLI-mm",
+        domain: TaskDomain::Glue,
+        model: config::bert_base(128),
+        profile: profile(bq, bkv, ba, bf, i),
+    });
+    i += 1;
+    // decoder LMs on WikiText-2 (L = 512) → +3
+    for model in [config::gpt2(512), config::llama2_7b(512), config::bloom_7b(512)] {
+        // causal generation: slightly less FFN token similarity
+        v.push(Benchmark {
+            task: "WikiText-2",
+            domain: TaskDomain::WikiText,
+            model,
+            profile: profile(bq - 0.03, bkv, ba - 0.005, bf - 0.05, i),
+        });
+        i += 1;
+    }
+    // ViT on ImageNet-1K → +2 (patch tokens: strong local similarity)
+    for model in [config::vit_b16(), config::vit_b32()] {
+        v.push(Benchmark {
+            task: "ImageNet-1K",
+            domain: TaskDomain::ImageNet,
+            model,
+            profile: profile(bq + 0.05, bkv + 0.01, ba + 0.002, bf + 0.08, i),
+        });
+        i += 1;
+    }
+    assert_eq!(v.len(), 26);
+    v
+}
+
+/// Cross-benchmark averages (the Fig 15 headline row).
+pub fn zoo_averages(benches: &[Benchmark]) -> (f64, f64, f64, f64) {
+    let n = benches.len() as f64;
+    (
+        benches.iter().map(|b| b.overall_reduction()).sum::<f64>() / n,
+        benches.iter().map(|b| b.profile.qkv()).sum::<f64>() / n,
+        benches.iter().map(|b| b.profile.attn).sum::<f64>() / n,
+        benches.iter().map(|b| b.profile.ffn).sum::<f64>() / n,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exactly_26_benchmarks() {
+        let v = all_benchmarks();
+        assert_eq!(v.len(), 26);
+        // composition check
+        assert_eq!(v.iter().filter(|b| b.domain == TaskDomain::Glue).count(), 17);
+        assert_eq!(v.iter().filter(|b| b.domain == TaskDomain::WikiText).count(), 3);
+        assert_eq!(v.iter().filter(|b| b.domain == TaskDomain::ImageNet).count(), 2);
+    }
+
+    #[test]
+    fn averages_match_paper_fig15() {
+        let (overall, qkv, attn, ffn) = zoo_averages(&all_benchmarks());
+        assert!((overall - 0.517).abs() < 0.03, "overall {overall}");
+        assert!((qkv - 0.6566).abs() < 0.02, "qkv {qkv}");
+        assert!((attn - 0.9465).abs() < 0.01, "attn {attn}");
+        assert!((ffn - 0.5033).abs() < 0.03, "ffn {ffn}");
+    }
+
+    #[test]
+    fn per_benchmark_reduction_sane() {
+        for b in all_benchmarks() {
+            let r = b.overall_reduction();
+            assert!((0.2..0.9).contains(&r), "{} {}: {r}", b.model.name, b.task);
+        }
+    }
+
+    #[test]
+    fn profiles_in_unit_interval() {
+        for b in all_benchmarks() {
+            for v in [b.profile.q, b.profile.kv, b.profile.attn, b.profile.ffn] {
+                assert!((0.0..=1.0).contains(&v));
+            }
+        }
+    }
+
+    #[test]
+    fn domains_have_paper_batches() {
+        assert_eq!(TaskDomain::Glue.batch(), 32);
+        assert_eq!(TaskDomain::Squad.batch(), 12);
+        assert_eq!(TaskDomain::Cloth.batch(), 3);
+        assert_eq!(TaskDomain::WikiText.batch(), 8);
+    }
+}

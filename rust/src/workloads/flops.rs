@@ -1,0 +1,96 @@
+//! Analytic FLOP accounting (paper Fig 1): the computation breakdown of
+//! a transformer and the break-even argument against *global* similarity.
+
+use crate::config::ModelConfig;
+use crate::spls::plan::{dense_model_flops, LayerFlops};
+
+/// MHA vs FFN computation breakdown of a model.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ComputeBreakdown {
+    pub total_gflops: f64,
+    pub mha_frac: f64,
+    pub ffn_frac: f64,
+    pub per_component: LayerFlops,
+}
+
+/// Whole-model GFLOPs (MAC = 1 FLOP) and breakdown.
+pub fn model_gflops(cfg: &ModelConfig) -> ComputeBreakdown {
+    let f = dense_model_flops(cfg);
+    let total = f.total();
+    ComputeBreakdown {
+        total_gflops: total / 1e9,
+        mha_frac: (f.qkv + f.attn) / total,
+        ffn_frac: f.ffn / total,
+        per_component: f,
+    }
+}
+
+/// Paper Fig 1's break-even: with global inter-row similarity, computing
+/// the similarity between two rows costs as much as one attention score
+/// row-pair comparison; pairwise similarity over l rows costs l(l-1)/2
+/// score-equivalents while each sparsified row saves l scores, so more
+/// than (l-1)/2 rows must be pruned for net gain. Returns the minimum
+/// number of rows to sparsify for any benefit.
+pub fn breakeven_rows_global_similarity(l: usize) -> usize {
+    // cost = l(l-1)/2 comparisons; saving = rows_pruned * l
+    // net > 0  <=>  rows_pruned > (l-1)/2
+    l.saturating_sub(1).div_ceil(2)
+}
+
+/// Local-similarity comparison count: l/w windows × w(w-1)/2 pairs
+/// = l(w-1)/2 (paper §II-B).
+pub fn local_similarity_comparisons(l: usize, w: usize) -> usize {
+    l * (w - 1) / 2
+}
+
+/// Global-similarity comparison count: l(l-1)/2.
+pub fn global_similarity_comparisons(l: usize) -> usize {
+    l * (l - 1) / 2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+
+    #[test]
+    fn fig1_bert_large_breakdown() {
+        let b = model_gflops(&config::bert_large(512));
+        assert!((b.total_gflops - 167.5).abs() < 2.0, "{}", b.total_gflops);
+        assert!((b.mha_frac - 0.3846).abs() < 0.01);
+        assert!((b.ffn_frac - 0.6154).abs() < 0.01);
+    }
+
+    #[test]
+    fn breakeven_over_half() {
+        assert_eq!(breakeven_rows_global_similarity(512), 256);
+        assert_eq!(breakeven_rows_global_similarity(128), 64);
+        assert_eq!(breakeven_rows_global_similarity(1), 0);
+    }
+
+    #[test]
+    fn local_vs_global_comparison_reduction() {
+        // paper §II-B: l(l-1)/2 -> l(w-1)/2
+        let l = 512;
+        let local = local_similarity_comparisons(l, 8);
+        let global = global_similarity_comparisons(l);
+        assert_eq!(local, 512 * 7 / 2);
+        assert!((global as f64 / local as f64 - (l - 1) as f64 / 7.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn ffn_dominates_bert_like_models() {
+        for cfg in [config::bert_base(128), config::bert_base(512), config::gpt2(512)] {
+            let b = model_gflops(&cfg);
+            assert!(b.ffn_frac > 0.5, "{}: ffn {}", cfg.name, b.ffn_frac);
+        }
+    }
+
+    #[test]
+    fn attention_share_grows_with_seq_len() {
+        let short = model_gflops(&config::bert_base(128));
+        let long = model_gflops(&config::bert_base(512));
+        let attn_frac = |b: &ComputeBreakdown| b.per_component.attn / b.per_component.total();
+        assert!(attn_frac(&long) > attn_frac(&short));
+    }
+}

@@ -1,0 +1,9 @@
+//! The paper's 26-benchmark workload zoo (§V-A) plus analytic FLOP
+//! accounting (Fig 1) and per-benchmark sparsity profiles measured at
+//! the paper's loss ≤ 1% operating points.
+
+pub mod bench26;
+pub mod flops;
+
+pub use bench26::{all_benchmarks, Benchmark, TaskDomain};
+pub use flops::{breakeven_rows_global_similarity, model_gflops, ComputeBreakdown};

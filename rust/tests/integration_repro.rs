@@ -1,0 +1,106 @@
+//! Reproduction integration: every figure/table renderer runs and its
+//! output carries the paper-anchored values — the "shape holds" checks
+//! of EXPERIMENTS.md in executable form.
+
+use std::path::{Path, PathBuf};
+
+use esact::report::{figures, tables};
+
+fn dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[test]
+fn fig1_bert_large_totals() {
+    let t = figures::fig1();
+    assert!(t.contains("BERT-Large"));
+    // 167.5 GFLOPs ± rendering
+    assert!(t.contains("167.") || t.contains("168."), "{t}");
+    assert!(t.contains("38.4"), "MHA share missing: {t}");
+}
+
+#[test]
+fn fig15_average_close_to_paper() {
+    let t = figures::fig15();
+    let avg_line = t.lines().find(|l| l.contains("AVERAGE")).unwrap();
+    // overall column within a few points of 51.7%
+    let overall: f64 = avg_line
+        .split('|')
+        .nth(2)
+        .unwrap()
+        .trim()
+        .trim_end_matches('%')
+        .parse()
+        .unwrap();
+    assert!((overall - 51.7).abs() < 4.0, "overall {overall}");
+}
+
+#[test]
+fn fig20_who_wins_and_by_what_factor() {
+    let t = figures::fig20();
+    let line = t.lines().find(|l| l.contains("GEOMEAN")).unwrap();
+    let cols: Vec<&str> = line.split('|').collect();
+    let dense: f64 = cols[2].trim().trim_end_matches('×').parse().unwrap();
+    let e2e: f64 = cols[3].trim().trim_end_matches('×').parse().unwrap();
+    // paper: 2.42× dense, 4.72× end-to-end — shape must hold
+    assert!((1.8..3.2).contains(&dense), "dense {dense}");
+    assert!((3.2..6.5).contains(&e2e), "e2e {e2e}");
+    assert!(e2e > dense * 1.4, "SPLS stack must add over dense ASIC");
+}
+
+#[test]
+fn fig21_average_efficiency() {
+    let t = figures::fig21();
+    let line = t.lines().find(|l| l.contains("AVERAGE")).unwrap();
+    let avg: f64 = line.split('|').nth(2).unwrap().trim().parse().unwrap();
+    assert!((2.2..4.5).contains(&avg), "TOPS/W {avg}");
+}
+
+#[test]
+fn table2_totals_near_paper() {
+    let t = tables::table2();
+    let line = t.lines().find(|l| l.contains("Total")).unwrap();
+    let cols: Vec<&str> = line.split('|').collect();
+    let area: f64 = cols[2].trim().parse().unwrap();
+    let power: f64 = cols[3].trim().parse().unwrap();
+    assert!((area - 5.09).abs() < 0.2, "area {area}");
+    assert!((power - 792.12).abs() < 30.0, "power {power}");
+}
+
+#[test]
+fn table4_ratios() {
+    let t = tables::table4();
+    let line = t.lines().find(|l| l.contains("vs SpAtten")).unwrap();
+    // "ESACT vs SpAtten X.XX× (paper 2.95×), vs Sanger Y.YY× (paper 2.26×)"
+    let nums: Vec<f64> = line
+        .split('×')
+        .filter_map(|s| s.split_whitespace().last())
+        .filter_map(|s| s.parse().ok())
+        .collect();
+    assert!(nums[0] > 1.8 && nums[0] < 4.5, "vs SpAtten {}", nums[0]);
+}
+
+#[test]
+fn substrate_sweeps_render_with_content() {
+    // small limits keep this test quick while exercising the real path
+    let f16 = figures::fig16(&dir(), 8).unwrap();
+    assert!(f16.matches('\n').count() > 20, "sweep rows missing");
+    let f18 = figures::fig18(&dir(), 8).unwrap();
+    // Fig 18 property: K sparsity identical across s for each method
+    for l in f18.lines().filter(|l| l.contains("HLog")) {
+        let cells: Vec<&str> = l.split('|').map(str::trim).collect();
+        assert_eq!(cells[2], cells[3], "K sparsity must be flat in s: {l}");
+        assert_eq!(cells[3], cells[4], "K sparsity must be flat in s: {l}");
+    }
+    let f19 = figures::fig19(&dir(), 8).unwrap();
+    // FFN sparsity should be monotone non-decreasing as f decreases
+    let ffn: Vec<f64> = f19
+        .lines()
+        .filter(|l| l.starts_with("| 4") || l.starts_with("| 3") || l.starts_with("| 2") || l.starts_with("| 1"))
+        .map(|l| l.split('|').nth(2).unwrap().trim().parse().unwrap())
+        .collect();
+    assert_eq!(ffn.len(), 4, "{f19}");
+    for w in ffn.windows(2) {
+        assert!(w[1] >= w[0] - 1e-9, "FFN sparsity not monotone: {ffn:?}");
+    }
+}

@@ -1,0 +1,185 @@
+//! Runtime/serving integration: AOT artifacts vs the host model,
+//! masked execution vs the host sparse dataflow, serving accuracy, and
+//! failure injection on the artifact path.
+
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::time::Instant;
+
+use esact::config::SplsConfig;
+use esact::coordinator::server::Mode;
+use esact::coordinator::{BatchPolicy, Request, Server};
+use esact::model::{self, TestSet, TinyWeights};
+use esact::quant::QuantMethod;
+use esact::runtime::{Arg, ArtifactSet, Executable};
+use esact::util::rng::Xoshiro256pp;
+
+fn artifacts() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[test]
+fn aot_dense_matches_host_over_many_seeds() {
+    let set = ArtifactSet::load(&artifacts()).unwrap();
+    let w = TinyWeights::load(&artifacts().join("tiny_weights.bin")).unwrap();
+    let mut rng = Xoshiro256pp::new(41);
+    for _ in 0..6 {
+        let (toks, _) = model::synth::gen_example(&mut rng, 64);
+        let aot = set.dense_b1.run_f32(&[Arg::I32(&toks, &[1, 64])]).unwrap();
+        let host = model::forward_dense(&w, &toks);
+        for (a, h) in aot.iter().zip(&host) {
+            assert!((a - h).abs() < 3e-2, "{a} vs {h}");
+        }
+        assert_eq!(
+            model::tensor::argmax(&aot),
+            model::tensor::argmax(&host),
+            "classification diverges"
+        );
+    }
+}
+
+#[test]
+fn aot_masked_matches_host_sparse_dataflow() {
+    // The masked executable fed with SPLS masks must agree with the
+    // host forward_sparse (same masks, same recovery semantics).
+    let set = ArtifactSet::load(&artifacts()).unwrap();
+    let w = TinyWeights::load(&artifacts().join("tiny_weights.bin")).unwrap();
+    let mut rng = Xoshiro256pp::new(42);
+    let spls = SplsConfig::default();
+    for _ in 0..4 {
+        let (toks, _) = model::synth::gen_example(&mut rng, 64);
+        let plans = model::plan_model(&w, &toks, &spls, QuantMethod::Hlog);
+        let l = 64usize;
+        let mut masks = Vec::new();
+        for p in &plans {
+            for h in &p.heads {
+                for r in 0..l {
+                    let src = h.sim.rep[r];
+                    for c in 0..l {
+                        masks.push(if h.mask[(src, c)] { 1.0f32 } else { 0.0 });
+                    }
+                }
+            }
+        }
+        let aot = set
+            .masked_b1
+            .run_f32(&[Arg::I32(&toks, &[1, l]), Arg::F32(&masks, &[1, 2, 4, l, l])])
+            .unwrap();
+        let host = model::forward_sparse(&w, &toks, &plans);
+        // The two dataflows differ slightly by design: the host computes
+        // Q only for critical rows and replicates their outputs, while
+        // the masked executable computes every row's own Q under the
+        // replicated mask. Logits must correlate strongly; the argmax
+        // may flip only on near-ties.
+        let ad: Vec<f64> = aot.iter().map(|&v| v as f64).collect();
+        let hd: Vec<f64> = host.iter().map(|&v| v as f64).collect();
+        let corr = esact::util::stats::pearson(&ad, &hd);
+        assert!(corr > 0.99, "logit correlation {corr}: aot {aot:?} host {host:?}");
+        let (pa, ph) = (model::tensor::argmax(&aot), model::tensor::argmax(&host));
+        if pa != ph {
+            // tolerate flips only when the host's top-2 margin is small
+            let mut sorted = host.clone();
+            sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let margin = sorted[0] - sorted[1];
+            assert!(margin < 1.5, "class flip with margin {margin}: aot {aot:?} host {host:?}");
+        }
+    }
+}
+
+#[test]
+fn batch8_consistent_with_batch1() {
+    let set = ArtifactSet::load(&artifacts()).unwrap();
+    let mut rng = Xoshiro256pp::new(43);
+    let seqs: Vec<Vec<i32>> = (0..8)
+        .map(|_| model::synth::gen_example(&mut rng, 64).0)
+        .collect();
+    let flat: Vec<i32> = seqs.iter().flatten().copied().collect();
+    let batched = set.dense_b8.run_f32(&[Arg::I32(&flat, &[8, 64])]).unwrap();
+    for (i, s) in seqs.iter().enumerate() {
+        let single = set.dense_b1.run_f32(&[Arg::I32(s, &[1, 64])]).unwrap();
+        for (b, o) in batched[i * 16..(i + 1) * 16].iter().zip(&single) {
+            assert!((b - o).abs() < 1e-4, "batch {b} vs single {o}");
+        }
+    }
+}
+
+#[test]
+fn serving_accuracy_matches_offline_eval() {
+    let dir = artifacts();
+    let set = TestSet::load(&dir.join("tiny_testset.bin")).unwrap();
+    let srv = Server::new(&dir, Mode::Dense, SplsConfig::default()).unwrap();
+    let n = 32usize;
+    let (tx, rx) = mpsc::channel::<Request>();
+    let (rtx, rrx) = mpsc::channel();
+    for i in 0..n {
+        tx.send(Request {
+            id: i as u64,
+            tokens: set.tokens[i].clone(),
+            arrived: Instant::now(),
+        })
+        .unwrap();
+    }
+    drop(tx);
+    let labels: Vec<i32> = set.labels[..n].to_vec();
+    let collector = std::thread::spawn(move || {
+        rrx.iter()
+            .filter(|r: &esact::coordinator::Reply| {
+                model::tensor::argmax(&r.logits) as i32 == labels[r.id as usize]
+            })
+            .count()
+    });
+    let metrics = srv.serve(rx, rtx, BatchPolicy::default()).unwrap();
+    let correct = collector.join().unwrap();
+    assert_eq!(metrics.requests, n);
+    // offline harness on the same prefix
+    let w = TinyWeights::load(&dir.join("tiny_weights.bin")).unwrap();
+    let offline = model::eval_dense(&w, &set, n);
+    let served_acc = correct as f64 / n as f64;
+    assert!(
+        (served_acc - offline.accuracy).abs() < 1e-9,
+        "served {served_acc} vs offline {}",
+        offline.accuracy
+    );
+}
+
+// ---------------------------------------------------------------------
+// failure injection
+// ---------------------------------------------------------------------
+
+#[test]
+fn missing_artifact_dir_fails_loudly() {
+    let err = match ArtifactSet::load(Path::new("/nonexistent")) {
+        Err(e) => e,
+        Ok(_) => panic!("load of missing dir must fail"),
+    };
+    assert!(err.to_string().contains("make artifacts"), "{err}");
+}
+
+#[test]
+fn corrupt_hlo_text_fails_at_load_not_at_run() {
+    let dir = std::env::temp_dir().join(format!("esact_corrupt_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("bad.hlo.txt");
+    std::fs::write(&path, "HloModule garbage\nENTRY main { broken }").unwrap();
+    let client = xla::PjRtClient::cpu().unwrap();
+    assert!(Executable::load(&client, &path).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn wrong_shape_inputs_rejected() {
+    let set = ArtifactSet::load(&artifacts()).unwrap();
+    let toks = vec![0i32; 32]; // wrong: compiled for 64
+    assert!(set.dense_b1.run_f32(&[Arg::I32(&toks, &[1, 32])]).is_err());
+}
+
+#[test]
+fn truncated_weights_file_rejected() {
+    let bytes = std::fs::read(artifacts().join("tiny_weights.bin")).unwrap();
+    let dir = std::env::temp_dir().join(format!("esact_trunc_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("w.bin");
+    std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+    assert!(TinyWeights::load(&path).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
