@@ -1,0 +1,22 @@
+# Convenience targets for the ESACT reproduction.
+
+ARTIFACTS := rust/artifacts
+
+.PHONY: build test bench artifacts clean-artifacts
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+bench:
+	cargo bench --bench kernel_micro
+
+# Retrain the tiny substrate and export weights + test set for the rust
+# harness (the checked-in artifacts were produced exactly this way).
+artifacts:
+	cd python && python3 -m compile.train_tiny --out-dir ../$(ARTIFACTS)
+
+clean-artifacts:
+	rm -f $(ARTIFACTS)/tiny_weights.bin $(ARTIFACTS)/tiny_testset.bin $(ARTIFACTS)/tiny_meta.txt

@@ -2,8 +2,6 @@
 //! quantization method, window size, PE-array shape, FACT-style
 //! end-to-end comparison, and cluster-level batch scaling.
 
-use std::path::Path;
-
 use esact::baselines::compare_with_fact;
 use esact::config::{self, DeployConfig, HardwareConfig, SplsConfig};
 use esact::model::{self, TestSet, TinyWeights};
@@ -18,7 +16,7 @@ fn main() -> anyhow::Result<()> {
 
     // --- quantization-method ablation (accuracy substrate) ----------
     println!("== quant method ablation (measured, 24 seqs) ==");
-    let dir = Path::new("artifacts");
+    let dir = esact::util::artifacts_dir();
     let w = TinyWeights::load(&dir.join("tiny_weights.bin"))?;
     let set = TestSet::load(&dir.join("tiny_testset.bin"))?;
     let dense = model::eval_dense(&w, &set, 24);

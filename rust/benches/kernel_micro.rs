@@ -1,27 +1,22 @@
-//! Micro-benchmarks of the L3 hot paths (criterion is not in the
-//! vendored set; `util::stats::bench` provides warmup + percentile
-//! reporting). These are the §Perf measurement points in
-//! EXPERIMENTS.md.
+//! Micro-benchmarks of the L3 hot paths, criterion-style (the criterion
+//! crate is not in the vendored set; `util::bench::Criterion` provides
+//! the same `bench_function` / `Bencher::iter` surface with warmup +
+//! percentile reporting). These are the §Perf measurement points in
+//! EXPERIMENTS.md, plus the single-thread vs rayon comparison for the
+//! parallelized SPLS→simulator hot path (quoted in the PR).
 
-use esact::config::SplsConfig;
+use esact::config::{self, HardwareConfig, SplsConfig};
 use esact::model::tensor;
 use esact::quant;
+use esact::sim::{simulate_model, Features};
 use esact::spls;
+use esact::util::bench::{black_box, Criterion};
 use esact::util::mat::{MatF, MatI};
 use esact::util::rng::Xoshiro256pp;
-use esact::util::stats::bench;
-
-fn report(name: &str, work: f64, s: esact::util::stats::Summary) {
-    println!(
-        "{name:<34} {:>10.1} µs/iter (p50 {:>8.1}, p95 {:>8.1}) {:>10.1} Mops/s",
-        s.mean * 1e6,
-        s.p50 * 1e6,
-        s.p95 * 1e6,
-        work / s.mean / 1e6
-    );
-}
+use esact::workloads::bench26::SparsityProfile;
 
 fn main() {
+    let mut c = Criterion::new().sampling(10, 3);
     let mut rng = Xoshiro256pp::new(99);
     let l = 128usize;
     let d = 768usize;
@@ -30,54 +25,90 @@ fn main() {
     // --- bit-level prediction unit ---------------------------------
     let x = MatI::from_fn(l, d, |_, _| rng.int_in(-128, 127) as i32);
     let wq = MatI::from_fn(d, dh, |_, _| rng.int_in(-128, 127) as i32);
-    let s = bench(10, 3, || {
-        std::hint::black_box(spls::predict_matmul(&x, &wq));
+    c.bench_function("predict_matmul 128x768x64", |b| {
+        b.iter(|| spls::predict_matmul(&x, &wq))
     });
-    report("predict_matmul 128x768x64", (l * d * dh) as f64, s);
+    c.bench_function("predict_attention 128x768 head", |b| {
+        b.iter(|| spls::predict_attention(&x, &wq, &wq))
+    });
 
     let xs: Vec<i32> = (0..(1 << 16)).map(|_| rng.int_in(-128, 127) as i32).collect();
-    let s = bench(20, 10, || {
-        let mut acc = 0i64;
-        for &v in &xs {
-            acc += quant::hlog_quantize(v) as i64;
-        }
-        std::hint::black_box(acc);
+    c.bench_function("hlog_quantize 64k", |b| {
+        b.iter(|| {
+            let mut acc = 0i64;
+            for &v in &xs {
+                acc += quant::hlog_quantize(v) as i64;
+            }
+            acc
+        })
     });
-    report("hlog_quantize 64k", xs.len() as f64, s);
 
     // --- SPA pipeline ------------------------------------------------
     let pam = MatI::from_fn(l, l, |r, c| ((r / 2 * 31 + c * 7) % 97) as i32);
-    let s = bench(20, 10, || {
-        std::hint::black_box(spls::sparsify(&pam, 0.12));
-    });
-    report("topk sparsify 128x128", (l * l) as f64, s);
+    c.bench_function("topk sparsify 128x128", |b| b.iter(|| spls::sparsify(&pam, 0.12)));
 
     let (spa, _) = spls::sparsify(&pam, 0.12);
-    let s = bench(20, 10, || {
-        std::hint::black_box(spls::local_similarity(&spa, 8, 0.6));
+    c.bench_function("local_similarity w=8", |b| {
+        b.iter(|| spls::local_similarity(&spa, 8, 0.6))
     });
-    report("local_similarity w=8", (l * 7 * l) as f64, s);
 
     let spls_cfg = SplsConfig::default();
-    let pams: Vec<MatI> = (0..4)
+    let pams: Vec<MatI> = (0..12)
         .map(|h| MatI::from_fn(l, l, |r, c| ((r / 2 * 31 + c * 7 + h * 13) % 97) as i32))
         .collect();
-    let s = bench(10, 5, || {
-        std::hint::black_box(spls::plan_layer(&pams, &spls_cfg));
-    });
-    report("plan_layer 4 heads", (4 * l * l) as f64, s);
+    // plan_layer itself is measured in the 1-thread-vs-rayon section below
 
     // --- host tensor ops --------------------------------------------
     let a = MatF::from_fn(l, d, |_, _| rng.normal());
-    let b = MatF::from_fn(d, d, |_, _| rng.normal());
-    let s = bench(10, 3, || {
-        std::hint::black_box(tensor::matmul(&a, &b));
-    });
-    report("host matmul 128x768x768", (l * d * d) as f64, s);
+    let bm = MatF::from_fn(d, d, |_, _| rng.normal());
+    c.bench_function("host matmul 128x768x768", |b| b.iter(|| tensor::matmul(&a, &bm)));
 
     let mut soft = MatF::from_fn(l, l, |_, _| rng.normal());
-    let s = bench(20, 20, || {
-        tensor::softmax_rows(&mut soft);
+    c.bench_function("softmax_rows 128x128", |b| {
+        b.iter(|| {
+            tensor::softmax_rows(&mut soft);
+        })
     });
-    report("softmax_rows 128x128", (l * l) as f64, s);
+
+    // --- single-thread vs rayon: the parallelized hot path -----------
+    println!("\n== single-thread vs rayon (the tentpole comparison) ==");
+    let hw = HardwareConfig::default();
+    let profile = SparsityProfile { q: 0.6, kv: 0.6, attn: 0.946, ffn: 0.5 };
+    let model = config::bert_large(512);
+    let single = rayon::ThreadPoolBuilder::new()
+        .num_threads(1)
+        .build()
+        .expect("single-thread pool");
+
+    let mut c = Criterion::new().sampling(10, 3);
+    let s1 = c.bench_function("simulate_model BERT-Large/512 (1 thread)", |b| {
+        b.iter(|| single.install(|| simulate_model(&model, &hw, &spls_cfg, &profile, Features::FULL)))
+    });
+    let sn = c.bench_function("simulate_model BERT-Large/512 (rayon)", |b| {
+        b.iter(|| simulate_model(&model, &hw, &spls_cfg, &profile, Features::FULL))
+    });
+    println!(
+        "simulate_model speedup: {:.2}x on {} cores",
+        s1.mean / sn.mean,
+        rayon::current_num_threads()
+    );
+
+    let p1 = c.bench_function("plan_layer 12 heads (1 thread)", |b| {
+        b.iter(|| single.install(|| spls::plan_layer(&pams, &spls_cfg)))
+    });
+    let pn = c.bench_function("plan_layer 12 heads (rayon)", |b| {
+        b.iter(|| spls::plan_layer(&pams, &spls_cfg))
+    });
+    println!("plan_layer speedup: {:.2}x", p1.mean / pn.mean);
+
+    let q1 = c.bench_function("predict_attention (1 thread)", |b| {
+        b.iter(|| single.install(|| spls::predict_attention(&x, &wq, &wq)))
+    });
+    let qn = c.bench_function("predict_attention (rayon)", |b| {
+        b.iter(|| spls::predict_attention(&x, &wq, &wq))
+    });
+    println!("predict_attention speedup: {:.2}x", q1.mean / qn.mean);
+
+    // keep the optimizer honest about the data we bench on
+    black_box((&x, &wq, &pam, &spa, &a));
 }

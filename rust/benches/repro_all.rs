@@ -3,13 +3,12 @@
 //! alongside. This is the bench target referenced by DESIGN.md's
 //! experiment index (`make bench` runs it).
 
-use std::path::Path;
 use std::time::Instant;
 
 use esact::report::{figures, tables};
 
 fn main() -> anyhow::Result<()> {
-    let dir = Path::new("artifacts");
+    let dir = &esact::util::artifacts_dir();
     let lim = 32; // accuracy-sweep size per point; full set via `esact eval`
     let t0 = Instant::now();
     let mut section = |name: &str, text: String| {

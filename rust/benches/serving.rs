@@ -2,7 +2,6 @@
 //! SPLS mask-planning cost, and coordinator throughput dense vs SPLS —
 //! the end-to-end numbers recorded in EXPERIMENTS.md §E2E/§Perf.
 
-use std::path::Path;
 use std::sync::mpsc;
 use std::time::Instant;
 
@@ -16,8 +15,8 @@ use esact::util::rng::Xoshiro256pp;
 use esact::util::stats::bench;
 
 fn main() -> anyhow::Result<()> {
-    let dir = Path::new("artifacts");
-    let artifacts = ArtifactSet::load(dir)?;
+    let dir = esact::util::artifacts_dir();
+    let artifacts = ArtifactSet::load(&dir)?;
     let weights = TinyWeights::load(&dir.join("tiny_weights.bin"))?;
     let mut rng = Xoshiro256pp::new(2);
     let l = weights.cfg.seq_len;
@@ -55,7 +54,7 @@ fn main() -> anyhow::Result<()> {
 
     // --- coordinator throughput --------------------------------------
     for mode in [Mode::Dense, Mode::Spls] {
-        let srv = Server::new(dir, mode, SplsConfig::default())?;
+        let srv = Server::new(&dir, mode, SplsConfig::default())?;
         let n = 64usize;
         let (tx, rx) = mpsc::channel();
         let (rtx, rrx) = mpsc::channel();

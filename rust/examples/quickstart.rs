@@ -9,8 +9,6 @@
 //! Q/KV/FFN sparsification → sparse forward with recovery → and the
 //! same masks through the AOT-compiled PJRT executable.
 
-use std::path::Path;
-
 use esact::config::SplsConfig;
 use esact::model::{self, TinyWeights};
 use esact::quant::QuantMethod;
@@ -18,7 +16,7 @@ use esact::runtime::{Arg, ArtifactSet};
 use esact::util::rng::Xoshiro256pp;
 
 fn main() -> anyhow::Result<()> {
-    let dir = Path::new("artifacts");
+    let dir = &esact::util::artifacts_dir();
     let weights = TinyWeights::load(&dir.join("tiny_weights.bin"))?;
     let spls = SplsConfig::default();
     println!("SPLS config: {spls:?}\n");

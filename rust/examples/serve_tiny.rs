@@ -8,7 +8,6 @@
 //! cargo run --release --example serve_tiny [n_requests]
 //! ```
 
-use std::path::Path;
 use std::sync::mpsc;
 use std::time::Instant;
 
@@ -20,7 +19,7 @@ use esact::util::rng::Xoshiro256pp;
 
 fn main() -> anyhow::Result<()> {
     let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(128);
-    let dir = Path::new("artifacts");
+    let dir = &esact::util::artifacts_dir();
     let set = TestSet::load(&dir.join("tiny_testset.bin"))?;
 
     for mode in [Mode::Dense, Mode::Spls] {

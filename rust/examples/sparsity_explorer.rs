@@ -8,15 +8,13 @@
 //! cargo run --release --example sparsity_explorer [n_eval]
 //! ```
 
-use std::path::Path;
-
 use esact::config::SplsConfig;
 use esact::model::{self, TestSet, TinyWeights};
 use esact::quant::QuantMethod;
 
 fn main() -> anyhow::Result<()> {
     let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(48);
-    let dir = Path::new("artifacts");
+    let dir = &esact::util::artifacts_dir();
     let w = TinyWeights::load(&dir.join("tiny_weights.bin"))?;
     let set = TestSet::load(&dir.join("tiny_testset.bin"))?;
     let dense = model::eval_dense(&w, &set, n);

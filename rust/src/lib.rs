@@ -7,11 +7,22 @@
 //! accelerator (progressive generation + dynamic allocation), energy /
 //! area models, accelerator baselines (dense ASIC, V100, SpAtten,
 //! Sanger, FACT), the 26-benchmark workload zoo, and a serving
-//! coordinator that runs AOT-compiled JAX/Pallas artifacts through the
-//! PJRT C API (`xla` crate) with python never on the request path.
+//! coordinator with python never on the request path.
 //!
-//! See `DESIGN.md` for the paper → module map and `EXPERIMENTS.md` for
-//! the measured reproduction of every table and figure.
+//! The serve-time executor is backend-neutral (`runtime::`): the
+//! default, hermetic build interprets the trained tiny transformer in
+//! pure Rust (`runtime::reference`); the `pjrt` cargo feature swaps in
+//! AOT-compiled JAX/Pallas artifacts run through the PJRT C API
+//! (`xla` crate — see Cargo.toml before enabling).
+//!
+//! The SPLS→simulator hot path is parallelized with rayon: per-head
+//! planning (`spls::plan_layer`), Q/K prediction and row-partitioned
+//! HLog matmuls (`spls::predict`), and per-layer simulation fan-out
+//! (`sim::engine::simulate_model`) — all bit-deterministic (asserted
+//! by tests against single-thread runs).
+//!
+//! See `DESIGN.md` for the paper → module map and `README.md` for
+//! build/test/bench commands.
 
 pub mod baselines;
 pub mod config;

@@ -34,7 +34,9 @@ USAGE:
 Artifacts are read from ./artifacts (run `make artifacts` first).";
 
 fn artifact_dir() -> PathBuf {
-    PathBuf::from("artifacts")
+    // ./artifacts, $ESACT_ARTIFACTS, or <crate>/artifacts — so the
+    // binary works from the workspace root and from rust/ alike
+    esact::util::artifacts_dir()
 }
 
 fn main() -> Result<()> {

@@ -10,5 +10,5 @@ pub mod transformer;
 pub mod weights;
 
 pub use accuracy::{eval_dense, eval_sparse, EvalResult};
-pub use transformer::{attention_probs, forward_dense, forward_sparse, plan_model};
+pub use transformer::{attention_probs, forward_dense, forward_masked, forward_sparse, plan_model};
 pub use weights::{TestSet, TinyConfig, TinyWeights};

@@ -80,6 +80,60 @@ pub fn forward_dense(w: &TinyWeights, tokens: &[i32]) -> Vec<f32> {
     linear(&pooled, &w.cls_w, &w.cls_b).data
 }
 
+/// Masked forward implementing the AOT masked-artifact semantics on the
+/// host: every attention row computes its own Q, but positions with
+/// `mask == 0` are excluded from the softmax. Fed with SPLS masks whose
+/// similar rows carry their critical row's mask (see
+/// `coordinator::server::masks_for`), this reproduces what the ESACT
+/// dataflow produces after recovery — it is the reference backend's
+/// masked program (`runtime::reference`).
+///
+/// `masks` is row-major `[n_layers, n_heads, L, L]`, keep iff `> 0.5`.
+pub fn forward_masked(w: &TinyWeights, tokens: &[i32], masks: &[f32]) -> Vec<f32> {
+    let cfg = &w.cfg;
+    let n_heads = cfg.n_heads;
+    let dh = cfg.d_head();
+    let l = tokens.len();
+    assert_eq!(
+        masks.len(),
+        cfg.n_layers * n_heads * l * l,
+        "mask buffer must cover [n_layers, n_heads, L, L]"
+    );
+    let mut x = embed(w, tokens);
+    for (li, lw) in w.layers.iter().enumerate() {
+        let h = layernorm(&x, &lw.ln1_g, &lw.ln1_b);
+        let q = linear(&h, &lw.wq, &lw.bq);
+        let k = linear(&h, &lw.wk, &lw.bk);
+        let v = linear(&h, &lw.wv, &lw.bv);
+        let mut att = MatF::zeros(l, x.cols);
+        for hi in 0..n_heads {
+            let qh = head_of(&q, hi, dh);
+            let kh = head_of(&k, hi, dh);
+            let vh = head_of(&v, hi, dh);
+            let scale = 1.0 / (dh as f32).sqrt();
+            let mut s = matmul(&qh, &kh.transpose());
+            for val in &mut s.data {
+                *val *= scale;
+            }
+            let base = (li * n_heads + hi) * l * l;
+            let mask = Mat::from_fn(l, l, |r, c| masks[base + r * l + c] > 0.5);
+            masked_softmax_rows(&mut s, &mask);
+            set_head(&mut att, hi, dh, &matmul(&s, &vh));
+        }
+        let mut x1 = x.clone();
+        add_inplace(&mut x1, &linear(&att, &lw.wo, &lw.bo));
+        let h2 = layernorm(&x1, &lw.ln2_g, &lw.ln2_b);
+        let mut ff = linear(&h2, &lw.w1, &lw.b1);
+        gelu_inplace(&mut ff);
+        let mut x2 = x1;
+        add_inplace(&mut x2, &linear(&ff, &lw.w2, &lw.b2));
+        x = x2;
+    }
+    let x = layernorm(&x, &w.lnf_g, &w.lnf_b);
+    let pooled = MatF::from_vec(1, x.cols, mean_rows(&x));
+    linear(&pooled, &w.cls_w, &w.cls_b).data
+}
+
 /// Per-layer, per-head attention matrices for the similarity analyses.
 pub fn attention_probs(w: &TinyWeights, tokens: &[i32]) -> Vec<Vec<MatF>> {
     let n_heads = w.cfg.n_heads;
@@ -304,6 +358,40 @@ mod tests {
         let q_sp: f64 = plans.iter().map(|p| p.q_sparsity()).sum::<f64>() / 2.0;
         assert!(q_sp >= 0.0);
         let _ = (d_arg, s_arg);
+    }
+
+    #[test]
+    fn masked_forward_full_mask_equals_dense() {
+        let w = weights();
+        let t = toks(6, 64, 64);
+        let masks = vec![1.0f32; 2 * 4 * 64 * 64];
+        let dense = forward_dense(&w, &t);
+        let masked = forward_masked(&w, &t, &masks);
+        for (a, b) in dense.iter().zip(&masked) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn masked_forward_with_spls_masks_is_finite_and_sparse_aware() {
+        let w = weights();
+        let t = toks(7, 64, 64);
+        let plans = plan_model(&w, &t, &SplsConfig::default(), QuantMethod::Hlog);
+        let l = 64usize;
+        let mut masks = Vec::with_capacity(2 * 4 * l * l);
+        for p in &plans {
+            for h in &p.heads {
+                for r in 0..l {
+                    let src = h.sim.rep[r];
+                    for c in 0..l {
+                        masks.push(if h.mask[(src, c)] { 1.0 } else { 0.0 });
+                    }
+                }
+            }
+        }
+        let logits = forward_masked(&w, &t, &masks);
+        assert_eq!(logits.len(), 16);
+        assert!(logits.iter().all(|v| v.is_finite()));
     }
 
     #[test]

@@ -182,4 +182,44 @@ mod tests {
         assert_eq!(hlog_quantize(0), 0);
         assert_eq!(hlog_code(0).pack5(), 0);
     }
+
+    #[test]
+    fn prop_quantize_error_bounded() {
+        // property: the HLog projection error never exceeds 20% of the
+        // input magnitude (the worst case sits at x = 5·2^k, mid-gap
+        // between 2^(k+2) and 3·2^(k+1)) — the "quantize→dequantize"
+        // round-trip bound behind the paper's accuracy claims.
+        crate::util::prop::check(200, |rng| {
+            let x = rng.int_in(-255, 255) as i32;
+            let q = hlog_quantize(x);
+            let err = (q - x).abs() as f64;
+            assert!(
+                err <= 0.2 * x.abs() as f64 + 1e-9,
+                "x={x} q={q} err={err}"
+            );
+            // and the projection is idempotent (levels are fixed points;
+            // |x| ≥ 224 rounds up to 256, outside the quantizer's input
+            // domain, so idempotence is checked on in-range outputs)
+            if q.abs() <= 255 {
+                assert_eq!(hlog_quantize(q), q, "x={x} q={q}");
+            }
+        });
+    }
+
+    #[test]
+    fn prop_quantize_monotone_and_odd() {
+        // property: x ≤ y ⇒ Q(x) ≤ Q(y) (monotonicity keeps the PAM's
+        // ranking structure, which is what top-k consumes), and
+        // Q(−x) = −Q(x) (sign symmetry of the shift detector).
+        crate::util::prop::check(200, |rng| {
+            let a = rng.int_in(-255, 255) as i32;
+            let b = rng.int_in(-255, 255) as i32;
+            let (lo, hi) = (a.min(b), a.max(b));
+            assert!(
+                hlog_quantize(lo) <= hlog_quantize(hi),
+                "monotonicity broken at {lo}, {hi}"
+            );
+            assert_eq!(hlog_quantize(-a), -hlog_quantize(a), "odd symmetry at {a}");
+        });
+    }
 }

@@ -1,9 +1,33 @@
-//! PJRT runtime: load AOT-compiled HLO-text artifacts (produced once by
-//! `python/compile/aot.py`) and execute them from the rust request path.
-//! Python never runs at serve time — the interchange is HLO *text*
-//! (xla_extension 0.5.1 rejects jax ≥ 0.5 serialized protos; the text
-//! parser reassigns instruction ids).
+//! Serving runtime: execute the tiny-classifier programs behind a
+//! backend-neutral API (`Executable`, `ArtifactSet`, `Arg`).
+//!
+//! Two backends share the API:
+//!
+//! * [`reference`] (always compiled, default) — a pure-Rust interpreter
+//!   over the trained weights (`model::transformer`), hermetic: no
+//!   system libraries, no network, no python. The dense program is
+//!   exactly `forward_dense`; the masked program applies per-(layer,
+//!   head) SPA masks in attention like the AOT Pallas kernel does.
+//! * `pjrt` (cargo feature `pjrt`) — loads AOT-compiled HLO-text
+//!   artifacts (produced once by `python/compile/aot.py`) and executes
+//!   them through the `xla` crate's PJRT CPU client. Python never runs
+//!   at serve time — the interchange is HLO *text* (xla_extension 0.5.1
+//!   rejects jax ≥ 0.5 serialized protos; the text parser reassigns
+//!   instruction ids). Requires the `xla` dependency (see Cargo.toml).
 
-mod executable;
+pub mod reference;
 
-pub use executable::{Arg, ArtifactSet, Executable};
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+#[cfg(feature = "pjrt")]
+pub use pjrt::{ArtifactSet, Executable};
+
+#[cfg(not(feature = "pjrt"))]
+pub use reference::{ArtifactSet, Executable};
+
+/// Dims + data of one input buffer (shared by both backends).
+pub enum Arg<'a> {
+    F32(&'a [f32], &'a [usize]),
+    I32(&'a [i32], &'a [usize]),
+}

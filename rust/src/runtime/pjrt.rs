@@ -1,20 +1,18 @@
-//! Compiled-executable wrapper over the `xla` crate's PJRT CPU client.
+//! PJRT backend: compiled-executable wrapper over the `xla` crate's
+//! PJRT CPU client. Only compiled under `--features pjrt` (the `xla`
+//! dependency is not in the vendored crate set — see Cargo.toml).
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
+use super::Arg;
+
 /// One compiled HLO artifact, executable with f32/i32 buffers.
 pub struct Executable {
     name: String,
     exe: xla::PjRtLoadedExecutable,
-}
-
-/// Dims + data of one input buffer.
-pub enum Arg<'a> {
-    F32(&'a [f32], &'a [usize]),
-    I32(&'a [i32], &'a [usize]),
 }
 
 impl Executable {

@@ -1,0 +1,274 @@
+//! Pure-Rust runtime backend (the default): interprets the trained tiny
+//! transformer directly from `tiny_weights.bin` behind the same
+//! `Executable` / `ArtifactSet` API the PJRT backend exposes, so the
+//! coordinator, examples and benches run hermetically — no system
+//! libraries, no HLO artifacts, no python.
+//!
+//! Program semantics mirror the AOT artifacts:
+//!
+//! * dense program  — `model::forward_dense` per sequence in the batch;
+//! * masked program — `model::forward_masked`: every row computes its
+//!   own Q under the (replicated) SPA mask, exactly like the Pallas
+//!   `masked_attention` kernel inside the compiled artifact.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::Arg;
+use crate::model::{forward_dense, forward_masked, TinyWeights};
+
+/// Which program an [`Executable`] runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Program {
+    Dense,
+    Masked,
+}
+
+/// One executable program bound to the loaded weights and a batch size.
+pub struct Executable {
+    name: String,
+    program: Program,
+    batch: usize,
+    weights: Arc<TinyWeights>,
+}
+
+impl Executable {
+    fn new(program: Program, batch: usize, weights: Arc<TinyWeights>) -> Self {
+        let kind = match program {
+            Program::Dense => "dense",
+            Program::Masked => "masked",
+        };
+        Self {
+            name: format!("tiny_{kind}_b{batch}"),
+            program,
+            batch,
+            weights,
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn tokens<'a>(&self, args: &'a [Arg<'_>]) -> Result<&'a [i32]> {
+        let l = self.weights.cfg.seq_len;
+        match args.first() {
+            Some(&Arg::I32(data, dims)) => {
+                if *dims != [self.batch, l] {
+                    bail!(
+                        "{}: token dims {dims:?}, compiled for [{}, {l}]",
+                        self.name,
+                        self.batch
+                    );
+                }
+                if data.len() != self.batch * l {
+                    bail!("{}: token buffer length {}", self.name, data.len());
+                }
+                Ok(data)
+            }
+            _ => bail!("{}: first argument must be I32 tokens", self.name),
+        }
+    }
+
+    /// Execute with the given inputs; returns the concatenated f32
+    /// logits, `batch × n_classes` (the same payload the AOT artifacts
+    /// return from their 1-tuple output).
+    pub fn run_f32(&self, args: &[Arg<'_>]) -> Result<Vec<f32>> {
+        let cfg = self.weights.cfg;
+        let l = cfg.seq_len;
+        let toks = self.tokens(args)?;
+        let mut out = Vec::with_capacity(self.batch * cfg.n_classes);
+        match self.program {
+            Program::Dense => {
+                if args.len() != 1 {
+                    bail!("{}: dense program takes exactly one argument", self.name);
+                }
+                for b in 0..self.batch {
+                    out.extend(forward_dense(&self.weights, &toks[b * l..(b + 1) * l]));
+                }
+            }
+            Program::Masked => {
+                let per = cfg.n_layers * cfg.n_heads * l * l;
+                let masks = match args.get(1) {
+                    Some(&Arg::F32(data, dims)) => {
+                        if *dims != [self.batch, cfg.n_layers, cfg.n_heads, l, l] {
+                            bail!(
+                                "{}: mask dims {dims:?}, compiled for [{}, {}, {}, {l}, {l}]",
+                                self.name,
+                                self.batch,
+                                cfg.n_layers,
+                                cfg.n_heads
+                            );
+                        }
+                        if data.len() != self.batch * per {
+                            bail!("{}: mask buffer length {}", self.name, data.len());
+                        }
+                        data
+                    }
+                    _ => bail!("{}: second argument must be F32 masks", self.name),
+                };
+                for b in 0..self.batch {
+                    out.extend(forward_masked(
+                        &self.weights,
+                        &toks[b * l..(b + 1) * l],
+                        &masks[b * per..(b + 1) * per],
+                    ));
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// The reference backend only serves the f32 classifier programs;
+    /// int8 HLog kernels exist only as AOT artifacts (pjrt feature).
+    pub fn run_i32(&self, _args: &[Arg<'_>]) -> Result<Vec<i32>> {
+        bail!(
+            "{}: run_i32 requires the pjrt backend (int8 HLog artifacts)",
+            self.name
+        )
+    }
+}
+
+/// The full artifact set a serving deployment loads at startup — in the
+/// reference backend, the trained weights plus the four programs the
+/// AOT path would have compiled (dense/masked × batch 1/8).
+pub struct ArtifactSet {
+    dir: PathBuf,
+    pub weights: Arc<TinyWeights>,
+    pub dense_b1: Executable,
+    pub dense_b8: Executable,
+    pub masked_b1: Executable,
+    pub masked_b8: Executable,
+}
+
+impl ArtifactSet {
+    /// Load everything in `artifacts/` needed to serve.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let wpath = dir.join("tiny_weights.bin");
+        if !wpath.exists() {
+            bail!(
+                "artifacts missing in {} — run `make artifacts` first",
+                dir.display()
+            );
+        }
+        let weights = Arc::new(TinyWeights::load(&wpath)?);
+        Ok(Self {
+            dense_b1: Executable::new(Program::Dense, 1, weights.clone()),
+            dense_b8: Executable::new(Program::Dense, 8, weights.clone()),
+            masked_b1: Executable::new(Program::Masked, 1, weights.clone()),
+            masked_b8: Executable::new(Program::Masked, 8, weights.clone()),
+            weights,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Pick the dense executable for a batch size (1 or 8).
+    pub fn dense_for_batch(&self, batch: usize) -> Result<&Executable> {
+        match batch {
+            1 => Ok(&self.dense_b1),
+            8 => Ok(&self.dense_b8),
+            other => bail!("no dense artifact for batch {other} (compiled: 1, 8)"),
+        }
+    }
+
+    pub fn masked_for_batch(&self, batch: usize) -> Result<&Executable> {
+        match batch {
+            1 => Ok(&self.masked_b1),
+            8 => Ok(&self.masked_b8),
+            other => bail!("no masked artifact for batch {other} (compiled: 1, 8)"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn artifacts() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn dense_program_matches_host_forward_exactly() {
+        let set = ArtifactSet::load(&artifacts()).unwrap();
+        let mut rng = Xoshiro256pp::new(5);
+        let toks: Vec<i32> = (0..64).map(|_| rng.below(64) as i32).collect();
+        let got = set.dense_b1.run_f32(&[Arg::I32(&toks, &[1, 64])]).unwrap();
+        let want = forward_dense(&set.weights, &toks);
+        assert_eq!(got, want, "reference backend IS the host model");
+        assert_eq!(got.len(), 16);
+    }
+
+    #[test]
+    fn masked_program_full_mask_equals_dense() {
+        let set = ArtifactSet::load(&artifacts()).unwrap();
+        let mut rng = Xoshiro256pp::new(6);
+        let toks: Vec<i32> = (0..64).map(|_| rng.below(64) as i32).collect();
+        let masks = vec![1.0f32; 2 * 4 * 64 * 64];
+        let dense = set.dense_b1.run_f32(&[Arg::I32(&toks, &[1, 64])]).unwrap();
+        let masked = set
+            .masked_b1
+            .run_f32(&[
+                Arg::I32(&toks, &[1, 64]),
+                Arg::F32(&masks, &[1, 2, 4, 64, 64]),
+            ])
+            .unwrap();
+        for (d, m) in dense.iter().zip(&masked) {
+            assert!((d - m).abs() < 1e-3, "dense {d} vs full-mask {m}");
+        }
+    }
+
+    #[test]
+    fn batch8_concatenates_per_sequence_logits() {
+        let set = ArtifactSet::load(&artifacts()).unwrap();
+        let mut rng = Xoshiro256pp::new(7);
+        let seqs: Vec<Vec<i32>> = (0..8)
+            .map(|_| (0..64).map(|_| rng.below(64) as i32).collect())
+            .collect();
+        let flat: Vec<i32> = seqs.iter().flatten().copied().collect();
+        let batched = set.dense_b8.run_f32(&[Arg::I32(&flat, &[8, 64])]).unwrap();
+        assert_eq!(batched.len(), 8 * 16);
+        for (i, s) in seqs.iter().enumerate() {
+            let single = set.dense_b1.run_f32(&[Arg::I32(s, &[1, 64])]).unwrap();
+            assert_eq!(&batched[i * 16..(i + 1) * 16], &single[..]);
+        }
+    }
+
+    #[test]
+    fn batch_selection_errors_are_clear() {
+        let set = ArtifactSet::load(&artifacts()).unwrap();
+        assert!(set.dense_for_batch(8).is_ok());
+        assert!(set.dense_for_batch(3).is_err());
+        assert!(set.masked_for_batch(5).is_err());
+    }
+
+    #[test]
+    fn wrong_shapes_rejected() {
+        let set = ArtifactSet::load(&artifacts()).unwrap();
+        let toks = vec![0i32; 32];
+        assert!(set.dense_b1.run_f32(&[Arg::I32(&toks, &[1, 32])]).is_err());
+        let toks64 = vec![0i32; 64];
+        let short_masks = vec![1.0f32; 64];
+        assert!(set
+            .masked_b1
+            .run_f32(&[
+                Arg::I32(&toks64, &[1, 64]),
+                Arg::F32(&short_masks, &[1, 1, 1, 8, 8]),
+            ])
+            .is_err());
+    }
+
+    #[test]
+    fn run_i32_unsupported_without_pjrt() {
+        let set = ArtifactSet::load(&artifacts()).unwrap();
+        let toks = vec![0i32; 64];
+        assert!(set.dense_b1.run_i32(&[Arg::I32(&toks, &[1, 64])]).is_err());
+    }
+}

@@ -124,6 +124,38 @@ mod tests {
     }
 
     #[test]
+    fn prop_balanced_schedule_within_one_tile_of_ideal() {
+        // load-balancing invariant: under dynamic allocation no PE lane
+        // ends up with more than the ideal mean share plus ONE tile of
+        // work — i.e. balanced cycles ∈ [ideal, ideal + one tile pass]
+        // (plus the fixed pipeline fill), for any per-row work pattern.
+        let hw = hw();
+        let col_pass = 64usize.div_ceil(hw.pe_cols) as u64; // dh = 64
+        let fill = hw.pe_rows as u64 + 8;
+        crate::util::prop::check(60, |rng| {
+            let l = 1 + rng.below(256) as usize;
+            let work: Vec<usize> =
+                (0..l).map(|_| rng.below(33) as usize).collect();
+            let load = ConcatLoad { work: work.clone(), recovered: rng.below(500) };
+            let g = projection_cycles(&hw, &load, 64, true);
+            let total: u64 = work.iter().map(|&w| w as u64).sum();
+            if total == 0 {
+                return;
+            }
+            let ideal = total.div_ceil(hw.pe_rows as u64) * col_pass;
+            let balanced = g.cycles - fill;
+            assert!(balanced >= total / hw.pe_rows as u64 * col_pass, "below ideal");
+            assert!(
+                balanced <= ideal + col_pass,
+                "lane exceeds ideal by more than one tile: {balanced} vs {ideal}"
+            );
+            // and dynamic never loses to static
+            let s = projection_cycles(&hw, &load, 64, false);
+            assert!(g.cycles <= s.cycles, "dynamic {} static {}", g.cycles, s.cycles);
+        });
+    }
+
+    #[test]
     fn recovery_hidden_when_dynamic() {
         let load = ConcatLoad { work: vec![4; 32], recovered: 1000 };
         let d = projection_cycles(&hw(), &load, 64, true);

@@ -106,4 +106,32 @@ mod tests {
         let b = overlap(10, &[20; 4], 1000).progressive;
         assert!(b > a);
     }
+
+    #[test]
+    fn prop_overlap_cycle_counts_well_formed() {
+        // invariants for any schedule: the progressive total is bounded
+        // below by each pipeline alone (overlap can hide work, never
+        // create negative time) and above by the serial schedule, so
+        // speedup ∈ [1, ∞) and no cycle count ever underflows.
+        crate::util::prop::check(100, |rng| {
+            let predict_k = rng.below(10_000);
+            let n_windows = 1 + rng.below(32) as usize;
+            let windows: Vec<u64> =
+                (0..n_windows).map(|_| rng.below(5_000)).collect();
+            let generate = rng.below(1_000_000);
+            let o = overlap(predict_k, &windows, generate);
+            let total_pred: u64 = predict_k + windows.iter().sum::<u64>();
+            assert_eq!(o.serial, total_pred + generate);
+            assert!(o.progressive >= generate, "generation hidden entirely");
+            assert!(
+                o.progressive >= total_pred,
+                "prediction hidden entirely: {} < {total_pred}",
+                o.progressive
+            );
+            assert!(o.progressive <= o.serial, "overlap slower than serial");
+            if o.serial > 0 {
+                assert!(o.speedup() >= 1.0 - 1e-12);
+            }
+        });
+    }
 }

@@ -2,6 +2,8 @@
 //! phase needs, produced by the prediction phase (paper Fig 5a), plus
 //! exact FLOP accounting for dense vs SPLS execution (Figs 1/15).
 
+use rayon::prelude::*;
+
 use crate::config::{ModelConfig, SplsConfig};
 use crate::quant::QuantMethod;
 use crate::spls::mfi::{ffn_plan, FfnPlan};
@@ -55,8 +57,11 @@ fn avg(it: impl Iterator<Item = f64>) -> f64 {
 /// on real activations, or synthetic for the analytic benchmarks.
 pub fn plan_layer(pams: &[MatI], spls: &SplsConfig) -> LayerPlan {
     assert!(!pams.is_empty());
+    // heads are independent — fan out over rayon (§IV-B: per-head
+    // prediction is embarrassingly parallel; order is preserved by the
+    // indexed parallel iterator so plans stay deterministic)
     let heads: Vec<HeadPlan> = pams
-        .iter()
+        .par_iter()
         .map(|pam| {
             let (spa, mask) = sparsify(pam, spls.top_k);
             let sim = local_similarity(&spa, spls.window, spls.sim_threshold);
@@ -76,7 +81,7 @@ pub fn plan_layer_causal(pams: &[MatI], spls: &SplsConfig) -> LayerPlan {
     use crate::spls::causal;
     assert!(!pams.is_empty());
     let heads: Vec<HeadPlan> = pams
-        .iter()
+        .par_iter()
         .map(|pam| {
             let mut p = pam.clone();
             causal::apply_causal_mask(&mut p);
@@ -102,8 +107,8 @@ pub fn plan_layer_from_inputs(
 ) -> LayerPlan {
     assert_eq!(wq_heads.len(), wk_heads.len());
     let pams: Vec<MatI> = wq_heads
-        .iter()
-        .zip(wk_heads)
+        .par_iter()
+        .zip(wk_heads.par_iter())
         .map(|(wq, wk)| match method {
             QuantMethod::Hlog => predict::predict_attention(x, wq, wk),
             other => {

@@ -9,8 +9,14 @@
 //! integer matmul), which in turn matches the python Pallas kernel.
 //! The tests enforce both.
 
+use rayon::prelude::*;
+
 use crate::quant::{hlog_code, requantize_sym8, HlogCode};
 use crate::util::mat::{Mat, MatI};
+
+/// Below this output-element count the rayon fork/join overhead exceeds
+/// the matmul itself — stay single-threaded (empirically ~a 64×64 tile).
+const PAR_THRESHOLD: usize = 64 * 64;
 
 /// One SJA product: sign and up to two power-of-two exponents (the
 /// 9-bit compact output of Fig 12: sign + two 4-bit exponents).
@@ -151,9 +157,11 @@ pub fn predict_matmul(x: &MatI, w: &MatI) -> MatI {
     let qx: Vec<i32> = x.data.iter().map(|&v| hlog_quantize_fast(v)).collect();
     let qw: Vec<i32> = w.data.iter().map(|&v| hlog_quantize_fast(v)).collect();
     let mut out = vec![0i32; m * n];
-    for r in 0..m {
+    if m == 0 || n == 0 || k == 0 {
+        return Mat::from_vec(m, n, out);
+    }
+    let row_kernel = |r: usize, orow: &mut [i32]| {
         let xrow = &qx[r * k..(r + 1) * k];
-        let orow = &mut out[r * n..(r + 1) * n];
         for (kk, &xv) in xrow.iter().enumerate() {
             if xv == 0 {
                 continue;
@@ -162,6 +170,18 @@ pub fn predict_matmul(x: &MatI, w: &MatI) -> MatI {
             for (o, &wv) in orow.iter_mut().zip(wrow) {
                 *o += xv * wv;
             }
+        }
+    };
+    if m * n >= PAR_THRESHOLD && m > 1 {
+        // output rows are disjoint — partition `out` by row across the
+        // rayon pool; per-row accumulation order is unchanged, so the
+        // result is bit-identical to the serial path
+        out.par_chunks_mut(n)
+            .enumerate()
+            .for_each(|(r, orow)| row_kernel(r, orow));
+    } else {
+        for (r, orow) in out.chunks_mut(n).enumerate() {
+            row_kernel(r, orow);
         }
     }
     Mat::from_vec(m, n, out)
@@ -210,8 +230,9 @@ const fn hlog_quantize_const(x: i32) -> i32 {
 ///
 /// Mirrors `ref.predict_attention` in python exactly.
 pub fn predict_attention(x: &MatI, wq: &MatI, wk: &MatI) -> MatI {
-    let q_pred = predict_matmul(x, wq);
-    let k_pred = predict_matmul(x, wk);
+    // Q and K prediction are independent (the hardware runs them through
+    // the same unit back-to-back; the software model forks them)
+    let (q_pred, k_pred) = rayon::join(|| predict_matmul(x, wq), || predict_matmul(x, wk));
     let (q8, _) = requantize_sym8(&q_pred.data);
     let (k8, _) = requantize_sym8(&k_pred.data);
     let q8 = Mat::from_vec(q_pred.rows, q_pred.cols, q8);
@@ -335,6 +356,17 @@ mod tests {
             let w = Mat::from_fn(k, n, |_, _| rng.int_in(-128, 127) as i32);
             assert_eq!(predict_matmul(&x, &w), predict_matmul_faithful(&x, &w));
         }
+    }
+
+    #[test]
+    fn parallel_rows_bit_identical_to_faithful_pipeline() {
+        // a shape large enough (96·96 > PAR_THRESHOLD) to take the rayon
+        // row-partitioned path; must still equal the serial object model
+        let mut rng = Xoshiro256pp::new(53);
+        let x = Mat::from_fn(96, 64, |_, _| rng.int_in(-128, 127) as i32);
+        let w = Mat::from_fn(64, 96, |_, _| rng.int_in(-128, 127) as i32);
+        assert!(x.rows * w.cols >= super::PAR_THRESHOLD);
+        assert_eq!(predict_matmul(&x, &w), predict_matmul_faithful(&x, &w));
     }
 
     #[test]

@@ -126,4 +126,65 @@ mod tests {
             }
         }
     }
+
+    #[test]
+    fn prop_mask_keeps_exactly_k_and_only_top_scores() {
+        // property: each row keeps exactly keep_count entries, and every
+        // kept entry's score is ≥ every dropped entry's score
+        crate::util::prop::check(60, |rng| {
+            let l = 1 + rng.below(32) as usize;
+            let k = rng.f64() as f32;
+            // small value range forces plenty of ties
+            let pam = Mat::from_fn(l, l, |_, _| rng.int_in(-4, 4) as i32);
+            let mask = topk_mask(&pam, k);
+            let keep = keep_count(k, l);
+            for r in 0..l {
+                let kept: Vec<usize> =
+                    (0..l).filter(|&c| mask[(r, c)]).collect();
+                assert_eq!(kept.len(), keep, "row {r} kept {} of {keep}", kept.len());
+                let min_kept = kept.iter().map(|&c| pam[(r, c)]).min().unwrap();
+                let max_dropped = (0..l)
+                    .filter(|&c| !mask[(r, c)])
+                    .map(|c| pam[(r, c)])
+                    .max();
+                if let Some(max_dropped) = max_dropped {
+                    assert!(
+                        min_kept >= max_dropped,
+                        "row {r}: kept {min_kept} < dropped {max_dropped}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_ties_deterministic_toward_lower_column() {
+        // property: the mask is a pure function of the scores (two calls
+        // agree), and among equal scores the lower column index wins —
+        // the stable-ordering contract shared with python's ref.topk_mask
+        crate::util::prop::check(60, |rng| {
+            let l = 2 + rng.below(24) as usize;
+            let k = 0.05 + rng.f64() as f32 * 0.9;
+            let pam = Mat::from_fn(l, l, |_, _| rng.int_in(-3, 3) as i32);
+            let m1 = topk_mask(&pam, k);
+            let m2 = topk_mask(&pam, k);
+            assert_eq!(m1.data, m2.data, "mask not deterministic");
+            for r in 0..l {
+                for c_dropped in 0..l {
+                    if m1[(r, c_dropped)] {
+                        continue;
+                    }
+                    // no kept entry with the same score at a higher column
+                    for c_kept in (c_dropped + 1)..l {
+                        if m1[(r, c_kept)] {
+                            assert!(
+                                pam[(r, c_kept)] > pam[(r, c_dropped)],
+                                "row {r}: tie broke toward higher col {c_kept} over {c_dropped}"
+                            );
+                        }
+                    }
+                }
+            }
+        });
+    }
 }

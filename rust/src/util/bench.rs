@@ -1,0 +1,119 @@
+//! Criterion-style micro-benchmark harness. The criterion crate is not
+//! in this image's vendored crate set, so `benches/*.rs` are plain
+//! `harness = false` binaries driving this zero-dependency shim: the
+//! familiar `Criterion::bench_function(name, |b| b.iter(...))` surface
+//! over `util::stats`'s warmup + sampling + percentile machinery.
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+pub use std::hint::black_box;
+
+/// Harness entry point, mirroring criterion's `Criterion` driver.
+pub struct Criterion {
+    /// Timed samples collected per benchmark.
+    reps: usize,
+    /// Routine invocations amortized into one sample.
+    iters: usize,
+}
+
+impl Default for Criterion {
+    fn default() -> Self {
+        Self { reps: 10, iters: 3 }
+    }
+}
+
+impl Criterion {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Override the sampling plan (criterion's `sample_size` analogue).
+    pub fn sampling(mut self, reps: usize, iters: usize) -> Self {
+        assert!(reps > 0 && iters > 0);
+        self.reps = reps;
+        self.iters = iters;
+        self
+    }
+
+    /// Run one named benchmark; prints a criterion-like report line and
+    /// returns the [`Summary`] so callers can compute speedups.
+    pub fn bench_function(
+        &mut self,
+        name: &str,
+        mut f: impl FnMut(&mut Bencher),
+    ) -> Summary {
+        let mut b = Bencher {
+            reps: self.reps,
+            iters: self.iters,
+            summary: None,
+        };
+        f(&mut b);
+        let s = b
+            .summary
+            .unwrap_or_else(|| panic!("bench {name}: Bencher::iter was never called"));
+        println!(
+            "{name:<44} {:>11.2} µs/iter  (p50 {:>9.2}, p95 {:>9.2}, n={})",
+            s.mean * 1e6,
+            s.p50 * 1e6,
+            s.p95 * 1e6,
+            s.n
+        );
+        s
+    }
+}
+
+/// Per-benchmark timer handle (criterion's `Bencher` analogue).
+pub struct Bencher {
+    reps: usize,
+    iters: usize,
+    summary: Option<Summary>,
+}
+
+impl Bencher {
+    /// Time `routine`: warm up, then collect `reps` samples of `iters`
+    /// amortized invocations each.
+    pub fn iter<T>(&mut self, mut routine: impl FnMut() -> T) {
+        for _ in 0..self.iters.min(3) {
+            black_box(routine());
+        }
+        let samples: Vec<f64> = (0..self.reps)
+            .map(|_| {
+                let t = Instant::now();
+                for _ in 0..self.iters {
+                    black_box(routine());
+                }
+                t.elapsed().as_secs_f64() / self.iters as f64
+            })
+            .collect();
+        self.summary = Some(Summary::of(&samples));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_function_collects_summary() {
+        let mut c = Criterion::new().sampling(4, 2);
+        let mut calls = 0u64;
+        let s = c.bench_function("noop", |b| {
+            b.iter(|| {
+                calls += 1;
+                calls
+            })
+        });
+        assert_eq!(s.n, 4);
+        assert!(s.mean >= 0.0);
+        // warmup (2) + 4 samples × 2 iters
+        assert_eq!(calls, 2 + 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "Bencher::iter was never called")]
+    fn forgetting_iter_panics() {
+        Criterion::new().bench_function("empty", |_b| {});
+    }
+}

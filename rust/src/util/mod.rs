@@ -1,9 +1,28 @@
 //! Shared utilities: the cross-language PRNG, the ESWT tensor
-//! container, matrices, stats for the bench harness, and a tiny
+//! container, matrices, stats + a criterion-style bench harness
+//! (criterion is not in the vendored crate set), and a tiny
 //! property-test driver (this image has no proptest crate).
 
+pub mod bench;
 pub mod eswt;
 pub mod mat;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+
+use std::path::{Path, PathBuf};
+
+/// Resolve the artifact directory for binaries, benches and examples:
+/// `$ESACT_ARTIFACTS` if set, else `./artifacts` if present (running
+/// from `rust/`), else `<crate root>/artifacts` — so `cargo run` /
+/// `cargo bench` work from the workspace root and from `rust/` alike.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("ESACT_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    let local = Path::new("artifacts");
+    if local.is_dir() {
+        return local.to_path_buf();
+    }
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

@@ -1,0 +1,115 @@
+//! Headline-number regression: the paper's central claim is a 52.03%
+//! average computation reduction at the loss ≤ 1% operating point
+//! (Fig 15 / abstract). Pin the reproduction inside a 45–60% corridor
+//! over the synthetic bench26 workload zoo so sparsity changes cannot
+//! silently regress the number, plus the measured-plan variant on
+//! synthetic PAMs through `spls::computation_reduction`.
+
+use esact::config::SplsConfig;
+use esact::spls::{self, LayerPlan};
+use esact::util::mat::MatI;
+use esact::util::rng::Xoshiro256pp;
+use esact::workloads::bench26::{all_benchmarks, zoo_averages};
+
+/// The corridor around the paper's 52.03% headline.
+const LO: f64 = 0.45;
+const HI: f64 = 0.60;
+
+#[test]
+fn zoo_average_reduction_in_paper_corridor() {
+    let benches = all_benchmarks();
+    let (overall, _, _, _) = zoo_averages(&benches);
+    assert!(
+        (LO..=HI).contains(&overall),
+        "zoo average computation reduction {overall:.4} left the 45–60% corridor \
+         (paper: 52.03%)"
+    );
+}
+
+#[test]
+fn per_benchmark_reduction_never_collapses() {
+    // no single workload may fall below 20% or above 90% — per-benchmark
+    // deviations are bounded by construction (bench26::profile)
+    for b in all_benchmarks() {
+        let r = b.overall_reduction();
+        assert!(
+            (0.20..=0.90).contains(&r),
+            "{} {}: reduction {r:.4} out of sane bounds",
+            b.model.name,
+            b.task
+        );
+    }
+}
+
+/// Synthetic PAM shaped like the bench26 encoder workloads, constructed
+/// so the plan outcome mirrors the paper's operating point exactly:
+///
+/// * rows come in identical pairs (2t, 2t+1) → Q sparsity 50% via local
+///   similarity (each 8-row window holds 4 pairs with pairwise-distinct
+///   kept sets, so only true pairs merge);
+/// * pair t's top-16 plateau sits at columns [(t%4)·8, (t%4)·8+16), so
+///   the kept-column union is 40/128 → K/V sparsity 68.75% (paper 69%);
+/// * 64 critical rows × 16 kept / 128² → attention sparsity 93.75%;
+/// * every head votes 2t for token 2t+1 → FFN sparsity 50% (paper 50.33%).
+fn structured_pams(l: usize, h: usize) -> Vec<MatI> {
+    (0..h)
+        .map(|_| {
+            MatI::from_fn(l, l, |r, c| {
+                let start = (r / 2 % 4) * 8;
+                if (start..start + 16).contains(&c) {
+                    100 // the plateau top-k keeps (keep_count(0.12, 128) = 16)
+                } else {
+                    (c % 50) as i32 // filler, strictly below the plateau
+                }
+            })
+        })
+        .collect()
+}
+
+#[test]
+fn measured_plan_reduction_in_paper_corridor() {
+    // run the *actual* plan pipeline (top-k → similarity → MFI) over the
+    // structured PAMs and push the result through the FLOP ledger,
+    // prediction overhead included — lands at ≈49.5% analytically
+    let cfg = esact::config::ModelConfig::new("bench26-synth", 128, 768, 12, 12, 3072, false);
+    let spls_cfg = SplsConfig::default();
+    let pams = structured_pams(cfg.seq_len, cfg.n_heads);
+    let plans: Vec<LayerPlan> = (0..cfg.n_layers)
+        .map(|_| spls::plan_layer(&pams, &spls_cfg))
+        .collect();
+    // the construction's component sparsities must hold exactly
+    let p0 = &plans[0];
+    assert_eq!(p0.q_sparsity(), 0.5, "identical row pairs collapse");
+    assert_eq!(p0.kv_sparsity(), 1.0 - 40.0 / 128.0, "40-column union");
+    assert_eq!(p0.ffn_sparsity(), 0.5, "unanimous MFI votes");
+    let (overall, qkv, attn, ffn) = spls::computation_reduction(&cfg, &plans);
+    assert!(
+        (LO..=HI).contains(&overall),
+        "measured-plan reduction {overall:.4} left the 45–60% corridor \
+         (components: qkv {qkv:.3}, attn {attn:.3}, ffn {ffn:.3})"
+    );
+    // component structure must match the paper's ordering: attention
+    // sparsity dominates (94.65%), FFN and QKV sit near 50–66%
+    assert!(attn > 0.85, "attention reduction {attn:.3}");
+    assert!(attn > qkv && attn > ffn, "attention must dominate");
+}
+
+#[test]
+fn reduction_is_deterministic_across_runs() {
+    // the corridor check is only meaningful if the number is stable —
+    // the parallel per-head planner must not introduce run-to-run drift
+    let cfg = esact::config::ModelConfig::new("det", 64, 256, 4, 4, 1024, false);
+    let random_pams = |seed: u64| -> Vec<MatI> {
+        let mut rng = Xoshiro256pp::new(seed);
+        (0..cfg.n_heads)
+            .map(|_| MatI::from_fn(64, 64, |_, _| rng.int_in(-5000, 5000) as i32))
+            .collect()
+    };
+    let run = || {
+        let plans: Vec<LayerPlan> = (0..cfg.n_layers)
+            .map(|i| spls::plan_layer(&random_pams(7 + i as u64), &SplsConfig::default()))
+            .collect();
+        spls::computation_reduction(&cfg, &plans)
+    };
+    assert_eq!(run(), run());
+}

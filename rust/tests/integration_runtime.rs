@@ -1,6 +1,8 @@
-//! Runtime/serving integration: AOT artifacts vs the host model,
+//! Runtime/serving integration: runtime executables vs the host model,
 //! masked execution vs the host sparse dataflow, serving accuracy, and
-//! failure injection on the artifact path.
+//! failure injection on the artifact path. Runs against whichever
+//! backend is active (`runtime::reference` by default; the PJRT backend
+//! with `--features pjrt`); PJRT-specific tests are feature-gated.
 
 use std::path::{Path, PathBuf};
 use std::sync::mpsc;
@@ -11,7 +13,7 @@ use esact::coordinator::server::Mode;
 use esact::coordinator::{BatchPolicy, Request, Server};
 use esact::model::{self, TestSet, TinyWeights};
 use esact::quant::QuantMethod;
-use esact::runtime::{Arg, ArtifactSet, Executable};
+use esact::runtime::{Arg, ArtifactSet};
 use esact::util::rng::Xoshiro256pp;
 
 fn artifacts() -> PathBuf {
@@ -155,6 +157,7 @@ fn missing_artifact_dir_fails_loudly() {
     assert!(err.to_string().contains("make artifacts"), "{err}");
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn corrupt_hlo_text_fails_at_load_not_at_run() {
     let dir = std::env::temp_dir().join(format!("esact_corrupt_{}", std::process::id()));
@@ -162,7 +165,7 @@ fn corrupt_hlo_text_fails_at_load_not_at_run() {
     let path = dir.join("bad.hlo.txt");
     std::fs::write(&path, "HloModule garbage\nENTRY main { broken }").unwrap();
     let client = xla::PjRtClient::cpu().unwrap();
-    assert!(Executable::load(&client, &path).is_err());
+    assert!(esact::runtime::Executable::load(&client, &path).is_err());
     std::fs::remove_dir_all(&dir).ok();
 }
 
