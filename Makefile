@@ -2,7 +2,7 @@
 
 ARTIFACTS := rust/artifacts
 
-.PHONY: build test bench artifacts clean-artifacts
+.PHONY: build test bench bench-serving bench-gate check-features artifacts clean-artifacts
 
 build:
 	cargo build --release
@@ -12,6 +12,20 @@ test:
 
 bench:
 	cargo bench --bench kernel_micro
+
+# The serving latency-vs-load-vs-replicas surface + BENCH_2.json report.
+# (absolute path: cargo runs the bench with cwd = rust/)
+bench-serving:
+	ESACT_BENCH_JSON=$(CURDIR)/BENCH_2.json cargo bench --bench serving
+
+# What CI's bench-regression job runs after bench-serving.
+bench-gate: bench-serving
+	python3 scripts/bench_gate.py BENCH_2.json bench_baseline.json
+
+# What CI's feature-matrix job runs.
+check-features:
+	cargo check --workspace --no-default-features
+	cargo check --workspace --features pjrt
 
 # Retrain the tiny substrate and export weights + test set for the rust
 # harness (the checked-in artifacts were produced exactly this way).

@@ -1,18 +1,156 @@
-//! Serving-path benchmarks: PJRT executable latency (batch 1 vs 8),
-//! SPLS mask-planning cost, and coordinator throughput dense vs SPLS —
-//! the end-to-end numbers recorded in EXPERIMENTS.md §E2E/§Perf.
+//! Serving-tier benchmarks: executor latency (batch 1 vs 8), SPLS
+//! planning cost cold vs plan-cache hit, and the coordinator's
+//! **latency-vs-load-vs-replicas surface** — saturated throughput
+//! scaling from 1 → 4 replicas under Poisson load, plus open-loop
+//! latency percentiles across offered-load levels. These are the
+//! end-to-end numbers recorded in EXPERIMENTS.md §E2E/§Perf and the
+//! payload of CI's bench-regression gate.
+//!
+//! Set `ESACT_BENCH_JSON=BENCH_2.json` to emit the machine-readable
+//! report (p50/p99 latency, throughput per replica, plan-cache hit
+//! rate) that `scripts/bench_gate.py` compares against the committed
+//! `bench_baseline.json`.
 
+use std::fmt::Write as _;
 use std::sync::mpsc;
 use std::time::Instant;
 
 use esact::config::SplsConfig;
 use esact::coordinator::server::Mode;
-use esact::coordinator::{BatchPolicy, Request, Server};
+use esact::coordinator::{arrivals, Arrival, BatchPolicy, Request, Server};
 use esact::model::{self, TinyWeights};
 use esact::quant::QuantMethod;
 use esact::runtime::{Arg, ArtifactSet};
+use esact::spls::SharedPlanCache;
 use esact::util::rng::Xoshiro256pp;
 use esact::util::stats::bench;
+
+/// One measured cell of the serving surface.
+struct Cell {
+    mode: Mode,
+    replicas: usize,
+    /// Offered Poisson rate; 0.0 marks a pre-loaded (saturated) run.
+    offered_rps: f64,
+    throughput_rps: f64,
+    per_replica_rps: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    cache_hit_rate: f64,
+    steals: usize,
+}
+
+impl Cell {
+    fn of(mode: Mode, offered_rps: f64, m: &esact::coordinator::ServeMetrics) -> Cell {
+        Cell {
+            mode,
+            replicas: m.replicas,
+            offered_rps,
+            throughput_rps: m.throughput_rps(),
+            per_replica_rps: m.throughput_per_replica(),
+            p50_ms: m.p50_latency.as_secs_f64() * 1e3,
+            p99_ms: m.p99_latency.as_secs_f64() * 1e3,
+            cache_hit_rate: m.plan_cache.hit_rate(),
+            steals: m.steals,
+        }
+    }
+
+    fn print(&self) {
+        let mode = if self.mode == Mode::Dense { "dense" } else { "spls" };
+        let offered = if self.offered_rps > 0.0 {
+            format!("{:.0}", self.offered_rps)
+        } else {
+            "sat".to_string()
+        };
+        println!(
+            "  {:<5} x{} @ {:>7} rps offered: {:>7.1} rps ({:>6.1}/replica) | \
+             p50 {:>7.2} ms p99 {:>7.2} ms | cache {:>3.0}% | {} steals",
+            mode,
+            self.replicas,
+            offered,
+            self.throughput_rps,
+            self.per_replica_rps,
+            self.p50_ms,
+            self.p99_ms,
+            self.cache_hit_rate * 100.0,
+            self.steals
+        )
+    }
+
+    fn json(&self) -> String {
+        format!(
+            "{{\"mode\": \"{:?}\", \"replicas\": {}, \"offered_rps\": {:.1}, \
+             \"throughput_rps\": {:.2}, \"throughput_per_replica\": {:.2}, \
+             \"p50_ms\": {:.3}, \"p99_ms\": {:.3}, \"plan_cache_hit_rate\": {:.3}, \
+             \"steals\": {}}}",
+            self.mode,
+            self.replicas,
+            self.offered_rps,
+            self.throughput_rps,
+            self.per_replica_rps,
+            self.p50_ms,
+            self.p99_ms,
+            self.cache_hit_rate,
+            self.steals
+        )
+    }
+}
+
+/// Pool of distinct request sequences; serving replays it round-robin
+/// so the plan cache sees a realistic repeated-shape mix.
+fn request_pool(l: usize, distinct: usize) -> Vec<Vec<i32>> {
+    let mut rng = Xoshiro256pp::new(3);
+    (0..distinct).map(|_| model::synth::gen_example(&mut rng, l).0).collect()
+}
+
+fn requests(pool: &[Vec<i32>], n: usize) -> Vec<Request> {
+    (0..n)
+        .map(|i| Request {
+            id: i as u64,
+            tokens: pool[i % pool.len()].clone(),
+            arrived: Instant::now(),
+        })
+        .collect()
+}
+
+/// Saturated (pre-loaded queue) run: measures peak service capacity.
+fn closed_loop(srv: &Server, mode: Mode, pool: &[Vec<i32>], n: usize, replicas: usize) -> Cell {
+    let (tx, rx) = mpsc::channel();
+    let (rtx, rrx) = mpsc::channel();
+    for r in requests(pool, n) {
+        tx.send(r).unwrap();
+    }
+    drop(tx);
+    let drain = std::thread::spawn(move || rrx.iter().count());
+    let outcome = srv.serve_replicated(rx, rtx, BatchPolicy::default(), replicas).unwrap();
+    assert_eq!(drain.join().unwrap(), n);
+    Cell::of(mode, 0.0, &outcome.metrics)
+}
+
+/// Open-loop Poisson run at `rate` requests/second.
+fn open_loop(srv: &Server, pool: &[Vec<i32>], n: usize, rate: f64, replicas: usize) -> Cell {
+    let (tx, rx) = mpsc::channel();
+    let (rtx, rrx) = mpsc::channel();
+    let reqs = requests(pool, n);
+    let producer = std::thread::spawn(move || {
+        let mut rng = Xoshiro256pp::new(7);
+        let trace = arrivals(&mut rng, Arrival::Poisson { rate }, reqs.len());
+        let start = Instant::now();
+        for (mut r, at) in reqs.into_iter().zip(trace) {
+            if let Some(wait) = at.0.checked_sub(start.elapsed()) {
+                std::thread::sleep(wait);
+            }
+            r.arrived = Instant::now();
+            if tx.send(r).is_err() {
+                break;
+            }
+        }
+    });
+    let drain = std::thread::spawn(move || rrx.iter().count());
+    let outcome = srv.serve_replicated(rx, rtx, BatchPolicy::default(), replicas).unwrap();
+    producer.join().unwrap();
+    drain.join().unwrap();
+    Cell::of(Mode::Spls, rate, &outcome.metrics)
+}
 
 fn main() -> anyhow::Result<()> {
     let dir = esact::util::artifacts_dir();
@@ -20,59 +158,129 @@ fn main() -> anyhow::Result<()> {
     let weights = TinyWeights::load(&dir.join("tiny_weights.bin"))?;
     let mut rng = Xoshiro256pp::new(2);
     let l = weights.cfg.seq_len;
+    let pool = request_pool(l, 16);
 
     // --- raw executable latency -------------------------------------
     let toks1: Vec<i32> = (0..l).map(|_| rng.below(64) as i32).collect();
-    let s = bench(20, 5, || {
-        artifacts
-            .dense_b1
-            .run_f32(&[Arg::I32(&toks1, &[1, l])])
-            .unwrap();
-    });
-    println!("dense_b1 PJRT execute        {:>8.2} ms/seq (p95 {:.2})", s.mean * 1e3, s.p95 * 1e3);
-
-    let toks8: Vec<i32> = (0..8 * l).map(|_| rng.below(64) as i32).collect();
-    let s = bench(20, 5, || {
-        artifacts
-            .dense_b8
-            .run_f32(&[Arg::I32(&toks8, &[8, l])])
-            .unwrap();
+    let s1 = bench(20, 5, || {
+        artifacts.dense_b1.run_f32(&[Arg::I32(&toks1, &[1, l])]).unwrap();
     });
     println!(
-        "dense_b8 PJRT execute        {:>8.2} ms/batch = {:.2} ms/seq",
-        s.mean * 1e3,
-        s.mean * 1e3 / 8.0
+        "dense_b1 execute             {:>8.2} ms/seq (p95 {:.2})",
+        s1.mean * 1e3,
+        s1.p95 * 1e3
     );
 
-    // --- SPLS planning cost (host, per request) ----------------------
+    let toks8: Vec<i32> = (0..8 * l).map(|_| rng.below(64) as i32).collect();
+    let s8 = bench(20, 5, || {
+        artifacts.dense_b8.run_f32(&[Arg::I32(&toks8, &[8, l])]).unwrap();
+    });
+    println!(
+        "dense_b8 execute             {:>8.2} ms/batch = {:.2} ms/seq",
+        s8.mean * 1e3,
+        s8.mean * 1e3 / 8.0
+    );
+
+    // --- SPLS planning: cold vs plan-cache hit -----------------------
     let (tok_seq, _) = model::synth::gen_example(&mut rng, l);
     let spls = SplsConfig::default();
-    let s = bench(10, 3, || {
+    let cold = bench(10, 3, || {
         std::hint::black_box(model::plan_model(&weights, &tok_seq, &spls, QuantMethod::Hlog));
     });
-    println!("SPLS plan_model (2 layers)   {:>8.2} ms/seq", s.mean * 1e3);
+    println!("SPLS plan_model (cold)       {:>8.2} ms/seq", cold.mean * 1e3);
+    let cache = SharedPlanCache::new(64);
+    let n_layers = weights.cfg.n_layers;
+    // populate once, then measure the hit path
+    cache.get_or_compute(&tok_seq, &spls, QuantMethod::Hlog, n_layers, || {
+        model::plan_model(&weights, &tok_seq, &spls, QuantMethod::Hlog)
+    });
+    let hit = bench(10, 3, || {
+        std::hint::black_box(cache.get_or_compute(
+            &tok_seq,
+            &spls,
+            QuantMethod::Hlog,
+            n_layers,
+            || unreachable!("warm cache"),
+        ));
+    });
+    println!(
+        "SPLS plan cache hit          {:>8.2} ms/seq ({:.0}x faster)",
+        hit.mean * 1e3,
+        cold.mean / hit.mean.max(1e-9)
+    );
 
-    // --- coordinator throughput --------------------------------------
+    // --- saturated throughput: 1 → 2 → 4 replicas --------------------
+    println!("\n== saturated throughput vs replicas (closed loop, 64 requests) ==");
+    let mut saturated: Vec<Cell> = Vec::new();
     for mode in [Mode::Dense, Mode::Spls] {
-        let srv = Server::new(&dir, mode, SplsConfig::default())?;
-        let n = 64usize;
-        let (tx, rx) = mpsc::channel();
-        let (rtx, rrx) = mpsc::channel();
-        let mut g = Xoshiro256pp::new(3);
-        for i in 0..n {
-            let (t, _) = model::synth::gen_example(&mut g, l);
-            tx.send(Request { id: i as u64, tokens: t, arrived: Instant::now() })?;
+        for replicas in [1usize, 2, 4] {
+            // fresh server per cell: every cell pays the same cold
+            // plan-cache start
+            let srv = Server::new(&dir, mode, SplsConfig::default())?;
+            let cell = closed_loop(&srv, mode, &pool, 64, replicas);
+            cell.print();
+            saturated.push(cell);
         }
-        drop(tx);
-        let drain = std::thread::spawn(move || rrx.iter().count());
-        let m = srv.serve(rx, rtx, BatchPolicy::default())?;
-        drain.join().unwrap();
-        println!(
-            "serve {mode:?}: {:.0} req/s | mean latency {:.2} ms | {} batches",
-            m.throughput_rps(),
-            m.mean_latency().as_secs_f64() * 1e3,
-            m.batches
+    }
+    let spls_sat: Vec<&Cell> =
+        saturated.iter().filter(|c| c.mode == Mode::Spls).collect();
+    let monotone = spls_sat.windows(2).all(|w| w[1].throughput_rps >= w[0].throughput_rps);
+    println!(
+        "SPLS saturated scaling 1→2→4 replicas: {:.0} → {:.0} → {:.0} rps ({})",
+        spls_sat[0].throughput_rps,
+        spls_sat[1].throughput_rps,
+        spls_sat[2].throughput_rps,
+        if monotone { "monotone ✓" } else { "NOT monotone ✗" }
+    );
+
+    // --- the surface: Poisson offered load × replicas ----------------
+    // calibrate offered rates off the measured single-replica capacity
+    let t1 = spls_sat[0].throughput_rps.max(1.0);
+    println!("\n== latency vs offered load vs replicas (Poisson, SPLS) ==");
+    let mut poisson: Vec<Cell> = Vec::new();
+    for replicas in [1usize, 2, 4] {
+        for load_x in [0.5, 1.5, 8.0] {
+            let rate = t1 * load_x;
+            // bound each cell's wall time to ≈ 2.5 s of offered trace
+            let n = ((rate * 2.5) as usize).clamp(16, 64);
+            let srv = Server::new(&dir, Mode::Spls, SplsConfig::default())?;
+            let cell = open_loop(&srv, &pool, n, rate, replicas);
+            cell.print();
+            poisson.push(cell);
+        }
+    }
+    let sat_poisson: Vec<&Cell> =
+        poisson.iter().filter(|c| (c.offered_rps - t1 * 8.0).abs() < 1e-6).collect();
+    let monotone_poisson =
+        sat_poisson.windows(2).all(|w| w[1].throughput_rps >= w[0].throughput_rps);
+    println!(
+        "SPLS Poisson-saturated scaling 1→2→4 replicas: {:.0} → {:.0} → {:.0} rps ({})",
+        sat_poisson[0].throughput_rps,
+        sat_poisson[1].throughput_rps,
+        sat_poisson[2].throughput_rps,
+        if monotone_poisson { "monotone ✓" } else { "NOT monotone ✗" }
+    );
+
+    // --- machine-readable report for the CI regression gate ----------
+    if let Ok(path) = std::env::var("ESACT_BENCH_JSON") {
+        let mut out = String::from("{\n  \"schema\": 2,\n");
+        let _ = writeln!(
+            out,
+            "  \"executor\": {{\"dense_b1_p50_ms\": {:.3}, \"dense_b8_p50_ms\": {:.3}, \
+             \"plan_model_cold_ms\": {:.3}, \"plan_cache_hit_ms\": {:.4}}},",
+            s1.p50 * 1e3,
+            s8.p50 * 1e3,
+            cold.p50 * 1e3,
+            hit.p50 * 1e3
         );
+        let join = |cells: &[Cell]| {
+            cells.iter().map(Cell::json).collect::<Vec<_>>().join(",\n    ")
+        };
+        let _ = writeln!(out, "  \"saturated\": [\n    {}\n  ],", join(&saturated));
+        let _ = writeln!(out, "  \"poisson\": [\n    {}\n  ]", join(&poisson));
+        out.push_str("}\n");
+        std::fs::write(&path, out)?;
+        println!("\nwrote {path}");
     }
     Ok(())
 }

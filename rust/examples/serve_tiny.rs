@@ -1,11 +1,13 @@
 //! End-to-end serving driver (the repo's E2E validation workload, see
-//! EXPERIMENTS.md §E2E): load the AOT-compiled tiny classifier, serve a
-//! stream of synthetic requests through the coordinator (dynamic
-//! batcher → PJRT executables), in both dense and SPLS modes, and
-//! report accuracy, latency, and throughput.
+//! EXPERIMENTS.md §E2E): load the tiny classifier artifacts, serve a
+//! Poisson stream of test-set requests through the replicated
+//! coordinator (admission → continuous batcher → work-stealing replica
+//! tier → executors), in dense and SPLS modes, and report accuracy,
+//! latency percentiles, throughput per replica, and plan-cache hit
+//! rate.
 //!
 //! ```bash
-//! cargo run --release --example serve_tiny [n_requests]
+//! cargo run --release --example serve_tiny [n_requests] [replicas]
 //! ```
 
 use std::sync::mpsc;
@@ -19,6 +21,7 @@ use esact::util::rng::Xoshiro256pp;
 
 fn main() -> anyhow::Result<()> {
     let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(128);
+    let replicas: usize = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(2);
     let dir = &esact::util::artifacts_dir();
     let set = TestSet::load(&dir.join("tiny_testset.bin"))?;
 
@@ -67,20 +70,37 @@ fn main() -> anyhow::Result<()> {
             (correct, total)
         });
 
-        let metrics = srv.serve(rx, rtx, BatchPolicy::default())?;
+        let outcome = srv.serve_replicated(rx, rtx, BatchPolicy::default(), replicas)?;
         producer.join().unwrap();
         let (correct, total) = collector.join().unwrap();
+        let metrics = outcome.metrics;
 
         println!(
-            "{mode:?}: {total} replies | accuracy {:.4} | {} batches, {} padded | \
-             mean latency {:.2} ms (max {:.2}) | {:.0} req/s",
+            "{mode:?} x{replicas}: {total} replies | accuracy {:.4} | {} batches, {} padded, \
+             {} stolen, {} shed | latency p50 {:.2} ms p99 {:.2} ms (max {:.2}) | \
+             {:.0} req/s ({:.0}/replica) | plan cache {:.0}% hit",
             correct as f64 / total.max(1) as f64,
             metrics.batches,
             metrics.padded_slots,
-            metrics.mean_latency().as_secs_f64() * 1e3,
+            metrics.steals,
+            metrics.shed,
+            metrics.p50_latency.as_secs_f64() * 1e3,
+            metrics.p99_latency.as_secs_f64() * 1e3,
             metrics.max_latency.as_secs_f64() * 1e3,
-            metrics.throughput_rps()
+            metrics.throughput_rps(),
+            metrics.throughput_per_replica(),
+            metrics.plan_cache.hit_rate() * 100.0
         );
+        for r in &outcome.per_replica {
+            println!(
+                "  replica {}: {} batches / {} requests ({} stolen), busy {:.1} ms",
+                r.replica,
+                r.batches,
+                r.requests,
+                r.steals,
+                r.busy.as_secs_f64() * 1e3
+            );
+        }
     }
     Ok(())
 }

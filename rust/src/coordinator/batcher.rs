@@ -3,6 +3,17 @@
 //! against executor efficiency — the standard serving trade-off, with
 //! the artifact-shape constraint that a real single-model deployment
 //! has.
+//!
+//! The leader runs **continuous batching** on top of this queue: a
+//! partially-filled batch stays open (and is refilled by later
+//! arrivals) while every replica is busy — waiting costs nothing then —
+//! and is dispatched eagerly the moment a replica goes idle
+//! ([`Batcher::pop_eager`]), instead of the old fill-or-timeout-only
+//! policy. Admission control ([`Batcher::admit`]) bounds the queue:
+//! the in-process leader stops pulling from the request channel at
+//! `max_queue` (backpressure, lossless), and a frontend without a
+//! bufferable channel sheds at `admit` instead — either way, queued
+//! latency stays bounded under overload.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
@@ -21,13 +32,28 @@ pub struct BatchPolicy {
     /// Preferred (largest compiled) batch size.
     pub max_batch: usize,
     /// How long a request may wait for the batch to fill before being
-    /// dispatched in a smaller (padded) batch.
+    /// dispatched in a smaller (padded) batch even with no idle
+    /// replica.
     pub max_wait: Duration,
+    /// Admission bound on the batcher queue. The serving leader stops
+    /// pulling from the request channel at this depth (backpressure —
+    /// nothing is dropped); `admit` callers without a bufferable
+    /// source shed beyond it (counted in `ServeMetrics::shed`).
+    pub max_queue: usize,
+    /// Continuous batching: dispatch a partial batch immediately when
+    /// an executor replica is idle, instead of holding it until full
+    /// or `max_wait`-stale.
+    pub eager_dispatch: bool,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        Self { max_batch: 8, max_wait: Duration::from_millis(2) }
+        Self {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            max_queue: 4096,
+            eager_dispatch: true,
+        }
     }
 }
 
@@ -56,17 +82,40 @@ impl Batcher {
         Self { policy, queue: VecDeque::new() }
     }
 
+    /// Enqueue unconditionally (tests / trusted internal producers).
     pub fn push(&mut self, req: Request) {
         self.queue.push_back(req);
+    }
+
+    /// Admission-controlled enqueue: `false` means the request was
+    /// shed (queue at `max_queue`) and will never produce a reply.
+    pub fn admit(&mut self, req: Request) -> bool {
+        if self.queue.len() >= self.policy.max_queue {
+            return false;
+        }
+        self.queue.push_back(req);
+        true
     }
 
     pub fn pending(&self) -> usize {
         self.queue.len()
     }
 
+    /// Take up to `max_batch` requests off the queue front, padding a
+    /// partial batch to the nearest compiled shape: 1 stays 1,
+    /// everything else pads up to `max_batch`.
+    fn take_batch(&mut self) -> Batch {
+        let take = self.queue.len().min(self.policy.max_batch);
+        let requests: Vec<Request> = self.queue.drain(..take).collect();
+        let padding =
+            if requests.len() == 1 { 0 } else { self.policy.max_batch - requests.len() };
+        Batch { requests, padding }
+    }
+
     /// Pop the next batch if the policy allows dispatch at `now`:
     /// dispatch when a full batch is ready, or when the oldest request
-    /// has waited past `max_wait` (padding up to the compiled size).
+    /// has waited `max_wait` or longer (boundary inclusive — a request
+    /// exactly at `max_wait` dispatches).
     pub fn pop_ready(&mut self, now: Instant) -> Option<Batch> {
         if self.queue.is_empty() {
             return None;
@@ -76,23 +125,24 @@ impl Batcher {
         if !full && !stale {
             return None;
         }
-        let take = self.queue.len().min(self.policy.max_batch);
-        let requests: Vec<Request> = self.queue.drain(..take).collect();
-        // pad to the nearest compiled shape: 1 stays 1, everything else
-        // pads up to max_batch
-        let padding = if requests.len() == 1 { 0 } else { self.policy.max_batch - requests.len() };
-        Some(Batch { requests, padding })
+        Some(self.take_batch())
+    }
+
+    /// Continuous-batching dispatch: pop whatever is queued *right
+    /// now* (an idle replica makes further waiting pure latency), or
+    /// `None` on an empty queue — an empty dispatch tick is a no-op.
+    pub fn pop_eager(&mut self) -> Option<Batch> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        Some(self.take_batch())
     }
 
     /// Drain everything immediately (shutdown path).
     pub fn drain_all(&mut self) -> Vec<Batch> {
         let mut out = Vec::new();
-        while !self.queue.is_empty() {
-            let take = self.queue.len().min(self.policy.max_batch);
-            let requests: Vec<Request> = self.queue.drain(..take).collect();
-            let padding =
-                if requests.len() == 1 { 0 } else { self.policy.max_batch - requests.len() };
-            out.push(Batch { requests, padding });
+        while let Some(batch) = self.pop_eager() {
+            out.push(batch);
         }
         out
     }
@@ -132,6 +182,62 @@ mod tests {
         assert_eq!(batch.requests.len(), 3);
         assert_eq!(batch.padding, 5);
         assert_eq!(batch.size(), 8);
+    }
+
+    #[test]
+    fn request_waiting_exactly_max_wait_dispatches() {
+        // boundary inclusive: `>=` — a request at exactly max_wait goes
+        let policy = BatchPolicy::default();
+        let mut b = Batcher::new(policy);
+        let t0 = Instant::now();
+        b.push(req(0, t0));
+        b.push(req(1, t0));
+        let just_before = t0 + policy.max_wait - Duration::from_nanos(1);
+        assert!(b.pop_ready(just_before).is_none(), "one ns early must wait");
+        let batch = b.pop_ready(t0 + policy.max_wait).expect("dispatch at the boundary");
+        assert_eq!(batch.requests.len(), 2);
+        assert_eq!(batch.padding, 6);
+    }
+
+    #[test]
+    fn empty_queue_dispatch_tick_is_noop() {
+        let mut b = Batcher::new(BatchPolicy::default());
+        assert!(b.pop_ready(Instant::now()).is_none());
+        assert!(b.pop_eager().is_none());
+        assert!(b.drain_all().is_empty());
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn eager_dispatch_pads_partial_batch_to_compiled_shape() {
+        let mut b = Batcher::new(BatchPolicy::default());
+        let t0 = Instant::now();
+        for i in 0..3 {
+            b.push(req(i, t0));
+        }
+        // an idle replica asks immediately — no max_wait stall
+        let batch = b.pop_eager().expect("eager partial dispatch");
+        assert_eq!(batch.requests.len(), 3);
+        assert_eq!(batch.padding, 5);
+        assert_eq!(batch.size(), 8);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn admission_sheds_beyond_max_queue() {
+        let mut b = Batcher::new(BatchPolicy { max_queue: 2, ..Default::default() });
+        let t0 = Instant::now();
+        assert!(b.admit(req(0, t0)));
+        assert!(b.admit(req(1, t0)));
+        assert!(!b.admit(req(2, t0)), "third request must shed");
+        assert_eq!(b.pending(), 2);
+        // shed request is gone: draining yields only the admitted two
+        let ids: Vec<u64> = b
+            .drain_all()
+            .iter()
+            .flat_map(|x| x.requests.iter().map(|r| r.id))
+            .collect();
+        assert_eq!(ids, vec![0, 1]);
     }
 
     #[test]

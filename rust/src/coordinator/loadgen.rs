@@ -25,6 +25,11 @@ pub enum Arrival {
 pub struct ArrivalAt(pub Duration);
 
 /// Generate `n` arrival offsets for the given process.
+///
+/// `n` counts **requests**, not bursts: a `Bursty` trace truncates its
+/// final burst so the trace holds exactly `n` arrivals, with the first
+/// burst at `t = 0` jitter-free (an exponential gap precedes every
+/// burst *after* the first, not the first itself).
 pub fn arrivals(rng: &mut Xoshiro256pp, process: Arrival, n: usize) -> Vec<ArrivalAt> {
     let mut out = Vec::with_capacity(n);
     let mut t = 0.0f64;
@@ -48,12 +53,14 @@ pub fn arrivals(rng: &mut Xoshiro256pp, process: Arrival, n: usize) -> Vec<Arriv
         }
         Arrival::Bursty { burst, burst_rate } => {
             assert!(burst > 0 && burst_rate > 0.0);
+            // first burst at t = 0, jitter-free; exponential gaps only
+            // between bursts
             while out.len() < n {
-                let u = rng.f64().max(1e-12);
-                t += -u.ln() / burst_rate;
                 for _ in 0..burst.min(n - out.len()) {
                     out.push(ArrivalAt(Duration::from_secs_f64(t)));
                 }
+                let u = rng.f64().max(1e-12);
+                t += -u.ln() / burst_rate;
             }
         }
     }
@@ -138,6 +145,20 @@ mod tests {
             500,
         ));
         assert!(bursty.peak_window > uniform.peak_window);
+    }
+
+    #[test]
+    fn bursty_first_burst_at_zero_and_n_counts_requests() {
+        let mut rng = Xoshiro256pp::new(11);
+        // 21 is not a multiple of 8: the last burst must truncate
+        let trace = arrivals(&mut rng, Arrival::Bursty { burst: 8, burst_rate: 10.0 }, 21);
+        assert_eq!(trace.len(), 21, "n counts requests, not bursts");
+        for a in &trace[..8] {
+            assert_eq!(a.0, Duration::ZERO, "first burst is at t=0, jitter-free");
+        }
+        assert!(trace[8].0 > Duration::ZERO, "second burst is jittered");
+        // truncated final burst still shares one timestamp
+        assert!(trace[16..].iter().all(|a| *a == trace[16]));
     }
 
     #[test]

@@ -1,14 +1,19 @@
-//! L3 serving coordinator: request queue → dynamic batcher → worker
-//! pool executing the AOT-compiled PJRT executables, plus the
+//! L3 serving coordinator: request queue → admission + continuous
+//! batching on the leader → a multi-replica, data-parallel worker tier
+//! (per-replica work-stealing deques, each replica owning its own
+//! executor handle) → replies, with host-side SPLS planning amortized
+//! through the shared plan cache (`spls::plan_cache`). Also the
 //! cluster-level workload partitioner modelling the paper's 125-unit /
 //! 25-cluster deployment (§V-C). Python never runs here.
 
 pub mod batcher;
 pub mod loadgen;
 pub mod partition;
+pub mod replica;
 pub mod server;
 
 pub use batcher::{BatchPolicy, Batcher, Request};
 pub use loadgen::{arrivals, trace_stats, Arrival, TraceStats};
 pub use partition::{partition_workload, ClusterAssignment, WorkItem};
-pub use server::{Mode, Reply, ServeMetrics, Server};
+pub use replica::{ReplicaMetrics, WorkQueue};
+pub use server::{Mode, Reply, ServeMetrics, ServeOutcome, Server};

@@ -1,0 +1,308 @@
+//! The data-parallel worker tier of the serving coordinator: N replica
+//! threads, each owning its own executor handle, pulling dispatched
+//! batches from per-replica deques with work-stealing — the
+//! SpAtten-style amortization of planning decisions across a pipeline
+//! of workers (see DESIGN.md §Serving coordinator).
+//!
+//! std threads + channels + a single `Mutex<_>`/`Condvar` pair (no
+//! tokio / crossbeam-deque in the vendored crate set). Stealing is
+//! coarse-grained — jobs are whole executor batches, milliseconds each
+//! — so one lock around the deques is contention-free in practice.
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::batcher::Batch;
+use crate::coordinator::server::{Reply, ServerCore};
+
+/// One dispatched unit of work: a padded batch bound for an executor.
+pub struct Job {
+    pub batch: Batch,
+}
+
+/// What a replica reports back to the leader after each batch.
+pub enum ReplicaEvent {
+    Done {
+        replica: usize,
+        replies: Vec<Reply>,
+        padding: usize,
+        stolen: bool,
+    },
+    Failed {
+        replica: usize,
+        error: anyhow::Error,
+    },
+}
+
+/// Per-replica execution counters, joined by the leader at shutdown.
+#[derive(Clone, Debug, Default)]
+pub struct ReplicaMetrics {
+    pub replica: usize,
+    pub batches: usize,
+    pub requests: usize,
+    /// Batches this replica stole from a peer's deque.
+    pub steals: usize,
+    /// Wall time spent executing (vs idle/blocked on the queue).
+    pub busy: Duration,
+}
+
+struct QueueState {
+    /// One FIFO deque per replica. The owner pops from the front;
+    /// thieves steal from the back of the longest peer deque.
+    locals: Vec<VecDeque<Job>>,
+    closed: bool,
+}
+
+/// The shared work queue: per-replica deques + leader dispatch.
+pub struct WorkQueue {
+    state: Mutex<QueueState>,
+    available: Condvar,
+}
+
+impl WorkQueue {
+    pub fn new(n_replicas: usize) -> Self {
+        assert!(n_replicas >= 1);
+        Self {
+            state: Mutex::new(QueueState {
+                locals: (0..n_replicas).map(|_| VecDeque::new()).collect(),
+                closed: false,
+            }),
+            available: Condvar::new(),
+        }
+    }
+
+    /// Leader dispatch: append to the shortest deque (ties to the
+    /// lowest replica id, deterministically). Returns the chosen
+    /// replica.
+    pub fn push_least_loaded(&self, job: Job) -> usize {
+        let mut st = self.state.lock().unwrap();
+        let idx = st
+            .locals
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, q)| q.len())
+            .map(|(i, _)| i)
+            .expect("at least one replica");
+        st.locals[idx].push_back(job);
+        drop(st);
+        self.available.notify_all();
+        idx
+    }
+
+    /// Targeted dispatch (tests and pinned workloads).
+    pub fn push_to(&self, replica: usize, job: Job) {
+        let mut st = self.state.lock().unwrap();
+        st.locals[replica].push_back(job);
+        drop(st);
+        self.available.notify_all();
+    }
+
+    /// Worker pop: own deque front first; if empty, steal from the
+    /// back of the longest peer deque. Blocks until a job arrives or
+    /// the queue is closed *and* fully drained (then `None`). The
+    /// returned flag is `true` when the job was stolen.
+    pub fn pop(&self, replica: usize) -> Option<(Job, bool)> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(job) = st.locals[replica].pop_front() {
+                return Some((job, false));
+            }
+            let victim = (0..st.locals.len())
+                .filter(|&i| i != replica)
+                .max_by_key(|&i| st.locals[i].len());
+            if let Some(v) = victim {
+                if let Some(job) = st.locals[v].pop_back() {
+                    return Some((job, true));
+                }
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.available.wait(st).unwrap();
+        }
+    }
+
+    /// Total queued (not yet popped) jobs across all deques.
+    pub fn depth(&self) -> usize {
+        let st = self.state.lock().unwrap();
+        st.locals.iter().map(|q| q.len()).sum()
+    }
+
+    /// Close the queue: workers drain what remains, then exit.
+    /// Idempotent.
+    pub fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        drop(st);
+        self.available.notify_all();
+    }
+}
+
+/// Spawn the replica pool. Each worker grabs its own executor handle
+/// (`ArtifactSet::replica_handle`, falling back to the shared set for
+/// backends that cannot clone executables), then loops: pop → execute
+/// → report. Workers exit when the queue closes or the event channel
+/// hangs up, returning their counters.
+pub(crate) fn spawn_replicas(
+    core: Arc<ServerCore>,
+    queue: Arc<WorkQueue>,
+    events: mpsc::Sender<ReplicaEvent>,
+    n_replicas: usize,
+) -> Vec<JoinHandle<ReplicaMetrics>> {
+    (0..n_replicas)
+        .map(|id| {
+            let core = Arc::clone(&core);
+            let queue = Arc::clone(&queue);
+            let events = events.clone();
+            std::thread::Builder::new()
+                .name(format!("esact-replica-{id}"))
+                .spawn(move || {
+                    let own_handle = core.artifacts().replica_handle().ok();
+                    let mut m = ReplicaMetrics { replica: id, ..Default::default() };
+                    while let Some((job, stolen)) = queue.pop(id) {
+                        m.steals += usize::from(stolen);
+                        let t0 = Instant::now();
+                        let artifacts =
+                            own_handle.as_ref().unwrap_or_else(|| core.artifacts());
+                        // a panic here (bad request shape, poisoned
+                        // planner) must still produce an event, or the
+                        // leader would wait on this batch forever
+                        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                            || {
+                                core.execute_on(
+                                    artifacts,
+                                    &job.batch.requests,
+                                    job.batch.padding,
+                                )
+                            },
+                        ))
+                        .unwrap_or_else(|panic| {
+                            Err(anyhow::anyhow!(
+                                "replica {id} panicked executing a batch: {}",
+                                panic_message(&panic)
+                            ))
+                        });
+                        m.busy += t0.elapsed();
+                        match result {
+                            Ok(replies) => {
+                                m.batches += 1;
+                                m.requests += replies.len();
+                                let ev = ReplicaEvent::Done {
+                                    replica: id,
+                                    replies,
+                                    padding: job.batch.padding,
+                                    stolen,
+                                };
+                                if events.send(ev).is_err() {
+                                    break; // leader gone: shut down
+                                }
+                            }
+                            Err(error) => {
+                                let _ = events
+                                    .send(ReplicaEvent::Failed { replica: id, error });
+                                break;
+                            }
+                        }
+                    }
+                    m
+                })
+                .expect("spawn replica thread")
+        })
+        .collect()
+}
+
+/// Best-effort extraction of a panic payload's message.
+fn panic_message(panic: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = panic.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = panic.downcast_ref::<String>() {
+        s
+    } else {
+        "<non-string panic payload>"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::Request;
+
+    fn job(id: u64) -> Job {
+        let req = Request { id, tokens: vec![0; 8], arrived: Instant::now() };
+        Job { batch: Batch { requests: vec![req], padding: 0 } }
+    }
+
+    fn job_id(j: &Job) -> u64 {
+        j.batch.requests[0].id
+    }
+
+    #[test]
+    fn owner_pops_fifo_without_stealing() {
+        let q = WorkQueue::new(2);
+        q.push_to(0, job(1));
+        q.push_to(0, job(2));
+        let (a, stolen_a) = q.pop(0).unwrap();
+        let (b, stolen_b) = q.pop(0).unwrap();
+        assert_eq!((job_id(&a), stolen_a), (1, false));
+        assert_eq!((job_id(&b), stolen_b), (2, false));
+    }
+
+    #[test]
+    fn idle_replica_steals_from_loaded_peer_back() {
+        let q = WorkQueue::new(2);
+        q.push_to(0, job(1));
+        q.push_to(0, job(2));
+        q.push_to(0, job(3));
+        // replica 1 is empty: it must steal, from the BACK of 0's deque
+        let (s, stolen) = q.pop(1).unwrap();
+        assert!(stolen);
+        assert_eq!(job_id(&s), 3);
+        // owner still sees its front in FIFO order
+        let (a, stolen_a) = q.pop(0).unwrap();
+        assert_eq!((job_id(&a), stolen_a), (1, false));
+        assert_eq!(q.depth(), 1);
+    }
+
+    #[test]
+    fn closed_and_drained_returns_none() {
+        let q = WorkQueue::new(1);
+        q.push_to(0, job(1));
+        q.close();
+        assert!(q.pop(0).is_some(), "drain continues after close");
+        assert!(q.pop(0).is_none(), "then workers exit");
+        q.close(); // idempotent
+    }
+
+    #[test]
+    fn least_loaded_dispatch_balances() {
+        let q = WorkQueue::new(3);
+        let mut chosen = Vec::new();
+        for i in 0..6 {
+            chosen.push(q.push_least_loaded(job(i)));
+        }
+        // deterministic round-robin over equal depths
+        assert_eq!(chosen, vec![0, 1, 2, 0, 1, 2]);
+        assert_eq!(q.depth(), 6);
+    }
+
+    #[test]
+    fn blocked_pop_wakes_on_push_and_on_close() {
+        let q = Arc::new(WorkQueue::new(1));
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || {
+            let first = q2.pop(0).map(|(j, _)| job_id(&j));
+            let second = q2.pop(0).map(|(j, _)| job_id(&j));
+            (first, second)
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        q.push_to(0, job(7));
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        let (first, second) = h.join().unwrap();
+        assert_eq!(first, Some(7));
+        assert_eq!(second, None);
+    }
+}

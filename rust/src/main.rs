@@ -25,7 +25,9 @@ USAGE:
                               (fig1 fig3 fig4 fig6 fig7 fig15 fig16 fig17
                                fig18 fig19 fig20 fig21 table1..table4 | all)
   esact eval [n] [k s f w]    dense vs SPLS accuracy on the test set
-  esact serve [n] [dense|spls] run the serving loop over n synthetic requests
+  esact serve [n] [dense|spls] [replicas]
+                              run the serving loop over n synthetic requests
+                              on a replicated worker tier (default 1)
   esact sim <model> <L>       simulate one model (bert-base|bert-large|gpt2|
                                llama2|bloom|vit16|vit32)
   esact cluster <model> <L> <batch>  simulate the 125-unit deployment
@@ -121,6 +123,7 @@ fn serve(args: &[String]) -> Result<()> {
         Some("spls") => Mode::Spls,
         _ => Mode::Dense,
     };
+    let replicas: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(1);
     let srv = Server::new(&artifact_dir(), mode, SplsConfig::default())?;
     let (tx, rx) = mpsc::channel();
     let (rtx, rrx) = mpsc::channel();
@@ -134,18 +137,35 @@ fn serve(args: &[String]) -> Result<()> {
         }
     });
     let drain = std::thread::spawn(move || rrx.iter().count());
-    let metrics = srv.serve(rx, rtx, BatchPolicy::default())?;
+    let outcome = srv.serve_replicated(rx, rtx, BatchPolicy::default(), replicas)?;
     producer.join().unwrap();
     let replies = drain.join().unwrap();
+    let metrics = outcome.metrics;
     println!(
-        "mode {mode:?}: {replies}/{n} replies | {} batches ({} padded slots) | \
-         mean latency {:.2} ms, max {:.2} ms | {:.1} req/s",
+        "mode {mode:?} x{replicas}: {replies}/{n} replies | {} batches ({} padded, {} stolen, \
+         {} shed) | latency p50 {:.2} ms p99 {:.2} ms max {:.2} ms | {:.1} req/s \
+         ({:.1} per replica) | plan cache {:.0}% hit",
         metrics.batches,
         metrics.padded_slots,
-        metrics.mean_latency().as_secs_f64() * 1e3,
+        metrics.steals,
+        metrics.shed,
+        metrics.p50_latency.as_secs_f64() * 1e3,
+        metrics.p99_latency.as_secs_f64() * 1e3,
         metrics.max_latency.as_secs_f64() * 1e3,
-        metrics.throughput_rps()
+        metrics.throughput_rps(),
+        metrics.throughput_per_replica(),
+        metrics.plan_cache.hit_rate() * 100.0
     );
+    for r in &outcome.per_replica {
+        println!(
+            "  replica {}: {} batches, {} requests, {} steals, {:.1} ms busy",
+            r.replica,
+            r.batches,
+            r.requests,
+            r.steals,
+            r.busy.as_secs_f64() * 1e3
+        );
+    }
     Ok(())
 }
 

@@ -83,10 +83,10 @@ pub fn forward_dense(w: &TinyWeights, tokens: &[i32]) -> Vec<f32> {
 /// Masked forward implementing the AOT masked-artifact semantics on the
 /// host: every attention row computes its own Q, but positions with
 /// `mask == 0` are excluded from the softmax. Fed with SPLS masks whose
-/// similar rows carry their critical row's mask (see
-/// `coordinator::server::masks_for`), this reproduces what the ESACT
-/// dataflow produces after recovery — it is the reference backend's
-/// masked program (`runtime::reference`).
+/// similar rows carry their critical row's mask (built per request,
+/// with plan-cache reuse, by `coordinator::server`), this reproduces
+/// what the ESACT dataflow produces after recovery — it is the
+/// reference backend's masked program (`runtime::reference`).
 ///
 /// `masks` is row-major `[n_layers, n_heads, L, L]`, keep iff `> 0.5`.
 pub fn forward_masked(w: &TinyWeights, tokens: &[i32], masks: &[f32]) -> Vec<f32> {

@@ -108,6 +108,13 @@ impl ArtifactSet {
         &self.dir
     }
 
+    /// The PJRT backend cannot clone compiled executables onto worker
+    /// threads — serving replicas fall back to the shared set (the
+    /// reference backend returns a real per-replica handle here).
+    pub fn replica_handle(&self) -> Result<ArtifactSet> {
+        bail!("pjrt backend cannot clone compiled executables; replicas share the set")
+    }
+
     /// Pick the dense executable for a batch size (1 or 8).
     pub fn dense_for_batch(&self, batch: usize) -> Result<&Executable> {
         match batch {

@@ -27,6 +27,12 @@ enum Program {
 }
 
 /// One executable program bound to the loaded weights and a batch size.
+///
+/// `Clone` is cheap (the weights live behind an `Arc`), and both
+/// `Executable` and [`ArtifactSet`] are `Send + Sync` — the serving
+/// replicas move their own handles across worker threads
+/// (`ArtifactSet::replica_handle`).
+#[derive(Clone)]
 pub struct Executable {
     name: String,
     program: Program,
@@ -134,6 +140,7 @@ impl Executable {
 /// The full artifact set a serving deployment loads at startup — in the
 /// reference backend, the trained weights plus the four programs the
 /// AOT path would have compiled (dense/masked × batch 1/8).
+#[derive(Clone)]
 pub struct ArtifactSet {
     dir: PathBuf,
     pub weights: Arc<TinyWeights>,
@@ -166,6 +173,16 @@ impl ArtifactSet {
 
     pub fn dir(&self) -> &Path {
         &self.dir
+    }
+
+    /// A per-replica executor handle: clones the program table while
+    /// sharing the loaded weights (`Arc`), so a serving replica gets a
+    /// `Send`-able executor of its own without touching the
+    /// filesystem. Always succeeds on this backend; the PJRT backend
+    /// cannot clone compiled executables and returns an error (its
+    /// replicas fall back to the shared set).
+    pub fn replica_handle(&self) -> Result<ArtifactSet> {
+        Ok(self.clone())
     }
 
     /// Pick the dense executable for a batch size (1 or 8).
@@ -263,6 +280,21 @@ mod tests {
                 Arg::F32(&short_masks, &[1, 1, 1, 8, 8]),
             ])
             .is_err());
+    }
+
+    #[test]
+    fn executor_handles_are_send_sync_and_cheap() {
+        fn check<T: Send + Sync>() {}
+        check::<ArtifactSet>();
+        check::<Executable>();
+        let set = ArtifactSet::load(&artifacts()).unwrap();
+        let handle = set.replica_handle().unwrap();
+        // the handle shares the weights allocation (no reload, no copy)
+        assert!(Arc::ptr_eq(&set.weights, &handle.weights));
+        let toks = vec![0i32; 64];
+        let a = set.dense_b1.run_f32(&[Arg::I32(&toks, &[1, 64])]).unwrap();
+        let b = handle.dense_b1.run_f32(&[Arg::I32(&toks, &[1, 64])]).unwrap();
+        assert_eq!(a, b, "handle executes the same programs");
     }
 
     #[test]

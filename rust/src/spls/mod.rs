@@ -8,11 +8,14 @@
 //! 3. [`similarity`] — fixed-window local L1 similarity over the SPA;
 //! 4. [`qkv`] — similarity-based Q and column-based K/V sparsification;
 //! 5. [`mfi`] — Most-Frequent-Index token similarity for the FFN;
-//! 6. [`plan`] — the combined `SparsityPlan` + FLOP accounting.
+//! 6. [`plan`] — the combined `SparsityPlan` + FLOP accounting;
+//! 7. [`plan_cache`] — the serving tier's LRU memo of per-layer plans
+//!    (hits bit-identical to fresh planning).
 
 pub mod causal;
 pub mod mfi;
 pub mod plan;
+pub mod plan_cache;
 pub mod predict;
 pub mod qkv;
 pub mod similarity;
@@ -25,6 +28,7 @@ pub use plan::{
     computation_reduction, dense_layer_flops, dense_model_flops, plan_layer,
     plan_layer_from_inputs, sparse_layer_flops, LayerFlops, LayerPlan,
 };
+pub use plan_cache::{seq_bucket, CacheStats, PlanCache, PlanKey, SharedPlanCache};
 pub use predict::{predict_attention, predict_matmul, predict_matmul_faithful, SjaProduct};
 pub use qkv::{recover_rows, HeadPlan};
 pub use similarity::{local_similarity, ratio_windows_similar, SimilarityMap};

@@ -14,7 +14,7 @@ use crate::spls::topk::sparsify;
 use crate::util::mat::{Mat, MatI};
 
 /// Plan for one transformer layer.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct LayerPlan {
     pub heads: Vec<HeadPlan>,
     pub ffn: FfnPlan,

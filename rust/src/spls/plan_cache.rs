@@ -1,0 +1,410 @@
+//! SPLS plan cache for the serving tier: memoize `plan_model` results
+//! so repeated request shapes skip host-side planning entirely — the
+//! planner is the per-batch bottleneck once the executors are fast
+//! (the serving-systems analogue of AccelTran's amortized
+//! dynamic-sparsity scheduling across parallel compute units).
+//!
+//! Entries are keyed per **(seq-len bucket, quant method, layer)** plus
+//! a fingerprint of the token sequence and the SPLS hyperparameters
+//! (plans depend on activations, so the tokens are part of the
+//! identity; the bucket keys let a deployment bound per-shape
+//! residency). Eviction is LRU. A hit returns a clone of the exact
+//! `LayerPlan` the planner produced, so cached plans are **bit-identical**
+//! to freshly computed ones — asserted by `coordinator::server` tests.
+//!
+//! `PlanCache` is single-threaded; [`SharedPlanCache`] wraps it in
+//! `Arc<Mutex<..>>` for the replica pool (std sync only — no tokio in
+//! the vendored crate set, see DESIGN.md §Environment). Lookups and
+//! inserts hold the lock; planning itself never does.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::config::SplsConfig;
+use crate::quant::QuantMethod;
+use crate::spls::plan::LayerPlan;
+
+/// Default entry capacity of a serving deployment's plan cache
+/// (per-layer entries; 256 ≈ 128 distinct sequences on the 2-layer
+/// tiny substrate).
+pub const DEFAULT_CAPACITY: usize = 256;
+
+/// Cache identity of one layer's plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    /// Sequence-length bucket (next power of two, ≥ 8) — groups
+    /// same-shape requests the way the compiled artifacts do.
+    pub bucket: usize,
+    /// Prediction quantizer the plan was computed with.
+    pub method: QuantMethod,
+    /// Layer index within the model.
+    pub layer: usize,
+    /// FNV-1a fingerprint of the token ids + SPLS hyperparameters.
+    fingerprint: u64,
+}
+
+/// Bucket a sequence length like the artifact shapes do: next power of
+/// two, clamped below at 8.
+pub fn seq_bucket(len: usize) -> usize {
+    len.max(8).next_power_of_two()
+}
+
+/// FNV-1a over the token ids and the SPLS operating point. Collisions
+/// are guarded by an exact token comparison on lookup, so a collision
+/// can cause a spurious miss-style recompute but never a wrong plan.
+fn fingerprint(tokens: &[i32], spls: &SplsConfig) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |v: u64| {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    };
+    for &t in tokens {
+        eat(t as u32 as u64);
+    }
+    eat(spls.top_k.to_bits() as u64);
+    eat(spls.sim_threshold.to_bits() as u64);
+    eat(spls.ffn_threshold as u64);
+    eat(spls.window as u64);
+    h
+}
+
+struct Entry {
+    /// Exact tokens (collision guard for the 64-bit fingerprint) —
+    /// shared across a model's per-layer entries, not duplicated.
+    tokens: Arc<[i32]>,
+    spls: SplsConfig,
+    plan: LayerPlan,
+    /// Monotonic recency stamp (larger = more recent).
+    tick: u64,
+}
+
+/// Aggregate cache counters, snapshot into `ServeMetrics`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CacheStats {
+    /// Whole-model lookups fully served from cache.
+    pub hits: usize,
+    /// Whole-model lookups that fell through to the planner.
+    pub misses: usize,
+    /// Per-layer entries evicted by LRU.
+    pub evictions: usize,
+    /// Live per-layer entries.
+    pub entries: usize,
+    /// Configured per-layer entry capacity.
+    pub capacity: usize,
+}
+
+impl CacheStats {
+    /// Hit fraction over all whole-model lookups (0 when cold).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// LRU cache of per-layer SPLS plans.
+pub struct PlanCache {
+    map: HashMap<PlanKey, Entry>,
+    capacity: usize,
+    tick: u64,
+    hits: usize,
+    misses: usize,
+    evictions: usize,
+}
+
+impl PlanCache {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1, "plan cache needs at least one slot");
+        Self {
+            map: HashMap::with_capacity(capacity.min(4096)),
+            capacity,
+            tick: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    /// Look up one layer's plan under a precomputed fingerprint;
+    /// refreshes recency on hit. Does not touch the hit/miss counters
+    /// (those count whole-model lookups).
+    fn get_layer_fp(
+        &mut self,
+        tokens: &[i32],
+        spls: &SplsConfig,
+        method: QuantMethod,
+        layer: usize,
+        fp: u64,
+    ) -> Option<LayerPlan> {
+        let key = PlanKey { bucket: seq_bucket(tokens.len()), method, layer, fingerprint: fp };
+        self.tick += 1;
+        let tick = self.tick;
+        let entry = self.map.get_mut(&key)?;
+        if entry.tokens.as_ref() != tokens || entry.spls != *spls {
+            return None; // fingerprint collision: treat as a miss
+        }
+        entry.tick = tick;
+        Some(entry.plan.clone())
+    }
+
+    /// Look up one layer's plan; refreshes recency on hit.
+    pub fn get_layer(
+        &mut self,
+        tokens: &[i32],
+        spls: &SplsConfig,
+        method: QuantMethod,
+        layer: usize,
+    ) -> Option<LayerPlan> {
+        let fp = fingerprint(tokens, spls);
+        self.get_layer_fp(tokens, spls, method, layer, fp)
+    }
+
+    /// Insert one layer's plan under a precomputed fingerprint,
+    /// evicting the least-recently-used entry when at capacity.
+    fn put_layer_fp(
+        &mut self,
+        tokens: Arc<[i32]>,
+        spls: &SplsConfig,
+        method: QuantMethod,
+        layer: usize,
+        fp: u64,
+        plan: LayerPlan,
+    ) {
+        let key = PlanKey { bucket: seq_bucket(tokens.len()), method, layer, fingerprint: fp };
+        self.tick += 1;
+        if self.map.len() >= self.capacity && !self.map.contains_key(&key) {
+            if let Some(lru) = self
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.tick)
+                .map(|(k, _)| *k)
+            {
+                self.map.remove(&lru);
+                self.evictions += 1;
+            }
+        }
+        self.map.insert(key, Entry { tokens, spls: *spls, plan, tick: self.tick });
+    }
+
+    /// Insert one layer's plan.
+    pub fn put_layer(
+        &mut self,
+        tokens: &[i32],
+        spls: &SplsConfig,
+        method: QuantMethod,
+        layer: usize,
+        plan: LayerPlan,
+    ) {
+        let fp = fingerprint(tokens, spls);
+        self.put_layer_fp(tokens.to_vec().into(), spls, method, layer, fp, plan);
+    }
+
+    /// Whole-model lookup: every layer must hit, else the lookup is a
+    /// miss (partial residency is not useful — `plan_model` recomputes
+    /// all layers anyway, since each layer's plan rides on the previous
+    /// layers' activations). The fingerprint is computed once for all
+    /// layers — the serving replicas serialize on this cache's mutex,
+    /// so lookups stay cheap.
+    pub fn get_model(
+        &mut self,
+        tokens: &[i32],
+        spls: &SplsConfig,
+        method: QuantMethod,
+        n_layers: usize,
+    ) -> Option<Vec<LayerPlan>> {
+        let fp = fingerprint(tokens, spls);
+        let mut plans = Vec::with_capacity(n_layers);
+        for layer in 0..n_layers {
+            match self.get_layer_fp(tokens, spls, method, layer, fp) {
+                Some(p) => plans.push(p),
+                None => {
+                    self.misses += 1;
+                    return None;
+                }
+            }
+        }
+        self.hits += 1;
+        Some(plans)
+    }
+
+    /// Insert a whole model's plans: one entry per layer, all sharing
+    /// one token allocation and one fingerprint computation.
+    pub fn put_model(
+        &mut self,
+        tokens: &[i32],
+        spls: &SplsConfig,
+        method: QuantMethod,
+        plans: &[LayerPlan],
+    ) {
+        let fp = fingerprint(tokens, spls);
+        let shared: Arc<[i32]> = tokens.to_vec().into();
+        for (layer, plan) in plans.iter().enumerate() {
+            self.put_layer_fp(Arc::clone(&shared), spls, method, layer, fp, plan.clone());
+        }
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits,
+            misses: self.misses,
+            evictions: self.evictions,
+            entries: self.map.len(),
+            capacity: self.capacity,
+        }
+    }
+}
+
+/// Thread-safe plan cache handle shared by all serving replicas.
+#[derive(Clone)]
+pub struct SharedPlanCache(Arc<Mutex<PlanCache>>);
+
+impl SharedPlanCache {
+    pub fn new(capacity: usize) -> Self {
+        Self(Arc::new(Mutex::new(PlanCache::new(capacity))))
+    }
+
+    /// Serve the plans from cache, or run `compute` (outside the lock)
+    /// and insert the result. Two replicas racing on the same cold key
+    /// both compute — plans are deterministic, so the duplicate insert
+    /// is idempotent and still bit-identical.
+    pub fn get_or_compute(
+        &self,
+        tokens: &[i32],
+        spls: &SplsConfig,
+        method: QuantMethod,
+        n_layers: usize,
+        compute: impl FnOnce() -> Vec<LayerPlan>,
+    ) -> Vec<LayerPlan> {
+        if let Some(plans) = self
+            .0
+            .lock()
+            .unwrap()
+            .get_model(tokens, spls, method, n_layers)
+        {
+            return plans;
+        }
+        let plans = compute();
+        self.0
+            .lock()
+            .unwrap()
+            .put_model(tokens, spls, method, &plans);
+        plans
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.0.lock().unwrap().stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spls::plan::plan_layer;
+    use crate::util::mat::MatI;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn synth_plan(seed: u64) -> LayerPlan {
+        let mut rng = Xoshiro256pp::new(seed);
+        let pams: Vec<MatI> = (0..2)
+            .map(|_| {
+                MatI::from_fn(16, 16, |r, c| {
+                    ((r * 7 + c * 3) % 31) as i32 + rng.int_in(-1, 1) as i32
+                })
+            })
+            .collect();
+        plan_layer(&pams, &SplsConfig::default())
+    }
+
+    fn toks(seed: u64, l: usize) -> Vec<i32> {
+        let mut rng = Xoshiro256pp::new(seed);
+        (0..l).map(|_| rng.below(64) as i32).collect()
+    }
+
+    #[test]
+    fn bucket_is_next_power_of_two_min_8() {
+        assert_eq!(seq_bucket(1), 8);
+        assert_eq!(seq_bucket(8), 8);
+        assert_eq!(seq_bucket(9), 16);
+        assert_eq!(seq_bucket(64), 64);
+        assert_eq!(seq_bucket(65), 128);
+    }
+
+    #[test]
+    fn hit_returns_equal_plan_and_counts() {
+        let mut cache = PlanCache::new(8);
+        let spls = SplsConfig::default();
+        let t = toks(1, 64);
+        let plans = vec![synth_plan(1), synth_plan(2)];
+        assert!(cache.get_model(&t, &spls, QuantMethod::Hlog, 2).is_none());
+        cache.put_model(&t, &spls, QuantMethod::Hlog, &plans);
+        let got = cache.get_model(&t, &spls, QuantMethod::Hlog, 2).expect("hit");
+        assert_eq!(got, plans, "cached plans must be bit-identical");
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 2));
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn distinct_tokens_methods_and_spls_do_not_alias() {
+        let mut cache = PlanCache::new(32);
+        let spls = SplsConfig::default();
+        let t1 = toks(1, 64);
+        let t2 = toks(2, 64);
+        cache.put_model(&t1, &spls, QuantMethod::Hlog, &[synth_plan(1)]);
+        assert!(cache.get_model(&t2, &spls, QuantMethod::Hlog, 1).is_none());
+        assert!(cache.get_model(&t1, &spls, QuantMethod::Pot, 1).is_none());
+        let other = SplsConfig { top_k: 0.5, ..spls };
+        assert!(cache.get_model(&t1, &other, QuantMethod::Hlog, 1).is_none());
+        assert!(cache.get_model(&t1, &spls, QuantMethod::Hlog, 1).is_some());
+    }
+
+    #[test]
+    fn lru_evicts_oldest_entry_first() {
+        let mut cache = PlanCache::new(2);
+        let spls = SplsConfig::default();
+        let (a, b, c) = (toks(1, 16), toks(2, 16), toks(3, 16));
+        cache.put_model(&a, &spls, QuantMethod::Hlog, &[synth_plan(1)]);
+        cache.put_model(&b, &spls, QuantMethod::Hlog, &[synth_plan(2)]);
+        // touch a so b becomes LRU
+        assert!(cache.get_model(&a, &spls, QuantMethod::Hlog, 1).is_some());
+        cache.put_model(&c, &spls, QuantMethod::Hlog, &[synth_plan(3)]);
+        assert!(cache.get_model(&b, &spls, QuantMethod::Hlog, 1).is_none(), "b evicted");
+        assert!(cache.get_model(&a, &spls, QuantMethod::Hlog, 1).is_some(), "a retained");
+        let s = cache.stats();
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.entries, 2);
+    }
+
+    #[test]
+    fn partial_residency_is_a_miss() {
+        let mut cache = PlanCache::new(8);
+        let spls = SplsConfig::default();
+        let t = toks(4, 32);
+        cache.put_layer(&t, &spls, QuantMethod::Hlog, 0, synth_plan(1));
+        // layer 1 missing -> whole-model lookup misses
+        assert!(cache.get_model(&t, &spls, QuantMethod::Hlog, 2).is_none());
+    }
+
+    #[test]
+    fn shared_cache_computes_once_then_hits() {
+        let cache = SharedPlanCache::new(16);
+        let spls = SplsConfig::default();
+        let t = toks(5, 64);
+        let plans = vec![synth_plan(9), synth_plan(10)];
+        let computed = plans.clone();
+        let first =
+            cache.get_or_compute(&t, &spls, QuantMethod::Hlog, 2, move || computed);
+        assert_eq!(first, plans);
+        let second = cache.get_or_compute(&t, &spls, QuantMethod::Hlog, 2, || {
+            panic!("second lookup must be served from cache")
+        });
+        assert_eq!(second, plans, "hit is bit-identical to the computed plans");
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+    }
+}

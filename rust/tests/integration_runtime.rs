@@ -144,6 +144,56 @@ fn serving_accuracy_matches_offline_eval() {
     );
 }
 
+#[test]
+fn replicated_spls_serving_is_bit_stable_across_replica_counts() {
+    // logits depend only on the request's tokens (per-sequence
+    // execution + per-request SPLS planning), so replica count and
+    // batch composition must not change a single bit of any reply —
+    // and the plan cache must serve the repeated wave.
+    let dir = artifacts();
+    let set = TestSet::load(&dir.join("tiny_testset.bin")).unwrap();
+    let srv = Server::new(&dir, Mode::Spls, SplsConfig::default()).unwrap();
+    let n = 8usize;
+    let run = |n_replicas: usize| {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (rtx, rrx) = mpsc::channel();
+        for i in 0..n {
+            tx.send(Request {
+                id: i as u64,
+                tokens: set.tokens[i].clone(),
+                arrived: Instant::now(),
+            })
+            .unwrap();
+        }
+        drop(tx);
+        let collector = std::thread::spawn(move || {
+            let mut replies: Vec<esact::coordinator::Reply> = rrx.iter().collect();
+            replies.sort_by_key(|r| r.id);
+            replies
+        });
+        let outcome = srv
+            .serve_replicated(rx, rtx, BatchPolicy::default(), n_replicas)
+            .unwrap();
+        (outcome, collector.join().unwrap())
+    };
+    let (one, replies_one) = run(1);
+    let (two, replies_two) = run(2);
+    assert_eq!(one.metrics.requests, n);
+    assert_eq!(two.metrics.requests, n);
+    assert_eq!(two.per_replica.len(), 2);
+    assert_eq!(replies_one.len(), n);
+    for (a, b) in replies_one.iter().zip(&replies_two) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.logits, b.logits, "replica count changed served logits");
+    }
+    // the second run replays the same 16 sequences: plan cache serves it
+    assert!(
+        two.metrics.plan_cache.hits >= n,
+        "expected ≥ {n} plan-cache hits, got {:?}",
+        two.metrics.plan_cache
+    );
+}
+
 // ---------------------------------------------------------------------
 // failure injection
 // ---------------------------------------------------------------------
@@ -157,7 +207,7 @@ fn missing_artifact_dir_fails_loudly() {
     assert!(err.to_string().contains("make artifacts"), "{err}");
 }
 
-#[cfg(feature = "pjrt")]
+#[cfg(feature = "pjrt-xla")]
 #[test]
 fn corrupt_hlo_text_fails_at_load_not_at_run() {
     let dir = std::env::temp_dir().join(format!("esact_corrupt_{}", std::process::id()));
