@@ -2,7 +2,7 @@
 
 ARTIFACTS := rust/artifacts
 
-.PHONY: build test bench bench-serving bench-gate check-features artifacts clean-artifacts
+.PHONY: build test bench bench-serving bench-decode bench-gate check-features artifacts clean-artifacts
 
 build:
 	cargo build --release
@@ -18,9 +18,14 @@ bench:
 bench-serving:
 	ESACT_BENCH_JSON=$(CURDIR)/BENCH_2.json cargo bench --bench serving
 
-# What CI's bench-regression job runs after bench-serving.
-bench-gate: bench-serving
+# Decode tokens/sec vs prefix vs KV budget + BENCH_3.json report.
+bench-decode:
+	ESACT_BENCH_JSON=$(CURDIR)/BENCH_3.json cargo bench --bench decode
+
+# What CI's bench-regression job runs after the benches.
+bench-gate: bench-serving bench-decode
 	python3 scripts/bench_gate.py BENCH_2.json bench_baseline.json
+	python3 scripts/bench_gate.py BENCH_3.json bench_baseline.json
 
 # What CI's feature-matrix job runs.
 check-features:

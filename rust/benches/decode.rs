@@ -1,0 +1,199 @@
+//! Decode-tier benchmarks: tokens/sec vs prefix length vs KV budget,
+//! dense-cache vs evicting-cache, plus the step-plan-cache replay
+//! speedup. Emits the machine-readable `BENCH_3.json` report (set
+//! `ESACT_BENCH_JSON`) that `scripts/bench_gate.py` gates against the
+//! committed `bench_baseline.json`: absolute tokens/sec floors per
+//! cell, and the headline check that evicting-cache decode beats
+//! dense-cache decode at prefix ≥ 64.
+
+use std::fmt::Write as _;
+use std::sync::Arc;
+use std::time::Instant;
+
+use esact::config::SplsConfig;
+use esact::decode::{DecodeConfig, DecodeEngine, DecodeMode, GenSession, Sampling};
+use esact::model::{self, TinyWeights};
+use esact::spls::SharedPlanCache;
+use esact::util::rng::Xoshiro256pp;
+
+const NEW_TOKENS: usize = 32;
+const REPS: usize = 3;
+
+struct Cell {
+    label: &'static str,
+    prefix: usize,
+    /// 0 encodes "unbounded" in the report.
+    kv_budget: usize,
+    tokens_per_sec: f64,
+    ms_per_token: f64,
+}
+
+impl Cell {
+    fn print(&self) {
+        println!(
+            "  {:<6} prefix {:>3} budget {:>3}: {:>8.0} tok/s ({:.3} ms/token)",
+            self.label,
+            self.prefix,
+            if self.kv_budget == 0 { "∞".to_string() } else { self.kv_budget.to_string() },
+            self.tokens_per_sec,
+            self.ms_per_token
+        );
+    }
+
+    fn json(&self) -> String {
+        format!(
+            "{{\"mode\": \"{}\", \"prefix\": {}, \"kv_budget\": {}, \
+             \"tokens_per_sec\": {:.2}, \"ms_per_token\": {:.4}}}",
+            self.label, self.prefix, self.kv_budget, self.tokens_per_sec, self.ms_per_token
+        )
+    }
+}
+
+fn prompt_for(base: &[i32], prefix: usize) -> Vec<i32> {
+    (0..prefix).map(|i| base[i % base.len()]).collect()
+}
+
+/// Best-of-REPS generation throughput: prefill `prefix` prompt tokens,
+/// then time `NEW_TOKENS` greedy decode steps.
+fn run_cell(
+    engine: &Arc<DecodeEngine>,
+    base: &[i32],
+    label: &'static str,
+    mode: DecodeMode,
+    budget: usize,
+    prefix: usize,
+    cache: Option<&SharedPlanCache>,
+) -> Cell {
+    let mut best = 0.0f64;
+    for _ in 0..REPS {
+        let cfg = DecodeConfig { mode, kv_budget: budget, recent: 4, spls: SplsConfig::default() };
+        let mut s = GenSession::new(
+            Arc::clone(engine),
+            cfg,
+            prompt_for(base, prefix),
+            NEW_TOKENS,
+            Sampling::Greedy,
+        );
+        if let Some(c) = cache {
+            s = s.with_plan_cache(c.clone());
+        }
+        let consumed = s.run_steps(prefix); // prefill only
+        assert!(consumed.is_empty(), "prefill slice must not generate");
+        let t0 = Instant::now();
+        let out = s.run_steps(NEW_TOKENS + 1);
+        let dt = t0.elapsed().as_secs_f64();
+        assert_eq!(out.len(), NEW_TOKENS);
+        best = best.max(NEW_TOKENS as f64 / dt.max(1e-12));
+    }
+    Cell {
+        label,
+        prefix,
+        kv_budget: if budget == usize::MAX { 0 } else { budget },
+        tokens_per_sec: best,
+        ms_per_token: 1e3 / best.max(1e-12),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = esact::util::artifacts_dir();
+    let weights = Arc::new(TinyWeights::load(&dir.join("tiny_weights.bin"))?);
+    let engine = Arc::new(DecodeEngine::new(weights));
+    let mut rng = Xoshiro256pp::new(11);
+    let (base, _) = model::synth::gen_example(&mut rng, 64);
+
+    // --- dense-cache vs evicting-cache across prefix lengths ---------
+    println!("== decode throughput: dense cache vs evicting cache (32 new tokens) ==");
+    let mut decode_cells: Vec<Cell> = Vec::new();
+    let mut versus: Vec<(usize, f64, f64)> = Vec::new();
+    for prefix in [16usize, 64, 96] {
+        let dense =
+            run_cell(&engine, &base, "dense", DecodeMode::Dense, usize::MAX, prefix, None);
+        let evict = run_cell(&engine, &base, "evict", DecodeMode::Spls, 32, prefix, None);
+        dense.print();
+        evict.print();
+        versus.push((prefix, dense.tokens_per_sec, evict.tokens_per_sec));
+        decode_cells.push(dense);
+        decode_cells.push(evict);
+    }
+    for &(prefix, d, e) in &versus {
+        let verdict = if e > d { "evict wins ✓" } else { "dense wins ✗" };
+        println!(
+            "  prefix {prefix:>3}: evict/dense = {:.2}x  ({verdict})",
+            e / d.max(1e-12)
+        );
+    }
+
+    // --- KV-budget sweep at prefix 64 --------------------------------
+    println!("\n== evicting-cache budget sweep (prefix 64) ==");
+    let mut sweep_cells: Vec<Cell> = Vec::new();
+    for budget in [16usize, 32, 48] {
+        let cell = run_cell(&engine, &base, "evict", DecodeMode::Spls, budget, 64, None);
+        cell.print();
+        sweep_cells.push(cell);
+    }
+
+    // --- step-plan-cache replay --------------------------------------
+    println!("\n== step-plan-cache replay (prefix 64, budget 32) ==");
+    let cache = SharedPlanCache::new(1024);
+    let timed_session = |cache: &SharedPlanCache| -> f64 {
+        let cfg = DecodeConfig {
+            mode: DecodeMode::Spls,
+            kv_budget: 32,
+            recent: 4,
+            spls: SplsConfig::default(),
+        };
+        let mut s = GenSession::new(
+            Arc::clone(&engine),
+            cfg,
+            prompt_for(&base, 64),
+            NEW_TOKENS,
+            Sampling::Greedy,
+        )
+        .with_plan_cache(cache.clone());
+        s.run_steps(64);
+        let t0 = Instant::now();
+        let out = s.run_steps(NEW_TOKENS + 1);
+        assert_eq!(out.len(), NEW_TOKENS);
+        NEW_TOKENS as f64 / t0.elapsed().as_secs_f64().max(1e-12)
+    };
+    let cold_tps = timed_session(&cache); // populates the step cache
+    let warm_tps = timed_session(&cache); // replays it
+    println!(
+        "  cold {:>8.0} tok/s → warm {:>8.0} tok/s ({:.2}x) | step cache {:.0}% hit",
+        cold_tps,
+        warm_tps,
+        warm_tps / cold_tps.max(1e-12),
+        cache.stats().step_hit_rate() * 100.0
+    );
+
+    // --- machine-readable report for the CI regression gate ----------
+    if let Ok(path) = std::env::var("ESACT_BENCH_JSON") {
+        let join =
+            |cells: &[Cell]| cells.iter().map(Cell::json).collect::<Vec<_>>().join(",\n    ");
+        let mut out = String::from("{\n  \"schema\": 3,\n");
+        let _ = writeln!(out, "  \"decode\": [\n    {}\n  ],", join(&decode_cells));
+        let _ = writeln!(out, "  \"budget_sweep\": [\n    {}\n  ],", join(&sweep_cells));
+        let vs = versus
+            .iter()
+            .map(|&(prefix, d, e)| {
+                format!(
+                    "{{\"prefix\": {prefix}, \"dense_tps\": {d:.2}, \"evict_tps\": {e:.2}, \
+                     \"speedup\": {:.4}}}",
+                    e / d.max(1e-12)
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(",\n    ");
+        let _ = writeln!(out, "  \"evict_vs_dense\": [\n    {vs}\n  ],");
+        let _ = writeln!(
+            out,
+            "  \"plan_replay\": {{\"cold_tps\": {cold_tps:.2}, \"warm_tps\": {warm_tps:.2}, \
+             \"step_hit_rate\": {:.3}}}",
+            cache.stats().step_hit_rate()
+        );
+        out.push_str("}\n");
+        std::fs::write(&path, out)?;
+        println!("\nwrote {path}");
+    }
+    Ok(())
+}

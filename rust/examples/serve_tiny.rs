@@ -7,7 +7,9 @@
 //! rate.
 //!
 //! ```bash
-//! cargo run --release --example serve_tiny [n_requests] [replicas]
+//! cargo run --release --example serve_tiny [n_requests] [replicas] [gen]
+//! # third arg "gen" additionally streams a generation workload through
+//! # Server::serve_generate (continuous decode batching, SPLS eviction)
 //! ```
 
 use std::sync::mpsc;
@@ -15,13 +17,15 @@ use std::time::Instant;
 
 use esact::config::SplsConfig;
 use esact::coordinator::server::Mode;
-use esact::coordinator::{BatchPolicy, Request, Server};
+use esact::coordinator::{BatchPolicy, GenRequest, Request, Server};
+use esact::decode::{DecodeConfig, DecodeMode, Sampling};
 use esact::model::{self, TestSet};
 use esact::util::rng::Xoshiro256pp;
 
 fn main() -> anyhow::Result<()> {
     let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(128);
     let replicas: usize = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(2);
+    let with_gen = std::env::args().nth(3).is_some_and(|s| s == "gen");
     let dir = &esact::util::artifacts_dir();
     let set = TestSet::load(&dir.join("tiny_testset.bin"))?;
 
@@ -101,6 +105,55 @@ fn main() -> anyhow::Result<()> {
                 r.busy.as_secs_f64() * 1e3
             );
         }
+    }
+
+    if with_gen {
+        // generation workload: test-set prompts streamed through the
+        // decode tier with SPLS-scored KV eviction
+        let sessions = (n / 8).clamp(2, 16);
+        let max_new = 16usize;
+        let srv = Server::new(dir, Mode::Spls, SplsConfig::default())?;
+        let decode = DecodeConfig {
+            mode: DecodeMode::Spls,
+            kv_budget: 24,
+            recent: 4,
+            spls: SplsConfig::default(),
+        };
+        let (tx, rx) = mpsc::channel();
+        let (ctx, crx) = mpsc::channel();
+        for i in 0..sessions {
+            tx.send(GenRequest {
+                id: i as u64,
+                prompt: set.tokens[i % set.len()][..24].to_vec(),
+                max_new,
+                sampling: Sampling::TopK { k: 4, temperature: 1.0, seed: i as u64 },
+                arrived: Instant::now(),
+            })?;
+        }
+        drop(tx);
+        let drain = std::thread::spawn(move || {
+            let (mut chunks, mut tokens) = (0usize, 0usize);
+            for c in crx.iter() {
+                chunks += 1;
+                tokens += c.tokens.len();
+            }
+            (chunks, tokens)
+        });
+        let outcome = srv.serve_generate(rx, ctx, decode, replicas, 6)?;
+        let (chunks, tokens) = drain.join().unwrap();
+        let m = outcome.metrics;
+        println!(
+            "generate x{replicas}: {} sessions, {tokens} tokens in {chunks} chunks | \
+             {:.0} tok/s | {} slices ({} stolen) | session p50 {:.1} ms p99 {:.1} ms | \
+             step cache {:.0}% hit",
+            m.sessions,
+            m.tokens_per_sec(),
+            m.slices,
+            m.steals,
+            m.p50_session.as_secs_f64() * 1e3,
+            m.p99_session.as_secs_f64() * 1e3,
+            m.plan_cache.step_hit_rate() * 100.0
+        );
     }
     Ok(())
 }

@@ -16,4 +16,7 @@ pub use batcher::{BatchPolicy, Batcher, Request};
 pub use loadgen::{arrivals, trace_stats, Arrival, TraceStats};
 pub use partition::{partition_workload, ClusterAssignment, WorkItem};
 pub use replica::{ReplicaMetrics, WorkQueue};
-pub use server::{Mode, Reply, ServeMetrics, ServeOutcome, Server};
+pub use server::{
+    GenChunk, GenRequest, GenTask, GenerateMetrics, GenerateOutcome, Mode, Reply, ServeMetrics,
+    ServeOutcome, Server,
+};

@@ -22,6 +22,7 @@ use anyhow::Result;
 use crate::config::SplsConfig;
 use crate::coordinator::batcher::{BatchPolicy, Batcher, Request};
 use crate::coordinator::replica::{self, Job, ReplicaEvent, ReplicaMetrics, WorkQueue};
+use crate::decode::{DecodeConfig, DecodeEngine, DecodeMode, GenSession, Sampling};
 use crate::model::{plan_model, TinyWeights};
 use crate::quant::QuantMethod;
 use crate::runtime::{Arg, ArtifactSet};
@@ -92,6 +93,68 @@ pub struct Reply {
     pub latency: Duration,
 }
 
+/// One streaming generation request.
+#[derive(Clone, Debug)]
+pub struct GenRequest {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+    pub sampling: Sampling,
+    pub arrived: Instant,
+}
+
+/// One streamed chunk of a generation: the tokens produced by the
+/// latest decode slice (possibly empty while the prompt prefills) and
+/// whether the session finished.
+#[derive(Clone, Debug)]
+pub struct GenChunk {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub done: bool,
+}
+
+/// A generation session in flight on the replica tier.
+pub struct GenTask {
+    pub id: u64,
+    pub arrived: Instant,
+    pub session: GenSession,
+}
+
+/// Aggregate metrics of one `serve_generate` run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GenerateMetrics {
+    pub sessions: usize,
+    /// Tokens generated across all sessions.
+    pub tokens: usize,
+    /// Decode slices dispatched (continuous-batching granularity).
+    pub slices: usize,
+    /// Slices executed by a replica other than the dispatch target.
+    pub steals: usize,
+    pub wall: Duration,
+    pub replicas: usize,
+    pub p50_session: Duration,
+    pub p99_session: Duration,
+    /// Plan-cache counters (step hits/misses live here too).
+    pub plan_cache: CacheStats,
+}
+
+impl GenerateMetrics {
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.wall.is_zero() {
+            0.0
+        } else {
+            self.tokens as f64 / self.wall.as_secs_f64()
+        }
+    }
+}
+
+/// A generate run's outcome: aggregates plus per-replica counters.
+#[derive(Debug)]
+pub struct GenerateOutcome {
+    pub metrics: GenerateMetrics,
+    pub per_replica: Vec<ReplicaMetrics>,
+}
+
 /// Execution mode of the serve path.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Mode {
@@ -107,16 +170,23 @@ pub enum Mode {
 /// leader and every worker see the same state.
 pub(crate) struct ServerCore {
     artifacts: ArtifactSet,
-    weights: TinyWeights,
+    weights: Arc<TinyWeights>,
     spls: SplsConfig,
     mode: Mode,
     n_classes: usize,
     cache: SharedPlanCache,
+    /// Shared decode engine (per-head weight slices + prediction
+    /// weights) for `serve_generate` sessions.
+    engine: Arc<DecodeEngine>,
 }
 
 impl ServerCore {
     pub(crate) fn artifacts(&self) -> &ArtifactSet {
         &self.artifacts
+    }
+
+    pub(crate) fn engine(&self) -> &Arc<DecodeEngine> {
+        &self.engine
     }
 
     /// Plan one request's SPLS masks, serving repeated shapes from the
@@ -233,7 +303,8 @@ impl Server {
         cache_capacity: usize,
     ) -> Result<Self> {
         let artifacts = ArtifactSet::load(artifact_dir)?;
-        let weights = TinyWeights::load(&artifact_dir.join("tiny_weights.bin"))?;
+        let weights = Arc::new(TinyWeights::load(&artifact_dir.join("tiny_weights.bin"))?);
+        let engine = Arc::new(DecodeEngine::new(Arc::clone(&weights)));
         Ok(Self {
             seq_len: weights.cfg.seq_len,
             core: Arc::new(ServerCore {
@@ -243,6 +314,7 @@ impl Server {
                 spls,
                 mode,
                 cache: SharedPlanCache::new(cache_capacity),
+                engine,
             }),
         })
     }
@@ -382,7 +454,7 @@ impl Server {
                 match batch {
                     Some(batch) => {
                         st.in_flight += 1;
-                        queue.push_least_loaded(Job { batch });
+                        queue.push_least_loaded(Job::Classify(batch));
                     }
                     None => break,
                 }
@@ -419,6 +491,147 @@ impl Server {
         metrics.plan_cache = self.core.cache.stats();
         Ok(ServeOutcome { metrics, per_replica })
     }
+
+    /// Serve a stream of generation requests across `n_replicas`
+    /// replicas with **continuous batching of decode steps**: every
+    /// session is dispatched as slices of `steps_per_slice` decode
+    /// steps onto the same work-stealing deques the classify path uses;
+    /// after each slice the leader streams the fresh tokens to
+    /// `replies` (one [`GenChunk`] per slice) and requeues the session,
+    /// so many sessions interleave across few replicas and new arrivals
+    /// start decoding immediately instead of waiting for a whole
+    /// generation to finish. In `Spls` mode every session shares the
+    /// server's plan cache (decode-bucket step plans).
+    pub fn serve_generate(
+        &self,
+        requests: mpsc::Receiver<GenRequest>,
+        replies: mpsc::Sender<GenChunk>,
+        decode: DecodeConfig,
+        n_replicas: usize,
+        steps_per_slice: usize,
+    ) -> Result<GenerateOutcome> {
+        assert!(n_replicas >= 1, "need at least one replica");
+        let slice = steps_per_slice.max(1);
+        let queue = Arc::new(WorkQueue::new(n_replicas));
+        let (etx, erx) = mpsc::channel();
+        let workers =
+            replica::spawn_replicas(Arc::clone(&self.core), Arc::clone(&queue), etx, n_replicas);
+        let start = Instant::now();
+        let tick = Duration::from_micros(200);
+        let mut st = GenLeader {
+            metrics: GenerateMetrics { replicas: n_replicas, ..Default::default() },
+            session_latencies: Vec::new(),
+            in_flight: 0,
+            first_error: None,
+            slice,
+        };
+        let mut open = true;
+        // admission bound: cap live sessions (each owns KV/predictor
+        // buffers) and leave the excess buffered in the channel —
+        // backpressure, not loss, mirroring the classify leader's
+        // max_queue invariant
+        let max_active = 8 * n_replicas;
+        loop {
+            // 1. admit up to the session bound from the channel; every
+            //    admitted session becomes a dispatchable decode slice
+            //    immediately (work stealing balances the deques)
+            if open {
+                while st.in_flight < max_active {
+                    match requests.try_recv() {
+                        Ok(r) => self.admit_generate(r, decode, &queue, &replies, &mut st),
+                        Err(mpsc::TryRecvError::Empty) => break,
+                        Err(mpsc::TryRecvError::Disconnected) => {
+                            open = false;
+                            break;
+                        }
+                    }
+                }
+            }
+            // 2. block on whichever side can make progress
+            if st.in_flight > 0 {
+                match erx.recv_timeout(tick) {
+                    Ok(ev) => st.absorb(ev, &replies, &queue),
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        st.first_error = Some(anyhow::anyhow!(
+                            "all replicas exited with {} decode slices in flight",
+                            st.in_flight
+                        ));
+                    }
+                }
+                while let Ok(ev) = erx.try_recv() {
+                    st.absorb(ev, &replies, &queue);
+                }
+            } else if open {
+                match requests.recv_timeout(tick) {
+                    Ok(r) => self.admit_generate(r, decode, &queue, &replies, &mut st),
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(mpsc::RecvTimeoutError::Disconnected) => open = false,
+                }
+            } else {
+                break; // input closed, nothing in flight
+            }
+            if st.first_error.is_some() {
+                break;
+            }
+        }
+        queue.close();
+        let per_replica: Vec<ReplicaMetrics> = workers
+            .into_iter()
+            .map(|h| h.join().expect("replica thread panicked"))
+            .collect();
+        while let Ok(ev) = erx.try_recv() {
+            st.absorb(ev, &replies, &queue);
+        }
+        if let Some(err) = st.first_error.take() {
+            return Err(err);
+        }
+        let GenLeader { mut metrics, mut session_latencies, .. } = st;
+        if !session_latencies.is_empty() {
+            session_latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            metrics.p50_session =
+                Duration::from_secs_f64(stats::percentile(&session_latencies, 0.50));
+            metrics.p99_session =
+                Duration::from_secs_f64(stats::percentile(&session_latencies, 0.99));
+        }
+        metrics.wall = start.elapsed();
+        metrics.plan_cache = self.core.cache.stats();
+        Ok(GenerateOutcome { metrics, per_replica })
+    }
+
+    /// Build a session for one generation request and dispatch its
+    /// first decode slice. A degenerate request (empty prompt) is
+    /// rejected with an immediate empty `done` chunk instead of
+    /// panicking the leader (`GenSession::new` asserts on it).
+    fn admit_generate(
+        &self,
+        req: GenRequest,
+        decode: DecodeConfig,
+        queue: &WorkQueue,
+        replies: &mpsc::Sender<GenChunk>,
+        st: &mut GenLeader,
+    ) {
+        if req.prompt.is_empty() {
+            let _ = replies.send(GenChunk { id: req.id, tokens: Vec::new(), done: true });
+            return;
+        }
+        let mut session = GenSession::new(
+            Arc::clone(self.core.engine()),
+            decode,
+            req.prompt,
+            req.max_new,
+            req.sampling,
+        );
+        if decode.mode == DecodeMode::Spls {
+            session = session.with_plan_cache(self.core.cache.clone());
+        }
+        st.metrics.sessions += 1;
+        st.in_flight += 1;
+        queue.push_least_loaded(Job::Decode {
+            task: Box::new(GenTask { id: req.id, arrived: req.arrived, session }),
+            steps: st.slice,
+        });
+    }
 }
 
 /// The leader's running aggregates over replica completion events.
@@ -447,6 +660,48 @@ impl LeaderState {
                     let _ = out.send(reply);
                 }
             }
+            // the classify leader never dispatches decode jobs; absorb
+            // defensively so a stray event cannot wedge the loop
+            ReplicaEvent::DecodeDone { .. } => {}
+            ReplicaEvent::Failed { error, .. } => {
+                if self.first_error.is_none() {
+                    self.first_error = Some(error);
+                }
+            }
+        }
+    }
+}
+
+/// The generate leader's running state over decode-slice completions.
+struct GenLeader {
+    metrics: GenerateMetrics,
+    session_latencies: Vec<f64>,
+    in_flight: usize,
+    first_error: Option<anyhow::Error>,
+    slice: usize,
+}
+
+impl GenLeader {
+    /// Fold one replica event in: stream the chunk out, requeue the
+    /// session if it has steps left.
+    fn absorb(&mut self, ev: ReplicaEvent, out: &mpsc::Sender<GenChunk>, queue: &WorkQueue) {
+        self.in_flight = self.in_flight.saturating_sub(1);
+        match ev {
+            ReplicaEvent::DecodeDone { task, fresh, stolen, .. } => {
+                self.metrics.slices += 1;
+                self.metrics.steals += usize::from(stolen);
+                self.metrics.tokens += fresh.len();
+                let done = task.session.done();
+                // receiver may have hung up at shutdown; fine
+                let _ = out.send(GenChunk { id: task.id, tokens: fresh, done });
+                if done {
+                    self.session_latencies.push(task.arrived.elapsed().as_secs_f64());
+                } else {
+                    self.in_flight += 1;
+                    queue.push_least_loaded(Job::Decode { task, steps: self.slice });
+                }
+            }
+            ReplicaEvent::Done { .. } => {} // generate never dispatches classify jobs
             ReplicaEvent::Failed { error, .. } => {
                 if self.first_error.is_none() {
                     self.first_error = Some(error);
@@ -636,6 +891,156 @@ mod tests {
         assert_eq!(metrics.requests, 32, "no request may be dropped: {metrics:?}");
         assert_eq!(metrics.shed, 0);
         assert_eq!(rrx.iter().count(), 32);
+    }
+
+    fn gen_prompts(n: usize, l: usize) -> Vec<Vec<i32>> {
+        let mut rng = Xoshiro256pp::new(77);
+        (0..n).map(|_| crate::model::synth::gen_example(&mut rng, l).0).collect()
+    }
+
+    #[test]
+    fn serve_generate_streams_every_session_to_completion() {
+        use crate::decode::{generate, DecodeConfig, DecodeEngine, Sampling};
+        let srv = Server::new(&artifacts_dir(), Mode::Dense, SplsConfig::default()).unwrap();
+        let prompts = gen_prompts(5, 16);
+        let max_new = 12usize;
+        // offline reference: each session decoded alone (sessions are
+        // independent, so replication must not change any stream)
+        let w = TinyWeights::load(&artifacts_dir().join("tiny_weights.bin")).unwrap();
+        let eng = std::sync::Arc::new(DecodeEngine::new(std::sync::Arc::new(w)));
+        let want: Vec<Vec<i32>> = prompts
+            .iter()
+            .map(|p| {
+                generate(&eng, DecodeConfig::default(), p, max_new, Sampling::Greedy, |_, _| {})
+                    .tokens
+            })
+            .collect();
+
+        let (tx, rx) = mpsc::channel();
+        let (ctx, crx) = mpsc::channel();
+        for (i, p) in prompts.iter().enumerate() {
+            tx.send(GenRequest {
+                id: i as u64,
+                prompt: p.clone(),
+                max_new,
+                sampling: Sampling::Greedy,
+                arrived: Instant::now(),
+            })
+            .unwrap();
+        }
+        drop(tx);
+        let drain = std::thread::spawn(move || {
+            let mut streams: Vec<Vec<i32>> = vec![Vec::new(); 5];
+            let mut done = vec![false; 5];
+            for chunk in crx.iter() {
+                streams[chunk.id as usize].extend(&chunk.tokens);
+                if chunk.done {
+                    done[chunk.id as usize] = true;
+                }
+            }
+            (streams, done)
+        });
+        let outcome = srv
+            .serve_generate(rx, ctx, DecodeConfig::default(), 2, 4)
+            .unwrap();
+        let (streams, done) = drain.join().unwrap();
+        assert!(done.iter().all(|&d| d), "every session must report done");
+        for (got, want) in streams.iter().zip(&want) {
+            assert_eq!(got, want, "replicated decode changed a stream");
+        }
+        let m = outcome.metrics;
+        assert_eq!(m.sessions, 5);
+        assert_eq!(m.tokens, 5 * max_new);
+        assert_eq!(m.replicas, 2);
+        assert!(m.slices >= 5, "sessions must be sliced, not run whole");
+        assert!(m.tokens_per_sec() > 0.0);
+        let executed: usize = outcome.per_replica.iter().map(|r| r.tokens).sum();
+        assert_eq!(executed, 5 * max_new);
+    }
+
+    #[test]
+    fn serve_generate_rejects_empty_prompt_without_panicking() {
+        use crate::decode::{DecodeConfig, Sampling};
+        let srv = Server::new(&artifacts_dir(), Mode::Dense, SplsConfig::default()).unwrap();
+        let good = gen_prompts(1, 12).remove(0);
+        let (tx, rx) = mpsc::channel();
+        let (ctx, crx) = mpsc::channel();
+        for (id, prompt) in [(0u64, Vec::new()), (1u64, good)] {
+            tx.send(GenRequest {
+                id,
+                prompt,
+                max_new: 4,
+                sampling: Sampling::Greedy,
+                arrived: Instant::now(),
+            })
+            .unwrap();
+        }
+        drop(tx);
+        let drain = std::thread::spawn(move || {
+            let mut per_id: std::collections::HashMap<u64, (usize, bool)> = Default::default();
+            for c in crx.iter() {
+                let e = per_id.entry(c.id).or_default();
+                e.0 += c.tokens.len();
+                e.1 |= c.done;
+            }
+            per_id
+        });
+        let outcome = srv.serve_generate(rx, ctx, DecodeConfig::default(), 1, 4).unwrap();
+        let per_id = drain.join().unwrap();
+        assert_eq!(per_id[&0], (0, true), "empty prompt → immediate empty done chunk");
+        assert_eq!(per_id[&1], (4, true), "valid session unaffected");
+        assert_eq!(outcome.metrics.sessions, 1, "rejected request is not a session");
+        assert_eq!(outcome.metrics.tokens, 4);
+    }
+
+    #[test]
+    fn serve_generate_spls_sessions_share_the_step_plan_cache() {
+        use crate::decode::{DecodeConfig, DecodeMode, Sampling};
+        let srv = Server::new(&artifacts_dir(), Mode::Spls, SplsConfig::default()).unwrap();
+        let prompt = gen_prompts(1, 16).remove(0);
+        let decode = DecodeConfig {
+            mode: DecodeMode::Spls,
+            kv_budget: 16,
+            recent: 4,
+            spls: SplsConfig::default(),
+        };
+        let run = |ids: std::ops::Range<u64>| {
+            let (tx, rx) = mpsc::channel();
+            let (ctx, crx) = mpsc::channel();
+            for id in ids {
+                tx.send(GenRequest {
+                    id,
+                    prompt: prompt.clone(),
+                    max_new: 8,
+                    sampling: Sampling::Greedy,
+                    arrived: Instant::now(),
+                })
+                .unwrap();
+            }
+            drop(tx);
+            let drain = std::thread::spawn(move || {
+                let mut per_id: std::collections::HashMap<u64, Vec<i32>> = Default::default();
+                for chunk in crx.iter() {
+                    per_id.entry(chunk.id).or_default().extend(&chunk.tokens);
+                }
+                per_id
+            });
+            let out = srv.serve_generate(rx, ctx, decode, 2, 4).unwrap();
+            (out, drain.join().unwrap())
+        };
+        let (first, streams1) = run(0..1);
+        assert!(first.metrics.plan_cache.step_misses > 0, "cold run computes step plans");
+        let (second, streams2) = run(1..3);
+        assert!(
+            second.metrics.plan_cache.step_hits > first.metrics.plan_cache.step_hits,
+            "replayed prefixes must hit the step cache: {:?}",
+            second.metrics.plan_cache
+        );
+        // identical prompt + greedy sampling → identical streams, with
+        // or without cache hits
+        let a = &streams1[&0];
+        assert_eq!(a, &streams2[&1]);
+        assert_eq!(a, &streams2[&2]);
     }
 
     #[test]

@@ -1,0 +1,263 @@
+//! Step-wise SPLS for autoregressive decode: predict the **new query
+//! row's** sparsity against the cached prefix, in O(prefix) per step
+//! instead of re-planning the whole O(prefix²) PAM.
+//!
+//! Per head the predictor keeps an int8 cache of *predicted* K rows
+//! (HLog bit-level prediction, requantized per row) alongside the f32
+//! KV cache. Each step:
+//!
+//! 1. predict the new token's K row through the bit-level unit
+//!    (`spls::predict::predict_matmul`) and append it — fixed O(D·Dh);
+//! 2. predict the new Q row the same way, then the attention row
+//!    `q₈ · K₈ᵀ` over the cached slots — O(prefix·Dh), the only part
+//!    that scales with the prefix;
+//! 3. compare the predicted row to the **previous step's row** over the
+//!    shared prefix (normalized L1, exactly the paper's local-similarity
+//!    metric applied temporally): a similar step reuses the previous
+//!    keep-mask — and the decode engine reuses the previous attention
+//!    *output* (recovery by replication, the paper's Q-row skipping
+//!    along the time axis);
+//! 4. otherwise rank the row top-k (diagonal always kept) to build the
+//!    step's keep-mask.
+//!
+//! The full per-step decision is packaged as a [`StepPlan`] so the
+//! serving tier can memoize it in `spls::plan_cache` (decode buckets):
+//! replaying a prefix serves every step's planning from cache.
+
+use crate::config::SplsConfig;
+use crate::quant::requantize_sym8;
+use crate::spls::predict::predict_matmul;
+use crate::spls::similarity::l1_norm_dist;
+use crate::util::mat::MatI;
+
+/// One head's decision for one decode step. Self-contained: applying it
+/// to a fresh predictor reproduces the exact post-step state, which is
+/// what makes cached step plans bit-equivalent to computed ones.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HeadStepPlan {
+    /// Predicted attention row (int32 PAM row) over the cached slots.
+    pub row: Vec<i32>,
+    /// Keep-mask over the cached slots (same length as `row`).
+    pub keep: Vec<bool>,
+    /// The requantized predicted K row appended this step (Dh values).
+    pub k8: Vec<i32>,
+    /// Whether this step reused the previous step's mask (and the
+    /// engine reuses the previous attention output).
+    pub similar: bool,
+}
+
+/// All heads of one layer for one step.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LayerStepPlan {
+    pub heads: Vec<HeadStepPlan>,
+}
+
+/// One decode step's full plan (all layers), the plan-cache payload.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StepPlan {
+    pub layers: Vec<LayerStepPlan>,
+}
+
+/// Per-head incremental prediction state.
+#[derive(Clone, Debug)]
+pub struct HeadPredictor {
+    dh: usize,
+    /// Row-major `len × dh` int8 predicted-K cache (evicted in lockstep
+    /// with the f32 KV cache).
+    k8: Vec<i32>,
+    prev_row: Vec<i32>,
+    prev_keep: Vec<bool>,
+    has_prev: bool,
+}
+
+impl HeadPredictor {
+    pub fn new(dh: usize) -> Self {
+        assert!(dh >= 1);
+        Self { dh, k8: Vec::new(), prev_row: Vec::new(), prev_keep: Vec::new(), has_prev: false }
+    }
+
+    /// Cached predicted-K slots.
+    pub fn len(&self) -> usize {
+        self.k8.len() / self.dh
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.k8.is_empty()
+    }
+
+    /// Run one step of incremental prediction. `hq` is the current
+    /// token's LN'd activation row quantized to int8 (1×D); `wq8`/`wk8`
+    /// are this head's int8 prediction weights (D×Dh).
+    pub fn step(&mut self, hq: &MatI, wq8: &MatI, wk8: &MatI, spls: &SplsConfig) -> HeadStepPlan {
+        assert_eq!(hq.rows, 1, "decode predicts one row per step");
+        // predicted K row for the new token → int8 cache
+        let kp = predict_matmul(hq, wk8);
+        let (k8, _) = requantize_sym8(&kp.data);
+        self.k8.extend_from_slice(&k8);
+        let n = self.len();
+        // predicted Q row, then the attention row over the cached slots
+        let qp = predict_matmul(hq, wq8);
+        let (q8, _) = requantize_sym8(&qp.data);
+        let q8 = MatI::from_vec(1, self.dh, q8);
+        let kmat = MatI::from_vec(n, self.dh, self.k8.clone());
+        let row = predict_matmul(&q8, &kmat.transpose()).data;
+        // temporal local similarity: shared prefix with the previous row
+        let similar = self.has_prev
+            && n >= 2
+            && self.prev_row.len() == n - 1
+            && l1_norm_dist(&row[..n - 1], &self.prev_row) <= spls.sim_threshold as f64;
+        let keep = if similar {
+            let mut k = self.prev_keep.clone();
+            k.push(true); // the new diagonal slot is always visible
+            k
+        } else {
+            topk_keep_with_diagonal(&row, spls.top_k)
+        };
+        let plan = HeadStepPlan { row: row.clone(), keep: keep.clone(), k8, similar };
+        self.prev_row = row;
+        self.prev_keep = keep;
+        self.has_prev = true;
+        plan
+    }
+
+    /// Replay a memoized step plan: restores the exact state `step`
+    /// would have produced, without running the prediction pipeline.
+    pub fn apply(&mut self, plan: &HeadStepPlan) {
+        assert_eq!(plan.k8.len(), self.dh, "plan K row width mismatch");
+        self.k8.extend_from_slice(&plan.k8);
+        assert_eq!(plan.row.len(), self.len(), "plan row must cover the cache");
+        self.prev_row = plan.row.clone();
+        self.prev_keep = plan.keep.clone();
+        self.has_prev = true;
+    }
+
+    /// Drop one cached slot (KV-cache eviction rides along here so the
+    /// predicted-K cache and the previous row stay slot-aligned).
+    pub fn remove_slot(&mut self, slot: usize) {
+        let d = self.dh;
+        assert!(slot < self.len());
+        self.k8.drain(slot * d..(slot + 1) * d);
+        if slot < self.prev_row.len() {
+            self.prev_row.remove(slot);
+        }
+        if slot < self.prev_keep.len() {
+            self.prev_keep.remove(slot);
+        }
+    }
+}
+
+/// Row top-k keep-mask with the diagonal (last slot = the new token's
+/// own position) always kept. Delegates to the single shared selection
+/// rule in `spls::causal` so the decode keep-mask and the prefill
+/// causal mask can never drift apart.
+pub fn topk_keep_with_diagonal(row: &[i32], k_ratio: f32) -> Vec<bool> {
+    crate::spls::causal::topk_row_keep_with_diagonal(row, k_ratio)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn rand_mat(rng: &mut Xoshiro256pp, r: usize, c: usize) -> MatI {
+        MatI::from_fn(r, c, |_, _| rng.int_in(-128, 127) as i32)
+    }
+
+    #[test]
+    fn topk_exact_count_and_diagonal() {
+        prop::check(80, |rng| {
+            let n = 1 + rng.below(40) as usize;
+            let k = 0.02 + rng.f64() as f32 * 0.98;
+            let row: Vec<i32> = (0..n).map(|_| rng.int_in(-500, 500) as i32).collect();
+            let keep = topk_keep_with_diagonal(&row, k);
+            let want = (((k * n as f32).ceil()) as usize).clamp(1, n);
+            assert_eq!(keep.iter().filter(|&&b| b).count(), want);
+            assert!(keep[n - 1], "diagonal slot pruned");
+        });
+    }
+
+    #[test]
+    fn topk_prefers_large_magnitudes() {
+        let keep = topk_keep_with_diagonal(&[50, -3, 40, 7, 1], 0.4);
+        // count = 2: top entries 50 and 40, then 1 (diagonal) replaces 40
+        assert_eq!(keep, vec![true, false, false, false, true]);
+    }
+
+    #[test]
+    fn step_grows_cache_and_first_step_is_never_similar() {
+        let mut rng = Xoshiro256pp::new(3);
+        let (d, dh) = (16, 4);
+        let wq = rand_mat(&mut rng, d, dh);
+        let wk = rand_mat(&mut rng, d, dh);
+        let mut p = HeadPredictor::new(dh);
+        let spls = SplsConfig { sim_threshold: 2.0, ..SplsConfig::default() };
+        let h0 = rand_mat(&mut rng, 1, d);
+        let s0 = p.step(&h0, &wq, &wk, &spls);
+        assert_eq!(p.len(), 1);
+        assert_eq!(s0.row.len(), 1);
+        assert!(!s0.similar, "no previous row to be similar to");
+        assert_eq!(s0.keep, vec![true]);
+        // an identical activation row one step later is similar at s=2
+        let s1 = p.step(&h0, &wq, &wk, &spls);
+        assert_eq!(p.len(), 2);
+        assert!(s1.similar, "identical prefix rows must collapse");
+        assert!(s1.keep[1], "diagonal appended to the reused mask");
+    }
+
+    #[test]
+    fn negative_threshold_disables_similarity() {
+        let mut rng = Xoshiro256pp::new(5);
+        let (d, dh) = (16, 4);
+        let wq = rand_mat(&mut rng, d, dh);
+        let wk = rand_mat(&mut rng, d, dh);
+        let mut p = HeadPredictor::new(dh);
+        let spls = SplsConfig { sim_threshold: -1.0, ..SplsConfig::default() };
+        let h = rand_mat(&mut rng, 1, d);
+        for _ in 0..4 {
+            assert!(!p.step(&h, &wq, &wk, &spls).similar);
+        }
+    }
+
+    #[test]
+    fn apply_replays_to_identical_state() {
+        // compute a few steps on predictor A, record the plans, replay
+        // them on predictor B: every later computed step must agree
+        let mut rng = Xoshiro256pp::new(7);
+        let (d, dh) = (16, 4);
+        let wq = rand_mat(&mut rng, d, dh);
+        let wk = rand_mat(&mut rng, d, dh);
+        let spls = SplsConfig::default();
+        let mut a = HeadPredictor::new(dh);
+        let mut b = HeadPredictor::new(dh);
+        let rows: Vec<MatI> = (0..5).map(|_| rand_mat(&mut rng, 1, d)).collect();
+        for h in &rows[..3] {
+            let plan = a.step(h, &wq, &wk, &spls);
+            b.apply(&plan);
+        }
+        for h in &rows[3..] {
+            assert_eq!(a.step(h, &wq, &wk, &spls), b.step(h, &wq, &wk, &spls));
+        }
+    }
+
+    #[test]
+    fn remove_slot_keeps_similarity_alignment() {
+        let mut rng = Xoshiro256pp::new(9);
+        let (d, dh) = (16, 4);
+        let wq = rand_mat(&mut rng, d, dh);
+        let wk = rand_mat(&mut rng, d, dh);
+        let spls = SplsConfig { sim_threshold: 2.0, ..SplsConfig::default() };
+        let mut p = HeadPredictor::new(dh);
+        let h = rand_mat(&mut rng, 1, d);
+        for _ in 0..4 {
+            p.step(&h, &wq, &wk, &spls);
+        }
+        p.remove_slot(1);
+        assert_eq!(p.len(), 3);
+        // next step: prev_row has len()-… matching n-1 after the append,
+        // and the identical activation stays similar
+        let s = p.step(&h, &wq, &wk, &spls);
+        assert_eq!(s.row.len(), 4);
+        assert!(s.similar, "alignment survived the eviction");
+    }
+}

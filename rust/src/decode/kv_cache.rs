@@ -1,0 +1,209 @@
+//! Per-layer, per-head K/V storage for autoregressive decode, with a
+//! **sparsity-aware eviction policy**: every decode step the incremental
+//! SPLS predictor scores each cached token's importance to the new query
+//! row (`|PAM|` magnitudes, normalized per row); the scores accumulate
+//! per cached token, and when a head exceeds its budget it drops the
+//! token with the lowest cumulative score — SpAtten's cascade token
+//! pruning driven by the prediction we already compute, instead of by
+//! post-hoc softmax probabilities.
+//!
+//! The `recent` newest tokens (which always include the current step's
+//! diagonal) are never evicted: the causal diagonal is always visible
+//! and usually dominant (paper §III / Fig 3c), and a recency floor is
+//! what keeps eviction from starving the local window the SPLS
+//! similarity scheme depends on.
+//!
+//! Without scores (dense decode), ties resolve to the lowest slot, so a
+//! budgeted dense cache degrades gracefully to a sliding window.
+
+use crate::util::mat::MatF;
+
+/// One attention head's append-only K/V cache plus eviction state.
+#[derive(Clone, Debug)]
+pub struct HeadKv {
+    dh: usize,
+    /// Row-major `len × dh` key rows.
+    k: Vec<f32>,
+    /// Row-major `len × dh` value rows.
+    v: Vec<f32>,
+    /// Original absolute position of each cached slot (ascending).
+    positions: Vec<usize>,
+    /// Cumulative SPLS column-importance score per cached slot.
+    score: Vec<f64>,
+}
+
+impl HeadKv {
+    pub fn new(dh: usize) -> Self {
+        assert!(dh >= 1);
+        Self { dh, k: Vec::new(), v: Vec::new(), positions: Vec::new(), score: Vec::new() }
+    }
+
+    /// Number of cached token slots.
+    pub fn len(&self) -> usize {
+        self.positions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.positions.is_empty()
+    }
+
+    /// Original positions of the cached slots, in slot order.
+    pub fn positions(&self) -> &[usize] {
+        &self.positions
+    }
+
+    /// Cumulative importance scores, in slot order.
+    pub fn scores(&self) -> &[f64] {
+        &self.score
+    }
+
+    /// Append the new token's K and V rows (score starts at 0).
+    pub fn push(&mut self, k_row: &[f32], v_row: &[f32], pos: usize) {
+        assert_eq!(k_row.len(), self.dh);
+        assert_eq!(v_row.len(), self.dh);
+        self.k.extend_from_slice(k_row);
+        self.v.extend_from_slice(v_row);
+        self.positions.push(pos);
+        self.score.push(0.0);
+    }
+
+    /// The cached keys as a `len × dh` matrix (decode computes
+    /// `q · Kᵀ` against it with the exact prefill accumulation order).
+    pub fn k_mat(&self) -> MatF {
+        MatF::from_vec(self.len(), self.dh, self.k.clone())
+    }
+
+    /// The cached values as a `len × dh` matrix.
+    pub fn v_mat(&self) -> MatF {
+        MatF::from_vec(self.len(), self.dh, self.v.clone())
+    }
+
+    /// Fold one predicted attention row into the cumulative scores:
+    /// each slot gains its normalized `|PAM|` magnitude (row-max
+    /// normalization keeps steps comparable across the per-row
+    /// requantization scales).
+    pub fn accumulate(&mut self, row: &[i32]) {
+        assert_eq!(row.len(), self.len(), "score row must cover the cache");
+        let max = row.iter().map(|r| r.unsigned_abs()).max().unwrap_or(0).max(1) as f64;
+        for (s, &r) in self.score.iter_mut().zip(row) {
+            *s += r.unsigned_abs() as f64 / max;
+        }
+    }
+
+    /// Evict the lowest-cumulative-score slot outside the protected
+    /// `recent` tail (ties toward the lowest slot = oldest token).
+    /// Returns the removed slot index so the caller can keep parallel
+    /// state (the incremental predictor) aligned, or `None` when every
+    /// slot is inside the protected window.
+    pub fn evict_lowest(&mut self, recent: usize) -> Option<usize> {
+        let n = self.len();
+        let protected = recent.max(1);
+        if n <= protected {
+            return None;
+        }
+        let lim = n - protected;
+        let mut best = 0usize;
+        for i in 1..lim {
+            if self.score[i] < self.score[best] {
+                best = i;
+            }
+        }
+        self.remove(best);
+        Some(best)
+    }
+
+    fn remove(&mut self, slot: usize) {
+        let d = self.dh;
+        self.k.drain(slot * d..(slot + 1) * d);
+        self.v.drain(slot * d..(slot + 1) * d);
+        self.positions.remove(slot);
+        self.score.remove(slot);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn filled(n: usize) -> HeadKv {
+        let mut kv = HeadKv::new(2);
+        for i in 0..n {
+            let f = i as f32;
+            kv.push(&[f, f + 0.5], &[-f, f * 2.0], i);
+        }
+        kv
+    }
+
+    #[test]
+    fn push_preserves_row_layout_and_positions() {
+        let kv = filled(3);
+        assert_eq!(kv.len(), 3);
+        let k = kv.k_mat();
+        let v = kv.v_mat();
+        assert_eq!((k.rows, k.cols), (3, 2));
+        assert_eq!(k.row(1), &[1.0, 1.5]);
+        assert_eq!(v.row(2), &[-2.0, 4.0]);
+        assert_eq!(kv.positions(), &[0, 1, 2]);
+    }
+
+    #[test]
+    fn accumulate_normalizes_by_row_max() {
+        let mut kv = filled(3);
+        kv.accumulate(&[-10, 5, 0]);
+        let s = kv.scores();
+        assert!((s[0] - 1.0).abs() < 1e-12);
+        assert!((s[1] - 0.5).abs() < 1e-12);
+        assert_eq!(s[2], 0.0);
+        // second row stacks on top
+        kv.accumulate(&[0, 4, 4]);
+        assert!((kv.scores()[1] - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn evicts_lowest_score_outside_recent_window() {
+        let mut kv = filled(5);
+        kv.accumulate(&[8, 1, 6, 2, 0]); // slot 4 lowest but recent-protected
+        let gone = kv.evict_lowest(2).expect("over-budget head must evict");
+        // evictable slots are 0..3; slot 1 has the lowest score there
+        assert_eq!(gone, 1);
+        assert_eq!(kv.positions(), &[0, 2, 3, 4]);
+        assert_eq!(kv.k_mat().row(1), &[2.0, 2.5]);
+    }
+
+    #[test]
+    fn zero_scores_degrade_to_sliding_window() {
+        // dense decode never accumulates: ties resolve to the oldest slot
+        let mut kv = filled(4);
+        assert_eq!(kv.evict_lowest(1), Some(0));
+        assert_eq!(kv.positions(), &[1, 2, 3]);
+        assert_eq!(kv.evict_lowest(1), Some(0));
+        assert_eq!(kv.positions(), &[2, 3]);
+    }
+
+    #[test]
+    fn recent_window_blocks_eviction_entirely() {
+        let mut kv = filled(3);
+        assert_eq!(kv.evict_lowest(3), None);
+        assert_eq!(kv.evict_lowest(8), None, "window larger than cache");
+        assert_eq!(kv.len(), 3);
+        // recent = 0 still protects the newest slot (the diagonal)
+        kv.accumulate(&[5, 5, 0]);
+        assert!(kv.evict_lowest(0).is_some());
+        assert_eq!(kv.len(), 2);
+        assert!(kv.positions().contains(&2), "diagonal slot survived");
+    }
+
+    #[test]
+    fn scores_follow_surviving_slots_after_eviction() {
+        let mut kv = filled(4);
+        kv.accumulate(&[1, 9, 9, 9]);
+        assert_eq!(kv.evict_lowest(1), Some(0));
+        // the surviving scores kept their slots' values
+        for &s in kv.scores() {
+            assert!((s - 1.0).abs() < 1e-12);
+        }
+        // and a fresh accumulate still lines up with the new layout
+        kv.accumulate(&[2, 0, 2]);
+        assert!((kv.scores()[1] - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,30 @@
+//! Autoregressive decode engine (the serving workload the paper's
+//! causal rows — GPT-2, Llama2-7b, Bloom-7b — actually run): token-by-
+//! token generation over a **sparsity-aware KV cache**.
+//!
+//! * [`kv_cache`] — per-layer, per-head append-only K/V storage whose
+//!   eviction is driven by cumulative SPLS column-importance scores
+//!   (SpAtten-style cascade token pruning from the prediction we
+//!   already compute), with the recent window always retained;
+//! * [`incremental`] — step-wise SPLS: predict the new query row's
+//!   sparsity against the cached prefix in O(prefix) via local
+//!   similarity to the previous step's row, memoizable in
+//!   `spls::plan_cache` under decode buckets;
+//! * [`step`] — the `decode_step` forward (single-row attention against
+//!   the pruned cache, bit-identical to causal prefill at unbounded
+//!   budget) behind [`DecodeEngine`] / [`DecodeState`];
+//! * [`generate`] — greedy + seeded top-k generation, sliceable for the
+//!   serving tier's continuous decode batching
+//!   (`coordinator::Server::serve_generate`).
+
+pub mod generate;
+pub mod incremental;
+pub mod kv_cache;
+pub mod step;
+
+pub use generate::{generate, GenResult, GenSession, Sampler, Sampling};
+pub use incremental::{
+    topk_keep_with_diagonal, HeadPredictor, HeadStepPlan, LayerStepPlan, StepPlan,
+};
+pub use kv_cache::HeadKv;
+pub use step::{DecodeConfig, DecodeEngine, DecodeMode, DecodeState, DecodeStats};

@@ -1,0 +1,533 @@
+//! The decode-step forward: single-row attention against the pruned
+//! per-head KV cache, reusing the exact head math of
+//! `model::transformer` (same `matmul`/`linear`/`masked_softmax_rows`
+//! primitives, same accumulation order), so **unbounded-budget dense
+//! decode is bit-identical to re-running `forward_causal_hidden` on the
+//! growing sequence** — asserted by the tests here and by
+//! `tests/integration_decode.rs`.
+//!
+//! Two modes:
+//!
+//! * [`DecodeMode::Dense`] — full attention over every cached slot. With
+//!   a finite budget the cache degrades to a sliding window (zero
+//!   scores → oldest-first eviction).
+//! * [`DecodeMode::Spls`] — the incremental SPLS predictor
+//!   (`decode::incremental`) gates each step: similar steps reuse the
+//!   previous step's attention output per head (recovery by
+//!   replication), non-similar steps attend only over the predicted
+//!   keep-mask; predicted row magnitudes accumulate into the KV cache's
+//!   eviction scores; and when enough heads vote "similar" the FFN row
+//!   is reused too (the MFI voting rule applied temporally). Step plans
+//!   are memoized in the shared `spls::plan_cache` under decode
+//!   buckets, so replaying a prefix skips planning entirely.
+
+use std::sync::Arc;
+
+use crate::config::SplsConfig;
+use crate::decode::incremental::{HeadPredictor, HeadStepPlan, LayerStepPlan, StepPlan};
+use crate::decode::kv_cache::HeadKv;
+use crate::model::tensor::{
+    add_inplace, gelu_inplace, layernorm, linear, masked_softmax_rows, matmul,
+};
+use crate::model::{embed_row, lm_logits_row, TinyWeights};
+use crate::quant::quantize_sym8;
+use crate::spls::plan_cache::SharedPlanCache;
+use crate::util::mat::{Mat, MatF, MatI};
+
+/// Attention execution mode of a decode session.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecodeMode {
+    /// Full attention over the cached prefix (the exactness baseline).
+    Dense,
+    /// Incremental-SPLS gated attention + sparsity-aware eviction.
+    Spls,
+}
+
+/// Per-session decode configuration.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DecodeConfig {
+    pub mode: DecodeMode,
+    /// Per-head KV budget in cached tokens; `usize::MAX` = unbounded.
+    pub kv_budget: usize,
+    /// Newest slots never evicted (clamped to ≥ 1: the diagonal is
+    /// always retained, and to < budget so eviction can make progress).
+    pub recent: usize,
+    /// SPLS operating point for the incremental predictor.
+    pub spls: SplsConfig,
+}
+
+impl Default for DecodeConfig {
+    fn default() -> Self {
+        Self {
+            mode: DecodeMode::Dense,
+            kv_budget: usize::MAX,
+            recent: 8,
+            spls: SplsConfig::default(),
+        }
+    }
+}
+
+/// Decode-side counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DecodeStats {
+    /// Tokens pushed (prompt + generated).
+    pub steps: usize,
+    /// Head-steps that reused the previous attention output.
+    pub sim_heads: usize,
+    /// Layer-steps that reused the previous FFN row.
+    pub ffn_skips: usize,
+    /// KV slots evicted across all layers/heads.
+    pub evictions: usize,
+    /// Step plans served from the shared plan cache.
+    pub plan_hits: usize,
+    /// Step plans computed (and, when a cache is attached, inserted).
+    pub plan_misses: usize,
+}
+
+/// Immutable per-weights state shared by every decode session: per-head
+/// f32 weight slices (so a step projects exactly one row per head, with
+/// accumulation bit-identical to the full-matrix prefill projections —
+/// output columns of `matmul` are independent) and the per-head int8
+/// prediction weights, quantized exactly like `model::plan_model` does.
+pub struct DecodeEngine {
+    weights: Arc<TinyWeights>,
+    layers: Vec<EngineLayer>,
+}
+
+struct EngineLayer {
+    wq: Vec<MatF>,
+    bq: Vec<Vec<f32>>,
+    wk: Vec<MatF>,
+    bk: Vec<Vec<f32>>,
+    wv: Vec<MatF>,
+    bv: Vec<Vec<f32>>,
+    pred_wq: Vec<MatI>,
+    pred_wk: Vec<MatI>,
+}
+
+impl DecodeEngine {
+    pub fn new(weights: Arc<TinyWeights>) -> Self {
+        let cfg = weights.cfg;
+        let dh = cfg.d_head();
+        let layers = weights
+            .layers
+            .iter()
+            .map(|lw| {
+                let slice_f = |m: &MatF, hi: usize| {
+                    MatF::from_fn(m.rows, dh, |r, c| m[(r, hi * dh + c)])
+                };
+                let slice_b = |b: &[f32], hi: usize| b[hi * dh..(hi + 1) * dh].to_vec();
+                let slice_8 = |m: &MatF, hi: usize| {
+                    let (q, _) = quantize_sym8(&slice_f(m, hi).data);
+                    MatI::from_vec(m.rows, dh, q)
+                };
+                let mut l = EngineLayer {
+                    wq: Vec::new(),
+                    bq: Vec::new(),
+                    wk: Vec::new(),
+                    bk: Vec::new(),
+                    wv: Vec::new(),
+                    bv: Vec::new(),
+                    pred_wq: Vec::new(),
+                    pred_wk: Vec::new(),
+                };
+                for hi in 0..cfg.n_heads {
+                    l.wq.push(slice_f(&lw.wq, hi));
+                    l.bq.push(slice_b(&lw.bq, hi));
+                    l.wk.push(slice_f(&lw.wk, hi));
+                    l.bk.push(slice_b(&lw.bk, hi));
+                    l.wv.push(slice_f(&lw.wv, hi));
+                    l.bv.push(slice_b(&lw.bv, hi));
+                    l.pred_wq.push(slice_8(&lw.wq, hi));
+                    l.pred_wk.push(slice_8(&lw.wk, hi));
+                }
+                l
+            })
+            .collect();
+        Self { weights, layers }
+    }
+
+    pub fn weights(&self) -> &Arc<TinyWeights> {
+        &self.weights
+    }
+}
+
+struct HeadState {
+    kv: HeadKv,
+    pred: HeadPredictor,
+    prev_out: Option<Vec<f32>>,
+}
+
+struct LayerState {
+    heads: Vec<HeadState>,
+    prev_ffn: Option<Vec<f32>>,
+}
+
+/// One decode session's mutable state: the residual-stream position,
+/// per-layer/per-head caches, and optional plan-cache handle.
+pub struct DecodeState {
+    eng: Arc<DecodeEngine>,
+    cfg: DecodeConfig,
+    recent: usize,
+    tokens: Vec<i32>,
+    layers: Vec<LayerState>,
+    cache: Option<SharedPlanCache>,
+    stats: DecodeStats,
+}
+
+impl DecodeState {
+    pub fn new(eng: Arc<DecodeEngine>, cfg: DecodeConfig) -> Self {
+        let mcfg = eng.weights.cfg;
+        let dh = mcfg.d_head();
+        if cfg.kv_budget != usize::MAX {
+            assert!(cfg.kv_budget >= 2, "a finite KV budget needs at least 2 slots");
+        }
+        let recent = if cfg.kv_budget == usize::MAX {
+            cfg.recent.max(1)
+        } else {
+            cfg.recent.max(1).min(cfg.kv_budget - 1)
+        };
+        let layers = (0..mcfg.n_layers)
+            .map(|_| LayerState {
+                heads: (0..mcfg.n_heads)
+                    .map(|_| HeadState {
+                        kv: HeadKv::new(dh),
+                        pred: HeadPredictor::new(dh),
+                        prev_out: None,
+                    })
+                    .collect(),
+                prev_ffn: None,
+            })
+            .collect();
+        Self {
+            eng,
+            cfg,
+            recent,
+            tokens: Vec::new(),
+            layers,
+            cache: None,
+            stats: DecodeStats::default(),
+        }
+    }
+
+    /// Attach a shared plan cache: step plans are looked up / inserted
+    /// under the token prefix (decode buckets), so identical prefixes
+    /// across sessions replay planning from cache.
+    pub fn with_plan_cache(mut self, cache: SharedPlanCache) -> Self {
+        self.cache = Some(cache);
+        self
+    }
+
+    /// Tokens pushed so far (prompt + generated).
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    pub fn tokens(&self) -> &[i32] {
+        &self.tokens
+    }
+
+    pub fn stats(&self) -> DecodeStats {
+        self.stats
+    }
+
+    /// Cached KV slots of one head (≤ the budget between steps).
+    pub fn kv_len(&self, layer: usize, head: usize) -> usize {
+        self.layers[layer].heads[head].kv.len()
+    }
+
+    /// Push one token through the model; returns the next-token logits.
+    pub fn push(&mut self, token: i32) -> Vec<f32> {
+        let eng = Arc::clone(&self.eng);
+        let w = eng.weights();
+        let mcfg = w.cfg;
+        let dh = mcfg.d_head();
+        let spls_mode = self.cfg.mode == DecodeMode::Spls;
+        let p = self.tokens.len();
+        self.tokens.push(token);
+        // memoized step plan for this exact prefix (Spls mode only)
+        let cached: Option<StepPlan> = match (&self.cache, spls_mode) {
+            (Some(c), true) => {
+                c.get_step(&self.tokens, &self.cfg.spls, self.cfg.kv_budget, self.recent)
+            }
+            _ => None,
+        };
+        let plan_fresh = spls_mode && self.cache.is_some() && cached.is_none();
+        let mut fresh: Option<StepPlan> = if plan_fresh {
+            Some(StepPlan { layers: Vec::with_capacity(mcfg.n_layers) })
+        } else {
+            None
+        };
+        if cached.is_some() {
+            self.stats.plan_hits += 1;
+        }
+        let mut x = embed_row(w, token, p);
+        for (li, (lw, el)) in w.layers.iter().zip(&eng.layers).enumerate() {
+            let h = layernorm(&x, &lw.ln1_g, &lw.ln1_b);
+            let hq = if spls_mode && cached.is_none() {
+                let (q, _) = quantize_sym8(&h.data);
+                Some(MatI::from_vec(1, h.cols, q))
+            } else {
+                None
+            };
+            let mut att = MatF::zeros(1, mcfg.d_model);
+            let mut sim_heads = 0usize;
+            let mut layer_plan =
+                fresh.as_ref().map(|_| LayerStepPlan { heads: Vec::with_capacity(mcfg.n_heads) });
+            for hi in 0..mcfg.n_heads {
+                // K/V rows are always generated for the new token
+                let kr = linear(&h, &el.wk[hi], &el.bk[hi]);
+                let vr = linear(&h, &el.wv[hi], &el.bv[hi]);
+                let hs = &mut self.layers[li].heads[hi];
+                hs.kv.push(&kr.data, &vr.data, p);
+                let n = hs.kv.len();
+                let decision: Option<HeadStepPlan> = if spls_mode {
+                    Some(match &cached {
+                        Some(plan) => {
+                            let d = &plan.layers[li].heads[hi];
+                            hs.pred.apply(d);
+                            d.clone()
+                        }
+                        None => {
+                            let d = hs.pred.step(
+                                hq.as_ref().expect("fresh Spls step quantizes h"),
+                                &el.pred_wq[hi],
+                                &el.pred_wk[hi],
+                                &self.cfg.spls,
+                            );
+                            if let Some(lp) = layer_plan.as_mut() {
+                                lp.heads.push(d.clone());
+                            }
+                            d
+                        }
+                    })
+                } else {
+                    None
+                };
+                if let Some(d) = &decision {
+                    hs.kv.accumulate(&d.row);
+                }
+                let out_row: Vec<f32> = match &decision {
+                    Some(d) if d.similar && hs.prev_out.is_some() => {
+                        sim_heads += 1;
+                        self.stats.sim_heads += 1;
+                        hs.prev_out.clone().expect("checked above")
+                    }
+                    _ => {
+                        // exact prefill head math on the cached slots
+                        let q = linear(&h, &el.wq[hi], &el.bq[hi]);
+                        let kmat = hs.kv.k_mat();
+                        let vmat = hs.kv.v_mat();
+                        let scale = 1.0 / (dh as f32).sqrt();
+                        let mut s = matmul(&q, &kmat.transpose());
+                        for v in &mut s.data {
+                            *v *= scale;
+                        }
+                        let mask = match &decision {
+                            Some(d) => Mat::from_vec(1, n, d.keep.clone()),
+                            None => Mat::from_vec(1, n, vec![true; n]),
+                        };
+                        masked_softmax_rows(&mut s, &mask);
+                        matmul(&s, &vmat).data
+                    }
+                };
+                hs.prev_out = Some(out_row.clone());
+                for (c, v) in out_row.iter().enumerate() {
+                    att[(0, hi * dh + c)] = *v;
+                }
+            }
+            let mut x1 = x.clone();
+            add_inplace(&mut x1, &linear(&att, &lw.wo, &lw.bo));
+            let h2 = layernorm(&x1, &lw.ln2_g, &lw.ln2_b);
+            let skip_ffn = spls_mode
+                && sim_heads >= self.cfg.spls.ffn_threshold.max(1)
+                && self.layers[li].prev_ffn.is_some();
+            let ffn_row: Vec<f32> = if skip_ffn {
+                self.stats.ffn_skips += 1;
+                self.layers[li].prev_ffn.clone().expect("checked above")
+            } else {
+                let mut ff = linear(&h2, &lw.w1, &lw.b1);
+                gelu_inplace(&mut ff);
+                linear(&ff, &lw.w2, &lw.b2).data
+            };
+            self.layers[li].prev_ffn = Some(ffn_row.clone());
+            let mut x2 = x1;
+            add_inplace(&mut x2, &MatF::from_vec(1, mcfg.d_model, ffn_row));
+            x = x2;
+            // eviction: drop lowest-cumulative-score slots over budget
+            if self.cfg.kv_budget != usize::MAX {
+                for hs in &mut self.layers[li].heads {
+                    while hs.kv.len() > self.cfg.kv_budget {
+                        match hs.kv.evict_lowest(self.recent) {
+                            Some(slot) => {
+                                // Dense mode never grows the predictor
+                                // cache — only evict it in lockstep
+                                // when it actually has slots (Spls)
+                                if !hs.pred.is_empty() {
+                                    hs.pred.remove_slot(slot);
+                                }
+                                self.stats.evictions += 1;
+                            }
+                            None => break,
+                        }
+                    }
+                }
+            }
+            if let (Some(fp), Some(lp)) = (fresh.as_mut(), layer_plan) {
+                fp.layers.push(lp);
+            }
+        }
+        if let (Some(c), Some(plan)) = (&self.cache, fresh) {
+            c.put_step(&self.tokens, &self.cfg.spls, self.cfg.kv_budget, self.recent, plan);
+            self.stats.plan_misses += 1;
+        } else if spls_mode && self.cache.is_none() {
+            self.stats.plan_misses += 1;
+        }
+        self.stats.steps += 1;
+        let xf = layernorm(&x, &w.lnf_g, &w.lnf_b);
+        lm_logits_row(w, xf.row(0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::next_token_logits;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn engine() -> Arc<DecodeEngine> {
+        let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny_weights.bin");
+        Arc::new(DecodeEngine::new(Arc::new(TinyWeights::load(&p).unwrap())))
+    }
+
+    fn toks(seed: u64, l: usize) -> Vec<i32> {
+        let mut rng = Xoshiro256pp::new(seed);
+        (0..l).map(|_| rng.below(64) as i32).collect()
+    }
+
+    #[test]
+    fn dense_decode_logits_bit_identical_to_causal_prefill() {
+        let eng = engine();
+        let w = Arc::clone(eng.weights());
+        let seq = toks(1, 20);
+        let mut st = DecodeState::new(eng, DecodeConfig::default());
+        for t in 1..=seq.len() {
+            let got = st.push(seq[t - 1]);
+            let want = next_token_logits(&w, &seq[..t]);
+            assert_eq!(got, want, "decode diverged from prefill at length {t}");
+        }
+        assert_eq!(st.stats().evictions, 0);
+        assert_eq!(st.kv_len(0, 0), 20);
+    }
+
+    #[test]
+    fn spls_full_keep_equals_dense_decode() {
+        // top_k = 1 keeps every slot, sim_threshold < 0 disables reuse,
+        // ffn_threshold = MAX disables FFN skipping: the Spls machinery
+        // runs but gates nothing, so logits must equal the dense path
+        let eng = engine();
+        let seq = toks(2, 12);
+        let spls = SplsConfig {
+            top_k: 1.0,
+            sim_threshold: -1.0,
+            ffn_threshold: usize::MAX,
+            window: 8,
+        };
+        let cfg = DecodeConfig { mode: DecodeMode::Spls, spls, ..DecodeConfig::default() };
+        let mut sparse = DecodeState::new(Arc::clone(&eng), cfg);
+        let mut dense = DecodeState::new(eng, DecodeConfig::default());
+        for &t in &seq {
+            assert_eq!(sparse.push(t), dense.push(t));
+        }
+        assert_eq!(sparse.stats().sim_heads, 0);
+        assert_eq!(sparse.stats().ffn_skips, 0);
+    }
+
+    #[test]
+    fn budget_bounds_every_head_cache() {
+        let eng = engine();
+        let seq = toks(3, 32);
+        let cfg = DecodeConfig {
+            mode: DecodeMode::Spls,
+            kv_budget: 8,
+            recent: 3,
+            spls: SplsConfig::default(),
+        };
+        let mut st = DecodeState::new(eng, cfg);
+        let mut last = Vec::new();
+        for &t in &seq {
+            last = st.push(t);
+        }
+        assert!(last.iter().all(|v| v.is_finite()));
+        for li in 0..2 {
+            for hi in 0..4 {
+                assert!(st.kv_len(li, hi) <= 8, "head ({li},{hi}) over budget");
+            }
+        }
+        assert!(st.stats().evictions > 0, "32 tokens into 8 slots must evict");
+    }
+
+    #[test]
+    fn dense_mode_with_finite_budget_is_a_sliding_window() {
+        // zero scores → oldest-first eviction; the predictor cache is
+        // empty in Dense mode and must not be touched by eviction
+        let eng = engine();
+        let cfg = DecodeConfig { kv_budget: 8, recent: 2, ..DecodeConfig::default() };
+        let mut st = DecodeState::new(eng, cfg);
+        let seq = toks(6, 20);
+        let mut last = Vec::new();
+        for &t in &seq {
+            last = st.push(t);
+        }
+        assert!(last.iter().all(|v| v.is_finite()));
+        for li in 0..2 {
+            for hi in 0..4 {
+                assert!(st.kv_len(li, hi) <= 8);
+            }
+        }
+        assert_eq!(st.stats().evictions, 12 * 8, "oldest slot dropped per head per step");
+    }
+
+    #[test]
+    fn decode_runs_past_the_trained_position_table() {
+        // positions ≥ seq_len clamp to the last pos row; with a finite
+        // budget the session keeps streaming well past L = 64
+        let eng = engine();
+        let cfg = DecodeConfig {
+            mode: DecodeMode::Spls,
+            kv_budget: 16,
+            recent: 4,
+            spls: SplsConfig::default(),
+        };
+        let mut st = DecodeState::new(eng, cfg);
+        let mut rng = Xoshiro256pp::new(4);
+        for _ in 0..96 {
+            let logits = st.push(rng.below(64) as i32);
+            assert!(logits.iter().all(|v| v.is_finite()));
+        }
+        assert_eq!(st.len(), 96);
+    }
+
+    #[test]
+    fn sim_reuse_fires_when_threshold_admits_everything() {
+        // normalized L1 distance is ≤ 2 by construction, so s = 2 makes
+        // every step (after the first) similar: reuse and FFN skips are
+        // guaranteed to fire, and the engine must stay finite
+        let eng = engine();
+        let spls = SplsConfig { sim_threshold: 2.0, ..SplsConfig::default() };
+        let cfg = DecodeConfig { mode: DecodeMode::Spls, spls, ..DecodeConfig::default() };
+        let mut st = DecodeState::new(eng, cfg);
+        let mut last = Vec::new();
+        for _ in 0..12 {
+            last = st.push(7);
+        }
+        let s = st.stats();
+        assert!(last.iter().all(|v| v.is_finite()));
+        assert_eq!(s.sim_heads, 2 * 4 * 11, "every head-step after the first reuses");
+        assert_eq!(s.ffn_skips, 2 * 11, "every layer-step after the first skips the FFN");
+    }
+}

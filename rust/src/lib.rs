@@ -15,6 +15,11 @@
 //! AOT-compiled JAX/Pallas artifacts run through the PJRT C API
 //! (`xla` crate — see Cargo.toml before enabling).
 //!
+//! Generation workloads run through `decode::`: a sparsity-aware KV
+//! cache (SPLS-scored eviction), incremental per-step SPLS planning,
+//! and a streaming `Server::serve_generate` path that continuously
+//! batches decode slices across the replica tier.
+//!
 //! The SPLS→simulator hot path is parallelized with rayon: per-head
 //! planning (`spls::plan_layer`), Q/K prediction and row-partitioned
 //! HLog matmuls (`spls::predict`), and per-layer simulation fan-out
@@ -27,6 +32,7 @@
 pub mod baselines;
 pub mod config;
 pub mod coordinator;
+pub mod decode;
 pub mod energy;
 pub mod model;
 pub mod quant;

@@ -9,9 +9,10 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 use esact::config::SplsConfig;
-use esact::coordinator::{BatchPolicy, Request};
 use esact::coordinator::server::Mode;
+use esact::coordinator::{BatchPolicy, GenRequest, Request};
 use esact::coordinator::Server;
+use esact::decode::{DecodeConfig, DecodeMode, Sampling};
 use esact::model;
 use esact::quant::QuantMethod;
 use esact::report::{figures, tables};
@@ -28,6 +29,12 @@ USAGE:
   esact serve [n] [dense|spls] [replicas]
                               run the serving loop over n synthetic requests
                               on a replicated worker tier (default 1)
+  esact generate [n] [dense|spls] [replicas] [--kv-budget B] [--prefix P]
+                 [--new T] [--sample-topk K] [--seed S]
+                              stream T tokens for each of n generation
+                              sessions through the decode tier (spls =
+                              incremental-SPLS gating + KV eviction at
+                              budget B; greedy unless --sample-topk)
   esact sim <model> <L>       simulate one model (bert-base|bert-large|gpt2|
                                llama2|bloom|vit16|vit32)
   esact cluster <model> <L> <batch>  simulate the 125-unit deployment
@@ -47,6 +54,7 @@ fn main() -> Result<()> {
         Some("repro") => repro(args.get(1).map(String::as_str).unwrap_or("all")),
         Some("eval") => eval(&args[1..]),
         Some("serve") => serve(&args[1..]),
+        Some("generate") => generate(&args[1..]),
         Some("sim") => sim(&args[1..]),
         Some("cluster") => cluster(&args[1..]),
         _ => {
@@ -166,6 +174,112 @@ fn serve(args: &[String]) -> Result<()> {
             r.busy.as_secs_f64() * 1e3
         );
     }
+    Ok(())
+}
+
+fn generate(args: &[String]) -> Result<()> {
+    // positional: [n_sessions] [dense|spls] [replicas]; flags anywhere
+    let mut pos: Vec<&String> = Vec::new();
+    let mut kv_budget = usize::MAX;
+    let mut prefix = 16usize;
+    let mut max_new = 24usize;
+    let mut sample_topk = 0usize;
+    let mut seed = 7u64;
+    let mut i = 0usize;
+    while i < args.len() {
+        let value = |j: usize| args.get(j + 1).map(String::as_str);
+        match args[i].as_str() {
+            "--kv-budget" => {
+                kv_budget = value(i).and_then(|s| s.parse().ok()).unwrap_or(usize::MAX);
+                i += 2;
+            }
+            "--prefix" => {
+                prefix = value(i).and_then(|s| s.parse().ok()).unwrap_or(16);
+                i += 2;
+            }
+            "--new" => {
+                max_new = value(i).and_then(|s| s.parse().ok()).unwrap_or(24);
+                i += 2;
+            }
+            "--sample-topk" => {
+                sample_topk = value(i).and_then(|s| s.parse().ok()).unwrap_or(0);
+                i += 2;
+            }
+            "--seed" => {
+                seed = value(i).and_then(|s| s.parse().ok()).unwrap_or(7);
+                i += 2;
+            }
+            _ => {
+                pos.push(&args[i]);
+                i += 1;
+            }
+        }
+    }
+    let n: usize = pos.first().and_then(|s| s.parse().ok()).unwrap_or(4);
+    let mode = match pos.get(1).map(|s| s.as_str()) {
+        Some("spls") => DecodeMode::Spls,
+        Some("dense") => DecodeMode::Dense, // explicit: sliding window under a budget
+        // like examples/generate_tiny: a finite budget implies the
+        // SPLS-scored evicting path unless dense is asked for
+        _ if kv_budget != usize::MAX => DecodeMode::Spls,
+        _ => DecodeMode::Dense,
+    };
+    let replicas: usize = pos.get(2).and_then(|s| s.parse().ok()).unwrap_or(1);
+    if kv_budget != usize::MAX {
+        kv_budget = kv_budget.max(2); // finite budgets need ≥ 2 slots
+    }
+    let decode = DecodeConfig { mode, kv_budget, recent: 4, spls: SplsConfig::default() };
+
+    let srv = Server::new(&artifact_dir(), Mode::Dense, SplsConfig::default())?;
+    let (tx, rx) = std::sync::mpsc::channel();
+    let (ctx, crx) = std::sync::mpsc::channel();
+    let mut rng = Xoshiro256pp::new(2025);
+    for i in 0..n {
+        // prompts longer than the synthetic sequence cycle it (decode
+        // clamps positions past the trained table)
+        let (base, _) = model::synth::gen_example(&mut rng, srv.seq_len());
+        let prompt: Vec<i32> = (0..prefix.max(1)).map(|j| base[j % base.len()]).collect();
+        let sampling = if sample_topk > 0 {
+            Sampling::TopK { k: sample_topk, temperature: 1.0, seed: seed + i as u64 }
+        } else {
+            Sampling::Greedy
+        };
+        tx.send(GenRequest { id: i as u64, prompt, max_new, sampling, arrived: Instant::now() })
+            .unwrap();
+    }
+    drop(tx);
+    let printer = std::thread::spawn(move || {
+        let mut tokens = 0usize;
+        for chunk in crx.iter() {
+            tokens += chunk.tokens.len();
+            if !chunk.tokens.is_empty() || chunk.done {
+                println!(
+                    "  session {} +{:<3} {:?}{}",
+                    chunk.id,
+                    chunk.tokens.len(),
+                    chunk.tokens,
+                    if chunk.done { "  ✓ done" } else { "" }
+                );
+            }
+        }
+        tokens
+    });
+    let outcome = srv.serve_generate(rx, ctx, decode, replicas, 8)?;
+    let streamed = printer.join().unwrap();
+    let m = outcome.metrics;
+    println!(
+        "{mode:?} x{replicas} (budget {}): {} sessions, {streamed} tokens | \
+         {:.0} tok/s | {} slices ({} stolen) | session p50 {:.1} ms p99 {:.1} ms | \
+         step cache {:.0}% hit",
+        if kv_budget == usize::MAX { "∞".to_string() } else { kv_budget.to_string() },
+        m.sessions,
+        m.tokens_per_sec(),
+        m.slices,
+        m.steals,
+        m.p50_session.as_secs_f64() * 1e3,
+        m.p99_session.as_secs_f64() * 1e3,
+        m.plan_cache.step_hit_rate() * 100.0
+    );
     Ok(())
 }
 

@@ -10,5 +10,8 @@ pub mod transformer;
 pub mod weights;
 
 pub use accuracy::{eval_dense, eval_sparse, EvalResult};
-pub use transformer::{attention_probs, forward_dense, forward_masked, forward_sparse, plan_model};
+pub use transformer::{
+    attention_probs, embed_row, forward_causal_hidden, forward_dense, forward_masked,
+    forward_sparse, lm_logits_row, next_token_logits, plan_model,
+};
 pub use weights::{TestSet, TinyConfig, TinyWeights};

@@ -134,6 +134,87 @@ pub fn forward_masked(w: &TinyWeights, tokens: &[i32], masks: &[f32]) -> Vec<f32
     linear(&pooled, &w.cls_w, &w.cls_b).data
 }
 
+/// Embed a single token at absolute position `pos`: `embed[tok] + pos`.
+/// Positions beyond the trained table are clamped to the last row
+/// (truncated absolute embeddings), which lets the decode engine run
+/// past the compiled `seq_len` — within the table the row is
+/// bit-identical to the matching row of [`embed`].
+pub fn embed_row(w: &TinyWeights, token: i32, pos: usize) -> MatF {
+    let p = pos.min(w.cfg.seq_len - 1);
+    MatF::from_fn(1, w.cfg.d_model, |_, c| w.embed[(token as usize, c)] + w.pos[(p, c)])
+}
+
+/// Causal (decoder) forward over the residual stream: every attention
+/// row sees only its visible prefix (lower-triangular mask through
+/// `masked_softmax_rows`, the exact op sequence of `forward_masked`).
+/// Returns the L×D hidden states after the last block, **pre-`lnf`**.
+///
+/// Row `r` depends only on rows `0..=r` — asserted by the prefix-
+/// stability test below — which is what makes token-by-token KV-cache
+/// decode (`decode::step`) bit-identical to re-running this prefill.
+pub fn forward_causal_hidden(w: &TinyWeights, tokens: &[i32]) -> MatF {
+    let n_heads = w.cfg.n_heads;
+    let dh = w.cfg.d_head();
+    let l = tokens.len();
+    let mut x = embed(w, tokens);
+    for lw in &w.layers {
+        let h = layernorm(&x, &lw.ln1_g, &lw.ln1_b);
+        let q = linear(&h, &lw.wq, &lw.bq);
+        let k = linear(&h, &lw.wk, &lw.bk);
+        let v = linear(&h, &lw.wv, &lw.bv);
+        let mut att = MatF::zeros(l, x.cols);
+        for hi in 0..n_heads {
+            let qh = head_of(&q, hi, dh);
+            let kh = head_of(&k, hi, dh);
+            let vh = head_of(&v, hi, dh);
+            let scale = 1.0 / (dh as f32).sqrt();
+            let mut s = matmul(&qh, &kh.transpose());
+            for val in &mut s.data {
+                *val *= scale;
+            }
+            let mask = Mat::from_fn(l, l, |r, c| c <= r);
+            masked_softmax_rows(&mut s, &mask);
+            set_head(&mut att, hi, dh, &matmul(&s, &vh));
+        }
+        let mut x1 = x.clone();
+        add_inplace(&mut x1, &linear(&att, &lw.wo, &lw.bo));
+        let h2 = layernorm(&x1, &lw.ln2_g, &lw.ln2_b);
+        let mut ff = linear(&h2, &lw.w1, &lw.b1);
+        gelu_inplace(&mut ff);
+        let mut x2 = x1;
+        add_inplace(&mut x2, &linear(&ff, &lw.w2, &lw.b2));
+        x = x2;
+    }
+    x
+}
+
+/// Weight-tied language-model head over one `lnf`-normalized hidden
+/// row: `logits[v] = Σ_c row[c] · embed[v, c]` (the tiny classifier has
+/// no trained LM head, so next-token scores reuse the input embedding —
+/// standard weight tying). Shared by the prefill reference and the
+/// decode engine so both produce bit-identical logits.
+pub fn lm_logits_row(w: &TinyWeights, row: &[f32]) -> Vec<f32> {
+    assert_eq!(row.len(), w.cfg.d_model);
+    (0..w.cfg.vocab)
+        .map(|v| {
+            let mut acc = 0.0f32;
+            for (c, &x) in row.iter().enumerate() {
+                acc += x * w.embed[(v, c)];
+            }
+            acc
+        })
+        .collect()
+}
+
+/// Next-token logits of a causal prefill over `tokens`: the iterated-
+/// prefill reference that unbounded-budget decode must match bitwise.
+pub fn next_token_logits(w: &TinyWeights, tokens: &[i32]) -> Vec<f32> {
+    assert!(!tokens.is_empty(), "need at least one token of context");
+    let x = forward_causal_hidden(w, tokens);
+    let xf = layernorm(&x, &w.lnf_g, &w.lnf_b);
+    lm_logits_row(w, xf.row(tokens.len() - 1))
+}
+
 /// Per-layer, per-head attention matrices for the similarity analyses.
 pub fn attention_probs(w: &TinyWeights, tokens: &[i32]) -> Vec<Vec<MatF>> {
     let n_heads = w.cfg.n_heads;
@@ -392,6 +473,42 @@ mod tests {
         let logits = forward_masked(&w, &t, &masks);
         assert_eq!(logits.len(), 16);
         assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn causal_hidden_is_prefix_stable() {
+        // row r of the causal forward may depend only on rows 0..=r:
+        // extending the sequence must leave earlier rows bit-identical
+        let w = weights();
+        let t = toks(8, 32, 64);
+        let short = forward_causal_hidden(&w, &t[..16]);
+        let long = forward_causal_hidden(&w, &t);
+        for r in 0..16 {
+            assert_eq!(short.row(r), long.row(r), "row {r} changed when the suffix grew");
+        }
+    }
+
+    #[test]
+    fn next_token_logits_vocab_sized_and_finite() {
+        let w = weights();
+        let logits = next_token_logits(&w, &toks(9, 24, 64));
+        assert_eq!(logits.len(), w.cfg.vocab);
+        assert!(logits.iter().all(|v| v.is_finite()));
+        let spread = logits.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v))
+            - logits.iter().fold(f32::INFINITY, |m, &v| m.min(v));
+        assert!(spread > 0.0, "degenerate LM head");
+    }
+
+    #[test]
+    fn embed_row_matches_embed_within_table_and_clamps_beyond() {
+        let w = weights();
+        let t = toks(10, 64, 64);
+        let full = embed(&w, &t);
+        for p in [0usize, 1, 63] {
+            assert_eq!(embed_row(&w, t[p], p).row(0), full.row(p));
+        }
+        // beyond the trained table: clamped to the last position row
+        assert_eq!(embed_row(&w, t[0], 200).data, embed_row(&w, t[0], 63).data);
     }
 
     #[test]

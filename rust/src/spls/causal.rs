@@ -22,20 +22,46 @@ pub fn apply_causal_mask(pam: &mut MatI) {
     }
 }
 
-/// Row-wise top-k over the visible prefix: row r keeps
-/// `min(ceil(k·(r+1)), r+1)` entries, at least 1.
+/// Diagonal-preserving top-k over one visible row: keep exactly
+/// `clamp(⌈k·n⌉, 1, n)` entries (largest first, ties toward the lower
+/// slot), with the last slot — the row's own diagonal position —
+/// always among them (swapped for the weakest selection when it misses
+/// the natural top-k, so the count is unchanged). This single helper
+/// is the selection rule shared by the prefill causal mask below and
+/// the decode engine's per-step keep-mask
+/// (`decode::incremental::topk_keep_with_diagonal`), which keeps the
+/// two paths bit-equivalent by construction.
+pub fn topk_row_keep_with_diagonal(row: &[i32], k_ratio: f32) -> Vec<bool> {
+    let n = row.len();
+    assert!(n >= 1);
+    let count = (((k_ratio * n as f32).ceil()) as usize).clamp(1, n);
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| row[b].cmp(&row[a]));
+    let chosen = &mut idx[..count];
+    if !chosen.contains(&(n - 1)) {
+        chosen[count - 1] = n - 1;
+    }
+    let mut keep = vec![false; n];
+    for &c in chosen.iter() {
+        keep[c] = true;
+    }
+    keep
+}
+
+/// Row-wise top-k over the visible prefix: row r keeps exactly
+/// `min(ceil(k·(r+1)), r+1)` entries (at least 1), and **never prunes
+/// the diagonal** — position r is always visible to row r and usually
+/// dominant, and the decode path's recovery semantics rely on it
+/// (selection rule: [`topk_row_keep_with_diagonal`]).
 pub fn causal_topk_mask(pam: &MatI, k_ratio: f32) -> Mat<bool> {
     let mut mask = Mat::from_vec(pam.rows, pam.cols, vec![false; pam.rows * pam.cols]);
-    let mut idx: Vec<usize> = Vec::new();
     for r in 0..pam.rows {
         let visible = (r + 1).min(pam.cols);
-        let keep = (((k_ratio * visible as f32).ceil()) as usize).clamp(1, visible);
-        idx.clear();
-        idx.extend(0..visible);
-        let row = pam.row(r);
-        idx.sort_by(|&a, &b| row[b].cmp(&row[a]));
-        for &c in idx.iter().take(keep) {
-            mask[(r, c)] = true;
+        let keep = topk_row_keep_with_diagonal(&pam.row(r)[..visible], k_ratio);
+        for (c, &kept) in keep.iter().enumerate() {
+            if kept {
+                mask[(r, c)] = true;
+            }
         }
     }
     mask
@@ -54,6 +80,16 @@ fn causal_l1(a: &[i32], b: &[i32], ra: usize, rb: usize) -> f64 {
         nb += (b[c] as i64).abs();
     }
     diff as f64 / na.max(nb).max(1) as f64
+}
+
+/// Causal similarity of two rows over their shared visible prefix, in
+/// `[0, 1]`: `1 − dist/2`, where the normalized L1 distance is bounded
+/// by 2 (`Σ|aᵢ−bᵢ| ≤ Σ|aᵢ| + Σ|bᵢ| ≤ 2·max(Σ|aᵢ|, Σ|bᵢ|)`). Symmetric
+/// in its arguments; identical prefixes score exactly 1. This is the
+/// analysis-facing form of the threshold comparison in
+/// [`causal_local_similarity`].
+pub fn causal_row_similarity(a: &[i32], b: &[i32], ra: usize, rb: usize) -> f64 {
+    1.0 - causal_l1(a, b, ra, rb) / 2.0
 }
 
 /// Windowed local similarity on a causal SPA: rows compare over the
@@ -193,5 +229,65 @@ mod tests {
         let lo = causal_local_similarity(&spa, 8, 0.1).n_similar();
         let hi = causal_local_similarity(&spa, 8, 0.9).n_similar();
         assert!(hi >= lo);
+    }
+
+    #[test]
+    fn prop_topk_keeps_exact_count_and_never_prunes_diagonal() {
+        // property: per row, exactly min(⌈k·(r+1)⌉, r+1) (≥ 1) entries
+        // survive, the diagonal is always among them, and nothing
+        // beyond the visible prefix is kept — on *random* PAMs, where
+        // the diagonal is frequently not in the natural top-k
+        crate::util::prop::check(60, |rng| {
+            let l = 2 + rng.below(30) as usize;
+            let k = 0.02 + rng.f64() as f32 * 0.98;
+            let mut pam = MatI::from_fn(l, l, |_, _| rng.int_in(-100, 100) as i32);
+            apply_causal_mask(&mut pam);
+            let mask = causal_topk_mask(&pam, k);
+            for r in 0..l {
+                let visible = r + 1;
+                let want = (((k * visible as f32).ceil()) as usize).clamp(1, visible);
+                let kept = mask.row(r).iter().filter(|&&b| b).count();
+                assert_eq!(kept, want, "row {r}: kept {kept}, want {want} (k={k})");
+                assert!(mask[(r, r)], "row {r} pruned its diagonal");
+                for c in visible..l {
+                    assert!(!mask[(r, c)], "row {r} kept future col {c}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_causal_similarity_symmetric_and_in_unit_range() {
+        crate::util::prop::check(60, |rng| {
+            let l = 1 + rng.below(24) as usize;
+            let a: Vec<i32> = (0..l).map(|_| rng.int_in(-80, 80) as i32).collect();
+            let b: Vec<i32> = (0..l).map(|_| rng.int_in(-80, 80) as i32).collect();
+            let ra = rng.below(l as u64) as usize;
+            let rb = rng.below(l as u64) as usize;
+            let s_ab = causal_row_similarity(&a, &b, ra, rb);
+            let s_ba = causal_row_similarity(&b, &a, rb, ra);
+            assert_eq!(s_ab, s_ba, "similarity must be symmetric");
+            assert!((0.0..=1.0).contains(&s_ab), "similarity {s_ab} out of [0,1]");
+            assert_eq!(causal_row_similarity(&a, &a, ra, ra), 1.0, "self-similarity");
+        });
+    }
+
+    #[test]
+    fn prop_identical_visible_prefixes_are_fully_similar() {
+        // rows that agree on the shared prefix score 1 even when their
+        // (invisible) tails diverge — the causal-similarity contract
+        crate::util::prop::check(40, |rng| {
+            let l = 2 + rng.below(20) as usize;
+            let ra = rng.below(l as u64) as usize;
+            let rb = rng.below(l as u64) as usize;
+            let mut a: Vec<i32> = (0..l).map(|_| rng.int_in(-50, 50) as i32).collect();
+            let mut b = a.clone();
+            let shared = ra.min(rb) + 1;
+            for c in shared..l {
+                a[c] = rng.int_in(-50, 50) as i32;
+                b[c] = rng.int_in(-50, 50) as i32;
+            }
+            assert_eq!(causal_row_similarity(&a, &b, ra, rb), 1.0);
+        });
     }
 }

@@ -21,14 +21,17 @@ pub mod qkv;
 pub mod similarity;
 pub mod topk;
 
-pub use causal::{apply_causal_mask, causal_local_similarity, causal_topk_mask};
+pub use causal::{
+    apply_causal_mask, causal_local_similarity, causal_row_similarity, causal_topk_mask,
+    topk_row_keep_with_diagonal,
+};
 pub use mfi::{ffn_plan, FfnPlan, MfiVote};
 pub use plan::{
     plan_layer_causal,
     computation_reduction, dense_layer_flops, dense_model_flops, plan_layer,
     plan_layer_from_inputs, sparse_layer_flops, LayerFlops, LayerPlan,
 };
-pub use plan_cache::{seq_bucket, CacheStats, PlanCache, PlanKey, SharedPlanCache};
+pub use plan_cache::{decode_bucket, seq_bucket, CacheStats, PlanCache, PlanKey, SharedPlanCache};
 pub use predict::{predict_attention, predict_matmul, predict_matmul_faithful, SjaProduct};
 pub use qkv::{recover_rows, HeadPlan};
 pub use similarity::{local_similarity, ratio_windows_similar, SimilarityMap};

@@ -12,6 +12,15 @@
 //! `LayerPlan` the planner produced, so cached plans are **bit-identical**
 //! to freshly computed ones — asserted by `coordinator::server` tests.
 //!
+//! The decode tier memoizes **per-step plans** here too
+//! (`get_step`/`put_step`): entries live in their own map under
+//! [`decode_bucket`] power-of-two *prefix* buckets (a growing session
+//! transitions buckets O(log L) times instead of once per step), keyed
+//! by the exact token prefix + SPLS point + eviction parameters, so
+//! replaying a prefix serves every step's planning from cache —
+//! bit-equivalently, since a `StepPlan` fully determines the
+//! predictor's post-step state.
+//!
 //! `PlanCache` is single-threaded; [`SharedPlanCache`] wraps it in
 //! `Arc<Mutex<..>>` for the replica pool (std sync only — no tokio in
 //! the vendored crate set, see DESIGN.md §Environment). Lookups and
@@ -21,6 +30,7 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use crate::config::SplsConfig;
+use crate::decode::incremental::StepPlan;
 use crate::quant::QuantMethod;
 use crate::spls::plan::LayerPlan;
 
@@ -47,6 +57,19 @@ pub struct PlanKey {
 /// two, clamped below at 8.
 pub fn seq_bucket(len: usize) -> usize {
     len.max(8).next_power_of_two()
+}
+
+/// Decode-aware bucket for step-plan entries: power-of-two **prefix**
+/// buckets (≥ 8), the partition key a bucket-scoped residency bound
+/// would operate on. Prefill shapes arrive at a handful of fixed
+/// lengths, but decode grows the prefix by 1 every step — per-length
+/// buckets would make every step of every session its own group, while
+/// power-of-two prefix buckets change only at 8 → 16 → 32 → …
+/// boundaries: O(log L) groups per L-step generation (pinned by the
+/// unit tests below). Today the bucket only partitions [`StepKey`]s —
+/// per-bucket capacity bounds are the deployment hook, not yet wired.
+pub fn decode_bucket(prefix_len: usize) -> usize {
+    prefix_len.max(8).next_power_of_two()
 }
 
 /// FNV-1a over the token ids and the SPLS operating point. Collisions
@@ -80,6 +103,36 @@ struct Entry {
     tick: u64,
 }
 
+/// Cache identity of one decode step's plan: the decode bucket of the
+/// token prefix plus a fingerprint of the exact prefix, the SPLS
+/// operating point, and the eviction parameters (budget/recent change
+/// which slots exist, so they are part of the plan's identity).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+struct StepKey {
+    bucket: usize,
+    fingerprint: u64,
+}
+
+fn fingerprint_step(tokens: &[i32], spls: &SplsConfig, budget: usize, recent: usize) -> u64 {
+    let mut h = fingerprint(tokens, spls);
+    for v in [budget as u64, recent as u64] {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+struct StepEntry {
+    tokens: Arc<[i32]>,
+    spls: SplsConfig,
+    budget: usize,
+    recent: usize,
+    plan: StepPlan,
+    tick: u64,
+}
+
 /// Aggregate cache counters, snapshot into `ServeMetrics`.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct CacheStats {
@@ -93,6 +146,15 @@ pub struct CacheStats {
     pub entries: usize,
     /// Configured per-layer entry capacity.
     pub capacity: usize,
+    /// Decode step-plan lookups served from cache.
+    pub step_hits: usize,
+    /// Decode step-plan lookups that fell through to the predictor.
+    pub step_misses: usize,
+    /// Live decode step-plan entries.
+    pub step_entries: usize,
+    /// Decode step-plan entries evicted by LRU (separate from the
+    /// prefill-plan `evictions` so mixed workloads stay diagnosable).
+    pub step_evictions: usize,
 }
 
 impl CacheStats {
@@ -105,16 +167,31 @@ impl CacheStats {
             self.hits as f64 / total as f64
         }
     }
+
+    /// Hit fraction over decode step-plan lookups (0 when cold).
+    pub fn step_hit_rate(&self) -> f64 {
+        let total = self.step_hits + self.step_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.step_hits as f64 / total as f64
+        }
+    }
 }
 
-/// LRU cache of per-layer SPLS plans.
+/// LRU cache of per-layer SPLS plans plus decode step plans (separate
+/// map, same capacity bound and LRU discipline).
 pub struct PlanCache {
     map: HashMap<PlanKey, Entry>,
+    steps: HashMap<StepKey, StepEntry>,
     capacity: usize,
     tick: u64,
     hits: usize,
     misses: usize,
     evictions: usize,
+    step_hits: usize,
+    step_misses: usize,
+    step_evictions: usize,
 }
 
 impl PlanCache {
@@ -122,11 +199,15 @@ impl PlanCache {
         assert!(capacity >= 1, "plan cache needs at least one slot");
         Self {
             map: HashMap::with_capacity(capacity.min(4096)),
+            steps: HashMap::new(),
             capacity,
             tick: 0,
             hits: 0,
             misses: 0,
             evictions: 0,
+            step_hits: 0,
+            step_misses: 0,
+            step_evictions: 0,
         }
     }
 
@@ -248,6 +329,82 @@ impl PlanCache {
         }
     }
 
+    /// Look up one decode step's plan under the exact token prefix +
+    /// SPLS operating point + eviction parameters; refreshes recency.
+    pub fn get_step(
+        &mut self,
+        tokens: &[i32],
+        spls: &SplsConfig,
+        budget: usize,
+        recent: usize,
+    ) -> Option<StepPlan> {
+        let key = StepKey {
+            bucket: decode_bucket(tokens.len()),
+            fingerprint: fingerprint_step(tokens, spls, budget, recent),
+        };
+        self.tick += 1;
+        let tick = self.tick;
+        let hit = match self.steps.get_mut(&key) {
+            Some(e)
+                if e.tokens.as_ref() == tokens
+                    && e.spls == *spls
+                    && e.budget == budget
+                    && e.recent == recent =>
+            {
+                e.tick = tick;
+                Some(e.plan.clone())
+            }
+            _ => None,
+        };
+        if hit.is_some() {
+            self.step_hits += 1;
+        } else {
+            self.step_misses += 1;
+        }
+        hit
+    }
+
+    /// Insert one decode step's plan, evicting the LRU step entry at
+    /// capacity (step entries share the configured capacity bound but
+    /// live in their own map — decode residency never evicts prefill
+    /// plans, and vice versa).
+    pub fn put_step(
+        &mut self,
+        tokens: &[i32],
+        spls: &SplsConfig,
+        budget: usize,
+        recent: usize,
+        plan: StepPlan,
+    ) {
+        let key = StepKey {
+            bucket: decode_bucket(tokens.len()),
+            fingerprint: fingerprint_step(tokens, spls, budget, recent),
+        };
+        self.tick += 1;
+        if self.steps.len() >= self.capacity && !self.steps.contains_key(&key) {
+            if let Some(lru) = self
+                .steps
+                .iter()
+                .min_by_key(|(_, e)| e.tick)
+                .map(|(k, _)| *k)
+            {
+                self.steps.remove(&lru);
+                self.step_evictions += 1;
+            }
+        }
+        self.steps.insert(
+            key,
+            StepEntry {
+                tokens: tokens.to_vec().into(),
+                spls: *spls,
+                budget,
+                recent,
+                plan,
+                tick: self.tick,
+            },
+        );
+    }
+
     pub fn stats(&self) -> CacheStats {
         CacheStats {
             hits: self.hits,
@@ -255,6 +412,10 @@ impl PlanCache {
             evictions: self.evictions,
             entries: self.map.len(),
             capacity: self.capacity,
+            step_hits: self.step_hits,
+            step_misses: self.step_misses,
+            step_entries: self.steps.len(),
+            step_evictions: self.step_evictions,
         }
     }
 }
@@ -296,6 +457,29 @@ impl SharedPlanCache {
         plans
     }
 
+    /// Decode-step lookup (see [`PlanCache::get_step`]).
+    pub fn get_step(
+        &self,
+        tokens: &[i32],
+        spls: &SplsConfig,
+        budget: usize,
+        recent: usize,
+    ) -> Option<StepPlan> {
+        self.0.lock().unwrap().get_step(tokens, spls, budget, recent)
+    }
+
+    /// Decode-step insert (see [`PlanCache::put_step`]).
+    pub fn put_step(
+        &self,
+        tokens: &[i32],
+        spls: &SplsConfig,
+        budget: usize,
+        recent: usize,
+        plan: StepPlan,
+    ) {
+        self.0.lock().unwrap().put_step(tokens, spls, budget, recent, plan)
+    }
+
     pub fn stats(&self) -> CacheStats {
         self.0.lock().unwrap().stats()
     }
@@ -332,6 +516,97 @@ mod tests {
         assert_eq!(seq_bucket(9), 16);
         assert_eq!(seq_bucket(64), 64);
         assert_eq!(seq_bucket(65), 128);
+    }
+
+    fn synth_step(prefix: usize) -> StepPlan {
+        use crate::decode::incremental::{HeadStepPlan, LayerStepPlan};
+        StepPlan {
+            layers: vec![LayerStepPlan {
+                heads: vec![HeadStepPlan {
+                    row: (0..prefix as i32).collect(),
+                    keep: vec![true; prefix],
+                    k8: vec![1, 2, 3, 4],
+                    similar: false,
+                }],
+            }],
+        }
+    }
+
+    #[test]
+    fn decode_bucket_boundaries_pinned() {
+        assert_eq!(decode_bucket(1), 8);
+        assert_eq!(decode_bucket(8), 8);
+        assert_eq!(decode_bucket(9), 16);
+        assert_eq!(decode_bucket(16), 16);
+        assert_eq!(decode_bucket(17), 32);
+        assert_eq!(decode_bucket(64), 64);
+        assert_eq!(decode_bucket(65), 128);
+        assert_eq!(decode_bucket(128), 128);
+    }
+
+    #[test]
+    fn decode_bucket_transitions_log_not_linear_over_growth_sweep() {
+        // a 1..=128-step generation must touch only the 5 power-of-two
+        // buckets and transition at most 4 times — not once per step
+        let buckets: Vec<usize> = (1..=128).map(decode_bucket).collect();
+        let mut distinct = buckets.clone();
+        distinct.dedup();
+        assert_eq!(distinct, vec![8, 16, 32, 64, 128]);
+        let transitions = buckets.windows(2).filter(|w| w[0] != w[1]).count();
+        assert_eq!(transitions, 4);
+    }
+
+    #[test]
+    fn step_growth_sweep_replays_at_full_hit_rate() {
+        // first pass over a growing 1..=128 prefix populates; a replay
+        // of the same generation must hit on every step
+        let mut cache = PlanCache::new(256);
+        let spls = SplsConfig::default();
+        let full = toks(9, 128);
+        for t in 1..=128 {
+            let prefix = &full[..t];
+            assert!(cache.get_step(prefix, &spls, 32, 4).is_none(), "cold step {t}");
+            cache.put_step(prefix, &spls, 32, 4, synth_step(t));
+        }
+        for t in 1..=128 {
+            let prefix = &full[..t];
+            let plan = cache.get_step(prefix, &spls, 32, 4).expect("warm step");
+            assert_eq!(plan, synth_step(t), "cached step plan must be bit-identical");
+        }
+        let s = cache.stats();
+        assert_eq!((s.step_hits, s.step_misses, s.step_entries), (128, 128, 128));
+        assert!((s.step_hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn step_identity_includes_budget_and_recent() {
+        let mut cache = PlanCache::new(16);
+        let spls = SplsConfig::default();
+        let t = toks(3, 24);
+        cache.put_step(&t, &spls, 32, 4, synth_step(24));
+        assert!(cache.get_step(&t, &spls, 16, 4).is_none(), "budget is identity");
+        assert!(cache.get_step(&t, &spls, 32, 8).is_none(), "recent is identity");
+        assert!(cache.get_step(&t, &spls, 32, 4).is_some());
+    }
+
+    #[test]
+    fn step_entries_lru_evict_without_touching_layer_plans() {
+        let mut cache = PlanCache::new(2);
+        let spls = SplsConfig::default();
+        let t = toks(5, 32);
+        cache.put_model(&t, &spls, QuantMethod::Hlog, &[synth_plan(1), synth_plan(2)]);
+        for len in [8usize, 12, 16] {
+            cache.put_step(&t[..len], &spls, 32, 4, synth_step(len));
+        }
+        // capacity 2: the oldest step prefix fell out…
+        assert!(cache.get_step(&t[..8], &spls, 32, 4).is_none());
+        assert!(cache.get_step(&t[..16], &spls, 32, 4).is_some());
+        // …but the prefill layer plans are untouched
+        assert!(cache.get_model(&t, &spls, QuantMethod::Hlog, 2).is_some());
+        let s = cache.stats();
+        assert_eq!(s.step_entries, 2);
+        assert_eq!(s.step_evictions, 1, "step eviction counted separately");
+        assert_eq!(s.evictions, 0, "prefill evictions untouched by step churn");
     }
 
     #[test]

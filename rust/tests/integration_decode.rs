@@ -1,0 +1,189 @@
+//! Decode-engine correctness: the headline contract is that with an
+//! unbounded KV budget, greedy `generate` output is **bit-identical**
+//! to repeatedly re-running the full causal prefill forward on the
+//! growing sequence — the no-eviction decode path is a pure refactor
+//! of prefill. Plus: eviction respects budgets, the Spls machinery
+//! with everything gated off equals the dense path, and streaming
+//! serve_generate matches offline decode.
+
+use std::sync::Arc;
+
+use esact::config::SplsConfig;
+use esact::decode::{
+    generate, DecodeConfig, DecodeEngine, DecodeMode, DecodeState, GenSession, Sampling,
+};
+use esact::model::tensor::argmax;
+use esact::model::{next_token_logits, TinyWeights};
+use esact::spls::SharedPlanCache;
+use esact::util::rng::Xoshiro256pp;
+
+fn weights() -> Arc<TinyWeights> {
+    let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny_weights.bin");
+    Arc::new(TinyWeights::load(&p).unwrap())
+}
+
+fn engine() -> Arc<DecodeEngine> {
+    Arc::new(DecodeEngine::new(weights()))
+}
+
+fn prompt(seed: u64, l: usize) -> Vec<i32> {
+    let mut rng = Xoshiro256pp::new(seed);
+    (0..l).map(|_| rng.below(64) as i32).collect()
+}
+
+#[test]
+fn unbounded_greedy_decode_is_bit_identical_to_iterated_prefill() {
+    let w = weights();
+    let eng = Arc::new(DecodeEngine::new(Arc::clone(&w)));
+    let p = prompt(1, 16);
+    let max_new = 16usize;
+
+    // reference: re-run the full causal prefill on the growing sequence
+    let mut seq = p.clone();
+    let mut want = Vec::with_capacity(max_new);
+    for _ in 0..max_new {
+        let logits = next_token_logits(&w, &seq);
+        let t = argmax(&logits) as i32;
+        want.push(t);
+        seq.push(t);
+    }
+
+    let got = generate(&eng, DecodeConfig::default(), &p, max_new, Sampling::Greedy, |_, _| {});
+    assert_eq!(got.tokens, want, "decode stream diverged from iterated prefill");
+    assert_eq!(got.stats.evictions, 0, "unbounded budget must never evict");
+}
+
+#[test]
+fn unbounded_decode_logits_are_bit_identical_at_every_step() {
+    // stronger than token equality: the raw f32 logits match bitwise
+    let w = weights();
+    let eng = Arc::new(DecodeEngine::new(Arc::clone(&w)));
+    let seq = prompt(2, 28);
+    let mut st = DecodeState::new(eng, DecodeConfig::default());
+    for t in 1..=seq.len() {
+        let got = st.push(seq[t - 1]);
+        let want = next_token_logits(&w, &seq[..t]);
+        assert_eq!(got, want, "logits diverged at prefix length {t}");
+    }
+}
+
+#[test]
+fn spls_with_gating_disabled_equals_dense_decode_bitwise() {
+    // top_k = 1 (keep all), sim_threshold < 0 (never similar),
+    // ffn_threshold = MAX (never skip): the Spls pipeline runs its
+    // prediction machinery but gates nothing — logits must equal the
+    // dense path exactly, making the gated path a strict superset
+    let eng = engine();
+    let seq = prompt(3, 20);
+    let spls =
+        SplsConfig { top_k: 1.0, sim_threshold: -1.0, ffn_threshold: usize::MAX, window: 8 };
+    let cfg = DecodeConfig { mode: DecodeMode::Spls, spls, ..DecodeConfig::default() };
+    let mut a = DecodeState::new(Arc::clone(&eng), cfg);
+    let mut b = DecodeState::new(eng, DecodeConfig::default());
+    for &t in &seq {
+        assert_eq!(a.push(t), b.push(t));
+    }
+}
+
+#[test]
+fn evicting_decode_respects_budget_and_stays_finite() {
+    let eng = engine();
+    let p = prompt(4, 32);
+    let cfg = DecodeConfig {
+        mode: DecodeMode::Spls,
+        kv_budget: 16,
+        recent: 4,
+        spls: SplsConfig::default(),
+    };
+    let mut s = GenSession::new(Arc::clone(&eng), cfg, p, 32, Sampling::Greedy);
+    while !s.done() {
+        s.run_steps(8);
+    }
+    let stats = s.stats();
+    assert!(stats.evictions > 0, "63 cached tokens into 16 slots must evict");
+    assert_eq!(s.generated().len(), 32);
+    assert!(s.generated().iter().all(|&t| (0..64).contains(&t)));
+    assert!(s.last_logits().unwrap().iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn serve_generate_matches_offline_decode_and_streams_chunks() {
+    use esact::coordinator::server::Mode;
+    use esact::coordinator::{GenRequest, Server};
+    use std::sync::mpsc;
+    use std::time::Instant;
+
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let srv = Server::new(&dir, Mode::Dense, SplsConfig::default()).unwrap();
+    let eng = engine();
+    let prompts: Vec<Vec<i32>> = (0..4).map(|i| prompt(10 + i, 12)).collect();
+    let max_new = 10usize;
+    let want: Vec<Vec<i32>> = prompts
+        .iter()
+        .map(|p| {
+            generate(&eng, DecodeConfig::default(), p, max_new, Sampling::Greedy, |_, _| {})
+                .tokens
+        })
+        .collect();
+
+    let (tx, rx) = mpsc::channel();
+    let (ctx, crx) = mpsc::channel();
+    for (i, p) in prompts.iter().enumerate() {
+        tx.send(GenRequest {
+            id: i as u64,
+            prompt: p.clone(),
+            max_new,
+            sampling: Sampling::Greedy,
+            arrived: Instant::now(),
+        })
+        .unwrap();
+    }
+    drop(tx);
+    let drain = std::thread::spawn(move || {
+        let mut streams: Vec<Vec<i32>> = vec![Vec::new(); 4];
+        let mut chunks = 0usize;
+        for c in crx.iter() {
+            chunks += 1;
+            streams[c.id as usize].extend(&c.tokens);
+        }
+        (streams, chunks)
+    });
+    let outcome = srv.serve_generate(rx, ctx, DecodeConfig::default(), 2, 3).unwrap();
+    let (streams, chunks) = drain.join().unwrap();
+    for (got, want) in streams.iter().zip(&want) {
+        assert_eq!(got, want, "replicated streaming changed a generation");
+    }
+    assert_eq!(outcome.metrics.tokens, 4 * max_new);
+    assert!(
+        chunks > 4,
+        "slices of 3 steps must stream multiple chunks per session (got {chunks})"
+    );
+}
+
+#[test]
+fn step_plan_cache_makes_replay_deterministic_with_hits() {
+    let eng = engine();
+    let cache = SharedPlanCache::new(2048);
+    let p = prompt(6, 24);
+    let cfg = DecodeConfig {
+        mode: DecodeMode::Spls,
+        kv_budget: 16,
+        recent: 4,
+        spls: SplsConfig::default(),
+    };
+    let run = || {
+        let mut s = GenSession::new(Arc::clone(&eng), cfg, p.clone(), 12, Sampling::Greedy)
+            .with_plan_cache(cache.clone());
+        while !s.done() {
+            s.run_steps(16);
+        }
+        (s.generated().to_vec(), s.stats())
+    };
+    let (first, s1) = run();
+    assert!(s1.plan_misses > 0 && s1.plan_hits == 0, "cold run computes: {s1:?}");
+    let (second, s2) = run();
+    assert_eq!(first, second, "cache hits changed the generated stream");
+    assert!(s2.plan_hits > 0, "warm run must hit: {s2:?}");
+    assert_eq!(s2.plan_misses, 0, "fully warm replay recomputes nothing: {s2:?}");
+    assert!(cache.stats().step_hit_rate() > 0.0);
+}

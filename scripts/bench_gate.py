@@ -1,21 +1,25 @@
 #!/usr/bin/env python3
 """CI bench-regression gate.
 
-Compares the serving bench's BENCH_2.json against the committed
-bench_baseline.json and fails (exit 1) when:
+Dispatches on the current report's `schema`:
 
-  * throughput of any matching (mode, replicas) saturated cell regresses
-    more than 15% below the baseline floor, or
-  * the report is missing required fields (schema rot), or
-  * 4-replica SPLS saturated throughput falls below 1-replica (scaling
-    inversion — the serving tier's reason to exist).
+* schema 2 — the serving bench's BENCH_2.json: per-(mode, replicas)
+  saturated-throughput floors plus the 1→4-replica SPLS scaling
+  inversion check.
+* schema 3 — the decode bench's BENCH_3.json: per-(mode, prefix,
+  kv_budget) tokens/sec floors plus the headline evict-vs-dense check
+  (evicting-cache decode must not lose to dense-cache decode at
+  prefix ≥ 64 — warn below 1.0×, fail below 0.85×, mirroring the
+  serving gate's noise tolerance on shared runners).
 
-Baseline refresh: run `ESACT_BENCH_JSON=BENCH_2.json cargo bench --bench
-serving` on a quiet machine and copy BENCH_2.json over
-bench_baseline.json (keep the floors conservative: CI runners are
-noisy, and the gate only ever compares *against* the committed floor).
+Both compare against the same committed bench_baseline.json ("saturated"
+floors for schema 2, "decode" floors for schema 3).
 
-Usage: bench_gate.py BENCH_2.json bench_baseline.json
+Baseline refresh: run the matching bench with ESACT_BENCH_JSON set on a
+quiet machine and copy the cells over, scaled down ~2x for CI headroom
+(the gate only ever compares *against* the committed floor).
+
+Usage: bench_gate.py CURRENT.json BASELINE.json
 """
 
 import json
@@ -29,15 +33,9 @@ def die(msg: str) -> None:
     sys.exit(1)
 
 
-def main() -> None:
-    if len(sys.argv) != 3:
-        die(f"usage: {sys.argv[0]} CURRENT.json BASELINE.json")
-    with open(sys.argv[1]) as f:
-        cur = json.load(f)
-    with open(sys.argv[2]) as f:
-        base = json.load(f)
-
-    for key in ("schema", "executor", "saturated", "poisson"):
+def check_serving(cur: dict, base: dict) -> list:
+    failures = []
+    for key in ("executor", "saturated", "poisson"):
         if key not in cur:
             die(f"current report missing '{key}'")
     for row in cur["saturated"] + cur["poisson"]:
@@ -54,7 +52,6 @@ def main() -> None:
                 die(f"report row missing '{field}': {row}")
 
     current = {(r["mode"], r["replicas"]): r for r in cur["saturated"]}
-    failures = []
     print(f"{'cell':<14} {'baseline':>10} {'current':>10} {'floor':>10}  verdict")
     for b in base.get("saturated", []):
         key = (b["mode"], b["replicas"])
@@ -90,6 +87,89 @@ def main() -> None:
             print(f"  ! warning: t4 {t4:.1f} < t1 {t1:.1f} (within noise tolerance)")
     else:
         failures.append("report lacks SPLS saturated cells for replicas 1 and 4")
+    return failures
+
+
+def check_decode(cur: dict, base: dict) -> list:
+    failures = []
+    for key in ("decode", "budget_sweep", "evict_vs_dense", "plan_replay"):
+        if key not in cur:
+            die(f"current report missing '{key}'")
+    for row in cur["decode"] + cur["budget_sweep"]:
+        for field in ("mode", "prefix", "kv_budget", "tokens_per_sec", "ms_per_token"):
+            if field not in row:
+                die(f"report row missing '{field}': {row}")
+    for row in cur["evict_vs_dense"]:
+        for field in ("prefix", "dense_tps", "evict_tps", "speedup"):
+            if field not in row:
+                die(f"evict_vs_dense row missing '{field}': {row}")
+    for field in ("cold_tps", "warm_tps", "step_hit_rate"):
+        if field not in cur["plan_replay"]:
+            die(f"plan_replay missing '{field}': {cur['plan_replay']}")
+
+    current = {(r["mode"], r["prefix"], r["kv_budget"]): r for r in cur["decode"]}
+    print(f"{'cell':<22} {'baseline':>10} {'current':>10} {'floor':>10}  verdict")
+    for b in base.get("decode", []):
+        key = (b["mode"], b["prefix"], b["kv_budget"])
+        c = current.get(key)
+        if c is None:
+            failures.append(f"decode cell {key} missing from current report")
+            continue
+        floor = TOLERANCE * b["tokens_per_sec"]
+        ok = c["tokens_per_sec"] >= floor
+        label = f"{b['mode']} p{b['prefix']} b{b['kv_budget']}"
+        print(
+            f"{label:<22} {b['tokens_per_sec']:>10.1f} "
+            f"{c['tokens_per_sec']:>10.1f} {floor:>10.1f}  {'ok' if ok else 'REGRESSED'}"
+        )
+        if not ok:
+            failures.append(
+                f"{key}: {c['tokens_per_sec']:.1f} tok/s < floor {floor:.1f} "
+                f"(baseline {b['tokens_per_sec']:.1f})"
+            )
+
+    # headline: evicting cache must beat dense cache at prefix >= 64
+    checked = False
+    for row in cur["evict_vs_dense"]:
+        prefix, speedup = row["prefix"], row["speedup"]
+        if prefix < 64:
+            continue
+        checked = True
+        print(
+            f"evict vs dense @ prefix {prefix}: {speedup:.2f}x "
+            f"({'wins' if speedup > 1.0 else 'LOSES'})"
+        )
+        if speedup < 0.85:
+            failures.append(
+                f"evicting-cache decode clearly loses to dense at prefix {prefix}: "
+                f"{speedup:.2f}x"
+            )
+        elif speedup < 1.0:
+            print(f"  ! warning: speedup {speedup:.2f}x < 1 (within noise tolerance)")
+    if not checked:
+        failures.append("report lacks evict_vs_dense cells at prefix >= 64")
+
+    replay = cur["plan_replay"]
+    if replay.get("step_hit_rate", 0.0) <= 0.0:
+        failures.append(f"step-plan cache never hit on replay: {replay}")
+    return failures
+
+
+def main() -> None:
+    if len(sys.argv) != 3:
+        die(f"usage: {sys.argv[0]} CURRENT.json BASELINE.json")
+    with open(sys.argv[1]) as f:
+        cur = json.load(f)
+    with open(sys.argv[2]) as f:
+        base = json.load(f)
+
+    schema = cur.get("schema")
+    if schema == 2:
+        failures = check_serving(cur, base)
+    elif schema == 3:
+        failures = check_decode(cur, base)
+    else:
+        die(f"unknown report schema {schema!r}")
 
     if failures:
         for f in failures:
