@@ -2,7 +2,7 @@
 
 ARTIFACTS := rust/artifacts
 
-.PHONY: build test bench bench-serving bench-decode bench-gate check-features artifacts clean-artifacts
+.PHONY: build test bench bench-serving bench-decode bench-forward bench-gate check-features artifacts clean-artifacts
 
 build:
 	cargo build --release
@@ -22,10 +22,15 @@ bench-serving:
 bench-decode:
 	ESACT_BENCH_JSON=$(CURDIR)/BENCH_3.json cargo bench --bench decode
 
+# Packed-vs-unpacked prefill throughput + BENCH_4.json report.
+bench-forward:
+	ESACT_BENCH_JSON=$(CURDIR)/BENCH_4.json cargo bench --bench forward
+
 # What CI's bench-regression job runs after the benches.
-bench-gate: bench-serving bench-decode
+bench-gate: bench-serving bench-decode bench-forward
 	python3 scripts/bench_gate.py BENCH_2.json bench_baseline.json
 	python3 scripts/bench_gate.py BENCH_3.json bench_baseline.json
+	python3 scripts/bench_gate.py BENCH_4.json bench_baseline.json
 
 # What CI's feature-matrix job runs.
 check-features:

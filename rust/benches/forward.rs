@@ -1,0 +1,172 @@
+//! Forward-path benchmarks: prefill tokens/sec of the **unpacked
+//! reference** (`model::transformer`, per-call head slicing, serial
+//! kernels) vs the **packed execution engine** (`model::engine`:
+//! pre-packed operands, scratch-arena reuse, row-parallel
+//! autovectorized kernels) across {dense, masked, sparse} × sequence
+//! length. The two are bit-identical (`tests/packed_parity.rs`), so
+//! every speedup cell is a pure execution-engine win.
+//!
+//! Emits the machine-readable `BENCH_4.json` report (set
+//! `ESACT_BENCH_JSON`) that `scripts/bench_gate.py` gates against the
+//! committed `bench_baseline.json`: absolute packed-throughput floors
+//! per cell, plus the headline packed-must-beat-unpacked inversion
+//! check at seq-len ≥ 64 (warn-only on single-core runners, where the
+//! row-parallel kernels have nothing to fan out over).
+
+use std::fmt::Write as _;
+use std::hint::black_box;
+use std::sync::Arc;
+use std::time::Instant;
+
+use esact::config::SplsConfig;
+use esact::model::{
+    forward_dense, forward_masked, forward_sparse, plan_model, PackedModel, TinyWeights,
+};
+use esact::quant::QuantMethod;
+use esact::spls::plan::LayerPlan;
+use esact::util::rng::Xoshiro256pp;
+use esact::util::scratch::Scratch;
+
+const REPS: usize = 5;
+const ITERS: usize = 8;
+
+struct Cell {
+    path: &'static str,
+    seq_len: usize,
+    unpacked_tps: f64,
+    packed_tps: f64,
+}
+
+impl Cell {
+    fn speedup(&self) -> f64 {
+        self.packed_tps / self.unpacked_tps.max(1e-12)
+    }
+
+    fn print(&self) {
+        println!(
+            "  {:<6} L {:>3}: unpacked {:>9.0} tok/s | packed {:>9.0} tok/s | {:>5.2}x",
+            self.path,
+            self.seq_len,
+            self.unpacked_tps,
+            self.packed_tps,
+            self.speedup()
+        );
+    }
+
+    fn json(&self) -> String {
+        format!(
+            "{{\"path\": \"{}\", \"seq_len\": {}, \"unpacked_tps\": {:.2}, \
+             \"packed_tps\": {:.2}, \"speedup\": {:.4}}}",
+            self.path,
+            self.seq_len,
+            self.unpacked_tps,
+            self.packed_tps,
+            self.speedup()
+        )
+    }
+}
+
+/// Best-of-REPS prefill throughput of `f`, in tokens/sec for an
+/// `l`-token sequence (one warmup call sizes arenas and caches).
+fn best_tps(l: usize, mut f: impl FnMut()) -> f64 {
+    f();
+    let mut best = 0.0f64;
+    for _ in 0..REPS {
+        let t0 = Instant::now();
+        for _ in 0..ITERS {
+            f();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        best = best.max((l * ITERS) as f64 / dt.max(1e-12));
+    }
+    best
+}
+
+/// The serving tier's mask expansion (similar rows carry their critical
+/// row's mask) — what `ServerCore::masks_for` feeds the masked program.
+fn expand_masks(plans: &[LayerPlan], l: usize) -> Vec<f32> {
+    let mut out = Vec::new();
+    for plan in plans {
+        for head in &plan.heads {
+            for r in 0..l {
+                let src = head.sim.rep[r];
+                for c in 0..l {
+                    out.push(if head.mask[(src, c)] { 1.0 } else { 0.0 });
+                }
+            }
+        }
+    }
+    out
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = esact::util::artifacts_dir();
+    let weights = Arc::new(TinyWeights::load(&dir.join("tiny_weights.bin"))?);
+    let pm = Arc::new(PackedModel::new(Arc::clone(&weights)));
+    let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let mut rng = Xoshiro256pp::new(17);
+    let mut sc = Scratch::new();
+    let mut cells: Vec<Cell> = Vec::new();
+    let spls = SplsConfig::default();
+
+    println!("== prefill throughput: packed engine vs unpacked reference ({cores} cores) ==");
+    for l in [16usize, 32, 64] {
+        let toks: Vec<i32> = (0..l).map(|_| rng.below(64) as i32).collect();
+        let plans = plan_model(&weights, &toks, &spls, QuantMethod::Hlog);
+        let masks = expand_masks(&plans, l);
+
+        let unpacked = best_tps(l, || {
+            black_box(forward_dense(&weights, &toks));
+        });
+        let packed = best_tps(l, || {
+            black_box(pm.forward_dense(&toks, &mut sc));
+        });
+        cells.push(Cell { path: "dense", seq_len: l, unpacked_tps: unpacked, packed_tps: packed });
+
+        let unpacked = best_tps(l, || {
+            black_box(forward_masked(&weights, &toks, &masks));
+        });
+        let packed = best_tps(l, || {
+            black_box(pm.forward_masked(&toks, &masks, &mut sc));
+        });
+        cells.push(Cell { path: "masked", seq_len: l, unpacked_tps: unpacked, packed_tps: packed });
+
+        let unpacked = best_tps(l, || {
+            black_box(forward_sparse(&weights, &toks, &plans));
+        });
+        let packed = best_tps(l, || {
+            black_box(pm.forward_sparse(&toks, &plans, &mut sc));
+        });
+        cells.push(Cell { path: "sparse", seq_len: l, unpacked_tps: unpacked, packed_tps: packed });
+    }
+    for cell in &cells {
+        cell.print();
+    }
+    for cell in cells.iter().filter(|c| c.seq_len >= 64) {
+        let verdict = if cell.speedup() >= 1.5 {
+            "hits the 1.5x target ✓"
+        } else if cell.speedup() > 1.0 {
+            "wins, below target"
+        } else {
+            "LOSES ✗"
+        };
+        println!(
+            "  packed/unpacked @ {} L {}: {:.2}x ({verdict})",
+            cell.path,
+            cell.seq_len,
+            cell.speedup()
+        );
+    }
+
+    // --- machine-readable report for the CI regression gate ----------
+    if let Ok(path) = std::env::var("ESACT_BENCH_JSON") {
+        let rows = cells.iter().map(Cell::json).collect::<Vec<_>>().join(",\n    ");
+        let mut out = String::from("{\n  \"schema\": 4,\n");
+        let _ = writeln!(out, "  \"cores\": {cores},");
+        let _ = writeln!(out, "  \"forward\": [\n    {rows}\n  ]");
+        out.push_str("}\n");
+        std::fs::write(&path, out)?;
+        println!("\nwrote {path}");
+    }
+    Ok(())
+}

@@ -1,9 +1,9 @@
 //! Micro-benchmarks of the L3 hot paths, criterion-style (the criterion
 //! crate is not in the vendored set; `util::bench::Criterion` provides
 //! the same `bench_function` / `Bencher::iter` surface with warmup +
-//! percentile reporting). These are the §Perf measurement points in
-//! EXPERIMENTS.md, plus the single-thread vs rayon comparison for the
-//! parallelized SPLS→simulator hot path (quoted in the PR).
+//! percentile reporting). These are the L3 kernel measurement points
+//! (DESIGN.md §Host kernel layout), plus the single-thread vs rayon
+//! comparison for the parallelized SPLS→simulator hot path.
 
 use esact::config::{self, HardwareConfig, SplsConfig};
 use esact::model::tensor;

@@ -3,8 +3,8 @@
 //! **latency-vs-load-vs-replicas surface** — saturated throughput
 //! scaling from 1 → 4 replicas under Poisson load, plus open-loop
 //! latency percentiles across offered-load levels. These are the
-//! end-to-end numbers recorded in EXPERIMENTS.md §E2E/§Perf and the
-//! payload of CI's bench-regression gate.
+//! end-to-end serving measurements (DESIGN.md §Serving coordinator) and
+//! the payload of CI's bench-regression gate.
 //!
 //! Set `ESACT_BENCH_JSON=BENCH_2.json` to emit the machine-readable
 //! report (p50/p99 latency, throughput per replica, plan-cache hit

@@ -1,5 +1,5 @@
 //! End-to-end serving driver (the repo's E2E validation workload, see
-//! EXPERIMENTS.md §E2E): load the tiny classifier artifacts, serve a
+//! DESIGN.md §Serving coordinator): load the tiny classifier artifacts, serve a
 //! Poisson stream of test-set requests through the replicated
 //! coordinator (admission → continuous batcher → work-stealing replica
 //! tier → executors), in dense and SPLS modes, and report accuracy,

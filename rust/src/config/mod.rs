@@ -93,7 +93,8 @@ impl Default for SplsConfig {
     fn default() -> Self {
         // Paper's representative operating point (Figs 15/16: k=0.12,
         // w=8; s/f tuned per-task — these defaults hold loss ≤ 1% on the
-        // sparse-fine-tuned tiny substrate, see EXPERIMENTS.md).
+        // sparse-fine-tuned tiny substrate; the accuracy harness and
+        // tests/integration_regression.rs pin the corridor).
         Self { top_k: 0.12, sim_threshold: 0.6, ffn_threshold: 2, window: 8 }
     }
 }

@@ -23,7 +23,7 @@ use crate::config::SplsConfig;
 use crate::coordinator::batcher::{BatchPolicy, Batcher, Request};
 use crate::coordinator::replica::{self, Job, ReplicaEvent, ReplicaMetrics, WorkQueue};
 use crate::decode::{DecodeConfig, DecodeEngine, DecodeMode, GenSession, Sampling};
-use crate::model::{plan_model, TinyWeights};
+use crate::model::{PackedModel, TinyWeights};
 use crate::quant::QuantMethod;
 use crate::runtime::{Arg, ArtifactSet};
 use crate::spls::plan_cache::{CacheStats, SharedPlanCache, DEFAULT_CAPACITY};
@@ -171,12 +171,17 @@ pub enum Mode {
 pub(crate) struct ServerCore {
     artifacts: ArtifactSet,
     weights: Arc<TinyWeights>,
+    /// The packed execution model the host planner and every decode
+    /// session share (one packing per server, backend-independent —
+    /// the reference backend's executables hold their own shared
+    /// instance inside `artifacts`).
+    packed: Arc<PackedModel>,
     spls: SplsConfig,
     mode: Mode,
     n_classes: usize,
     cache: SharedPlanCache,
-    /// Shared decode engine (per-head weight slices + prediction
-    /// weights) for `serve_generate` sessions.
+    /// Shared decode engine (a view over `packed`) for
+    /// `serve_generate` sessions.
     engine: Arc<DecodeEngine>,
 }
 
@@ -191,7 +196,10 @@ impl ServerCore {
 
     /// Plan one request's SPLS masks, serving repeated shapes from the
     /// shared plan cache (hits are bit-identical to fresh planning —
-    /// the cache stores the planner's own output).
+    /// the cache stores the planner's own output). Fresh plans run on
+    /// the shared packed model (pre-quantized predictor operands) with
+    /// this worker thread's scratch arena; packed planning is
+    /// bit-identical to `model::plan_model` (`tests/packed_parity.rs`).
     fn masks_for(&self, tokens: &[i32]) -> Vec<f32> {
         let cfg = &self.weights.cfg;
         let plans = self.cache.get_or_compute(
@@ -199,7 +207,11 @@ impl ServerCore {
             &self.spls,
             QuantMethod::Hlog,
             cfg.n_layers,
-            || plan_model(&self.weights, tokens, &self.spls, QuantMethod::Hlog),
+            || {
+                crate::util::scratch::with_thread_scratch(|sc| {
+                    self.packed.plan_model(tokens, &self.spls, QuantMethod::Hlog, sc)
+                })
+            },
         );
         let l = cfg.seq_len;
         let mut out = Vec::with_capacity(cfg.n_layers * cfg.n_heads * l * l);
@@ -303,14 +315,27 @@ impl Server {
         cache_capacity: usize,
     ) -> Result<Self> {
         let artifacts = ArtifactSet::load(artifact_dir)?;
-        let weights = Arc::new(TinyWeights::load(&artifact_dir.join("tiny_weights.bin"))?);
-        let engine = Arc::new(DecodeEngine::new(Arc::clone(&weights)));
+        // one packing serves the whole coordinator: planner, decode
+        // engine and (on the reference backend) every replica's executor
+        // handle share a single Arc<PackedModel>, built once at load.
+        // The pjrt ArtifactSet doesn't expose weights, so that backend
+        // loads and packs its own copy here.
+        #[cfg(not(feature = "pjrt"))]
+        let (weights, packed) = (Arc::clone(&artifacts.weights), Arc::clone(&artifacts.packed));
+        #[cfg(feature = "pjrt")]
+        let (weights, packed) = {
+            let weights = Arc::new(TinyWeights::load(&artifact_dir.join("tiny_weights.bin"))?);
+            let packed = Arc::new(PackedModel::new(Arc::clone(&weights)));
+            (weights, packed)
+        };
+        let engine = Arc::new(DecodeEngine::from_packed(Arc::clone(&packed)));
         Ok(Self {
             seq_len: weights.cfg.seq_len,
             core: Arc::new(ServerCore {
                 n_classes: weights.cfg.n_classes,
                 artifacts,
                 weights,
+                packed,
                 spls,
                 mode,
                 cache: SharedPlanCache::new(cache_capacity),
@@ -714,6 +739,7 @@ impl GenLeader {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::plan_model;
     use crate::util::rng::Xoshiro256pp;
 
     fn artifacts_dir() -> std::path::PathBuf {

@@ -67,15 +67,28 @@ impl HeadKv {
         self.score.push(0.0);
     }
 
-    /// The cached keys as a `len × dh` matrix (decode computes
-    /// `q · Kᵀ` against it with the exact prefill accumulation order).
+    /// The cached keys as a `len × dh` matrix (copies; the decode hot
+    /// path reads [`HeadKv::k_data`] instead).
     pub fn k_mat(&self) -> MatF {
         MatF::from_vec(self.len(), self.dh, self.k.clone())
     }
 
-    /// The cached values as a `len × dh` matrix.
+    /// The cached values as a `len × dh` matrix (copying sibling of
+    /// [`HeadKv::v_data`]).
     pub fn v_mat(&self) -> MatF {
         MatF::from_vec(self.len(), self.dh, self.v.clone())
+    }
+
+    /// Zero-copy view of the cached keys, row-major `len × dh` — the
+    /// decode step computes `q · Kᵀ` directly against this (exact
+    /// prefill accumulation order, no per-step matrix clone).
+    pub fn k_data(&self) -> &[f32] {
+        &self.k
+    }
+
+    /// Zero-copy view of the cached values, row-major `len × dh`.
+    pub fn v_data(&self) -> &[f32] {
+        &self.v
     }
 
     /// Fold one predicted attention row into the cumulative scores:

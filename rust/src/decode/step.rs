@@ -1,10 +1,16 @@
 //! The decode-step forward: single-row attention against the pruned
 //! per-head KV cache, reusing the exact head math of
-//! `model::transformer` (same `matmul`/`linear`/`masked_softmax_rows`
-//! primitives, same accumulation order), so **unbounded-budget dense
-//! decode is bit-identical to re-running `forward_causal_hidden` on the
-//! growing sequence** — asserted by the tests here and by
+//! `model::transformer` (same accumulation order per output element, in
+//! zero-copy slice-kernel form), so **unbounded-budget dense decode is
+//! bit-identical to re-running `forward_causal_hidden` on the growing
+//! sequence** — asserted by the tests here and by
 //! `tests/integration_decode.rs`.
+//!
+//! The engine is a view over the shared [`PackedModel`] — per-head
+//! weight slices and int8 predictor operands are packed once per weight
+//! set (and shared with the serving executables and planner), and every
+//! session carries its own `util::scratch::Scratch` arena, so
+//! steady-state decode steps run without per-step matrix allocation.
 //!
 //! Two modes:
 //!
@@ -27,12 +33,13 @@ use crate::config::SplsConfig;
 use crate::decode::incremental::{HeadPredictor, HeadStepPlan, LayerStepPlan, StepPlan};
 use crate::decode::kv_cache::HeadKv;
 use crate::model::tensor::{
-    add_inplace, gelu_inplace, layernorm, linear, masked_softmax_rows, matmul,
+    add_inplace, gelu_inplace, layernorm_into, linear_into, masked_softmax_row,
 };
-use crate::model::{embed_row, lm_logits_row, TinyWeights};
+use crate::model::{lm_logits_row, PackedModel, TinyWeights};
 use crate::quant::quantize_sym8;
 use crate::spls::plan_cache::SharedPlanCache;
-use crate::util::mat::{Mat, MatF, MatI};
+use crate::util::mat::MatI;
+use crate::util::scratch::Scratch;
 
 /// Attention execution mode of a decode session.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -84,71 +91,37 @@ pub struct DecodeStats {
     pub plan_misses: usize,
 }
 
-/// Immutable per-weights state shared by every decode session: per-head
-/// f32 weight slices (so a step projects exactly one row per head, with
-/// accumulation bit-identical to the full-matrix prefill projections —
-/// output columns of `matmul` are independent) and the per-head int8
-/// prediction weights, quantized exactly like `model::plan_model` does.
+/// Immutable per-weights state shared by every decode session — a view
+/// over the [`PackedModel`]: per-head f32 weight slices (so a step
+/// projects exactly one row per head, with accumulation bit-identical
+/// to the full-matrix prefill projections — output columns of the
+/// matmul are independent) and the per-head int8 prediction weights,
+/// quantized exactly like `model::plan_model`'s operands. The serving
+/// tier packs the model once and shares it with the executables, the
+/// planner and this engine alike.
 pub struct DecodeEngine {
-    weights: Arc<TinyWeights>,
-    layers: Vec<EngineLayer>,
-}
-
-struct EngineLayer {
-    wq: Vec<MatF>,
-    bq: Vec<Vec<f32>>,
-    wk: Vec<MatF>,
-    bk: Vec<Vec<f32>>,
-    wv: Vec<MatF>,
-    bv: Vec<Vec<f32>>,
-    pred_wq: Vec<MatI>,
-    pred_wk: Vec<MatI>,
+    packed: Arc<PackedModel>,
 }
 
 impl DecodeEngine {
+    /// Pack the weights and build the engine.
     pub fn new(weights: Arc<TinyWeights>) -> Self {
-        let cfg = weights.cfg;
-        let dh = cfg.d_head();
-        let layers = weights
-            .layers
-            .iter()
-            .map(|lw| {
-                let slice_f = |m: &MatF, hi: usize| {
-                    MatF::from_fn(m.rows, dh, |r, c| m[(r, hi * dh + c)])
-                };
-                let slice_b = |b: &[f32], hi: usize| b[hi * dh..(hi + 1) * dh].to_vec();
-                let slice_8 = |m: &MatF, hi: usize| {
-                    let (q, _) = quantize_sym8(&slice_f(m, hi).data);
-                    MatI::from_vec(m.rows, dh, q)
-                };
-                let mut l = EngineLayer {
-                    wq: Vec::new(),
-                    bq: Vec::new(),
-                    wk: Vec::new(),
-                    bk: Vec::new(),
-                    wv: Vec::new(),
-                    bv: Vec::new(),
-                    pred_wq: Vec::new(),
-                    pred_wk: Vec::new(),
-                };
-                for hi in 0..cfg.n_heads {
-                    l.wq.push(slice_f(&lw.wq, hi));
-                    l.bq.push(slice_b(&lw.bq, hi));
-                    l.wk.push(slice_f(&lw.wk, hi));
-                    l.bk.push(slice_b(&lw.bk, hi));
-                    l.wv.push(slice_f(&lw.wv, hi));
-                    l.bv.push(slice_b(&lw.bv, hi));
-                    l.pred_wq.push(slice_8(&lw.wq, hi));
-                    l.pred_wk.push(slice_8(&lw.wk, hi));
-                }
-                l
-            })
-            .collect();
-        Self { weights, layers }
+        Self::from_packed(Arc::new(PackedModel::new(weights)))
+    }
+
+    /// Wrap an already-packed model (no repacking — the serving tier's
+    /// replicas all point at one `Arc<PackedModel>`).
+    pub fn from_packed(packed: Arc<PackedModel>) -> Self {
+        Self { packed }
     }
 
     pub fn weights(&self) -> &Arc<TinyWeights> {
-        &self.weights
+        self.packed.weights()
+    }
+
+    /// The shared packed model this engine runs on.
+    pub fn packed(&self) -> &Arc<PackedModel> {
+        &self.packed
     }
 }
 
@@ -173,11 +146,14 @@ pub struct DecodeState {
     layers: Vec<LayerState>,
     cache: Option<SharedPlanCache>,
     stats: DecodeStats,
+    /// Per-session scratch arena: steady-state steps reuse these
+    /// buffers instead of allocating per-step matrices.
+    scratch: Scratch,
 }
 
 impl DecodeState {
     pub fn new(eng: Arc<DecodeEngine>, cfg: DecodeConfig) -> Self {
-        let mcfg = eng.weights.cfg;
+        let mcfg = eng.weights().cfg;
         let dh = mcfg.d_head();
         if cfg.kv_budget != usize::MAX {
             assert!(cfg.kv_budget >= 2, "a finite KV budget needs at least 2 slots");
@@ -207,6 +183,7 @@ impl DecodeState {
             layers,
             cache: None,
             stats: DecodeStats::default(),
+            scratch: Scratch::new(),
         }
     }
 
@@ -243,9 +220,10 @@ impl DecodeState {
     /// Push one token through the model; returns the next-token logits.
     pub fn push(&mut self, token: i32) -> Vec<f32> {
         let eng = Arc::clone(&self.eng);
-        let w = eng.weights();
+        let w = Arc::clone(eng.weights());
         let mcfg = w.cfg;
-        let dh = mcfg.d_head();
+        let (d, dh) = (mcfg.d_model, mcfg.d_head());
+        let scale = 1.0 / (dh as f32).sqrt();
         let spls_mode = self.cfg.mode == DecodeMode::Spls;
         let p = self.tokens.len();
         self.tokens.push(token);
@@ -265,25 +243,37 @@ impl DecodeState {
         if cached.is_some() {
             self.stats.plan_hits += 1;
         }
-        let mut x = embed_row(w, token, p);
-        for (li, (lw, el)) in w.layers.iter().zip(&eng.layers).enumerate() {
-            let h = layernorm(&x, &lw.ln1_g, &lw.ln1_b);
+        // embed_row's values, written into the arena: embed[tok] + pos,
+        // with positions past the trained table clamped to the last row
+        let pos = p.min(mcfg.seq_len - 1);
+        self.scratch.x.reshape(1, d);
+        let erow = w.embed.row(token as usize);
+        for ((o, &e), &pv) in self.scratch.x.data.iter_mut().zip(erow).zip(w.pos.row(pos)) {
+            *o = e + pv;
+        }
+        for li in 0..mcfg.n_layers {
+            let lw = &w.layers[li];
+            let el = &eng.packed().packed_layers()[li];
+            self.scratch.h.reshape(1, d);
+            layernorm_into(&self.scratch.x, &lw.ln1_g, &lw.ln1_b, &mut self.scratch.h);
             let hq = if spls_mode && cached.is_none() {
-                let (q, _) = quantize_sym8(&h.data);
-                Some(MatI::from_vec(1, h.cols, q))
+                let (q, _) = quantize_sym8(&self.scratch.h.data);
+                Some(MatI::from_vec(1, d, q))
             } else {
                 None
             };
-            let mut att = MatF::zeros(1, mcfg.d_model);
+            self.scratch.att.reshape(1, d);
             let mut sim_heads = 0usize;
             let mut layer_plan =
                 fresh.as_ref().map(|_| LayerStepPlan { heads: Vec::with_capacity(mcfg.n_heads) });
             for hi in 0..mcfg.n_heads {
                 // K/V rows are always generated for the new token
-                let kr = linear(&h, &el.wk[hi], &el.bk[hi]);
-                let vr = linear(&h, &el.wv[hi], &el.bv[hi]);
+                self.scratch.k.reshape(1, dh);
+                linear_into(&self.scratch.h, &el.wk_h[hi], &el.bk_h[hi], &mut self.scratch.k);
+                self.scratch.v.reshape(1, dh);
+                linear_into(&self.scratch.h, &el.wv_h[hi], &el.bv_h[hi], &mut self.scratch.v);
                 let hs = &mut self.layers[li].heads[hi];
-                hs.kv.push(&kr.data, &vr.data, p);
+                hs.kv.push(&self.scratch.k.data, &self.scratch.v.data, p);
                 let n = hs.kv.len();
                 let decision: Option<HeadStepPlan> = if spls_mode {
                     Some(match &cached {
@@ -308,41 +298,62 @@ impl DecodeState {
                 } else {
                     None
                 };
-                if let Some(d) = &decision {
-                    hs.kv.accumulate(&d.row);
+                if let Some(dn) = &decision {
+                    hs.kv.accumulate(&dn.row);
                 }
                 let out_row: Vec<f32> = match &decision {
-                    Some(d) if d.similar && hs.prev_out.is_some() => {
+                    Some(dn) if dn.similar && hs.prev_out.is_some() => {
                         sim_heads += 1;
                         self.stats.sim_heads += 1;
                         hs.prev_out.clone().expect("checked above")
                     }
                     _ => {
-                        // exact prefill head math on the cached slots
-                        let q = linear(&h, &el.wq[hi], &el.bq[hi]);
-                        let kmat = hs.kv.k_mat();
-                        let vmat = hs.kv.v_mat();
-                        let scale = 1.0 / (dh as f32).sqrt();
-                        let mut s = matmul(&q, &kmat.transpose());
-                        for v in &mut s.data {
+                        // exact prefill head math on the cached slots:
+                        // q · Kᵀ and the AV product run zero-copy
+                        // against the cache's row-major storage
+                        self.scratch.q.reshape(1, dh);
+                        linear_into(
+                            &self.scratch.h,
+                            &el.wq_h[hi],
+                            &el.bq_h[hi],
+                            &mut self.scratch.q,
+                        );
+                        self.scratch.s.reshape(1, n);
+                        scores_row(
+                            &self.scratch.q.data,
+                            hs.kv.k_data(),
+                            dh,
+                            &mut self.scratch.s.data,
+                        );
+                        for v in &mut self.scratch.s.data {
                             *v *= scale;
                         }
-                        let mask = match &decision {
-                            Some(d) => Mat::from_vec(1, n, d.keep.clone()),
-                            None => Mat::from_vec(1, n, vec![true; n]),
-                        };
-                        masked_softmax_rows(&mut s, &mask);
-                        matmul(&s, &vmat).data
+                        match &decision {
+                            Some(dn) => masked_softmax_row(&mut self.scratch.s.data, &dn.keep),
+                            None => {
+                                self.scratch.flags.clear();
+                                self.scratch.flags.resize(n, true);
+                                masked_softmax_row(&mut self.scratch.s.data, &self.scratch.flags);
+                            }
+                        }
+                        self.scratch.out.reset(1, dh);
+                        attend_row(
+                            &self.scratch.s.data,
+                            hs.kv.v_data(),
+                            dh,
+                            &mut self.scratch.out.data,
+                        );
+                        self.scratch.out.data.clone()
                     }
                 };
                 hs.prev_out = Some(out_row.clone());
-                for (c, v) in out_row.iter().enumerate() {
-                    att[(0, hi * dh + c)] = *v;
-                }
+                self.scratch.att.row_mut(0)[hi * dh..(hi + 1) * dh].copy_from_slice(&out_row);
             }
-            let mut x1 = x.clone();
-            add_inplace(&mut x1, &linear(&att, &lw.wo, &lw.bo));
-            let h2 = layernorm(&x1, &lw.ln2_g, &lw.ln2_b);
+            self.scratch.proj.reshape(1, d);
+            linear_into(&self.scratch.att, &lw.wo, &lw.bo, &mut self.scratch.proj);
+            add_inplace(&mut self.scratch.x, &self.scratch.proj);
+            self.scratch.h2.reshape(1, d);
+            layernorm_into(&self.scratch.x, &lw.ln2_g, &lw.ln2_b, &mut self.scratch.h2);
             let skip_ffn = spls_mode
                 && sim_heads >= self.cfg.spls.ffn_threshold.max(1)
                 && self.layers[li].prev_ffn.is_some();
@@ -350,14 +361,17 @@ impl DecodeState {
                 self.stats.ffn_skips += 1;
                 self.layers[li].prev_ffn.clone().expect("checked above")
             } else {
-                let mut ff = linear(&h2, &lw.w1, &lw.b1);
-                gelu_inplace(&mut ff);
-                linear(&ff, &lw.w2, &lw.b2).data
+                self.scratch.ff.reshape(1, lw.w1.cols);
+                linear_into(&self.scratch.h2, &lw.w1, &lw.b1, &mut self.scratch.ff);
+                gelu_inplace(&mut self.scratch.ff);
+                self.scratch.proj.reshape(1, d);
+                linear_into(&self.scratch.ff, &lw.w2, &lw.b2, &mut self.scratch.proj);
+                self.scratch.proj.data.clone()
             };
             self.layers[li].prev_ffn = Some(ffn_row.clone());
-            let mut x2 = x1;
-            add_inplace(&mut x2, &MatF::from_vec(1, mcfg.d_model, ffn_row));
-            x = x2;
+            for (o, &v) in self.scratch.x.data.iter_mut().zip(&ffn_row) {
+                *o += v;
+            }
             // eviction: drop lowest-cumulative-score slots over budget
             if self.cfg.kv_budget != usize::MAX {
                 for hs in &mut self.layers[li].heads {
@@ -388,8 +402,42 @@ impl DecodeState {
             self.stats.plan_misses += 1;
         }
         self.stats.steps += 1;
-        let xf = layernorm(&x, &w.lnf_g, &w.lnf_b);
-        lm_logits_row(w, xf.row(0))
+        self.scratch.h.reshape(1, d);
+        layernorm_into(&self.scratch.x, &w.lnf_g, &w.lnf_b, &mut self.scratch.h);
+        lm_logits_row(&w, self.scratch.h.row(0))
+    }
+}
+
+/// `srow[c] = Σ_k q[k] · K[c, k]` over the row-major cached key slots —
+/// the reference's `matmul(q, Kᵀ)` with the identical k-ascending,
+/// zero-skip-on-q accumulation chain per element, minus the per-step
+/// K-matrix clone and transpose.
+fn scores_row(q: &[f32], kdata: &[f32], dh: usize, srow: &mut [f32]) {
+    for (c, o) in srow.iter_mut().enumerate() {
+        let krow = &kdata[c * dh..(c + 1) * dh];
+        let mut acc = 0.0f32;
+        for (&a, &b) in q.iter().zip(krow) {
+            if a == 0.0 {
+                continue;
+            }
+            acc += a * b;
+        }
+        *o = acc;
+    }
+}
+
+/// `orow[c] = Σ_k s[k] · V[k, c]` (zero-skip on the masked scores, which
+/// is where the SPLS keep-mask's zeros actually save work) — the
+/// reference's `matmul(s, V)`; `orow` must be zeroed.
+fn attend_row(s: &[f32], vdata: &[f32], dh: usize, orow: &mut [f32]) {
+    for (k, &av) in s.iter().enumerate() {
+        if av == 0.0 {
+            continue;
+        }
+        let vrow = &vdata[k * dh..(k + 1) * dh];
+        for (o, &bv) in orow.iter_mut().zip(vrow) {
+            *o += av * bv;
+        }
     }
 }
 

@@ -20,6 +20,14 @@
 //! and a streaming `Server::serve_generate` path that continuously
 //! batches decode slices across the replica tier.
 //!
+//! Host execution runs on the **packed engine** (`model::engine`): a
+//! `PackedModel` built once per weight set (per-head weight slices,
+//! pre-quantized predictor operands) drives every forward path with a
+//! reusable scratch arena (`util::scratch`) and row-parallel
+//! autovectorized kernels — bit-identical to the unpacked
+//! `model::transformer` references (`tests/packed_parity.rs`), with the
+//! packed-vs-unpacked speedup gated in CI (`benches/forward.rs`).
+//!
 //! The SPLS→simulator hot path is parallelized with rayon: per-head
 //! planning (`spls::plan_layer`), Q/K prediction and row-partitioned
 //! HLog matmuls (`spls::predict`), and per-layer simulation fan-out

@@ -19,7 +19,7 @@ use esact::report::{figures, tables};
 use esact::util::rng::Xoshiro256pp;
 
 const USAGE: &str = "\
-esact — ESACT paper reproduction (see DESIGN.md / EXPERIMENTS.md)
+esact — ESACT paper reproduction (see DESIGN.md)
 
 USAGE:
   esact repro <id>            regenerate a paper figure/table

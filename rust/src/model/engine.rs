@@ -1,0 +1,594 @@
+//! The packed execution engine: a [`PackedModel`] is built **once** per
+//! loaded weight set and then drives every host forward path with
+//! pre-packed operands and a reusable [`Scratch`] arena, so steady-state
+//! forwards on the dense substrate allocate nothing and every inner
+//! loop is a contiguous slice-zip kernel the compiler autovectorizes
+//! (DESIGN.md §Host kernel layout).
+//!
+//! What gets packed, and why:
+//!
+//! * **per-head `Wq/Wk/Wv` column slices** (D × Dh, row-major) — the
+//!   sparse path generates Q for critical rows and K/V for active
+//!   columns one head at a time, and the decode path projects exactly
+//!   one row per head per step; both previously re-materialized these
+//!   slices with `MatF::from_fn` on every call;
+//! * **int8 predictor operands** — `plan_model` and the incremental
+//!   decode predictor re-quantized each head's weight slice per request
+//!   (`quantize_sym8` of the slice); the quantization is deterministic,
+//!   so it is hoisted to pack time and shared by both consumers;
+//! * the dense substrate paths (`forward_dense` / `forward_masked` /
+//!   `forward_causal_hidden`) keep the full D × D projections (their
+//!   QKV is computed for every row and column anyway, and the
+//!   row-parallel `tensor::linear_into_par` wants the widest panels)
+//!   and run the per-head attention on **column views** of the packed
+//!   Q/Kᵀ/V activations — zero per-head copies, with Kᵀ transposed once
+//!   per layer into the arena so the score kernel's inner loop walks
+//!   contiguous rows.
+//!
+//! **Bitwise contract.** Every packed forward is bit-identical to its
+//! unpacked sibling in `model::transformer`: the kernels preserve the
+//! per-output-element k-accumulation order (and the reference's
+//! zero-skip / bias-placement quirks) exactly, and the row-parallel
+//! kernels only partition disjoint output rows. `tests/packed_parity.rs`
+//! asserts this across randomized shapes, tokens and plans for all four
+//! forward paths, planning, and decode.
+
+use std::sync::Arc;
+
+use crate::config::SplsConfig;
+use crate::quant::{quantize_sym8, QuantMethod};
+use crate::spls::plan::{plan_layer_from_inputs, LayerPlan};
+use crate::util::mat::{MatF, MatI};
+use crate::util::scratch::Scratch;
+
+use super::tensor::{
+    add_inplace, gelu_inplace, layernorm_into, linear_into, linear_into_par,
+    masked_softmax_rows, matmul_into, mean_rows_into, softmax_rows,
+};
+use super::transformer::lm_logits_row;
+use super::weights::{LayerWeights, TinyWeights};
+
+/// One layer's packed operands (indexed per head).
+pub struct PackedLayer {
+    /// Per-head D × Dh column slices of Wq / Wk / Wv.
+    pub wq_h: Vec<MatF>,
+    pub wk_h: Vec<MatF>,
+    pub wv_h: Vec<MatF>,
+    /// Matching per-head bias slices.
+    pub bq_h: Vec<Vec<f32>>,
+    pub bk_h: Vec<Vec<f32>>,
+    pub bv_h: Vec<Vec<f32>>,
+    /// Per-head int8 prediction operands (`quantize_sym8` of the f32
+    /// slice — exactly what `plan_model` and the decode predictor
+    /// computed per call before packing).
+    pub pred_wq: Vec<MatI>,
+    pub pred_wk: Vec<MatI>,
+}
+
+/// The packed model: immutable, cheap to share (`Arc`), `Send + Sync`.
+/// Serving replicas, the planner and every decode session hold one
+/// shared instance.
+pub struct PackedModel {
+    weights: Arc<TinyWeights>,
+    layers: Vec<PackedLayer>,
+}
+
+/// Which softmax masking a dense-substrate block applies.
+#[derive(Clone, Copy)]
+enum BlockMask<'a> {
+    /// Unmasked row softmax (`forward_dense`).
+    Dense,
+    /// Lower-triangular causal mask (`forward_causal_hidden`).
+    Causal,
+    /// One layer's `[n_heads, L, L]` f32 mask slice, keep iff `> 0.5`
+    /// (`forward_masked`).
+    External(&'a [f32]),
+}
+
+impl PackedModel {
+    pub fn new(weights: Arc<TinyWeights>) -> Self {
+        let cfg = weights.cfg;
+        let dh = cfg.d_head();
+        let layers = weights
+            .layers
+            .iter()
+            .map(|lw| {
+                let slice_f = |m: &MatF, hi: usize| {
+                    MatF::from_fn(m.rows, dh, |r, c| m[(r, hi * dh + c)])
+                };
+                let slice_b = |b: &[f32], hi: usize| b[hi * dh..(hi + 1) * dh].to_vec();
+                let slice_8 = |m: &MatF, hi: usize| {
+                    let (q, _) = quantize_sym8(&slice_f(m, hi).data);
+                    MatI::from_vec(m.rows, dh, q)
+                };
+                let mut pl = PackedLayer {
+                    wq_h: Vec::new(),
+                    wk_h: Vec::new(),
+                    wv_h: Vec::new(),
+                    bq_h: Vec::new(),
+                    bk_h: Vec::new(),
+                    bv_h: Vec::new(),
+                    pred_wq: Vec::new(),
+                    pred_wk: Vec::new(),
+                };
+                for hi in 0..cfg.n_heads {
+                    pl.wq_h.push(slice_f(&lw.wq, hi));
+                    pl.wk_h.push(slice_f(&lw.wk, hi));
+                    pl.wv_h.push(slice_f(&lw.wv, hi));
+                    pl.bq_h.push(slice_b(&lw.bq, hi));
+                    pl.bk_h.push(slice_b(&lw.bk, hi));
+                    pl.bv_h.push(slice_b(&lw.bv, hi));
+                    pl.pred_wq.push(slice_8(&lw.wq, hi));
+                    pl.pred_wk.push(slice_8(&lw.wk, hi));
+                }
+                pl
+            })
+            .collect();
+        Self { weights, layers }
+    }
+
+    pub fn weights(&self) -> &Arc<TinyWeights> {
+        &self.weights
+    }
+
+    /// Per-layer packed operands (the decode engine's working set).
+    pub fn packed_layers(&self) -> &[PackedLayer] {
+        &self.layers
+    }
+
+    /// Write `embed[tok] + pos` into `x` (`transformer::embed`'s values).
+    fn embed_into(&self, tokens: &[i32], x: &mut MatF) {
+        let w = &self.weights;
+        let d = w.cfg.d_model;
+        assert!(tokens.len() <= w.cfg.seq_len, "sequence too long");
+        x.reshape(tokens.len(), d);
+        for (r, (&t, xrow)) in tokens.iter().zip(x.data.chunks_mut(d)).enumerate() {
+            let erow = w.embed.row(t as usize);
+            let prow = w.pos.row(r);
+            for ((o, &e), &p) in xrow.iter_mut().zip(erow).zip(prow) {
+                *o = e + p;
+            }
+        }
+    }
+
+    /// One dense-substrate transformer block over `sc.x`, in place —
+    /// the packed `block_dense` / masked-block / causal-block: full QKV
+    /// projections (row-parallel), one Kᵀ transpose per layer, per-head
+    /// attention on column views.
+    fn block(&self, lw: &LayerWeights, sc: &mut Scratch, mask: BlockMask<'_>) {
+        let cfg = &self.weights.cfg;
+        let (n_heads, dh) = (cfg.n_heads, cfg.d_head());
+        let (l, d) = (sc.x.rows, sc.x.cols);
+        sc.h.reshape(l, d);
+        layernorm_into(&sc.x, &lw.ln1_g, &lw.ln1_b, &mut sc.h);
+        sc.q.reshape(l, d);
+        linear_into_par(&sc.h, &lw.wq, &lw.bq, &mut sc.q);
+        sc.k.reshape(l, d);
+        linear_into_par(&sc.h, &lw.wk, &lw.bk, &mut sc.k);
+        sc.v.reshape(l, d);
+        linear_into_par(&sc.h, &lw.wv, &lw.bv, &mut sc.v);
+        sc.kt.reshape(d, l);
+        sc.k.transpose_into(&mut sc.kt);
+        sc.att.reset(l, d);
+        if matches!(mask, BlockMask::Causal) {
+            // head-independent: build the lower-triangular mask once
+            // per block, not once per head
+            sc.mask.reset(l, l);
+            for r in 0..l {
+                sc.mask.row_mut(r)[..=r].fill(true);
+            }
+        }
+        let scale = 1.0 / (dh as f32).sqrt();
+        for hi in 0..n_heads {
+            sc.s.reset(l, l);
+            scores_head(&sc.q, &sc.kt, hi, dh, &mut sc.s);
+            scale_inplace(&mut sc.s, scale);
+            match mask {
+                BlockMask::Dense => softmax_rows(&mut sc.s),
+                BlockMask::Causal => masked_softmax_rows(&mut sc.s, &sc.mask),
+                BlockMask::External(m) => {
+                    sc.mask.reset(l, l);
+                    let head = &m[hi * l * l..(hi + 1) * l * l];
+                    for (b, &mv) in sc.mask.data.iter_mut().zip(head) {
+                        *b = mv > 0.5;
+                    }
+                    masked_softmax_rows(&mut sc.s, &sc.mask);
+                }
+            }
+            attend_head(&sc.s, &sc.v, hi, dh, &mut sc.att);
+        }
+        sc.proj.reshape(l, d);
+        linear_into_par(&sc.att, &lw.wo, &lw.bo, &mut sc.proj);
+        add_inplace(&mut sc.x, &sc.proj);
+        sc.h2.reshape(l, d);
+        layernorm_into(&sc.x, &lw.ln2_g, &lw.ln2_b, &mut sc.h2);
+        sc.ff.reshape(l, lw.w1.cols);
+        linear_into_par(&sc.h2, &lw.w1, &lw.b1, &mut sc.ff);
+        gelu_inplace(&mut sc.ff);
+        sc.proj.reshape(l, d);
+        linear_into_par(&sc.ff, &lw.w2, &lw.b2, &mut sc.proj);
+        add_inplace(&mut sc.x, &sc.proj);
+    }
+
+    /// Final LayerNorm → mean-pool → classifier head over `sc.x`.
+    fn classify_tail(&self, sc: &mut Scratch) -> Vec<f32> {
+        let w = &self.weights;
+        let (l, d) = (sc.x.rows, sc.x.cols);
+        sc.h.reshape(l, d);
+        layernorm_into(&sc.x, &w.lnf_g, &w.lnf_b, &mut sc.h);
+        sc.pooled.reshape(1, d);
+        mean_rows_into(&sc.h, &mut sc.pooled.data);
+        sc.logits.reshape(1, w.cfg.n_classes);
+        linear_into(&sc.pooled, &w.cls_w, &w.cls_b, &mut sc.logits);
+        sc.logits.data.clone()
+    }
+
+    /// Packed [`super::forward_dense`] (bit-identical).
+    pub fn forward_dense(&self, tokens: &[i32], sc: &mut Scratch) -> Vec<f32> {
+        self.embed_into(tokens, &mut sc.x);
+        for lw in &self.weights.layers {
+            self.block(lw, sc, BlockMask::Dense);
+        }
+        self.classify_tail(sc)
+    }
+
+    /// Packed [`super::forward_masked`] (bit-identical). `masks` is
+    /// row-major `[n_layers, n_heads, L, L]`, keep iff `> 0.5`.
+    pub fn forward_masked(&self, tokens: &[i32], masks: &[f32], sc: &mut Scratch) -> Vec<f32> {
+        let cfg = &self.weights.cfg;
+        let l = tokens.len();
+        let per = cfg.n_heads * l * l;
+        assert_eq!(
+            masks.len(),
+            cfg.n_layers * per,
+            "mask buffer must cover [n_layers, n_heads, L, L]"
+        );
+        self.embed_into(tokens, &mut sc.x);
+        for (li, lw) in self.weights.layers.iter().enumerate() {
+            self.block(lw, sc, BlockMask::External(&masks[li * per..(li + 1) * per]));
+        }
+        self.classify_tail(sc)
+    }
+
+    /// Packed [`super::forward_causal_hidden`] (bit-identical): the L×D
+    /// hidden states after the last block, pre-`lnf`.
+    pub fn forward_causal_hidden(&self, tokens: &[i32], sc: &mut Scratch) -> MatF {
+        self.embed_into(tokens, &mut sc.x);
+        for lw in &self.weights.layers {
+            self.block(lw, sc, BlockMask::Causal);
+        }
+        sc.x.clone()
+    }
+
+    /// Packed [`super::next_token_logits`] (bit-identical).
+    pub fn next_token_logits(&self, tokens: &[i32], sc: &mut Scratch) -> Vec<f32> {
+        assert!(!tokens.is_empty(), "need at least one token of context");
+        self.embed_into(tokens, &mut sc.x);
+        for lw in &self.weights.layers {
+            self.block(lw, sc, BlockMask::Causal);
+        }
+        let w = &self.weights;
+        let (l, d) = (sc.x.rows, sc.x.cols);
+        sc.h.reshape(l, d);
+        layernorm_into(&sc.x, &w.lnf_g, &w.lnf_b, &mut sc.h);
+        lm_logits_row(w, sc.h.row(l - 1))
+    }
+
+    /// Packed [`super::attention_probs`] (bit-identical).
+    pub fn attention_probs(&self, tokens: &[i32], sc: &mut Scratch) -> Vec<Vec<MatF>> {
+        let cfg = self.weights.cfg;
+        let (n_heads, dh) = (cfg.n_heads, cfg.d_head());
+        self.embed_into(tokens, &mut sc.x);
+        let mut all = Vec::with_capacity(self.weights.layers.len());
+        for lw in &self.weights.layers {
+            let (l, d) = (sc.x.rows, sc.x.cols);
+            sc.h.reshape(l, d);
+            layernorm_into(&sc.x, &lw.ln1_g, &lw.ln1_b, &mut sc.h);
+            sc.q.reshape(l, d);
+            linear_into_par(&sc.h, &lw.wq, &lw.bq, &mut sc.q);
+            sc.k.reshape(l, d);
+            linear_into_par(&sc.h, &lw.wk, &lw.bk, &mut sc.k);
+            sc.kt.reshape(d, l);
+            sc.k.transpose_into(&mut sc.kt);
+            let mut heads = Vec::with_capacity(n_heads);
+            for hi in 0..n_heads {
+                sc.s.reset(l, l);
+                scores_head(&sc.q, &sc.kt, hi, dh, &mut sc.s);
+                scale_inplace(&mut sc.s, 1.0 / (dh as f32).sqrt());
+                softmax_rows(&mut sc.s);
+                heads.push(sc.s.clone());
+            }
+            all.push(heads);
+            self.block(lw, sc, BlockMask::Dense);
+        }
+        all
+    }
+
+    /// Packed [`super::plan_model`]: the per-head int8 prediction
+    /// operands come from pack time instead of being re-quantized per
+    /// call; plans are bit-identical to unpacked planning.
+    pub fn plan_model(
+        &self,
+        tokens: &[i32],
+        spls: &SplsConfig,
+        method: QuantMethod,
+        sc: &mut Scratch,
+    ) -> Vec<LayerPlan> {
+        self.embed_into(tokens, &mut sc.x);
+        let mut plans = Vec::with_capacity(self.weights.layers.len());
+        for (lw, pl) in self.weights.layers.iter().zip(&self.layers) {
+            let (l, d) = (sc.x.rows, sc.x.cols);
+            sc.h.reshape(l, d);
+            layernorm_into(&sc.x, &lw.ln1_g, &lw.ln1_b, &mut sc.h);
+            // int8 activations (symmetric per-tensor, like the paper's
+            // 8-bit deployment)
+            let (hq, _) = quantize_sym8(&sc.h.data);
+            let hq = MatI::from_vec(l, d, hq);
+            plans.push(plan_layer_from_inputs(&hq, &pl.pred_wq, &pl.pred_wk, spls, method));
+            self.block(lw, sc, BlockMask::Dense);
+        }
+        plans
+    }
+
+    /// Packed [`super::forward_sparse`] (bit-identical): critical-row Q
+    /// generation, active-column K/V generation and MFI-gated FFN rows
+    /// run on the pre-packed per-head slices, with recovery written
+    /// straight into the arena. Only plan-derived index lists
+    /// (`critical_rows`, `computed_tokens`) still allocate.
+    pub fn forward_sparse(
+        &self,
+        tokens: &[i32],
+        plans: &[LayerPlan],
+        sc: &mut Scratch,
+    ) -> Vec<f32> {
+        assert_eq!(plans.len(), self.weights.layers.len());
+        let cfg = self.weights.cfg;
+        let (n_heads, dh) = (cfg.n_heads, cfg.d_head());
+        self.embed_into(tokens, &mut sc.x);
+        let zipped = self.weights.layers.iter().zip(&self.layers).zip(plans);
+        for ((lw, pl), plan) in zipped {
+            let (l, d) = (sc.x.rows, sc.x.cols);
+            sc.h.reshape(l, d);
+            layernorm_into(&sc.x, &lw.ln1_g, &lw.ln1_b, &mut sc.h);
+            // every head copy_from_slice-covers its columns for all rows,
+            // so no zeroing needed before the recovery writes
+            sc.att.reshape(l, d);
+            let scale = 1.0 / (dh as f32).sqrt();
+            for hi in 0..n_heads {
+                let hp = &plan.heads[hi];
+                let criticals = hp.sim.critical_rows();
+                // --- Q generation: critical rows only ---------------
+                sc.part.reshape(criticals.len(), dh);
+                for (i, &row) in criticals.iter().enumerate() {
+                    project_row(sc.h.row(row), &pl.wq_h[hi], &pl.bq_h[hi], sc.part.row_mut(i));
+                }
+                // --- K/V generation: active columns only ------------
+                sc.k.reset(l, dh);
+                sc.v.reset(l, dh);
+                for &col in &hp.active_cols {
+                    project_row(sc.h.row(col), &pl.wk_h[hi], &pl.bk_h[hi], sc.k.row_mut(col));
+                    project_row(sc.h.row(col), &pl.wv_h[hi], &pl.bv_h[hi], sc.v.row_mut(col));
+                }
+                // --- masked attention on critical rows --------------
+                sc.kt.reshape(dh, l);
+                sc.k.transpose_into(&mut sc.kt);
+                sc.s.reshape(criticals.len(), l);
+                matmul_into(&sc.part, &sc.kt, &mut sc.s);
+                scale_inplace(&mut sc.s, scale);
+                sc.mask.reshape(criticals.len(), l);
+                for (i, &row) in criticals.iter().enumerate() {
+                    sc.mask.row_mut(i).copy_from_slice(hp.mask.row(row));
+                }
+                masked_softmax_rows(&mut sc.s, &sc.mask);
+                sc.out.reshape(criticals.len(), dh);
+                matmul_into(&sc.s, &sc.v, &mut sc.out);
+                // --- recovery: replicate critical outputs to similar
+                //     rows, straight into the head's att columns ------
+                sc.idx.clear();
+                sc.idx.resize(l, usize::MAX);
+                for (i, &row) in criticals.iter().enumerate() {
+                    sc.idx[row] = i;
+                }
+                for r in 0..l {
+                    let src = sc.idx[hp.sim.rep[r]];
+                    sc.att.row_mut(r)[hi * dh..(hi + 1) * dh]
+                        .copy_from_slice(sc.out.row(src));
+                }
+            }
+            sc.proj.reshape(l, d);
+            linear_into_par(&sc.att, &lw.wo, &lw.bo, &mut sc.proj);
+            add_inplace(&mut sc.x, &sc.proj);
+            // --- FFN: MFI-representative tokens only ----------------
+            sc.h2.reshape(l, d);
+            layernorm_into(&sc.x, &lw.ln2_g, &lw.ln2_b, &mut sc.h2);
+            let computed = plan.ffn.computed_tokens();
+            sc.part.reshape(computed.len(), d);
+            for (i, &row) in computed.iter().enumerate() {
+                sc.part.row_mut(i).copy_from_slice(sc.h2.row(row));
+            }
+            sc.ff.reshape(computed.len(), lw.w1.cols);
+            linear_into_par(&sc.part, &lw.w1, &lw.b1, &mut sc.ff);
+            gelu_inplace(&mut sc.ff);
+            sc.out.reshape(computed.len(), d);
+            linear_into_par(&sc.ff, &lw.w2, &lw.b2, &mut sc.out);
+            sc.idx.clear();
+            sc.idx.resize(l, usize::MAX);
+            for (i, &row) in computed.iter().enumerate() {
+                sc.idx[row] = i;
+            }
+            for r in 0..l {
+                let src = sc.idx[plan.ffn.rep[r]];
+                for (o, &v) in sc.x.row_mut(r).iter_mut().zip(sc.out.row(src)) {
+                    *o += v;
+                }
+            }
+        }
+        self.classify_tail(sc)
+    }
+}
+
+/// `s[r, c] += Σ_k q[r, hi·dh+k] · kᵀ[hi·dh+k, c]` — head `hi`'s block
+/// of the attention-score matmul on column views of the packed Q and
+/// the once-transposed Kᵀ. Same ikj order and zero-skip as
+/// `tensor::matmul_into` over the sliced operands, so bits match the
+/// per-head-copy reference exactly; `s` must be zeroed `q.rows × kt.cols`.
+fn scores_head(q: &MatF, kt: &MatF, hi: usize, dh: usize, s: &mut MatF) {
+    debug_assert_eq!((s.rows, s.cols), (q.rows, kt.cols));
+    let n = kt.cols;
+    for (r, srow) in s.data.chunks_mut(n.max(1)).enumerate() {
+        let qrow = &q.row(r)[hi * dh..(hi + 1) * dh];
+        for (k, &av) in qrow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = kt.row(hi * dh + k);
+            for (o, &bv) in srow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// `att[r, hi·dh+c] += Σ_k s[r, k] · v[k, hi·dh+c]` — head `hi`'s AV
+/// matmul accumulated straight into its columns of the concatenated
+/// attention output (no per-head staging copy). Zero-skip on the
+/// (masked-softmax-sparse) score values, like `tensor::matmul_into`.
+fn attend_head(s: &MatF, v: &MatF, hi: usize, dh: usize, att: &mut MatF) {
+    debug_assert_eq!(att.rows, s.rows);
+    debug_assert_eq!(s.cols, v.rows);
+    let d = att.cols;
+    for (r, arow) in att.data.chunks_mut(d).enumerate() {
+        let orow = &mut arow[hi * dh..(hi + 1) * dh];
+        for (k, &av) in s.row(r).iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &v.row(k)[hi * dh..(hi + 1) * dh];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// `orow = b + hrow · w` with the **bias-first, no-zero-skip**
+/// accumulation of the reference sparse Q/K/V generation loops
+/// (`acc = bias; for k { acc += h·w }`), in vectorizable ikj form.
+fn project_row(hrow: &[f32], w: &MatF, b: &[f32], orow: &mut [f32]) {
+    debug_assert_eq!(hrow.len(), w.rows);
+    debug_assert_eq!(orow.len(), w.cols);
+    orow.copy_from_slice(b);
+    for (k, &av) in hrow.iter().enumerate() {
+        let wrow = w.row(k);
+        for (o, &bv) in orow.iter_mut().zip(wrow) {
+            *o += av * bv;
+        }
+    }
+}
+
+fn scale_inplace(m: &mut MatF, scale: f32) {
+    for v in &mut m.data {
+        *v *= scale;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{
+        attention_probs, forward_causal_hidden, forward_dense, forward_masked, forward_sparse,
+        plan_model,
+    };
+
+    fn packed() -> PackedModel {
+        let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/tiny_weights.bin");
+        PackedModel::new(Arc::new(TinyWeights::load(&p).unwrap()))
+    }
+
+    fn toks(seed: u64, l: usize) -> Vec<i32> {
+        let mut rng = crate::util::rng::Xoshiro256pp::new(seed);
+        (0..l).map(|_| rng.below(64) as i32).collect()
+    }
+
+    #[test]
+    fn packed_dense_bit_identical_on_artifacts() {
+        let pm = packed();
+        let mut sc = Scratch::new();
+        for l in [5usize, 17, 64] {
+            let t = toks(21, l);
+            assert_eq!(
+                pm.forward_dense(&t, &mut sc),
+                forward_dense(pm.weights(), &t),
+                "L = {l}"
+            );
+        }
+    }
+
+    #[test]
+    fn packed_masked_and_causal_bit_identical_on_artifacts() {
+        let pm = packed();
+        let mut sc = Scratch::new();
+        let t = toks(22, 64);
+        let masks = vec![1.0f32; 2 * 4 * 64 * 64];
+        assert_eq!(
+            pm.forward_masked(&t, &masks, &mut sc),
+            forward_masked(pm.weights(), &t, &masks)
+        );
+        let hidden = pm.forward_causal_hidden(&t[..20], &mut sc);
+        assert_eq!(hidden.data, forward_causal_hidden(pm.weights(), &t[..20]).data);
+    }
+
+    #[test]
+    fn packed_planning_and_sparse_bit_identical_on_artifacts() {
+        let pm = packed();
+        let mut sc = Scratch::new();
+        let t = toks(23, 64);
+        let spls = SplsConfig::default();
+        let plans = pm.plan_model(&t, &spls, QuantMethod::Hlog, &mut sc);
+        assert_eq!(plans, plan_model(pm.weights(), &t, &spls, QuantMethod::Hlog));
+        assert_eq!(
+            pm.forward_sparse(&t, &plans, &mut sc),
+            forward_sparse(pm.weights(), &t, &plans)
+        );
+    }
+
+    #[test]
+    fn packed_attention_probs_bit_identical_on_artifacts() {
+        let pm = packed();
+        let mut sc = Scratch::new();
+        let t = toks(24, 64);
+        let got = pm.attention_probs(&t, &mut sc);
+        let want = attention_probs(pm.weights(), &t);
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            for (gh, wh) in g.iter().zip(w) {
+                assert_eq!(gh.data, wh.data);
+            }
+        }
+    }
+
+    #[test]
+    fn steady_state_dense_forward_does_not_allocate_scratch() {
+        let pm = packed();
+        let mut sc = Scratch::new();
+        let t = toks(25, 64);
+        let _ = pm.forward_dense(&t, &mut sc); // sizes the arena
+        let caps = [
+            sc.x.data.capacity(),
+            sc.h.data.capacity(),
+            sc.q.data.capacity(),
+            sc.s.data.capacity(),
+            sc.ff.data.capacity(),
+        ];
+        let _ = pm.forward_dense(&t, &mut sc);
+        let after = [
+            sc.x.data.capacity(),
+            sc.h.data.capacity(),
+            sc.q.data.capacity(),
+            sc.s.data.capacity(),
+            sc.ff.data.capacity(),
+        ];
+        assert_eq!(caps, after, "steady-state forward reallocated the arena");
+    }
+}

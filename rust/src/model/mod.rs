@@ -4,12 +4,14 @@
 //! of the same model run through `runtime::` on the serve path.
 
 pub mod accuracy;
+pub mod engine;
 pub mod synth;
 pub mod tensor;
 pub mod transformer;
 pub mod weights;
 
 pub use accuracy::{eval_dense, eval_sparse, EvalResult};
+pub use engine::{PackedLayer, PackedModel};
 pub use transformer::{
     attention_probs, embed_row, forward_causal_hidden, forward_dense, forward_masked,
     forward_sparse, lm_logits_row, next_token_logits, plan_model,

@@ -3,17 +3,50 @@
 //! tanh-GELU, LN with eps 1e-5, softmax with row-max subtraction, and
 //! the same symmetric int8 fake-quant grid.
 //!
-//! `matmul` gets a blocked ikj fast path — it is the host model's hot
-//! loop (see EXPERIMENTS.md §Perf).
+//! Kernel layout (see DESIGN.md §Host kernel layout): `matmul` is a
+//! plain row-major **ikj** loop — A's row is walked once (k outer,
+//! skipping zero A-values, which is what makes pruned Q/K/V rows
+//! cheap), and the inner loop is a contiguous slice-zip axpy over B's
+//! row that the compiler autovectorizes (independent output columns, no
+//! reduction). Every `*_into` variant reuses a caller-owned buffer
+//! (`util::scratch`) and is the allocation-free form of its sibling;
+//! `matmul_into_par` / `linear_into_par` additionally partition output
+//! **rows** across the rayon pool — each row keeps the exact serial
+//! per-element accumulation chain, so the parallel kernels are
+//! bit-identical to the serial reference (asserted below and by
+//! `tests/packed_parity.rs`).
+
+use rayon::prelude::*;
 
 use crate::util::mat::MatF;
 
-/// C = A · B with a cache-blocked ikj loop (row-major friendly).
+/// Below this output-element count the rayon fork/join overhead exceeds
+/// the matmul itself (same empirical tile as `spls::predict`).
+const PAR_THRESHOLD: usize = 64 * 64;
+
+/// C = A · B with a row-major ikj loop (zero A-values short-circuit).
 pub fn matmul(a: &MatF, b: &MatF) -> MatF {
     assert_eq!(a.cols, b.rows, "matmul shape mismatch");
     let mut out = MatF::zeros(a.rows, b.cols);
     matmul_into(a, b, &mut out);
     out
+}
+
+/// The per-output-row ikj kernel shared by the serial and row-parallel
+/// matmuls: k ascending, zero A-values skipped, inner axpy over the
+/// contiguous B row. Per output element the accumulation chain is
+/// exactly `(…(0 + a₀b₀) + a₁b₁…)` in k order.
+#[inline]
+fn matmul_row(arow: &[f32], b: &MatF, orow: &mut [f32]) {
+    for (k, &av) in arow.iter().enumerate() {
+        if av == 0.0 {
+            continue; // sparse rows short-circuit (pruned Q/K/V)
+        }
+        let brow = b.row(k);
+        for (o, &bv) in orow.iter_mut().zip(brow) {
+            *o += av * bv;
+        }
+    }
 }
 
 /// In-place variant reusing an output buffer (hot-path allocation saver).
@@ -22,38 +55,71 @@ pub fn matmul_into(a: &MatF, b: &MatF, out: &mut MatF) {
     assert_eq!((out.rows, out.cols), (a.rows, b.cols));
     out.data.fill(0.0);
     let n = b.cols;
-    for r in 0..a.rows {
-        let arow = a.row(r);
-        let orow = &mut out.data[r * n..(r + 1) * n];
-        for (k, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue; // sparse rows short-circuit (pruned Q/K/V)
-            }
-            let brow = &b.data[k * n..(k + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv;
-            }
-        }
+    for (r, orow) in out.data.chunks_mut(n.max(1)).enumerate() {
+        matmul_row(a.row(r), b, orow);
     }
+}
+
+/// Row-parallel `matmul_into`: output rows are disjoint, so they are
+/// partitioned across the rayon pool; each row runs the identical
+/// serial kernel, making the result bit-identical to [`matmul_into`].
+/// Small shapes (or single-row inputs, i.e. decode) stay serial.
+pub fn matmul_into_par(a: &MatF, b: &MatF, out: &mut MatF) {
+    assert_eq!(a.cols, b.rows);
+    assert_eq!((out.rows, out.cols), (a.rows, b.cols));
+    let n = b.cols;
+    if a.rows * n < PAR_THRESHOLD || a.rows <= 1 {
+        return matmul_into(a, b, out);
+    }
+    out.data.fill(0.0);
+    out.data
+        .par_chunks_mut(n)
+        .enumerate()
+        .for_each(|(r, orow)| matmul_row(a.row(r), b, orow));
 }
 
 /// y = x · W + bias, where bias broadcasts over rows.
 pub fn linear(x: &MatF, w: &MatF, bias: &[f32]) -> MatF {
+    let mut y = MatF::zeros(x.rows, w.cols);
+    linear_into(x, w, bias, &mut y);
+    y
+}
+
+/// Buffer-reusing [`linear`]: matmul first, then the bias pass — the
+/// same op order, so outputs are bit-identical.
+pub fn linear_into(x: &MatF, w: &MatF, bias: &[f32], out: &mut MatF) {
     assert_eq!(bias.len(), w.cols);
-    let mut y = matmul(x, w);
+    matmul_into(x, w, out);
+    add_bias_rows(out, bias);
+}
+
+/// Row-parallel [`linear_into`] (see [`matmul_into_par`]).
+pub fn linear_into_par(x: &MatF, w: &MatF, bias: &[f32], out: &mut MatF) {
+    assert_eq!(bias.len(), w.cols);
+    matmul_into_par(x, w, out);
+    add_bias_rows(out, bias);
+}
+
+fn add_bias_rows(y: &mut MatF, bias: &[f32]) {
     for r in 0..y.rows {
         for (v, &b) in y.row_mut(r).iter_mut().zip(bias) {
             *v += b;
         }
     }
-    y
 }
 
 /// Row-wise LayerNorm with learned gain/bias (eps = 1e-5, as python).
 pub fn layernorm(x: &MatF, gain: &[f32], bias: &[f32]) -> MatF {
+    let mut out = MatF::zeros(x.rows, x.cols);
+    layernorm_into(x, gain, bias, &mut out);
+    out
+}
+
+/// Buffer-reusing [`layernorm`] (identical float-op order).
+pub fn layernorm_into(x: &MatF, gain: &[f32], bias: &[f32], out: &mut MatF) {
     assert_eq!(gain.len(), x.cols);
     assert_eq!(bias.len(), x.cols);
-    let mut out = MatF::zeros(x.rows, x.cols);
+    assert_eq!((out.rows, out.cols), (x.rows, x.cols));
     let n = x.cols as f32;
     for r in 0..x.rows {
         let row = x.row(r);
@@ -64,7 +130,6 @@ pub fn layernorm(x: &MatF, gain: &[f32], bias: &[f32]) -> MatF {
             *o = (row[c] - mu) * inv * gain[c] + bias[c];
         }
     }
-    out
 }
 
 /// tanh-approximation GELU, bit-matching the python `_gelu`.
@@ -103,30 +168,39 @@ pub fn masked_softmax_rows(x: &mut MatF, mask: &crate::util::mat::Mat<bool>) {
     assert_eq!((x.rows, x.cols), (mask.rows, mask.cols));
     for r in 0..x.rows {
         let mrow = &mask.data[r * mask.cols..(r + 1) * mask.cols];
-        let row = x.row_mut(r);
-        let mut max = f32::NEG_INFINITY;
-        for (v, &m) in row.iter().zip(mrow) {
-            if m {
-                max = max.max(*v);
-            }
+        masked_softmax_row(x.row_mut(r), mrow);
+    }
+}
+
+/// One row of [`masked_softmax_rows`] (the decode engine's single-query
+/// form; identical op order, so decode stays bit-identical to prefill).
+pub fn masked_softmax_row(row: &mut [f32], mrow: &[bool]) {
+    // hard assert: a keep-mask that disagrees with the score row must
+    // fail at the fault site, not silently zip-truncate (the replaced
+    // decode path enforced this via `Mat::from_vec`'s shape check)
+    assert_eq!(row.len(), mrow.len(), "mask length != row length");
+    let mut max = f32::NEG_INFINITY;
+    for (v, &m) in row.iter().zip(mrow) {
+        if m {
+            max = max.max(*v);
         }
-        if max == f32::NEG_INFINITY {
-            row.fill(0.0); // fully-masked row
-            continue;
+    }
+    if max == f32::NEG_INFINITY {
+        row.fill(0.0); // fully-masked row
+        return;
+    }
+    let mut sum = 0.0;
+    for (v, &m) in row.iter_mut().zip(mrow) {
+        if m {
+            *v = (*v - max).exp();
+            sum += *v;
+        } else {
+            *v = 0.0;
         }
-        let mut sum = 0.0;
-        for (v, &m) in row.iter_mut().zip(mrow) {
-            if m {
-                *v = (*v - max).exp();
-                sum += *v;
-            } else {
-                *v = 0.0;
-            }
-        }
-        let inv = 1.0 / sum.max(1e-30);
-        for v in row.iter_mut() {
-            *v *= inv;
-        }
+    }
+    let inv = 1.0 / sum.max(1e-30);
+    for v in row.iter_mut() {
+        *v *= inv;
     }
 }
 
@@ -154,16 +228,23 @@ pub fn fake_quant8(w: &MatF) -> MatF {
 /// Mean over rows: (R, C) -> (C,) — the classifier pooling.
 pub fn mean_rows(x: &MatF) -> Vec<f32> {
     let mut out = vec![0.0f32; x.cols];
+    mean_rows_into(x, &mut out);
+    out
+}
+
+/// Buffer-reusing [`mean_rows`]; `out` must be `cols` long.
+pub fn mean_rows_into(x: &MatF, out: &mut [f32]) {
+    assert_eq!(out.len(), x.cols);
+    out.fill(0.0);
     for r in 0..x.rows {
         for (o, &v) in out.iter_mut().zip(x.row(r)) {
             *o += v;
         }
     }
     let inv = 1.0 / x.rows.max(1) as f32;
-    for o in &mut out {
+    for o in out.iter_mut() {
         *o *= inv;
     }
-    out
 }
 
 /// argmax of a slice (ties toward the lower index, numpy convention).
@@ -267,5 +348,63 @@ mod tests {
         let x = Mat::from_vec(2, 2, vec![1.0, 3.0, 3.0, 5.0]);
         assert_eq!(mean_rows(&x), vec![2.0, 4.0]);
         assert_eq!(argmax(&[0.1, 0.9, 0.9, 0.2]), 1); // tie -> lower index
+    }
+
+    fn rand_mat(rng: &mut crate::util::rng::Xoshiro256pp, r: usize, c: usize) -> MatF {
+        Mat::from_fn(r, c, |_, _| (rng.f64() * 2.0 - 1.0) as f32)
+    }
+
+    #[test]
+    fn parallel_matmul_bit_identical_to_serial() {
+        // 96×96 output is past PAR_THRESHOLD, so the rayon row
+        // partition engages; every element must match the serial kernel
+        let mut rng = crate::util::rng::Xoshiro256pp::new(91);
+        let a = rand_mat(&mut rng, 96, 48);
+        let b = rand_mat(&mut rng, 48, 96);
+        assert!(a.rows * b.cols >= super::PAR_THRESHOLD);
+        let want = matmul(&a, &b);
+        let mut got = MatF::zeros(96, 96);
+        matmul_into_par(&a, &b, &mut got);
+        assert_eq!(got.data, want.data, "row partitioning changed bits");
+        // linear variant too (bias pass after the matmul)
+        let bias: Vec<f32> = (0..96).map(|i| i as f32 * 0.01).collect();
+        let want = linear(&a, &b, &bias);
+        let mut got = MatF::zeros(96, 96);
+        linear_into_par(&a, &b, &bias, &mut got);
+        assert_eq!(got.data, want.data);
+    }
+
+    #[test]
+    fn into_variants_match_allocating_siblings() {
+        let mut rng = crate::util::rng::Xoshiro256pp::new(92);
+        let x = rand_mat(&mut rng, 5, 8);
+        let w = rand_mat(&mut rng, 8, 7);
+        let bias: Vec<f32> = (0..7).map(|i| i as f32 * 0.1).collect();
+        let mut y = MatF::zeros(5, 7);
+        linear_into(&x, &w, &bias, &mut y);
+        assert_eq!(y.data, linear(&x, &w, &bias).data);
+
+        let g = vec![1.5f32; 8];
+        let b = vec![-0.25f32; 8];
+        let mut ln = MatF::zeros(5, 8);
+        layernorm_into(&x, &g, &b, &mut ln);
+        assert_eq!(ln.data, layernorm(&x, &g, &b).data);
+
+        let mut pooled = vec![0.0f32; 8];
+        mean_rows_into(&x, &mut pooled);
+        assert_eq!(pooled, mean_rows(&x));
+    }
+
+    #[test]
+    fn masked_softmax_row_matches_rows_form() {
+        let mut rng = crate::util::rng::Xoshiro256pp::new(93);
+        let mut x = rand_mat(&mut rng, 4, 9);
+        let mask = Mat::from_fn(4, 9, |r, c| (r * 7 + c * 5) % 3 != 0);
+        let mut rows_form = x.clone();
+        masked_softmax_rows(&mut rows_form, &mask);
+        for r in 0..4 {
+            masked_softmax_row(x.row_mut(r), &mask.data[r * 9..(r + 1) * 9]);
+        }
+        assert_eq!(x.data, rows_form.data);
     }
 }

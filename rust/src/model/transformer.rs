@@ -188,22 +188,39 @@ pub fn forward_causal_hidden(w: &TinyWeights, tokens: &[i32]) -> MatF {
     x
 }
 
+/// Above this vocab-row count the LM head fans logits out over the
+/// rayon pool; the tiny 64-token vocab stays serial (fork/join would
+/// dwarf the 64×64 dot products).
+pub const LM_HEAD_PAR_VOCAB: usize = 1024;
+
 /// Weight-tied language-model head over one `lnf`-normalized hidden
 /// row: `logits[v] = Σ_c row[c] · embed[v, c]` (the tiny classifier has
 /// no trained LM head, so next-token scores reuse the input embedding —
 /// standard weight tying). Shared by the prefill reference and the
 /// decode engine so both produce bit-identical logits.
+///
+/// Each logit is a dot product against `embed`'s row `v` — the rows are
+/// already contiguous in the row-major embedding, so the kernel walks
+/// row slices instead of indexing `embed[(v, c)]` per element, and
+/// vocabularies past [`LM_HEAD_PAR_VOCAB`] partition `v` across rayon
+/// (logits are independent, and each keeps the serial c-ascending
+/// accumulation chain, so the parallel path is bit-identical — asserted
+/// by `tests/packed_parity.rs`).
 pub fn lm_logits_row(w: &TinyWeights, row: &[f32]) -> Vec<f32> {
     assert_eq!(row.len(), w.cfg.d_model);
-    (0..w.cfg.vocab)
-        .map(|v| {
-            let mut acc = 0.0f32;
-            for (c, &x) in row.iter().enumerate() {
-                acc += x * w.embed[(v, c)];
-            }
-            acc
-        })
-        .collect()
+    let logit = |v: usize| {
+        let mut acc = 0.0f32;
+        for (&x, &e) in row.iter().zip(w.embed.row(v)) {
+            acc += x * e;
+        }
+        acc
+    };
+    if w.cfg.vocab >= LM_HEAD_PAR_VOCAB {
+        use rayon::prelude::*;
+        (0..w.cfg.vocab).into_par_iter().map(logit).collect()
+    } else {
+        (0..w.cfg.vocab).map(logit).collect()
+    }
 }
 
 /// Next-token logits of a causal prefill over `tokens`: the iterated-

@@ -10,6 +10,12 @@
 //! * masked program — `model::forward_masked`: every row computes its
 //!   own Q under the (replicated) SPA mask, exactly like the Pallas
 //!   `masked_attention` kernel inside the compiled artifact.
+//!
+//! Execution runs on the packed engine (`model::engine::PackedModel` —
+//! packed once at load, shared by every executable and replica handle
+//! through one `Arc`) with a per-worker-thread scratch arena, and is
+//! bit-identical to the unpacked `model::transformer` forwards
+//! (asserted below and by `tests/packed_parity.rs`).
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -17,7 +23,8 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use super::Arg;
-use crate::model::{forward_dense, forward_masked, TinyWeights};
+use crate::model::{PackedModel, TinyWeights};
+use crate::util::scratch::with_thread_scratch;
 
 /// Which program an [`Executable`] runs.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -37,11 +44,11 @@ pub struct Executable {
     name: String,
     program: Program,
     batch: usize,
-    weights: Arc<TinyWeights>,
+    packed: Arc<PackedModel>,
 }
 
 impl Executable {
-    fn new(program: Program, batch: usize, weights: Arc<TinyWeights>) -> Self {
+    fn new(program: Program, batch: usize, packed: Arc<PackedModel>) -> Self {
         let kind = match program {
             Program::Dense => "dense",
             Program::Masked => "masked",
@@ -50,7 +57,7 @@ impl Executable {
             name: format!("tiny_{kind}_b{batch}"),
             program,
             batch,
-            weights,
+            packed,
         }
     }
 
@@ -59,7 +66,7 @@ impl Executable {
     }
 
     fn tokens<'a>(&self, args: &'a [Arg<'_>]) -> Result<&'a [i32]> {
-        let l = self.weights.cfg.seq_len;
+        let l = self.packed.weights().cfg.seq_len;
         match args.first() {
             Some(&Arg::I32(data, dims)) => {
                 if *dims != [self.batch, l] {
@@ -80,9 +87,11 @@ impl Executable {
 
     /// Execute with the given inputs; returns the concatenated f32
     /// logits, `batch × n_classes` (the same payload the AOT artifacts
-    /// return from their 1-tuple output).
+    /// return from their 1-tuple output). Runs on the packed engine
+    /// with this worker thread's scratch arena — steady-state batches
+    /// allocate nothing beyond the returned logits.
     pub fn run_f32(&self, args: &[Arg<'_>]) -> Result<Vec<f32>> {
-        let cfg = self.weights.cfg;
+        let cfg = self.packed.weights().cfg;
         let l = cfg.seq_len;
         let toks = self.tokens(args)?;
         let mut out = Vec::with_capacity(self.batch * cfg.n_classes);
@@ -91,9 +100,11 @@ impl Executable {
                 if args.len() != 1 {
                     bail!("{}: dense program takes exactly one argument", self.name);
                 }
-                for b in 0..self.batch {
-                    out.extend(forward_dense(&self.weights, &toks[b * l..(b + 1) * l]));
-                }
+                with_thread_scratch(|sc| {
+                    for b in 0..self.batch {
+                        out.extend(self.packed.forward_dense(&toks[b * l..(b + 1) * l], sc));
+                    }
+                });
             }
             Program::Masked => {
                 let per = cfg.n_layers * cfg.n_heads * l * l;
@@ -115,13 +126,15 @@ impl Executable {
                     }
                     _ => bail!("{}: second argument must be F32 masks", self.name),
                 };
-                for b in 0..self.batch {
-                    out.extend(forward_masked(
-                        &self.weights,
-                        &toks[b * l..(b + 1) * l],
-                        &masks[b * per..(b + 1) * per],
-                    ));
-                }
+                with_thread_scratch(|sc| {
+                    for b in 0..self.batch {
+                        out.extend(self.packed.forward_masked(
+                            &toks[b * l..(b + 1) * l],
+                            &masks[b * per..(b + 1) * per],
+                            sc,
+                        ));
+                    }
+                });
             }
         }
         Ok(out)
@@ -144,6 +157,10 @@ impl Executable {
 pub struct ArtifactSet {
     dir: PathBuf,
     pub weights: Arc<TinyWeights>,
+    /// The packed execution engine every executable (and, via
+    /// `replica_handle`, every serving replica) shares — weights are
+    /// packed exactly once per load.
+    pub packed: Arc<PackedModel>,
     pub dense_b1: Executable,
     pub dense_b8: Executable,
     pub masked_b1: Executable,
@@ -161,12 +178,14 @@ impl ArtifactSet {
             );
         }
         let weights = Arc::new(TinyWeights::load(&wpath)?);
+        let packed = Arc::new(PackedModel::new(weights.clone()));
         Ok(Self {
-            dense_b1: Executable::new(Program::Dense, 1, weights.clone()),
-            dense_b8: Executable::new(Program::Dense, 8, weights.clone()),
-            masked_b1: Executable::new(Program::Masked, 1, weights.clone()),
-            masked_b8: Executable::new(Program::Masked, 8, weights.clone()),
+            dense_b1: Executable::new(Program::Dense, 1, packed.clone()),
+            dense_b8: Executable::new(Program::Dense, 8, packed.clone()),
+            masked_b1: Executable::new(Program::Masked, 1, packed.clone()),
+            masked_b8: Executable::new(Program::Masked, 8, packed.clone()),
             weights,
+            packed,
             dir: dir.to_path_buf(),
         })
     }
@@ -206,6 +225,7 @@ impl ArtifactSet {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::forward_dense;
     use crate::util::rng::Xoshiro256pp;
 
     fn artifacts() -> PathBuf {
@@ -291,6 +311,8 @@ mod tests {
         let handle = set.replica_handle().unwrap();
         // the handle shares the weights allocation (no reload, no copy)
         assert!(Arc::ptr_eq(&set.weights, &handle.weights));
+        // …and the packed engine: replicas never repack
+        assert!(Arc::ptr_eq(&set.packed, &handle.packed));
         let toks = vec![0i32; 64];
         let a = set.dense_b1.run_f32(&[Arg::I32(&toks, &[1, 64])]).unwrap();
         let b = handle.dense_b1.run_f32(&[Arg::I32(&toks, &[1, 64])]).unwrap();

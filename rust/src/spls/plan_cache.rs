@@ -21,10 +21,12 @@
 //! bit-equivalently, since a `StepPlan` fully determines the
 //! predictor's post-step state.
 //!
-//! `PlanCache` is single-threaded; [`SharedPlanCache`] wraps it in
-//! `Arc<Mutex<..>>` for the replica pool (std sync only — no tokio in
-//! the vendored crate set, see DESIGN.md §Environment). Lookups and
-//! inserts hold the lock; planning itself never does.
+//! `PlanCache` is single-threaded; [`SharedPlanCache`] shards it by key
+//! fingerprint across [`DEFAULT_SHARDS`] mutexes for the replica pool
+//! (std sync only — no tokio in the vendored crate set, see DESIGN.md
+//! §Environment), so replicas planning unrelated requests no longer
+//! serialize on one lock. Lookups and inserts hold only their shard's
+//! lock; planning itself never holds any.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -420,16 +422,45 @@ impl PlanCache {
     }
 }
 
-/// Thread-safe plan cache handle shared by all serving replicas.
+/// Lock shards a [`SharedPlanCache`] spreads its entries over. The
+/// replica pool serializes every lookup/insert on the cache, so a
+/// single mutex becomes the contention point as replicas scale; keys
+/// route to a shard by fingerprint, which keeps a whole model's
+/// per-layer entries (one fingerprint) on one lock while unrelated
+/// requests proceed in parallel.
+pub const DEFAULT_SHARDS: usize = 8;
+
+/// Thread-safe plan cache handle shared by all serving replicas:
+/// fingerprint-sharded `Mutex<PlanCache>`s (std sync only — no tokio in
+/// the vendored crate set). Hit/miss/eviction counters live in the
+/// shards and are summed by [`SharedPlanCache::stats`], so sharding is
+/// invisible to metrics consumers (asserted below).
 #[derive(Clone)]
-pub struct SharedPlanCache(Arc<Mutex<PlanCache>>);
+pub struct SharedPlanCache {
+    shards: Arc<[Mutex<PlanCache>]>,
+}
 
 impl SharedPlanCache {
     pub fn new(capacity: usize) -> Self {
-        Self(Arc::new(Mutex::new(PlanCache::new(capacity))))
+        Self::with_shards(capacity, DEFAULT_SHARDS)
     }
 
-    /// Serve the plans from cache, or run `compute` (outside the lock)
+    /// Build with an explicit shard count. The total entry capacity is
+    /// split evenly (rounded up) across shards; shard count is clamped
+    /// to the capacity so every shard can hold at least one entry.
+    pub fn with_shards(capacity: usize, shards: usize) -> Self {
+        let n = shards.max(1).min(capacity.max(1));
+        let per_shard = capacity.max(1).div_ceil(n);
+        let shards: Vec<Mutex<PlanCache>> =
+            (0..n).map(|_| Mutex::new(PlanCache::new(per_shard))).collect();
+        Self { shards: shards.into() }
+    }
+
+    fn shard(&self, fp: u64) -> &Mutex<PlanCache> {
+        &self.shards[(fp % self.shards.len() as u64) as usize]
+    }
+
+    /// Serve the plans from cache, or run `compute` (outside any lock)
     /// and insert the result. Two replicas racing on the same cold key
     /// both compute — plans are deterministic, so the duplicate insert
     /// is idempotent and still bit-identical.
@@ -441,19 +472,12 @@ impl SharedPlanCache {
         n_layers: usize,
         compute: impl FnOnce() -> Vec<LayerPlan>,
     ) -> Vec<LayerPlan> {
-        if let Some(plans) = self
-            .0
-            .lock()
-            .unwrap()
-            .get_model(tokens, spls, method, n_layers)
-        {
+        let shard = self.shard(fingerprint(tokens, spls));
+        if let Some(plans) = shard.lock().unwrap().get_model(tokens, spls, method, n_layers) {
             return plans;
         }
         let plans = compute();
-        self.0
-            .lock()
-            .unwrap()
-            .put_model(tokens, spls, method, &plans);
+        shard.lock().unwrap().put_model(tokens, spls, method, &plans);
         plans
     }
 
@@ -465,7 +489,10 @@ impl SharedPlanCache {
         budget: usize,
         recent: usize,
     ) -> Option<StepPlan> {
-        self.0.lock().unwrap().get_step(tokens, spls, budget, recent)
+        self.shard(fingerprint_step(tokens, spls, budget, recent))
+            .lock()
+            .unwrap()
+            .get_step(tokens, spls, budget, recent)
     }
 
     /// Decode-step insert (see [`PlanCache::put_step`]).
@@ -477,11 +504,28 @@ impl SharedPlanCache {
         recent: usize,
         plan: StepPlan,
     ) {
-        self.0.lock().unwrap().put_step(tokens, spls, budget, recent, plan)
+        self.shard(fingerprint_step(tokens, spls, budget, recent))
+            .lock()
+            .unwrap()
+            .put_step(tokens, spls, budget, recent, plan)
     }
 
+    /// Aggregate counters summed across every shard.
     pub fn stats(&self) -> CacheStats {
-        self.0.lock().unwrap().stats()
+        let mut total = CacheStats::default();
+        for shard in self.shards.iter() {
+            let s = shard.lock().unwrap().stats();
+            total.hits += s.hits;
+            total.misses += s.misses;
+            total.evictions += s.evictions;
+            total.entries += s.entries;
+            total.capacity += s.capacity;
+            total.step_hits += s.step_hits;
+            total.step_misses += s.step_misses;
+            total.step_entries += s.step_entries;
+            total.step_evictions += s.step_evictions;
+        }
+        total
     }
 }
 
@@ -663,6 +707,65 @@ mod tests {
         cache.put_layer(&t, &spls, QuantMethod::Hlog, 0, synth_plan(1));
         // layer 1 missing -> whole-model lookup misses
         assert!(cache.get_model(&t, &spls, QuantMethod::Hlog, 2).is_none());
+    }
+
+    #[test]
+    fn sharded_cache_stats_survive_sharding() {
+        let cache = SharedPlanCache::with_shards(64, 4);
+        let spls = SplsConfig::default();
+        let seqs: Vec<Vec<i32>> = (0..12).map(|s| toks(100 + s, 32)).collect();
+        for t in &seqs {
+            let plans = vec![synth_plan(1), synth_plan(2)];
+            let got = cache.get_or_compute(t, &spls, QuantMethod::Hlog, 2, move || plans);
+            assert_eq!(got.len(), 2);
+        }
+        for t in &seqs {
+            let got = cache.get_or_compute(t, &spls, QuantMethod::Hlog, 2, || {
+                panic!("warm lookup must hit its shard")
+            });
+            assert_eq!(got.len(), 2);
+        }
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (12, 12), "counters sum across shards");
+        assert_eq!(s.entries, 24, "every per-layer entry counted exactly once");
+        assert_eq!(s.capacity, 64, "per-shard capacities sum back to the total");
+        // step counters aggregate identically
+        let t = &seqs[0];
+        for len in [8usize, 16, 24] {
+            assert!(cache.get_step(&t[..len], &spls, 32, 4).is_none());
+            cache.put_step(&t[..len], &spls, 32, 4, synth_step(len));
+            assert!(cache.get_step(&t[..len], &spls, 32, 4).is_some());
+        }
+        let s = cache.stats();
+        assert_eq!((s.step_hits, s.step_misses, s.step_entries), (3, 3, 3));
+    }
+
+    #[test]
+    fn sharded_cache_survives_concurrent_mixed_load() {
+        let cache = SharedPlanCache::with_shards(128, 8);
+        let spls = SplsConfig::default();
+        let handles: Vec<_> = (0..8u64)
+            .map(|i| {
+                let cache = cache.clone();
+                std::thread::spawn(move || {
+                    let t = toks(200 + (i % 4), 24);
+                    for _ in 0..20 {
+                        let plans = cache
+                            .get_or_compute(&t, &spls, QuantMethod::Hlog, 1, || {
+                                vec![synth_plan(i)]
+                            });
+                        assert_eq!(plans.len(), 1);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = cache.stats();
+        assert_eq!(s.hits + s.misses, 8 * 20, "every lookup counted exactly once");
+        assert!(s.hits >= 8 * 20 - 8, "at most one racing cold miss per thread");
+        assert!(s.entries <= 4, "4 distinct keys -> at most 4 live entries");
     }
 
     #[test]

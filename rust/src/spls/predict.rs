@@ -149,8 +149,9 @@ pub fn predict_matmul_faithful(x: &MatI, w: &MatI) -> MatI {
 /// equal to "HLog-quantize both operands, then exact integer matmul"
 /// (`sja_matches_integer_multiply_exhaustive`,
 /// `fast_path_equals_faithful`), so the software model quantizes once
-/// and runs a cache-blocked ikj integer matmul — ~40× faster than the
-/// object-level pipeline while bit-identical.
+/// and runs a row-major ikj integer matmul (contiguous inner axpy,
+/// rayon over rows) — ~40× faster than the object-level pipeline while
+/// bit-identical.
 pub fn predict_matmul(x: &MatI, w: &MatI) -> MatI {
     assert_eq!(x.cols, w.rows, "shape mismatch");
     let (m, k, n) = (x.rows, x.cols, w.cols);

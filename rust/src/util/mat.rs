@@ -1,9 +1,9 @@
 //! Minimal row-major matrix used across the SPLS algorithm, the model,
-//! and the simulator. Deliberately small: this repo's hot paths are
-//! either inside the AOT-compiled XLA executables (L1/L2) or inside the
-//! cycle-accounting simulator, so the host-side matrix type optimizes
-//! for clarity, not BLAS throughput (the int8 matmul in
-//! `model::tensor` is the one routine that gets a blocked fast path).
+//! and the simulator. Deliberately small: the host-side matrix type
+//! optimizes for clarity, and the throughput-critical routines live in
+//! `model::tensor` (slice-iterator ikj kernels the compiler can
+//! autovectorize) and `model::engine` (the packed execution engine) —
+//! see DESIGN.md §Host kernel layout.
 
 use std::fmt;
 use std::ops::{Index, IndexMut};
@@ -66,7 +66,43 @@ impl<T: Copy + Default> Mat<T> {
     }
 
     pub fn transpose(&self) -> Mat<T> {
-        Mat::from_fn(self.cols, self.rows, |r, c| self[(c, r)])
+        let mut out = Mat::zeros(self.cols, self.rows);
+        self.transpose_into(&mut out);
+        out
+    }
+
+    /// Transpose into a caller-owned buffer (the scratch-arena variant:
+    /// `out` must already be `cols × rows`; every element is written).
+    pub fn transpose_into(&self, out: &mut Mat<T>) {
+        assert_eq!((out.rows, out.cols), (self.cols, self.rows), "transpose shape");
+        for (r, row) in self.data.chunks_exact(self.cols.max(1)).enumerate() {
+            for (c, &v) in row.iter().enumerate() {
+                out.data[c * self.rows + r] = v;
+            }
+        }
+    }
+
+    /// Reshape to `rows × cols` and reset every element to `T::default()`
+    /// — the scratch-buffer primitive: capacity is retained, so a reused
+    /// buffer stops allocating once it has seen its steady-state shape.
+    /// Use this when the next kernel *accumulates* into the buffer.
+    pub fn reset(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.resize(rows * cols, T::default());
+    }
+
+    /// Reshape to `rows × cols` **without clearing** retained elements —
+    /// for buffers whose next kernel overwrites every element anyway
+    /// (`matmul_into`/`linear_into` zero-fill themselves;
+    /// `layernorm_into`/`transpose_into` write every slot), sparing the
+    /// redundant memset [`Mat::reset`] would pay. Newly grown capacity
+    /// is still default-filled.
+    pub fn reshape(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.resize(rows * cols, T::default());
     }
 }
 
@@ -138,5 +174,25 @@ mod tests {
     #[should_panic]
     fn from_vec_shape_checked() {
         Mat::from_vec(2, 2, vec![1i32, 2, 3]);
+    }
+
+    #[test]
+    fn transpose_into_matches_transpose() {
+        let m = Mat::from_fn(4, 6, |r, c| (r * 11 + c * 3) as i32);
+        let mut out = Mat::zeros(6, 4);
+        m.transpose_into(&mut out);
+        assert_eq!(out, m.transpose());
+    }
+
+    #[test]
+    fn reset_reshapes_zeroes_and_keeps_capacity() {
+        let mut m = Mat::from_fn(8, 8, |_, _| 7i32);
+        let cap = m.data.capacity();
+        m.reset(3, 5);
+        assert_eq!((m.rows, m.cols), (3, 5));
+        assert!(m.data.iter().all(|&v| v == 0));
+        m.reset(8, 8);
+        assert_eq!(m.data.capacity(), cap, "steady-state reuse must not reallocate");
+        assert!(m.data.iter().all(|&v| v == 0), "grow-back is zeroed too");
     }
 }

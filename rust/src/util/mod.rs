@@ -8,6 +8,7 @@ pub mod eswt;
 pub mod mat;
 pub mod prop;
 pub mod rng;
+pub mod scratch;
 pub mod stats;
 
 use std::path::{Path, PathBuf};

@@ -1,0 +1,124 @@
+//! Per-worker scratch arena for the packed execution engine
+//! (`model::engine`): one named buffer per tensor the layer loop
+//! touches, resized in place at the top of each forward —
+//! [`Mat::reset`] (zeroing) for accumulation targets, [`Mat::reshape`]
+//! (non-zeroing) for buffers the next kernel fully overwrites.
+//! Buffers keep their capacity across calls, so a worker's steady-state
+//! forwards allocate nothing — the first call with the largest shape
+//! pays once, every later call reuses (see DESIGN.md §Host kernel
+//! layout).
+//!
+//! Threading model: a `Scratch` is plain owned state. Long-lived owners
+//! (a `DecodeState`, a bench loop) embed one directly; transient
+//! callers on worker threads (the reference runtime's executables, the
+//! serving planner) go through [`with_thread_scratch`], which hands out
+//! one arena per OS thread. The closure must not re-enter
+//! `with_thread_scratch` (RefCell would panic) — engine entry points
+//! take `&mut Scratch` precisely so internals never need to.
+
+use std::cell::RefCell;
+
+use crate::util::mat::{Mat, MatF};
+
+/// Named reusable buffers for one worker's forward passes. Field names
+/// follow the transformer block's tensors; `part`/`out` are the
+/// gathered-row staging buffers of the sparse path.
+pub struct Scratch {
+    /// Residual stream (L × D).
+    pub x: MatF,
+    /// LayerNorm output feeding QKV (L × D).
+    pub h: MatF,
+    /// Q / K / V activations (L × D dense; per-head shapes in sparse
+    /// and decode paths).
+    pub q: MatF,
+    pub k: MatF,
+    pub v: MatF,
+    /// Transposed keys (D × L dense, Dh × L sparse).
+    pub kt: MatF,
+    /// Attention scores (rows × L).
+    pub s: MatF,
+    /// Concatenated attention output (L × D).
+    pub att: MatF,
+    /// Projection / FFN-out staging (L × D).
+    pub proj: MatF,
+    /// Post-attention LayerNorm output (L × D).
+    pub h2: MatF,
+    /// FFN hidden activations (rows × F).
+    pub ff: MatF,
+    /// Gathered input rows (critical / MFI-representative tokens).
+    pub part: MatF,
+    /// Partial outputs awaiting recovery (rows × Dh or rows × D).
+    pub out: MatF,
+    /// Boolean softmax mask (rows × L).
+    pub mask: Mat<bool>,
+    /// Single-row boolean mask (the decode step's keep/all-true mask).
+    pub flags: Vec<bool>,
+    /// Row-index staging (critical-row positions, representative maps).
+    pub idx: Vec<usize>,
+    /// Pooled classifier features as a 1 × D matrix.
+    pub pooled: MatF,
+    /// Classifier logits (1 × n_classes).
+    pub logits: MatF,
+}
+
+impl Scratch {
+    pub fn new() -> Self {
+        let e = || MatF::zeros(0, 0);
+        Self {
+            x: e(),
+            h: e(),
+            q: e(),
+            k: e(),
+            v: e(),
+            kt: e(),
+            s: e(),
+            att: e(),
+            proj: e(),
+            h2: e(),
+            ff: e(),
+            part: e(),
+            out: e(),
+            mask: Mat::zeros(0, 0),
+            flags: Vec::new(),
+            idx: Vec::new(),
+            pooled: e(),
+            logits: e(),
+        }
+    }
+}
+
+impl Default for Scratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+thread_local! {
+    static SCRATCH: RefCell<Scratch> = RefCell::new(Scratch::new());
+}
+
+/// Run `f` with this thread's scratch arena. Worker threads (serving
+/// replicas, the planner's scoped threads) reuse one arena across all
+/// the forwards they execute; do not nest calls.
+pub fn with_thread_scratch<R>(f: impl FnOnce(&mut Scratch) -> R) -> R {
+    SCRATCH.with(|s| f(&mut s.borrow_mut()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thread_scratch_persists_capacity_across_calls() {
+        let cap = with_thread_scratch(|sc| {
+            sc.x.reset(16, 64);
+            sc.x.data.capacity()
+        });
+        let (cap2, len) = with_thread_scratch(|sc| {
+            sc.x.reset(8, 64);
+            (sc.x.data.capacity(), sc.x.data.len())
+        });
+        assert_eq!(cap, cap2, "same arena, no reallocation");
+        assert_eq!(len, 8 * 64);
+    }
+}

@@ -1,6 +1,6 @@
 //! Reproduction integration: every figure/table renderer runs and its
 //! output carries the paper-anchored values — the "shape holds" checks
-//! of EXPERIMENTS.md in executable form.
+//! of the paper's figures/tables in executable form.
 
 use std::path::{Path, PathBuf};
 

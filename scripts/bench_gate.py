@@ -11,9 +11,16 @@ Dispatches on the current report's `schema`:
   (evicting-cache decode must not lose to dense-cache decode at
   prefix ≥ 64 — warn below 1.0×, fail below 0.85×, mirroring the
   serving gate's noise tolerance on shared runners).
+* schema 4 — the forward bench's BENCH_4.json: per-(path, seq_len)
+  packed-engine tokens/sec floors plus the headline
+  packed-must-beat-unpacked inversion check at seq_len ≥ 64 (target
+  1.5×; fail below 1.15× to absorb runner noise, warn below 1.5×;
+  warn-only when the runner has a single core, since the packed
+  engine's row-parallel kernels have nothing to fan out over there).
 
-Both compare against the same committed bench_baseline.json ("saturated"
-floors for schema 2, "decode" floors for schema 3).
+All compare against the same committed bench_baseline.json ("saturated"
+floors for schema 2, "decode" floors for schema 3, "forward" floors for
+schema 4).
 
 Baseline refresh: run the matching bench with ESACT_BENCH_JSON set on a
 quiet machine and copy the cells over, scaled down ~2x for CI headroom
@@ -155,6 +162,67 @@ def check_decode(cur: dict, base: dict) -> list:
     return failures
 
 
+def check_forward(cur: dict, base: dict) -> list:
+    failures = []
+    for key in ("cores", "forward"):
+        if key not in cur:
+            die(f"current report missing '{key}'")
+    for row in cur["forward"]:
+        for field in ("path", "seq_len", "unpacked_tps", "packed_tps", "speedup"):
+            if field not in row:
+                die(f"forward row missing '{field}': {row}")
+
+    current = {(r["path"], r["seq_len"]): r for r in cur["forward"]}
+    print(f"{'cell':<16} {'baseline':>10} {'current':>10} {'floor':>10}  verdict")
+    for b in base.get("forward", []):
+        key = (b["path"], b["seq_len"])
+        c = current.get(key)
+        if c is None:
+            failures.append(f"forward cell {key} missing from current report")
+            continue
+        floor = TOLERANCE * b["packed_tps"]
+        ok = c["packed_tps"] >= floor
+        label = f"{b['path']} L{b['seq_len']}"
+        print(
+            f"{label:<16} {b['packed_tps']:>10.1f} "
+            f"{c['packed_tps']:>10.1f} {floor:>10.1f}  {'ok' if ok else 'REGRESSED'}"
+        )
+        if not ok:
+            failures.append(
+                f"{key}: packed {c['packed_tps']:.1f} tok/s < floor {floor:.1f} "
+                f"(baseline {b['packed_tps']:.1f})"
+            )
+
+    # headline: the packed engine must beat the unpacked reference at
+    # seq_len >= 64 (the 1.5x acceptance target, noise-tolerated)
+    multicore = cur.get("cores", 1) >= 2
+    checked = False
+    for row in cur["forward"]:
+        if row["seq_len"] < 64:
+            continue
+        checked = True
+        sp = row["speedup"]
+        verdict = "hits 1.5x" if sp >= 1.5 else ("wins" if sp > 1.0 else "LOSES")
+        print(f"packed vs unpacked @ {row['path']} L{row['seq_len']}: {sp:.2f}x ({verdict})")
+        if not multicore:
+            if sp < 1.0:
+                print(
+                    f"  ! warning: inversion {sp:.2f}x on a single-core runner "
+                    "(row-parallel kernels idle; not gated)"
+                )
+            continue
+        if sp < 1.15:
+            failures.append(
+                f"packed engine loses its {row['path']} L{row['seq_len']} headline: "
+                f"{sp:.2f}x < 1.15x (target 1.5x)"
+            )
+        elif sp < 1.5:
+            print(f"  ! warning: speedup {sp:.2f}x below the 1.5x target (within tolerance)")
+    if not checked:
+        failures.append("report lacks forward cells at seq_len >= 64")
+    return failures
+
+
 def main() -> None:
     if len(sys.argv) != 3:
         die(f"usage: {sys.argv[0]} CURRENT.json BASELINE.json")
@@ -168,6 +236,8 @@ def main() -> None:
         failures = check_serving(cur, base)
     elif schema == 3:
         failures = check_decode(cur, base)
+    elif schema == 4:
+        failures = check_forward(cur, base)
     else:
         die(f"unknown report schema {schema!r}")
 
