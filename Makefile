@@ -2,7 +2,7 @@
 
 ARTIFACTS := rust/artifacts
 
-.PHONY: build test bench bench-serving bench-decode bench-forward bench-gate check-features artifacts clean-artifacts
+.PHONY: build test bench bench-serving bench-decode bench-forward bench-gateway bench-gate serve-http check-features artifacts clean-artifacts
 
 build:
 	cargo build --release
@@ -26,11 +26,21 @@ bench-decode:
 bench-forward:
 	ESACT_BENCH_JSON=$(CURDIR)/BENCH_4.json cargo bench --bench forward
 
+# HTTP gateway throughput/ttft over loopback + BENCH_5.json report.
+bench-gateway:
+	ESACT_BENCH_JSON=$(CURDIR)/BENCH_5.json cargo bench --bench gateway
+
 # What CI's bench-regression job runs after the benches.
-bench-gate: bench-serving bench-decode bench-forward
+bench-gate: bench-serving bench-decode bench-forward bench-gateway
 	python3 scripts/bench_gate.py BENCH_2.json bench_baseline.json
 	python3 scripts/bench_gate.py BENCH_3.json bench_baseline.json
 	python3 scripts/bench_gate.py BENCH_4.json bench_baseline.json
+	python3 scripts/bench_gate.py BENCH_5.json bench_baseline.json
+
+# Start a curl-able tiny gateway (SPLS mode, 2 replicas) on :8080.
+# Drain it with: curl -X POST localhost:8080/admin/shutdown
+serve-http:
+	cargo run --release --example serve_tiny -- 64 2 http
 
 # What CI's feature-matrix job runs.
 check-features:

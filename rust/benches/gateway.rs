@@ -1,0 +1,198 @@
+//! End-to-end HTTP gateway benchmarks: closed-loop classify throughput
+//! and latency over loopback TCP across a connections × replicas
+//! surface, an open-loop Poisson cell, and generate-stream
+//! time-to-first-token — the network-tier complement of the in-process
+//! serving bench (`benches/serving.rs`), and the payload of CI's
+//! schema-5 bench gate.
+//!
+//! Set `ESACT_BENCH_JSON=BENCH_5.json` to emit the machine-readable
+//! report `scripts/bench_gate.py` compares against the committed
+//! `bench_baseline.json`. The `ttft_frac` field is the structural
+//! streaming check: time-to-first-token as a fraction of the whole
+//! stream's wall time — near 1.0 would mean the gateway buffered the
+//! stream instead of chunking it out as tokens were produced, however
+//! fast the machine is.
+
+use std::fmt::Write as _;
+use std::sync::Arc;
+
+use esact::config::SplsConfig;
+use esact::coordinator::{Mode, Server};
+use esact::net::client::{closed_loop_classify, generate_body, poisson_classify, HttpClient};
+use esact::net::{Gateway, GatewayConfig};
+use esact::util::rng::Xoshiro256pp;
+
+struct Cell {
+    replicas: usize,
+    connections: usize,
+    requests: usize,
+    throughput_rps: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    shed: usize,
+}
+
+impl Cell {
+    fn print(&self) {
+        println!(
+            "  x{} replicas, {} conns: {:>7.1} rps | p50 {:>6.2} ms p99 {:>6.2} ms | {} shed",
+            self.replicas,
+            self.connections,
+            self.throughput_rps,
+            self.p50_ms,
+            self.p99_ms,
+            self.shed
+        );
+    }
+
+    fn json(&self) -> String {
+        format!(
+            "{{\"replicas\": {}, \"connections\": {}, \"requests\": {}, \
+             \"throughput_rps\": {:.2}, \"p50_ms\": {:.3}, \"p99_ms\": {:.3}, \"shed\": {}}}",
+            self.replicas,
+            self.connections,
+            self.requests,
+            self.throughput_rps,
+            self.p50_ms,
+            self.p99_ms,
+            self.shed
+        )
+    }
+}
+
+fn request_pool(l: usize, distinct: usize) -> Vec<Vec<i32>> {
+    let mut rng = Xoshiro256pp::new(6);
+    (0..distinct).map(|_| esact::model::synth::gen_example(&mut rng, l).0).collect()
+}
+
+fn start_gateway(replicas: usize, steps_per_slice: usize) -> anyhow::Result<(Gateway, String)> {
+    let dir = esact::util::artifacts_dir();
+    let srv = Arc::new(Server::new(&dir, Mode::Dense, SplsConfig::default())?);
+    let cfg = GatewayConfig {
+        replicas,
+        max_conns: 16,
+        steps_per_slice,
+        ..Default::default()
+    };
+    let gw = Gateway::start(srv, cfg)?;
+    let addr = gw.local_addr().to_string();
+    Ok((gw, addr))
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = esact::util::artifacts_dir();
+    let probe = Server::new(&dir, Mode::Dense, SplsConfig::default())?;
+    let l = probe.seq_len();
+    drop(probe);
+    let pool = request_pool(l, 16);
+    let n_per_cell = 48usize;
+
+    // --- closed-loop surface: connections × replicas ----------------
+    println!("== HTTP closed-loop classify (loopback, {n_per_cell} requests/cell) ==");
+    let mut cells: Vec<Cell> = Vec::new();
+    for replicas in [1usize, 2] {
+        for connections in [1usize, 4, 8] {
+            // fresh gateway per cell: every cell pays the same cold
+            // start, mirroring the serving bench's methodology
+            let (gw, addr) = start_gateway(replicas, 4)?;
+            let report = closed_loop_classify(&addr, connections, n_per_cell, &pool)?;
+            assert_eq!(
+                report.ok + report.shed + report.errors,
+                n_per_cell,
+                "every request must be answered"
+            );
+            assert_eq!(report.errors, 0, "loopback closed loop must not error");
+            let cell = Cell {
+                replicas,
+                connections,
+                requests: n_per_cell,
+                throughput_rps: report.throughput_rps(),
+                p50_ms: report.p50_ms(),
+                p99_ms: report.p99_ms(),
+                shed: report.shed,
+            };
+            cell.print();
+            cells.push(cell);
+            gw.shutdown()?;
+        }
+    }
+
+    // --- one open-loop Poisson cell (printed, lightly gated) --------
+    println!("== HTTP open-loop Poisson (2 replicas, 4 conns) ==");
+    let (gw, addr) = start_gateway(2, 4)?;
+    // offer ~60% of the measured 2-replica closed-loop capacity
+    let capacity = cells
+        .iter()
+        .find(|c| c.replicas == 2 && c.connections == 8)
+        .map(|c| c.throughput_rps)
+        .unwrap_or(50.0);
+    let rate = (capacity * 0.6).max(5.0);
+    let poisson = poisson_classify(&addr, rate, n_per_cell, 4, &pool, 9)?;
+    println!(
+        "  offered {:.0} rps: {:.1} rps served | p50 {:.2} ms p99 {:.2} ms | {} shed",
+        rate,
+        poisson.throughput_rps(),
+        poisson.p50_ms(),
+        poisson.p99_ms(),
+        poisson.shed
+    );
+    gw.shutdown()?;
+
+    // --- streaming: time-to-first-token -----------------------------
+    println!("== HTTP generate streaming (2 replicas, 4 sessions) ==");
+    let (gw, addr) = start_gateway(2, 2)?;
+    let mut client = HttpClient::connect(&addr)?;
+    let prompt: Vec<i32> = pool[0][..16].to_vec();
+    let max_new = 16usize;
+    let mut ttfts_ms: Vec<f64> = Vec::new();
+    let mut fracs: Vec<f64> = Vec::new();
+    let mut tokens = 0usize;
+    let mut stream_secs = 0f64;
+    for _ in 0..4 {
+        let stream = client.generate_stream(&generate_body(&prompt, max_new, None))?;
+        let result = stream.collect()?;
+        let ttft = result.ttft.expect("stream produced tokens").as_secs_f64();
+        let wall = result.wall.as_secs_f64().max(1e-9);
+        ttfts_ms.push(ttft * 1e3);
+        fracs.push(ttft / wall);
+        tokens += result.tokens.len();
+        stream_secs += wall;
+    }
+    gw.shutdown()?;
+    ttfts_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let ttft_ms = ttfts_ms[ttfts_ms.len() / 2];
+    let ttft_frac = fracs.iter().sum::<f64>() / fracs.len() as f64;
+    let stream_tps = tokens as f64 / stream_secs.max(1e-9);
+    println!(
+        "  {tokens} tokens over 4 sessions: {stream_tps:.1} tok/s | \
+         ttft {ttft_ms:.1} ms (frac {ttft_frac:.2})"
+    );
+
+    // --- machine-readable report for the CI gate --------------------
+    if let Ok(path) = std::env::var("ESACT_BENCH_JSON") {
+        let mut out = String::from("{\n  \"schema\": 5,\n");
+        let join =
+            |cells: &[Cell]| cells.iter().map(Cell::json).collect::<Vec<_>>().join(",\n    ");
+        let _ = writeln!(out, "  \"gateway\": [\n    {}\n  ],", join(&cells));
+        let _ = writeln!(
+            out,
+            "  \"poisson\": {{\"offered_rps\": {:.1}, \"throughput_rps\": {:.2}, \
+             \"p50_ms\": {:.3}, \"p99_ms\": {:.3}, \"shed\": {}}},",
+            rate,
+            poisson.throughput_rps(),
+            poisson.p50_ms(),
+            poisson.p99_ms(),
+            poisson.shed
+        );
+        let _ = writeln!(
+            out,
+            "  \"streaming\": {{\"sessions\": 4, \"tokens\": {tokens}, \
+             \"ttft_ms\": {ttft_ms:.3}, \"ttft_frac\": {ttft_frac:.3}, \
+             \"tokens_per_sec\": {stream_tps:.2}}}"
+        );
+        out.push_str("}\n");
+        std::fs::write(&path, out)?;
+        println!("\nwrote {path}");
+    }
+    Ok(())
+}

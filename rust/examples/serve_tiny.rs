@@ -7,9 +7,13 @@
 //! rate.
 //!
 //! ```bash
-//! cargo run --release --example serve_tiny [n_requests] [replicas] [gen]
+//! cargo run --release --example serve_tiny [n_requests] [replicas] [gen|http]
 //! # third arg "gen" additionally streams a generation workload through
-//! # Server::serve_generate (continuous decode batching, SPLS eviction)
+//! # Server::serve_generate (continuous decode batching, SPLS eviction);
+//! # third arg "http" skips the offline runs and starts the curl-able
+//! # network gateway instead (make serve-http):
+//! #   curl localhost:8080/healthz
+//! #   curl -X POST localhost:8080/admin/shutdown   # graceful drain
 //! ```
 
 use std::sync::mpsc;
@@ -25,9 +29,43 @@ use esact::util::rng::Xoshiro256pp;
 fn main() -> anyhow::Result<()> {
     let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(128);
     let replicas: usize = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(2);
-    let with_gen = std::env::args().nth(3).is_some_and(|s| s == "gen");
+    let mode_arg = std::env::args().nth(3).unwrap_or_default();
+    let with_gen = mode_arg == "gen";
     let dir = &esact::util::artifacts_dir();
     let set = TestSet::load(&dir.join("tiny_testset.bin"))?;
+
+    if mode_arg == "http" {
+        // network mode: put the SPLS tier on a socket and serve until
+        // POST /admin/shutdown (or Ctrl-C)
+        use esact::net::{Gateway, GatewayConfig};
+        let srv = std::sync::Arc::new(Server::new(dir, Mode::Spls, SplsConfig::default())?);
+        let cfg = GatewayConfig {
+            addr: std::env::var("ESACT_HTTP_ADDR")
+                .unwrap_or_else(|_| "127.0.0.1:8080".to_string()),
+            replicas,
+            mode: Mode::Spls,
+            ..Default::default()
+        };
+        let l = srv.seq_len();
+        let gateway = Gateway::start(srv, cfg)?;
+        let addr = gateway.local_addr();
+        println!("tiny ESACT gateway on http://{addr} ({replicas} replicas, SPLS mode)");
+        println!("try:");
+        println!(
+            "  curl -s -X POST http://{addr}/v1/classify -d \
+             '{{\"tokens\": [[{}]]}}'",
+            (0..l).map(|i| (i % 64).to_string()).collect::<Vec<_>>().join(", ")
+        );
+        println!(
+            "  curl -sN -X POST http://{addr}/v1/generate -d \
+             '{{\"prompt\": [1, 2, 3, 4], \"max_new\": 8}}'"
+        );
+        println!("  curl -s http://{addr}/metrics | head");
+        println!("  curl -s -X POST http://{addr}/admin/shutdown");
+        let report = gateway.join()?;
+        print!("{report}");
+        return Ok(());
+    }
 
     for mode in [Mode::Dense, Mode::Spls] {
         let srv = Server::new(dir, mode, SplsConfig::default())?;

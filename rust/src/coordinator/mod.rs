@@ -17,6 +17,6 @@ pub use loadgen::{arrivals, trace_stats, Arrival, TraceStats};
 pub use partition::{partition_workload, ClusterAssignment, WorkItem};
 pub use replica::{ReplicaMetrics, WorkQueue};
 pub use server::{
-    GenChunk, GenRequest, GenTask, GenerateMetrics, GenerateOutcome, Mode, Reply, ServeMetrics,
-    ServeOutcome, Server,
+    replica_rows, GenChunk, GenRequest, GenTask, GenerateMetrics, GenerateOutcome, MetricRow,
+    Mode, Reply, ServeMetrics, ServeOutcome, Server, TierSnapshot,
 };

@@ -12,9 +12,10 @@
 //! Single-process deployment with std threads + channels (no tokio in
 //! the vendored crate set — see DESIGN.md §Environment).
 
+use std::fmt;
 use std::path::Path;
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
@@ -27,7 +28,7 @@ use crate::model::{PackedModel, TinyWeights};
 use crate::quant::QuantMethod;
 use crate::runtime::{Arg, ArtifactSet};
 use crate::spls::plan_cache::{CacheStats, SharedPlanCache, DEFAULT_CAPACITY};
-use crate::util::stats;
+use crate::util::stats::{self, LatencyWindow};
 
 /// Serving statistics.
 #[derive(Clone, Copy, Debug, Default)]
@@ -83,6 +84,132 @@ impl ServeMetrics {
 pub struct ServeOutcome {
     pub metrics: ServeMetrics,
     pub per_replica: Vec<ReplicaMetrics>,
+}
+
+/// One named metric sample. This is the **single source of truth** for
+/// the tier's observable numbers: the CLI `Display` impls and the
+/// gateway's Prometheus `/metrics` endpoint both render the same rows,
+/// so the two surfaces cannot drift.
+#[derive(Clone, Debug)]
+pub struct MetricRow {
+    /// Prometheus-style snake_case name (without the `esact_` prefix
+    /// the gateway adds on the wire).
+    pub name: &'static str,
+    /// Optional single label, e.g. `("replica", 0)` or `("shard", 3)`.
+    pub label: Option<(&'static str, usize)>,
+    pub value: f64,
+}
+
+impl MetricRow {
+    pub fn of(name: &'static str, value: f64) -> Self {
+        Self { name, label: None, value }
+    }
+
+    pub fn labeled(name: &'static str, key: &'static str, index: usize, value: f64) -> Self {
+        Self { name, label: Some((key, index)), value }
+    }
+}
+
+impl fmt::Display for MetricRow {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let label = match self.label {
+            Some((k, v)) => format!("{}{{{k}=\"{v}\"}}", self.name),
+            None => self.name.to_string(),
+        };
+        // counters print as integers, gauges with enough precision for
+        // sub-millisecond latencies
+        if self.value.fract().abs() < 1e-9 && self.value.abs() < 1e15 {
+            write!(f, "{label:<44} {:.0}", self.value)
+        } else {
+            write!(f, "{label:<44} {:.6}", self.value)
+        }
+    }
+}
+
+/// Shared cache-counter rows (prefill plans + decode step plans).
+fn cache_rows(c: &CacheStats) -> Vec<MetricRow> {
+    vec![
+        MetricRow::of("plan_cache_hits_total", c.hits as f64),
+        MetricRow::of("plan_cache_misses_total", c.misses as f64),
+        MetricRow::of("plan_cache_hit_rate", c.hit_rate()),
+        MetricRow::of("plan_cache_entries", c.entries as f64),
+        MetricRow::of("plan_cache_evictions_total", c.evictions as f64),
+        MetricRow::of("plan_cache_step_hits_total", c.step_hits as f64),
+        MetricRow::of("plan_cache_step_misses_total", c.step_misses as f64),
+        MetricRow::of("plan_cache_step_hit_rate", c.step_hit_rate()),
+        MetricRow::of("plan_cache_step_entries", c.step_entries as f64),
+        MetricRow::of("plan_cache_step_evictions_total", c.step_evictions as f64),
+    ]
+}
+
+impl ServeMetrics {
+    /// The classify tier's metric rows (plan-cache rows included).
+    pub fn rows(&self) -> Vec<MetricRow> {
+        let mut rows = vec![
+            MetricRow::of("serve_requests_total", self.requests as f64),
+            MetricRow::of("serve_batches_total", self.batches as f64),
+            MetricRow::of("serve_padded_slots_total", self.padded_slots as f64),
+            MetricRow::of("serve_shed_total", self.shed as f64),
+            MetricRow::of("serve_steals_total", self.steals as f64),
+            MetricRow::of("serve_replicas", self.replicas as f64),
+            MetricRow::of("serve_latency_p50_seconds", self.p50_latency.as_secs_f64()),
+            MetricRow::of("serve_latency_p99_seconds", self.p99_latency.as_secs_f64()),
+            MetricRow::of("serve_latency_max_seconds", self.max_latency.as_secs_f64()),
+            MetricRow::of("serve_throughput_rps", self.throughput_rps()),
+        ];
+        rows.extend(cache_rows(&self.plan_cache));
+        rows
+    }
+}
+
+impl GenerateMetrics {
+    /// The decode tier's metric rows (step-cache rows included).
+    pub fn rows(&self) -> Vec<MetricRow> {
+        let mut rows = vec![
+            MetricRow::of("generate_sessions_total", self.sessions as f64),
+            MetricRow::of("generate_tokens_total", self.tokens as f64),
+            MetricRow::of("generate_slices_total", self.slices as f64),
+            MetricRow::of("generate_steals_total", self.steals as f64),
+            MetricRow::of("generate_replicas", self.replicas as f64),
+            MetricRow::of("generate_session_p50_seconds", self.p50_session.as_secs_f64()),
+            MetricRow::of("generate_session_p99_seconds", self.p99_session.as_secs_f64()),
+            MetricRow::of("generate_tokens_per_sec", self.tokens_per_sec()),
+        ];
+        rows.extend(cache_rows(&self.plan_cache));
+        rows
+    }
+}
+
+/// Per-replica counter rows (classify and decode tiers share the
+/// replica pool schema).
+pub fn replica_rows(per_replica: &[ReplicaMetrics]) -> Vec<MetricRow> {
+    let mut rows = Vec::with_capacity(per_replica.len() * 6);
+    for r in per_replica {
+        let of = |name, value| MetricRow::labeled(name, "replica", r.replica, value);
+        rows.push(of("replica_batches_total", r.batches as f64));
+        rows.push(of("replica_requests_total", r.requests as f64));
+        rows.push(of("replica_decode_slices_total", r.decode_slices as f64));
+        rows.push(of("replica_tokens_total", r.tokens as f64));
+        rows.push(of("replica_steals_total", r.steals as f64));
+        rows.push(of("replica_busy_seconds", r.busy.as_secs_f64()));
+    }
+    rows
+}
+
+fn fmt_rows(f: &mut fmt::Formatter<'_>, rows: &[MetricRow]) -> fmt::Result {
+    for row in rows {
+        writeln!(f, "{row}")?;
+    }
+    Ok(())
+}
+
+impl fmt::Display for ServeOutcome {
+    /// Renders exactly the rows `/metrics` exports (same names, same
+    /// values) — see [`MetricRow`].
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt_rows(f, &self.metrics.rows())?;
+        fmt_rows(f, &replica_rows(&self.per_replica))
+    }
 }
 
 /// One served reply.
@@ -155,6 +282,14 @@ pub struct GenerateOutcome {
     pub per_replica: Vec<ReplicaMetrics>,
 }
 
+impl fmt::Display for GenerateOutcome {
+    /// Renders exactly the rows `/metrics` exports — see [`MetricRow`].
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt_rows(f, &self.metrics.rows())?;
+        fmt_rows(f, &replica_rows(&self.per_replica))
+    }
+}
+
 /// Execution mode of the serve path.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Mode {
@@ -162,6 +297,116 @@ pub enum Mode {
     Dense,
     /// SPLS: host planner builds SPA masks, masked executable runs.
     Spls,
+}
+
+/// Cumulative live counters for the whole serving tier, updated by the
+/// leader loops as they absorb replica events, so an external scraper
+/// (the network gateway's `/metrics`) can observe the tier *mid-run*.
+/// The per-run [`ServeOutcome`] / [`GenerateOutcome`] joined at drain
+/// remain the exact end-of-run accounting.
+#[derive(Default)]
+pub(crate) struct LiveTier {
+    started: Option<Instant>,
+    serve: ServeMetrics,
+    generate: GenerateMetrics,
+    latencies: LatencyWindow,
+    session_latencies: LatencyWindow,
+    per_replica: Vec<ReplicaMetrics>,
+}
+
+impl LiveTier {
+    fn touch(&mut self) {
+        self.started.get_or_insert_with(Instant::now);
+    }
+
+    fn replica_mut(&mut self, id: usize) -> &mut ReplicaMetrics {
+        if self.per_replica.len() <= id {
+            self.per_replica.resize_with(id + 1, Default::default);
+            for (i, r) in self.per_replica.iter_mut().enumerate() {
+                r.replica = i;
+            }
+        }
+        &mut self.per_replica[id]
+    }
+
+    fn record_batch(
+        &mut self,
+        replica: usize,
+        replies: &[Reply],
+        padding: usize,
+        stolen: bool,
+        busy: Duration,
+    ) {
+        self.serve.batches += 1;
+        self.serve.padded_slots += padding;
+        self.serve.steals += usize::from(stolen);
+        for reply in replies {
+            self.serve.requests += 1;
+            self.serve.total_latency += reply.latency;
+            self.serve.max_latency = self.serve.max_latency.max(reply.latency);
+            self.latencies.push(reply.latency.as_secs_f64());
+        }
+        let r = self.replica_mut(replica);
+        r.batches += 1;
+        r.requests += replies.len();
+        r.steals += usize::from(stolen);
+        r.busy += busy;
+    }
+
+    fn record_decode(
+        &mut self,
+        replica: usize,
+        fresh: usize,
+        stolen: bool,
+        busy: Duration,
+        session_latency: Option<f64>,
+    ) {
+        self.generate.slices += 1;
+        self.generate.tokens += fresh;
+        self.generate.steals += usize::from(stolen);
+        if let Some(lat) = session_latency {
+            self.session_latencies.push(lat);
+        }
+        let r = self.replica_mut(replica);
+        r.decode_slices += 1;
+        r.tokens += fresh;
+        r.steals += usize::from(stolen);
+        r.busy += busy;
+    }
+}
+
+/// A point-in-time snapshot of the live tier counters (see
+/// [`Server::live_snapshot`]): the network gateway renders this through
+/// the same [`MetricRow`] schema the CLI `Display` impls use.
+#[derive(Debug)]
+pub struct TierSnapshot {
+    pub serve: ServeMetrics,
+    pub generate: GenerateMetrics,
+    pub per_replica: Vec<ReplicaMetrics>,
+    /// Time since the first serve/generate leader started (zero before
+    /// any work arrived). `serve.wall`/`generate.wall` are set to this,
+    /// so the snapshot's `throughput_rps()` reads as a lifetime mean.
+    pub uptime: Duration,
+}
+
+impl TierSnapshot {
+    /// All rows: classify tier + decode tier + per-replica counters.
+    /// The plan-cache rows appear in both tiers' standalone `Display`
+    /// output but are deduplicated here (they snapshot the same shared
+    /// cache), so a Prometheus scrape never sees a name twice.
+    pub fn rows(&self) -> Vec<MetricRow> {
+        let mut rows = self.serve.rows();
+        let mut seen: Vec<(&'static str, Option<(&'static str, usize)>)> =
+            rows.iter().map(|r| (r.name, r.label)).collect();
+        for row in self.generate.rows().into_iter().chain(replica_rows(&self.per_replica)) {
+            let key = (row.name, row.label);
+            if !seen.contains(&key) {
+                seen.push(key);
+                rows.push(row);
+            }
+        }
+        rows
+    }
 }
 
 /// Everything the replicas share: the loaded artifacts (each worker
@@ -183,6 +428,9 @@ pub(crate) struct ServerCore {
     /// Shared decode engine (a view over `packed`) for
     /// `serve_generate` sessions.
     engine: Arc<DecodeEngine>,
+    /// Live tier counters (see [`LiveTier`]); leaders update it as
+    /// they absorb replica events, `/metrics` scrapes it mid-run.
+    live: Mutex<LiveTier>,
 }
 
 impl ServerCore {
@@ -340,6 +588,7 @@ impl Server {
                 mode,
                 cache: SharedPlanCache::new(cache_capacity),
                 engine,
+                live: Mutex::new(LiveTier::default()),
             }),
         })
     }
@@ -348,9 +597,50 @@ impl Server {
         self.seq_len
     }
 
+    /// Vocabulary size of the loaded model — the gateway validates
+    /// token ids against it before they can reach an executor.
+    pub fn vocab(&self) -> usize {
+        self.core.weights.cfg.vocab
+    }
+
+    /// Classifier output width.
+    pub fn n_classes(&self) -> usize {
+        self.core.n_classes
+    }
+
     /// Plan-cache counters (cumulative across serve runs).
     pub fn plan_cache_stats(&self) -> CacheStats {
         self.core.cache.stats()
+    }
+
+    /// Per-shard plan-cache counters (index = shard), for dashboards
+    /// that want the shard distribution rather than the summed view.
+    pub fn plan_cache_shard_stats(&self) -> Vec<CacheStats> {
+        self.core.cache.shard_stats()
+    }
+
+    /// Snapshot the live tier counters (see [`TierSnapshot`]). Live
+    /// percentiles are estimated over a bounded sliding window of the
+    /// most recent samples ([`LatencyWindow`]).
+    pub fn live_snapshot(&self) -> TierSnapshot {
+        let live = self.core.live.lock().unwrap();
+        let uptime = live.started.map(|t| t.elapsed()).unwrap_or_default();
+        let mut serve = live.serve;
+        let mut generate = live.generate;
+        let cache = self.core.cache.stats();
+        serve.plan_cache = cache;
+        generate.plan_cache = cache;
+        serve.wall = uptime;
+        generate.wall = uptime;
+        serve.replicas = live.per_replica.len();
+        generate.replicas = live.per_replica.len();
+        let as_durations = |(p50, p99): (f64, f64)| {
+            (Duration::from_secs_f64(p50), Duration::from_secs_f64(p99))
+        };
+        (serve.p50_latency, serve.p99_latency) = as_durations(live.latencies.percentiles());
+        (generate.p50_session, generate.p99_session) =
+            as_durations(live.session_latencies.percentiles());
+        TierSnapshot { serve, generate, per_replica: live.per_replica.clone(), uptime }
     }
 
     /// Execute one batch inline on the shared artifacts (tests and
@@ -393,6 +683,7 @@ impl Server {
         n_replicas: usize,
     ) -> Result<ServeOutcome> {
         assert!(n_replicas >= 1, "need at least one replica");
+        self.core.live.lock().unwrap().touch();
         let queue = Arc::new(WorkQueue::new(n_replicas));
         let (etx, erx) = mpsc::channel();
         let workers =
@@ -440,7 +731,7 @@ impl Server {
                 }
             } else if st.in_flight > 0 {
                 match erx.recv_timeout(tick) {
-                    Ok(ev) => st.absorb(ev, &replies),
+                    Ok(ev) => st.absorb(ev, &replies, &self.core.live),
                     Err(mpsc::RecvTimeoutError::Timeout) => {}
                     Err(mpsc::RecvTimeoutError::Disconnected) => {
                         // every worker exited without reporting the
@@ -454,7 +745,7 @@ impl Server {
             }
             // 2. drain completion events without blocking
             while let Ok(ev) = erx.try_recv() {
-                st.absorb(ev, &replies);
+                st.absorb(ev, &replies, &self.core.live);
             }
             // 3. dispatch: full/stale batches while the pipeline has
             //    room (≤ 2 outstanding batches per replica, so
@@ -500,7 +791,7 @@ impl Server {
         // absorb events that raced shutdown (workers drained the queue
         // between our last poll and their exit)
         while let Ok(ev) = erx.try_recv() {
-            st.absorb(ev, &replies);
+            st.absorb(ev, &replies, &self.core.live);
         }
         if let Some(err) = st.first_error.take() {
             return Err(err);
@@ -536,6 +827,7 @@ impl Server {
         steps_per_slice: usize,
     ) -> Result<GenerateOutcome> {
         assert!(n_replicas >= 1, "need at least one replica");
+        self.core.live.lock().unwrap().touch();
         let slice = steps_per_slice.max(1);
         let queue = Arc::new(WorkQueue::new(n_replicas));
         let (etx, erx) = mpsc::channel();
@@ -575,7 +867,7 @@ impl Server {
             // 2. block on whichever side can make progress
             if st.in_flight > 0 {
                 match erx.recv_timeout(tick) {
-                    Ok(ev) => st.absorb(ev, &replies, &queue),
+                    Ok(ev) => st.absorb(ev, &replies, &queue, &self.core.live),
                     Err(mpsc::RecvTimeoutError::Timeout) => {}
                     Err(mpsc::RecvTimeoutError::Disconnected) => {
                         st.first_error = Some(anyhow::anyhow!(
@@ -585,7 +877,7 @@ impl Server {
                     }
                 }
                 while let Ok(ev) = erx.try_recv() {
-                    st.absorb(ev, &replies, &queue);
+                    st.absorb(ev, &replies, &queue, &self.core.live);
                 }
             } else if open {
                 match requests.recv_timeout(tick) {
@@ -606,7 +898,7 @@ impl Server {
             .map(|h| h.join().expect("replica thread panicked"))
             .collect();
         while let Ok(ev) = erx.try_recv() {
-            st.absorb(ev, &replies, &queue);
+            st.absorb(ev, &replies, &queue, &self.core.live);
         }
         if let Some(err) = st.first_error.take() {
             return Err(err);
@@ -651,6 +943,7 @@ impl Server {
             session = session.with_plan_cache(self.core.cache.clone());
         }
         st.metrics.sessions += 1;
+        self.core.live.lock().unwrap().generate.sessions += 1;
         st.in_flight += 1;
         queue.push_least_loaded(Job::Decode {
             task: Box::new(GenTask { id: req.id, arrived: req.arrived, session }),
@@ -668,14 +961,16 @@ struct LeaderState {
 }
 
 impl LeaderState {
-    /// Fold one replica event in, forwarding replies to the caller.
-    fn absorb(&mut self, ev: ReplicaEvent, out: &mpsc::Sender<Reply>) {
+    /// Fold one replica event in, forwarding replies to the caller and
+    /// mirroring the counters into the shared live tier.
+    fn absorb(&mut self, ev: ReplicaEvent, out: &mpsc::Sender<Reply>, live: &Mutex<LiveTier>) {
         self.in_flight = self.in_flight.saturating_sub(1);
         match ev {
-            ReplicaEvent::Done { replies, padding, stolen, .. } => {
+            ReplicaEvent::Done { replica, replies, padding, stolen, busy } => {
                 self.metrics.batches += 1;
                 self.metrics.padded_slots += padding;
                 self.metrics.steals += usize::from(stolen);
+                live.lock().unwrap().record_batch(replica, &replies, padding, stolen, busy);
                 for reply in replies {
                     self.metrics.requests += 1;
                     self.metrics.total_latency += reply.latency;
@@ -708,15 +1003,30 @@ struct GenLeader {
 
 impl GenLeader {
     /// Fold one replica event in: stream the chunk out, requeue the
-    /// session if it has steps left.
-    fn absorb(&mut self, ev: ReplicaEvent, out: &mpsc::Sender<GenChunk>, queue: &WorkQueue) {
+    /// session if it has steps left, and mirror the counters into the
+    /// shared live tier.
+    fn absorb(
+        &mut self,
+        ev: ReplicaEvent,
+        out: &mpsc::Sender<GenChunk>,
+        queue: &WorkQueue,
+        live: &Mutex<LiveTier>,
+    ) {
         self.in_flight = self.in_flight.saturating_sub(1);
         match ev {
-            ReplicaEvent::DecodeDone { task, fresh, stolen, .. } => {
+            ReplicaEvent::DecodeDone { replica, task, fresh, stolen, busy } => {
                 self.metrics.slices += 1;
                 self.metrics.steals += usize::from(stolen);
                 self.metrics.tokens += fresh.len();
                 let done = task.session.done();
+                let session_latency = done.then(|| task.arrived.elapsed().as_secs_f64());
+                live.lock().unwrap().record_decode(
+                    replica,
+                    fresh.len(),
+                    stolen,
+                    busy,
+                    session_latency,
+                );
                 // receiver may have hung up at shutdown; fine
                 let _ = out.send(GenChunk { id: task.id, tokens: fresh, done });
                 if done {
@@ -902,6 +1212,73 @@ mod tests {
         replies.sort_by_key(|r| r.id);
         for (reply, want) in replies.iter().zip(&want) {
             assert_eq!(&reply.logits, want, "replication must not change results");
+        }
+    }
+
+    #[test]
+    fn live_snapshot_mirrors_outcome_and_display_is_row_exact() {
+        let srv = Server::new(&artifacts_dir(), Mode::Dense, SplsConfig::default()).unwrap();
+        let (rx, rtx, rrx) = preloaded(gen_requests(12));
+        let outcome = srv.serve_replicated(rx, rtx, BatchPolicy::default(), 2).unwrap();
+        assert_eq!(rrx.iter().count(), 12);
+        // the live tier (scraped by the gateway's /metrics mid-run)
+        // must agree with the joined end-of-run outcome
+        let snap = srv.live_snapshot();
+        assert_eq!(snap.serve.requests, outcome.metrics.requests);
+        assert_eq!(snap.serve.batches, outcome.metrics.batches);
+        assert_eq!(snap.serve.steals, outcome.metrics.steals);
+        assert_eq!(snap.per_replica.len(), 2);
+        let executed: usize = snap.per_replica.iter().map(|r| r.requests).sum();
+        assert_eq!(executed, 12, "live per-replica counters must cover every request");
+        let busy: Duration = snap.per_replica.iter().map(|r| r.busy).sum();
+        assert!(busy > Duration::ZERO, "event plumbing must carry busy time");
+        assert!(snap.uptime > Duration::ZERO);
+        // Display is row-exact: every /metrics row appears verbatim
+        let shown = outcome.to_string();
+        for row in outcome.metrics.rows().iter().chain(replica_rows(&outcome.per_replica).iter())
+        {
+            assert!(shown.contains(&row.to_string()), "Display missing row {row}");
+        }
+        // a full snapshot never repeats a (name, replica) pair — the
+        // Prometheus exposition invariant
+        let rows = snap.rows();
+        let mut keys: Vec<(&str, Option<(&str, usize)>)> =
+            rows.iter().map(|r| (r.name, r.label)).collect();
+        let n = keys.len();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), n, "duplicate metric rows in snapshot");
+    }
+
+    #[test]
+    fn live_snapshot_tracks_generate_tier_too() {
+        use crate::decode::{DecodeConfig, Sampling};
+        let srv = Server::new(&artifacts_dir(), Mode::Dense, SplsConfig::default()).unwrap();
+        let (tx, rx) = mpsc::channel();
+        let (ctx, crx) = mpsc::channel();
+        for (i, p) in gen_prompts(3, 12).into_iter().enumerate() {
+            tx.send(GenRequest {
+                id: i as u64,
+                prompt: p,
+                max_new: 6,
+                sampling: Sampling::Greedy,
+                arrived: Instant::now(),
+            })
+            .unwrap();
+        }
+        drop(tx);
+        let drain = std::thread::spawn(move || crx.iter().count());
+        let outcome = srv.serve_generate(rx, ctx, DecodeConfig::default(), 2, 2).unwrap();
+        drain.join().unwrap();
+        let snap = srv.live_snapshot();
+        assert_eq!(snap.generate.sessions, outcome.metrics.sessions);
+        assert_eq!(snap.generate.tokens, outcome.metrics.tokens);
+        assert_eq!(snap.generate.slices, outcome.metrics.slices);
+        let tokens: usize = snap.per_replica.iter().map(|r| r.tokens).sum();
+        assert_eq!(tokens, 3 * 6);
+        let shown = outcome.to_string();
+        for row in outcome.metrics.rows() {
+            assert!(shown.contains(&row.to_string()), "Display missing row {row}");
         }
     }
 

@@ -20,6 +20,13 @@
 //! and a streaming `Server::serve_generate` path that continuously
 //! batches decode slices across the replica tier.
 //!
+//! The tier is reachable over the network through `net::` (`esact
+//! serve --http`): a std-only HTTP/1.1 gateway with batched
+//! `/v1/classify`, chunked-streaming `/v1/generate`, Prometheus
+//! `/metrics`, admission-bound 429 backpressure, and graceful drain —
+//! results over the wire are bit-identical to the in-process paths
+//! (`tests/integration_gateway.rs`).
+//!
 //! Host execution runs on the **packed engine** (`model::engine`): a
 //! `PackedModel` built once per weight set (per-head weight slices,
 //! pre-quantized predictor operands) drives every forward path with a
@@ -43,6 +50,7 @@ pub mod coordinator;
 pub mod decode;
 pub mod energy;
 pub mod model;
+pub mod net;
 pub mod quant;
 pub mod report;
 pub mod runtime;

@@ -14,6 +14,8 @@ use esact::coordinator::{BatchPolicy, GenRequest, Request};
 use esact::coordinator::Server;
 use esact::decode::{DecodeConfig, DecodeMode, Sampling};
 use esact::model;
+use esact::net::client::{classify_body, generate_body, HttpClient};
+use esact::net::{Gateway, GatewayConfig};
 use esact::quant::QuantMethod;
 use esact::report::{figures, tables};
 use esact::util::rng::Xoshiro256pp;
@@ -29,6 +31,16 @@ USAGE:
   esact serve [n] [dense|spls] [replicas]
                               run the serving loop over n synthetic requests
                               on a replicated worker tier (default 1)
+  esact serve [dense|spls] [replicas] --http <addr> [--max-conns N]
+                 [--max-queue Q]
+                              expose the replicated tier over HTTP/1.1:
+                              POST /v1/classify, POST /v1/generate (chunked
+                              streaming), GET /metrics, GET /healthz; drain
+                              with POST /admin/shutdown
+  esact http-check <addr> [--shutdown]
+                              probe a running gateway end to end (healthz,
+                              classify, generate stream, metrics); with
+                              --shutdown, drain it afterwards
   esact generate [n] [dense|spls] [replicas] [--kv-budget B] [--prefix P]
                  [--new T] [--sample-topk K] [--seed S]
                               stream T tokens for each of n generation
@@ -54,6 +66,7 @@ fn main() -> Result<()> {
         Some("repro") => repro(args.get(1).map(String::as_str).unwrap_or("all")),
         Some("eval") => eval(&args[1..]),
         Some("serve") => serve(&args[1..]),
+        Some("http-check") => http_check(&args[1..]),
         Some("generate") => generate(&args[1..]),
         Some("sim") => sim(&args[1..]),
         Some("cluster") => cluster(&args[1..]),
@@ -126,12 +139,56 @@ fn eval(args: &[String]) -> Result<()> {
 }
 
 fn serve(args: &[String]) -> Result<()> {
-    let n: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(64);
-    let mode = match args.get(1).map(String::as_str) {
-        Some("spls") => Mode::Spls,
-        _ => Mode::Dense,
-    };
-    let replicas: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(1);
+    // positional [n] [dense|spls] [replicas]; flags anywhere
+    let mut pos: Vec<&String> = Vec::new();
+    let mut http: Option<String> = None;
+    let mut max_conns = 8usize;
+    let mut max_queue: Option<usize> = None;
+    let mut i = 0usize;
+    while i < args.len() {
+        let value = |j: usize| args.get(j + 1).map(String::as_str);
+        match args[i].as_str() {
+            "--http" => {
+                http = value(i).map(String::from);
+                i += 2;
+            }
+            "--max-conns" => {
+                max_conns = value(i).and_then(|s| s.parse().ok()).unwrap_or(8);
+                i += 2;
+            }
+            "--max-queue" => {
+                max_queue = value(i).and_then(|s| s.parse().ok());
+                i += 2;
+            }
+            _ => {
+                pos.push(&args[i]);
+                i += 1;
+            }
+        }
+    }
+    let mode = if pos.iter().any(|s| s.as_str() == "spls") { Mode::Spls } else { Mode::Dense };
+    let nums: Vec<usize> = pos.iter().filter_map(|s| s.parse().ok()).collect();
+    if let Some(addr) = http {
+        // network mode: numbers are [replicas] (no request count — the
+        // gateway serves until drained)
+        let replicas = nums.first().copied().unwrap_or(1).max(1);
+        let mut policy = BatchPolicy::default();
+        if let Some(q) = max_queue {
+            policy.max_queue = q.max(1);
+        }
+        let cfg = GatewayConfig { addr, max_conns, replicas, mode, policy, ..Default::default() };
+        let srv = std::sync::Arc::new(Server::new(&artifact_dir(), mode, SplsConfig::default())?);
+        let gateway = Gateway::start(srv, cfg)?;
+        println!("esact gateway listening on http://{}", gateway.local_addr());
+        println!("  POST /v1/classify   POST /v1/generate (chunked stream)");
+        println!("  GET  /healthz       GET  /metrics");
+        println!("  POST /admin/shutdown drains and exits");
+        let report = gateway.join()?;
+        print!("{report}");
+        return Ok(());
+    }
+    let n = nums.first().copied().unwrap_or(64);
+    let replicas = nums.get(1).copied().unwrap_or(1).max(1);
     let srv = Server::new(&artifact_dir(), mode, SplsConfig::default())?;
     let (tx, rx) = mpsc::channel();
     let (rtx, rrx) = mpsc::channel();
@@ -148,32 +205,85 @@ fn serve(args: &[String]) -> Result<()> {
     let outcome = srv.serve_replicated(rx, rtx, BatchPolicy::default(), replicas)?;
     producer.join().unwrap();
     let replies = drain.join().unwrap();
-    let metrics = outcome.metrics;
-    println!(
-        "mode {mode:?} x{replicas}: {replies}/{n} replies | {} batches ({} padded, {} stolen, \
-         {} shed) | latency p50 {:.2} ms p99 {:.2} ms max {:.2} ms | {:.1} req/s \
-         ({:.1} per replica) | plan cache {:.0}% hit",
-        metrics.batches,
-        metrics.padded_slots,
-        metrics.steals,
-        metrics.shed,
-        metrics.p50_latency.as_secs_f64() * 1e3,
-        metrics.p99_latency.as_secs_f64() * 1e3,
-        metrics.max_latency.as_secs_f64() * 1e3,
-        metrics.throughput_rps(),
-        metrics.throughput_per_replica(),
-        metrics.plan_cache.hit_rate() * 100.0
-    );
-    for r in &outcome.per_replica {
-        println!(
-            "  replica {}: {} batches, {} requests, {} steals, {:.1} ms busy",
-            r.replica,
-            r.batches,
-            r.requests,
-            r.steals,
-            r.busy.as_secs_f64() * 1e3
-        );
+    println!("mode {mode:?} x{replicas}: {replies}/{n} replies");
+    // the Display rows are exactly what a gateway's /metrics exports
+    // (one source of truth — see coordinator::server::MetricRow)
+    print!("{outcome}");
+    Ok(())
+}
+
+/// Probe a running gateway end to end with the blocking HTTP client:
+/// healthz → classify → generate stream → metrics (and optionally a
+/// graceful drain). Exits non-zero on any failed check — this is what
+/// CI's gateway smoke job runs.
+fn http_check(args: &[String]) -> Result<()> {
+    let addr = match args.first() {
+        Some(a) if !a.starts_with("--") => a.clone(),
+        _ => bail!("usage: esact http-check <addr> [--shutdown]"),
+    };
+    let shutdown = args.iter().any(|a| a == "--shutdown");
+    let mut client =
+        HttpClient::connect_retry(&addr, 50, std::time::Duration::from_millis(100))?;
+
+    // 1. healthz: must be ok, and tells us the request shapes
+    let health = client.get("/healthz")?;
+    if health.status != 200 {
+        bail!("healthz returned {}", health.status);
     }
+    let doc = health.json()?;
+    let seq_len = doc.get("seq_len").and_then(|v| v.as_usize()).unwrap_or(64);
+    let vocab = doc.get("vocab").and_then(|v| v.as_usize()).unwrap_or(64);
+    let n_classes = doc.get("n_classes").and_then(|v| v.as_usize()).unwrap_or(16);
+    println!("healthz ok: L={seq_len} vocab={vocab} classes={n_classes}");
+
+    // 2. classify: a synthetic batch of 2
+    let seqs: Vec<Vec<i32>> = (0..2)
+        .map(|s| (0..seq_len).map(|i| ((i * 7 + s * 3) % vocab) as i32).collect())
+        .collect();
+    let reply = client.post_json("/v1/classify", &classify_body(&[&seqs[0][..], &seqs[1][..]]))?;
+    if reply.status != 200 {
+        bail!("classify returned {}: {}", reply.status, String::from_utf8_lossy(&reply.body));
+    }
+    let logits = reply.json()?;
+    let rows = logits.get("logits").and_then(|l| l.as_arr().map(|a| a.len())).unwrap_or(0);
+    if rows != 2 {
+        bail!("classify returned {rows} logit rows, wanted 2");
+    }
+    println!("classify ok: 2 sequences -> 2 x {n_classes} logits");
+
+    // 3. generate: stream a short greedy continuation
+    let prompt: Vec<i32> = seqs[0][..8.min(seq_len)].to_vec();
+    let stream = client.generate_stream(&generate_body(&prompt, 6, None))?;
+    let result = stream.collect()?;
+    if result.tokens.len() != 6 {
+        bail!("generate streamed {} tokens, wanted 6", result.tokens.len());
+    }
+    println!(
+        "generate ok: 6 tokens in {} chunks (ttft {:.1} ms)",
+        result.chunks,
+        result.ttft.map(|d| d.as_secs_f64() * 1e3).unwrap_or(0.0)
+    );
+
+    // 4. metrics: the tier rows must be present
+    let metrics = client.get("/metrics")?;
+    let text = String::from_utf8_lossy(&metrics.body).to_string();
+    for needle in
+        ["esact_serve_requests_total", "esact_generate_tokens_total", "esact_gateway_state"]
+    {
+        if !text.contains(needle) {
+            bail!("metrics missing {needle}");
+        }
+    }
+    println!("metrics ok: {} lines", text.lines().count());
+
+    if shutdown {
+        let r = client.post_json("/admin/shutdown", "")?;
+        if r.status != 200 {
+            bail!("shutdown returned {}", r.status);
+        }
+        println!("shutdown ok: gateway draining");
+    }
+    println!("http-check: all endpoints healthy");
     Ok(())
 }
 
@@ -280,6 +390,8 @@ fn generate(args: &[String]) -> Result<()> {
         m.p99_session.as_secs_f64() * 1e3,
         m.plan_cache.step_hit_rate() * 100.0
     );
+    // the same rows a gateway's /metrics would export for this tier
+    print!("{outcome}");
     Ok(())
 }
 

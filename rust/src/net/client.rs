@@ -1,0 +1,469 @@
+//! Blocking HTTP/1.1 client + HTTP load generator for the gateway —
+//! the measurement half of the network subsystem (std-only, like the
+//! server side). The client speaks exactly what the gateway serves:
+//! keep-alive `Content-Length` exchanges and chunked generate streams.
+//! The load generator reuses the serving tier's arrival schedules
+//! (`coordinator::loadgen`) so HTTP benchmarks are directly comparable
+//! to the in-process serving bench: closed-loop (per-connection
+//! back-to-back) and open-loop Poisson drivers over a pool of request
+//! bodies, reporting client-side latency percentiles and throughput.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::loadgen::{arrivals, Arrival};
+use crate::net::http::{parse_response_head, ChunkDecoder, ChunkEvent, ResponseHead};
+use crate::net::json::{self, Json};
+use crate::util::rng::Xoshiro256pp;
+use crate::util::stats;
+
+/// One buffered HTTP response.
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Parse the body as JSON.
+    pub fn json(&self) -> Result<Json> {
+        let text = std::str::from_utf8(&self.body).context("response body is not UTF-8")?;
+        Json::parse(text).map_err(|e| anyhow::anyhow!("bad JSON in response: {e}"))
+    }
+}
+
+/// A keep-alive connection to the gateway.
+pub struct HttpClient {
+    stream: TcpStream,
+    /// Bytes read past the previous exchange (keep-alive pipelining).
+    buf: Vec<u8>,
+}
+
+impl HttpClient {
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream =
+            TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+        stream.set_nodelay(true)?;
+        Ok(Self { stream, buf: Vec::new() })
+    }
+
+    /// Connect with retries — the readiness probe for freshly spawned
+    /// gateways (CI smoke, benches).
+    pub fn connect_retry(addr: &str, attempts: usize, delay: Duration) -> Result<Self> {
+        let mut last = None;
+        for _ in 0..attempts.max(1) {
+            match Self::connect(addr) {
+                Ok(client) => return Ok(client),
+                Err(e) => last = Some(e),
+            }
+            std::thread::sleep(delay);
+        }
+        Err(last.expect("at least one attempt"))
+    }
+
+    pub fn get(&mut self, path: &str) -> Result<Response> {
+        self.request("GET", path, None)
+    }
+
+    pub fn post_json(&mut self, path: &str, body: &str) -> Result<Response> {
+        self.request("POST", path, Some(body.as_bytes()))
+    }
+
+    fn send_request(&mut self, method: &str, path: &str, body: Option<&[u8]>) -> Result<()> {
+        let mut head = format!("{method} {path} HTTP/1.1\r\nHost: esact\r\n");
+        if let Some(b) = body {
+            head.push_str("Content-Type: application/json\r\n");
+            head.push_str(&format!("Content-Length: {}\r\n", b.len()));
+        }
+        head.push_str("\r\n");
+        self.stream.write_all(head.as_bytes())?;
+        if let Some(b) = body {
+            self.stream.write_all(b)?;
+        }
+        self.stream.flush()?;
+        Ok(())
+    }
+
+    fn fill(&mut self) -> Result<()> {
+        let mut tmp = [0u8; 8192];
+        let n = self.stream.read(&mut tmp)?;
+        if n == 0 {
+            bail!("connection closed by the gateway");
+        }
+        self.buf.extend_from_slice(&tmp[..n]);
+        Ok(())
+    }
+
+    fn read_head(&mut self) -> Result<ResponseHead> {
+        loop {
+            if let Some(end) = self.buf.windows(4).position(|w| w == b"\r\n\r\n") {
+                let head = std::str::from_utf8(&self.buf[..end])
+                    .context("response head is not UTF-8")?;
+                let parsed = parse_response_head(head)?;
+                self.buf.drain(..end + 4);
+                return Ok(parsed);
+            }
+            if self.buf.len() > 64 * 1024 {
+                bail!("response head too large");
+            }
+            self.fill()?;
+        }
+    }
+
+    /// One full request/response exchange (chunked responses are
+    /// buffered to completion; use [`HttpClient::generate_stream`] for
+    /// incremental consumption).
+    fn request(&mut self, method: &str, path: &str, body: Option<&[u8]>) -> Result<Response> {
+        self.send_request(method, path, body)?;
+        let head = self.read_head()?;
+        let body = if head.is_chunked() {
+            let mut dec = ChunkDecoder::new();
+            dec.push(&std::mem::take(&mut self.buf));
+            let mut out = Vec::new();
+            loop {
+                match dec.next_event()? {
+                    ChunkEvent::Data(d) => out.extend_from_slice(&d),
+                    ChunkEvent::End => {
+                        self.buf = dec.leftover();
+                        break;
+                    }
+                    ChunkEvent::Need => {
+                        let mut tmp = [0u8; 8192];
+                        let n = self.stream.read(&mut tmp)?;
+                        if n == 0 {
+                            bail!("stream truncated");
+                        }
+                        dec.push(&tmp[..n]);
+                    }
+                }
+            }
+            out
+        } else {
+            let n = head.content_length().unwrap_or(0);
+            while self.buf.len() < n {
+                self.fill()?;
+            }
+            self.buf.drain(..n).collect()
+        };
+        Ok(Response { status: head.status, headers: head.headers, body })
+    }
+
+    /// Open a `/v1/generate` stream. Errors if the gateway answered
+    /// with a buffered (non-streaming) response — its status and body
+    /// are in the error message.
+    pub fn generate_stream(&mut self, body: &str) -> Result<GenStream<'_>> {
+        self.send_request("POST", "/v1/generate", Some(body.as_bytes()))?;
+        let started = Instant::now();
+        let head = self.read_head()?;
+        if !head.is_chunked() {
+            let n = head.content_length().unwrap_or(0);
+            while self.buf.len() < n {
+                self.fill()?;
+            }
+            let body: Vec<u8> = self.buf.drain(..n).collect();
+            bail!(
+                "gateway refused the stream: {} {}",
+                head.status,
+                String::from_utf8_lossy(&body)
+            );
+        }
+        let mut dec = ChunkDecoder::new();
+        dec.push(&std::mem::take(&mut self.buf));
+        Ok(GenStream { client: self, dec, started, done: false })
+    }
+}
+
+/// An open generate stream; yields one decoded chunk line at a time.
+pub struct GenStream<'a> {
+    client: &'a mut HttpClient,
+    dec: ChunkDecoder,
+    started: Instant,
+    done: bool,
+}
+
+/// What a fully-consumed stream produced.
+#[derive(Debug)]
+pub struct StreamResult {
+    pub tokens: Vec<i32>,
+    /// Time to first generated token (None if the stream was empty).
+    pub ttft: Option<Duration>,
+    pub chunks: usize,
+    pub wall: Duration,
+}
+
+impl GenStream<'_> {
+    /// Next `{"tokens": [...], "done": bool}` line, or `None` at end
+    /// of stream. A server-reported error line becomes an `Err`.
+    pub fn next_chunk(&mut self) -> Result<Option<(Vec<i32>, bool)>> {
+        if self.done {
+            return Ok(None);
+        }
+        loop {
+            match self.dec.next_event()? {
+                ChunkEvent::Data(d) => {
+                    let text = std::str::from_utf8(&d).context("chunk is not UTF-8")?;
+                    let doc = Json::parse(text.trim_end())
+                        .map_err(|e| anyhow::anyhow!("bad chunk JSON: {e}"))?;
+                    if let Some(err) = doc.get("error").and_then(|e| e.as_str()) {
+                        bail!("stream error from gateway: {err}");
+                    }
+                    let tokens = doc
+                        .get("tokens")
+                        .and_then(json::to_i32_vec)
+                        .context("chunk without tokens")?;
+                    let done = doc.get("done").and_then(|d| d.as_bool()).unwrap_or(false);
+                    return Ok(Some((tokens, done)));
+                }
+                ChunkEvent::End => {
+                    self.client.buf = self.dec.leftover();
+                    self.done = true;
+                    return Ok(None);
+                }
+                ChunkEvent::Need => {
+                    let mut tmp = [0u8; 8192];
+                    let n = self.client.stream.read(&mut tmp)?;
+                    if n == 0 {
+                        bail!("stream truncated");
+                    }
+                    self.dec.push(&tmp[..n]);
+                }
+            }
+        }
+    }
+
+    /// Drain the stream to completion.
+    pub fn collect(mut self) -> Result<StreamResult> {
+        let mut tokens = Vec::new();
+        let mut ttft = None;
+        let mut chunks = 0usize;
+        while let Some((fresh, _done)) = self.next_chunk()? {
+            chunks += 1;
+            if !fresh.is_empty() && ttft.is_none() {
+                ttft = Some(self.started.elapsed());
+            }
+            tokens.extend(fresh);
+        }
+        Ok(StreamResult { tokens, ttft, chunks, wall: self.started.elapsed() })
+    }
+}
+
+/// Build a `/v1/classify` body for a batch of sequences.
+pub fn classify_body(batch: &[&[i32]]) -> String {
+    let mut body = String::from("{\"tokens\":[");
+    for (i, seq) in batch.iter().enumerate() {
+        if i > 0 {
+            body.push(',');
+        }
+        body.push_str(&json::i32_array(seq));
+    }
+    body.push_str("]}");
+    body
+}
+
+/// Build a `/v1/generate` body.
+pub fn generate_body(prompt: &[i32], max_new: usize, top_k: Option<(usize, f32, u64)>) -> String {
+    let mut body = format!("{{\"prompt\":{},\"max_new\":{max_new}", json::i32_array(prompt));
+    if let Some((k, temperature, seed)) = top_k {
+        body.push_str(&format!(",\"top_k\":{k},\"temperature\":{temperature},\"seed\":{seed}"));
+    }
+    body.push('}');
+    body
+}
+
+/// Aggregate results of one HTTP load run.
+#[derive(Debug, Default)]
+pub struct LoadReport {
+    pub sent: usize,
+    pub ok: usize,
+    /// 429 responses (admission shed).
+    pub shed: usize,
+    pub errors: usize,
+    pub wall: Duration,
+    /// Client-side latency of each OK request, seconds (sorted).
+    pub latencies: Vec<f64>,
+}
+
+impl LoadReport {
+    pub fn throughput_rps(&self) -> f64 {
+        if self.wall.is_zero() {
+            0.0
+        } else {
+            self.ok as f64 / self.wall.as_secs_f64()
+        }
+    }
+
+    pub fn p50_ms(&self) -> f64 {
+        self.percentile_ms(0.50)
+    }
+
+    pub fn p99_ms(&self) -> f64 {
+        self.percentile_ms(0.99)
+    }
+
+    fn percentile_ms(&self, q: f64) -> f64 {
+        if self.latencies.is_empty() {
+            0.0
+        } else {
+            stats::percentile(&self.latencies, q) * 1e3
+        }
+    }
+
+    fn absorb(&mut self, other: LoadReport) {
+        self.sent += other.sent;
+        self.ok += other.ok;
+        self.shed += other.shed;
+        self.errors += other.errors;
+        self.latencies.extend(other.latencies);
+    }
+
+    fn finish(&mut self, wall: Duration) {
+        self.wall = wall;
+        self.latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    }
+}
+
+/// Closed-loop classify load: `connections` keep-alive connections,
+/// each posting back-to-back single-sequence requests round-robin over
+/// `pool` until `total` requests have been issued in aggregate.
+pub fn closed_loop_classify(
+    addr: &str,
+    connections: usize,
+    total: usize,
+    pool: &[Vec<i32>],
+) -> Result<LoadReport> {
+    assert!(!pool.is_empty());
+    let connections = connections.max(1);
+    let issued = Arc::new(AtomicUsize::new(0));
+    let start = Instant::now();
+    let workers: Vec<_> = (0..connections)
+        .map(|_| {
+            let issued = Arc::clone(&issued);
+            let addr = addr.to_string();
+            let pool = pool.to_vec();
+            std::thread::spawn(move || -> Result<LoadReport> {
+                let mut client =
+                    HttpClient::connect_retry(&addr, 20, Duration::from_millis(50))?;
+                let mut report = LoadReport::default();
+                loop {
+                    let i = issued.fetch_add(1, Ordering::Relaxed);
+                    if i >= total {
+                        break;
+                    }
+                    let body = classify_body(&[&pool[i % pool.len()][..]]);
+                    let t0 = Instant::now();
+                    report.sent += 1;
+                    match client.post_json("/v1/classify", &body) {
+                        Ok(resp) if resp.status == 200 => {
+                            report.ok += 1;
+                            report.latencies.push(t0.elapsed().as_secs_f64());
+                        }
+                        Ok(resp) if resp.status == 429 => report.shed += 1,
+                        Ok(_) => report.errors += 1,
+                        Err(_) => {
+                            report.errors += 1;
+                            // reconnect once; give up on repeat failure
+                            client = HttpClient::connect_retry(
+                                &addr,
+                                5,
+                                Duration::from_millis(50),
+                            )?;
+                        }
+                    }
+                }
+                Ok(report)
+            })
+        })
+        .collect();
+    let mut merged = LoadReport::default();
+    for w in workers {
+        merged.absorb(w.join().expect("loadgen worker panicked")?);
+    }
+    merged.finish(start.elapsed());
+    Ok(merged)
+}
+
+/// Open-loop Poisson classify load at `rate` requests/second: a
+/// scheduler thread fires arrivals on the shared
+/// `coordinator::loadgen` schedule; `connections` workers post them as
+/// they land (queueing delay counts toward latency, as in any
+/// open-loop harness).
+pub fn poisson_classify(
+    addr: &str,
+    rate: f64,
+    n: usize,
+    connections: usize,
+    pool: &[Vec<i32>],
+    seed: u64,
+) -> Result<LoadReport> {
+    assert!(!pool.is_empty());
+    let mut rng = Xoshiro256pp::new(seed);
+    let schedule = arrivals(&mut rng, Arrival::Poisson { rate }, n);
+    let (tx, rx) = mpsc::channel::<(usize, Instant)>();
+    let rx = Arc::new(Mutex::new(rx));
+    let start = Instant::now();
+    let scheduler = std::thread::spawn(move || {
+        for (i, at) in schedule.into_iter().enumerate() {
+            if let Some(wait) = at.0.checked_sub(start.elapsed()) {
+                std::thread::sleep(wait);
+            }
+            if tx.send((i, Instant::now())).is_err() {
+                break;
+            }
+        }
+    });
+    let workers: Vec<_> = (0..connections.max(1))
+        .map(|_| {
+            let rx = Arc::clone(&rx);
+            let addr = addr.to_string();
+            let pool = pool.to_vec();
+            std::thread::spawn(move || -> Result<LoadReport> {
+                let mut client =
+                    HttpClient::connect_retry(&addr, 20, Duration::from_millis(50))?;
+                let mut report = LoadReport::default();
+                loop {
+                    let job = rx.lock().unwrap().recv();
+                    let Ok((i, arrived)) = job else { break };
+                    let body = classify_body(&[&pool[i % pool.len()][..]]);
+                    report.sent += 1;
+                    match client.post_json("/v1/classify", &body) {
+                        Ok(resp) if resp.status == 200 => {
+                            report.ok += 1;
+                            report.latencies.push(arrived.elapsed().as_secs_f64());
+                        }
+                        Ok(resp) if resp.status == 429 => report.shed += 1,
+                        Ok(_) => report.errors += 1,
+                        Err(_) => {
+                            report.errors += 1;
+                            client = HttpClient::connect_retry(
+                                &addr,
+                                5,
+                                Duration::from_millis(50),
+                            )?;
+                        }
+                    }
+                }
+                Ok(report)
+            })
+        })
+        .collect();
+    scheduler.join().expect("scheduler panicked");
+    let mut merged = LoadReport::default();
+    for w in workers {
+        merged.absorb(w.join().expect("loadgen worker panicked")?);
+    }
+    merged.finish(start.elapsed());
+    Ok(merged)
+}

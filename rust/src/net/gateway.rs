@@ -1,0 +1,1238 @@
+//! The HTTP serving gateway: a `TcpListener` accept loop feeding a
+//! bounded connection-worker pool, routing requests onto the
+//! replicated serving tier — the subsystem that turns the in-process
+//! coordinator into a network service. std-only by construction (no
+//! tokio/hyper/serde in the vendored crate set, see DESIGN.md
+//! §Environment).
+//!
+//! Architecture (one process):
+//!
+//! ```text
+//! clients ──TCP──▶ accept loop ──bounded queue──▶ N conn workers
+//!                                                   │  (HTTP/1.1,
+//!                                                   │   keep-alive)
+//!                    ┌──────────────────────────────┘
+//!                    ▼ submit (admission-bounded)
+//!   classify leader: Server::serve_replicated  ─┐ replies
+//!   generate leader: Server::serve_generate    ─┤ chunks   ──▶ routers
+//!                    (long-lived, channel-fed)  ┘      (id → waiting
+//!                                                       conn worker)
+//! ```
+//!
+//! * `POST /v1/classify` — batched classification through
+//!   `serve_replicated`'s admission + continuous-batching path.
+//! * `POST /v1/generate` — `Transfer-Encoding: chunked` streaming of
+//!   [`GenChunk`] tokens as they leave the decode batcher.
+//! * `GET /metrics` — Prometheus text: the live tier snapshot rendered
+//!   through the same [`MetricRow`]s the CLI `Display` impls print
+//!   (one source of truth), plus gateway-level counters and per-shard
+//!   plan-cache stats.
+//! * `GET /healthz` — readiness (flips to `503 draining` on shutdown).
+//! * `POST /admin/shutdown` — begin a graceful drain remotely.
+//!
+//! **Backpressure is wired to the real bound**: the classify admission
+//! counter tracks submitted-but-unreplied requests against the same
+//! `BatchPolicy::max_queue` the leader stops pulling at, so instead of
+//! queueing unboundedly the gateway answers `429` with `Retry-After`
+//! the moment the tier is saturated. Generate sessions are bounded by
+//! `max_sessions` the same way.
+//!
+//! **Graceful shutdown** ([`ShutdownHandle`]): flag flip → `/healthz`
+//! reports draining and new work gets 503 → the work channels close →
+//! in-flight batches and generate streams run to completion → the
+//! listener wakes (self-connect) and closes. The leaders' final
+//! [`ServeOutcome`]/[`GenerateOutcome`] come back from
+//! [`Gateway::join`].
+
+use std::collections::HashMap;
+use std::fmt;
+use std::io::{self, ErrorKind, Read};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{
+    BatchPolicy, GenChunk, GenRequest, GenerateOutcome, MetricRow, Mode, Reply, ServeOutcome,
+    Server,
+};
+use crate::coordinator::Request as ClassifyRequest;
+use crate::decode::{DecodeConfig, Sampling};
+use crate::net::http::{self, ChunkedWriter, Request, RequestParser};
+use crate::net::json::{self, Json};
+use crate::util::stats::LatencyWindow;
+
+/// Gateway lifecycle states.
+const RUNNING: u8 = 0;
+const DRAINING: u8 = 1;
+const STOPPED: u8 = 2;
+
+/// Largest classify batch one HTTP request may carry.
+pub const MAX_BATCH_PER_REQUEST: usize = 64;
+
+/// Largest `max_new` one generate request may ask for.
+pub const MAX_NEW_CAP: usize = 1024;
+
+/// Gateway deployment knobs.
+#[derive(Clone, Debug)]
+pub struct GatewayConfig {
+    /// Bind address (`127.0.0.1:0` picks an ephemeral port).
+    pub addr: String,
+    /// Connection-worker pool size; accepted connections beyond it
+    /// queue in a bounded handoff (then the TCP backlog).
+    pub max_conns: usize,
+    /// Replicas per tier (classify and generate each own a pool).
+    pub replicas: usize,
+    /// Classify execution mode of the backing server.
+    pub mode: Mode,
+    /// Leader batching policy; `max_queue` doubles as the 429 bound.
+    pub policy: BatchPolicy,
+    /// Decode configuration for `/v1/generate` sessions.
+    pub decode: DecodeConfig,
+    /// Decode steps per dispatched slice (continuous batching grain).
+    pub steps_per_slice: usize,
+    /// Live generate sessions admitted before 429.
+    pub max_sessions: usize,
+    /// Request-body cap (413 beyond it).
+    pub max_body: usize,
+    /// How long a connection worker waits on the tier before 500.
+    pub request_timeout: Duration,
+    /// Idle keep-alive connections are closed after this.
+    pub keep_alive_idle: Duration,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:0".to_string(),
+            max_conns: 8,
+            replicas: 1,
+            mode: Mode::Dense,
+            policy: BatchPolicy::default(),
+            decode: DecodeConfig::default(),
+            steps_per_slice: 4,
+            max_sessions: 16,
+            max_body: http::DEFAULT_MAX_BODY,
+            request_timeout: Duration::from_secs(30),
+            keep_alive_idle: Duration::from_secs(10),
+        }
+    }
+}
+
+/// Gateway-level counters (the tier-level numbers come from
+/// [`Server::live_snapshot`]).
+#[derive(Default)]
+struct GatewayStats {
+    connections_total: AtomicUsize,
+    http_requests_total: AtomicUsize,
+    responses_2xx: AtomicUsize,
+    responses_4xx: AtomicUsize,
+    responses_5xx: AtomicUsize,
+    /// 429s from the admission bounds (subset of responses_4xx).
+    shed_total: AtomicUsize,
+    /// Requests the HTTP layer rejected before routing (parse/framing).
+    bad_requests_total: AtomicUsize,
+    streams_total: AtomicUsize,
+    stream_tokens_total: AtomicUsize,
+}
+
+impl GatewayStats {
+    fn record_status(&self, code: u16) {
+        match code {
+            200..=299 => &self.responses_2xx,
+            400..=499 => &self.responses_4xx,
+            _ => &self.responses_5xx,
+        }
+        .fetch_add(1, Ordering::Relaxed);
+        if code == 429 {
+            self.shed_total.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Work submission half of one tier: the leader's request sender, the
+/// id → waiting-handler routing table, and the admission counter the
+/// 429 bound checks.
+struct Submitter<Req, Resp> {
+    tx: Mutex<Option<mpsc::Sender<Req>>>,
+    pending: Mutex<HashMap<u64, mpsc::Sender<Resp>>>,
+    next_id: AtomicU64,
+    in_flight: AtomicUsize,
+}
+
+impl<Req, Resp> Submitter<Req, Resp> {
+    fn new(tx: mpsc::Sender<Req>) -> Self {
+        Self {
+            tx: Mutex::new(Some(tx)),
+            pending: Mutex::new(HashMap::new()),
+            next_id: AtomicU64::new(0),
+            in_flight: AtomicUsize::new(0),
+        }
+    }
+
+    /// Reserve `n` admission slots against `bound`; false = shed (429).
+    fn try_admit(&self, n: usize, bound: usize) -> bool {
+        self.in_flight
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |cur| {
+                if cur + n > bound {
+                    None
+                } else {
+                    Some(cur + n)
+                }
+            })
+            .is_ok()
+    }
+
+    fn release(&self, n: usize) {
+        self.in_flight.fetch_sub(n, Ordering::SeqCst);
+    }
+
+    fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::SeqCst)
+    }
+
+    /// Allocate `n` ids, all routed to one fresh reply channel.
+    fn register(&self, n: usize) -> (Vec<u64>, mpsc::Receiver<Resp>) {
+        let (tx, rx) = mpsc::channel();
+        let mut pending = self.pending.lock().unwrap();
+        let ids = (0..n)
+            .map(|_| {
+                let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+                pending.insert(id, tx.clone());
+                id
+            })
+            .collect();
+        (ids, rx)
+    }
+
+    fn unregister(&self, ids: &[u64]) {
+        let mut pending = self.pending.lock().unwrap();
+        for id in ids {
+            pending.remove(id);
+        }
+    }
+
+    /// Send every request while holding the sender lock (so a racing
+    /// drain can't close the channel mid-batch). False = tier gone or
+    /// draining; nothing was delivered for the ids whose send failed.
+    fn send_all(&self, reqs: Vec<Req>) -> bool {
+        let guard = self.tx.lock().unwrap();
+        match guard.as_ref() {
+            Some(tx) => reqs.into_iter().all(|r| tx.send(r).is_ok()),
+            None => false,
+        }
+    }
+
+    /// Router side: forward one response to its waiting handler.
+    fn route(&self, id: u64, resp: Resp, done: bool) {
+        let mut pending = self.pending.lock().unwrap();
+        if done {
+            if let Some(tx) = pending.remove(&id) {
+                let _ = tx.send(resp);
+            }
+        } else if let Some(tx) = pending.get(&id) {
+            let _ = tx.send(resp);
+        }
+    }
+
+    /// Drop the leader's sender: no further submissions; the leader
+    /// drains what it already buffered and returns its outcome.
+    fn close(&self) {
+        self.tx.lock().unwrap().take();
+    }
+}
+
+/// State shared by every gateway thread.
+struct Inner {
+    server: Arc<Server>,
+    cfg: GatewayConfig,
+    local_addr: SocketAddr,
+    state: AtomicU8,
+    stats: GatewayStats,
+    classify: Submitter<ClassifyRequest, Reply>,
+    generate: Submitter<GenRequest, GenChunk>,
+    /// HTTP requests currently being handled (the drain barrier).
+    active_requests: AtomicUsize,
+    /// HTTP-level classify latencies for the /metrics gauge.
+    classify_latencies: Mutex<LatencyWindow>,
+    started: Instant,
+}
+
+impl Inner {
+    fn state(&self) -> u8 {
+        self.state.load(Ordering::SeqCst)
+    }
+
+    /// Flip to draining and close the work channels. Idempotent.
+    fn begin_drain(&self) {
+        if self
+            .state
+            .compare_exchange(RUNNING, DRAINING, Ordering::SeqCst, Ordering::SeqCst)
+            .is_ok()
+        {
+            self.classify.close();
+            self.generate.close();
+        }
+    }
+
+    fn record_classify_latency(&self, seconds: f64) {
+        self.classify_latencies.lock().unwrap().push(seconds);
+    }
+}
+
+/// Handle for triggering a graceful drain from another thread (or from
+/// the `/admin/shutdown` route).
+#[derive(Clone)]
+pub struct ShutdownHandle {
+    inner: Arc<Inner>,
+}
+
+impl ShutdownHandle {
+    /// Begin draining: `/healthz` flips to 503, new work is refused,
+    /// in-flight work (including open generate streams) completes,
+    /// then the listener closes. Returns immediately; use
+    /// [`Gateway::join`] to wait for the drain to finish.
+    pub fn shutdown(&self) {
+        self.inner.begin_drain();
+    }
+}
+
+/// Final accounting returned by [`Gateway::join`]: the leaders' joined
+/// outcomes plus gateway-level totals.
+#[derive(Debug)]
+pub struct GatewayReport {
+    pub classify: ServeOutcome,
+    pub generate: GenerateOutcome,
+    pub connections: usize,
+    pub http_requests: usize,
+    pub shed: usize,
+}
+
+impl fmt::Display for GatewayReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "gateway_connections_total                    {}", self.connections)?;
+        writeln!(f, "gateway_http_requests_total                  {}", self.http_requests)?;
+        writeln!(f, "gateway_shed_total                           {}", self.shed)?;
+        write!(f, "{}{}", self.classify, self.generate)
+    }
+}
+
+/// The running gateway: owns the accept loop, the connection workers,
+/// the two leader threads, and their routers.
+pub struct Gateway {
+    inner: Arc<Inner>,
+    accept: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    routers: Vec<JoinHandle<()>>,
+    drainer: Option<JoinHandle<()>>,
+    classify_leader: Option<JoinHandle<Result<ServeOutcome>>>,
+    generate_leader: Option<JoinHandle<Result<GenerateOutcome>>>,
+}
+
+impl Gateway {
+    /// Bind, spawn the serving tier, and start accepting.
+    pub fn start(server: Arc<Server>, cfg: GatewayConfig) -> Result<Gateway> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding gateway to {}", cfg.addr))?;
+        let local_addr = listener.local_addr()?;
+
+        let (creq_tx, creq_rx) = mpsc::channel::<ClassifyRequest>();
+        let (crep_tx, crep_rx) = mpsc::channel::<Reply>();
+        let (greq_tx, greq_rx) = mpsc::channel::<GenRequest>();
+        let (gchk_tx, gchk_rx) = mpsc::channel::<GenChunk>();
+
+        let inner = Arc::new(Inner {
+            server: Arc::clone(&server),
+            local_addr,
+            state: AtomicU8::new(RUNNING),
+            stats: GatewayStats::default(),
+            classify: Submitter::new(creq_tx),
+            generate: Submitter::new(greq_tx),
+            active_requests: AtomicUsize::new(0),
+            classify_latencies: Mutex::new(LatencyWindow::default()),
+            started: Instant::now(),
+            cfg,
+        });
+        let cfg = &inner.cfg;
+
+        // --- leaders: long-lived serve loops fed by the channels -----
+        let classify_leader = {
+            let srv = Arc::clone(&server);
+            let (policy, replicas) = (cfg.policy, cfg.replicas);
+            std::thread::Builder::new()
+                .name("esact-http-classify".to_string())
+                .spawn(move || srv.serve_replicated(creq_rx, crep_tx, policy, replicas))?
+        };
+        let generate_leader = {
+            let srv = Arc::clone(&server);
+            let (decode, replicas, steps) = (cfg.decode, cfg.replicas, cfg.steps_per_slice);
+            std::thread::Builder::new()
+                .name("esact-http-generate".to_string())
+                .spawn(move || srv.serve_generate(greq_rx, gchk_tx, decode, replicas, steps))?
+        };
+
+        // --- routers: tier responses → the waiting conn workers ------
+        let classify_router = {
+            let inner = Arc::clone(&inner);
+            std::thread::Builder::new().name("esact-http-crouter".to_string()).spawn(
+                move || {
+                    for reply in crep_rx.iter() {
+                        inner.classify.release(1);
+                        let id = reply.id;
+                        inner.classify.route(id, reply, true);
+                    }
+                },
+            )?
+        };
+        let generate_router = {
+            let inner = Arc::clone(&inner);
+            std::thread::Builder::new().name("esact-http-grouter".to_string()).spawn(
+                move || {
+                    for chunk in gchk_rx.iter() {
+                        let done = chunk.done;
+                        if done {
+                            inner.generate.release(1);
+                        }
+                        let id = chunk.id;
+                        inner.generate.route(id, chunk, done);
+                    }
+                },
+            )?
+        };
+
+        // --- bounded connection pool ---------------------------------
+        let pool = inner.cfg.max_conns.max(1);
+        let (conn_tx, conn_rx) = mpsc::sync_channel::<TcpStream>(pool);
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        let workers = (0..pool)
+            .map(|i| {
+                let inner = Arc::clone(&inner);
+                let conn_rx = Arc::clone(&conn_rx);
+                std::thread::Builder::new()
+                    .name(format!("esact-http-conn-{i}"))
+                    .spawn(move || loop {
+                        let stream = conn_rx.lock().unwrap().recv();
+                        match stream {
+                            Ok(s) => handle_conn(&inner, s),
+                            Err(_) => break, // accept loop gone
+                        }
+                    })
+                    .expect("spawn conn worker")
+            })
+            .collect();
+
+        // --- accept loop ---------------------------------------------
+        let accept = {
+            let inner = Arc::clone(&inner);
+            std::thread::Builder::new().name("esact-http-accept".to_string()).spawn(
+                move || {
+                    for stream in listener.incoming() {
+                        if inner.state() == STOPPED {
+                            break; // the drainer's poke lands here
+                        }
+                        let Ok(stream) = stream else { continue };
+                        inner.stats.connections_total.fetch_add(1, Ordering::Relaxed);
+                        // bounded handoff: all workers busy and the
+                        // queue full → this blocks, pushing backpressure
+                        // into the TCP backlog
+                        if conn_tx.send(stream).is_err() {
+                            break;
+                        }
+                    }
+                    // listener (and conn_tx) drop here: workers drain
+                    // the queued streams, then exit
+                },
+            )?
+        };
+
+        // --- drainer: DRAINING → (in-flight == 0) → STOPPED ----------
+        let drainer = {
+            let inner = Arc::clone(&inner);
+            std::thread::Builder::new().name("esact-http-drain".to_string()).spawn(
+                move || loop {
+                    std::thread::sleep(Duration::from_millis(20));
+                    match inner.state() {
+                        DRAINING => {
+                            let idle = inner.classify.in_flight() == 0
+                                && inner.generate.in_flight() == 0
+                                && inner.active_requests.load(Ordering::SeqCst) == 0;
+                            if idle {
+                                inner.state.store(STOPPED, Ordering::SeqCst);
+                                poke_listener(inner.local_addr);
+                                break;
+                            }
+                        }
+                        RUNNING => {}
+                        _ => break,
+                    }
+                },
+            )?
+        };
+
+        Ok(Gateway {
+            inner,
+            accept: Some(accept),
+            workers,
+            routers: vec![classify_router, generate_router],
+            drainer: Some(drainer),
+            classify_leader: Some(classify_leader),
+            generate_leader: Some(generate_leader),
+        })
+    }
+
+    /// The bound address (resolves `:0` bindings).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.inner.local_addr
+    }
+
+    pub fn shutdown_handle(&self) -> ShutdownHandle {
+        ShutdownHandle { inner: Arc::clone(&self.inner) }
+    }
+
+    /// Wait for the gateway to drain (a [`ShutdownHandle::shutdown`]
+    /// or `/admin/shutdown` must flip it) and join every thread,
+    /// returning the leaders' final outcomes.
+    pub fn join(mut self) -> Result<GatewayReport> {
+        let classify_res = self
+            .classify_leader
+            .take()
+            .expect("join once")
+            .join()
+            .expect("classify leader panicked");
+        let generate_res = self
+            .generate_leader
+            .take()
+            .expect("join once")
+            .join()
+            .expect("generate leader panicked");
+        // Both leaders have exited: every reply they will ever emit is
+        // in the router channels. On the error path (a leader died with
+        // work in flight) the in-flight counters never reach zero, so
+        // force the stop here instead of relying on the drainer.
+        self.inner.state.store(STOPPED, Ordering::SeqCst);
+        poke_listener(self.inner.local_addr);
+        for r in self.routers.drain(..) {
+            r.join().expect("router panicked");
+        }
+        if let Some(d) = self.drainer.take() {
+            d.join().expect("drainer panicked");
+        }
+        if let Some(a) = self.accept.take() {
+            a.join().expect("accept loop panicked");
+        }
+        for w in self.workers.drain(..) {
+            w.join().expect("conn worker panicked");
+        }
+        let stats = &self.inner.stats;
+        Ok(GatewayReport {
+            classify: classify_res?,
+            generate: generate_res?,
+            connections: stats.connections_total.load(Ordering::Relaxed),
+            http_requests: stats.http_requests_total.load(Ordering::Relaxed),
+            shed: stats.shed_total.load(Ordering::Relaxed),
+        })
+    }
+
+    /// Convenience: begin a drain and wait it out.
+    pub fn shutdown(self) -> Result<GatewayReport> {
+        self.inner.begin_drain();
+        self.join()
+    }
+}
+
+/// Wake a (possibly) blocked accept loop by connecting to it, retrying
+/// until the listener is really gone — a single poke can be absorbed
+/// without an accept iteration when the bounded worker handoff is full.
+fn poke_listener(addr: SocketAddr) {
+    for _ in 0..100 {
+        if TcpStream::connect(addr).is_err() {
+            return; // listener closed: accept loop has exited
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+// ---------------------------------------------------------------------
+// connection handling
+// ---------------------------------------------------------------------
+
+/// Guard that tracks one in-flight HTTP request for the drain barrier.
+struct ActiveGuard<'a>(&'a AtomicUsize);
+
+impl<'a> ActiveGuard<'a> {
+    fn new(counter: &'a AtomicUsize) -> Self {
+        counter.fetch_add(1, Ordering::SeqCst);
+        Self(counter)
+    }
+}
+
+impl Drop for ActiveGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+fn handle_conn(inner: &Arc<Inner>, mut stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    // short read timeout: the loop uses it as a tick to notice
+    // drain/stop and idle expiry without a dedicated timer thread
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+    let mut parser = RequestParser::new(inner.cfg.max_body);
+    let mut buf = [0u8; 8192];
+    let mut idle_since = Instant::now();
+    loop {
+        // serve every fully-buffered request first (pipelining)
+        match parser.take() {
+            Ok(Some(req)) => {
+                idle_since = Instant::now();
+                match handle_request(inner, &mut stream, req) {
+                    Ok(true) => continue,
+                    _ => return, // close requested or socket error
+                }
+            }
+            Ok(None) => {}
+            Err(e) => {
+                // framing is broken: answer and close
+                inner.stats.bad_requests_total.fetch_add(1, Ordering::Relaxed);
+                let _ = respond_json(inner, &mut stream, e.status(), &error_body(&e.to_string()));
+                return;
+            }
+        }
+        match stream.read(&mut buf) {
+            Ok(0) => return, // peer closed
+            Ok(n) => parser.push(&buf[..n]),
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                let state = inner.state.load(Ordering::SeqCst);
+                if state == STOPPED {
+                    return;
+                }
+                // during a drain, idle keep-alive connections close so
+                // the worker pool can wind down; a half-received
+                // request still gets its read
+                if state == DRAINING && parser.buffered() == 0 {
+                    return;
+                }
+                if idle_since.elapsed() > inner.cfg.keep_alive_idle {
+                    return;
+                }
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+/// Dispatch one parsed request. Returns `Ok(true)` to keep the
+/// connection open.
+fn handle_request(inner: &Arc<Inner>, stream: &mut TcpStream, req: Request) -> io::Result<bool> {
+    inner.stats.http_requests_total.fetch_add(1, Ordering::Relaxed);
+    let _active = ActiveGuard::new(&inner.active_requests);
+    let keep = req.keep_alive();
+    const ROUTES: [&str; 5] =
+        ["/healthz", "/metrics", "/v1/classify", "/v1/generate", "/admin/shutdown"];
+    match (req.method.as_str(), req.path()) {
+        ("GET", "/healthz") => handle_healthz(inner, stream)?,
+        ("GET", "/metrics") => handle_metrics(inner, stream)?,
+        ("POST", "/v1/classify") => handle_classify(inner, stream, &req)?,
+        ("POST", "/v1/generate") => {
+            let streamed_ok = handle_generate(inner, stream, &req)?;
+            return Ok(keep && streamed_ok);
+        }
+        ("POST", "/admin/shutdown") => {
+            inner.begin_drain();
+            respond_json(inner, stream, 200, "{\"status\":\"draining\"}")?;
+        }
+        (_, path) if ROUTES.contains(&path) => {
+            respond_json(inner, stream, 405, &error_body("method not allowed"))?;
+        }
+        _ => respond_json(inner, stream, 404, &error_body("no such route"))?,
+    }
+    Ok(keep)
+}
+
+fn handle_healthz(inner: &Arc<Inner>, stream: &mut TcpStream) -> io::Result<()> {
+    let draining = inner.state() != RUNNING;
+    let body = format!(
+        "{{\"status\":\"{}\",\"seq_len\":{},\"vocab\":{},\"n_classes\":{},\"replicas\":{}}}",
+        if draining { "draining" } else { "ok" },
+        inner.server.seq_len(),
+        inner.server.vocab(),
+        inner.server.n_classes(),
+        inner.cfg.replicas
+    );
+    respond_json(inner, stream, if draining { 503 } else { 200 }, &body)
+}
+
+fn handle_metrics(inner: &Arc<Inner>, stream: &mut TcpStream) -> io::Result<()> {
+    let body = metrics_body(inner);
+    let code = 200;
+    inner.stats.record_status(code);
+    http::write_response(
+        stream,
+        code,
+        &[("Content-Type", "text/plain; version=0.0.4")],
+        body.as_bytes(),
+    )
+}
+
+/// Render the Prometheus exposition: tier rows straight from
+/// [`Server::live_snapshot`] (the same [`MetricRow`]s the CLI prints),
+/// then gateway-level counters, then per-shard plan-cache stats.
+fn metrics_body(inner: &Arc<Inner>) -> String {
+    let mut out = String::new();
+    for row in inner.server.live_snapshot().rows() {
+        out.push_str("esact_");
+        out.push_str(&row.to_string());
+        out.push('\n');
+    }
+    let s = &inner.stats;
+    let http_lat = inner.classify_latencies.lock().unwrap().percentiles();
+    let gw_rows = [
+        MetricRow::of("gateway_state", inner.state() as f64),
+        MetricRow::of("gateway_uptime_seconds", inner.started.elapsed().as_secs_f64()),
+        MetricRow::of(
+            "gateway_connections_total",
+            s.connections_total.load(Ordering::Relaxed) as f64,
+        ),
+        MetricRow::of(
+            "gateway_http_requests_total",
+            s.http_requests_total.load(Ordering::Relaxed) as f64,
+        ),
+        MetricRow::of(
+            "gateway_responses_2xx_total",
+            s.responses_2xx.load(Ordering::Relaxed) as f64,
+        ),
+        MetricRow::of(
+            "gateway_responses_4xx_total",
+            s.responses_4xx.load(Ordering::Relaxed) as f64,
+        ),
+        MetricRow::of(
+            "gateway_responses_5xx_total",
+            s.responses_5xx.load(Ordering::Relaxed) as f64,
+        ),
+        MetricRow::of("gateway_shed_total", s.shed_total.load(Ordering::Relaxed) as f64),
+        MetricRow::of(
+            "gateway_bad_requests_total",
+            s.bad_requests_total.load(Ordering::Relaxed) as f64,
+        ),
+        MetricRow::of("gateway_streams_total", s.streams_total.load(Ordering::Relaxed) as f64),
+        MetricRow::of(
+            "gateway_stream_tokens_total",
+            s.stream_tokens_total.load(Ordering::Relaxed) as f64,
+        ),
+        MetricRow::of("gateway_classify_in_flight", inner.classify.in_flight() as f64),
+        MetricRow::of("gateway_generate_in_flight", inner.generate.in_flight() as f64),
+        MetricRow::of(
+            "gateway_active_requests",
+            inner.active_requests.load(Ordering::SeqCst) as f64,
+        ),
+        MetricRow::of("gateway_classify_http_p50_seconds", http_lat.0),
+        MetricRow::of("gateway_classify_http_p99_seconds", http_lat.1),
+    ];
+    for row in gw_rows {
+        out.push_str("esact_");
+        out.push_str(&row.to_string());
+        out.push('\n');
+    }
+    for (i, shard) in inner.server.plan_cache_shard_stats().iter().enumerate() {
+        let rows = [
+            MetricRow::labeled("plan_cache_shard_entries", "shard", i, shard.entries as f64),
+            MetricRow::labeled("plan_cache_shard_hits_total", "shard", i, shard.hits as f64),
+            MetricRow::labeled("plan_cache_shard_misses_total", "shard", i, shard.misses as f64),
+            MetricRow::labeled(
+                "plan_cache_shard_step_entries",
+                "shard",
+                i,
+                shard.step_entries as f64,
+            ),
+        ];
+        for row in rows {
+            out.push_str("esact_");
+            out.push_str(&row.to_string());
+            out.push('\n');
+        }
+    }
+    out
+}
+
+fn handle_classify(inner: &Arc<Inner>, stream: &mut TcpStream, req: &Request) -> io::Result<()> {
+    let t0 = Instant::now();
+    let batch = match parse_classify_body(inner, &req.body) {
+        Ok(batch) => batch,
+        Err(msg) => return respond_json(inner, stream, 400, &error_body(&msg)),
+    };
+    if inner.state() != RUNNING {
+        return respond_json(inner, stream, 503, &error_body("gateway is draining"));
+    }
+    let k = batch.len();
+    // a batch that can never fit the admission bound is a terminal
+    // client error, not a retryable 429 (retrying it would loop forever)
+    if k > inner.cfg.policy.max_queue {
+        let msg =
+            format!("batch of {k} exceeds the admission bound {}", inner.cfg.policy.max_queue);
+        return respond_json(inner, stream, 400, &error_body(&msg));
+    }
+    // the real bound: the same max_queue the leader stops pulling at —
+    // beyond it the tier is saturated and queueing would be unbounded
+    if !inner.classify.try_admit(k, inner.cfg.policy.max_queue) {
+        return respond_with(
+            inner,
+            stream,
+            429,
+            &[("Retry-After", "1"), ("Content-Type", "application/json")],
+            error_body("serving queue is full").as_bytes(),
+        );
+    }
+    let (ids, rx) = inner.classify.register(k);
+    let arrived = Instant::now();
+    let requests: Vec<ClassifyRequest> = ids
+        .iter()
+        .zip(batch)
+        .map(|(&id, tokens)| ClassifyRequest { id, tokens, arrived })
+        .collect();
+    if !inner.classify.send_all(requests) {
+        inner.classify.unregister(&ids);
+        inner.classify.release(k);
+        return respond_json(inner, stream, 503, &error_body("serving tier unavailable"));
+    }
+    let mut by_id: HashMap<u64, Reply> = HashMap::with_capacity(k);
+    let deadline = Instant::now() + inner.cfg.request_timeout;
+    while by_id.len() < k {
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        if remaining.is_zero() {
+            break;
+        }
+        match rx.recv_timeout(remaining) {
+            Ok(reply) => {
+                by_id.insert(reply.id, reply);
+            }
+            Err(_) => break,
+        }
+    }
+    if by_id.len() < k {
+        inner.classify.unregister(&ids);
+        return respond_json(inner, stream, 500, &error_body("timed out on the serving tier"));
+    }
+    let mut body = String::from("{\"logits\":[");
+    for (i, id) in ids.iter().enumerate() {
+        if i > 0 {
+            body.push(',');
+        }
+        body.push_str(&json::f32_array(&by_id[id].logits));
+    }
+    body.push_str("],\"latency_ms\":[");
+    for (i, id) in ids.iter().enumerate() {
+        if i > 0 {
+            body.push(',');
+        }
+        body.push_str(&format!("{:.3}", by_id[id].latency.as_secs_f64() * 1e3));
+    }
+    body.push_str("]}");
+    inner.record_classify_latency(t0.elapsed().as_secs_f64());
+    respond_json(inner, stream, 200, &body)
+}
+
+/// Validate and extract the classify batch: `{"tokens": [[...], ...]}`
+/// (a single flat `[...]` is accepted as a batch of one).
+fn parse_classify_body(inner: &Arc<Inner>, body: &[u8]) -> Result<Vec<Vec<i32>>, String> {
+    let text =
+        std::str::from_utf8(body).map_err(|_| "body is not valid UTF-8".to_string())?;
+    let doc = Json::parse(text).map_err(|e| format!("bad JSON: {e}"))?;
+    let tokens = doc.get("tokens").ok_or("missing \"tokens\" field")?;
+    let arr = tokens.as_arr().ok_or("\"tokens\" must be an array")?;
+    let nested = arr.first().is_some_and(|x| x.as_arr().is_some());
+    let seqs: Vec<&Json> = if nested { arr.iter().collect() } else { vec![tokens] };
+    if seqs.is_empty() {
+        return Err("empty batch".to_string());
+    }
+    if seqs.len() > MAX_BATCH_PER_REQUEST {
+        return Err(format!("batch larger than {MAX_BATCH_PER_REQUEST}"));
+    }
+    let (l, vocab) = (inner.server.seq_len(), inner.server.vocab() as i32);
+    seqs.iter()
+        .map(|s| {
+            let toks = json::to_i32_vec(s).ok_or("tokens must be an array of integers")?;
+            if toks.len() != l {
+                return Err(format!("sequence length {} != compiled L {l}", toks.len()));
+            }
+            if let Some(bad) = toks.iter().find(|&&t| t < 0 || t >= vocab) {
+                return Err(format!("token id {bad} outside vocab 0..{vocab}"));
+            }
+            Ok(toks)
+        })
+        .collect()
+}
+
+/// Stream one generation. Returns `Ok(false)` when the connection
+/// must close (stream aborted mid-way — framing no longer clean).
+fn handle_generate(
+    inner: &Arc<Inner>,
+    stream: &mut TcpStream,
+    req: &Request,
+) -> io::Result<bool> {
+    let (prompt, max_new, sampling) = match parse_generate_body(inner, &req.body) {
+        Ok(parsed) => parsed,
+        Err(msg) => {
+            respond_json(inner, stream, 400, &error_body(&msg))?;
+            return Ok(true);
+        }
+    };
+    if inner.state() != RUNNING {
+        respond_json(inner, stream, 503, &error_body("gateway is draining"))?;
+        return Ok(true);
+    }
+    if !inner.generate.try_admit(1, inner.cfg.max_sessions) {
+        respond_with(
+            inner,
+            stream,
+            429,
+            &[("Retry-After", "1"), ("Content-Type", "application/json")],
+            error_body("all generate sessions are busy").as_bytes(),
+        )?;
+        return Ok(true);
+    }
+    let (ids, rx) = inner.generate.register(1);
+    let id = ids[0];
+    let request = GenRequest { id, prompt, max_new, sampling, arrived: Instant::now() };
+    if !inner.generate.send_all(vec![request]) {
+        inner.generate.unregister(&ids);
+        inner.generate.release(1);
+        respond_json(inner, stream, 503, &error_body("serving tier unavailable"))?;
+        return Ok(true);
+    }
+    inner.stats.streams_total.fetch_add(1, Ordering::Relaxed);
+    inner.stats.record_status(200);
+    let mut w =
+        ChunkedWriter::begin(stream, 200, &[("Content-Type", "application/x-ndjson")])?;
+    loop {
+        match rx.recv_timeout(inner.cfg.request_timeout) {
+            Ok(chunk) => {
+                inner
+                    .stats
+                    .stream_tokens_total
+                    .fetch_add(chunk.tokens.len(), Ordering::Relaxed);
+                // prefill slices may be empty; only data or the final
+                // marker go on the wire
+                if !chunk.tokens.is_empty() || chunk.done {
+                    let line = format!(
+                        "{{\"tokens\":{},\"done\":{}}}\n",
+                        json::i32_array(&chunk.tokens),
+                        chunk.done
+                    );
+                    w.chunk(line.as_bytes())?;
+                }
+                if chunk.done {
+                    w.finish()?;
+                    return Ok(true);
+                }
+            }
+            Err(_) => {
+                // tier died or stalled past the timeout: emit a final
+                // error line, close the connection (framing preserved
+                // by the chunked terminator)
+                inner.generate.unregister(&ids);
+                let _ = w.chunk(b"{\"error\":\"decode tier stalled\",\"done\":true}\n");
+                let _ = w.finish();
+                return Ok(false);
+            }
+        }
+    }
+}
+
+type GenerateParams = (Vec<i32>, usize, Sampling);
+
+/// Validate `/v1/generate` bodies:
+/// `{"prompt": [...], "max_new": n, "top_k": k?, "temperature": t?, "seed": s?}`.
+fn parse_generate_body(inner: &Arc<Inner>, body: &[u8]) -> Result<GenerateParams, String> {
+    let text =
+        std::str::from_utf8(body).map_err(|_| "body is not valid UTF-8".to_string())?;
+    let doc = Json::parse(text).map_err(|e| format!("bad JSON: {e}"))?;
+    let prompt = json::to_i32_vec(doc.get("prompt").ok_or("missing \"prompt\" field")?)
+        .ok_or("\"prompt\" must be an array of integers")?;
+    if prompt.is_empty() {
+        return Err("empty prompt".to_string());
+    }
+    if prompt.len() > MAX_NEW_CAP {
+        return Err(format!("prompt longer than {MAX_NEW_CAP}"));
+    }
+    let vocab = inner.server.vocab() as i32;
+    if let Some(bad) = prompt.iter().find(|&&t| t < 0 || t >= vocab) {
+        return Err(format!("token id {bad} outside vocab 0..{vocab}"));
+    }
+    let max_new = match doc.get("max_new") {
+        None => 16,
+        Some(v) => v.as_usize().ok_or("\"max_new\" must be a non-negative integer")?,
+    };
+    if max_new > MAX_NEW_CAP {
+        return Err(format!("max_new larger than {MAX_NEW_CAP}"));
+    }
+    let sampling = match doc.get("top_k") {
+        None => Sampling::Greedy,
+        Some(v) => {
+            let k = v.as_usize().filter(|&k| k >= 1).ok_or("\"top_k\" must be >= 1")?;
+            let temperature = match doc.get("temperature") {
+                None => 1.0,
+                Some(t) => t.as_f64().filter(|t| *t > 0.0).ok_or("bad \"temperature\"")? as f32,
+            };
+            let seed = match doc.get("seed") {
+                None => 0,
+                Some(s) => s.as_i64().filter(|s| *s >= 0).ok_or("bad \"seed\"")? as u64,
+            };
+            Sampling::TopK { k, temperature, seed }
+        }
+    };
+    Ok((prompt, max_new, sampling))
+}
+
+fn error_body(msg: &str) -> String {
+    Json::Obj(vec![("error".to_string(), Json::Str(msg.to_string()))]).encode()
+}
+
+fn respond_json(
+    inner: &Arc<Inner>,
+    stream: &mut TcpStream,
+    code: u16,
+    body: &str,
+) -> io::Result<()> {
+    respond_with(
+        inner,
+        stream,
+        code,
+        &[("Content-Type", "application/json")],
+        body.as_bytes(),
+    )
+}
+
+fn respond_with(
+    inner: &Arc<Inner>,
+    stream: &mut TcpStream,
+    code: u16,
+    headers: &[(&str, &str)],
+    body: &[u8],
+) -> io::Result<()> {
+    inner.stats.record_status(code);
+    http::write_response(stream, code, headers, body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SplsConfig;
+    use crate::net::client::{classify_body, HttpClient};
+    use crate::util::rng::Xoshiro256pp;
+    use std::io::Write;
+    use std::path::Path;
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn start_gateway(cfg: GatewayConfig) -> (Gateway, String) {
+        let srv =
+            Arc::new(Server::new(&artifacts_dir(), cfg.mode, SplsConfig::default()).unwrap());
+        let gw = Gateway::start(srv, cfg).unwrap();
+        let addr = gw.local_addr().to_string();
+        (gw, addr)
+    }
+
+    fn seqs(n: usize, l: usize) -> Vec<Vec<i32>> {
+        let mut rng = Xoshiro256pp::new(5);
+        (0..n).map(|_| crate::model::synth::gen_example(&mut rng, l).0).collect()
+    }
+
+    /// Read one full response off a raw socket (status line + head +
+    /// best-effort body) as text.
+    fn read_response_text(s: &mut TcpStream) -> String {
+        let _ = s.set_read_timeout(Some(Duration::from_secs(5)));
+        let mut buf = Vec::new();
+        let mut tmp = [0u8; 2048];
+        while !buf.windows(4).any(|w| w == b"\r\n\r\n") {
+            match s.read(&mut tmp) {
+                Ok(0) => break,
+                Ok(n) => buf.extend_from_slice(&tmp[..n]),
+                Err(_) => break,
+            }
+        }
+        String::from_utf8_lossy(&buf).to_string()
+    }
+
+    #[test]
+    fn healthz_metrics_and_unknown_routes_over_one_keepalive_conn() {
+        let (gw, addr) = start_gateway(GatewayConfig::default());
+        let mut c = HttpClient::connect(&addr).unwrap();
+        let h = c.get("/healthz").unwrap();
+        assert_eq!(h.status, 200);
+        let doc = h.json().unwrap();
+        assert_eq!(doc.get("status").unwrap().as_str(), Some("ok"));
+        assert_eq!(doc.get("seq_len").unwrap().as_usize(), Some(64));
+        assert_eq!(doc.get("vocab").unwrap().as_usize(), Some(64));
+        // the same connection serves further exchanges (keep-alive)
+        let m = c.get("/metrics").unwrap();
+        assert_eq!(m.status, 200);
+        let text = String::from_utf8(m.body).unwrap();
+        for needle in [
+            "esact_serve_requests_total",
+            "esact_generate_tokens_total",
+            "esact_plan_cache_hit_rate",
+            "esact_gateway_http_requests_total",
+            "esact_replica_busy_seconds",
+            "esact_plan_cache_shard_entries{shard=\"0\"}",
+        ] {
+            assert!(text.contains(needle), "metrics missing {needle}:\n{text}");
+        }
+        assert_eq!(c.get("/nope").unwrap().status, 404);
+        assert_eq!(c.post_json("/healthz", "{}").unwrap().status, 405);
+        gw.shutdown().unwrap();
+    }
+
+    #[test]
+    fn classify_validates_input_before_the_executor_can_panic() {
+        let (gw, addr) = start_gateway(GatewayConfig::default());
+        let mut c = HttpClient::connect(&addr).unwrap();
+        let pool = seqs(2, 64);
+        let body = classify_body(&[&pool[0][..], &pool[1][..]]);
+        let ok = c.post_json("/v1/classify", &body).unwrap();
+        assert_eq!(ok.status, 200);
+        let doc = ok.json().unwrap();
+        let logits = doc.get("logits").unwrap().as_arr().unwrap();
+        assert_eq!(logits.len(), 2);
+        assert!(logits.iter().all(|row| row.as_arr().unwrap().len() == 16));
+        let bad_bodies: Vec<String> = vec![
+            "{not json".to_string(),
+            "{\"tokens\": 3}".to_string(),
+            "{}".to_string(),
+            "{\"tokens\": []}".to_string(),
+            "{\"tokens\": [[1.5, 2]]}".to_string(),
+            classify_body(&[&vec![0i32; 10][..]]),    // wrong L
+            classify_body(&[&vec![9999i32; 64][..]]), // out of vocab
+        ];
+        for bad in &bad_bodies {
+            let r = c.post_json("/v1/classify", bad).unwrap();
+            assert_eq!(r.status, 400, "{bad:?}");
+        }
+        // the gateway is still healthy after all that abuse
+        assert_eq!(c.get("/healthz").unwrap().status, 200);
+        gw.shutdown().unwrap();
+    }
+
+    #[test]
+    fn raw_socket_abuse_gets_clean_http_errors() {
+        let (gw, addr) = start_gateway(GatewayConfig::default());
+        // invalid UTF-8 body → 400, connection stays usable
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(b"POST /v1/classify HTTP/1.1\r\nContent-Length: 2\r\n\r\n\xff\xfe")
+            .unwrap();
+        let text = read_response_text(&mut s);
+        assert!(text.starts_with("HTTP/1.1 400"), "{text}");
+        // garbage request line → 400 and close
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(b"GARBAGE\r\n\r\n").unwrap();
+        let text = read_response_text(&mut s);
+        assert!(text.starts_with("HTTP/1.1 400"), "{text}");
+        // oversized declared body → 413
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(b"POST /v1/classify HTTP/1.1\r\nContent-Length: 99999999\r\n\r\n")
+            .unwrap();
+        let text = read_response_text(&mut s);
+        assert!(text.starts_with("HTTP/1.1 413"), "{text}");
+        // two pipelined requests in one segment → two responses in order
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(b"GET /healthz HTTP/1.1\r\n\r\nGET /nope HTTP/1.1\r\n\r\n").unwrap();
+        std::thread::sleep(Duration::from_millis(300));
+        let mut buf = Vec::new();
+        let _ = s.set_read_timeout(Some(Duration::from_millis(500)));
+        let mut tmp = [0u8; 4096];
+        while let Ok(n) = s.read(&mut tmp) {
+            if n == 0 {
+                break;
+            }
+            buf.extend_from_slice(&tmp[..n]);
+        }
+        let text = String::from_utf8_lossy(&buf).to_string();
+        let first = text.find("HTTP/1.1 200").expect("healthz response");
+        let second = text.find("HTTP/1.1 404").expect("pipelined 404 response");
+        assert!(first < second, "pipelined responses must come back in order");
+        gw.shutdown().unwrap();
+    }
+
+    #[test]
+    fn saturation_sheds_with_429_retry_after_and_counts_it() {
+        use std::sync::atomic::AtomicUsize;
+        // admission bound 1: concurrent posts must overlap and shed
+        let cfg = GatewayConfig {
+            policy: BatchPolicy { max_queue: 1, ..Default::default() },
+            max_conns: 12,
+            ..Default::default()
+        };
+        let (gw, addr) = start_gateway(cfg);
+        let pool = Arc::new(seqs(4, 64));
+        let ok = Arc::new(AtomicUsize::new(0));
+        let shed = Arc::new(AtomicUsize::new(0));
+        let threads: Vec<_> = (0..8)
+            .map(|_| {
+                let (pool, ok, shed) = (Arc::clone(&pool), Arc::clone(&ok), Arc::clone(&shed));
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    let mut c = HttpClient::connect(&addr).unwrap();
+                    for i in 0..4 {
+                        let body = classify_body(&[&pool[i % pool.len()][..]]);
+                        let r = c.post_json("/v1/classify", &body).unwrap();
+                        match r.status {
+                            200 => {
+                                ok.fetch_add(1, Ordering::Relaxed);
+                            }
+                            429 => {
+                                assert_eq!(
+                                    r.header("retry-after"),
+                                    Some("1"),
+                                    "429 must carry Retry-After"
+                                );
+                                shed.fetch_add(1, Ordering::Relaxed);
+                            }
+                            other => panic!("unexpected status {other}"),
+                        }
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        let (ok, shed) = (ok.load(Ordering::Relaxed), shed.load(Ordering::Relaxed));
+        assert_eq!(ok + shed, 32, "every post must be answered");
+        assert!(ok >= 1, "the first admit must always succeed");
+        assert!(shed >= 1, "8 racing connections over bound 1 must shed");
+        // /metrics reports the same shed count
+        let mut c = HttpClient::connect(&addr).unwrap();
+        let text = String::from_utf8(c.get("/metrics").unwrap().body).unwrap();
+        let line = text
+            .lines()
+            .find(|l| l.starts_with("esact_gateway_shed_total"))
+            .expect("shed metric");
+        let value: f64 = line.split_whitespace().last().unwrap().parse().unwrap();
+        assert_eq!(value as usize, shed, "metrics and HTTP answers must agree");
+        gw.shutdown().unwrap();
+    }
+
+    #[test]
+    fn admin_shutdown_drains_and_closes_the_listener() {
+        let (gw, addr) = start_gateway(GatewayConfig::default());
+        let mut c = HttpClient::connect(&addr).unwrap();
+        assert_eq!(c.post_json("/admin/shutdown", "").unwrap().status, 200);
+        let report = gw.join().unwrap();
+        assert_eq!(report.classify.metrics.requests, 0);
+        assert_eq!(report.generate.metrics.sessions, 0);
+        assert!(report.http_requests >= 1);
+        // the listener is gone: fresh connections must start failing
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            if TcpStream::connect(&addr).is_err() {
+                break;
+            }
+            assert!(Instant::now() < deadline, "listener still accepting after drain");
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    }
+}

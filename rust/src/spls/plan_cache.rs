@@ -510,6 +510,15 @@ impl SharedPlanCache {
             .put_step(tokens, spls, budget, recent, plan)
     }
 
+    /// Per-shard counter snapshots (index = shard position). [`stats`]
+    /// is the sum of these; the split view feeds dashboards that watch
+    /// the shard distribution (e.g. the gateway's `/metrics`).
+    ///
+    /// [`stats`]: SharedPlanCache::stats
+    pub fn shard_stats(&self) -> Vec<CacheStats> {
+        self.shards.iter().map(|s| s.lock().unwrap().stats()).collect()
+    }
+
     /// Aggregate counters summed across every shard.
     pub fn stats(&self) -> CacheStats {
         let mut total = CacheStats::default();

@@ -50,6 +50,54 @@ pub fn percentile(sorted: &[f64], q: f64) -> f64 {
     }
 }
 
+/// Bounded sliding window of latency samples with percentile
+/// extraction — the live-metrics primitive shared by the serving
+/// tier's `LiveTier` and the HTTP gateway's request-latency gauge, so
+/// the window/percentile mechanics exist exactly once.
+#[derive(Debug)]
+pub struct LatencyWindow {
+    samples: std::collections::VecDeque<f64>,
+    cap: usize,
+}
+
+/// Default retention: the most recent 1024 samples.
+pub const DEFAULT_LATENCY_WINDOW: usize = 1024;
+
+impl Default for LatencyWindow {
+    fn default() -> Self {
+        Self::new(DEFAULT_LATENCY_WINDOW)
+    }
+}
+
+impl LatencyWindow {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap >= 1, "latency window needs at least one slot");
+        Self { samples: std::collections::VecDeque::new(), cap }
+    }
+
+    /// Record one sample (seconds), evicting the oldest at capacity.
+    pub fn push(&mut self, seconds: f64) {
+        if self.samples.len() >= self.cap {
+            self.samples.pop_front();
+        }
+        self.samples.push_back(seconds);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// `(p50, p99)` over the retained window; zeros when empty.
+    pub fn percentiles(&self) -> (f64, f64) {
+        if self.samples.is_empty() {
+            return (0.0, 0.0);
+        }
+        let mut sorted: Vec<f64> = self.samples.iter().copied().collect();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        (percentile(&sorted, 0.50), percentile(&sorted, 0.99))
+    }
+}
+
 /// Geometric mean (used for cross-benchmark speedup aggregation, matching
 /// the paper's "on average" claims).
 pub fn geomean(xs: &[f64]) -> f64 {
@@ -137,5 +185,22 @@ mod tests {
     #[should_panic]
     fn summary_rejects_empty() {
         Summary::of(&[]);
+    }
+
+    #[test]
+    fn latency_window_bounds_and_percentiles() {
+        let mut w = LatencyWindow::new(4);
+        assert_eq!(w.percentiles(), (0.0, 0.0), "empty window reads zeros");
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            w.push(x);
+        }
+        let (p50, p99) = w.percentiles();
+        assert!((p50 - 2.5).abs() < 1e-12);
+        assert!((p99 - 3.97).abs() < 1e-12);
+        // pushing past capacity evicts the oldest sample (the 1.0)
+        w.push(5.0);
+        let (p50, _) = w.percentiles();
+        assert!((p50 - 3.5).abs() < 1e-12);
+        assert!(!w.is_empty());
     }
 }
