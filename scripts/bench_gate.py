@@ -17,6 +17,14 @@ Dispatches on the current report's `schema`:
   1.5×; fail below 1.15× to absorb runner noise, warn below 1.5×;
   warn-only when the runner has a single core, since the packed
   engine's row-parallel kernels have nothing to fan out over there).
+* schema 5 — the HTTP gateway bench's BENCH_5.json: per-(replicas,
+  connections) closed-loop throughput floors, a connection-scaling
+  inversion check (8 connections must not collapse below 75% of 1
+  connection at the largest replica count), a streaming
+  time-to-first-token ceiling + tokens/sec floor, and the
+  machine-speed-independent structural check that ttft is well below
+  the whole stream's wall time (a gateway that buffers the stream
+  fails it on any hardware).
 
 All compare against the same committed bench_baseline.json ("saturated"
 floors for schema 2, "decode" floors for schema 3, "forward" floors for
@@ -223,6 +231,95 @@ def check_forward(cur: dict, base: dict) -> list:
     return failures
 
 
+def check_gateway(cur: dict, base: dict) -> list:
+    failures = []
+    for key in ("gateway", "streaming"):
+        if key not in cur:
+            die(f"current report missing '{key}'")
+    for row in cur["gateway"]:
+        for field in (
+            "replicas",
+            "connections",
+            "requests",
+            "throughput_rps",
+            "p50_ms",
+            "p99_ms",
+            "shed",
+        ):
+            if field not in row:
+                die(f"gateway row missing '{field}': {row}")
+    for field in ("ttft_ms", "ttft_frac", "tokens_per_sec"):
+        if field not in cur["streaming"]:
+            die(f"streaming missing '{field}': {cur['streaming']}")
+
+    current = {(r["replicas"], r["connections"]): r for r in cur["gateway"]}
+    print(f"{'cell':<18} {'baseline':>10} {'current':>10} {'floor':>10}  verdict")
+    for b in base.get("gateway", []):
+        key = (b["replicas"], b["connections"])
+        c = current.get(key)
+        if c is None:
+            failures.append(f"gateway cell {key} missing from current report")
+            continue
+        floor = TOLERANCE * b["throughput_rps"]
+        ok = c["throughput_rps"] >= floor
+        label = f"x{b['replicas']} r, {b['connections']} conns"
+        print(
+            f"{label:<18} {b['throughput_rps']:>10.1f} "
+            f"{c['throughput_rps']:>10.1f} {floor:>10.1f}  {'ok' if ok else 'REGRESSED'}"
+        )
+        if not ok:
+            failures.append(
+                f"{key}: {c['throughput_rps']:.1f} rps < floor {floor:.1f} "
+                f"(baseline {b['throughput_rps']:.1f})"
+            )
+
+    # connection scaling: at the largest replica count, more offered
+    # concurrency must not collapse throughput (noise-tolerated)
+    by_replicas = {}
+    for r in cur["gateway"]:
+        by_replicas.setdefault(r["replicas"], {})[r["connections"]] = r["throughput_rps"]
+    top = max(by_replicas) if by_replicas else None
+    if top is not None and 1 in by_replicas[top] and 8 in by_replicas[top]:
+        t1, t8 = by_replicas[top][1], by_replicas[top][8]
+        print(f"conn scaling x{top} replicas: {t1:.1f} -> {t8:.1f} rps (1 -> 8 conns)")
+        if t8 < 0.75 * t1:
+            failures.append(
+                f"connection-scaling inversion at {top} replicas: "
+                f"8 conns {t8:.1f} rps < 1 conn {t1:.1f} rps"
+            )
+        elif t8 < t1:
+            print(f"  ! warning: t8 {t8:.1f} < t1 {t1:.1f} (within noise tolerance)")
+    else:
+        failures.append("report lacks gateway cells at 1 and 8 connections")
+
+    s = cur["streaming"]
+    bs = base.get("streaming", {})
+    ceiling = bs.get("ttft_ms", 1000.0) / TOLERANCE
+    tps_floor = TOLERANCE * bs.get("tokens_per_sec", 0.0)
+    print(
+        f"streaming: ttft {s['ttft_ms']:.1f} ms (ceiling {ceiling:.1f}), "
+        f"{s['tokens_per_sec']:.1f} tok/s (floor {tps_floor:.1f}), "
+        f"ttft_frac {s['ttft_frac']:.2f}"
+    )
+    if s["ttft_ms"] > ceiling:
+        failures.append(
+            f"streaming ttft {s['ttft_ms']:.1f} ms above ceiling {ceiling:.1f} ms "
+            f"(baseline {bs.get('ttft_ms', 1000.0):.1f})"
+        )
+    if s["tokens_per_sec"] < tps_floor:
+        failures.append(
+            f"streaming {s['tokens_per_sec']:.1f} tok/s < floor {tps_floor:.1f}"
+        )
+    # structural (machine-speed independent): the first token must land
+    # well before the stream ends, or the gateway buffered the stream
+    if s["ttft_frac"] > 0.9:
+        failures.append(
+            f"stream looks buffered, not streamed: ttft is {s['ttft_frac']:.2f} "
+            "of the whole stream's wall time (limit 0.9)"
+        )
+    return failures
+
+
 def main() -> None:
     if len(sys.argv) != 3:
         die(f"usage: {sys.argv[0]} CURRENT.json BASELINE.json")
@@ -238,6 +335,8 @@ def main() -> None:
         failures = check_decode(cur, base)
     elif schema == 4:
         failures = check_forward(cur, base)
+    elif schema == 5:
+        failures = check_gateway(cur, base)
     else:
         die(f"unknown report schema {schema!r}")
 
