@@ -6,24 +6,35 @@
 //! length. The two are bit-identical (`tests/packed_parity.rs`), so
 //! every speedup cell is a pure execution-engine win.
 //!
+//! A second cell group sweeps the **sparse-vs-dense crossover**: the
+//! compiled CSR/gather sparse path (`forward_sparse_compiled`) against
+//! the packed dense path at L = 64 across SPLS operating points, with
+//! the *measured* keep-density (fraction of dense FLOPs the plan
+//! keeps, `spls::keep_density`) on the x-axis. Past the documented
+//! sparsity level the sparse path must win — the inversion this bench
+//! exists to keep dead.
+//!
 //! Emits the machine-readable `BENCH_4.json` report (set
 //! `ESACT_BENCH_JSON`) that `scripts/bench_gate.py` gates against the
 //! committed `bench_baseline.json`: absolute packed-throughput floors
-//! per cell, plus the headline packed-must-beat-unpacked inversion
-//! check at seq-len ≥ 64 (warn-only on single-core runners, where the
-//! row-parallel kernels have nothing to fan out over).
+//! per cell, the headline packed-must-beat-unpacked inversion check at
+//! seq-len ≥ 64, and the crossover Spls-beats-Dense check below the
+//! baseline's keep-density threshold (both warn-only on single-core
+//! runners, where the row-parallel kernels have nothing to fan out
+//! over).
 
 use std::fmt::Write as _;
 use std::hint::black_box;
 use std::sync::Arc;
 use std::time::Instant;
 
-use esact::config::SplsConfig;
+use esact::config::{ModelConfig, SplsConfig};
 use esact::model::{
-    forward_dense, forward_masked, forward_sparse, plan_model, PackedModel, TinyWeights,
+    forward_dense, forward_masked, forward_sparse, plan_model, CompiledModelPlan, PackedModel,
+    TinyWeights,
 };
 use esact::quant::QuantMethod;
-use esact::spls::plan::LayerPlan;
+use esact::spls::plan::{keep_density, LayerPlan};
 use esact::util::rng::Xoshiro256pp;
 use esact::util::scratch::Scratch;
 
@@ -82,8 +93,11 @@ fn best_tps(l: usize, mut f: impl FnMut()) -> f64 {
     best
 }
 
-/// The serving tier's mask expansion (similar rows carry their critical
-/// row's mask) — what `ServerCore::masks_for` feeds the masked program.
+/// Rep-expanded `[n_layers, n_heads, L, L]` f32 masks (similar rows
+/// carry their critical row's mask) for the masked bench cells. The
+/// serving tier no longer executes this expansion — Spls requests run
+/// the compiled CSR/gather plans directly — but the masked program
+/// remains a benched path (AOT parity surface, external-mask API).
 fn expand_masks(plans: &[LayerPlan], l: usize) -> Vec<f32> {
     let mut out = Vec::new();
     for plan in plans {
@@ -158,12 +172,60 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    // --- sparse-vs-dense crossover: keep-density on the x-axis -------
+    // Three operating points from "nothing pruned" to "aggressive";
+    // plans AND lowered CSR/gather programs are built once, outside the
+    // timed region (serving amortizes both through the plan cache).
+    let xl = 64usize;
+    let xtoks: Vec<i32> = (0..xl).map(|_| rng.below(64) as i32).collect();
+    let cfg = weights.cfg;
+    let mcfg = ModelConfig::new(
+        "tiny", xl, cfg.d_model, cfg.n_heads, cfg.n_layers, cfg.d_ffn, false,
+    );
+    let dense_tps = best_tps(xl, || {
+        black_box(pm.forward_dense(&xtoks, &mut sc));
+    });
+    let points = [
+        ("open", SplsConfig {
+            top_k: 1.0,
+            sim_threshold: -1.0,
+            ffn_threshold: usize::MAX,
+            window: 8,
+        }),
+        ("default", SplsConfig::default()),
+        ("aggressive", SplsConfig {
+            top_k: 0.08,
+            sim_threshold: 0.9,
+            ffn_threshold: 1,
+            window: 8,
+        }),
+    ];
+    println!("== sparse-vs-dense crossover @ L {xl} (dense {dense_tps:.0} tok/s) ==");
+    let mut xrows: Vec<String> = Vec::new();
+    for (op, spls) in &points {
+        let plans = plan_model(&weights, &xtoks, spls, QuantMethod::Hlog);
+        let kd = keep_density(&mcfg, &plans);
+        let compiled = CompiledModelPlan::lower(&plans);
+        let sparse_tps = best_tps(xl, || {
+            black_box(pm.forward_sparse_compiled(&xtoks, &compiled, &mut sc));
+        });
+        let speedup = sparse_tps / dense_tps.max(1e-12);
+        println!(
+            "  {op:<10} keep-density {kd:.3}: sparse {sparse_tps:>9.0} tok/s | {speedup:>5.2}x dense"
+        );
+        xrows.push(format!(
+            "{{\"op\": \"{op}\", \"keep_density\": {kd:.4}, \"sparse_tps\": {sparse_tps:.2}, \
+             \"dense_tps\": {dense_tps:.2}, \"speedup\": {speedup:.4}}}"
+        ));
+    }
+
     // --- machine-readable report for the CI regression gate ----------
     if let Ok(path) = std::env::var("ESACT_BENCH_JSON") {
         let rows = cells.iter().map(Cell::json).collect::<Vec<_>>().join(",\n    ");
         let mut out = String::from("{\n  \"schema\": 4,\n");
         let _ = writeln!(out, "  \"cores\": {cores},");
-        let _ = writeln!(out, "  \"forward\": [\n    {rows}\n  ]");
+        let _ = writeln!(out, "  \"forward\": [\n    {rows}\n  ],");
+        let _ = writeln!(out, "  \"crossover\": [\n    {}\n  ]", xrows.join(",\n    "));
         out.push_str("}\n");
         std::fs::write(&path, out)?;
         println!("\nwrote {path}");

@@ -3,9 +3,12 @@
 //! padded batches onto per-replica work-stealing deques
 //! (`coordinator::replica`); N replica workers each own an executor
 //! handle over the loaded artifacts and execute batches independently.
-//! The SPLS planner still runs on the *host* per request (it is the
-//! coordinator's contribution), but repeated shapes are served from the
-//! shared [`SharedPlanCache`] — cache hits are bit-identical to fresh
+//! Dense batches run the AOT executables; Spls requests are planned on
+//! the host, compiled into CSR/gather execution plans
+//! (`model::sparse_plan`) and run through the packed sparse forward —
+//! pruned work is skipped outright rather than masked out of a
+//! dense-shaped program. Repeated shapes are served from the shared
+//! [`SharedPlanCache`] — cache hits are bit-identical to fresh
 //! planning (asserted below), so sparsity decisions are amortized
 //! across the pipeline of workers instead of recomputed per batch.
 //!
@@ -24,7 +27,7 @@ use crate::config::SplsConfig;
 use crate::coordinator::batcher::{BatchPolicy, Batcher, Request};
 use crate::coordinator::replica::{self, Job, ReplicaEvent, ReplicaMetrics, WorkQueue};
 use crate::decode::{DecodeConfig, DecodeEngine, DecodeMode, GenSession, Sampling};
-use crate::model::{PackedModel, TinyWeights};
+use crate::model::{CompiledModelPlan, PackedModel, TinyWeights};
 use crate::quant::QuantMethod;
 use crate::runtime::{Arg, ArtifactSet};
 use crate::spls::plan_cache::{CacheStats, SharedPlanCache, DEFAULT_CAPACITY};
@@ -442,43 +445,32 @@ impl ServerCore {
         &self.engine
     }
 
-    /// Plan one request's SPLS masks, serving repeated shapes from the
-    /// shared plan cache (hits are bit-identical to fresh planning —
-    /// the cache stores the planner's own output). Fresh plans run on
-    /// the shared packed model (pre-quantized predictor operands) with
-    /// this worker thread's scratch arena; packed planning is
-    /// bit-identical to `model::plan_model` (`tests/packed_parity.rs`).
-    fn masks_for(&self, tokens: &[i32]) -> Vec<f32> {
-        let cfg = &self.weights.cfg;
-        let plans = self.cache.get_or_compute(
+    /// Plan one request's per-layer SPLS plans, serving repeated shapes
+    /// from the shared plan cache (hits are bit-identical to fresh
+    /// planning — the cache stores the planner's own output). Fresh
+    /// plans run on the shared packed model (pre-quantized predictor
+    /// operands) with this worker thread's scratch arena; packed
+    /// planning is bit-identical to `model::plan_model`
+    /// (`tests/packed_parity.rs`).
+    fn plans_for(&self, tokens: &[i32]) -> Vec<crate::spls::plan::LayerPlan> {
+        self.cache.get_or_compute(
             tokens,
             &self.spls,
             QuantMethod::Hlog,
-            cfg.n_layers,
+            self.weights.cfg.n_layers,
             || {
                 crate::util::scratch::with_thread_scratch(|sc| {
                     self.packed.plan_model(tokens, &self.spls, QuantMethod::Hlog, sc)
                 })
             },
-        );
-        let l = cfg.seq_len;
-        let mut out = Vec::with_capacity(cfg.n_layers * cfg.n_heads * l * l);
-        for plan in &plans {
-            for head in &plan.heads {
-                for r in 0..l {
-                    let src = head.sim.rep[r];
-                    for c in 0..l {
-                        out.push(if head.mask[(src, c)] { 1.0 } else { 0.0 });
-                    }
-                }
-            }
-        }
-        out
+        )
     }
 
     /// Execute one batch (size 1 or 8, padded by the batcher) on the
     /// given executor handle — the caller (a replica worker) owns the
-    /// handle; the core supplies planning + weights.
+    /// handle; the core supplies planning + weights. Dense mode pads to
+    /// the compiled batch shape; Spls mode executes per request on the
+    /// host (compiled sparse forward) and never runs padding slots.
     pub(crate) fn execute_on(
         &self,
         artifacts: &ArtifactSet,
@@ -501,33 +493,33 @@ impl ServerCore {
                 .dense_for_batch(batch)?
                 .run_f32(&[Arg::I32(&toks, &[batch, l])])?,
             Mode::Spls => {
-                let mask_len = cfg.n_layers * cfg.n_heads * l * l;
-                // SPLS planning is per-request independent — fan it out
-                // over scoped threads (§Perf step 5: the planner was the
-                // serving bottleneck once the executables got fast);
-                // cache hits return without planning at all
-                let planned: Vec<Vec<f32>> = crossbeam_utils::thread::scope(|scope| {
+                // SPLS planning *and* compiled sparse execution are
+                // per-request independent — fan both out over scoped
+                // threads (§Perf step 5: the planner was the serving
+                // bottleneck once the executables got fast; cache hits
+                // return without planning at all). Each worker lowers
+                // its request's plans into CSR/gather form and runs the
+                // packed sparse forward on the host — pruned work is
+                // skipped, not masked, and padding slots are never
+                // executed (no fixed batch shape to fill).
+                let per: Vec<Vec<f32>> = crossbeam_utils::thread::scope(|scope| {
                     let handles: Vec<_> = requests
                         .iter()
                         .map(|r| {
                             let tokens = &r.tokens;
-                            scope.spawn(move |_| self.masks_for(tokens))
+                            scope.spawn(move |_| {
+                                let plans = self.plans_for(tokens);
+                                let compiled = CompiledModelPlan::lower(&plans);
+                                crate::util::scratch::with_thread_scratch(|sc| {
+                                    self.packed.forward_sparse_compiled(tokens, &compiled, sc)
+                                })
+                            })
                         })
                         .collect();
                     handles.into_iter().map(|h| h.join().unwrap()).collect()
                 })
-                .expect("planner thread panicked");
-                let mut masks = Vec::with_capacity(batch * mask_len);
-                for m in planned {
-                    masks.extend(m);
-                }
-                for _ in 0..padding {
-                    masks.extend_from_within(..mask_len);
-                }
-                artifacts.masked_for_batch(batch)?.run_f32(&[
-                    Arg::I32(&toks, &[batch, l]),
-                    Arg::F32(&masks, &[batch, cfg.n_layers, cfg.n_heads, l, l]),
-                ])?
+                .expect("sparse worker thread panicked");
+                per.into_iter().flatten().collect()
             }
         };
         let now = Instant::now();

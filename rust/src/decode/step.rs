@@ -20,8 +20,10 @@
 //! * [`DecodeMode::Spls`] — the incremental SPLS predictor
 //!   (`decode::incremental`) gates each step: similar steps reuse the
 //!   previous step's attention output per head (recovery by
-//!   replication), non-similar steps attend only over the predicted
-//!   keep-mask; predicted row magnitudes accumulate into the KV cache's
+//!   replication), non-similar steps gather the keep-mask's kept slots
+//!   and attend over exactly those — the compacted SDDMM → sparse
+//!   softmax → axpy chain of `model::sparse_kernels`, so pruned slots
+//!   are skipped, not masked; predicted row magnitudes accumulate into the KV cache's
 //!   eviction scores; and when enough heads vote "similar" the FFN row
 //!   is reused too (the MFI voting rule applied temporally). Step plans
 //!   are memoized in the shared `spls::plan_cache` under decode
@@ -32,6 +34,7 @@ use std::sync::Arc;
 use crate::config::SplsConfig;
 use crate::decode::incremental::{HeadPredictor, HeadStepPlan, LayerStepPlan, StepPlan};
 use crate::decode::kv_cache::HeadKv;
+use crate::model::sparse_kernels::{axpy_prob, dot_qk, softmax_row};
 use crate::model::tensor::{
     add_inplace, gelu_inplace, layernorm_into, linear_into, masked_softmax_row,
 };
@@ -318,31 +321,75 @@ impl DecodeState {
                             &el.bq_h[hi],
                             &mut self.scratch.q,
                         );
-                        self.scratch.s.reshape(1, n);
-                        scores_row(
-                            &self.scratch.q.data,
-                            hs.kv.k_data(),
-                            dh,
-                            &mut self.scratch.s.data,
-                        );
-                        for v in &mut self.scratch.s.data {
-                            *v *= scale;
-                        }
+                        self.scratch.out.reset(1, dh);
                         match &decision {
-                            Some(dn) => masked_softmax_row(&mut self.scratch.s.data, &dn.keep),
+                            Some(dn) => {
+                                // compiled gated attention: gather the
+                                // kept slots once, then run the
+                                // compacted SDDMM → sparse softmax →
+                                // axpy chain over exactly those slots
+                                // (bit-identical to the masked form:
+                                // kept entries see the same chains,
+                                // pruned entries were zeroed before the
+                                // zero-skipping AV product anyway)
+                                self.scratch.idx.clear();
+                                self.scratch.idx.extend(
+                                    dn.keep
+                                        .iter()
+                                        .enumerate()
+                                        .filter(|&(_, &k)| k)
+                                        .map(|(i, _)| i),
+                                );
+                                assert!(
+                                    !self.scratch.idx.is_empty(),
+                                    "decode keep-mask kept no slots — the newest slot \
+                                     (the diagonal) must always be kept"
+                                );
+                                let nk = self.scratch.idx.len();
+                                self.scratch.s.reshape(1, nk);
+                                let kdata = hs.kv.k_data();
+                                for (j, &slot) in self.scratch.idx.iter().enumerate() {
+                                    self.scratch.s.data[j] = dot_qk(
+                                        &self.scratch.q.data,
+                                        &kdata[slot * dh..(slot + 1) * dh],
+                                    ) * scale;
+                                }
+                                softmax_row(&mut self.scratch.s.data[..nk]);
+                                let vdata = hs.kv.v_data();
+                                for (j, &slot) in self.scratch.idx.iter().enumerate() {
+                                    let pv = self.scratch.s.data[j];
+                                    if pv == 0.0 {
+                                        continue;
+                                    }
+                                    axpy_prob(
+                                        pv,
+                                        &vdata[slot * dh..(slot + 1) * dh],
+                                        &mut self.scratch.out.data,
+                                    );
+                                }
+                            }
                             None => {
+                                self.scratch.s.reshape(1, n);
+                                scores_row(
+                                    &self.scratch.q.data,
+                                    hs.kv.k_data(),
+                                    dh,
+                                    &mut self.scratch.s.data,
+                                );
+                                for v in &mut self.scratch.s.data {
+                                    *v *= scale;
+                                }
                                 self.scratch.flags.clear();
                                 self.scratch.flags.resize(n, true);
                                 masked_softmax_row(&mut self.scratch.s.data, &self.scratch.flags);
+                                attend_row(
+                                    &self.scratch.s.data,
+                                    hs.kv.v_data(),
+                                    dh,
+                                    &mut self.scratch.out.data,
+                                );
                             }
                         }
-                        self.scratch.out.reset(1, dh);
-                        attend_row(
-                            &self.scratch.s.data,
-                            hs.kv.v_data(),
-                            dh,
-                            &mut self.scratch.out.data,
-                        );
                         self.scratch.out.data.clone()
                     }
                 };

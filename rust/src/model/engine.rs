@@ -19,11 +19,14 @@
 //! * the dense substrate paths (`forward_dense` / `forward_masked` /
 //!   `forward_causal_hidden`) keep the full D × D projections (their
 //!   QKV is computed for every row and column anyway, and the
-//!   row-parallel `tensor::linear_into_par` wants the widest panels)
-//!   and run the per-head attention on **column views** of the packed
-//!   Q/Kᵀ/V activations — zero per-head copies, with Kᵀ transposed once
-//!   per layer into the arena so the score kernel's inner loop walks
-//!   contiguous rows.
+//!   row-parallel `tensor::linear_into_par` wants the widest panels).
+//!   The dense/causal blocks run per-head attention on **column views**
+//!   of the packed Q/Kᵀ/V activations — zero per-head copies, with Kᵀ
+//!   transposed once per layer so the score kernel walks contiguous
+//!   rows — while the masked block and the compiled sparse path
+//!   (`forward_sparse_compiled`) gather kept columns and run the
+//!   SDDMM → sparse-softmax → axpy kernels of `model::sparse_kernels`,
+//!   skipping pruned score work entirely (see `model::sparse_plan`).
 //!
 //! **Bitwise contract.** Every packed forward is bit-identical to its
 //! unpacked sibling in `model::transformer`: the kernels preserve the
@@ -41,9 +44,11 @@ use crate::spls::plan::{plan_layer_from_inputs, LayerPlan};
 use crate::util::mat::{MatF, MatI};
 use crate::util::scratch::Scratch;
 
+use super::sparse_kernels::{axpy_prob, dot_qk, softmax_row};
+use super::sparse_plan::CompiledModelPlan;
 use super::tensor::{
     add_inplace, gelu_inplace, layernorm_into, linear_into, linear_into_par,
-    masked_softmax_rows, matmul_into, mean_rows_into, softmax_rows,
+    masked_softmax_rows, mean_rows_into, softmax_rows,
 };
 use super::transformer::lm_logits_row;
 use super::weights::{LayerWeights, TinyWeights};
@@ -73,16 +78,15 @@ pub struct PackedModel {
     layers: Vec<PackedLayer>,
 }
 
-/// Which softmax masking a dense-substrate block applies.
+/// Which softmax masking a dense-substrate block applies. External f32
+/// masks no longer ride through here — `block_masked` gathers each
+/// row's kept columns and runs the compacted kernels instead.
 #[derive(Clone, Copy)]
-enum BlockMask<'a> {
+enum BlockMask {
     /// Unmasked row softmax (`forward_dense`).
     Dense,
     /// Lower-triangular causal mask (`forward_causal_hidden`).
     Causal,
-    /// One layer's `[n_heads, L, L]` f32 mask slice, keep iff `> 0.5`
-    /// (`forward_masked`).
-    External(&'a [f32]),
 }
 
 impl PackedModel {
@@ -155,18 +159,11 @@ impl PackedModel {
     /// the packed `block_dense` / masked-block / causal-block: full QKV
     /// projections (row-parallel), one Kᵀ transpose per layer, per-head
     /// attention on column views.
-    fn block(&self, lw: &LayerWeights, sc: &mut Scratch, mask: BlockMask<'_>) {
+    fn block(&self, lw: &LayerWeights, sc: &mut Scratch, mask: BlockMask) {
         let cfg = &self.weights.cfg;
         let (n_heads, dh) = (cfg.n_heads, cfg.d_head());
         let (l, d) = (sc.x.rows, sc.x.cols);
-        sc.h.reshape(l, d);
-        layernorm_into(&sc.x, &lw.ln1_g, &lw.ln1_b, &mut sc.h);
-        sc.q.reshape(l, d);
-        linear_into_par(&sc.h, &lw.wq, &lw.bq, &mut sc.q);
-        sc.k.reshape(l, d);
-        linear_into_par(&sc.h, &lw.wk, &lw.bk, &mut sc.k);
-        sc.v.reshape(l, d);
-        linear_into_par(&sc.h, &lw.wv, &lw.bv, &mut sc.v);
+        self.qkv_into(lw, sc);
         sc.kt.reshape(d, l);
         sc.k.transpose_into(&mut sc.kt);
         sc.att.reset(l, d);
@@ -186,17 +183,30 @@ impl PackedModel {
             match mask {
                 BlockMask::Dense => softmax_rows(&mut sc.s),
                 BlockMask::Causal => masked_softmax_rows(&mut sc.s, &sc.mask),
-                BlockMask::External(m) => {
-                    sc.mask.reset(l, l);
-                    let head = &m[hi * l * l..(hi + 1) * l * l];
-                    for (b, &mv) in sc.mask.data.iter_mut().zip(head) {
-                        *b = mv > 0.5;
-                    }
-                    masked_softmax_rows(&mut sc.s, &sc.mask);
-                }
             }
             attend_head(&sc.s, &sc.v, hi, dh, &mut sc.att);
         }
+        self.block_tail(lw, sc);
+    }
+
+    /// LayerNorm → full row-parallel Q/K/V projections over `sc.x`
+    /// (shared by the dense-substrate blocks and the masked block).
+    fn qkv_into(&self, lw: &LayerWeights, sc: &mut Scratch) {
+        let (l, d) = (sc.x.rows, sc.x.cols);
+        sc.h.reshape(l, d);
+        layernorm_into(&sc.x, &lw.ln1_g, &lw.ln1_b, &mut sc.h);
+        sc.q.reshape(l, d);
+        linear_into_par(&sc.h, &lw.wq, &lw.bq, &mut sc.q);
+        sc.k.reshape(l, d);
+        linear_into_par(&sc.h, &lw.wk, &lw.bk, &mut sc.k);
+        sc.v.reshape(l, d);
+        linear_into_par(&sc.h, &lw.wv, &lw.bv, &mut sc.v);
+    }
+
+    /// Output projection + residual + dense FFN over `sc.att`/`sc.x` —
+    /// the block suffix shared by every non-sparse-FFN path.
+    fn block_tail(&self, lw: &LayerWeights, sc: &mut Scratch) {
+        let (l, d) = (sc.x.rows, sc.x.cols);
         sc.proj.reshape(l, d);
         linear_into_par(&sc.att, &lw.wo, &lw.bo, &mut sc.proj);
         add_inplace(&mut sc.x, &sc.proj);
@@ -208,6 +218,55 @@ impl PackedModel {
         sc.proj.reshape(l, d);
         linear_into_par(&sc.ff, &lw.w2, &lw.b2, &mut sc.proj);
         add_inplace(&mut sc.x, &sc.proj);
+    }
+
+    /// One masked-prefill block: full QKV like the dense block, but the
+    /// attention gathers each row's kept columns and runs the compacted
+    /// SDDMM → sparse-softmax → axpy kernels — no Kᵀ transpose, no L×L
+    /// score matmul. Bit-identical to the dense-shaped masked reference:
+    /// kept entries see the same accumulation chains and pruned entries
+    /// never influenced the reference output (its masked softmax zeroed
+    /// them before the zero-skipping AV matmul). A fully-masked row
+    /// leaves its attention output zero — the raw-f32-mask path keeps
+    /// that tolerance because arbitrary external masks may legally zero
+    /// a row; plan-lowered execution cannot (see `model::sparse_plan`).
+    fn block_masked(&self, lw: &LayerWeights, sc: &mut Scratch, masks: &[f32]) {
+        let cfg = &self.weights.cfg;
+        let (n_heads, dh) = (cfg.n_heads, cfg.d_head());
+        let l = sc.x.rows;
+        self.qkv_into(lw, sc);
+        sc.att.reset(l, sc.x.cols);
+        let scale = 1.0 / (dh as f32).sqrt();
+        for hi in 0..n_heads {
+            let head = &masks[hi * l * l..(hi + 1) * l * l];
+            let (h0, h1) = (hi * dh, (hi + 1) * dh);
+            for r in 0..l {
+                let mrow = &head[r * l..(r + 1) * l];
+                sc.idx.clear();
+                sc.idx.extend(
+                    mrow.iter().enumerate().filter(|&(_, &mv)| mv > 0.5).map(|(c, _)| c),
+                );
+                if sc.idx.is_empty() {
+                    continue; // fully-masked row: output row stays zero
+                }
+                let nk = sc.idx.len();
+                sc.s.reshape(1, nk);
+                let qrow = &sc.q.row(r)[h0..h1];
+                for (j, &c) in sc.idx.iter().enumerate() {
+                    sc.s.data[j] = dot_qk(qrow, &sc.k.row(c)[h0..h1]) * scale;
+                }
+                softmax_row(&mut sc.s.data[..nk]);
+                let arow = &mut sc.att.row_mut(r)[h0..h1];
+                for (j, &c) in sc.idx.iter().enumerate() {
+                    let p = sc.s.data[j];
+                    if p == 0.0 {
+                        continue;
+                    }
+                    axpy_prob(p, &sc.v.row(c)[h0..h1], arow);
+                }
+            }
+        }
+        self.block_tail(lw, sc);
     }
 
     /// Final LayerNorm → mean-pool → classifier head over `sc.x`.
@@ -245,7 +304,7 @@ impl PackedModel {
         );
         self.embed_into(tokens, &mut sc.x);
         for (li, lw) in self.weights.layers.iter().enumerate() {
-            self.block(lw, sc, BlockMask::External(&masks[li * per..(li + 1) * per]));
+            self.block_masked(lw, sc, &masks[li * per..(li + 1) * per]);
         }
         self.classify_tail(sc)
     }
@@ -330,23 +389,42 @@ impl PackedModel {
         plans
     }
 
-    /// Packed [`super::forward_sparse`] (bit-identical): critical-row Q
-    /// generation, active-column K/V generation and MFI-gated FFN rows
-    /// run on the pre-packed per-head slices, with recovery written
-    /// straight into the arena. Only plan-derived index lists
-    /// (`critical_rows`, `computed_tokens`) still allocate.
+    /// Packed [`super::forward_sparse`] (bit-identical): lowers the
+    /// plans into a [`CompiledModelPlan`] and executes it. Callers that
+    /// run many forwards per plan-set (the serving tier) should compile
+    /// once with [`CompiledModelPlan::lower`] and call
+    /// [`Self::forward_sparse_compiled`] directly.
     pub fn forward_sparse(
         &self,
         tokens: &[i32],
         plans: &[LayerPlan],
         sc: &mut Scratch,
     ) -> Vec<f32> {
-        assert_eq!(plans.len(), self.weights.layers.len());
+        let compiled = CompiledModelPlan::lower(plans);
+        self.forward_sparse_compiled(tokens, &compiled, sc)
+    }
+
+    /// The compiled SPLS forward: per head, Q is generated for the
+    /// critical rows and K/V for the CSR panel columns only, the SDDMM
+    /// evaluates exactly the kept (q, k) pairs, the sparse softmax
+    /// normalizes each CSR row's compacted values in place, and the
+    /// SpMM axpy accumulates the kept probabilities back to dense.
+    /// Pruned work is *skipped*, not masked — there is no Kᵀ transpose,
+    /// no L-wide score rows, no full-L zeroed K/V staging — yet every
+    /// kernel preserves the reference accumulation chain, so the result
+    /// is bit-identical to the unpacked `model::forward_sparse`.
+    pub fn forward_sparse_compiled(
+        &self,
+        tokens: &[i32],
+        cp: &CompiledModelPlan,
+        sc: &mut Scratch,
+    ) -> Vec<f32> {
+        assert_eq!(cp.layers.len(), self.weights.layers.len());
         let cfg = self.weights.cfg;
         let (n_heads, dh) = (cfg.n_heads, cfg.d_head());
         self.embed_into(tokens, &mut sc.x);
-        let zipped = self.weights.layers.iter().zip(&self.layers).zip(plans);
-        for ((lw, pl), plan) in zipped {
+        let zipped = self.weights.layers.iter().zip(&self.layers).zip(&cp.layers);
+        for ((lw, pl), cl) in zipped {
             let (l, d) = (sc.x.rows, sc.x.cols);
             sc.h.reshape(l, d);
             layernorm_into(&sc.x, &lw.ln1_g, &lw.ln1_b, &mut sc.h);
@@ -355,44 +433,47 @@ impl PackedModel {
             sc.att.reshape(l, d);
             let scale = 1.0 / (dh as f32).sqrt();
             for hi in 0..n_heads {
-                let hp = &plan.heads[hi];
-                let criticals = hp.sim.critical_rows();
+                let ch = &cl.heads[hi];
+                let nc = ch.criticals.len();
                 // --- Q generation: critical rows only ---------------
-                sc.part.reshape(criticals.len(), dh);
-                for (i, &row) in criticals.iter().enumerate() {
+                sc.part.reshape(nc, dh);
+                for (i, &row) in ch.criticals.iter().enumerate() {
                     project_row(sc.h.row(row), &pl.wq_h[hi], &pl.bq_h[hi], sc.part.row_mut(i));
                 }
-                // --- K/V generation: active columns only ------------
-                sc.k.reset(l, dh);
-                sc.v.reset(l, dh);
-                for &col in &hp.active_cols {
-                    project_row(sc.h.row(col), &pl.wk_h[hi], &pl.bk_h[hi], sc.k.row_mut(col));
-                    project_row(sc.h.row(col), &pl.wv_h[hi], &pl.bv_h[hi], sc.v.row_mut(col));
+                // --- K/V generation: compact panels over the kept
+                //     columns (no full-L staging) ---------------------
+                sc.k.reshape(ch.panel_cols.len(), dh);
+                sc.v.reshape(ch.panel_cols.len(), dh);
+                for (p, &col) in ch.panel_cols.iter().enumerate() {
+                    let hrow = sc.h.row(col as usize);
+                    project_row(hrow, &pl.wk_h[hi], &pl.bk_h[hi], sc.k.row_mut(p));
+                    project_row(hrow, &pl.wv_h[hi], &pl.bv_h[hi], sc.v.row_mut(p));
                 }
-                // --- masked attention on critical rows --------------
-                sc.kt.reshape(dh, l);
-                sc.k.transpose_into(&mut sc.kt);
-                sc.s.reshape(criticals.len(), l);
-                matmul_into(&sc.part, &sc.kt, &mut sc.s);
-                scale_inplace(&mut sc.s, scale);
-                sc.mask.reshape(criticals.len(), l);
-                for (i, &row) in criticals.iter().enumerate() {
-                    sc.mask.row_mut(i).copy_from_slice(hp.mask.row(row));
+                // --- SDDMM → sparse softmax → SpMM over CSR rows ----
+                sc.s.reshape(1, ch.nnz());
+                sc.out.reset(nc, dh);
+                for i in 0..nc {
+                    let (b, e) = (ch.row_offsets[i] as usize, ch.row_offsets[i + 1] as usize);
+                    let qrow = sc.part.row(i);
+                    for j in b..e {
+                        let p = ch.col_indices[j] as usize;
+                        sc.s.data[j] = dot_qk(qrow, sc.k.row(p)) * scale;
+                    }
+                    softmax_row(&mut sc.s.data[b..e]);
+                    let orow = sc.out.row_mut(i);
+                    for j in b..e {
+                        let pv = sc.s.data[j];
+                        if pv == 0.0 {
+                            continue;
+                        }
+                        axpy_prob(pv, sc.v.row(ch.col_indices[j] as usize), orow);
+                    }
                 }
-                masked_softmax_rows(&mut sc.s, &sc.mask);
-                sc.out.reshape(criticals.len(), dh);
-                matmul_into(&sc.s, &sc.v, &mut sc.out);
                 // --- recovery: replicate critical outputs to similar
                 //     rows, straight into the head's att columns ------
-                sc.idx.clear();
-                sc.idx.resize(l, usize::MAX);
-                for (i, &row) in criticals.iter().enumerate() {
-                    sc.idx[row] = i;
-                }
                 for r in 0..l {
-                    let src = sc.idx[hp.sim.rep[r]];
                     sc.att.row_mut(r)[hi * dh..(hi + 1) * dh]
-                        .copy_from_slice(sc.out.row(src));
+                        .copy_from_slice(sc.out.row(ch.rep_pos[r] as usize));
                 }
             }
             sc.proj.reshape(l, d);
@@ -401,7 +482,7 @@ impl PackedModel {
             // --- FFN: MFI-representative tokens only ----------------
             sc.h2.reshape(l, d);
             layernorm_into(&sc.x, &lw.ln2_g, &lw.ln2_b, &mut sc.h2);
-            let computed = plan.ffn.computed_tokens();
+            let computed = &cl.ffn.computed;
             sc.part.reshape(computed.len(), d);
             for (i, &row) in computed.iter().enumerate() {
                 sc.part.row_mut(i).copy_from_slice(sc.h2.row(row));
@@ -411,13 +492,8 @@ impl PackedModel {
             gelu_inplace(&mut sc.ff);
             sc.out.reshape(computed.len(), d);
             linear_into_par(&sc.ff, &lw.w2, &lw.b2, &mut sc.out);
-            sc.idx.clear();
-            sc.idx.resize(l, usize::MAX);
-            for (i, &row) in computed.iter().enumerate() {
-                sc.idx[row] = i;
-            }
             for r in 0..l {
-                let src = sc.idx[plan.ffn.rep[r]];
+                let src = cl.ffn.rep_pos[r] as usize;
                 for (o, &v) in sc.x.row_mut(r).iter_mut().zip(sc.out.row(src)) {
                     *o += v;
                 }

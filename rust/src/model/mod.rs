@@ -5,6 +5,8 @@
 
 pub mod accuracy;
 pub mod engine;
+pub mod sparse_kernels;
+pub mod sparse_plan;
 pub mod synth;
 pub mod tensor;
 pub mod transformer;
@@ -12,6 +14,10 @@ pub mod weights;
 
 pub use accuracy::{eval_dense, eval_sparse, EvalResult};
 pub use engine::{PackedLayer, PackedModel};
+pub use sparse_plan::{
+    within_parity_corridor, CompiledHeadPlan, CompiledLayerPlan, CompiledModelPlan,
+    PARITY_EPS,
+};
 pub use transformer::{
     attention_probs, embed_row, forward_causal_hidden, forward_dense, forward_masked,
     forward_sparse, lm_logits_row, next_token_logits, plan_model,

@@ -1,0 +1,150 @@
+//! Gather/CSR microkernels for the compiled sparse execution paths
+//! (`model::sparse_plan`): SDDMM dot products over kept (q, k) pairs,
+//! sparse softmax over a CSR row's compacted values, and the SpMM axpy
+//! back to dense. Each kernel preserves the exact per-output-element
+//! accumulation chain of the dense-shaped reference it replaces
+//! (k-ascending, zero-skip, `sum.max(1e-30)` guard — see DESIGN.md
+//! §Host kernel layout), which is what keeps the compiled paths
+//! **bit-identical** to `model::transformer` instead of merely close.
+
+/// SDDMM dot product: `Σ_k q[k] · k_row[k]`, accumulated k-ascending
+/// from 0.0 with zero `q` values skipped — the same per-element chain
+/// as `tensor::matmul_row` (and `engine::scores_head`) produce for one
+/// score, so a score computed only at a kept position matches the bit
+/// the dense-shaped matmul would have produced there.
+#[inline]
+pub fn dot_qk(q: &[f32], k_row: &[f32]) -> f32 {
+    debug_assert_eq!(q.len(), k_row.len());
+    let mut acc = 0.0f32;
+    for (&av, &bv) in q.iter().zip(k_row) {
+        if av == 0.0 {
+            continue;
+        }
+        acc += av * bv;
+    }
+    acc
+}
+
+/// Softmax over a compacted row of kept scores — the kept-entry chain
+/// of `tensor::masked_softmax_row` with the gather already done: max
+/// and exp/sum run over the values in ascending kept-column order
+/// (exactly the order the masked form visits kept entries), and the
+/// normalizer keeps the `sum.max(1e-30)` guard. An empty row is left
+/// empty (the raw-mask path's zero-fill tolerance); plan-lowered rows
+/// can never be empty (`spls::lower_mask_rows` forbids it).
+pub fn softmax_row(row: &mut [f32]) {
+    let mut max = f32::NEG_INFINITY;
+    for &v in row.iter() {
+        max = max.max(v);
+    }
+    if max == f32::NEG_INFINITY {
+        return; // empty (or all-NaN-free empty) row: nothing to normalize
+    }
+    let mut sum = 0.0;
+    for v in row.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum.max(1e-30);
+    for v in row.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// SpMM accumulation step: `out[c] += p · v_row[c]` over the contiguous
+/// value row. Callers skip `p == 0.0` entries before calling, mirroring
+/// the zero-skip of `tensor::matmul_row` / `engine::attend_head` so the
+/// surviving adds hit the accumulator in the identical order.
+#[inline]
+pub fn axpy_prob(p: f32, v_row: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(v_row.len(), out.len());
+    for (o, &bv) in out.iter_mut().zip(v_row) {
+        *o += p * bv;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::tensor::{masked_softmax_row, matmul_into};
+    use crate::util::mat::MatF;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn rand_vec(rng: &mut Xoshiro256pp, n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|_| {
+                // sprinkle exact zeros so the zero-skip paths engage
+                if rng.f64() < 0.2 {
+                    0.0
+                } else {
+                    (rng.f64() * 2.0 - 1.0) as f32
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn dot_qk_matches_matmul_row_element() {
+        let mut rng = Xoshiro256pp::new(0x5dd);
+        for n in [1usize, 7, 16, 33] {
+            let q = rand_vec(&mut rng, n);
+            let k = rand_vec(&mut rng, n);
+            let a = MatF::from_vec(1, n, q.clone());
+            let b = MatF::from_vec(n, 1, k.clone());
+            let mut out = MatF::zeros(1, 1);
+            matmul_into(&a, &b, &mut out);
+            assert_eq!(dot_qk(&q, &k), out.data[0], "n = {n}");
+        }
+    }
+
+    #[test]
+    fn softmax_row_matches_masked_form_on_gathered_kept() {
+        let mut rng = Xoshiro256pp::new(0x50f);
+        for n in [1usize, 5, 12, 40] {
+            let scores: Vec<f32> = (0..n).map(|_| (rng.f64() * 8.0 - 4.0) as f32).collect();
+            let mask: Vec<bool> = (0..n).map(|i| i == 0 || rng.f64() < 0.5).collect();
+            let mut reference = scores.clone();
+            masked_softmax_row(&mut reference, &mask);
+            let mut compact: Vec<f32> = scores
+                .iter()
+                .zip(&mask)
+                .filter(|(_, &m)| m)
+                .map(|(&v, _)| v)
+                .collect();
+            softmax_row(&mut compact);
+            let kept_ref: Vec<f32> = reference
+                .iter()
+                .zip(&mask)
+                .filter(|(_, &m)| m)
+                .map(|(&v, _)| v)
+                .collect();
+            assert_eq!(compact, kept_ref, "n = {n}");
+        }
+    }
+
+    #[test]
+    fn softmax_row_leaves_empty_row_alone() {
+        let mut empty: Vec<f32> = Vec::new();
+        softmax_row(&mut empty);
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn axpy_prob_matches_attend_accumulation() {
+        let mut rng = Xoshiro256pp::new(0xa11);
+        let probs = rand_vec(&mut rng, 9);
+        let v = MatF::from_vec(9, 6, rand_vec(&mut rng, 54));
+        // reference: matmul of the prob row against V
+        let p = MatF::from_vec(1, 9, probs.clone());
+        let mut want = MatF::zeros(1, 6);
+        matmul_into(&p, &v, &mut want);
+        let mut got = vec![0.0f32; 6];
+        for (k, &pv) in probs.iter().enumerate() {
+            if pv == 0.0 {
+                continue;
+            }
+            axpy_prob(pv, v.row(k), &mut got);
+        }
+        assert_eq!(got, want.data);
+    }
+}

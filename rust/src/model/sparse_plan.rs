@@ -1,0 +1,269 @@
+//! The sparse-plan compiler: lowers a request's per-layer SPLS
+//! [`LayerPlan`]s (boolean keep-masks + similarity/MFI maps) into the
+//! compact index structures the gather/CSR kernels execute — so the
+//! formal phase *skips* pruned work instead of walking dense-shaped
+//! loops gated by masks.
+//!
+//! Per head, the compiled plan carries:
+//!
+//! * the **critical rows** (ascending) whose Q is generated and whose
+//!   attention is computed — everything else is recovered by
+//!   replication;
+//! * the **panel columns** — the ascending union of kept columns over
+//!   the critical rows; K/V are projected only for these positions,
+//!   into a compact `panel × Dh` buffer (no full-L zeroed staging);
+//! * **CSR row-offsets / col-indices** over the critical rows, with
+//!   column ids re-based onto panel positions — SDDMM evaluates only
+//!   these (q, k) pairs, sparse softmax normalizes each CSR row in
+//!   place, and the SpMM axpy scatters back to dense per kept entry;
+//! * a per-token **rep_pos** map (token row → position of its
+//!   representative in the compacted output) so recovery is a single
+//!   indexed copy per row.
+//!
+//! Lowering asserts the **diagonal invariant** via
+//! [`crate::spls::lower_mask_rows`]: every critical row keeps ≥ 1
+//! column (top-k keeps ⌈k·L⌉ ≥ 1, the causal path force-includes the
+//! diagonal), so a fully-pruned attention row cannot reach the kernels
+//! — a hostile or corrupted plan fails loudly at compile time instead
+//! of flowing a silently zero-filled row downstream.
+//!
+//! **Plan lifetime.** A compiled plan borrows nothing and is built once
+//! per (request, plan-set): the serving tier compiles right after the
+//! plan-cache lookup and executes every forward of the request against
+//! it; `PackedModel::forward_sparse` compiles internally per call (its
+//! callers hand it raw `LayerPlan`s). Lowering is O(nnz) index
+//! shuffling — three orders of magnitude below the MACs it deletes.
+//!
+//! **Parity.** The compiled kernels preserve the reference accumulation
+//! chains exactly (see `model::sparse_kernels`), so compiled execution
+//! is bit-identical to the unpacked `model::transformer` paths. The
+//! epsilon corridor ([`PARITY_EPS`]) exists for comparisons across
+//! *different* dataflows — e.g. `forward_sparse` vs `forward_masked`
+//! under a nothing-gated plan, whose bias placement and accumulation
+//! widths legitimately differ by float reassociation.
+
+use crate::spls::plan::{lower_mask_rows, LayerPlan};
+
+/// Logit-space tolerance for cross-dataflow parity: two semantically
+/// identical forwards whose accumulation chains differ (bias-first
+/// per-head projection vs full-width matmul + bias-after) agree to
+/// well within this bound on the tiny classifier's logits. Bitwise
+/// suites stay the contract wherever the chain is preserved; this
+/// corridor only covers documented reorderings.
+pub const PARITY_EPS: f32 = 1e-3;
+
+/// True iff `a` and `b` agree elementwise within `eps`.
+pub fn within_parity_corridor(a: &[f32], b: &[f32], eps: f32) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| (x - y).abs() <= eps)
+}
+
+/// One head's compiled attention: gather lists + CSR structure over the
+/// critical rows, with columns re-based onto the K/V panel.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CompiledHeadPlan {
+    /// Critical token rows, ascending (Q generation + attention set).
+    pub criticals: Vec<usize>,
+    /// `rep_pos[r]` = index into `criticals` of row r's representative.
+    pub rep_pos: Vec<u32>,
+    /// Ascending union of kept columns over the critical rows — the
+    /// K/V gather list (a subset of the plan's `active_cols`; columns
+    /// no critical row keeps are never read, so they are not projected).
+    pub panel_cols: Vec<u32>,
+    /// `criticals.len() + 1` CSR offsets into `col_indices`.
+    pub row_offsets: Vec<u32>,
+    /// Kept positions as indices **into `panel_cols`**, ascending per
+    /// row (panel columns are ascending, so panel order = column order).
+    pub col_indices: Vec<u32>,
+}
+
+impl CompiledHeadPlan {
+    pub fn nnz(&self) -> usize {
+        self.col_indices.len()
+    }
+}
+
+/// The FFN's compiled gather: MFI-representative rows + recovery map.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CompiledFfnPlan {
+    /// Computed (representative) token rows, ascending.
+    pub computed: Vec<usize>,
+    /// `rep_pos[r]` = index into `computed` of row r's representative.
+    pub rep_pos: Vec<u32>,
+}
+
+/// One layer's compiled plan.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CompiledLayerPlan {
+    pub heads: Vec<CompiledHeadPlan>,
+    pub ffn: CompiledFfnPlan,
+}
+
+/// The whole model's compiled plan — what the serving tier holds per
+/// request and `forward_sparse_compiled` executes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CompiledModelPlan {
+    pub layers: Vec<CompiledLayerPlan>,
+}
+
+/// Build the position map `rep_pos` for a representative map `rep`
+/// whose fixed points are listed (ascending) in `members`.
+fn position_map(rep: &[usize], members: &[usize]) -> Vec<u32> {
+    let mut pos = vec![u32::MAX; rep.len()];
+    for (i, &m) in members.iter().enumerate() {
+        pos[m] = i as u32;
+    }
+    rep.iter()
+        .map(|&r| {
+            let p = pos[r];
+            assert!(p != u32::MAX, "representative {r} is not a member row");
+            p
+        })
+        .collect()
+}
+
+impl CompiledModelPlan {
+    /// Compile per-layer SPLS plans into gather/CSR execution form.
+    /// Panics (diagonal invariant) if any critical row keeps nothing.
+    pub fn lower(plans: &[LayerPlan]) -> Self {
+        let layers = plans
+            .iter()
+            .map(|plan| {
+                let heads = plan.heads.iter().map(lower_head).collect();
+                let computed = plan.ffn.computed_tokens();
+                let rep_pos = position_map(&plan.ffn.rep, &computed);
+                CompiledLayerPlan { heads, ffn: CompiledFfnPlan { computed, rep_pos } }
+            })
+            .collect();
+        Self { layers }
+    }
+}
+
+fn lower_head(hp: &crate::spls::qkv::HeadPlan) -> CompiledHeadPlan {
+    let criticals = hp.sim.critical_rows();
+    let rep_pos = position_map(&hp.sim.rep, &criticals);
+    // absolute kept columns per critical row (empty rows forbidden —
+    // this is the loud failure the silent zero-fill used to hide)
+    let csr = lower_mask_rows(&hp.mask, &criticals, true);
+    // panel = ascending union of kept columns; re-base the CSR columns
+    // onto panel positions
+    let l = hp.mask.cols;
+    let mut on_panel = vec![u32::MAX; l];
+    let mut panel_cols = Vec::new();
+    for &c in &csr.col_indices {
+        if on_panel[c as usize] == u32::MAX {
+            on_panel[c as usize] = 0; // mark; position assigned below
+            panel_cols.push(c);
+        }
+    }
+    panel_cols.sort_unstable();
+    for (i, &c) in panel_cols.iter().enumerate() {
+        on_panel[c as usize] = i as u32;
+    }
+    let col_indices = csr.col_indices.iter().map(|&c| on_panel[c as usize]).collect();
+    CompiledHeadPlan {
+        criticals,
+        rep_pos,
+        panel_cols,
+        row_offsets: csr.row_offsets,
+        col_indices,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SplsConfig;
+    use crate::spls::plan::plan_layer;
+    use crate::util::mat::MatI;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn synth_plan(l: usize, h: usize, seed: u64) -> LayerPlan {
+        let mut rng = Xoshiro256pp::new(seed);
+        let pams: Vec<MatI> = (0..h)
+            .map(|_| {
+                MatI::from_fn(l, l, |r, c| {
+                    ((r / 2 * 13 + c * 3) % 61) as i32 + rng.int_in(-1, 1) as i32
+                })
+            })
+            .collect();
+        plan_layer(&pams, &SplsConfig::default())
+    }
+
+    #[test]
+    fn lowered_plan_structure_is_consistent() {
+        let plan = synth_plan(32, 4, 7);
+        let cp = CompiledModelPlan::lower(std::slice::from_ref(&plan));
+        assert_eq!(cp.layers.len(), 1);
+        let layer = &cp.layers[0];
+        assert_eq!(layer.heads.len(), 4);
+        for (hp, ch) in plan.heads.iter().zip(&layer.heads) {
+            assert_eq!(ch.criticals, hp.sim.critical_rows());
+            assert_eq!(ch.row_offsets.len(), ch.criticals.len() + 1);
+            assert_eq!(*ch.row_offsets.last().unwrap() as usize, ch.nnz());
+            // offsets monotone, every row non-empty
+            for w in ch.row_offsets.windows(2) {
+                assert!(w[0] < w[1], "empty or reversed CSR row");
+            }
+            // panel ascending + unique; per-row panel indices ascending
+            assert!(ch.panel_cols.windows(2).all(|w| w[0] < w[1]));
+            for w in ch.row_offsets.windows(2) {
+                let row = &ch.col_indices[w[0] as usize..w[1] as usize];
+                assert!(row.windows(2).all(|p| p[0] < p[1]));
+            }
+            // nnz equals kept entries over critical rows; every kept
+            // (row, col) appears at its panel position
+            let mut nnz = 0;
+            for (i, &r) in ch.criticals.iter().enumerate() {
+                let row = &ch.col_indices
+                    [ch.row_offsets[i] as usize..ch.row_offsets[i + 1] as usize];
+                let cols: Vec<usize> =
+                    row.iter().map(|&p| ch.panel_cols[p as usize] as usize).collect();
+                let want: Vec<usize> = (0..hp.mask.cols)
+                    .filter(|&c| hp.mask[(r, c)])
+                    .collect();
+                assert_eq!(cols, want, "row {r}");
+                nnz += want.len();
+            }
+            assert_eq!(nnz, ch.nnz());
+            // panel ⊆ active_cols
+            for &c in &ch.panel_cols {
+                assert!(hp.active_cols.contains(&(c as usize)), "panel col {c}");
+            }
+            // rep_pos round-trips through criticals
+            for (r, &p) in ch.rep_pos.iter().enumerate() {
+                assert_eq!(ch.criticals[p as usize], hp.sim.rep[r], "row {r}");
+            }
+        }
+        // FFN gather round-trips too
+        assert_eq!(layer.ffn.computed, plan.ffn.computed_tokens());
+        for (r, &p) in layer.ffn.rep_pos.iter().enumerate() {
+            assert_eq!(layer.ffn.computed[p as usize], plan.ffn.rep[r]);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "diagonal invariant")]
+    fn hostile_all_false_mask_row_fails_at_lowering() {
+        use crate::spls::qkv::HeadPlan;
+        use crate::spls::similarity::SimilarityMap;
+        use crate::util::mat::Mat;
+        let l = 6;
+        // row 2 keeps nothing — a corrupted plan the compiler must
+        // refuse rather than zero-fill
+        let mask = Mat::from_fn(l, l, |r, c| r != 2 && (c == r || c == 0));
+        let sim = SimilarityMap { rep: (0..l).collect(), window: 4 };
+        let head = HeadPlan::new(mask, sim);
+        let plan = LayerPlan {
+            heads: vec![head],
+            ffn: crate::spls::mfi::FfnPlan { rep: (0..l).collect() },
+        };
+        let _ = CompiledModelPlan::lower(&[plan]);
+    }
+
+    #[test]
+    fn parity_corridor_helper() {
+        assert!(within_parity_corridor(&[1.0, 2.0], &[1.0 + 5e-4, 2.0 - 5e-4], PARITY_EPS));
+        assert!(!within_parity_corridor(&[1.0], &[1.0 + 2e-3], PARITY_EPS));
+        assert!(!within_parity_corridor(&[1.0], &[1.0, 2.0], PARITY_EPS));
+    }
+}

@@ -174,6 +174,15 @@ pub fn masked_softmax_rows(x: &mut MatF, mask: &crate::util::mat::Mat<bool>) {
 
 /// One row of [`masked_softmax_rows`] (the decode engine's single-query
 /// form; identical op order, so decode stays bit-identical to prefill).
+///
+/// A fully-masked row zero-fills: this is the documented semantics of
+/// the **raw-mask** paths (`forward_masked` accepts arbitrary external
+/// f32 masks, which may legally zero a row, and the randomized parity
+/// suites pin the zero-fill bit-for-bit). Plan-compiled sparse
+/// execution must never reach this case — `spls::lower_mask_rows`
+/// asserts every critical row keeps ≥ 1 column at plan-lowering time
+/// (the diagonal invariant), so a fully-pruned row fails loudly at
+/// compile time instead of silently propagating zeros from here.
 pub fn masked_softmax_row(row: &mut [f32], mrow: &[bool]) {
     // hard assert: a keep-mask that disagrees with the score row must
     // fail at the fault site, not silently zip-truncate (the replaced

@@ -9,7 +9,11 @@
 //! * dense program  — `model::forward_dense` per sequence in the batch;
 //! * masked program — `model::forward_masked`: every row computes its
 //!   own Q under the (replicated) SPA mask, exactly like the Pallas
-//!   `masked_attention` kernel inside the compiled artifact.
+//!   `masked_attention` kernel inside the compiled artifact. The Spls
+//!   serving tier no longer routes through this program (it executes
+//!   the compiled CSR/gather sparse forward host-side — see
+//!   `model::sparse_plan`); the masked executables remain the AOT
+//!   parity surface and the masked bench cells.
 //!
 //! Execution runs on the packed engine (`model::engine::PackedModel` —
 //! packed once at load, shared by every executable and replica handle

@@ -28,8 +28,9 @@ pub use causal::{
 pub use mfi::{ffn_plan, FfnPlan, MfiVote};
 pub use plan::{
     plan_layer_causal,
-    computation_reduction, dense_layer_flops, dense_model_flops, plan_layer,
-    plan_layer_from_inputs, sparse_layer_flops, LayerFlops, LayerPlan,
+    computation_reduction, dense_layer_flops, dense_model_flops, keep_density,
+    lower_mask_rows, plan_layer, plan_layer_from_inputs, sparse_layer_flops, CsrRows,
+    LayerFlops, LayerPlan,
 };
 pub use plan_cache::{decode_bucket, seq_bucket, CacheStats, PlanCache, PlanKey, SharedPlanCache};
 pub use predict::{predict_attention, predict_matmul, predict_matmul_faithful, SjaProduct};

@@ -273,6 +273,71 @@ pub fn computation_reduction(
     )
 }
 
+/// CSR index structure for a set of kept attention rows: row `i` of the
+/// compacted problem keeps columns `col_indices[row_offsets[i] ..
+/// row_offsets[i+1]]`, ascending. Column ids are absolute token
+/// positions; `model::sparse_plan` re-bases them onto gathered K/V
+/// panels when it compiles a whole model plan.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CsrRows {
+    /// `rows.len() + 1` offsets into `col_indices`, monotone.
+    pub row_offsets: Vec<u32>,
+    /// Kept column positions, ascending within each row.
+    pub col_indices: Vec<u32>,
+}
+
+impl CsrRows {
+    pub fn nnz(&self) -> usize {
+        self.col_indices.len()
+    }
+}
+
+/// Lower the given `rows` of a boolean keep-mask into CSR form.
+///
+/// With `forbid_empty`, a row that keeps nothing panics: in a lowered
+/// SPLS plan every critical row keeps at least one column (bidirectional
+/// top-k keeps ⌈k·L⌉ ≥ 1 per row, the causal path force-includes the
+/// diagonal, decode force-keeps the newest slot), so an empty row here
+/// means a corrupted plan — failing loudly beats the silent zero-filled
+/// attention row `masked_softmax_row` would otherwise produce. The raw
+/// f32-mask path (`forward_masked`) deliberately does *not* route
+/// through this: arbitrary external masks may legally zero a row.
+pub fn lower_mask_rows(mask: &Mat<bool>, rows: &[usize], forbid_empty: bool) -> CsrRows {
+    let mut row_offsets = Vec::with_capacity(rows.len() + 1);
+    let mut col_indices = Vec::new();
+    row_offsets.push(0u32);
+    for &r in rows {
+        let before = col_indices.len();
+        for (c, &keep) in mask.row(r).iter().enumerate() {
+            if keep {
+                col_indices.push(c as u32);
+            }
+        }
+        if forbid_empty {
+            assert!(
+                col_indices.len() > before,
+                "plan lowering: attention row {r} keeps no columns — the \
+                 diagonal invariant (every kept row attends to at least \
+                 itself) is broken; refusing to compile a plan that would \
+                 silently zero-fill this row"
+            );
+        }
+        row_offsets.push(col_indices.len() as u32);
+    }
+    CsrRows { row_offsets, col_indices }
+}
+
+/// Fraction of dense model FLOPs the per-layer plans actually keep —
+/// the measured keep-density plotted on the BENCH_4 crossover x-axis
+/// (1 − keep_density is the paper's computation-reduction fraction,
+/// before prediction overhead).
+pub fn keep_density(cfg: &ModelConfig, plans: &[LayerPlan]) -> f64 {
+    assert_eq!(plans.len(), cfg.n_layers);
+    let dense = dense_model_flops(cfg).total();
+    let sparse: f64 = plans.iter().map(|p| sparse_layer_flops(cfg, p).total()).sum();
+    sparse / dense
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -371,6 +436,52 @@ mod tests {
         let bi = plan_layer(&pams, &spls);
         let ca = plan_layer_causal(&pams, &spls);
         assert!(ca.q_sparsity() <= bi.q_sparsity() + 0.15);
+    }
+
+    #[test]
+    fn lower_mask_rows_matches_hand_counted_csr() {
+        let mask = Mat::from_fn(4, 5, |r, c| match r {
+            0 => c == 0 || c == 3,      // ragged
+            1 => true,                  // full row
+            2 => c == 2,                // singleton
+            _ => false,                 // empty (never selected below)
+        });
+        let csr = lower_mask_rows(&mask, &[0, 1, 2], true);
+        assert_eq!(csr.row_offsets, vec![0, 2, 7, 8]);
+        assert_eq!(csr.col_indices, vec![0, 3, 0, 1, 2, 3, 4, 2]);
+        assert_eq!(csr.nnz(), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "diagonal invariant")]
+    fn lower_mask_rows_rejects_empty_row() {
+        let mask = Mat::from_fn(3, 3, |r, _| r != 1);
+        lower_mask_rows(&mask, &[0, 1, 2], true);
+    }
+
+    #[test]
+    fn lower_mask_rows_tolerates_empty_when_allowed() {
+        let mask: Mat<bool> = Mat::zeros(2, 4);
+        let csr = lower_mask_rows(&mask, &[0, 1], false);
+        assert_eq!(csr.row_offsets, vec![0, 0, 0]);
+        assert!(csr.col_indices.is_empty());
+    }
+
+    #[test]
+    fn keep_density_complements_reduction() {
+        let cfg = config::ModelConfig::new("tiny", 32, 64, 4, 2, 256, false);
+        let plans: Vec<LayerPlan> = (0..2)
+            .map(|i| plan_layer(&synth_pams(32, 4, 300 + i), &SplsConfig::default()))
+            .collect();
+        let kd = keep_density(&cfg, &plans);
+        assert!((0.0..=1.0).contains(&kd), "{kd}");
+        // keep_density is the pre-overhead complement of the Fig 15
+        // overall reduction
+        let dense = dense_model_flops(&cfg).total();
+        let overhead = prediction_overhead_ops(&cfg, &SplsConfig::default());
+        let (overall, ..) = computation_reduction(&cfg, &plans);
+        let expect = 1.0 - overall - overhead / dense;
+        assert!((kd - expect).abs() < 1e-12, "{kd} vs {expect}");
     }
 
     #[test]

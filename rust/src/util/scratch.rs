@@ -29,13 +29,15 @@ pub struct Scratch {
     /// LayerNorm output feeding QKV (L × D).
     pub h: MatF,
     /// Q / K / V activations (L × D dense; per-head shapes in sparse
-    /// and decode paths).
+    /// and decode paths — the compiled sparse path uses `k`/`v` as
+    /// compact panel × Dh gather buffers).
     pub q: MatF,
     pub k: MatF,
     pub v: MatF,
-    /// Transposed keys (D × L dense, Dh × L sparse).
+    /// Transposed keys (D × L, dense/causal blocks only).
     pub kt: MatF,
-    /// Attention scores (rows × L).
+    /// Attention scores (rows × L dense; the compiled sparse and masked
+    /// paths reuse it as the flat CSR value buffer, 1 × nnz).
     pub s: MatF,
     /// Concatenated attention output (L × D).
     pub att: MatF,
@@ -53,7 +55,8 @@ pub struct Scratch {
     pub mask: Mat<bool>,
     /// Single-row boolean mask (the decode step's keep/all-true mask).
     pub flags: Vec<bool>,
-    /// Row-index staging (critical-row positions, representative maps).
+    /// Index staging: kept-column gathers (masked block), kept-slot
+    /// gathers (gated decode), representative maps.
     pub idx: Vec<usize>,
     /// Pooled classifier features as a 1 × D matrix.
     pub pooled: MatF,

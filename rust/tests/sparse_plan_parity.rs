@@ -1,0 +1,310 @@
+//! Parity and structure suite for the sparse-plan compiler
+//! (`model::sparse_plan`) and the gather/CSR kernels it drives:
+//!
+//! * CSR lowering invariants over randomized ragged/band/full masks
+//!   (offsets monotone, columns ascending, empty rows forbidden);
+//! * a hostile all-false mask row fails **loudly** at plan lowering
+//!   (the diagonal invariant) instead of silently zero-filling;
+//! * compiled sparse execution is **bit-identical** to the unpacked
+//!   `model::forward_sparse` on hand-built band/ragged/full plans and
+//!   on randomized planned operating points;
+//! * the packed masked path stays bit-identical to the unpacked
+//!   `model::forward_masked` on random masks **including forced
+//!   fully-masked rows** (the raw-mask zero-fill tolerance is pinned);
+//! * cross-dataflow epsilon-corridor parity: with nothing gated,
+//!   `forward_sparse` and `forward_masked` are the same math through
+//!   different accumulation chains (bias-first per-head projection vs
+//!   full-width matmul + bias-after), and must agree on the classifier
+//!   logits within the documented [`PARITY_EPS`] bound.
+
+use std::sync::Arc;
+
+use esact::config::SplsConfig;
+use esact::model::weights::LayerWeights;
+use esact::model::{
+    forward_masked, forward_sparse, plan_model, within_parity_corridor, CompiledModelPlan,
+    PackedModel, TinyConfig, TinyWeights, PARITY_EPS,
+};
+use esact::quant::QuantMethod;
+use esact::spls::mfi::FfnPlan;
+use esact::spls::plan::{lower_mask_rows, LayerPlan};
+use esact::spls::qkv::HeadPlan;
+use esact::spls::similarity::SimilarityMap;
+use esact::util::mat::{Mat, MatF};
+use esact::util::rng::Xoshiro256pp;
+use esact::util::scratch::Scratch;
+
+fn rand_vec(rng: &mut Xoshiro256pp, n: usize, lo: f64, hi: f64) -> Vec<f32> {
+    (0..n).map(|_| (lo + rng.f64() * (hi - lo)) as f32).collect()
+}
+
+fn rand_mat(rng: &mut Xoshiro256pp, r: usize, c: usize) -> MatF {
+    MatF::from_vec(r, c, rand_vec(rng, r * c, -0.25, 0.25))
+}
+
+fn synth_weights(rng: &mut Xoshiro256pp, cfg: TinyConfig) -> TinyWeights {
+    let (d, f) = (cfg.d_model, cfg.d_ffn);
+    let layers = (0..cfg.n_layers)
+        .map(|_| LayerWeights {
+            wq: rand_mat(rng, d, d),
+            bq: rand_vec(rng, d, -0.1, 0.1),
+            wk: rand_mat(rng, d, d),
+            bk: rand_vec(rng, d, -0.1, 0.1),
+            wv: rand_mat(rng, d, d),
+            bv: rand_vec(rng, d, -0.1, 0.1),
+            wo: rand_mat(rng, d, d),
+            bo: rand_vec(rng, d, -0.1, 0.1),
+            ln1_g: rand_vec(rng, d, 0.8, 1.2),
+            ln1_b: rand_vec(rng, d, -0.1, 0.1),
+            w1: rand_mat(rng, d, f),
+            b1: rand_vec(rng, f, -0.1, 0.1),
+            w2: rand_mat(rng, f, d),
+            b2: rand_vec(rng, d, -0.1, 0.1),
+            ln2_g: rand_vec(rng, d, 0.8, 1.2),
+            ln2_b: rand_vec(rng, d, -0.1, 0.1),
+        })
+        .collect();
+    TinyWeights {
+        embed: rand_mat(rng, cfg.vocab, d),
+        pos: rand_mat(rng, cfg.seq_len, d),
+        layers,
+        lnf_g: rand_vec(rng, d, 0.8, 1.2),
+        lnf_b: rand_vec(rng, d, -0.1, 0.1),
+        cls_w: rand_mat(rng, d, cfg.n_classes),
+        cls_b: rand_vec(rng, cfg.n_classes, -0.1, 0.1),
+        cfg,
+    }
+}
+
+fn small_cfg() -> TinyConfig {
+    TinyConfig {
+        vocab: 32,
+        seq_len: 24,
+        d_model: 24,
+        n_heads: 3,
+        n_layers: 2,
+        d_ffn: 40,
+        n_classes: 5,
+    }
+}
+
+fn rand_tokens(rng: &mut Xoshiro256pp, l: usize, vocab: usize) -> Vec<i32> {
+    (0..l).map(|_| rng.below(vocab as u64) as i32).collect()
+}
+
+/// A hand-built mask pattern over an L×L head.
+enum Pattern {
+    /// Keep |r − c| ≤ w.
+    Band(usize),
+    /// Keep everything.
+    Full,
+    /// Random ragged rows (diagonal always kept).
+    Ragged,
+}
+
+fn build_mask(l: usize, p: &Pattern, rng: &mut Xoshiro256pp) -> Mat<bool> {
+    match p {
+        Pattern::Band(w) => Mat::from_fn(l, l, |r, c| r.abs_diff(c) <= *w),
+        Pattern::Full => Mat::from_fn(l, l, |_, _| true),
+        Pattern::Ragged => {
+            let mut m = Mat::from_fn(l, l, |_, _| rng.f64() < 0.3);
+            for r in 0..l {
+                m[(r, r)] = true; // diagonal invariant
+            }
+            m
+        }
+    }
+}
+
+/// Identity similarity (every row critical) or even-pairs similarity
+/// (odd rows recover from the even row below them, window 2).
+fn sim_map(l: usize, pairs: bool) -> SimilarityMap {
+    let rep = (0..l).map(|r| if pairs { r - (r % 2) } else { r }).collect();
+    SimilarityMap { rep, window: 2 }
+}
+
+fn hand_built_plans(cfg: &TinyConfig, pattern: Pattern, pairs: bool, seed: u64) -> Vec<LayerPlan> {
+    let l = cfg.seq_len;
+    let mut rng = Xoshiro256pp::new(seed);
+    (0..cfg.n_layers)
+        .map(|_| {
+            let heads = (0..cfg.n_heads)
+                .map(|_| HeadPlan::new(build_mask(l, &pattern, &mut rng), sim_map(l, pairs)))
+                .collect();
+            LayerPlan { heads, ffn: FfnPlan { rep: sim_map(l, pairs).rep } }
+        })
+        .collect()
+}
+
+#[test]
+fn csr_lowering_invariants_over_randomized_masks() {
+    let mut rng = Xoshiro256pp::new(0xc5a);
+    for l in [4usize, 9, 17, 32] {
+        for pattern in [Pattern::Band(2), Pattern::Full, Pattern::Ragged] {
+            let mask = build_mask(l, &pattern, &mut rng);
+            // a random ascending subset of rows (always non-empty)
+            let rows: Vec<usize> = (0..l).filter(|&r| r == 0 || rng.f64() < 0.6).collect();
+            let csr = lower_mask_rows(&mask, &rows, true);
+            assert_eq!(csr.row_offsets.len(), rows.len() + 1);
+            assert_eq!(csr.row_offsets[0], 0);
+            assert_eq!(*csr.row_offsets.last().unwrap() as usize, csr.nnz());
+            for (i, &r) in rows.iter().enumerate() {
+                let (b, e) = (csr.row_offsets[i] as usize, csr.row_offsets[i + 1] as usize);
+                assert!(e > b, "empty CSR row slipped through");
+                let cols = &csr.col_indices[b..e];
+                assert!(cols.windows(2).all(|w| w[0] < w[1]), "columns not ascending");
+                let want: Vec<u32> = (0..l as u32).filter(|&c| mask[(r, c as usize)]).collect();
+                assert_eq!(cols, &want[..], "row {r} columns diverge from mask");
+            }
+        }
+    }
+}
+
+#[test]
+#[should_panic(expected = "diagonal invariant")]
+fn hostile_all_false_row_fails_loudly_not_silently() {
+    // the bug this guards: masked_softmax_row silently zero-fills a
+    // fully-masked row; a compiled plan must refuse such a row instead
+    let mut mask = Mat::from_fn(8, 8, |r, c| r == c);
+    for c in 0..8 {
+        mask[(3, c)] = false; // hostile: row 3 keeps nothing
+    }
+    let _ = lower_mask_rows(&mask, &(0..8).collect::<Vec<_>>(), true);
+}
+
+#[test]
+fn compiled_sparse_bit_identical_on_hand_built_patterns() {
+    let mut rng = Xoshiro256pp::new(0xbead);
+    let cfg = small_cfg();
+    let w = Arc::new(synth_weights(&mut rng, cfg));
+    let pm = PackedModel::new(Arc::clone(&w));
+    let mut sc = Scratch::new();
+    let toks = rand_tokens(&mut rng, cfg.seq_len, cfg.vocab);
+    for (pattern, pairs, seed) in [
+        (Pattern::Band(2), false, 11u64),
+        (Pattern::Band(4), true, 12),
+        (Pattern::Full, false, 13),
+        (Pattern::Full, true, 14),
+        (Pattern::Ragged, false, 15),
+        (Pattern::Ragged, true, 16),
+    ] {
+        let plans = hand_built_plans(&cfg, pattern, pairs, seed);
+        // explicit two-step form: lower once, execute the compiled plan
+        let compiled = CompiledModelPlan::lower(&plans);
+        let got = pm.forward_sparse_compiled(&toks, &compiled, &mut sc);
+        let want = forward_sparse(&w, &toks, &plans);
+        assert_eq!(got, want, "compiled sparse diverged (pairs = {pairs})");
+        // the wrapper (lower + execute) must agree with itself too
+        assert_eq!(pm.forward_sparse(&toks, &plans, &mut sc), want);
+    }
+}
+
+#[test]
+fn packed_masked_zero_fill_tolerance_is_pinned_bitwise() {
+    // random external f32 masks with rows FORCED fully-masked: the
+    // raw-mask path must keep the documented zero-fill semantics and
+    // stay bit-identical to the unpacked reference (only plan-lowered
+    // execution rejects empty rows)
+    let mut rng = Xoshiro256pp::new(0x0f11);
+    let cfg = small_cfg();
+    let w = Arc::new(synth_weights(&mut rng, cfg));
+    let pm = PackedModel::new(Arc::clone(&w));
+    let mut sc = Scratch::new();
+    for trial in 0..4 {
+        let l = 3 + rng.below((cfg.seq_len - 3) as u64) as usize;
+        let toks = rand_tokens(&mut rng, l, cfg.vocab);
+        let mut masks: Vec<f32> = (0..cfg.n_layers * cfg.n_heads * l * l)
+            .map(|_| if rng.f64() < 0.4 { 0.0 } else { 1.0 })
+            .collect();
+        // force at least one fully-masked row per head
+        for head in 0..cfg.n_layers * cfg.n_heads {
+            let r = rng.below(l as u64) as usize;
+            let base = head * l * l + r * l;
+            masks[base..base + l].fill(0.0);
+        }
+        assert_eq!(
+            pm.forward_masked(&toks, &masks, &mut sc),
+            forward_masked(&w, &toks, &masks),
+            "masked path diverged on trial {trial} (L = {l})"
+        );
+    }
+}
+
+#[test]
+fn compiled_sparse_bit_identical_on_randomized_planned_points() {
+    // real planner output (band-ish SPA masks, similarity collapse,
+    // MFI-gated FFN) across random operating points — the compiled
+    // CSR execution must not change a bit of the unpacked reference
+    let mut rng = Xoshiro256pp::new(0x9e0);
+    let cfg = small_cfg();
+    let w = Arc::new(synth_weights(&mut rng, cfg));
+    let pm = PackedModel::new(Arc::clone(&w));
+    let mut sc = Scratch::new();
+    for _ in 0..6 {
+        let l = 4 + rng.below((cfg.seq_len - 4) as u64) as usize;
+        let toks = rand_tokens(&mut rng, l, cfg.vocab);
+        let spls = SplsConfig {
+            top_k: (0.05 + rng.f64() * 0.9) as f32,
+            sim_threshold: (rng.f64() * 1.2) as f32,
+            ffn_threshold: 1 + rng.below(3) as usize,
+            window: 2 + rng.below(8) as usize,
+        };
+        let plans = plan_model(&w, &toks, &spls, QuantMethod::Hlog);
+        assert_eq!(
+            pm.forward_sparse(&toks, &plans, &mut sc),
+            forward_sparse(&w, &toks, &plans),
+            "compiled sparse diverged at {spls:?} L {l}"
+        );
+    }
+}
+
+#[test]
+fn sparse_vs_masked_cross_dataflow_within_epsilon_corridor() {
+    // nothing gated: similarity off (identity rep), FFN skipping off —
+    // forward_sparse and forward_masked then compute the same math
+    // through different accumulation chains (bias-first per-head Q/K/V
+    // projection vs full-width matmul with bias after). The logits must
+    // agree within the documented reassociation corridor; bitwise
+    // equality is NOT expected here, which is exactly why the corridor
+    // mode exists alongside the bitwise suites.
+    let mut rng = Xoshiro256pp::new(0xe95);
+    let cfg = small_cfg();
+    let w = Arc::new(synth_weights(&mut rng, cfg));
+    let pm = PackedModel::new(Arc::clone(&w));
+    let mut sc = Scratch::new();
+    for trial in 0..4 {
+        let l = cfg.seq_len;
+        let toks = rand_tokens(&mut rng, l, cfg.vocab);
+        let spls = SplsConfig {
+            top_k: (0.2 + rng.f64() * 0.8) as f32,
+            sim_threshold: -1.0,          // no row collapses
+            ffn_threshold: usize::MAX,    // no FFN skips
+            window: 4,
+        };
+        let plans = plan_model(&w, &toks, &spls, QuantMethod::Hlog);
+        for plan in &plans {
+            for head in &plan.heads {
+                assert!(head.sim.critical_rows().len() == l, "identity sim expected");
+            }
+        }
+        // expand the plan masks to the [n_layers, n_heads, L, L] f32
+        // form the masked program consumes (rep is identity here)
+        let mut masks = Vec::with_capacity(cfg.n_layers * cfg.n_heads * l * l);
+        for plan in &plans {
+            for head in &plan.heads {
+                for r in 0..l {
+                    for c in 0..l {
+                        masks.push(if head.mask[(r, c)] { 1.0f32 } else { 0.0 });
+                    }
+                }
+            }
+        }
+        let sparse = pm.forward_sparse(&toks, &plans, &mut sc);
+        let masked = pm.forward_masked(&toks, &masks, &mut sc);
+        assert!(
+            within_parity_corridor(&sparse, &masked, PARITY_EPS),
+            "trial {trial}: cross-dataflow drift exceeds {PARITY_EPS}: \
+             sparse {sparse:?} vs masked {masked:?}"
+        );
+    }
+}

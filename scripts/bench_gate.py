@@ -16,7 +16,12 @@ Dispatches on the current report's `schema`:
   packed-must-beat-unpacked inversion check at seq_len ≥ 64 (target
   1.5×; fail below 1.15× to absorb runner noise, warn below 1.5×;
   warn-only when the runner has a single core, since the packed
-  engine's row-parallel kernels have nothing to fan out over there).
+  engine's row-parallel kernels have nothing to fan out over there),
+  plus the sparse-vs-dense crossover check: at every operating point
+  whose measured keep-density is at or below the baseline's
+  `crossover.keep_density_threshold`, the compiled CSR/gather sparse
+  forward must beat packed dense (fail below 0.85×, warn below 1.0×,
+  single-core warn-only — same noise policy as the other headlines).
 * schema 5 — the HTTP gateway bench's BENCH_5.json: per-(replicas,
   connections) closed-loop throughput floors, a connection-scaling
   inversion check (8 connections must not collapse below 75% of 1
@@ -26,9 +31,11 @@ Dispatches on the current report's `schema`:
   the whole stream's wall time (a gateway that buffers the stream
   fails it on any hardware).
 
-All compare against the same committed bench_baseline.json ("saturated"
-floors for schema 2, "decode" floors for schema 3, "forward" floors for
-schema 4).
+All compare against the same committed bench_baseline.json; the cell
+groups each schema reads are declared in BASELINE_GROUPS and validated
+up front — a baseline that lost a group (or doesn't list the report's
+schema under its "schemas" field) fails loudly instead of letting the
+gate silently pass with nothing to compare against.
 
 Baseline refresh: run the matching bench with ESACT_BENCH_JSON set on a
 quiet machine and copy the cells over, scaled down ~2x for CI headroom
@@ -41,6 +48,18 @@ import json
 import sys
 
 TOLERANCE = 0.85  # fail below 85% of the baseline floor
+
+# Baseline cell groups each report schema gates against. Validated
+# before dispatch: every listed group must be present in the committed
+# baseline, or the gate dies — `base.get(group, [])` fallbacks in the
+# per-schema checks exist only for row-level shape, never as license
+# for an absent group.
+BASELINE_GROUPS = {
+    2: ("saturated",),
+    3: ("decode",),
+    4: ("forward", "crossover"),
+    5: ("gateway", "streaming"),
+}
 
 
 def die(msg: str) -> None:
@@ -172,13 +191,17 @@ def check_decode(cur: dict, base: dict) -> list:
 
 def check_forward(cur: dict, base: dict) -> list:
     failures = []
-    for key in ("cores", "forward"):
+    for key in ("cores", "forward", "crossover"):
         if key not in cur:
             die(f"current report missing '{key}'")
     for row in cur["forward"]:
         for field in ("path", "seq_len", "unpacked_tps", "packed_tps", "speedup"):
             if field not in row:
                 die(f"forward row missing '{field}': {row}")
+    for row in cur["crossover"]:
+        for field in ("op", "keep_density", "sparse_tps", "dense_tps", "speedup"):
+            if field not in row:
+                die(f"crossover row missing '{field}': {row}")
 
     current = {(r["path"], r["seq_len"]): r for r in cur["forward"]}
     print(f"{'cell':<16} {'baseline':>10} {'current':>10} {'floor':>10}  verdict")
@@ -228,6 +251,48 @@ def check_forward(cur: dict, base: dict) -> list:
             print(f"  ! warning: speedup {sp:.2f}x below the 1.5x target (within tolerance)")
     if not checked:
         failures.append("report lacks forward cells at seq_len >= 64")
+
+    # crossover: past the documented sparsity level, the compiled
+    # CSR/gather sparse forward must beat packed dense — this is the
+    # sparse-slower-than-dense inversion the plan compiler exists to
+    # keep dead. Points above the threshold (e.g. the nothing-pruned
+    # "open" operating point) are printed for the curve but not gated.
+    threshold = base.get("crossover", {}).get("keep_density_threshold")
+    if threshold is None:
+        die("baseline 'crossover' group lacks 'keep_density_threshold'")
+    gated = False
+    for row in cur["crossover"]:
+        kd, sp = row["keep_density"], row["speedup"]
+        inside = kd <= threshold
+        verdict = "wins" if sp > 1.0 else "LOSES"
+        scope = "gated" if inside else "above threshold, informational"
+        print(
+            f"sparse vs dense @ {row['op']} keep-density {kd:.3f}: "
+            f"{sp:.2f}x ({verdict}; {scope})"
+        )
+        if not inside:
+            continue
+        gated = True
+        if not multicore:
+            if sp < 1.0:
+                print(
+                    f"  ! warning: sparse loses ({sp:.2f}x) on a single-core "
+                    "runner (row-parallel kernels idle; not gated)"
+                )
+            continue
+        if sp < 0.85:
+            failures.append(
+                f"sparse forward loses to dense at keep-density {kd:.3f} "
+                f"(<= threshold {threshold}): {sp:.2f}x — the "
+                "sparse-slower-than-dense inversion is back"
+            )
+        elif sp < 1.0:
+            print(f"  ! warning: speedup {sp:.2f}x < 1 (within noise tolerance)")
+    if not gated:
+        failures.append(
+            f"report lacks crossover cells at keep-density <= {threshold} — "
+            "nothing exercises the sparse-must-win region"
+        )
     return failures
 
 
@@ -329,16 +394,35 @@ def main() -> None:
         base = json.load(f)
 
     schema = cur.get("schema")
+    if schema not in BASELINE_GROUPS:
+        die(f"unknown report schema {schema!r}")
+
+    # the baseline must explicitly declare the schemas it gates and
+    # carry every cell group this schema reads — a stale or truncated
+    # baseline must fail loudly, not let the gate pass over nothing
+    declared = base.get("schemas")
+    if not isinstance(declared, list) or schema not in declared:
+        die(
+            f"baseline does not declare schema {schema} under 'schemas' "
+            f"(found {declared!r}); a lone top-level 'schema' field is a "
+            "report's self-description, not a baseline's — list every "
+            "gated schema in the 'schemas' array"
+        )
+    for group in BASELINE_GROUPS[schema]:
+        if group not in base:
+            die(
+                f"baseline is missing its '{group}' cell group for "
+                f"schema {schema} — nothing to gate against"
+            )
+
     if schema == 2:
         failures = check_serving(cur, base)
     elif schema == 3:
         failures = check_decode(cur, base)
     elif schema == 4:
         failures = check_forward(cur, base)
-    elif schema == 5:
-        failures = check_gateway(cur, base)
     else:
-        die(f"unknown report schema {schema!r}")
+        failures = check_gateway(cur, base)
 
     if failures:
         for f in failures:
