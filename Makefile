@@ -30,8 +30,10 @@ bench-forward:
 bench-gateway:
 	ESACT_BENCH_JSON=$(CURDIR)/BENCH_5.json cargo bench --bench gateway
 
-# What CI's bench-regression job runs after the benches.
+# What CI's bench-regression job runs after the benches (the gate's
+# own self-test first, so a broken gate can't silently pass).
 bench-gate: bench-serving bench-decode bench-forward bench-gateway
+	python3 scripts/test_bench_gate.py
 	python3 scripts/bench_gate.py BENCH_2.json bench_baseline.json
 	python3 scripts/bench_gate.py BENCH_3.json bench_baseline.json
 	python3 scripts/bench_gate.py BENCH_4.json bench_baseline.json

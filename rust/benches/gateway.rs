@@ -12,13 +12,26 @@
 //! stream's wall time — near 1.0 would mean the gateway buffered the
 //! stream instead of chunking it out as tokens were produced, however
 //! fast the machine is.
+//!
+//! The event-loop rewrite adds two more groups: a `conn_sweep` holding
+//! {64, 256, 1024} idle keep-alive connections while 4 active
+//! connections run the closed loop (per-idle-connection memory must
+//! stay flat and throughput must not invert as the herd grows), and a
+//! `slow_loris` cell where half-open connections trickle bytes and the
+//! gateway must reap every one of them on the idle timer while real
+//! traffic keeps flowing.
 
 use std::fmt::Write as _;
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use esact::config::SplsConfig;
 use esact::coordinator::{Mode, Server};
-use esact::net::client::{closed_loop_classify, generate_body, poisson_classify, HttpClient};
+use esact::net::client::{
+    closed_loop_classify, generate_body, metric_value, open_lorises, poisson_classify,
+    HttpClient, IdleConns,
+};
+use esact::net::poll::raise_nofile_limit;
 use esact::net::{Gateway, GatewayConfig};
 use esact::util::rng::Xoshiro256pp;
 
@@ -66,17 +79,49 @@ fn request_pool(l: usize, distinct: usize) -> Vec<Vec<i32>> {
 }
 
 fn start_gateway(replicas: usize, steps_per_slice: usize) -> anyhow::Result<(Gateway, String)> {
+    start_gateway_with(replicas, steps_per_slice, Duration::from_secs(60))
+}
+
+fn start_gateway_with(
+    replicas: usize,
+    steps_per_slice: usize,
+    idle_timeout: Duration,
+) -> anyhow::Result<(Gateway, String)> {
     let dir = esact::util::artifacts_dir();
     let srv = Arc::new(Server::new(&dir, Mode::Dense, SplsConfig::default())?);
-    let cfg = GatewayConfig {
-        replicas,
-        max_conns: 16,
-        steps_per_slice,
-        ..Default::default()
-    };
+    // max_conns bounds concurrent *sockets* on the event loop — the
+    // sweep below parks 1024 idle connections on one gateway
+    let cfg = GatewayConfig::builder()
+        .replicas(replicas)
+        .max_conns(2048)
+        .steps_per_slice(steps_per_slice)
+        .idle_timeout(idle_timeout)
+        .build()?;
     let gw = Gateway::start(srv, cfg)?;
     let addr = gw.local_addr().to_string();
     Ok((gw, addr))
+}
+
+/// Resident set of this process (gateway + held client sockets live in
+/// the same address space) in kB, from /proc/self/status.
+fn rss_kb() -> anyhow::Result<f64> {
+    let status = std::fs::read_to_string("/proc/self/status")?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmRSS:") {
+            if let Some(kb) = rest.split_whitespace().next() {
+                return Ok(kb.parse::<f64>()?);
+            }
+        }
+    }
+    anyhow::bail!("no VmRSS row in /proc/self/status")
+}
+
+struct SweepCell {
+    idle_conns: usize,
+    throughput_rps: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    rss_kb: f64,
 }
 
 fn main() -> anyhow::Result<()> {
@@ -168,6 +213,84 @@ fn main() -> anyhow::Result<()> {
          ttft {ttft_ms:.1} ms (frac {ttft_frac:.2})"
     );
 
+    // --- C10K conn sweep: idle herd + 4 active connections ----------
+    // one gateway holds a growing herd of idle keep-alive connections
+    // while 4 active connections run the closed loop: throughput must
+    // not invert as the herd grows, the marginal memory per idle
+    // connection must stay flat, and the oldest held sockets must
+    // still answer requests at the top of the sweep
+    let _ = raise_nofile_limit(4096);
+    println!("== HTTP conn sweep (1 replica, 4 active conns, growing idle herd) ==");
+    let sweep_sizes = [64usize, 256, 1024];
+    let (gw, addr) = start_gateway(1, 4)?;
+    let mut herds: Vec<IdleConns> = Vec::new();
+    let mut held = 0usize;
+    let mut sweep: Vec<SweepCell> = Vec::new();
+    for &target in &sweep_sizes {
+        herds.push(IdleConns::open(&addr, target - held)?);
+        held = target;
+        // let the event loop accept and register the whole herd
+        std::thread::sleep(Duration::from_millis(100));
+        let rss = rss_kb()?;
+        let report = closed_loop_classify(&addr, 4, n_per_cell, &pool)?;
+        assert_eq!(report.errors, 0, "closed loop must not error under the idle herd");
+        let cell = SweepCell {
+            idle_conns: target,
+            throughput_rps: report.throughput_rps(),
+            p50_ms: report.p50_ms(),
+            p99_ms: report.p99_ms(),
+            rss_kb: rss,
+        };
+        println!(
+            "  {:>5} idle conns: {:>7.1} rps | p50 {:>6.2} ms p99 {:>6.2} ms | rss {:.0} kB",
+            cell.idle_conns, cell.throughput_rps, cell.p50_ms, cell.p99_ms, cell.rss_kb
+        );
+        sweep.push(cell);
+    }
+    // marginal memory per idle connection across the sweep's span (the
+    // allocator may hand back reused pages, so clamp at zero)
+    let span = (sweep_sizes[sweep_sizes.len() - 1] - sweep_sizes[0]) as f64;
+    let idle_kb_per_conn =
+        ((sweep[sweep.len() - 1].rss_kb - sweep[0].rss_kb) / span).max(0.0);
+    // the oldest herd was parked through the whole sweep — every one of
+    // its sockets must still complete a request
+    let oldest = herds[0].len();
+    let alive = herds[0].probe_all()?;
+    assert_eq!(alive, oldest, "only {alive}/{oldest} of the oldest idle conns still serve");
+    println!(
+        "  idle memory: {idle_kb_per_conn:.1} kB/conn marginal | oldest {oldest} conns all alive"
+    );
+    drop(herds);
+    gw.shutdown()?;
+
+    // --- slow loris: half-open conns must be reaped, traffic flows --
+    println!("== HTTP slow-loris (1 replica, 300 ms idle timeout, 32 lorises) ==");
+    let n_lorises = 32usize;
+    let (gw, addr) = start_gateway_with(1, 4, Duration::from_millis(300))?;
+    let lorises = open_lorises(&addr, n_lorises)?;
+    // real traffic keeps flowing while the lorises squat
+    let loris_report = closed_loop_classify(&addr, 4, n_per_cell, &pool)?;
+    assert_eq!(loris_report.errors, 0, "closed loop must not error under loris pressure");
+    // the idle timer must reap every loris (they never complete a
+    // request, so idle expiry counts from the connection's start)
+    let mut probe = HttpClient::connect(&addr)?;
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let mut reaped = 0usize;
+    while Instant::now() < deadline {
+        reaped = metric_value(&mut probe, "esact_gateway_conns_reaped_total")?
+            .unwrap_or(0.0) as usize;
+        if reaped >= n_lorises {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    println!(
+        "  {reaped}/{n_lorises} lorises reaped | {:.1} rps under loris pressure",
+        loris_report.throughput_rps()
+    );
+    drop(lorises);
+    gw.shutdown()?;
+
     // --- machine-readable report for the CI gate --------------------
     if let Ok(path) = std::env::var("ESACT_BENCH_JSON") {
         let mut out = String::from("{\n  \"schema\": 5,\n");
@@ -188,7 +311,30 @@ fn main() -> anyhow::Result<()> {
             out,
             "  \"streaming\": {{\"sessions\": 4, \"tokens\": {tokens}, \
              \"ttft_ms\": {ttft_ms:.3}, \"ttft_frac\": {ttft_frac:.3}, \
-             \"tokens_per_sec\": {stream_tps:.2}}}"
+             \"tokens_per_sec\": {stream_tps:.2}}},"
+        );
+        let sweep_json = sweep
+            .iter()
+            .map(|c| {
+                format!(
+                    "{{\"idle_conns\": {}, \"throughput_rps\": {:.2}, \
+                     \"p50_ms\": {:.3}, \"p99_ms\": {:.3}, \"rss_kb\": {:.0}}}",
+                    c.idle_conns, c.throughput_rps, c.p50_ms, c.p99_ms, c.rss_kb
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(",\n      ");
+        let _ = writeln!(
+            out,
+            "  \"conn_sweep\": {{\"active_conns\": 4, \
+             \"idle_kb_per_conn\": {idle_kb_per_conn:.2}, \"cells\": [\n      \
+             {sweep_json}\n  ]}},"
+        );
+        let _ = writeln!(
+            out,
+            "  \"slow_loris\": {{\"lorises\": {n_lorises}, \"reaped\": {reaped}, \
+             \"throughput_rps\": {:.2}}}",
+            loris_report.throughput_rps()
         );
         out.push_str("}\n");
         std::fs::write(&path, out)?;

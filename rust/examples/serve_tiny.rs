@@ -39,13 +39,14 @@ fn main() -> anyhow::Result<()> {
         // POST /admin/shutdown (or Ctrl-C)
         use esact::net::{Gateway, GatewayConfig};
         let srv = std::sync::Arc::new(Server::new(dir, Mode::Spls, SplsConfig::default())?);
-        let cfg = GatewayConfig {
-            addr: std::env::var("ESACT_HTTP_ADDR")
-                .unwrap_or_else(|_| "127.0.0.1:8080".to_string()),
-            replicas,
-            mode: Mode::Spls,
-            ..Default::default()
-        };
+        let cfg = GatewayConfig::builder()
+            .addr(
+                std::env::var("ESACT_HTTP_ADDR")
+                    .unwrap_or_else(|_| "127.0.0.1:8080".to_string()),
+            )
+            .replicas(replicas)
+            .mode(Mode::Spls)
+            .build()?;
         let l = srv.seq_len();
         let gateway = Gateway::start(srv, cfg)?;
         let addr = gateway.local_addr();

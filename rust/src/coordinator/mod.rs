@@ -17,6 +17,7 @@ pub use loadgen::{arrivals, trace_stats, Arrival, TraceStats};
 pub use partition::{partition_workload, ClusterAssignment, WorkItem};
 pub use replica::{ReplicaMetrics, WorkQueue};
 pub use server::{
-    replica_rows, GenChunk, GenRequest, GenTask, GenerateMetrics, GenerateOutcome, MetricRow,
-    Mode, Reply, ServeMetrics, ServeOutcome, Server, TierSnapshot,
+    replica_rows, Completion, GenChunk, GenRequest, GenTask, GenerateMetrics, GenerateOutcome,
+    MetricRow, Mode, Reply, ServeMetrics, ServeOutcome, Server, Submission, SubmitError, Tier,
+    TierConfig, TierHandle, TierSnapshot,
 };

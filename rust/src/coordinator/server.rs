@@ -15,10 +15,13 @@
 //! Single-process deployment with std threads + channels (no tokio in
 //! the vendored crate set — see DESIGN.md §Environment).
 
+use std::collections::VecDeque;
 use std::fmt;
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
+use std::thread;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
@@ -1038,6 +1041,348 @@ impl GenLeader {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Unified tier submission API
+// ---------------------------------------------------------------------------
+
+/// One unit of work submitted to the tier through [`TierHandle`] —
+/// classify and generate ride the same admission/dispatch code path
+/// (they fan out to the two leader lanes internally, mirroring the
+/// replica-level `Job` enum).
+#[derive(Clone, Debug)]
+pub enum Submission {
+    Classify {
+        tokens: Vec<i32>,
+    },
+    Generate {
+        prompt: Vec<i32>,
+        max_new: usize,
+        sampling: Sampling,
+    },
+}
+
+/// One completed (or partially streamed) unit of work, delivered
+/// through [`TierHandle::take_completions`] after a notify wakeup.
+#[derive(Clone, Debug)]
+pub enum Completion {
+    /// Final answer of a `Submission::Classify`.
+    Classify {
+        id: u64,
+        logits: Vec<f32>,
+        latency: Duration,
+    },
+    /// One streamed slice of a `Submission::Generate`; `done` marks
+    /// the last.
+    Generate {
+        id: u64,
+        tokens: Vec<i32>,
+        done: bool,
+    },
+}
+
+/// Why [`TierHandle::submit`] refused a batch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// A lane's admission bound is full — the same bound the leader
+    /// enforces (`BatchPolicy::max_queue` / `max_sessions`), so the
+    /// frontend should shed (429 + Retry-After), not queue.
+    Saturated,
+    /// The tier is draining or stopped (503).
+    Closed,
+}
+
+/// Knobs for [`Tier::start`].
+#[derive(Clone, Copy, Debug)]
+pub struct TierConfig {
+    pub policy: BatchPolicy,
+    pub decode: DecodeConfig,
+    pub replicas: usize,
+    pub steps_per_slice: usize,
+    /// Admission bound of the generate lane (live sessions).
+    pub max_sessions: usize,
+}
+
+/// The submit/complete face of a running tier. Frontends hold this:
+/// admission-bounded `submit`, completions drained from one queue, an
+/// optional `notify` callback fired on every completion so an event
+/// loop can park in `epoll_wait` and be woken (eventfd) instead of
+/// blocking a thread per in-flight request.
+pub struct TierHandle {
+    classify_tx: Mutex<Option<mpsc::Sender<Request>>>,
+    generate_tx: Mutex<Option<mpsc::Sender<GenRequest>>>,
+    classify_in_flight: AtomicUsize,
+    generate_in_flight: AtomicUsize,
+    classify_bound: usize,
+    generate_bound: usize,
+    next_id: AtomicU64,
+    completions: Mutex<VecDeque<Completion>>,
+    notify: Mutex<Option<Box<dyn Fn() + Send + Sync>>>,
+}
+
+impl TierHandle {
+    fn new(
+        classify_tx: mpsc::Sender<Request>,
+        generate_tx: mpsc::Sender<GenRequest>,
+        classify_bound: usize,
+        generate_bound: usize,
+    ) -> TierHandle {
+        TierHandle {
+            classify_tx: Mutex::new(Some(classify_tx)),
+            generate_tx: Mutex::new(Some(generate_tx)),
+            classify_in_flight: AtomicUsize::new(0),
+            generate_in_flight: AtomicUsize::new(0),
+            classify_bound,
+            generate_bound,
+            next_id: AtomicU64::new(0),
+            completions: Mutex::new(VecDeque::new()),
+            notify: Mutex::new(None),
+        }
+    }
+
+    /// Install the completion wakeup (e.g. an eventfd `Waker::wake`).
+    /// Fired after every completion is queued.
+    pub fn set_notify(&self, f: impl Fn() + Send + Sync + 'static) {
+        *self.notify.lock().unwrap() = Some(Box::new(f));
+    }
+
+    /// Submitted-but-uncompleted classify jobs (a reply releases one).
+    pub fn classify_in_flight(&self) -> usize {
+        self.classify_in_flight.load(Ordering::SeqCst)
+    }
+
+    /// Live generate sessions (a `done` chunk releases one).
+    pub fn generate_in_flight(&self) -> usize {
+        self.generate_in_flight.load(Ordering::SeqCst)
+    }
+
+    /// Nothing in flight on either lane (the drain condition).
+    pub fn idle(&self) -> bool {
+        self.classify_in_flight() == 0 && self.generate_in_flight() == 0
+    }
+
+    pub fn classify_bound(&self) -> usize {
+        self.classify_bound
+    }
+
+    pub fn generate_bound(&self) -> usize {
+        self.generate_bound
+    }
+
+    fn try_admit(counter: &AtomicUsize, n: usize, bound: usize) -> bool {
+        counter
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |cur| {
+                if cur + n <= bound {
+                    Some(cur + n)
+                } else {
+                    None
+                }
+            })
+            .is_ok()
+    }
+
+    /// Admit and dispatch a batch atomically: per-lane all-or-nothing
+    /// admission at the leaders' real bounds, then every item sent
+    /// while holding the lane senders (a concurrent [`close`] cannot
+    /// interleave mid-batch). Returns the job ids, in submission
+    /// order; completions carry them back.
+    ///
+    /// [`close`]: TierHandle::close
+    pub fn submit(&self, batch: Vec<Submission>) -> Result<Vec<u64>, SubmitError> {
+        let k_classify = batch
+            .iter()
+            .filter(|s| matches!(s, Submission::Classify { .. }))
+            .count();
+        let k_generate = batch.len() - k_classify;
+        if k_classify > 0
+            && !Self::try_admit(&self.classify_in_flight, k_classify, self.classify_bound)
+        {
+            return Err(SubmitError::Saturated);
+        }
+        if k_generate > 0
+            && !Self::try_admit(&self.generate_in_flight, k_generate, self.generate_bound)
+        {
+            if k_classify > 0 {
+                self.classify_in_flight.fetch_sub(k_classify, Ordering::SeqCst);
+            }
+            return Err(SubmitError::Saturated);
+        }
+
+        let ids: Vec<u64> = (0..batch.len())
+            .map(|_| self.next_id.fetch_add(1, Ordering::SeqCst))
+            .collect();
+        let arrived = Instant::now();
+        let ctx = self.classify_tx.lock().unwrap();
+        let gtx = self.generate_tx.lock().unwrap();
+        let (mut sent_classify, mut sent_generate) = (0usize, 0usize);
+        let mut ok = true;
+        for (sub, id) in batch.into_iter().zip(&ids) {
+            match sub {
+                Submission::Classify { tokens } => {
+                    ok = ctx
+                        .as_ref()
+                        .map(|tx| tx.send(Request { id: *id, tokens, arrived }).is_ok())
+                        .unwrap_or(false);
+                    sent_classify += ok as usize;
+                }
+                Submission::Generate { prompt, max_new, sampling } => {
+                    ok = gtx
+                        .as_ref()
+                        .map(|tx| {
+                            tx.send(GenRequest {
+                                id: *id,
+                                prompt,
+                                max_new,
+                                sampling,
+                                arrived,
+                            })
+                            .is_ok()
+                        })
+                        .unwrap_or(false);
+                    sent_generate += ok as usize;
+                }
+            }
+            if !ok {
+                break;
+            }
+        }
+        drop(gtx);
+        drop(ctx);
+        if !ok {
+            // lanes closed under us: hand back the admission the
+            // unsent items took; anything already sent releases
+            // through its completion as usual
+            if k_classify > sent_classify {
+                self.classify_in_flight
+                    .fetch_sub(k_classify - sent_classify, Ordering::SeqCst);
+            }
+            if k_generate > sent_generate {
+                self.generate_in_flight
+                    .fetch_sub(k_generate - sent_generate, Ordering::SeqCst);
+            }
+            return Err(SubmitError::Closed);
+        }
+        Ok(ids)
+    }
+
+    /// Drain queued completions into `out` (appends; does not block).
+    pub fn take_completions(&self, out: &mut Vec<Completion>) {
+        let mut q = self.completions.lock().unwrap();
+        out.extend(q.drain(..));
+    }
+
+    /// Close both lanes: the leaders see end-of-input (and exit once
+    /// their queues drain), and every later `submit` answers
+    /// [`SubmitError::Closed`]. Idempotent.
+    pub fn close(&self) {
+        self.classify_tx.lock().unwrap().take();
+        self.generate_tx.lock().unwrap().take();
+    }
+
+    fn push(&self, c: Completion) {
+        self.completions.lock().unwrap().push_back(c);
+        if let Some(f) = self.notify.lock().unwrap().as_ref() {
+            f();
+        }
+    }
+}
+
+/// A running serving tier: both leader lanes (classify via
+/// [`Server::serve_replicated`], generate via
+/// [`Server::serve_generate`]) plus the completion pumps that feed the
+/// shared [`TierHandle`] queue and release admission.
+pub struct Tier {
+    handle: Arc<TierHandle>,
+    classify_leader: thread::JoinHandle<Result<ServeOutcome>>,
+    generate_leader: thread::JoinHandle<Result<GenerateOutcome>>,
+    pumps: Vec<thread::JoinHandle<()>>,
+}
+
+impl Tier {
+    pub fn start(server: Arc<Server>, cfg: TierConfig) -> Result<Tier> {
+        let replicas = cfg.replicas.max(1);
+        let (creq_tx, creq_rx) = mpsc::channel();
+        let (crep_tx, crep_rx) = mpsc::channel::<Reply>();
+        let (greq_tx, greq_rx) = mpsc::channel();
+        let (gchk_tx, gchk_rx) = mpsc::channel::<GenChunk>();
+        let handle = Arc::new(TierHandle::new(
+            creq_tx,
+            greq_tx,
+            cfg.policy.max_queue,
+            cfg.max_sessions,
+        ));
+
+        let srv = Arc::clone(&server);
+        let policy = cfg.policy;
+        let classify_leader = thread::Builder::new()
+            .name("esact-tier-classify".into())
+            .spawn(move || srv.serve_replicated(creq_rx, crep_tx, policy, replicas))?;
+
+        let srv = Arc::clone(&server);
+        let (decode, steps) = (cfg.decode, cfg.steps_per_slice);
+        let generate_leader = thread::Builder::new()
+            .name("esact-tier-generate".into())
+            .spawn(move || srv.serve_generate(greq_rx, gchk_tx, decode, replicas, steps))?;
+
+        let h = Arc::clone(&handle);
+        let classify_pump = thread::Builder::new()
+            .name("esact-tier-cpump".into())
+            .spawn(move || {
+                for reply in crep_rx.iter() {
+                    h.classify_in_flight.fetch_sub(1, Ordering::SeqCst);
+                    h.push(Completion::Classify {
+                        id: reply.id,
+                        logits: reply.logits,
+                        latency: reply.latency,
+                    });
+                }
+            })?;
+        let h = Arc::clone(&handle);
+        let generate_pump = thread::Builder::new()
+            .name("esact-tier-gpump".into())
+            .spawn(move || {
+                for chunk in gchk_rx.iter() {
+                    if chunk.done {
+                        h.generate_in_flight.fetch_sub(1, Ordering::SeqCst);
+                    }
+                    h.push(Completion::Generate {
+                        id: chunk.id,
+                        tokens: chunk.tokens,
+                        done: chunk.done,
+                    });
+                }
+            })?;
+
+        Ok(Tier {
+            handle,
+            classify_leader,
+            generate_leader,
+            pumps: vec![classify_pump, generate_pump],
+        })
+    }
+
+    pub fn handle(&self) -> Arc<TierHandle> {
+        Arc::clone(&self.handle)
+    }
+
+    /// Join leaders and pumps. Call after [`TierHandle::close`] —
+    /// otherwise the leaders never see end-of-input. Returns both
+    /// outcomes (metrics + first replica error, if any).
+    pub fn join(self) -> (Result<ServeOutcome>, Result<GenerateOutcome>) {
+        let classify = self
+            .classify_leader
+            .join()
+            .unwrap_or_else(|_| Err(anyhow::anyhow!("classify leader panicked")));
+        let generate = self
+            .generate_leader
+            .join()
+            .unwrap_or_else(|_| Err(anyhow::anyhow!("generate leader panicked")));
+        for p in self.pumps {
+            let _ = p.join();
+        }
+        (classify, generate)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1467,5 +1812,93 @@ mod tests {
             thi > t1 * 1.1,
             "{n_hi} replicas ({thi:.0} rps) must out-serve 1 replica ({t1:.0} rps)"
         );
+    }
+
+    #[test]
+    fn tier_handle_routes_mixed_submissions_through_one_path() {
+        use crate::decode::{DecodeConfig, Sampling};
+        use std::sync::mpsc::channel;
+
+        let srv =
+            Arc::new(Server::new(&artifacts_dir(), Mode::Dense, SplsConfig::default()).unwrap());
+        let policy = BatchPolicy { max_queue: 4, ..Default::default() };
+        let tier = Tier::start(
+            Arc::clone(&srv),
+            TierConfig {
+                policy,
+                decode: DecodeConfig::default(),
+                replicas: 1,
+                steps_per_slice: 2,
+                max_sessions: 2,
+            },
+        )
+        .unwrap();
+        let handle = tier.handle();
+
+        // completion notify fires on a plain channel here; the gateway
+        // installs an eventfd waker through the same hook
+        let (ntx, nrx) = channel();
+        handle.set_notify(move || {
+            let _ = ntx.send(());
+        });
+
+        // a mixed batch: two classifies + one 3-token generation
+        let seqs = gen_requests(2);
+        let prompt: Vec<i32> = seqs[0].tokens[..8].to_vec();
+        let ids = handle
+            .submit(vec![
+                Submission::Classify { tokens: seqs[0].tokens.clone() },
+                Submission::Classify { tokens: seqs[1].tokens.clone() },
+                Submission::Generate { prompt, max_new: 3, sampling: Sampling::Greedy },
+            ])
+            .unwrap();
+        assert_eq!(ids.len(), 3);
+        assert!(handle.classify_in_flight() <= 2);
+
+        // admission bound is real: a 5-classify batch exceeds max_queue
+        let fat: Vec<Submission> = (0..5)
+            .map(|_| Submission::Classify { tokens: seqs[0].tokens.clone() })
+            .collect();
+        assert_eq!(handle.submit(fat), Err(SubmitError::Saturated));
+
+        let mut done = std::collections::HashMap::new();
+        let mut gen_tokens = Vec::new();
+        let deadline = Instant::now() + Duration::from_secs(30);
+        let mut completions = Vec::new();
+        while done.len() < 3 {
+            assert!(Instant::now() < deadline, "tier completions stalled");
+            let _ = nrx.recv_timeout(Duration::from_millis(200));
+            handle.take_completions(&mut completions);
+            for c in completions.drain(..) {
+                match c {
+                    Completion::Classify { id, logits, .. } => {
+                        assert_eq!(logits.len(), 16);
+                        done.insert(id, ());
+                    }
+                    Completion::Generate { id, tokens, done: d } => {
+                        assert_eq!(id, ids[2]);
+                        gen_tokens.extend(tokens);
+                        if d {
+                            done.insert(id, ());
+                        }
+                    }
+                }
+            }
+        }
+        assert_eq!(gen_tokens.len(), 3);
+        assert!(handle.idle(), "all admission released on completion");
+
+        // closed lanes refuse work, then join returns both outcomes
+        handle.close();
+        assert_eq!(
+            handle.submit(vec![Submission::Classify { tokens: seqs[0].tokens.clone() }]),
+            Err(SubmitError::Closed)
+        );
+        let (classify, generate) = tier.join();
+        let classify = classify.unwrap();
+        let generate = generate.unwrap();
+        assert_eq!(classify.metrics.requests, 2);
+        assert_eq!(generate.metrics.sessions, 1);
+        assert_eq!(generate.metrics.tokens, 3);
     }
 }

@@ -14,7 +14,7 @@ use esact::coordinator::{BatchPolicy, GenRequest, Request};
 use esact::coordinator::Server;
 use esact::decode::{DecodeConfig, DecodeMode, Sampling};
 use esact::model;
-use esact::net::client::{classify_body, generate_body, HttpClient};
+use esact::net::client::{classify_body, generate_body, HttpClient, IdleConns};
 use esact::net::{Gateway, GatewayConfig};
 use esact::quant::QuantMethod;
 use esact::report::{figures, tables};
@@ -33,13 +33,17 @@ USAGE:
                               on a replicated worker tier (default 1)
   esact serve [dense|spls] [replicas] --http <addr> [--max-conns N]
                  [--max-queue Q]
-                              expose the replicated tier over HTTP/1.1:
-                              POST /v1/classify, POST /v1/generate (chunked
+                              expose the replicated tier over HTTP/1.1 on a
+                              single-threaded epoll event loop: POST
+                              /v1/classify, POST /v1/generate (chunked
                               streaming), GET /metrics, GET /healthz; drain
-                              with POST /admin/shutdown
-  esact http-check <addr> [--shutdown]
+                              with POST /admin/shutdown. --max-conns bounds
+                              concurrent sockets (default 1024), not threads
+  esact http-check <addr> [--shutdown] [--idle-churn N]
                               probe a running gateway end to end (healthz,
                               classify, generate stream, metrics); with
+                              --idle-churn N, hold N idle keep-alive
+                              connections and churn them while probing; with
                               --shutdown, drain it afterwards
   esact generate [n] [dense|spls] [replicas] [--kv-budget B] [--prefix P]
                  [--new T] [--sample-topk K] [--seed S]
@@ -142,7 +146,7 @@ fn serve(args: &[String]) -> Result<()> {
     // positional [n] [dense|spls] [replicas]; flags anywhere
     let mut pos: Vec<&String> = Vec::new();
     let mut http: Option<String> = None;
-    let mut max_conns = 8usize;
+    let mut max_conns = 1024usize; // concurrent sockets on the event loop
     let mut max_queue: Option<usize> = None;
     let mut i = 0usize;
     while i < args.len() {
@@ -153,7 +157,7 @@ fn serve(args: &[String]) -> Result<()> {
                 i += 2;
             }
             "--max-conns" => {
-                max_conns = value(i).and_then(|s| s.parse().ok()).unwrap_or(8);
+                max_conns = value(i).and_then(|s| s.parse().ok()).unwrap_or(1024);
                 i += 2;
             }
             "--max-queue" => {
@@ -176,7 +180,13 @@ fn serve(args: &[String]) -> Result<()> {
         if let Some(q) = max_queue {
             policy.max_queue = q.max(1);
         }
-        let cfg = GatewayConfig { addr, max_conns, replicas, mode, policy, ..Default::default() };
+        let cfg = GatewayConfig::builder()
+            .addr(addr)
+            .max_conns(max_conns)
+            .replicas(replicas)
+            .mode(mode)
+            .policy(policy)
+            .build()?;
         let srv = std::sync::Arc::new(Server::new(&artifact_dir(), mode, SplsConfig::default())?);
         let gateway = Gateway::start(srv, cfg)?;
         println!("esact gateway listening on http://{}", gateway.local_addr());
@@ -219,11 +229,34 @@ fn serve(args: &[String]) -> Result<()> {
 fn http_check(args: &[String]) -> Result<()> {
     let addr = match args.first() {
         Some(a) if !a.starts_with("--") => a.clone(),
-        _ => bail!("usage: esact http-check <addr> [--shutdown]"),
+        _ => bail!("usage: esact http-check <addr> [--shutdown] [--idle-churn N]"),
     };
     let shutdown = args.iter().any(|a| a == "--shutdown");
+    let idle_churn = args
+        .iter()
+        .position(|a| a == "--idle-churn")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|s| s.parse::<usize>().ok())
+        .unwrap_or(0);
     let mut client =
         HttpClient::connect_retry(&addr, 50, std::time::Duration::from_millis(100))?;
+
+    // 0. optionally park a herd of idle keep-alive connections on the
+    // event loop; the functional probes below must still pass while
+    // they are held, and every held socket must remain usable after
+    // churning half of them (CI's 256-connection idle-churn probe)
+    let mut herd = if idle_churn > 0 {
+        let mut herd = IdleConns::open(&addr, idle_churn)?;
+        herd.churn(idle_churn / 2)?;
+        println!(
+            "idle-churn: holding {} idle connections (churned {})",
+            herd.len(),
+            idle_churn / 2
+        );
+        Some(herd)
+    } else {
+        None
+    };
 
     // 1. healthz: must be ok, and tells us the request shapes
     let health = client.get("/healthz")?;
@@ -275,6 +308,14 @@ fn http_check(args: &[String]) -> Result<()> {
         }
     }
     println!("metrics ok: {} lines", text.lines().count());
+
+    if let Some(mut herd) = herd.take() {
+        let ok = herd.probe_all()?;
+        if ok != idle_churn {
+            bail!("idle-churn: only {ok}/{idle_churn} held connections answered healthz");
+        }
+        println!("idle-churn ok: {ok}/{idle_churn} held connections still serve requests");
+    }
 
     if shutdown {
         let r = client.post_json("/admin/shutdown", "")?;

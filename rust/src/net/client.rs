@@ -43,6 +43,31 @@ impl Response {
         let text = std::str::from_utf8(&self.body).context("response body is not UTF-8")?;
         Json::parse(text).map_err(|e| anyhow::anyhow!("bad JSON in response: {e}"))
     }
+
+    /// Decode the unified error envelope every non-2xx gateway
+    /// response carries: `{"error":{"code","message","retry_after_ms"?}}`.
+    /// `None` if the body is not an envelope (e.g. a 2xx response).
+    pub fn error_envelope(&self) -> Option<ErrorEnvelope> {
+        let doc = self.json().ok()?;
+        let err = doc.get("error")?;
+        Some(ErrorEnvelope {
+            code: err.get("code")?.as_str()?.to_string(),
+            message: err.get("message")?.as_str()?.to_string(),
+            retry_after_ms: err
+                .get("retry_after_ms")
+                .and_then(|v| v.as_i64())
+                .map(|v| v as u64),
+        })
+    }
+}
+
+/// The gateway's machine-readable error shape (see README §Error
+/// codes). `retry_after_ms` is present on 429s only.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ErrorEnvelope {
+    pub code: String,
+    pub message: String,
+    pub retry_after_ms: Option<u64>,
 }
 
 /// A keep-alive connection to the gateway.
@@ -217,8 +242,17 @@ impl GenStream<'_> {
                     let text = std::str::from_utf8(&d).context("chunk is not UTF-8")?;
                     let doc = Json::parse(text.trim_end())
                         .map_err(|e| anyhow::anyhow!("bad chunk JSON: {e}"))?;
-                    if let Some(err) = doc.get("error").and_then(|e| e.as_str()) {
-                        bail!("stream error from gateway: {err}");
+                    if let Some(err) = doc.get("error") {
+                        // envelope object (current wire format); a bare
+                        // string is accepted for older peers
+                        if let Some(flat) = err.as_str() {
+                            bail!("stream error from gateway: {flat}");
+                        }
+                        let code =
+                            err.get("code").and_then(|c| c.as_str()).unwrap_or("error");
+                        let message =
+                            err.get("message").and_then(|m| m.as_str()).unwrap_or("");
+                        bail!("stream error from gateway: {code}: {message}");
                     }
                     let tokens = doc
                         .get("tokens")
@@ -281,6 +315,117 @@ pub fn generate_body(prompt: &[i32], max_new: usize, top_k: Option<(usize, f32, 
     }
     body.push('}');
     body
+}
+
+/// A herd of open-but-idle keep-alive connections — the C10K
+/// connection-sweep bench and the CI idle-churn probe hold one of
+/// these while foreground requests run, asserting the event loop's
+/// per-idle-socket cost stays flat.
+pub struct IdleConns {
+    addr: String,
+    conns: Vec<TcpStream>,
+}
+
+impl IdleConns {
+    /// Open `n` idle connections to the gateway.
+    pub fn open(addr: &str, n: usize) -> Result<Self> {
+        let mut conns = Vec::with_capacity(n);
+        for i in 0..n {
+            let s = TcpStream::connect(addr)
+                .with_context(|| format!("idle conn {i}/{n} to {addr}"))?;
+            s.set_nodelay(true)?;
+            conns.push(s);
+        }
+        Ok(Self { addr: addr.to_string(), conns })
+    }
+
+    pub fn len(&self) -> usize {
+        self.conns.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.conns.is_empty()
+    }
+
+    /// Connection churn: close `k` sockets and open `k` fresh ones.
+    pub fn churn(&mut self, k: usize) -> Result<()> {
+        let k = k.min(self.conns.len());
+        for s in self.conns.drain(..k) {
+            drop(s);
+        }
+        for _ in 0..k {
+            let s = TcpStream::connect(&self.addr)?;
+            s.set_nodelay(true)?;
+            self.conns.push(s);
+        }
+        Ok(())
+    }
+
+    /// Issue `GET /healthz` on every held connection and count the
+    /// 200s — proves the idle herd is still individually usable, not
+    /// just half-open. Consumes each response fully so the sockets
+    /// stay clean for reuse.
+    pub fn probe_all(&mut self) -> Result<usize> {
+        let mut ok = 0usize;
+        for s in &mut self.conns {
+            s.set_read_timeout(Some(Duration::from_secs(5)))?;
+            s.write_all(b"GET /healthz HTTP/1.1\r\nHost: esact\r\n\r\n")?;
+            let mut buf = Vec::new();
+            let mut tmp = [0u8; 2048];
+            let head_end = loop {
+                if let Some(end) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+                    break end;
+                }
+                let n = s.read(&mut tmp).context("idle probe read")?;
+                if n == 0 {
+                    bail!("gateway closed an idle connection mid-probe");
+                }
+                buf.extend_from_slice(&tmp[..n]);
+            };
+            let head = std::str::from_utf8(&buf[..head_end]).context("probe head utf8")?;
+            let parsed = parse_response_head(head)?;
+            let body_len = parsed.content_length().unwrap_or(0);
+            let mut have = buf.len() - (head_end + 4);
+            while have < body_len {
+                let n = s.read(&mut tmp).context("idle probe body read")?;
+                if n == 0 {
+                    bail!("gateway truncated an idle probe body");
+                }
+                have += n;
+            }
+            if parsed.status == 200 {
+                ok += 1;
+            }
+        }
+        Ok(ok)
+    }
+}
+
+/// Open `n` slow-loris connections: each sends a partial request head
+/// and then stalls forever. The gateway's idle sweep must reap every
+/// one of them (`esact_gateway_conns_reaped_total`); hold the returned
+/// sockets so the OS doesn't close them early.
+pub fn open_lorises(addr: &str, n: usize) -> Result<Vec<TcpStream>> {
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut s = TcpStream::connect(addr)
+            .with_context(|| format!("loris conn {i}/{n} to {addr}"))?;
+        s.set_nodelay(true)?;
+        s.write_all(b"POST /v1/classify HTTP/1.1\r\nContent-Le")?;
+        out.push(s);
+    }
+    Ok(out)
+}
+
+/// Fetch `/metrics` and return the value of one exact (unlabeled) row.
+pub fn metric_value(client: &mut HttpClient, name: &str) -> Result<Option<f64>> {
+    let resp = client.get("/metrics")?;
+    let text = std::str::from_utf8(&resp.body).context("metrics body is not UTF-8")?;
+    Ok(text
+        .lines()
+        .find(|l| l.strip_prefix(name).is_some_and(|rest| rest.starts_with(' ')))
+        .and_then(|l| l.split_whitespace().last())
+        .and_then(|v| v.parse().ok()))
 }
 
 /// Aggregate results of one HTTP load run.

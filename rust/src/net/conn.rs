@@ -1,0 +1,475 @@
+//! Per-connection state machine for the event-loop gateway, written
+//! sans-io: every method takes `impl Read` / `impl Write` so the exact
+//! transitions are unit-testable with scripted fakes (partial reads at
+//! every split boundary, `WouldBlock` writers, mid-stream disconnects)
+//! and the production loop just passes the nonblocking `TcpStream`.
+//!
+//! ```text
+//!   Reading ──complete request──► Dispatched ──response enqueued──► Writing
+//!      ▲                              │  (job parked on the tier;        │
+//!      │                              │   stream chunks append here)     │
+//!      │                              ▼                                  ▼
+//!   KeepAlive ◄────── out-buffer drained, keep-alive ────────────── (drained)
+//!      │                                                                 │
+//!      └──── idle expiry / parse error / peer close ──► Closing ◄── !keep-alive
+//! ```
+//!
+//! The connection owns the incremental [`RequestParser`] and a
+//! cursor-tracked out-buffer; the gateway owns routing, admission and
+//! completion bookkeeping. Idle time is measured from the last
+//! *completed* request (connect time for a fresh socket), so a peer
+//! trickling header bytes forever — the slow-loris shape — is reaped
+//! by the same expiry as a silent one.
+
+use std::io::{self, Read, Write};
+use std::time::{Duration, Instant};
+
+use crate::net::http::{HttpError, Request, RequestParser};
+
+/// Where the connection sits in its lifecycle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConnState {
+    /// Waiting for (more of) a request head/body.
+    Reading,
+    /// A request is in flight on the serving tier; reads are parked.
+    Dispatched,
+    /// A response (or stream tail) is buffered and being flushed.
+    Writing,
+    /// Response fully flushed; waiting for the next request.
+    KeepAlive,
+    /// Tear the socket down once the out-buffer drains.
+    Closing,
+}
+
+/// What a flush attempt achieved.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlushOutcome {
+    /// Out-buffer fully written.
+    Drained,
+    /// The socket refused more bytes (`WouldBlock`); write interest
+    /// should stay armed.
+    Blocked,
+}
+
+/// Cap on bytes consumed from the socket per `on_readable` call so one
+/// firehose connection cannot starve the rest of the loop; epoll is
+/// level-triggered, the remainder re-reports immediately.
+const READ_QUANTUM: usize = 64 * 1024;
+
+pub struct Conn {
+    parser: RequestParser,
+    out: Vec<u8>,
+    out_pos: usize,
+    state: ConnState,
+    close_after_flush: bool,
+    last_activity: Instant,
+}
+
+impl Conn {
+    pub fn new(max_body: usize, now: Instant) -> Self {
+        Conn {
+            parser: RequestParser::new(max_body),
+            out: Vec::new(),
+            out_pos: 0,
+            state: ConnState::Reading,
+            close_after_flush: false,
+            last_activity: now,
+        }
+    }
+
+    pub fn state(&self) -> ConnState {
+        self.state
+    }
+
+    /// Unflushed response bytes still queued.
+    pub fn pending_out(&self) -> usize {
+        self.out.len() - self.out_pos
+    }
+
+    pub fn wants_write(&self) -> bool {
+        self.pending_out() > 0
+    }
+
+    /// Whether the loop should keep read interest armed: parked
+    /// (`Dispatched`) and dying (`Closing`) connections don't read.
+    pub fn wants_read(&self) -> bool {
+        matches!(
+            self.state,
+            ConnState::Reading | ConnState::KeepAlive | ConnState::Writing
+        )
+    }
+
+    /// Pull bytes from the socket into the parser. Returns `Ok(true)`
+    /// if the peer half-closed (EOF), `Ok(false)` on `WouldBlock` or a
+    /// filled read quantum. Hard socket errors bubble up for the loop
+    /// to close on.
+    pub fn on_readable(&mut self, io: &mut impl Read) -> io::Result<bool> {
+        let mut buf = [0u8; 4096];
+        let mut total = 0;
+        loop {
+            match io.read(&mut buf) {
+                Ok(0) => return Ok(true),
+                Ok(n) => {
+                    self.parser.push(&buf[..n]);
+                    total += n;
+                    if total >= READ_QUANTUM {
+                        return Ok(false);
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return Ok(false),
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// Try to take the next complete pipelined request. A successful
+    /// take marks activity (idle expiry measures from here) and moves
+    /// `Reading`/`KeepAlive` → `Dispatched`; the caller decides what
+    /// the dispatch is (tier submit or an immediate local response).
+    pub fn next_request(&mut self, now: Instant) -> Result<Option<Request>, HttpError> {
+        if self.state != ConnState::Reading && self.state != ConnState::KeepAlive {
+            return Ok(None);
+        }
+        match self.parser.take()? {
+            Some(req) => {
+                self.last_activity = now;
+                self.state = ConnState::Dispatched;
+                Ok(Some(req))
+            }
+            None => {
+                if self.state == ConnState::KeepAlive && self.parser.buffered() > 0 {
+                    self.state = ConnState::Reading;
+                }
+                Ok(None)
+            }
+        }
+    }
+
+    /// Append rendered response bytes (a full frame, a stream head, or
+    /// one chunk) to the out-buffer.
+    pub fn enqueue(&mut self, bytes: &[u8]) {
+        self.out.extend_from_slice(bytes);
+    }
+
+    /// The current exchange produced its final bytes: leave
+    /// `Dispatched`. `keep == false` tears the connection down once
+    /// the out-buffer drains.
+    pub fn complete(&mut self, keep: bool) {
+        if !keep {
+            self.close_after_flush = true;
+        }
+        self.state = if self.wants_write() {
+            ConnState::Writing
+        } else if self.close_after_flush {
+            ConnState::Closing
+        } else {
+            ConnState::KeepAlive
+        };
+    }
+
+    /// Force the connection towards teardown (parse error already
+    /// answered, drain, idle expiry). Pending out-bytes still flush
+    /// first unless the caller drops the socket outright.
+    pub fn mark_closing(&mut self) {
+        self.close_after_flush = true;
+        if !self.wants_write() {
+            self.state = ConnState::Closing;
+        }
+    }
+
+    /// Flush as much of the out-buffer as the socket accepts.
+    pub fn on_writable(&mut self, io: &mut impl Write) -> io::Result<FlushOutcome> {
+        while self.out_pos < self.out.len() {
+            match io.write(&self.out[self.out_pos..]) {
+                Ok(0) => {
+                    return Err(io::Error::new(
+                        io::ErrorKind::WriteZero,
+                        "socket accepted zero bytes",
+                    ))
+                }
+                Ok(n) => self.out_pos += n,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    self.compact();
+                    return Ok(FlushOutcome::Blocked);
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        self.out.clear();
+        self.out_pos = 0;
+        if self.state == ConnState::Writing {
+            self.state = if self.close_after_flush {
+                ConnState::Closing
+            } else {
+                ConnState::KeepAlive
+            };
+        } else if self.close_after_flush && self.state != ConnState::Dispatched {
+            self.state = ConnState::Closing;
+        }
+        Ok(FlushOutcome::Drained)
+    }
+
+    /// True once the socket should be dropped: marked closing and
+    /// nothing left to flush.
+    pub fn done(&self) -> bool {
+        self.state == ConnState::Closing && !self.wants_write()
+    }
+
+    /// Idle expiry — never fires while a job is in flight
+    /// (`Dispatched` resets on completion via `next_request`'s
+    /// activity stamp on the *next* exchange; stream deadlines are the
+    /// gateway's job). A write-stalled peer counts as idle too.
+    pub fn idle_expired(&self, now: Instant, timeout: Duration) -> bool {
+        self.state != ConnState::Dispatched
+            && now.duration_since(self.last_activity) > timeout
+    }
+
+    /// Bytes buffered inside the parser (a partially received next
+    /// request). Used by drain logic: a keep-alive socket with nothing
+    /// buffered can close immediately, one mid-request gets its read.
+    pub fn buffered(&self) -> usize {
+        self.parser.buffered()
+    }
+
+    /// Reclaim out-buffer space once a flush consumed a meaningful
+    /// prefix (long generate streams on slow readers would otherwise
+    /// grow the buffer by the full stream length).
+    fn compact(&mut self) {
+        if self.out_pos >= 8 * 1024 && self.out_pos * 2 >= self.out.len() {
+            self.out.drain(..self.out_pos);
+            self.out_pos = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::VecDeque;
+
+    /// Scripted reader: returns each slice in turn, then WouldBlock
+    /// (or EOF if `eof` is set and the script is exhausted).
+    struct ScriptRead {
+        script: VecDeque<Vec<u8>>,
+        eof: bool,
+    }
+
+    impl ScriptRead {
+        fn new(parts: Vec<Vec<u8>>, eof: bool) -> Self {
+            ScriptRead {
+                script: parts.into(),
+                eof,
+            }
+        }
+    }
+
+    impl Read for ScriptRead {
+        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+            match self.script.pop_front() {
+                Some(part) => {
+                    assert!(part.len() <= buf.len(), "script chunk exceeds read buf");
+                    buf[..part.len()].copy_from_slice(&part);
+                    Ok(part.len())
+                }
+                None if self.eof => Ok(0),
+                None => Err(io::Error::from(io::ErrorKind::WouldBlock)),
+            }
+        }
+    }
+
+    /// Writer that accepts at most `quota` bytes per call, then
+    /// WouldBlock — a tiny socket send buffer.
+    struct TrickleWrite {
+        accepted: Vec<u8>,
+        quota: usize,
+        calls_until_block: usize,
+    }
+
+    impl TrickleWrite {
+        fn new(quota: usize) -> Self {
+            TrickleWrite {
+                accepted: Vec::new(),
+                quota,
+                calls_until_block: 1,
+            }
+        }
+    }
+
+    impl Write for TrickleWrite {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            if self.calls_until_block == 0 {
+                return Err(io::Error::from(io::ErrorKind::WouldBlock));
+            }
+            self.calls_until_block -= 1;
+            let n = buf.len().min(self.quota);
+            self.accepted.extend_from_slice(&buf[..n]);
+            Ok(n)
+        }
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    const REQ: &[u8] = b"POST /v1/classify HTTP/1.1\r\nContent-Length: 5\r\n\r\nhello";
+
+    #[test]
+    fn every_split_boundary_yields_the_same_request() {
+        // the http.rs property harness, driven through the state
+        // machine's read path instead of the parser directly
+        for cut in 0..=REQ.len() {
+            let now = Instant::now();
+            let mut conn = Conn::new(1 << 20, now);
+            // empty slices would read as Ok(0) = EOF; keep them out
+            let first: Vec<Vec<u8>> = [&REQ[..cut]]
+                .iter()
+                .filter(|p| !p.is_empty())
+                .map(|p| p.to_vec())
+                .collect();
+            let mut io = ScriptRead::new(first, false);
+            assert!(!conn.on_readable(&mut io).unwrap());
+            let early = conn.next_request(now).unwrap();
+            if cut < REQ.len() {
+                assert!(early.is_none(), "cut={cut} produced a request early");
+                assert_eq!(conn.state(), ConnState::Reading);
+            }
+            let rest_parts: Vec<Vec<u8>> = [&REQ[cut..]]
+                .iter()
+                .filter(|p| !p.is_empty())
+                .map(|p| p.to_vec())
+                .collect();
+            let mut rest = ScriptRead::new(rest_parts, false);
+            assert!(!conn.on_readable(&mut rest).unwrap());
+            let req = match early {
+                Some(r) => r,
+                None => conn.next_request(now).unwrap().expect("complete request"),
+            };
+            assert_eq!(req.method, "POST");
+            assert_eq!(req.path(), "/v1/classify");
+            assert_eq!(req.body, b"hello");
+            assert_eq!(conn.state(), ConnState::Dispatched);
+            // parked connections don't read
+            assert!(!conn.wants_read());
+            assert!(conn.next_request(now).unwrap().is_none());
+        }
+    }
+
+    #[test]
+    fn mid_stream_client_disconnect_is_surfaced() {
+        let now = Instant::now();
+        let mut conn = Conn::new(1 << 20, now);
+        // half a request then EOF: the peer gave up mid-send
+        let mut io = ScriptRead::new(vec![REQ[..10].to_vec()], true);
+        assert!(conn.on_readable(&mut io).unwrap(), "EOF must be reported");
+        // and a write onto a reset socket is a hard error
+        conn.enqueue(b"leftover");
+        conn.complete(true);
+        struct Dead;
+        impl Write for Dead {
+            fn write(&mut self, _: &[u8]) -> io::Result<usize> {
+                Err(io::Error::from(io::ErrorKind::BrokenPipe))
+            }
+            fn flush(&mut self) -> io::Result<()> {
+                Ok(())
+            }
+        }
+        assert_eq!(
+            conn.on_writable(&mut Dead).unwrap_err().kind(),
+            io::ErrorKind::BrokenPipe
+        );
+    }
+
+    #[test]
+    fn idle_expiry_counts_from_last_completed_request() {
+        let t0 = Instant::now();
+        let timeout = Duration::from_millis(100);
+        let mut conn = Conn::new(1 << 20, t0);
+        // a fresh silent connection expires
+        assert!(!conn.idle_expired(t0 + Duration::from_millis(50), timeout));
+        assert!(conn.idle_expired(t0 + Duration::from_millis(150), timeout));
+
+        // slow-loris: trickled header bytes do NOT reset the clock
+        let mut io = ScriptRead::new(vec![b"POST /x HT".to_vec()], false);
+        conn.on_readable(&mut io).unwrap();
+        assert!(conn.next_request(t0 + Duration::from_millis(60)).unwrap().is_none());
+        assert!(conn.idle_expired(t0 + Duration::from_millis(150), timeout));
+
+        // a completed request does
+        let t1 = t0 + Duration::from_millis(140);
+        let mut conn2 = Conn::new(1 << 20, t0);
+        let mut io2 = ScriptRead::new(vec![REQ.to_vec()], false);
+        conn2.on_readable(&mut io2).unwrap();
+        assert!(conn2.next_request(t1).unwrap().is_some());
+        conn2.complete(true);
+        assert!(!conn2.idle_expired(t1 + Duration::from_millis(90), timeout));
+        assert!(conn2.idle_expired(t1 + Duration::from_millis(110), timeout));
+
+        // ... but never while the job is parked on the tier
+        let mut conn3 = Conn::new(1 << 20, t0);
+        let mut io3 = ScriptRead::new(vec![REQ.to_vec()], false);
+        conn3.on_readable(&mut io3).unwrap();
+        assert!(conn3.next_request(t0).unwrap().is_some());
+        assert_eq!(conn3.state(), ConnState::Dispatched);
+        assert!(!conn3.idle_expired(t0 + Duration::from_secs(3600), timeout));
+    }
+
+    #[test]
+    fn write_backpressure_flushes_incrementally_and_honors_close() {
+        let now = Instant::now();
+        let mut conn = Conn::new(1 << 20, now);
+        let mut io = ScriptRead::new(vec![REQ.to_vec()], false);
+        conn.on_readable(&mut io).unwrap();
+        conn.next_request(now).unwrap().unwrap();
+
+        let body: Vec<u8> = (0..1000u32).map(|i| (i % 251) as u8).collect();
+        conn.enqueue(&body);
+        conn.complete(false); // Connection: close semantics
+        assert_eq!(conn.state(), ConnState::Writing);
+
+        let mut sink = TrickleWrite::new(64);
+        let mut rounds = 0;
+        while conn.wants_write() {
+            sink.calls_until_block = 1;
+            let out = conn.on_writable(&mut sink).unwrap();
+            rounds += 1;
+            if conn.wants_write() {
+                assert_eq!(out, FlushOutcome::Blocked);
+            }
+            assert!(rounds < 100, "flush must make progress");
+        }
+        assert!(rounds > 10, "64-byte quota must take many rounds");
+        assert_eq!(sink.accepted, body, "bytes arrive in order, none lost");
+        assert_eq!(conn.state(), ConnState::Closing);
+        assert!(conn.done());
+    }
+
+    #[test]
+    fn keep_alive_round_trips_back_to_reading_for_pipelined_requests() {
+        let now = Instant::now();
+        let mut conn = Conn::new(1 << 20, now);
+        let mut two = Vec::new();
+        two.extend_from_slice(REQ);
+        two.extend_from_slice(b"GET /healthz HTTP/1.1\r\n\r\n");
+        let mut io = ScriptRead::new(vec![two], false);
+        conn.on_readable(&mut io).unwrap();
+
+        let first = conn.next_request(now).unwrap().unwrap();
+        assert_eq!(first.method, "POST");
+        conn.enqueue(b"HTTP/1.1 200 OK\r\nContent-Length: 0\r\n\r\n");
+        conn.complete(true);
+        let mut sink = TrickleWrite::new(usize::MAX);
+        sink.calls_until_block = usize::MAX;
+        assert_eq!(conn.on_writable(&mut sink).unwrap(), FlushOutcome::Drained);
+        assert_eq!(conn.state(), ConnState::KeepAlive);
+
+        // the second, already-buffered request dispatches without
+        // another byte from the socket
+        let second = conn.next_request(now).unwrap().unwrap();
+        assert_eq!(second.path(), "/healthz");
+        assert_eq!(conn.state(), ConnState::Dispatched);
+        conn.complete(true);
+        assert_eq!(conn.state(), ConnState::KeepAlive);
+        assert!(conn.next_request(now).unwrap().is_none());
+    }
+}

@@ -1,28 +1,28 @@
-//! The HTTP serving gateway: a `TcpListener` accept loop feeding a
-//! bounded connection-worker pool, routing requests onto the
-//! replicated serving tier — the subsystem that turns the in-process
-//! coordinator into a network service. std-only by construction (no
-//! tokio/hyper/serde in the vendored crate set, see DESIGN.md
-//! §Environment).
+//! The HTTP serving gateway: a single nonblocking readiness event loop
+//! (raw `epoll` via [`crate::net::poll`]) owning every client socket,
+//! routing requests onto the replicated serving tier through the
+//! unified [`TierHandle`] submit/complete interface. std-only by
+//! construction (no tokio/hyper/serde in the vendored crate set, see
+//! DESIGN.md §Environment).
 //!
-//! Architecture (one process):
+//! Architecture (one process, one event thread):
 //!
 //! ```text
-//! clients ──TCP──▶ accept loop ──bounded queue──▶ N conn workers
-//!                                                   │  (HTTP/1.1,
-//!                                                   │   keep-alive)
-//!                    ┌──────────────────────────────┘
-//!                    ▼ submit (admission-bounded)
-//!   classify leader: Server::serve_replicated  ─┐ replies
-//!   generate leader: Server::serve_generate    ─┤ chunks   ──▶ routers
-//!                    (long-lived, channel-fed)  ┘      (id → waiting
-//!                                                       conn worker)
+//! clients ──TCP──▶ epoll loop ── per-conn state machine (net::conn)
+//!                    │  accept / read / parse / flush, thousands of
+//!                    │  sockets; a conn with a job in flight is
+//!                    │  *parked* (no read interest) not thread-blocked
+//!                    ▼ TierHandle::submit (admission-bounded)
+//!   classify leader: Server::serve_replicated ─┐ completions queue
+//!   generate leader: Server::serve_generate   ─┤   + eventfd wakeup
+//!                    (long-lived, channel-fed) ┘ ──▶ loop resumes conn
 //! ```
 //!
 //! * `POST /v1/classify` — batched classification through
 //!   `serve_replicated`'s admission + continuous-batching path.
 //! * `POST /v1/generate` — `Transfer-Encoding: chunked` streaming of
-//!   [`GenChunk`] tokens as they leave the decode batcher.
+//!   generate slices as they leave the decode batcher, drained through
+//!   the loop without blocking it.
 //! * `GET /metrics` — Prometheus text: the live tier snapshot rendered
 //!   through the same [`MetricRow`]s the CLI `Display` impls print
 //!   (one source of truth), plus gateway-level counters and per-shard
@@ -30,39 +30,47 @@
 //! * `GET /healthz` — readiness (flips to `503 draining` on shutdown).
 //! * `POST /admin/shutdown` — begin a graceful drain remotely.
 //!
-//! **Backpressure is wired to the real bound**: the classify admission
-//! counter tracks submitted-but-unreplied requests against the same
-//! `BatchPolicy::max_queue` the leader stops pulling at, so instead of
-//! queueing unboundedly the gateway answers `429` with `Retry-After`
-//! the moment the tier is saturated. Generate sessions are bounded by
-//! `max_sessions` the same way.
+//! **Backpressure is wired to the real bound**: [`TierHandle`] admits
+//! against the same `BatchPolicy::max_queue` the classify leader stops
+//! pulling at (and `max_sessions` for generate), so instead of queueing
+//! unboundedly the gateway answers `429` with `Retry-After` the moment
+//! the tier is saturated. `max_conns` bounds concurrent *sockets*, not
+//! threads: at the cap the listener pauses and fresh connections wait
+//! in the TCP backlog.
+//!
+//! **Every non-2xx response carries one error envelope**:
+//! `{"error":{"code":...,"message":...}}`, with `retry_after_ms` on
+//! 429s. The codes are stable API surface (see README §Error codes).
 //!
 //! **Graceful shutdown** ([`ShutdownHandle`]): flag flip → `/healthz`
-//! reports draining and new work gets 503 → the work channels close →
-//! in-flight batches and generate streams run to completion → the
-//! listener wakes (self-connect) and closes. The leaders' final
+//! reports draining and new work gets 503 → the tier lanes close →
+//! in-flight batches and generate streams run to completion and flush →
+//! the loop exits and the listener closes. The leaders' final
 //! [`ServeOutcome`]/[`GenerateOutcome`] come back from
 //! [`Gateway::join`].
 
 use std::collections::HashMap;
 use std::fmt;
-use std::io::{self, ErrorKind, Read};
+use std::io::ErrorKind;
+use std::mem;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::os::fd::AsRawFd;
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::coordinator::{
-    BatchPolicy, GenChunk, GenRequest, GenerateOutcome, MetricRow, Mode, Reply, ServeOutcome,
-    Server,
+    BatchPolicy, Completion, GenerateOutcome, MetricRow, Mode, ServeOutcome, Server, Submission,
+    SubmitError, Tier, TierConfig, TierHandle,
 };
-use crate::coordinator::Request as ClassifyRequest;
 use crate::decode::{DecodeConfig, Sampling};
-use crate::net::http::{self, ChunkedWriter, Request, RequestParser};
+use crate::net::conn::{Conn, ConnState};
+use crate::net::http::{self, Request};
 use crate::net::json::{self, Json};
+use crate::net::poll::{Event, Interest, Poller, Waker};
 use crate::util::stats::LatencyWindow;
 
 /// Gateway lifecycle states.
@@ -76,13 +84,33 @@ pub const MAX_BATCH_PER_REQUEST: usize = 64;
 /// Largest `max_new` one generate request may ask for.
 pub const MAX_NEW_CAP: usize = 1024;
 
-/// Gateway deployment knobs.
+/// Reserved poll tokens; connections start above them.
+const TOKEN_LISTENER: u64 = 0;
+const TOKEN_WAKER: u64 = 1;
+const FIRST_CONN_TOKEN: u64 = 2;
+
+/// Event-loop heartbeat: the longest the loop sleeps before running
+/// timers (idle expiry, request deadlines, drain progress).
+const TICK: Duration = Duration::from_millis(25);
+
+/// During a drain, idle keep-alive sockets get this long to deliver a
+/// final request (health probes race the drain) before closing.
+const DRAIN_GRACE: Duration = Duration::from_millis(100);
+
+/// In-band stream error line for a stalled decode tier — same envelope
+/// shape as the HTTP-level errors, delivered as the final NDJSON line.
+const STREAM_STALL_LINE: &str =
+    "{\"error\":{\"code\":\"tier_timeout\",\"message\":\"decode tier stalled\"},\"done\":true}\n";
+
+/// Gateway deployment knobs. Build via [`GatewayConfig::builder`],
+/// which validates every bound before the gateway can bind a socket.
 #[derive(Clone, Debug)]
 pub struct GatewayConfig {
     /// Bind address (`127.0.0.1:0` picks an ephemeral port).
     pub addr: String,
-    /// Connection-worker pool size; accepted connections beyond it
-    /// queue in a bounded handoff (then the TCP backlog).
+    /// Concurrent **sockets** (not threads) the loop will hold open; at
+    /// the cap the listener pauses and fresh connections queue in the
+    /// TCP backlog. Default 1024.
     pub max_conns: usize,
     /// Replicas per tier (classify and generate each own a pool).
     pub replicas: usize,
@@ -98,17 +126,21 @@ pub struct GatewayConfig {
     pub max_sessions: usize,
     /// Request-body cap (413 beyond it).
     pub max_body: usize,
-    /// How long a connection worker waits on the tier before 500.
+    /// How long a parked request may sit on the tier before the
+    /// gateway answers 500 (classify) or ends the stream (generate).
     pub request_timeout: Duration,
-    /// Idle keep-alive connections are closed after this.
-    pub keep_alive_idle: Duration,
+    /// Connections idle since their last completed request are reaped
+    /// after this — the slow-loris bound. Default 10s.
+    pub idle_timeout: Duration,
+    /// Kernel events decoded per `epoll_wait` call. Default 256.
+    pub max_events: usize,
 }
 
 impl Default for GatewayConfig {
     fn default() -> Self {
         Self {
             addr: "127.0.0.1:0".to_string(),
-            max_conns: 8,
+            max_conns: 1024,
             replicas: 1,
             mode: Mode::Dense,
             policy: BatchPolicy::default(),
@@ -117,8 +149,124 @@ impl Default for GatewayConfig {
             max_sessions: 16,
             max_body: http::DEFAULT_MAX_BODY,
             request_timeout: Duration::from_secs(30),
-            keep_alive_idle: Duration::from_secs(10),
+            idle_timeout: Duration::from_secs(10),
+            max_events: 256,
         }
+    }
+}
+
+impl GatewayConfig {
+    /// Start from the documented defaults and override what you need.
+    pub fn builder() -> GatewayConfigBuilder {
+        GatewayConfigBuilder { cfg: GatewayConfig::default() }
+    }
+}
+
+/// Validating builder for [`GatewayConfig`] — the only constructor the
+/// CLI, examples, benches, and tests go through. [`build`] refuses
+/// zero-valued bounds instead of letting them wedge the event loop.
+///
+/// [`build`]: GatewayConfigBuilder::build
+#[derive(Clone, Debug)]
+pub struct GatewayConfigBuilder {
+    cfg: GatewayConfig,
+}
+
+impl GatewayConfigBuilder {
+    pub fn addr(mut self, addr: impl Into<String>) -> Self {
+        self.cfg.addr = addr.into();
+        self
+    }
+
+    pub fn max_conns(mut self, n: usize) -> Self {
+        self.cfg.max_conns = n;
+        self
+    }
+
+    pub fn replicas(mut self, n: usize) -> Self {
+        self.cfg.replicas = n;
+        self
+    }
+
+    pub fn mode(mut self, mode: Mode) -> Self {
+        self.cfg.mode = mode;
+        self
+    }
+
+    pub fn policy(mut self, policy: BatchPolicy) -> Self {
+        self.cfg.policy = policy;
+        self
+    }
+
+    pub fn decode(mut self, decode: DecodeConfig) -> Self {
+        self.cfg.decode = decode;
+        self
+    }
+
+    pub fn steps_per_slice(mut self, n: usize) -> Self {
+        self.cfg.steps_per_slice = n;
+        self
+    }
+
+    pub fn max_sessions(mut self, n: usize) -> Self {
+        self.cfg.max_sessions = n;
+        self
+    }
+
+    pub fn max_body(mut self, bytes: usize) -> Self {
+        self.cfg.max_body = bytes;
+        self
+    }
+
+    pub fn request_timeout(mut self, d: Duration) -> Self {
+        self.cfg.request_timeout = d;
+        self
+    }
+
+    pub fn idle_timeout(mut self, d: Duration) -> Self {
+        self.cfg.idle_timeout = d;
+        self
+    }
+
+    pub fn max_events(mut self, n: usize) -> Self {
+        self.cfg.max_events = n;
+        self
+    }
+
+    /// Validate every knob. Zero-valued bounds are configuration bugs
+    /// (a `max_conns` of 0 accepts nothing; a zero timeout reaps every
+    /// socket on the first tick) and are refused here, not discovered
+    /// in production behavior.
+    pub fn build(self) -> Result<GatewayConfig> {
+        let cfg = self.cfg;
+        if cfg.max_conns == 0 {
+            bail!("max_conns must be >= 1 (it bounds concurrent sockets, not worker threads)");
+        }
+        if cfg.replicas == 0 {
+            bail!("replicas must be >= 1");
+        }
+        if cfg.policy.max_queue == 0 {
+            bail!("policy.max_queue must be >= 1 (it is the 429 admission bound)");
+        }
+        if cfg.steps_per_slice == 0 {
+            bail!("steps_per_slice must be >= 1");
+        }
+        if cfg.max_sessions == 0 {
+            bail!("max_sessions must be >= 1");
+        }
+        if cfg.max_body == 0 {
+            bail!("max_body must be >= 1 byte");
+        }
+        if cfg.request_timeout.is_zero() {
+            bail!("request_timeout must be nonzero");
+        }
+        if cfg.idle_timeout.is_zero() {
+            bail!("idle_timeout must be nonzero");
+        }
+        if cfg.max_events == 0 {
+            bail!("max_events must be >= 1");
+        }
+        Ok(cfg)
     }
 }
 
@@ -127,6 +275,10 @@ impl Default for GatewayConfig {
 #[derive(Default)]
 struct GatewayStats {
     connections_total: AtomicUsize,
+    /// Sockets currently held open by the loop (gauge).
+    open_connections: AtomicUsize,
+    /// Idle/slow-loris connections closed by the expiry sweep.
+    conns_reaped_total: AtomicUsize,
     http_requests_total: AtomicUsize,
     responses_2xx: AtomicUsize,
     responses_4xx: AtomicUsize,
@@ -153,112 +305,55 @@ impl GatewayStats {
     }
 }
 
-/// Work submission half of one tier: the leader's request sender, the
-/// id → waiting-handler routing table, and the admission counter the
-/// 429 bound checks.
-struct Submitter<Req, Resp> {
-    tx: Mutex<Option<mpsc::Sender<Req>>>,
-    pending: Mutex<HashMap<u64, mpsc::Sender<Resp>>>,
-    next_id: AtomicU64,
-    in_flight: AtomicUsize,
-}
-
-impl<Req, Resp> Submitter<Req, Resp> {
-    fn new(tx: mpsc::Sender<Req>) -> Self {
-        Self {
-            tx: Mutex::new(Some(tx)),
-            pending: Mutex::new(HashMap::new()),
-            next_id: AtomicU64::new(0),
-            in_flight: AtomicUsize::new(0),
-        }
-    }
-
-    /// Reserve `n` admission slots against `bound`; false = shed (429).
-    fn try_admit(&self, n: usize, bound: usize) -> bool {
-        self.in_flight
-            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |cur| {
-                if cur + n > bound {
-                    None
-                } else {
-                    Some(cur + n)
-                }
-            })
-            .is_ok()
-    }
-
-    fn release(&self, n: usize) {
-        self.in_flight.fetch_sub(n, Ordering::SeqCst);
-    }
-
-    fn in_flight(&self) -> usize {
-        self.in_flight.load(Ordering::SeqCst)
-    }
-
-    /// Allocate `n` ids, all routed to one fresh reply channel.
-    fn register(&self, n: usize) -> (Vec<u64>, mpsc::Receiver<Resp>) {
-        let (tx, rx) = mpsc::channel();
-        let mut pending = self.pending.lock().unwrap();
-        let ids = (0..n)
-            .map(|_| {
-                let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-                pending.insert(id, tx.clone());
-                id
-            })
-            .collect();
-        (ids, rx)
-    }
-
-    fn unregister(&self, ids: &[u64]) {
-        let mut pending = self.pending.lock().unwrap();
-        for id in ids {
-            pending.remove(id);
-        }
-    }
-
-    /// Send every request while holding the sender lock (so a racing
-    /// drain can't close the channel mid-batch). False = tier gone or
-    /// draining; nothing was delivered for the ids whose send failed.
-    fn send_all(&self, reqs: Vec<Req>) -> bool {
-        let guard = self.tx.lock().unwrap();
-        match guard.as_ref() {
-            Some(tx) => reqs.into_iter().all(|r| tx.send(r).is_ok()),
-            None => false,
-        }
-    }
-
-    /// Router side: forward one response to its waiting handler.
-    fn route(&self, id: u64, resp: Resp, done: bool) {
-        let mut pending = self.pending.lock().unwrap();
-        if done {
-            if let Some(tx) = pending.remove(&id) {
-                let _ = tx.send(resp);
-            }
-        } else if let Some(tx) = pending.get(&id) {
-            let _ = tx.send(resp);
-        }
-    }
-
-    /// Drop the leader's sender: no further submissions; the leader
-    /// drains what it already buffered and returns its outcome.
-    fn close(&self) {
-        self.tx.lock().unwrap().take();
+/// Stable machine-readable code for each error status the gateway can
+/// produce — the `error.code` field of the envelope.
+fn error_code(status: u16) -> &'static str {
+    match status {
+        400 => "bad_request",
+        404 => "not_found",
+        405 => "method_not_allowed",
+        413 => "body_too_large",
+        429 => "saturated",
+        431 => "head_too_large",
+        500 => "tier_timeout",
+        501 => "unsupported_transfer",
+        503 => "unavailable",
+        505 => "http_version",
+        _ => "error",
     }
 }
 
-/// State shared by every gateway thread.
+/// Render the unified error envelope every non-2xx response carries:
+/// `{"error":{"code":...,"message":...}}`, plus `retry_after_ms` on
+/// 429s so clients can back off without parsing headers.
+fn error_body(status: u16, msg: &str) -> String {
+    let mut body = String::from("{\"error\":{\"code\":");
+    body.push_str(&Json::Str(error_code(status).to_string()).encode());
+    body.push_str(",\"message\":");
+    body.push_str(&Json::Str(msg.to_string()).encode());
+    if status == 429 {
+        body.push_str(",\"retry_after_ms\":1000");
+    }
+    body.push_str("}}");
+    body
+}
+
+/// State shared by the event loop, the shutdown handle, and `join`.
 struct Inner {
     server: Arc<Server>,
     cfg: GatewayConfig,
     local_addr: SocketAddr,
     state: AtomicU8,
     stats: GatewayStats,
-    classify: Submitter<ClassifyRequest, Reply>,
-    generate: Submitter<GenRequest, GenChunk>,
-    /// HTTP requests currently being handled (the drain barrier).
+    /// The tier's submit/complete face; completions wake the loop via
+    /// the eventfd notify installed at startup.
+    tier: Arc<TierHandle>,
+    /// HTTP requests currently parked on the tier (the drain barrier).
     active_requests: AtomicUsize,
     /// HTTP-level classify latencies for the /metrics gauge.
     classify_latencies: Mutex<LatencyWindow>,
     started: Instant,
+    waker: Arc<Waker>,
 }
 
 impl Inner {
@@ -266,16 +361,17 @@ impl Inner {
         self.state.load(Ordering::SeqCst)
     }
 
-    /// Flip to draining and close the work channels. Idempotent.
+    /// Flip to draining, close the tier lanes, and wake the loop so it
+    /// notices immediately. Idempotent.
     fn begin_drain(&self) {
         if self
             .state
             .compare_exchange(RUNNING, DRAINING, Ordering::SeqCst, Ordering::SeqCst)
             .is_ok()
         {
-            self.classify.close();
-            self.generate.close();
+            self.tier.close();
         }
+        self.waker.wake();
     }
 
     fn record_classify_latency(&self, seconds: f64) {
@@ -292,8 +388,8 @@ pub struct ShutdownHandle {
 
 impl ShutdownHandle {
     /// Begin draining: `/healthz` flips to 503, new work is refused,
-    /// in-flight work (including open generate streams) completes,
-    /// then the listener closes. Returns immediately; use
+    /// in-flight work (including open generate streams) completes and
+    /// flushes, then the listener closes. Returns immediately; use
     /// [`Gateway::join`] to wait for the drain to finish.
     pub fn shutdown(&self) {
         self.inner.begin_drain();
@@ -320,167 +416,63 @@ impl fmt::Display for GatewayReport {
     }
 }
 
-/// The running gateway: owns the accept loop, the connection workers,
-/// the two leader threads, and their routers.
+/// The running gateway: the serving [`Tier`] plus the one event-loop
+/// thread that owns the listener and every client socket.
 pub struct Gateway {
     inner: Arc<Inner>,
-    accept: Option<JoinHandle<()>>,
-    workers: Vec<JoinHandle<()>>,
-    routers: Vec<JoinHandle<()>>,
-    drainer: Option<JoinHandle<()>>,
-    classify_leader: Option<JoinHandle<Result<ServeOutcome>>>,
-    generate_leader: Option<JoinHandle<Result<GenerateOutcome>>>,
+    tier: Option<Tier>,
+    event_loop: Option<JoinHandle<()>>,
 }
 
 impl Gateway {
-    /// Bind, spawn the serving tier, and start accepting.
+    /// Bind, spawn the serving tier, and start the event loop.
     pub fn start(server: Arc<Server>, cfg: GatewayConfig) -> Result<Gateway> {
         let listener = TcpListener::bind(&cfg.addr)
             .with_context(|| format!("binding gateway to {}", cfg.addr))?;
+        listener.set_nonblocking(true).context("nonblocking listener")?;
         let local_addr = listener.local_addr()?;
 
-        let (creq_tx, creq_rx) = mpsc::channel::<ClassifyRequest>();
-        let (crep_tx, crep_rx) = mpsc::channel::<Reply>();
-        let (greq_tx, greq_rx) = mpsc::channel::<GenRequest>();
-        let (gchk_tx, gchk_rx) = mpsc::channel::<GenChunk>();
+        let tier = Tier::start(
+            Arc::clone(&server),
+            TierConfig {
+                policy: cfg.policy,
+                decode: cfg.decode,
+                replicas: cfg.replicas,
+                steps_per_slice: cfg.steps_per_slice,
+                max_sessions: cfg.max_sessions,
+            },
+        )?;
+        let handle = tier.handle();
+
+        let poller = Poller::new(cfg.max_events).context("creating epoll instance")?;
+        let waker = Arc::new(Waker::new(&poller, TOKEN_WAKER).context("creating eventfd waker")?);
+        {
+            // every completion nudges the loop out of epoll_wait
+            let w = Arc::clone(&waker);
+            handle.set_notify(move || w.wake());
+        }
 
         let inner = Arc::new(Inner {
-            server: Arc::clone(&server),
+            server,
             local_addr,
             state: AtomicU8::new(RUNNING),
             stats: GatewayStats::default(),
-            classify: Submitter::new(creq_tx),
-            generate: Submitter::new(greq_tx),
+            tier: handle,
             active_requests: AtomicUsize::new(0),
             classify_latencies: Mutex::new(LatencyWindow::default()),
             started: Instant::now(),
+            waker,
             cfg,
         });
-        let cfg = &inner.cfg;
 
-        // --- leaders: long-lived serve loops fed by the channels -----
-        let classify_leader = {
-            let srv = Arc::clone(&server);
-            let (policy, replicas) = (cfg.policy, cfg.replicas);
+        let event_loop = {
+            let inner = Arc::clone(&inner);
             std::thread::Builder::new()
-                .name("esact-http-classify".to_string())
-                .spawn(move || srv.serve_replicated(creq_rx, crep_tx, policy, replicas))?
-        };
-        let generate_leader = {
-            let srv = Arc::clone(&server);
-            let (decode, replicas, steps) = (cfg.decode, cfg.replicas, cfg.steps_per_slice);
-            std::thread::Builder::new()
-                .name("esact-http-generate".to_string())
-                .spawn(move || srv.serve_generate(greq_rx, gchk_tx, decode, replicas, steps))?
+                .name("esact-http-loop".to_string())
+                .spawn(move || EventLoop::new(inner, poller, listener).run())?
         };
 
-        // --- routers: tier responses → the waiting conn workers ------
-        let classify_router = {
-            let inner = Arc::clone(&inner);
-            std::thread::Builder::new().name("esact-http-crouter".to_string()).spawn(
-                move || {
-                    for reply in crep_rx.iter() {
-                        inner.classify.release(1);
-                        let id = reply.id;
-                        inner.classify.route(id, reply, true);
-                    }
-                },
-            )?
-        };
-        let generate_router = {
-            let inner = Arc::clone(&inner);
-            std::thread::Builder::new().name("esact-http-grouter".to_string()).spawn(
-                move || {
-                    for chunk in gchk_rx.iter() {
-                        let done = chunk.done;
-                        if done {
-                            inner.generate.release(1);
-                        }
-                        let id = chunk.id;
-                        inner.generate.route(id, chunk, done);
-                    }
-                },
-            )?
-        };
-
-        // --- bounded connection pool ---------------------------------
-        let pool = inner.cfg.max_conns.max(1);
-        let (conn_tx, conn_rx) = mpsc::sync_channel::<TcpStream>(pool);
-        let conn_rx = Arc::new(Mutex::new(conn_rx));
-        let workers = (0..pool)
-            .map(|i| {
-                let inner = Arc::clone(&inner);
-                let conn_rx = Arc::clone(&conn_rx);
-                std::thread::Builder::new()
-                    .name(format!("esact-http-conn-{i}"))
-                    .spawn(move || loop {
-                        let stream = conn_rx.lock().unwrap().recv();
-                        match stream {
-                            Ok(s) => handle_conn(&inner, s),
-                            Err(_) => break, // accept loop gone
-                        }
-                    })
-                    .expect("spawn conn worker")
-            })
-            .collect();
-
-        // --- accept loop ---------------------------------------------
-        let accept = {
-            let inner = Arc::clone(&inner);
-            std::thread::Builder::new().name("esact-http-accept".to_string()).spawn(
-                move || {
-                    for stream in listener.incoming() {
-                        if inner.state() == STOPPED {
-                            break; // the drainer's poke lands here
-                        }
-                        let Ok(stream) = stream else { continue };
-                        inner.stats.connections_total.fetch_add(1, Ordering::Relaxed);
-                        // bounded handoff: all workers busy and the
-                        // queue full → this blocks, pushing backpressure
-                        // into the TCP backlog
-                        if conn_tx.send(stream).is_err() {
-                            break;
-                        }
-                    }
-                    // listener (and conn_tx) drop here: workers drain
-                    // the queued streams, then exit
-                },
-            )?
-        };
-
-        // --- drainer: DRAINING → (in-flight == 0) → STOPPED ----------
-        let drainer = {
-            let inner = Arc::clone(&inner);
-            std::thread::Builder::new().name("esact-http-drain".to_string()).spawn(
-                move || loop {
-                    std::thread::sleep(Duration::from_millis(20));
-                    match inner.state() {
-                        DRAINING => {
-                            let idle = inner.classify.in_flight() == 0
-                                && inner.generate.in_flight() == 0
-                                && inner.active_requests.load(Ordering::SeqCst) == 0;
-                            if idle {
-                                inner.state.store(STOPPED, Ordering::SeqCst);
-                                poke_listener(inner.local_addr);
-                                break;
-                            }
-                        }
-                        RUNNING => {}
-                        _ => break,
-                    }
-                },
-            )?
-        };
-
-        Ok(Gateway {
-            inner,
-            accept: Some(accept),
-            workers,
-            routers: vec![classify_router, generate_router],
-            drainer: Some(drainer),
-            classify_leader: Some(classify_leader),
-            generate_leader: Some(generate_leader),
-        })
+        Ok(Gateway { inner, tier: Some(tier), event_loop: Some(event_loop) })
     }
 
     /// The bound address (resolves `:0` bindings).
@@ -493,38 +485,20 @@ impl Gateway {
     }
 
     /// Wait for the gateway to drain (a [`ShutdownHandle::shutdown`]
-    /// or `/admin/shutdown` must flip it) and join every thread,
-    /// returning the leaders' final outcomes.
+    /// or `/admin/shutdown` must flip it) and join the tier and the
+    /// event loop, returning the leaders' final outcomes.
     pub fn join(mut self) -> Result<GatewayReport> {
-        let classify_res = self
-            .classify_leader
-            .take()
-            .expect("join once")
-            .join()
-            .expect("classify leader panicked");
-        let generate_res = self
-            .generate_leader
-            .take()
-            .expect("join once")
-            .join()
-            .expect("generate leader panicked");
-        // Both leaders have exited: every reply they will ever emit is
-        // in the router channels. On the error path (a leader died with
-        // work in flight) the in-flight counters never reach zero, so
-        // force the stop here instead of relying on the drainer.
-        self.inner.state.store(STOPPED, Ordering::SeqCst);
-        poke_listener(self.inner.local_addr);
-        for r in self.routers.drain(..) {
-            r.join().expect("router panicked");
+        let (classify_res, generate_res) = self.tier.take().expect("join once").join();
+        if classify_res.is_err() || generate_res.is_err() {
+            // a leader died with work parked: the loop's drain
+            // condition (tier idle, buffers flushed) can never be met,
+            // so force the stop. On the clean path the loop must reach
+            // STOPPED itself — it still has final bytes to flush.
+            self.inner.state.store(STOPPED, Ordering::SeqCst);
         }
-        if let Some(d) = self.drainer.take() {
-            d.join().expect("drainer panicked");
-        }
-        if let Some(a) = self.accept.take() {
-            a.join().expect("accept loop panicked");
-        }
-        for w in self.workers.drain(..) {
-            w.join().expect("conn worker panicked");
+        self.inner.waker.wake();
+        if let Some(l) = self.event_loop.take() {
+            l.join().expect("event loop panicked");
         }
         let stats = &self.inner.stats;
         Ok(GatewayReport {
@@ -543,116 +517,680 @@ impl Gateway {
     }
 }
 
-/// Wake a (possibly) blocked accept loop by connecting to it, retrying
-/// until the listener is really gone — a single poke can be absorbed
-/// without an accept iteration when the bounded worker handoff is full.
-fn poke_listener(addr: SocketAddr) {
-    for _ in 0..100 {
-        if TcpStream::connect(addr).is_err() {
-            return; // listener closed: accept loop has exited
+// ---------------------------------------------------------------------
+// the event loop
+// ---------------------------------------------------------------------
+
+/// What a parked connection is waiting on.
+enum Pending {
+    None,
+    /// A classify batch: completions trickle in per id; the response
+    /// renders once every id reported.
+    Classify {
+        ids: Vec<u64>,
+        got: HashMap<u64, (Vec<f32>, Duration)>,
+        t0: Instant,
+        deadline: Instant,
+        keep: bool,
+    },
+    /// A generate stream: chunks append to the out-buffer as they
+    /// arrive; `deadline` refreshes per chunk (stall detection).
+    Generate { id: u64, deadline: Instant, keep: bool },
+}
+
+struct ConnEntry {
+    stream: TcpStream,
+    conn: Conn,
+    pending: Pending,
+    interest: Interest,
+    /// Still present in the epoll set (a parked conn whose peer hung
+    /// up is taken out so the level-triggered RDHUP can't spin us).
+    registered: bool,
+    /// Peer half-closed: serve what was buffered, then tear down.
+    peer_eof: bool,
+}
+
+struct EventLoop {
+    inner: Arc<Inner>,
+    poller: Poller,
+    listener: TcpListener,
+    /// Listener interest dropped because `max_conns` sockets are open.
+    listener_paused: bool,
+    conns: HashMap<u64, ConnEntry>,
+    /// Tier job id → conn token (globally unique ids, one map).
+    jobs: HashMap<u64, u64>,
+    next_token: u64,
+    /// Reused completion scratch buffer.
+    completions: Vec<Completion>,
+}
+
+impl EventLoop {
+    fn new(inner: Arc<Inner>, poller: Poller, listener: TcpListener) -> EventLoop {
+        EventLoop {
+            inner,
+            poller,
+            listener,
+            listener_paused: false,
+            conns: HashMap::new(),
+            jobs: HashMap::new(),
+            next_token: FIRST_CONN_TOKEN,
+            completions: Vec::new(),
         }
-        std::thread::sleep(Duration::from_millis(10));
     }
-}
 
-// ---------------------------------------------------------------------
-// connection handling
-// ---------------------------------------------------------------------
-
-/// Guard that tracks one in-flight HTTP request for the drain barrier.
-struct ActiveGuard<'a>(&'a AtomicUsize);
-
-impl<'a> ActiveGuard<'a> {
-    fn new(counter: &'a AtomicUsize) -> Self {
-        counter.fetch_add(1, Ordering::SeqCst);
-        Self(counter)
-    }
-}
-
-impl Drop for ActiveGuard<'_> {
-    fn drop(&mut self) {
-        self.0.fetch_sub(1, Ordering::SeqCst);
-    }
-}
-
-fn handle_conn(inner: &Arc<Inner>, mut stream: TcpStream) {
-    let _ = stream.set_nodelay(true);
-    // short read timeout: the loop uses it as a tick to notice
-    // drain/stop and idle expiry without a dedicated timer thread
-    let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
-    let mut parser = RequestParser::new(inner.cfg.max_body);
-    let mut buf = [0u8; 8192];
-    let mut idle_since = Instant::now();
-    loop {
-        // serve every fully-buffered request first (pipelining)
-        match parser.take() {
-            Ok(Some(req)) => {
-                idle_since = Instant::now();
-                match handle_request(inner, &mut stream, req) {
-                    Ok(true) => continue,
-                    _ => return, // close requested or socket error
+    fn run(mut self) {
+        if self
+            .poller
+            .register(self.listener.as_raw_fd(), TOKEN_LISTENER, Interest::READ)
+            .is_err()
+        {
+            self.inner.state.store(STOPPED, Ordering::SeqCst);
+            return;
+        }
+        let mut events: Vec<Event> = Vec::new();
+        loop {
+            if self.inner.state() == STOPPED {
+                break;
+            }
+            if self.poller.wait(&mut events, Some(TICK)).is_err() {
+                break;
+            }
+            for &ev in &events {
+                match ev.token {
+                    TOKEN_LISTENER => self.accept_ready(),
+                    TOKEN_WAKER => self.inner.waker.drain(),
+                    token => self.conn_event(token, ev),
                 }
             }
-            Ok(None) => {}
-            Err(e) => {
-                // framing is broken: answer and close
-                inner.stats.bad_requests_total.fetch_add(1, Ordering::Relaxed);
-                let _ = respond_json(inner, &mut stream, e.status(), &error_body(&e.to_string()));
+            self.drain_completions();
+            self.sweep();
+            if self.inner.state() == DRAINING && self.try_finish_drain() {
+                break;
+            }
+        }
+        self.inner.state.store(STOPPED, Ordering::SeqCst);
+        // listener and every socket drop here
+    }
+
+    /// Accept everything the backlog has, up to `max_conns` open
+    /// sockets; at the cap, drop listener interest (resumed by
+    /// `close_conn`) so the kernel backlog carries the overflow.
+    /// Accepting continues during a drain — health probes need answers.
+    fn accept_ready(&mut self) {
+        loop {
+            if self.conns.len() >= self.inner.cfg.max_conns {
+                if !self.listener_paused
+                    && self
+                        .poller
+                        .modify(self.listener.as_raw_fd(), TOKEN_LISTENER, Interest::NONE)
+                        .is_ok()
+                {
+                    self.listener_paused = true;
+                }
                 return;
             }
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    let _ = stream.set_nodelay(true);
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let token = self.next_token;
+                    self.next_token += 1;
+                    if self.poller.register(stream.as_raw_fd(), token, Interest::READ).is_err() {
+                        continue;
+                    }
+                    self.inner.stats.connections_total.fetch_add(1, Ordering::Relaxed);
+                    self.inner.stats.open_connections.fetch_add(1, Ordering::Relaxed);
+                    self.conns.insert(
+                        token,
+                        ConnEntry {
+                            stream,
+                            conn: Conn::new(self.inner.cfg.max_body, Instant::now()),
+                            pending: Pending::None,
+                            interest: Interest::READ,
+                            registered: true,
+                            peer_eof: false,
+                        },
+                    );
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+                Err(_) => return,
+            }
         }
-        match stream.read(&mut buf) {
-            Ok(0) => return, // peer closed
-            Ok(n) => parser.push(&buf[..n]),
-            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
-                let state = inner.state.load(Ordering::SeqCst);
-                if state == STOPPED {
-                    return;
+    }
+
+    fn conn_event(&mut self, token: u64, ev: Event) {
+        let mut dead = false;
+        {
+            let Some(entry) = self.conns.get_mut(&token) else { return };
+            if ev.readable && entry.conn.wants_read() {
+                match entry.conn.on_readable(&mut entry.stream) {
+                    Ok(eof) => entry.peer_eof |= eof,
+                    Err(_) => dead = true,
                 }
-                // during a drain, idle keep-alive connections close so
-                // the worker pool can wind down; a half-received
-                // request still gets its read
-                if state == DRAINING && parser.buffered() == 0 {
-                    return;
+            } else if ev.hangup {
+                entry.peer_eof = true;
+                if !entry.conn.wants_read() && !entry.conn.wants_write() && entry.registered {
+                    // parked on a tier job with the peer's write side
+                    // gone: nothing to poll for until the completion
+                    // arrives, and the level-triggered RDHUP would spin
+                    // the loop — take the fd out of the set for now
+                    let _ = self.poller.deregister(entry.stream.as_raw_fd());
+                    entry.registered = false;
                 }
-                if idle_since.elapsed() > inner.cfg.keep_alive_idle {
+            }
+        }
+        if dead {
+            self.close_conn(token);
+        } else {
+            self.advance_conn(token);
+        }
+    }
+
+    /// Pull every complete pipelined request out of the parser and
+    /// dispatch it, flushing between requests so the state machine can
+    /// cycle Writing → KeepAlive → Reading without another socket
+    /// event (the bytes are already ours; epoll won't re-report them).
+    fn advance_conn(&mut self, token: u64) {
+        loop {
+            let req = {
+                let Some(entry) = self.conns.get_mut(&token) else { return };
+                if !matches!(entry.pending, Pending::None) {
+                    break;
+                }
+                match entry.conn.next_request(Instant::now()) {
+                    Ok(Some(req)) => req,
+                    Ok(None) => break,
+                    Err(e) => {
+                        // framing is broken: answer with the envelope
+                        // and close once it flushes
+                        self.inner.stats.bad_requests_total.fetch_add(1, Ordering::Relaxed);
+                        let status = e.status();
+                        self.inner.stats.record_status(status);
+                        let frame = http::render_response(
+                            status,
+                            &[("Content-Type", "application/json")],
+                            error_body(status, &e.to_string()).as_bytes(),
+                        );
+                        entry.conn.enqueue(&frame);
+                        entry.conn.mark_closing();
+                        break;
+                    }
+                }
+            };
+            self.dispatch(token, req);
+            self.flush_and_update(token);
+        }
+        // half-closed peer: everything it sent is dispatched or
+        // incomplete; once no job is parked, tear the socket down
+        let mark = self.conns.get(&token).is_some_and(|e| {
+            e.peer_eof
+                && matches!(e.pending, Pending::None)
+                && matches!(e.conn.state(), ConnState::Reading | ConnState::KeepAlive)
+        });
+        if mark {
+            if let Some(e) = self.conns.get_mut(&token) {
+                e.conn.mark_closing();
+            }
+        }
+        self.flush_and_update(token);
+    }
+
+    /// Route one parsed request.
+    fn dispatch(&mut self, token: u64, req: Request) {
+        self.inner.stats.http_requests_total.fetch_add(1, Ordering::Relaxed);
+        let keep = req.keep_alive();
+        const ROUTES: [&str; 5] =
+            ["/healthz", "/metrics", "/v1/classify", "/v1/generate", "/admin/shutdown"];
+        match (req.method.as_str(), req.path()) {
+            ("GET", "/healthz") => {
+                let (code, body) = healthz_body(&self.inner);
+                self.respond_json(token, code, &body, keep);
+            }
+            ("GET", "/metrics") => {
+                let body = metrics_body(&self.inner);
+                self.respond(
+                    token,
+                    200,
+                    &[("Content-Type", "text/plain; version=0.0.4")],
+                    body.as_bytes(),
+                    keep,
+                );
+            }
+            ("POST", "/v1/classify") => self.dispatch_classify(token, &req, keep),
+            ("POST", "/v1/generate") => self.dispatch_generate(token, &req, keep),
+            ("POST", "/admin/shutdown") => {
+                self.inner.begin_drain();
+                self.respond_json(token, 200, "{\"status\":\"draining\"}", keep);
+            }
+            (_, path) if ROUTES.contains(&path) => {
+                self.respond_error(token, 405, "method not allowed", keep);
+            }
+            _ => self.respond_error(token, 404, "no such route", keep),
+        }
+    }
+
+    /// Validate and submit a classify batch; on success the connection
+    /// parks (`Pending::Classify`) until every id completes.
+    fn dispatch_classify(&mut self, token: u64, req: &Request, keep: bool) {
+        let t0 = Instant::now();
+        let batch = match parse_classify_body(&self.inner, &req.body) {
+            Ok(batch) => batch,
+            Err(msg) => return self.respond_error(token, 400, &msg, keep),
+        };
+        if self.inner.state() != RUNNING {
+            return self.respond_error(token, 503, "gateway is draining", keep);
+        }
+        let k = batch.len();
+        let bound = self.inner.tier.classify_bound();
+        // a batch that can never fit the admission bound is a terminal
+        // client error, not a retryable 429 (retrying would loop forever)
+        if k > bound {
+            let msg = format!("batch of {k} exceeds the admission bound {bound}");
+            return self.respond_error(token, 400, &msg, keep);
+        }
+        let subs: Vec<Submission> =
+            batch.into_iter().map(|tokens| Submission::Classify { tokens }).collect();
+        match self.inner.tier.submit(subs) {
+            Ok(ids) => {
+                for &id in &ids {
+                    self.jobs.insert(id, token);
+                }
+                self.inner.active_requests.fetch_add(1, Ordering::SeqCst);
+                let deadline = t0 + self.inner.cfg.request_timeout;
+                if let Some(entry) = self.conns.get_mut(&token) {
+                    entry.pending = Pending::Classify {
+                        got: HashMap::with_capacity(ids.len()),
+                        ids,
+                        t0,
+                        deadline,
+                        keep,
+                    };
+                }
+            }
+            Err(SubmitError::Saturated) => {
+                self.respond_error(token, 429, "serving queue is full", keep)
+            }
+            Err(SubmitError::Closed) => {
+                self.respond_error(token, 503, "serving tier unavailable", keep)
+            }
+        }
+    }
+
+    /// Validate and submit one generate session; on success the stream
+    /// head goes on the wire and the connection parks
+    /// (`Pending::Generate`), chunks appending as the tier produces.
+    fn dispatch_generate(&mut self, token: u64, req: &Request, keep: bool) {
+        let (prompt, max_new, sampling) = match parse_generate_body(&self.inner, &req.body) {
+            Ok(parsed) => parsed,
+            Err(msg) => return self.respond_error(token, 400, &msg, keep),
+        };
+        if self.inner.state() != RUNNING {
+            return self.respond_error(token, 503, "gateway is draining", keep);
+        }
+        match self.inner.tier.submit(vec![Submission::Generate { prompt, max_new, sampling }]) {
+            Ok(ids) => {
+                let id = ids[0];
+                self.inner.stats.streams_total.fetch_add(1, Ordering::Relaxed);
+                self.inner.stats.record_status(200);
+                self.jobs.insert(id, token);
+                self.inner.active_requests.fetch_add(1, Ordering::SeqCst);
+                let head =
+                    http::render_stream_head(200, &[("Content-Type", "application/x-ndjson")]);
+                let deadline = Instant::now() + self.inner.cfg.request_timeout;
+                if let Some(entry) = self.conns.get_mut(&token) {
+                    entry.conn.enqueue(&head);
+                    entry.pending = Pending::Generate { id, deadline, keep };
+                }
+            }
+            Err(SubmitError::Saturated) => {
+                self.respond_error(token, 429, "all generate sessions are busy", keep)
+            }
+            Err(SubmitError::Closed) => {
+                self.respond_error(token, 503, "serving tier unavailable", keep)
+            }
+        }
+    }
+
+    /// Drain the tier's completion queue and resume parked conns.
+    fn drain_completions(&mut self) {
+        let mut completions = mem::take(&mut self.completions);
+        self.inner.tier.take_completions(&mut completions);
+        for c in completions.drain(..) {
+            match c {
+                Completion::Classify { id, logits, latency } => {
+                    self.finish_classify(id, logits, latency)
+                }
+                Completion::Generate { id, tokens, done } => self.stream_generate(id, tokens, done),
+            }
+        }
+        self.completions = completions;
+    }
+
+    /// One classify id finished; when its whole batch has, render the
+    /// response (ordered by submission ids, bit-exact f32 transport)
+    /// and resume the connection.
+    fn finish_classify(&mut self, id: u64, logits: Vec<f32>, latency: Duration) {
+        let Some(&token) = self.jobs.get(&id) else { return };
+        self.jobs.remove(&id);
+        let ready = {
+            let Some(entry) = self.conns.get_mut(&token) else { return };
+            match &mut entry.pending {
+                Pending::Classify { ids, got, .. } => {
+                    got.insert(id, (logits, latency));
+                    if got.len() == ids.len() {
+                        match mem::replace(&mut entry.pending, Pending::None) {
+                            Pending::Classify { ids, got, t0, keep, .. } => {
+                                Some((ids, got, t0, keep))
+                            }
+                            _ => unreachable!("pending variant checked above"),
+                        }
+                    } else {
+                        None
+                    }
+                }
+                _ => None,
+            }
+        };
+        let Some((ids, got, t0, keep)) = ready else { return };
+        self.inner.active_requests.fetch_sub(1, Ordering::SeqCst);
+        let mut body = String::from("{\"logits\":[");
+        for (i, id) in ids.iter().enumerate() {
+            if i > 0 {
+                body.push(',');
+            }
+            body.push_str(&json::f32_array(&got[id].0));
+        }
+        body.push_str("],\"latency_ms\":[");
+        for (i, id) in ids.iter().enumerate() {
+            if i > 0 {
+                body.push(',');
+            }
+            body.push_str(&format!("{:.3}", got[id].1.as_secs_f64() * 1e3));
+        }
+        body.push_str("]}");
+        self.inner.record_classify_latency(t0.elapsed().as_secs_f64());
+        self.respond_json(token, 200, &body, keep);
+        self.advance_conn(token);
+    }
+
+    /// One generate slice arrived: append it to the stream (empty
+    /// prefill slices stay off the wire), refresh the stall deadline,
+    /// and on `done` finish the chunked framing and resume.
+    fn stream_generate(&mut self, id: u64, tokens: Vec<i32>, done: bool) {
+        let Some(&token) = self.jobs.get(&id) else { return };
+        self.inner.stats.stream_tokens_total.fetch_add(tokens.len(), Ordering::Relaxed);
+        {
+            let Some(entry) = self.conns.get_mut(&token) else {
+                self.jobs.remove(&id);
+                return;
+            };
+            let Pending::Generate { deadline, keep, .. } = &mut entry.pending else { return };
+            *deadline = Instant::now() + self.inner.cfg.request_timeout;
+            let keep = *keep;
+            if !tokens.is_empty() || done {
+                let line = format!(
+                    "{{\"tokens\":{},\"done\":{}}}\n",
+                    json::i32_array(&tokens),
+                    done
+                );
+                entry.conn.enqueue(&http::render_chunk(line.as_bytes()));
+            }
+            if done {
+                entry.conn.enqueue(&http::render_final_chunk());
+                entry.pending = Pending::None;
+                entry.conn.complete(keep);
+            }
+        }
+        if done {
+            self.jobs.remove(&id);
+            self.inner.active_requests.fetch_sub(1, Ordering::SeqCst);
+            self.advance_conn(token);
+        } else {
+            self.flush_and_update(token);
+        }
+    }
+
+    /// Timer pass, once per tick: idle/slow-loris expiry, drain
+    /// soft-closes, and request deadlines.
+    fn sweep(&mut self) {
+        let now = Instant::now();
+        let draining = self.inner.state() == DRAINING;
+        let idle_timeout = self.inner.cfg.idle_timeout;
+        enum Action {
+            Reap,
+            SoftClose,
+            ClassifyTimeout,
+            GenerateTimeout,
+        }
+        let mut actions: Vec<(u64, Action)> = Vec::new();
+        for (&token, entry) in &self.conns {
+            match &entry.pending {
+                Pending::None => {
+                    if entry.conn.idle_expired(now, idle_timeout) {
+                        actions.push((token, Action::Reap));
+                    } else if draining
+                        && entry.conn.buffered() == 0
+                        && !entry.conn.wants_write()
+                        && entry.conn.idle_expired(now, DRAIN_GRACE)
+                    {
+                        // during a drain idle sockets close early, but
+                        // only after a grace window so a probe that
+                        // just connected still gets its answer
+                        actions.push((token, Action::SoftClose));
+                    }
+                }
+                Pending::Classify { deadline, .. } if now >= *deadline => {
+                    actions.push((token, Action::ClassifyTimeout));
+                }
+                Pending::Generate { deadline, .. } if now >= *deadline => {
+                    actions.push((token, Action::GenerateTimeout));
+                }
+                _ => {}
+            }
+        }
+        for (token, action) in actions {
+            match action {
+                Action::Reap => {
+                    self.inner.stats.conns_reaped_total.fetch_add(1, Ordering::Relaxed);
+                    self.close_conn(token);
+                }
+                Action::SoftClose => {
+                    if let Some(entry) = self.conns.get_mut(&token) {
+                        entry.conn.mark_closing();
+                    }
+                    self.flush_and_update(token);
+                }
+                Action::ClassifyTimeout => self.classify_timeout(token),
+                Action::GenerateTimeout => self.generate_timeout(token),
+            }
+        }
+    }
+
+    /// The tier missed a classify deadline: unpark with a 500. A late
+    /// completion for the abandoned ids is dropped at the jobs lookup.
+    fn classify_timeout(&mut self, token: u64) {
+        let keep = {
+            let Some(entry) = self.conns.get_mut(&token) else { return };
+            match mem::replace(&mut entry.pending, Pending::None) {
+                Pending::Classify { ids, keep, .. } => {
+                    for id in ids {
+                        self.jobs.remove(&id);
+                    }
+                    keep
+                }
+                other => {
+                    entry.pending = other;
                     return;
                 }
             }
-            Err(_) => return,
+        };
+        self.inner.active_requests.fetch_sub(1, Ordering::SeqCst);
+        self.respond_error(token, 500, "timed out on the serving tier", keep);
+        self.advance_conn(token);
+    }
+
+    /// The decode tier stalled mid-stream: emit the in-band envelope
+    /// line, terminate the chunked framing cleanly, and close.
+    fn generate_timeout(&mut self, token: u64) {
+        {
+            let Some(entry) = self.conns.get_mut(&token) else { return };
+            match mem::replace(&mut entry.pending, Pending::None) {
+                Pending::Generate { id, .. } => {
+                    self.jobs.remove(&id);
+                }
+                other => {
+                    entry.pending = other;
+                    return;
+                }
+            }
+            entry.conn.enqueue(&http::render_chunk(STREAM_STALL_LINE.as_bytes()));
+            entry.conn.enqueue(&http::render_final_chunk());
+            entry.conn.complete(false);
+        }
+        self.inner.active_requests.fetch_sub(1, Ordering::SeqCst);
+        self.flush_and_update(token);
+    }
+
+    /// Drain completion: nothing parked on the tier and every
+    /// out-buffer flushed → STOPPED (the caller breaks the loop).
+    fn try_finish_drain(&mut self) -> bool {
+        let busy = !self.inner.tier.idle()
+            || self
+                .conns
+                .values()
+                .any(|e| !matches!(e.pending, Pending::None) || e.conn.wants_write());
+        if busy {
+            return false;
+        }
+        self.inner.state.store(STOPPED, Ordering::SeqCst);
+        true
+    }
+
+    /// Flush what the socket will take, then reconcile epoll interest
+    /// with what the state machine wants; tear down finished conns.
+    fn flush_and_update(&mut self, token: u64) {
+        let mut dead = false;
+        {
+            let Some(entry) = self.conns.get_mut(&token) else { return };
+            if entry.conn.wants_write() && entry.conn.on_writable(&mut entry.stream).is_err() {
+                dead = true;
+            }
+            if !dead {
+                if entry.conn.done() {
+                    dead = true;
+                } else {
+                    let want = Interest {
+                        read: entry.conn.wants_read(),
+                        write: entry.conn.wants_write(),
+                    };
+                    if !entry.registered {
+                        if want != Interest::NONE {
+                            if self
+                                .poller
+                                .register(entry.stream.as_raw_fd(), token, want)
+                                .is_ok()
+                            {
+                                entry.registered = true;
+                                entry.interest = want;
+                            } else {
+                                dead = true;
+                            }
+                        }
+                    } else if want != entry.interest {
+                        if self.poller.modify(entry.stream.as_raw_fd(), token, want).is_ok() {
+                            entry.interest = want;
+                        } else {
+                            dead = true;
+                        }
+                    }
+                }
+            }
+        }
+        if dead {
+            self.close_conn(token);
+        }
+    }
+
+    /// Drop a connection: out of the epoll set, abandoned jobs
+    /// unrouted, gauges updated, and the listener resumed if the
+    /// `max_conns` cap had paused it.
+    fn close_conn(&mut self, token: u64) {
+        let Some(entry) = self.conns.remove(&token) else { return };
+        if entry.registered {
+            let _ = self.poller.deregister(entry.stream.as_raw_fd());
+        }
+        match entry.pending {
+            Pending::None => {}
+            Pending::Classify { ids, .. } => {
+                for id in ids {
+                    self.jobs.remove(&id);
+                }
+                self.inner.active_requests.fetch_sub(1, Ordering::SeqCst);
+            }
+            Pending::Generate { id, .. } => {
+                self.jobs.remove(&id);
+                self.inner.active_requests.fetch_sub(1, Ordering::SeqCst);
+            }
+        }
+        self.inner.stats.open_connections.fetch_sub(1, Ordering::Relaxed);
+        if self.listener_paused && self.conns.len() < self.inner.cfg.max_conns {
+            if self
+                .poller
+                .modify(self.listener.as_raw_fd(), TOKEN_LISTENER, Interest::READ)
+                .is_ok()
+            {
+                self.listener_paused = false;
+            }
+        }
+    }
+
+    // --- response helpers -------------------------------------------
+
+    fn respond(
+        &mut self,
+        token: u64,
+        code: u16,
+        headers: &[(&str, &str)],
+        body: &[u8],
+        keep: bool,
+    ) {
+        self.inner.stats.record_status(code);
+        let frame = http::render_response(code, headers, body);
+        if let Some(entry) = self.conns.get_mut(&token) {
+            entry.conn.enqueue(&frame);
+            entry.conn.complete(keep);
+        }
+    }
+
+    fn respond_json(&mut self, token: u64, code: u16, body: &str, keep: bool) {
+        self.respond(token, code, &[("Content-Type", "application/json")], body.as_bytes(), keep);
+    }
+
+    /// Answer with the unified error envelope; 429s carry both the
+    /// `Retry-After` header and the envelope's `retry_after_ms`.
+    fn respond_error(&mut self, token: u64, code: u16, msg: &str, keep: bool) {
+        let body = error_body(code, msg);
+        if code == 429 {
+            self.respond(
+                token,
+                code,
+                &[("Retry-After", "1"), ("Content-Type", "application/json")],
+                body.as_bytes(),
+                keep,
+            );
+        } else {
+            self.respond_json(token, code, &body, keep);
         }
     }
 }
 
-/// Dispatch one parsed request. Returns `Ok(true)` to keep the
-/// connection open.
-fn handle_request(inner: &Arc<Inner>, stream: &mut TcpStream, req: Request) -> io::Result<bool> {
-    inner.stats.http_requests_total.fetch_add(1, Ordering::Relaxed);
-    let _active = ActiveGuard::new(&inner.active_requests);
-    let keep = req.keep_alive();
-    const ROUTES: [&str; 5] =
-        ["/healthz", "/metrics", "/v1/classify", "/v1/generate", "/admin/shutdown"];
-    match (req.method.as_str(), req.path()) {
-        ("GET", "/healthz") => handle_healthz(inner, stream)?,
-        ("GET", "/metrics") => handle_metrics(inner, stream)?,
-        ("POST", "/v1/classify") => handle_classify(inner, stream, &req)?,
-        ("POST", "/v1/generate") => {
-            let streamed_ok = handle_generate(inner, stream, &req)?;
-            return Ok(keep && streamed_ok);
-        }
-        ("POST", "/admin/shutdown") => {
-            inner.begin_drain();
-            respond_json(inner, stream, 200, "{\"status\":\"draining\"}")?;
-        }
-        (_, path) if ROUTES.contains(&path) => {
-            respond_json(inner, stream, 405, &error_body("method not allowed"))?;
-        }
-        _ => respond_json(inner, stream, 404, &error_body("no such route"))?,
-    }
-    Ok(keep)
-}
+// ---------------------------------------------------------------------
+// route bodies and validation
+// ---------------------------------------------------------------------
 
-fn handle_healthz(inner: &Arc<Inner>, stream: &mut TcpStream) -> io::Result<()> {
+fn healthz_body(inner: &Inner) -> (u16, String) {
     let draining = inner.state() != RUNNING;
     let body = format!(
         "{{\"status\":\"{}\",\"seq_len\":{},\"vocab\":{},\"n_classes\":{},\"replicas\":{}}}",
@@ -662,25 +1200,13 @@ fn handle_healthz(inner: &Arc<Inner>, stream: &mut TcpStream) -> io::Result<()> 
         inner.server.n_classes(),
         inner.cfg.replicas
     );
-    respond_json(inner, stream, if draining { 503 } else { 200 }, &body)
-}
-
-fn handle_metrics(inner: &Arc<Inner>, stream: &mut TcpStream) -> io::Result<()> {
-    let body = metrics_body(inner);
-    let code = 200;
-    inner.stats.record_status(code);
-    http::write_response(
-        stream,
-        code,
-        &[("Content-Type", "text/plain; version=0.0.4")],
-        body.as_bytes(),
-    )
+    (if draining { 503 } else { 200 }, body)
 }
 
 /// Render the Prometheus exposition: tier rows straight from
 /// [`Server::live_snapshot`] (the same [`MetricRow`]s the CLI prints),
 /// then gateway-level counters, then per-shard plan-cache stats.
-fn metrics_body(inner: &Arc<Inner>) -> String {
+fn metrics_body(inner: &Inner) -> String {
     let mut out = String::new();
     for row in inner.server.live_snapshot().rows() {
         out.push_str("esact_");
@@ -695,6 +1221,14 @@ fn metrics_body(inner: &Arc<Inner>) -> String {
         MetricRow::of(
             "gateway_connections_total",
             s.connections_total.load(Ordering::Relaxed) as f64,
+        ),
+        MetricRow::of(
+            "gateway_open_connections",
+            s.open_connections.load(Ordering::Relaxed) as f64,
+        ),
+        MetricRow::of(
+            "gateway_conns_reaped_total",
+            s.conns_reaped_total.load(Ordering::Relaxed) as f64,
         ),
         MetricRow::of(
             "gateway_http_requests_total",
@@ -722,8 +1256,8 @@ fn metrics_body(inner: &Arc<Inner>) -> String {
             "gateway_stream_tokens_total",
             s.stream_tokens_total.load(Ordering::Relaxed) as f64,
         ),
-        MetricRow::of("gateway_classify_in_flight", inner.classify.in_flight() as f64),
-        MetricRow::of("gateway_generate_in_flight", inner.generate.in_flight() as f64),
+        MetricRow::of("gateway_classify_in_flight", inner.tier.classify_in_flight() as f64),
+        MetricRow::of("gateway_generate_in_flight", inner.tier.generate_in_flight() as f64),
         MetricRow::of(
             "gateway_active_requests",
             inner.active_requests.load(Ordering::SeqCst) as f64,
@@ -757,86 +1291,9 @@ fn metrics_body(inner: &Arc<Inner>) -> String {
     out
 }
 
-fn handle_classify(inner: &Arc<Inner>, stream: &mut TcpStream, req: &Request) -> io::Result<()> {
-    let t0 = Instant::now();
-    let batch = match parse_classify_body(inner, &req.body) {
-        Ok(batch) => batch,
-        Err(msg) => return respond_json(inner, stream, 400, &error_body(&msg)),
-    };
-    if inner.state() != RUNNING {
-        return respond_json(inner, stream, 503, &error_body("gateway is draining"));
-    }
-    let k = batch.len();
-    // a batch that can never fit the admission bound is a terminal
-    // client error, not a retryable 429 (retrying it would loop forever)
-    if k > inner.cfg.policy.max_queue {
-        let msg =
-            format!("batch of {k} exceeds the admission bound {}", inner.cfg.policy.max_queue);
-        return respond_json(inner, stream, 400, &error_body(&msg));
-    }
-    // the real bound: the same max_queue the leader stops pulling at —
-    // beyond it the tier is saturated and queueing would be unbounded
-    if !inner.classify.try_admit(k, inner.cfg.policy.max_queue) {
-        return respond_with(
-            inner,
-            stream,
-            429,
-            &[("Retry-After", "1"), ("Content-Type", "application/json")],
-            error_body("serving queue is full").as_bytes(),
-        );
-    }
-    let (ids, rx) = inner.classify.register(k);
-    let arrived = Instant::now();
-    let requests: Vec<ClassifyRequest> = ids
-        .iter()
-        .zip(batch)
-        .map(|(&id, tokens)| ClassifyRequest { id, tokens, arrived })
-        .collect();
-    if !inner.classify.send_all(requests) {
-        inner.classify.unregister(&ids);
-        inner.classify.release(k);
-        return respond_json(inner, stream, 503, &error_body("serving tier unavailable"));
-    }
-    let mut by_id: HashMap<u64, Reply> = HashMap::with_capacity(k);
-    let deadline = Instant::now() + inner.cfg.request_timeout;
-    while by_id.len() < k {
-        let remaining = deadline.saturating_duration_since(Instant::now());
-        if remaining.is_zero() {
-            break;
-        }
-        match rx.recv_timeout(remaining) {
-            Ok(reply) => {
-                by_id.insert(reply.id, reply);
-            }
-            Err(_) => break,
-        }
-    }
-    if by_id.len() < k {
-        inner.classify.unregister(&ids);
-        return respond_json(inner, stream, 500, &error_body("timed out on the serving tier"));
-    }
-    let mut body = String::from("{\"logits\":[");
-    for (i, id) in ids.iter().enumerate() {
-        if i > 0 {
-            body.push(',');
-        }
-        body.push_str(&json::f32_array(&by_id[id].logits));
-    }
-    body.push_str("],\"latency_ms\":[");
-    for (i, id) in ids.iter().enumerate() {
-        if i > 0 {
-            body.push(',');
-        }
-        body.push_str(&format!("{:.3}", by_id[id].latency.as_secs_f64() * 1e3));
-    }
-    body.push_str("]}");
-    inner.record_classify_latency(t0.elapsed().as_secs_f64());
-    respond_json(inner, stream, 200, &body)
-}
-
 /// Validate and extract the classify batch: `{"tokens": [[...], ...]}`
 /// (a single flat `[...]` is accepted as a batch of one).
-fn parse_classify_body(inner: &Arc<Inner>, body: &[u8]) -> Result<Vec<Vec<i32>>, String> {
+fn parse_classify_body(inner: &Inner, body: &[u8]) -> Result<Vec<Vec<i32>>, String> {
     let text =
         std::str::from_utf8(body).map_err(|_| "body is not valid UTF-8".to_string())?;
     let doc = Json::parse(text).map_err(|e| format!("bad JSON: {e}"))?;
@@ -865,87 +1322,11 @@ fn parse_classify_body(inner: &Arc<Inner>, body: &[u8]) -> Result<Vec<Vec<i32>>,
         .collect()
 }
 
-/// Stream one generation. Returns `Ok(false)` when the connection
-/// must close (stream aborted mid-way — framing no longer clean).
-fn handle_generate(
-    inner: &Arc<Inner>,
-    stream: &mut TcpStream,
-    req: &Request,
-) -> io::Result<bool> {
-    let (prompt, max_new, sampling) = match parse_generate_body(inner, &req.body) {
-        Ok(parsed) => parsed,
-        Err(msg) => {
-            respond_json(inner, stream, 400, &error_body(&msg))?;
-            return Ok(true);
-        }
-    };
-    if inner.state() != RUNNING {
-        respond_json(inner, stream, 503, &error_body("gateway is draining"))?;
-        return Ok(true);
-    }
-    if !inner.generate.try_admit(1, inner.cfg.max_sessions) {
-        respond_with(
-            inner,
-            stream,
-            429,
-            &[("Retry-After", "1"), ("Content-Type", "application/json")],
-            error_body("all generate sessions are busy").as_bytes(),
-        )?;
-        return Ok(true);
-    }
-    let (ids, rx) = inner.generate.register(1);
-    let id = ids[0];
-    let request = GenRequest { id, prompt, max_new, sampling, arrived: Instant::now() };
-    if !inner.generate.send_all(vec![request]) {
-        inner.generate.unregister(&ids);
-        inner.generate.release(1);
-        respond_json(inner, stream, 503, &error_body("serving tier unavailable"))?;
-        return Ok(true);
-    }
-    inner.stats.streams_total.fetch_add(1, Ordering::Relaxed);
-    inner.stats.record_status(200);
-    let mut w =
-        ChunkedWriter::begin(stream, 200, &[("Content-Type", "application/x-ndjson")])?;
-    loop {
-        match rx.recv_timeout(inner.cfg.request_timeout) {
-            Ok(chunk) => {
-                inner
-                    .stats
-                    .stream_tokens_total
-                    .fetch_add(chunk.tokens.len(), Ordering::Relaxed);
-                // prefill slices may be empty; only data or the final
-                // marker go on the wire
-                if !chunk.tokens.is_empty() || chunk.done {
-                    let line = format!(
-                        "{{\"tokens\":{},\"done\":{}}}\n",
-                        json::i32_array(&chunk.tokens),
-                        chunk.done
-                    );
-                    w.chunk(line.as_bytes())?;
-                }
-                if chunk.done {
-                    w.finish()?;
-                    return Ok(true);
-                }
-            }
-            Err(_) => {
-                // tier died or stalled past the timeout: emit a final
-                // error line, close the connection (framing preserved
-                // by the chunked terminator)
-                inner.generate.unregister(&ids);
-                let _ = w.chunk(b"{\"error\":\"decode tier stalled\",\"done\":true}\n");
-                let _ = w.finish();
-                return Ok(false);
-            }
-        }
-    }
-}
-
 type GenerateParams = (Vec<i32>, usize, Sampling);
 
 /// Validate `/v1/generate` bodies:
 /// `{"prompt": [...], "max_new": n, "top_k": k?, "temperature": t?, "seed": s?}`.
-fn parse_generate_body(inner: &Arc<Inner>, body: &[u8]) -> Result<GenerateParams, String> {
+fn parse_generate_body(inner: &Inner, body: &[u8]) -> Result<GenerateParams, String> {
     let text =
         std::str::from_utf8(body).map_err(|_| "body is not valid UTF-8".to_string())?;
     let doc = Json::parse(text).map_err(|e| format!("bad JSON: {e}"))?;
@@ -986,43 +1367,13 @@ fn parse_generate_body(inner: &Arc<Inner>, body: &[u8]) -> Result<GenerateParams
     Ok((prompt, max_new, sampling))
 }
 
-fn error_body(msg: &str) -> String {
-    Json::Obj(vec![("error".to_string(), Json::Str(msg.to_string()))]).encode()
-}
-
-fn respond_json(
-    inner: &Arc<Inner>,
-    stream: &mut TcpStream,
-    code: u16,
-    body: &str,
-) -> io::Result<()> {
-    respond_with(
-        inner,
-        stream,
-        code,
-        &[("Content-Type", "application/json")],
-        body.as_bytes(),
-    )
-}
-
-fn respond_with(
-    inner: &Arc<Inner>,
-    stream: &mut TcpStream,
-    code: u16,
-    headers: &[(&str, &str)],
-    body: &[u8],
-) -> io::Result<()> {
-    inner.stats.record_status(code);
-    http::write_response(stream, code, headers, body)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::SplsConfig;
     use crate::net::client::{classify_body, HttpClient};
     use crate::util::rng::Xoshiro256pp;
-    use std::io::Write;
+    use std::io::{Read, Write};
     use std::path::Path;
 
     fn artifacts_dir() -> std::path::PathBuf {
@@ -1058,9 +1409,75 @@ mod tests {
         String::from_utf8_lossy(&buf).to_string()
     }
 
+    /// Read until EOF or timeout — for responses that close the conn,
+    /// this captures the complete body.
+    fn read_all_text(s: &mut TcpStream) -> String {
+        let _ = s.set_read_timeout(Some(Duration::from_millis(500)));
+        let mut buf = Vec::new();
+        let mut tmp = [0u8; 4096];
+        loop {
+            match s.read(&mut tmp) {
+                Ok(0) => break,
+                Ok(n) => buf.extend_from_slice(&tmp[..n]),
+                Err(_) => break,
+            }
+        }
+        String::from_utf8_lossy(&buf).to_string()
+    }
+
+    fn default_cfg() -> GatewayConfig {
+        GatewayConfig::builder().build().unwrap()
+    }
+
+    #[test]
+    fn builder_validates_every_bound() {
+        assert!(GatewayConfig::builder().max_conns(0).build().is_err());
+        assert!(GatewayConfig::builder().replicas(0).build().is_err());
+        assert!(GatewayConfig::builder()
+            .policy(BatchPolicy { max_queue: 0, ..Default::default() })
+            .build()
+            .is_err());
+        assert!(GatewayConfig::builder().steps_per_slice(0).build().is_err());
+        assert!(GatewayConfig::builder().max_sessions(0).build().is_err());
+        assert!(GatewayConfig::builder().max_body(0).build().is_err());
+        assert!(GatewayConfig::builder().max_events(0).build().is_err());
+        assert!(GatewayConfig::builder().request_timeout(Duration::ZERO).build().is_err());
+        assert!(GatewayConfig::builder().idle_timeout(Duration::ZERO).build().is_err());
+        let cfg = GatewayConfig::builder()
+            .addr("127.0.0.1:0")
+            .max_conns(64)
+            .idle_timeout(Duration::from_millis(500))
+            .build()
+            .unwrap();
+        assert_eq!(cfg.max_conns, 64);
+        assert_eq!(cfg.idle_timeout, Duration::from_millis(500));
+        // untouched knobs keep the documented defaults
+        assert_eq!(cfg.max_events, 256);
+        assert_eq!(cfg.request_timeout, Duration::from_secs(30));
+    }
+
+    #[test]
+    fn error_envelope_has_stable_codes_and_retry_hint() {
+        let doc = Json::parse(&error_body(429, "serving queue is full")).unwrap();
+        let err = doc.get("error").unwrap();
+        assert_eq!(err.get("code").unwrap().as_str(), Some("saturated"));
+        assert_eq!(err.get("message").unwrap().as_str(), Some("serving queue is full"));
+        assert_eq!(err.get("retry_after_ms").unwrap().as_usize(), Some(1000));
+        let doc = Json::parse(&error_body(404, "no such route")).unwrap();
+        let err = doc.get("error").unwrap();
+        assert_eq!(err.get("code").unwrap().as_str(), Some("not_found"));
+        assert!(err.get("retry_after_ms").is_none(), "only 429 carries the hint");
+        // messages with quotes stay valid JSON
+        let doc = Json::parse(&error_body(400, "missing \"tokens\" field")).unwrap();
+        assert_eq!(
+            doc.get("error").unwrap().get("message").unwrap().as_str(),
+            Some("missing \"tokens\" field")
+        );
+    }
+
     #[test]
     fn healthz_metrics_and_unknown_routes_over_one_keepalive_conn() {
-        let (gw, addr) = start_gateway(GatewayConfig::default());
+        let (gw, addr) = start_gateway(default_cfg());
         let mut c = HttpClient::connect(&addr).unwrap();
         let h = c.get("/healthz").unwrap();
         assert_eq!(h.status, 200);
@@ -1077,19 +1494,31 @@ mod tests {
             "esact_generate_tokens_total",
             "esact_plan_cache_hit_rate",
             "esact_gateway_http_requests_total",
+            "esact_gateway_open_connections",
             "esact_replica_busy_seconds",
             "esact_plan_cache_shard_entries{shard=\"0\"}",
         ] {
             assert!(text.contains(needle), "metrics missing {needle}:\n{text}");
         }
-        assert_eq!(c.get("/nope").unwrap().status, 404);
-        assert_eq!(c.post_json("/healthz", "{}").unwrap().status, 405);
+        let nf = c.get("/nope").unwrap();
+        assert_eq!(nf.status, 404);
+        let err = nf.json().unwrap();
+        assert_eq!(
+            err.get("error").unwrap().get("code").unwrap().as_str(),
+            Some("not_found")
+        );
+        let mna = c.post_json("/healthz", "{}").unwrap();
+        assert_eq!(mna.status, 405);
+        assert_eq!(
+            mna.json().unwrap().get("error").unwrap().get("code").unwrap().as_str(),
+            Some("method_not_allowed")
+        );
         gw.shutdown().unwrap();
     }
 
     #[test]
     fn classify_validates_input_before_the_executor_can_panic() {
-        let (gw, addr) = start_gateway(GatewayConfig::default());
+        let (gw, addr) = start_gateway(default_cfg());
         let mut c = HttpClient::connect(&addr).unwrap();
         let pool = seqs(2, 64);
         let body = classify_body(&[&pool[0][..], &pool[1][..]]);
@@ -1111,6 +1540,13 @@ mod tests {
         for bad in &bad_bodies {
             let r = c.post_json("/v1/classify", bad).unwrap();
             assert_eq!(r.status, 400, "{bad:?}");
+            // every 400 carries the envelope with a stable code
+            let err = r.json().unwrap();
+            assert_eq!(
+                err.get("error").unwrap().get("code").unwrap().as_str(),
+                Some("bad_request"),
+                "{bad:?}"
+            );
         }
         // the gateway is still healthy after all that abuse
         assert_eq!(c.get("/healthz").unwrap().status, 200);
@@ -1119,24 +1555,32 @@ mod tests {
 
     #[test]
     fn raw_socket_abuse_gets_clean_http_errors() {
-        let (gw, addr) = start_gateway(GatewayConfig::default());
+        let (gw, addr) = start_gateway(default_cfg());
         // invalid UTF-8 body → 400, connection stays usable
         let mut s = TcpStream::connect(&addr).unwrap();
         s.write_all(b"POST /v1/classify HTTP/1.1\r\nContent-Length: 2\r\n\r\n\xff\xfe")
             .unwrap();
         let text = read_response_text(&mut s);
         assert!(text.starts_with("HTTP/1.1 400"), "{text}");
-        // garbage request line → 400 and close
+        // garbage request line → 400 envelope and close
         let mut s = TcpStream::connect(&addr).unwrap();
         s.write_all(b"GARBAGE\r\n\r\n").unwrap();
-        let text = read_response_text(&mut s);
+        let text = read_all_text(&mut s);
         assert!(text.starts_with("HTTP/1.1 400"), "{text}");
-        // oversized declared body → 413
+        assert!(text.contains("\"code\":\"bad_request\""), "{text}");
+        // oversized declared body → 413 envelope
         let mut s = TcpStream::connect(&addr).unwrap();
         s.write_all(b"POST /v1/classify HTTP/1.1\r\nContent-Length: 99999999\r\n\r\n")
             .unwrap();
-        let text = read_response_text(&mut s);
+        let text = read_all_text(&mut s);
         assert!(text.starts_with("HTTP/1.1 413"), "{text}");
+        assert!(text.contains("\"code\":\"body_too_large\""), "{text}");
+        // unsupported HTTP version → 505 envelope
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(b"GET /healthz HTTP/2.0\r\n\r\n").unwrap();
+        let text = read_all_text(&mut s);
+        assert!(text.starts_with("HTTP/1.1 505"), "{text}");
+        assert!(text.contains("\"code\":\"http_version\""), "{text}");
         // two pipelined requests in one segment → two responses in order
         let mut s = TcpStream::connect(&addr).unwrap();
         s.write_all(b"GET /healthz HTTP/1.1\r\n\r\nGET /nope HTTP/1.1\r\n\r\n").unwrap();
@@ -1161,11 +1605,11 @@ mod tests {
     fn saturation_sheds_with_429_retry_after_and_counts_it() {
         use std::sync::atomic::AtomicUsize;
         // admission bound 1: concurrent posts must overlap and shed
-        let cfg = GatewayConfig {
-            policy: BatchPolicy { max_queue: 1, ..Default::default() },
-            max_conns: 12,
-            ..Default::default()
-        };
+        let cfg = GatewayConfig::builder()
+            .policy(BatchPolicy { max_queue: 1, ..Default::default() })
+            .max_conns(12)
+            .build()
+            .unwrap();
         let (gw, addr) = start_gateway(cfg);
         let pool = Arc::new(seqs(4, 64));
         let ok = Arc::new(AtomicUsize::new(0));
@@ -1188,6 +1632,13 @@ mod tests {
                                     r.header("retry-after"),
                                     Some("1"),
                                     "429 must carry Retry-After"
+                                );
+                                let err = r.json().unwrap();
+                                let env = err.get("error").unwrap();
+                                assert_eq!(env.get("code").unwrap().as_str(), Some("saturated"));
+                                assert_eq!(
+                                    env.get("retry_after_ms").unwrap().as_usize(),
+                                    Some(1000)
                                 );
                                 shed.fetch_add(1, Ordering::Relaxed);
                             }
@@ -1217,8 +1668,85 @@ mod tests {
     }
 
     #[test]
+    fn hundreds_of_idle_connections_churn_without_starving_requests() {
+        let cfg = GatewayConfig::builder().max_conns(512).build().unwrap();
+        let (gw, addr) = start_gateway(cfg);
+        let mut idle: Vec<TcpStream> =
+            (0..128).map(|_| TcpStream::connect(&addr).unwrap()).collect();
+        // requests still flow while the idle herd sits connected
+        let mut c = HttpClient::connect(&addr).unwrap();
+        assert_eq!(c.get("/healthz").unwrap().status, 200);
+        // churn: drop half, reconnect as many
+        for s in idle.drain(..64) {
+            drop(s);
+        }
+        for _ in 0..64 {
+            idle.push(TcpStream::connect(&addr).unwrap());
+        }
+        assert_eq!(c.get("/healthz").unwrap().status, 200);
+        // an arbitrary idle socket is still usable after the churn
+        let s = idle.last_mut().unwrap();
+        s.write_all(b"GET /healthz HTTP/1.1\r\n\r\n").unwrap();
+        let text = read_response_text(s);
+        assert!(text.starts_with("HTTP/1.1 200"), "{text}");
+        // the gauge sees the herd (128 idle + the HttpClient)
+        let text = String::from_utf8(c.get("/metrics").unwrap().body).unwrap();
+        let line = text
+            .lines()
+            .find(|l| l.starts_with("esact_gateway_open_connections"))
+            .expect("open_connections gauge");
+        let value: f64 = line.split_whitespace().last().unwrap().parse().unwrap();
+        assert!(value >= 129.0, "open_connections gauge too low: {value}");
+        drop(idle);
+        gw.shutdown().unwrap();
+    }
+
+    #[test]
+    fn slow_loris_connections_are_reaped_and_counted() {
+        let cfg = GatewayConfig::builder()
+            .idle_timeout(Duration::from_millis(300))
+            .build()
+            .unwrap();
+        let (gw, addr) = start_gateway(cfg);
+        let mut lorises: Vec<TcpStream> = (0..8)
+            .map(|_| {
+                let mut s = TcpStream::connect(&addr).unwrap();
+                // a partial request head that never completes
+                s.write_all(b"POST /v1/classify HT").unwrap();
+                s
+            })
+            .collect();
+        // trickle another byte into half of them: idle time counts
+        // from the last *completed* request, so it doesn't help
+        std::thread::sleep(Duration::from_millis(150));
+        for s in lorises.iter_mut().take(4) {
+            let _ = s.write_all(b"T");
+        }
+        let mut c = HttpClient::connect(&addr).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            let text = String::from_utf8(c.get("/metrics").unwrap().body).unwrap();
+            let reaped = text
+                .lines()
+                .find(|l| l.starts_with("esact_gateway_conns_reaped_total"))
+                .and_then(|l| l.split_whitespace().last())
+                .and_then(|v| v.parse::<f64>().ok())
+                .unwrap_or(0.0);
+            if reaped >= 8.0 {
+                break;
+            }
+            assert!(Instant::now() < deadline, "lorises not reaped, count {reaped}");
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        // the gateway is healthy throughout
+        assert_eq!(c.get("/healthz").unwrap().status, 200);
+        drop(lorises);
+        gw.shutdown().unwrap();
+    }
+
+    #[test]
     fn admin_shutdown_drains_and_closes_the_listener() {
-        let (gw, addr) = start_gateway(GatewayConfig::default());
+        let (gw, addr) = start_gateway(default_cfg());
         let mut c = HttpClient::connect(&addr).unwrap();
         assert_eq!(c.post_json("/admin/shutdown", "").unwrap().status, 200);
         let report = gw.join().unwrap();

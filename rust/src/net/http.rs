@@ -241,6 +241,63 @@ pub fn status_text(code: u16) -> &'static str {
     }
 }
 
+/// Render one complete `Content-Length`-framed response into bytes.
+///
+/// This is the resumable write side: the event-loop gateway appends
+/// the rendered frame to a connection's out-buffer and flushes it as
+/// the socket allows, instead of blocking a thread in `write_all`.
+pub fn render_response(code: u16, headers: &[(&str, &str)], body: &[u8]) -> Vec<u8> {
+    let mut out = format!(
+        "HTTP/1.1 {code} {}\r\nContent-Length: {}\r\n",
+        status_text(code),
+        body.len()
+    )
+    .into_bytes();
+    for (k, v) in headers {
+        out.extend_from_slice(k.as_bytes());
+        out.extend_from_slice(b": ");
+        out.extend_from_slice(v.as_bytes());
+        out.extend_from_slice(b"\r\n");
+    }
+    out.extend_from_slice(b"\r\n");
+    out.extend_from_slice(body);
+    out
+}
+
+/// Render the head of a `Transfer-Encoding: chunked` response.
+pub fn render_stream_head(code: u16, headers: &[(&str, &str)]) -> Vec<u8> {
+    let mut out = format!(
+        "HTTP/1.1 {code} {}\r\nTransfer-Encoding: chunked\r\n",
+        status_text(code)
+    )
+    .into_bytes();
+    for (k, v) in headers {
+        out.extend_from_slice(k.as_bytes());
+        out.extend_from_slice(b": ");
+        out.extend_from_slice(v.as_bytes());
+        out.extend_from_slice(b"\r\n");
+    }
+    out.extend_from_slice(b"\r\n");
+    out
+}
+
+/// Render one data chunk. Empty data renders to nothing — a
+/// zero-length chunk is the protocol's end-of-stream marker.
+pub fn render_chunk(data: &[u8]) -> Vec<u8> {
+    if data.is_empty() {
+        return Vec::new();
+    }
+    let mut out = format!("{:x}\r\n", data.len()).into_bytes();
+    out.extend_from_slice(data);
+    out.extend_from_slice(b"\r\n");
+    out
+}
+
+/// Render the stream terminator (`0\r\n\r\n`).
+pub fn render_final_chunk() -> Vec<u8> {
+    b"0\r\n\r\n".to_vec()
+}
+
 /// Write one complete `Content-Length`-framed response.
 pub fn write_response(
     w: &mut impl Write,
@@ -248,20 +305,7 @@ pub fn write_response(
     headers: &[(&str, &str)],
     body: &[u8],
 ) -> io::Result<()> {
-    let mut head = format!(
-        "HTTP/1.1 {code} {}\r\nContent-Length: {}\r\n",
-        status_text(code),
-        body.len()
-    );
-    for (k, v) in headers {
-        head.push_str(k);
-        head.push_str(": ");
-        head.push_str(v);
-        head.push_str("\r\n");
-    }
-    head.push_str("\r\n");
-    w.write_all(head.as_bytes())?;
-    w.write_all(body)?;
+    w.write_all(&render_response(code, headers, body))?;
     w.flush()
 }
 
@@ -274,18 +318,7 @@ pub struct ChunkedWriter<'a, W: Write> {
 impl<'a, W: Write> ChunkedWriter<'a, W> {
     /// Write the response head and switch to chunked framing.
     pub fn begin(w: &'a mut W, code: u16, headers: &[(&str, &str)]) -> io::Result<Self> {
-        let mut head = format!(
-            "HTTP/1.1 {code} {}\r\nTransfer-Encoding: chunked\r\n",
-            status_text(code)
-        );
-        for (k, v) in headers {
-            head.push_str(k);
-            head.push_str(": ");
-            head.push_str(v);
-            head.push_str("\r\n");
-        }
-        head.push_str("\r\n");
-        w.write_all(head.as_bytes())?;
+        w.write_all(&render_stream_head(code, headers))?;
         w.flush()?;
         Ok(Self { w })
     }
@@ -296,15 +329,13 @@ impl<'a, W: Write> ChunkedWriter<'a, W> {
         if data.is_empty() {
             return Ok(());
         }
-        write!(self.w, "{:x}\r\n", data.len())?;
-        self.w.write_all(data)?;
-        self.w.write_all(b"\r\n")?;
+        self.w.write_all(&render_chunk(data))?;
         self.w.flush()
     }
 
     /// Terminate the stream (`0\r\n\r\n`).
     pub fn finish(self) -> io::Result<()> {
-        self.w.write_all(b"0\r\n\r\n")?;
+        self.w.write_all(&render_final_chunk())?;
         self.w.flush()
     }
 }
@@ -591,6 +622,26 @@ mod tests {
         assert!(text.contains("Content-Length: 9\r\n"));
         assert!(text.contains("Retry-After: 1\r\n"));
         assert!(text.ends_with("\r\n\r\nslow down"));
+    }
+
+    #[test]
+    fn render_helpers_match_the_blocking_writers_byte_for_byte() {
+        let headers = [("Content-Type", "application/json"), ("Retry-After", "1")];
+        let mut wrote = Vec::new();
+        write_response(&mut wrote, 429, &headers, b"{\"x\":1}").unwrap();
+        assert_eq!(wrote, render_response(429, &headers, b"{\"x\":1}"));
+
+        let mut stream = Vec::new();
+        {
+            let mut w = ChunkedWriter::begin(&mut stream, 200, &[("X", "y")]).unwrap();
+            w.chunk(b"abc").unwrap();
+            w.finish().unwrap();
+        }
+        let mut rendered = render_stream_head(200, &[("X", "y")]);
+        rendered.extend_from_slice(&render_chunk(b"abc"));
+        rendered.extend_from_slice(&render_final_chunk());
+        assert_eq!(stream, rendered);
+        assert!(render_chunk(b"").is_empty(), "empty chunk is not a frame");
     }
 
     #[test]

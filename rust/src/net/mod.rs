@@ -1,23 +1,35 @@
 //! L4 network frontend: a dependency-free HTTP/1.1 gateway that puts
 //! the replicated serving coordinator on a socket, plus the matching
 //! blocking client and HTTP load generator. Everything here is std-only
-//! (TcpListener/TcpStream + threads) so the default build stays
-//! hermetic — no tokio, hyper, or serde (DESIGN.md §Network gateway).
+//! (TcpListener/TcpStream + threads + raw epoll FFI) so the default
+//! build stays hermetic — no tokio, hyper, or serde (DESIGN.md
+//! §Network gateway).
 //!
 //! * [`http`] — incremental request parser (partial-read/pipelining
-//!   safe, bounded heads and bodies), response writers, chunked codec.
+//!   safe, bounded heads and bodies), response renderers/writers,
+//!   chunked codec.
 //! * [`json`] — minimal JSON with bit-exact f32 transport (the
 //!   loopback parity tests ride on it).
-//! * [`gateway`] — accept loop, bounded connection pool, the four
-//!   routes over `Server::serve_replicated`/`serve_generate`,
-//!   admission-bound 429 backpressure, graceful drain.
+//! * [`poll`] — std-only `epoll(7)` + `eventfd(2)` readiness layer the
+//!   event loop parks in (Linux; level-triggered).
+//! * [`conn`] — sans-io per-connection state machine
+//!   (Reading → Dispatched → Writing → KeepAlive/Closing) feeding the
+//!   [`http`] parser; unit-tested with scripted partial reads/writes.
+//! * [`gateway`] — the event-loop gateway: one thread, thousands of
+//!   sockets, the four routes over the coordinator's `TierHandle`,
+//!   admission-bound 429 backpressure, unified error envelope,
+//!   graceful drain.
 //! * [`client`] — keep-alive client, streaming consumer, closed-loop
 //!   and Poisson HTTP loadgen reusing `coordinator::loadgen` schedules.
 
 pub mod client;
+pub mod conn;
 pub mod gateway;
 pub mod http;
 pub mod json;
+pub mod poll;
 
-pub use client::{HttpClient, LoadReport, StreamResult};
-pub use gateway::{Gateway, GatewayConfig, GatewayReport, ShutdownHandle};
+pub use client::{ErrorEnvelope, HttpClient, IdleConns, LoadReport, StreamResult};
+pub use gateway::{
+    Gateway, GatewayConfig, GatewayConfigBuilder, GatewayReport, ShutdownHandle,
+};

@@ -1,0 +1,409 @@
+//! Readiness polling for the event-loop gateway: a thin, std-only
+//! abstraction over raw `epoll(7)` plus an `eventfd(2)` waker, declared
+//! through direct `extern "C"` bindings (std already links libc on
+//! Linux; the vendored crate set has no `libc` crate).
+//!
+//! The surface is deliberately tiny — register/modify/deregister a fd
+//! under a `u64` token with read/write [`Interest`], block in
+//! [`Poller::wait`] for [`Event`]s, and cross-thread-wake the loop via
+//! [`Waker`]. Level-triggered semantics throughout: an fd keeps
+//! reporting ready until the condition is consumed, so the loop never
+//! needs to drain a socket to exhaustion inside one event.
+
+use std::io;
+use std::time::Duration;
+
+/// What a registration wants to hear about. Hangup/error conditions
+/// are always reported regardless of interest, so a connection parked
+/// on an in-flight job (`Interest::NONE`) still learns about peer
+/// disconnects without busy-waking on readable bytes it refuses to
+/// consume.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Interest {
+    pub read: bool,
+    pub write: bool,
+}
+
+impl Interest {
+    pub const NONE: Interest = Interest { read: false, write: false };
+    pub const READ: Interest = Interest { read: true, write: false };
+    pub const WRITE: Interest = Interest { read: false, write: true };
+    pub const BOTH: Interest = Interest { read: true, write: true };
+}
+
+/// One readiness notification out of [`Poller::wait`].
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    /// The token the fd was registered under.
+    pub token: u64,
+    /// Reading will make progress (data, EOF, or a pending error).
+    pub readable: bool,
+    /// Writing will make progress (or surface a pending error).
+    pub writable: bool,
+    /// The peer closed or the socket errored (`EPOLLRDHUP`/`HUP`/`ERR`).
+    pub hangup: bool,
+}
+
+#[cfg(target_os = "linux")]
+mod sys {
+    use super::{Event, Interest};
+    use std::io;
+    use std::os::fd::RawFd;
+    use std::os::raw::{c_int, c_uint, c_void};
+    use std::time::Duration;
+
+    const EPOLL_CLOEXEC: c_int = 0o2000000;
+    const EPOLL_CTL_ADD: c_int = 1;
+    const EPOLL_CTL_DEL: c_int = 2;
+    const EPOLL_CTL_MOD: c_int = 3;
+    const EPOLLIN: u32 = 0x001;
+    const EPOLLOUT: u32 = 0x004;
+    const EPOLLERR: u32 = 0x008;
+    const EPOLLHUP: u32 = 0x010;
+    const EPOLLRDHUP: u32 = 0x2000;
+    const EFD_NONBLOCK: c_int = 0o4000;
+    const EFD_CLOEXEC: c_int = 0o2000000;
+    const RLIMIT_NOFILE: c_int = 7;
+
+    /// `struct epoll_event` — packed on x86-64 (the kernel ABI quirk),
+    /// naturally aligned elsewhere. Fields are only ever read by value.
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    #[repr(C)]
+    struct Rlimit {
+        cur: u64,
+        max: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: c_int) -> c_int;
+        fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+        fn epoll_wait(
+            epfd: c_int,
+            events: *mut EpollEvent,
+            max_events: c_int,
+            timeout_ms: c_int,
+        ) -> c_int;
+        fn eventfd(initval: c_uint, flags: c_int) -> c_int;
+        fn close(fd: c_int) -> c_int;
+        fn read(fd: c_int, buf: *mut c_void, count: usize) -> isize;
+        fn write(fd: c_int, buf: *const c_void, count: usize) -> isize;
+        fn getrlimit(resource: c_int, rlim: *mut Rlimit) -> c_int;
+        fn setrlimit(resource: c_int, rlim: *const Rlimit) -> c_int;
+    }
+
+    fn mask(interest: Interest) -> u32 {
+        let mut m = EPOLLRDHUP;
+        if interest.read {
+            m |= EPOLLIN;
+        }
+        if interest.write {
+            m |= EPOLLOUT;
+        }
+        m
+    }
+
+    /// Level-triggered epoll instance plus a reusable kernel-facing
+    /// event buffer (sized by `max_events` at construction — the knob
+    /// `GatewayConfig::max_events` feeds).
+    pub struct Poller {
+        epfd: RawFd,
+        scratch: Vec<EpollEvent>,
+    }
+
+    impl Poller {
+        pub fn new(max_events: usize) -> io::Result<Poller> {
+            let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            if epfd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Poller {
+                epfd,
+                scratch: Vec::with_capacity(max_events.clamp(1, 4096)),
+            })
+        }
+
+        fn ctl(&self, op: c_int, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+            let mut ev = EpollEvent {
+                events: mask(interest),
+                data: token,
+            };
+            let arg = if op == EPOLL_CTL_DEL {
+                std::ptr::null_mut()
+            } else {
+                &mut ev as *mut EpollEvent
+            };
+            if unsafe { epoll_ctl(self.epfd, op, fd, arg) } < 0 {
+                Err(io::Error::last_os_error())
+            } else {
+                Ok(())
+            }
+        }
+
+        pub fn register(&self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_ADD, fd, token, interest)
+        }
+
+        pub fn modify(&self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_MOD, fd, token, interest)
+        }
+
+        pub fn deregister(&self, fd: RawFd) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_DEL, fd, 0, Interest::NONE)
+        }
+
+        /// Block until readiness or `timeout` (`None` = forever),
+        /// appending decoded events into `out` (cleared first). An
+        /// `EINTR` wakeup returns an empty set rather than an error.
+        pub fn wait(&mut self, out: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<()> {
+            out.clear();
+            let timeout_ms: c_int = match timeout {
+                None => -1,
+                Some(d) if d.is_zero() => 0,
+                // round sub-millisecond timeouts up so a 100µs tick
+                // cannot degenerate into a busy spin
+                Some(d) => d.as_millis().clamp(1, c_int::MAX as u128) as c_int,
+            };
+            let n = unsafe {
+                epoll_wait(
+                    self.epfd,
+                    self.scratch.as_mut_ptr(),
+                    self.scratch.capacity() as c_int,
+                    timeout_ms,
+                )
+            };
+            if n < 0 {
+                let err = io::Error::last_os_error();
+                if err.kind() == io::ErrorKind::Interrupted {
+                    return Ok(());
+                }
+                return Err(err);
+            }
+            // The kernel filled the first `n` slots of the scratch
+            // buffer; adopt them (plain-old-data, no Drop).
+            unsafe { self.scratch.set_len(n as usize) };
+            for ev in &self.scratch {
+                let (events, data) = (ev.events, ev.data);
+                out.push(Event {
+                    token: data,
+                    readable: events & (EPOLLIN | EPOLLRDHUP | EPOLLHUP | EPOLLERR) != 0,
+                    writable: events & (EPOLLOUT | EPOLLHUP | EPOLLERR) != 0,
+                    hangup: events & (EPOLLRDHUP | EPOLLHUP | EPOLLERR) != 0,
+                });
+            }
+            self.scratch.clear();
+            Ok(())
+        }
+    }
+
+    impl Drop for Poller {
+        fn drop(&mut self) {
+            unsafe { close(self.epfd) };
+        }
+    }
+
+    /// Cross-thread wakeup for a parked [`Poller::wait`]: an eventfd
+    /// registered read-interest under a reserved token. Completion
+    /// pumps call [`Waker::wake`]; the loop calls [`Waker::drain`]
+    /// when it sees the token, then collects completions.
+    pub struct Waker {
+        fd: RawFd,
+    }
+
+    impl Waker {
+        pub fn new(poller: &Poller, token: u64) -> io::Result<Waker> {
+            let fd = unsafe { eventfd(0, EFD_NONBLOCK | EFD_CLOEXEC) };
+            if fd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            let w = Waker { fd };
+            poller.register(fd, token, Interest::READ)?;
+            Ok(w)
+        }
+
+        /// Nudge the loop. Infallible by design: if the 64-bit counter
+        /// is saturated the fd is already readable and the wakeup is
+        /// already pending.
+        pub fn wake(&self) {
+            let one: u64 = 1;
+            unsafe { write(self.fd, &one as *const u64 as *const c_void, 8) };
+        }
+
+        /// Consume pending wakeups so level-triggered polling settles.
+        pub fn drain(&self) {
+            let mut counter: u64 = 0;
+            // one read zeroes the eventfd counter; loop only to be
+            // robust against a concurrent wake between read and return
+            for _ in 0..2 {
+                let n = unsafe { read(self.fd, &mut counter as *mut u64 as *mut c_void, 8) };
+                if n <= 0 {
+                    break;
+                }
+            }
+        }
+    }
+
+    impl Drop for Waker {
+        fn drop(&mut self) {
+            unsafe { close(self.fd) };
+        }
+    }
+
+    // Safety: the waker is a bare fd; write(2) on an eventfd is
+    // thread-safe.
+    unsafe impl Send for Waker {}
+    unsafe impl Sync for Waker {}
+
+    /// Lift the soft `RLIMIT_NOFILE` toward `target` (capped at the
+    /// hard limit) so C10K-scale benches and probes can actually open
+    /// their sockets. Returns the resulting soft limit.
+    pub fn raise_nofile_limit(target: u64) -> io::Result<u64> {
+        let mut lim = Rlimit { cur: 0, max: 0 };
+        if unsafe { getrlimit(RLIMIT_NOFILE, &mut lim) } != 0 {
+            return Err(io::Error::last_os_error());
+        }
+        if lim.cur >= target {
+            return Ok(lim.cur);
+        }
+        let want = target.min(lim.max);
+        let new = Rlimit {
+            cur: want,
+            max: lim.max,
+        };
+        if unsafe { setrlimit(RLIMIT_NOFILE, &new) } != 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(want)
+    }
+}
+
+#[cfg(target_os = "linux")]
+pub use sys::{raise_nofile_limit, Poller, Waker};
+
+#[cfg(not(target_os = "linux"))]
+compile_error!(
+    "net::poll backs the gateway event loop with raw epoll; \
+     port Poller/Waker to kqueue or poll(2) for this platform"
+);
+
+#[cfg(all(test, target_os = "linux"))]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+    use std::net::{TcpListener, TcpStream};
+    use std::os::fd::AsRawFd;
+    use std::time::Duration;
+
+    #[test]
+    fn waker_wakes_and_drains() {
+        let mut poller = Poller::new(8).unwrap();
+        let waker = Waker::new(&poller, 1).unwrap();
+        let mut events = Vec::new();
+
+        // nothing pending: a short wait times out empty
+        poller
+            .wait(&mut events, Some(Duration::from_millis(5)))
+            .unwrap();
+        assert!(events.is_empty());
+
+        waker.wake();
+        waker.wake(); // coalesces
+        poller
+            .wait(&mut events, Some(Duration::from_secs(5)))
+            .unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].token, 1);
+        assert!(events[0].readable);
+
+        waker.drain();
+        poller
+            .wait(&mut events, Some(Duration::from_millis(5)))
+            .unwrap();
+        assert!(events.is_empty(), "drained waker must go quiet");
+    }
+
+    #[test]
+    fn listener_and_stream_readiness() {
+        let mut poller = Poller::new(8).unwrap();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        listener.set_nonblocking(true).unwrap();
+        poller
+            .register(listener.as_raw_fd(), 7, Interest::READ)
+            .unwrap();
+
+        let mut events = Vec::new();
+        let client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        poller
+            .wait(&mut events, Some(Duration::from_secs(5)))
+            .unwrap();
+        assert!(events.iter().any(|e| e.token == 7 && e.readable));
+
+        let (accepted, _) = listener.accept().unwrap();
+        accepted.set_nonblocking(true).unwrap();
+
+        // a fresh socket with write interest is immediately writable
+        poller
+            .register(accepted.as_raw_fd(), 9, Interest::BOTH)
+            .unwrap();
+        poller
+            .wait(&mut events, Some(Duration::from_secs(5)))
+            .unwrap();
+        assert!(events.iter().any(|e| e.token == 9 && e.writable));
+
+        // parked interest (NONE) still reports peer hangup
+        poller
+            .modify(accepted.as_raw_fd(), 9, Interest::NONE)
+            .unwrap();
+        drop(client);
+        poller
+            .wait(&mut events, Some(Duration::from_secs(5)))
+            .unwrap();
+        assert!(
+            events.iter().any(|e| e.token == 9 && e.hangup),
+            "expected hangup event, got {events:?}"
+        );
+
+        poller.deregister(accepted.as_raw_fd()).unwrap();
+    }
+
+    #[test]
+    fn data_readiness_round_trip() {
+        let mut poller = Poller::new(8).unwrap();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let mut client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let (accepted, _) = listener.accept().unwrap();
+        accepted.set_nonblocking(true).unwrap();
+        poller
+            .register(accepted.as_raw_fd(), 3, Interest::READ)
+            .unwrap();
+
+        let mut events = Vec::new();
+        poller
+            .wait(&mut events, Some(Duration::from_millis(10)))
+            .unwrap();
+        assert!(
+            events.iter().all(|e| !e.readable),
+            "no bytes yet, got {events:?}"
+        );
+
+        client.write_all(b"ping").unwrap();
+        poller
+            .wait(&mut events, Some(Duration::from_secs(5)))
+            .unwrap();
+        assert!(events.iter().any(|e| e.token == 3 && e.readable));
+    }
+
+    #[test]
+    fn nofile_limit_is_queryable_and_monotone() {
+        let cur = raise_nofile_limit(0).unwrap();
+        assert!(cur > 0);
+        let after = raise_nofile_limit(cur).unwrap();
+        assert!(after >= cur);
+    }
+}

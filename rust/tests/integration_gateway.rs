@@ -91,7 +91,7 @@ fn http_classify_is_bit_identical_to_in_process_serving() {
     let seqs = synth_seqs(2024, 6, 64);
     let want = inprocess_classify(Mode::Spls, &seqs, 2);
 
-    let cfg = GatewayConfig { mode: Mode::Spls, replicas: 2, ..Default::default() };
+    let cfg = GatewayConfig::builder().mode(Mode::Spls).replicas(2).build().unwrap();
     let (gw, addr) = start_gateway(cfg);
     let mut client = HttpClient::connect(&addr).unwrap();
 
@@ -139,7 +139,7 @@ fn http_generate_streams_are_bit_identical_to_in_process_serving() {
         Sampling::TopK { k: 4, temperature: 1.0, seed: 11 },
     );
 
-    let cfg = GatewayConfig { steps_per_slice: 3, ..Default::default() };
+    let cfg = GatewayConfig::builder().steps_per_slice(3).build().unwrap();
     let (gw, addr) = start_gateway(cfg);
     let mut client = HttpClient::connect(&addr).unwrap();
 
@@ -156,11 +156,16 @@ fn http_generate_streams_are_bit_identical_to_in_process_serving() {
     let got = stream.collect().unwrap();
     assert_eq!(got.tokens, sampled, "seeded top-k stream must replay bitwise");
 
-    // malformed generate bodies answer 400 without breaking the conn
+    // malformed generate bodies answer 400 without breaking the conn,
+    // and every error rides the unified envelope
     let bad = client.post_json("/v1/generate", "{\"prompt\": []}").unwrap();
     assert_eq!(bad.status, 400);
+    let env = bad.error_envelope().expect("400 must carry the error envelope");
+    assert_eq!(env.code, "bad_request");
+    assert!(!env.message.is_empty());
     let bad = client.post_json("/v1/generate", "{\"max_new\": 4}").unwrap();
     assert_eq!(bad.status, 400);
+    assert_eq!(bad.error_envelope().unwrap().code, "bad_request");
     gw.shutdown().unwrap();
 }
 
@@ -172,7 +177,7 @@ fn graceful_shutdown_completes_inflight_stream_and_flips_healthz_first() {
     let max_new = 256usize;
     let want = inprocess_generate(DecodeConfig::default(), &prompt, max_new, Sampling::Greedy);
 
-    let cfg = GatewayConfig { steps_per_slice: 1, ..Default::default() };
+    let cfg = GatewayConfig::builder().steps_per_slice(1).build().unwrap();
     let (gw, addr) = start_gateway(cfg);
     let handle = gw.shutdown_handle();
 
@@ -237,13 +242,109 @@ fn graceful_shutdown_completes_inflight_stream_and_flips_healthz_first() {
     }
 }
 
+/// Write raw bytes on a fresh socket and read everything the gateway
+/// sends back until it closes the connection (or 500 ms of silence) —
+/// for protocol-error paths where the response ends with a close.
+fn raw_exchange(addr: &str, bytes: &[u8]) -> String {
+    use std::io::{Read, Write};
+    let mut s = std::net::TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_millis(500))).unwrap();
+    // the gateway may answer and close before consuming everything we
+    // send (oversized heads), so a failed tail write is expected
+    let _ = s.write_all(bytes);
+    let mut out = Vec::new();
+    let mut buf = [0u8; 4096];
+    loop {
+        match s.read(&mut buf) {
+            Ok(0) | Err(_) => break,
+            Ok(n) => out.extend_from_slice(&buf[..n]),
+        }
+    }
+    String::from_utf8_lossy(&out).to_string()
+}
+
+/// Pull the envelope out of a raw HTTP response text: the body is the
+/// part after the blank line, and must parse as {"error": {...}}.
+fn envelope_of(raw: &str) -> (String, String) {
+    let body = raw.split("\r\n\r\n").nth(1).unwrap_or("").trim();
+    let doc = esact::net::json::Json::parse(body)
+        .unwrap_or_else(|e| panic!("error body is not JSON ({e}): {body:?}"));
+    let err = doc.get("error").expect("body must have an \"error\" object");
+    (
+        err.get("code").and_then(|c| c.as_str()).unwrap_or_default().to_string(),
+        err.get("message").and_then(|m| m.as_str()).unwrap_or_default().to_string(),
+    )
+}
+
+#[test]
+fn error_envelope_is_uniform_across_paths() {
+    // every non-2xx the gateway can produce — parser rejections,
+    // protocol violations, route errors, and drain refusals — must
+    // carry the same {"error":{"code","message"}} envelope
+    let (gw, addr) = start_gateway(GatewayConfig::builder().max_body(512).build().unwrap());
+
+    // 400: unparseable request head
+    let raw = raw_exchange(&addr, b"total garbage\r\n\r\n");
+    assert!(raw.starts_with("HTTP/1.1 400"), "got: {raw}");
+    assert_eq!(envelope_of(&raw).0, "bad_request");
+
+    // 413: declared body over the configured cap
+    let raw = raw_exchange(
+        &addr,
+        b"POST /v1/classify HTTP/1.1\r\ncontent-length: 100000\r\n\r\n",
+    );
+    assert!(raw.starts_with("HTTP/1.1 413"), "got: {raw}");
+    assert_eq!(envelope_of(&raw).0, "body_too_large");
+
+    // 431: an absurdly long header line
+    let mut big = b"GET /healthz HTTP/1.1\r\nx-padding: ".to_vec();
+    big.resize(big.len() + 64 * 1024, b'a');
+    big.extend_from_slice(b"\r\n\r\n");
+    let raw = raw_exchange(&addr, &big);
+    assert!(raw.starts_with("HTTP/1.1 431"), "got: {raw}");
+    assert_eq!(envelope_of(&raw).0, "head_too_large");
+
+    // 505: a protocol version the gateway does not speak
+    let raw = raw_exchange(&addr, b"GET /healthz HTTP/2.0\r\n\r\n");
+    assert!(raw.starts_with("HTTP/1.1 505"), "got: {raw}");
+    assert_eq!(envelope_of(&raw).0, "http_version");
+
+    // 501: an unsupported transfer-encoding on the request
+    let raw = raw_exchange(
+        &addr,
+        b"POST /v1/classify HTTP/1.1\r\ntransfer-encoding: gzip\r\n\r\n",
+    );
+    assert!(raw.starts_with("HTTP/1.1 501"), "got: {raw}");
+    assert_eq!(envelope_of(&raw).0, "unsupported_transfer");
+
+    // 404 / 405 through the keep-alive client
+    let mut client = HttpClient::connect(&addr).unwrap();
+    let resp = client.get("/no/such/route").unwrap();
+    assert_eq!(resp.status, 404);
+    assert_eq!(resp.error_envelope().unwrap().code, "not_found");
+    let resp = client.get("/v1/classify").unwrap();
+    assert_eq!(resp.status, 405);
+    assert_eq!(resp.error_envelope().unwrap().code, "method_not_allowed");
+
+    // 503 after drain: pipeline the shutdown and a classify in one
+    // segment — the first must answer 200, the second the envelope
+    let resp = client.post_json("/admin/shutdown", "").unwrap();
+    assert_eq!(resp.status, 200);
+    let resp = client.post_json("/v1/classify", &classify_body(&[&[1, 2, 3][..]])).unwrap();
+    assert_eq!(resp.status, 503);
+    let env = resp.error_envelope().unwrap();
+    assert_eq!(env.code, "unavailable");
+    assert!(env.message.contains("drain"), "message was {:?}", env.message);
+    gw.join().unwrap();
+}
+
 #[test]
 fn http_batch_shapes_agree_with_each_other() {
     // a 3-sequence HTTP batch (padded to the 8-slot artifact) must
     // produce the same logits as three batch-of-one HTTP requests —
     // the gateway's batching is invisible to results
     let seqs = synth_seqs(99, 3, 64);
-    let (gw, addr) = start_gateway(GatewayConfig::default());
+    let (gw, addr) = start_gateway(GatewayConfig::builder().build().unwrap());
     let mut client = HttpClient::connect(&addr).unwrap();
     let slices: Vec<&[i32]> = seqs.iter().map(|s| &s[..]).collect();
     let batched = client.post_json("/v1/classify", &classify_body(&slices)).unwrap();

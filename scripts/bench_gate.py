@@ -29,7 +29,14 @@ Dispatches on the current report's `schema`:
   time-to-first-token ceiling + tokens/sec floor, and the
   machine-speed-independent structural check that ttft is well below
   the whole stream's wall time (a gateway that buffers the stream
-  fails it on any hardware).
+  fails it on any hardware). The event-loop gateway adds two groups:
+  `conn_sweep` — per-idle-herd-size throughput floors over {64, 256,
+  1024} parked connections, a herd-scaling inversion check (the
+  largest herd must not collapse below 75% of the smallest), and a
+  marginal per-idle-connection memory cap — and `slow_loris` — every
+  half-open connection must be reaped on the idle timer (structural,
+  machine-independent) while active traffic holds its throughput
+  floor.
 
 All compare against the same committed bench_baseline.json; the cell
 groups each schema reads are declared in BASELINE_GROUPS and validated
@@ -58,7 +65,7 @@ BASELINE_GROUPS = {
     2: ("saturated",),
     3: ("decode",),
     4: ("forward", "crossover"),
-    5: ("gateway", "streaming"),
+    5: ("gateway", "streaming", "conn_sweep", "slow_loris"),
 }
 
 
@@ -298,7 +305,7 @@ def check_forward(cur: dict, base: dict) -> list:
 
 def check_gateway(cur: dict, base: dict) -> list:
     failures = []
-    for key in ("gateway", "streaming"):
+    for key in ("gateway", "streaming", "conn_sweep", "slow_loris"):
         if key not in cur:
             die(f"current report missing '{key}'")
     for row in cur["gateway"]:
@@ -381,6 +388,91 @@ def check_gateway(cur: dict, base: dict) -> list:
         failures.append(
             f"stream looks buffered, not streamed: ttft is {s['ttft_frac']:.2f} "
             "of the whole stream's wall time (limit 0.9)"
+        )
+
+    # --- conn sweep: idle herd must be nearly free ------------------
+    sweep = cur["conn_sweep"]
+    for field in ("idle_kb_per_conn", "cells"):
+        if field not in sweep:
+            die(f"conn_sweep missing '{field}': {sweep}")
+    for row in sweep["cells"]:
+        for field in ("idle_conns", "throughput_rps", "rss_kb"):
+            if field not in row:
+                die(f"conn_sweep cell missing '{field}': {row}")
+    bsweep = base.get("conn_sweep", {})
+    sweep_cells = {r["idle_conns"]: r for r in sweep["cells"]}
+    print(f"{'idle herd':<18} {'baseline':>10} {'current':>10} {'floor':>10}  verdict")
+    for b in bsweep.get("cells", []):
+        c = sweep_cells.get(b["idle_conns"])
+        if c is None:
+            failures.append(
+                f"conn_sweep cell at {b['idle_conns']} idle conns missing from report"
+            )
+            continue
+        floor = TOLERANCE * b["throughput_rps"]
+        ok = c["throughput_rps"] >= floor
+        label = f"{b['idle_conns']} idle conns"
+        print(
+            f"{label:<18} {b['throughput_rps']:>10.1f} "
+            f"{c['throughput_rps']:>10.1f} {floor:>10.1f}  {'ok' if ok else 'REGRESSED'}"
+        )
+        if not ok:
+            failures.append(
+                f"conn_sweep @ {b['idle_conns']} idle conns: "
+                f"{c['throughput_rps']:.1f} rps < floor {floor:.1f}"
+            )
+    # herd-scaling inversion: throughput with the largest idle herd must
+    # not collapse relative to the smallest (noise-tolerated)
+    if len(sweep_cells) >= 2:
+        lo, hi = min(sweep_cells), max(sweep_cells)
+        t_lo = sweep_cells[lo]["throughput_rps"]
+        t_hi = sweep_cells[hi]["throughput_rps"]
+        print(f"herd scaling: {t_lo:.1f} rps @ {lo} idle -> {t_hi:.1f} rps @ {hi} idle")
+        if t_hi < 0.75 * t_lo:
+            failures.append(
+                f"idle-herd inversion: {hi} idle conns drop throughput to "
+                f"{t_hi:.1f} rps from {t_lo:.1f} at {lo}"
+            )
+        elif t_hi < t_lo:
+            print(f"  ! warning: {t_hi:.1f} < {t_lo:.1f} (within noise tolerance)")
+    else:
+        failures.append("conn_sweep has fewer than 2 cells — nothing to compare")
+    # flat idle memory: the marginal kB per parked connection is capped
+    cap = bsweep.get("idle_kb_per_conn_max")
+    if cap is None:
+        die("baseline 'conn_sweep' group lacks 'idle_kb_per_conn_max'")
+    kb = sweep["idle_kb_per_conn"]
+    print(f"idle memory: {kb:.1f} kB/conn marginal (cap {cap:.1f})")
+    if kb > cap:
+        failures.append(
+            f"idle connections cost {kb:.1f} kB each, above the {cap:.1f} kB cap "
+            "— per-connection state is no longer flat"
+        )
+    elif kb > 0.75 * cap:
+        print(f"  ! warning: {kb:.1f} kB/conn is within 25% of the cap")
+
+    # --- slow loris: structural reap + throughput under pressure ----
+    loris = cur["slow_loris"]
+    for field in ("lorises", "reaped", "throughput_rps"):
+        if field not in loris:
+            die(f"slow_loris missing '{field}': {loris}")
+    bloris = base.get("slow_loris", {})
+    print(
+        f"slow loris: {loris['reaped']}/{loris['lorises']} reaped, "
+        f"{loris['throughput_rps']:.1f} rps under pressure"
+    )
+    # structural (machine-speed independent): every half-open conn must
+    # be reaped by the idle timer
+    if loris["reaped"] < loris["lorises"]:
+        failures.append(
+            f"slow loris: only {loris['reaped']}/{loris['lorises']} half-open "
+            "connections reaped — the idle timer is not defending the loop"
+        )
+    loris_floor = TOLERANCE * bloris.get("throughput_rps", 0.0)
+    if loris["throughput_rps"] < loris_floor:
+        failures.append(
+            f"slow loris: {loris['throughput_rps']:.1f} rps under pressure "
+            f"< floor {loris_floor:.1f}"
         )
     return failures
 

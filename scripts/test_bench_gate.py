@@ -1,0 +1,189 @@
+#!/usr/bin/env python3
+"""Self-test for scripts/bench_gate.py's schema-5 checks.
+
+Runs the gate as a subprocess against synthetic BENCH_5 reports and the
+committed bench_baseline.json, asserting the three verdict classes:
+
+* pass  — a healthy report clears every check and exits 0;
+* warn  — a report inside the noise band (herd throughput dips but
+  stays above 75% of the smallest cell; idle memory within 25% of the
+  cap) still exits 0 but prints the warning lines;
+* fail  — a collapsed conn-sweep floor, an idle-herd inversion, a
+  blown per-connection memory cap, an unreaped loris, and a missing
+  group each exit 1 with the matching failure text.
+
+CI runs this before the real bench so a gate edit that silently stops
+gating (or starts failing healthy runs) is caught without needing a
+Rust toolchain or a live gateway.
+
+Usage: test_bench_gate.py   (no arguments; exits non-zero on any miss)
+"""
+
+import copy
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+GATE = os.path.join(HERE, "bench_gate.py")
+BASELINE = os.path.join(HERE, os.pardir, "bench_baseline.json")
+
+
+def healthy_report() -> dict:
+    """A BENCH_5 report comfortably above every committed floor."""
+    return {
+        "schema": 5,
+        "gateway": [
+            {
+                "replicas": r,
+                "connections": c,
+                "requests": 48,
+                "throughput_rps": 40.0 + 5.0 * c,
+                "p50_ms": 20.0,
+                "p99_ms": 60.0,
+                "shed": 0,
+            }
+            for r in (1, 2)
+            for c in (1, 4, 8)
+        ],
+        "poisson": {
+            "offered_rps": 30.0,
+            "throughput_rps": 28.0,
+            "p50_ms": 25.0,
+            "p99_ms": 80.0,
+            "shed": 0,
+        },
+        "streaming": {
+            "sessions": 4,
+            "tokens": 64,
+            "ttft_ms": 80.0,
+            "ttft_frac": 0.2,
+            "tokens_per_sec": 120.0,
+        },
+        "conn_sweep": {
+            "active_conns": 4,
+            "idle_kb_per_conn": 6.0,
+            "cells": [
+                {"idle_conns": 64, "throughput_rps": 45.0, "p50_ms": 20.0,
+                 "p99_ms": 60.0, "rss_kb": 90000},
+                {"idle_conns": 256, "throughput_rps": 44.0, "p50_ms": 21.0,
+                 "p99_ms": 62.0, "rss_kb": 91000},
+                {"idle_conns": 1024, "throughput_rps": 43.0, "p50_ms": 22.0,
+                 "p99_ms": 65.0, "rss_kb": 96000},
+            ],
+        },
+        "slow_loris": {"lorises": 32, "reaped": 32, "throughput_rps": 40.0},
+    }
+
+
+def run_gate(report: dict, baseline: dict) -> "tuple[int, str]":
+    with tempfile.TemporaryDirectory() as d:
+        cur = os.path.join(d, "cur.json")
+        base = os.path.join(d, "base.json")
+        with open(cur, "w") as f:
+            json.dump(report, f)
+        with open(base, "w") as f:
+            json.dump(baseline, f)
+        proc = subprocess.run(
+            [sys.executable, GATE, cur, base],
+            capture_output=True,
+            text=True,
+        )
+        return proc.returncode, proc.stdout + proc.stderr
+
+
+def expect(name: str, code: int, out: str, want_code: int, needles: "list[str]") -> "list[str]":
+    problems = []
+    if code != want_code:
+        problems.append(f"{name}: exit {code}, wanted {want_code}\n{out}")
+    for needle in needles:
+        if needle not in out:
+            problems.append(f"{name}: output lacks {needle!r}\n{out}")
+    return problems
+
+
+def main() -> None:
+    with open(BASELINE) as f:
+        baseline = json.load(f)
+    problems = []
+
+    # pass: a healthy report clears the gate
+    code, out = run_gate(healthy_report(), baseline)
+    problems += expect("healthy", code, out, 0, ["bench gate: OK"])
+
+    # warn: herd throughput dips inside the noise band, idle memory
+    # within 25% of the cap — still exits 0, but says so
+    warn = healthy_report()
+    warn["conn_sweep"]["cells"][2]["throughput_rps"] = 40.0  # < 45 but > 0.75*45
+    warn["conn_sweep"]["idle_kb_per_conn"] = (
+        0.8 * baseline["conn_sweep"]["idle_kb_per_conn_max"]
+    )
+    code, out = run_gate(warn, baseline)
+    problems += expect(
+        "warn", code, out, 0,
+        ["bench gate: OK", "within noise tolerance", "within 25% of the cap"],
+    )
+
+    # fail: conn-sweep floor collapse
+    bad = healthy_report()
+    for cell in bad["conn_sweep"]["cells"]:
+        cell["throughput_rps"] = 1.0
+    code, out = run_gate(bad, baseline)
+    problems += expect("sweep floor", code, out, 1, ["bench gate: FAIL", "conn_sweep @"])
+
+    # fail: idle-herd inversion (floors still met, big herd collapses
+    # relative to the small one)
+    bad = healthy_report()
+    bad["conn_sweep"]["cells"][0]["throughput_rps"] = 45.0
+    bad["conn_sweep"]["cells"][2]["throughput_rps"] = 20.0  # > floor 8*0.85, < 0.75*45
+    code, out = run_gate(bad, baseline)
+    problems += expect(
+        "herd inversion", code, out, 1, ["bench gate: FAIL", "idle-herd inversion"]
+    )
+
+    # fail: per-idle-connection memory above the cap
+    bad = healthy_report()
+    bad["conn_sweep"]["idle_kb_per_conn"] = (
+        2.0 * baseline["conn_sweep"]["idle_kb_per_conn_max"]
+    )
+    code, out = run_gate(bad, baseline)
+    problems += expect(
+        "memory cap", code, out, 1, ["bench gate: FAIL", "no longer flat"]
+    )
+
+    # fail: a loris survived the idle timer (structural)
+    bad = healthy_report()
+    bad["slow_loris"]["reaped"] = 31
+    code, out = run_gate(bad, baseline)
+    problems += expect(
+        "unreaped loris", code, out, 1, ["bench gate: FAIL", "idle timer is not defending"]
+    )
+
+    # fail: report without the new groups must die loudly
+    bad = healthy_report()
+    del bad["conn_sweep"]
+    code, out = run_gate(bad, baseline)
+    problems += expect(
+        "missing group", code, out, 1, ["bench gate: FAIL", "conn_sweep"]
+    )
+
+    # fail: a baseline that lost the conn_sweep group dies up front
+    stale = copy.deepcopy(baseline)
+    del stale["conn_sweep"]
+    code, out = run_gate(healthy_report(), stale)
+    problems += expect(
+        "stale baseline", code, out, 1, ["bench gate: FAIL", "baseline is missing"]
+    )
+
+    if problems:
+        for p in problems:
+            print(f"✗ {p}")
+        print(f"test_bench_gate: {len(problems)} check(s) failed")
+        sys.exit(1)
+    print("test_bench_gate: all verdict classes exercised, OK")
+
+
+if __name__ == "__main__":
+    main()
