@@ -2,7 +2,7 @@
 
 ARTIFACTS := rust/artifacts
 
-.PHONY: build test bench bench-serving bench-decode bench-forward bench-gateway bench-gate serve-http check-features artifacts clean-artifacts
+.PHONY: build test bench bench-serving bench-decode bench-forward bench-gateway bench-paged bench-gate serve-http check-features artifacts clean-artifacts
 
 build:
 	cargo build --release
@@ -30,14 +30,19 @@ bench-forward:
 bench-gateway:
 	ESACT_BENCH_JSON=$(CURDIR)/BENCH_5.json cargo bench --bench gateway
 
+# Paged-KV scaling/sharing/CoW surface + BENCH_6.json report.
+bench-paged:
+	ESACT_BENCH_JSON=$(CURDIR)/BENCH_6.json cargo bench --bench paged
+
 # What CI's bench-regression job runs after the benches (the gate's
 # own self-test first, so a broken gate can't silently pass).
-bench-gate: bench-serving bench-decode bench-forward bench-gateway
+bench-gate: bench-serving bench-decode bench-forward bench-gateway bench-paged
 	python3 scripts/test_bench_gate.py
 	python3 scripts/bench_gate.py BENCH_2.json bench_baseline.json
 	python3 scripts/bench_gate.py BENCH_3.json bench_baseline.json
 	python3 scripts/bench_gate.py BENCH_4.json bench_baseline.json
 	python3 scripts/bench_gate.py BENCH_5.json bench_baseline.json
+	python3 scripts/bench_gate.py BENCH_6.json bench_baseline.json
 
 # Start a curl-able tiny gateway (SPLS mode, 2 replicas) on :8080.
 # Drain it with: curl -X POST localhost:8080/admin/shutdown

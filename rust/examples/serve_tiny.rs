@@ -164,6 +164,7 @@ fn main() -> anyhow::Result<()> {
             tx.send(GenRequest {
                 id: i as u64,
                 prompt: set.tokens[i % set.len()][..24].to_vec(),
+                prefix: None,
                 max_new,
                 sampling: Sampling::TopK { k: 4, temperature: 1.0, seed: i as u64 },
                 arrived: Instant::now(),

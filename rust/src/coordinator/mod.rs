@@ -17,7 +17,8 @@ pub use loadgen::{arrivals, trace_stats, Arrival, TraceStats};
 pub use partition::{partition_workload, ClusterAssignment, WorkItem};
 pub use replica::{ReplicaMetrics, WorkQueue};
 pub use server::{
-    replica_rows, Completion, GenChunk, GenRequest, GenTask, GenerateMetrics, GenerateOutcome,
-    MetricRow, Mode, Reply, ServeMetrics, ServeOutcome, Server, Submission, SubmitError, Tier,
-    TierConfig, TierHandle, TierSnapshot,
+    paged_rows, replica_rows, Completion, GenChunk, GenRequest, GenTask, GenerateMetrics,
+    GenerateOutcome, MetricRow, Mode, Reply, ServeMetrics, ServeOutcome, Server, Submission,
+    SubmitError, Tier, TierConfig, TierHandle, TierSnapshot, DEFAULT_POOL_BLOCKS,
+    PAGED_BLOCK_SIZE,
 };

@@ -29,12 +29,24 @@ use anyhow::Result;
 use crate::config::SplsConfig;
 use crate::coordinator::batcher::{BatchPolicy, Batcher, Request};
 use crate::coordinator::replica::{self, Job, ReplicaEvent, ReplicaMetrics, WorkQueue};
-use crate::decode::{DecodeConfig, DecodeEngine, DecodeMode, GenSession, Sampling};
+use crate::decode::{
+    DecodeConfig, DecodeEngine, DecodeMode, GenSession, PagedPool, PoolStats, Sampling,
+};
 use crate::model::{CompiledModelPlan, PackedModel, TinyWeights};
 use crate::quant::QuantMethod;
 use crate::runtime::{Arg, ArtifactSet};
 use crate::spls::plan_cache::{CacheStats, SharedPlanCache, DEFAULT_CAPACITY};
 use crate::util::stats::{self, LatencyWindow};
+
+/// Tokens per paged KV block (pool geometry; see `decode::paged`).
+/// Small enough that a shared prompt prefix maps mostly-full blocks,
+/// large enough to amortize the per-block bookkeeping.
+pub const PAGED_BLOCK_SIZE: usize = 8;
+
+/// Default hard capacity of the server's paged KV pool, in blocks.
+/// The pool never allocates past it — exceeding it is a programming
+/// error (admission must bound live sessions), not an OOM.
+pub const DEFAULT_POOL_BLOCKS: usize = 8192;
 
 /// Serving statistics.
 #[derive(Clone, Copy, Debug, Default)]
@@ -148,6 +160,23 @@ fn cache_rows(c: &CacheStats) -> Vec<MetricRow> {
     ]
 }
 
+/// Paged KV pool rows (block accounting + prefix-sharing counters).
+/// Exported by the gateway's `/metrics` next to the tier rows, so the
+/// pool's residency and sharing behavior are observable mid-run.
+pub fn paged_rows(s: &PoolStats) -> Vec<MetricRow> {
+    vec![
+        MetricRow::of("paged_blocks_in_use", s.in_use as f64),
+        MetricRow::of("paged_blocks_peak", s.peak as f64),
+        MetricRow::of("paged_blocks_capacity", s.max_blocks as f64),
+        MetricRow::of("paged_blocks_allocated_total", s.allocated_total as f64),
+        MetricRow::of("paged_cow_copies_total", s.cow_copies as f64),
+        MetricRow::of("paged_prefix_hits_total", s.prefix_hits as f64),
+        MetricRow::of("paged_prefix_misses_total", s.prefix_misses as f64),
+        MetricRow::of("paged_prefix_hit_rate", s.hit_rate()),
+        MetricRow::of("paged_shared_tokens_total", s.shared_attach_tokens as f64),
+    ]
+}
+
 impl ServeMetrics {
     /// The classify tier's metric rows (plan-cache rows included).
     pub fn rows(&self) -> Vec<MetricRow> {
@@ -230,7 +259,14 @@ pub struct Reply {
 #[derive(Clone, Debug)]
 pub struct GenRequest {
     pub id: u64,
+    /// With `prefix: None`, the whole prompt (private contiguous KV).
+    /// With `prefix: Some(p)`, the prompt *tail* after the shared
+    /// prefix `p` — the session decodes `p ++ prompt` through the
+    /// server's paged pool, mapping `p`'s published blocks on a trie
+    /// hit.
     pub prompt: Vec<i32>,
+    /// Optional shared-prefix handle (token ids) for paged decode.
+    pub prefix: Option<Vec<i32>>,
     pub max_new: usize,
     pub sampling: Sampling,
     pub arrived: Instant,
@@ -434,6 +470,10 @@ pub(crate) struct ServerCore {
     /// Shared decode engine (a view over `packed`) for
     /// `serve_generate` sessions.
     engine: Arc<DecodeEngine>,
+    /// Shared paged KV block pool: every `serve_generate` session that
+    /// declares a prompt prefix maps/publishes blocks here (prefix-trie
+    /// sharing with copy-on-write divergence — `decode::paged`).
+    paged: PagedPool,
     /// Live tier counters (see [`LiveTier`]); leaders update it as
     /// they absorb replica events, `/metrics` scrapes it mid-run.
     live: Mutex<LiveTier>,
@@ -572,6 +612,7 @@ impl Server {
             (weights, packed)
         };
         let engine = Arc::new(DecodeEngine::from_packed(Arc::clone(&packed)));
+        let paged = PagedPool::new(PAGED_BLOCK_SIZE, DEFAULT_POOL_BLOCKS, weights.cfg.d_head());
         Ok(Self {
             seq_len: weights.cfg.seq_len,
             core: Arc::new(ServerCore {
@@ -583,6 +624,7 @@ impl Server {
                 mode,
                 cache: SharedPlanCache::new(cache_capacity),
                 engine,
+                paged,
                 live: Mutex::new(LiveTier::default()),
             }),
         })
@@ -612,6 +654,16 @@ impl Server {
     /// that want the shard distribution rather than the summed view.
     pub fn plan_cache_shard_stats(&self) -> Vec<CacheStats> {
         self.core.cache.shard_stats()
+    }
+
+    /// The server's shared paged KV block pool (prefix sharing + CoW).
+    pub fn paged_pool(&self) -> &PagedPool {
+        &self.core.paged
+    }
+
+    /// Point-in-time counters of the paged KV pool (see [`paged_rows`]).
+    pub fn paged_stats(&self) -> PoolStats {
+        self.core.paged.stats()
     }
 
     /// Snapshot the live tier counters (see [`TierSnapshot`]). Live
@@ -821,9 +873,28 @@ impl Server {
         n_replicas: usize,
         steps_per_slice: usize,
     ) -> Result<GenerateOutcome> {
+        self.serve_generate_chunked(requests, replies, decode, n_replicas, steps_per_slice, 0)
+    }
+
+    /// [`Server::serve_generate`] with **chunked prefill**: sessions
+    /// still feeding prompt tokens are dispatched in slices of
+    /// `prefill_chunk` steps (0 ⇒ same as `steps_per_slice`), so a long
+    /// prompt fills its KV cache in bounded chunks interleaved with
+    /// other sessions' decode slices instead of monopolizing a replica
+    /// until the whole prompt is in.
+    pub fn serve_generate_chunked(
+        &self,
+        requests: mpsc::Receiver<GenRequest>,
+        replies: mpsc::Sender<GenChunk>,
+        decode: DecodeConfig,
+        n_replicas: usize,
+        steps_per_slice: usize,
+        prefill_chunk: usize,
+    ) -> Result<GenerateOutcome> {
         assert!(n_replicas >= 1, "need at least one replica");
         self.core.live.lock().unwrap().touch();
         let slice = steps_per_slice.max(1);
+        let prefill = if prefill_chunk == 0 { slice } else { prefill_chunk };
         let queue = Arc::new(WorkQueue::new(n_replicas));
         let (etx, erx) = mpsc::channel();
         let workers =
@@ -836,6 +907,7 @@ impl Server {
             in_flight: 0,
             first_error: None,
             slice,
+            prefill,
         };
         let mut open = true;
         // admission bound: cap live sessions (each owns KV/predictor
@@ -927,22 +999,36 @@ impl Server {
             let _ = replies.send(GenChunk { id: req.id, tokens: Vec::new(), done: true });
             return;
         }
-        let mut session = GenSession::new(
-            Arc::clone(self.core.engine()),
-            decode,
-            req.prompt,
-            req.max_new,
-            req.sampling,
-        );
+        let mut session = match &req.prefix {
+            // a declared prefix routes the session through the shared
+            // paged pool: the prompt field is the tail after the prefix
+            Some(prefix) if !prefix.is_empty() => GenSession::new_paged(
+                Arc::clone(self.core.engine()),
+                decode,
+                &self.core.paged,
+                prefix,
+                req.prompt,
+                req.max_new,
+                req.sampling,
+            ),
+            _ => GenSession::new(
+                Arc::clone(self.core.engine()),
+                decode,
+                req.prompt,
+                req.max_new,
+                req.sampling,
+            ),
+        };
         if decode.mode == DecodeMode::Spls {
             session = session.with_plan_cache(self.core.cache.clone());
         }
         st.metrics.sessions += 1;
         self.core.live.lock().unwrap().generate.sessions += 1;
         st.in_flight += 1;
+        let steps = st.steps_for(&session);
         queue.push_least_loaded(Job::Decode {
             task: Box::new(GenTask { id: req.id, arrived: req.arrived, session }),
-            steps: st.slice,
+            steps,
         });
     }
 }
@@ -994,6 +1080,21 @@ struct GenLeader {
     in_flight: usize,
     first_error: Option<anyhow::Error>,
     slice: usize,
+    /// Steps per dispatch while a session is still prefilling its
+    /// prompt (chunked prefill); equals `slice` when not configured.
+    prefill: usize,
+}
+
+impl GenLeader {
+    /// Dispatch granularity for a session's next slice: prefilling
+    /// sessions run in prefill chunks, decoding ones in decode slices.
+    fn steps_for(&self, session: &GenSession) -> usize {
+        if session.prefilling() {
+            self.prefill
+        } else {
+            self.slice
+        }
+    }
 }
 
 impl GenLeader {
@@ -1028,7 +1129,8 @@ impl GenLeader {
                     self.session_latencies.push(task.arrived.elapsed().as_secs_f64());
                 } else {
                     self.in_flight += 1;
-                    queue.push_least_loaded(Job::Decode { task, steps: self.slice });
+                    let steps = self.steps_for(&task.session);
+                    queue.push_least_loaded(Job::Decode { task, steps });
                 }
             }
             ReplicaEvent::Done { .. } => {} // generate never dispatches classify jobs
@@ -1055,7 +1157,10 @@ pub enum Submission {
         tokens: Vec<i32>,
     },
     Generate {
+        /// The prompt — or, with `prefix: Some(p)`, the tail after `p`.
         prompt: Vec<i32>,
+        /// Optional shared-prefix handle (paged KV sharing).
+        prefix: Option<Vec<i32>>,
         max_new: usize,
         sampling: Sampling,
     },
@@ -1100,6 +1205,9 @@ pub struct TierConfig {
     pub steps_per_slice: usize,
     /// Admission bound of the generate lane (live sessions).
     pub max_sessions: usize,
+    /// Steps per dispatch while a session is prefilling its prompt
+    /// (chunked prefill); 0 falls back to `steps_per_slice`.
+    pub prefill_chunk: usize,
 }
 
 /// The submit/complete face of a running tier. Frontends hold this:
@@ -1224,13 +1332,14 @@ impl TierHandle {
                         .unwrap_or(false);
                     sent_classify += ok as usize;
                 }
-                Submission::Generate { prompt, max_new, sampling } => {
+                Submission::Generate { prompt, prefix, max_new, sampling } => {
                     ok = gtx
                         .as_ref()
                         .map(|tx| {
                             tx.send(GenRequest {
                                 id: *id,
                                 prompt,
+                                prefix,
                                 max_new,
                                 sampling,
                                 arrived,
@@ -1318,10 +1427,12 @@ impl Tier {
             .spawn(move || srv.serve_replicated(creq_rx, crep_tx, policy, replicas))?;
 
         let srv = Arc::clone(&server);
-        let (decode, steps) = (cfg.decode, cfg.steps_per_slice);
+        let (decode, steps, prefill) = (cfg.decode, cfg.steps_per_slice, cfg.prefill_chunk);
         let generate_leader = thread::Builder::new()
             .name("esact-tier-generate".into())
-            .spawn(move || srv.serve_generate(greq_rx, gchk_tx, decode, replicas, steps))?;
+            .spawn(move || {
+                srv.serve_generate_chunked(greq_rx, gchk_tx, decode, replicas, steps, prefill)
+            })?;
 
         let h = Arc::clone(&handle);
         let classify_pump = thread::Builder::new()
@@ -1597,6 +1708,7 @@ mod tests {
             tx.send(GenRequest {
                 id: i as u64,
                 prompt: p,
+                prefix: None,
                 max_new: 6,
                 sampling: Sampling::Greedy,
                 arrived: Instant::now(),
@@ -1662,6 +1774,7 @@ mod tests {
             tx.send(GenRequest {
                 id: i as u64,
                 prompt: p.clone(),
+                prefix: None,
                 max_new,
                 sampling: Sampling::Greedy,
                 arrived: Instant::now(),
@@ -1709,6 +1822,7 @@ mod tests {
             tx.send(GenRequest {
                 id,
                 prompt,
+                prefix: None,
                 max_new: 4,
                 sampling: Sampling::Greedy,
                 arrived: Instant::now(),
@@ -1751,6 +1865,7 @@ mod tests {
                 tx.send(GenRequest {
                     id,
                     prompt: prompt.clone(),
+                    prefix: None,
                     max_new: 8,
                     sampling: Sampling::Greedy,
                     arrived: Instant::now(),
@@ -1781,6 +1896,113 @@ mod tests {
         let a = &streams1[&0];
         assert_eq!(a, &streams2[&1]);
         assert_eq!(a, &streams2[&2]);
+    }
+
+    #[test]
+    fn serve_generate_shared_prefix_attaches_and_streams_identically() {
+        use crate::decode::{generate, DecodeConfig, DecodeEngine, Sampling};
+        let srv = Server::new(&artifacts_dir(), Mode::Dense, SplsConfig::default()).unwrap();
+        let prompt = gen_prompts(1, 16).remove(0);
+        let (prefix, tail) = prompt.split_at(12);
+        let max_new = 8usize;
+        // offline reference: the same prompt decoded privately
+        let w = TinyWeights::load(&artifacts_dir().join("tiny_weights.bin")).unwrap();
+        let eng = std::sync::Arc::new(DecodeEngine::new(std::sync::Arc::new(w)));
+        let want =
+            generate(&eng, DecodeConfig::default(), &prompt, max_new, Sampling::Greedy, |_, _| {})
+                .tokens;
+
+        let run = |ids: std::ops::Range<u64>| {
+            let (tx, rx) = mpsc::channel();
+            let (ctx, crx) = mpsc::channel();
+            for id in ids {
+                tx.send(GenRequest {
+                    id,
+                    prompt: tail.to_vec(),
+                    prefix: Some(prefix.to_vec()),
+                    max_new,
+                    sampling: Sampling::Greedy,
+                    arrived: Instant::now(),
+                })
+                .unwrap();
+            }
+            drop(tx);
+            let drain = std::thread::spawn(move || {
+                let mut per_id: std::collections::HashMap<u64, Vec<i32>> = Default::default();
+                for c in crx.iter() {
+                    per_id.entry(c.id).or_default().extend(&c.tokens);
+                }
+                per_id
+            });
+            srv.serve_generate(rx, ctx, DecodeConfig::default(), 1, 4).unwrap();
+            drain.join().unwrap()
+        };
+        // wave 1: cold pool — the session prefills the prefix and
+        // publishes it to the trie
+        let wave1 = run(0..1);
+        assert_eq!(wave1[&0], want, "paged session must match the private stream");
+        let cold = srv.paged_stats();
+        assert_eq!(cold.prefix_hits, 0);
+        assert!(cold.prefix_misses >= 1);
+        // wave 2: both sessions attach to the published prefix and skip
+        // its forward passes, still producing identical streams
+        let wave2 = run(1..3);
+        assert_eq!(wave2[&1], want);
+        assert_eq!(wave2[&2], want);
+        let warm = srv.paged_stats();
+        assert_eq!(warm.prefix_hits, 2, "replayed prefixes must attach: {warm:?}");
+        assert!(
+            warm.shared_attach_tokens >= 2 * prefix.len(),
+            "attaching skips prefix tokens: {warm:?}"
+        );
+    }
+
+    #[test]
+    fn chunked_prefill_preserves_streams_and_raises_slice_count() {
+        use crate::decode::{generate, DecodeConfig, DecodeEngine, Sampling};
+        let srv = Server::new(&artifacts_dir(), Mode::Dense, SplsConfig::default()).unwrap();
+        let prompt = gen_prompts(1, 24).remove(0);
+        let max_new = 6usize;
+        let w = TinyWeights::load(&artifacts_dir().join("tiny_weights.bin")).unwrap();
+        let eng = std::sync::Arc::new(DecodeEngine::new(std::sync::Arc::new(w)));
+        let want =
+            generate(&eng, DecodeConfig::default(), &prompt, max_new, Sampling::Greedy, |_, _| {})
+                .tokens;
+        let run = |prefill_chunk: usize| {
+            let (tx, rx) = mpsc::channel();
+            let (ctx, crx) = mpsc::channel();
+            tx.send(GenRequest {
+                id: 0,
+                prompt: prompt.clone(),
+                prefix: None,
+                max_new,
+                sampling: Sampling::Greedy,
+                arrived: Instant::now(),
+            })
+            .unwrap();
+            drop(tx);
+            let drain = std::thread::spawn(move || {
+                let mut toks = Vec::new();
+                for c in crx.iter() {
+                    toks.extend(c.tokens);
+                }
+                toks
+            });
+            let out = srv
+                .serve_generate_chunked(rx, ctx, DecodeConfig::default(), 1, 8, prefill_chunk)
+                .unwrap();
+            (out.metrics.slices, drain.join().unwrap())
+        };
+        let (whole_slices, whole) = run(0);
+        let (chunked_slices, chunked) = run(3);
+        assert_eq!(whole, want);
+        assert_eq!(chunked, want, "chunked prefill must not change the stream");
+        // 24 prompt tokens in chunks of 3 → ≥ 8 prefill slices, vs the
+        // un-chunked run's ⌈24/8⌉ = 3
+        assert!(
+            chunked_slices > whole_slices,
+            "chunking must split prefill into more slices ({chunked_slices} vs {whole_slices})"
+        );
     }
 
     #[test]
@@ -1830,6 +2052,7 @@ mod tests {
                 replicas: 1,
                 steps_per_slice: 2,
                 max_sessions: 2,
+                prefill_chunk: 0,
             },
         )
         .unwrap();
@@ -1849,7 +2072,7 @@ mod tests {
             .submit(vec![
                 Submission::Classify { tokens: seqs[0].tokens.clone() },
                 Submission::Classify { tokens: seqs[1].tokens.clone() },
-                Submission::Generate { prompt, max_new: 3, sampling: Sampling::Greedy },
+                Submission::Generate { prompt, prefix: None, max_new: 3, sampling: Sampling::Greedy },
             ])
             .unwrap();
         assert_eq!(ids.len(), 3);

@@ -6,6 +6,7 @@
 
 use std::sync::Arc;
 
+use crate::decode::paged::{PagedDecodeState, PagedPool};
 use crate::decode::step::{DecodeConfig, DecodeEngine, DecodeState, DecodeStats};
 use crate::model::tensor::argmax;
 use crate::spls::plan_cache::SharedPlanCache;
@@ -66,11 +67,36 @@ impl Sampler {
     }
 }
 
+/// The session's KV backend: a private contiguous cache, or a paged
+/// session over a server-shared block pool (possibly attached to a
+/// published prompt prefix). Single-session behavior is bit-identical
+/// across the two (`decode::paged` module docs).
+enum SessionState {
+    Contiguous(DecodeState),
+    Paged(PagedDecodeState),
+}
+
+impl SessionState {
+    fn push(&mut self, token: i32) -> Vec<f32> {
+        match self {
+            SessionState::Contiguous(s) => s.push(token),
+            SessionState::Paged(s) => s.push(token),
+        }
+    }
+
+    fn stats(&self) -> DecodeStats {
+        match self {
+            SessionState::Contiguous(s) => s.stats(),
+            SessionState::Paged(s) => s.stats(),
+        }
+    }
+}
+
 /// One generation session: prompt prefill (token-by-token through the
 /// same decode path, building the KV cache) followed by sampled
 /// continuation, resumable in slices of decode steps.
 pub struct GenSession {
-    state: DecodeState,
+    state: SessionState,
     prompt: Vec<i32>,
     fed: usize,
     last_logits: Option<Vec<f32>>,
@@ -89,7 +115,7 @@ impl GenSession {
     ) -> Self {
         assert!(!prompt.is_empty(), "generation needs a non-empty prompt");
         Self {
-            state: DecodeState::new(eng, cfg),
+            state: SessionState::Contiguous(DecodeState::new(eng, cfg)),
             prompt,
             fed: 0,
             last_logits: None,
@@ -99,10 +125,57 @@ impl GenSession {
         }
     }
 
+    /// Paged session over a shared block pool. The prompt is
+    /// `prefix ++ tail`: the prefix is declared to the pool's trie (a
+    /// hit maps the published blocks and skips those forward passes; a
+    /// miss publishes them once prefilled) and the tail must be
+    /// non-empty so the session always produces sampling logits.
+    pub fn new_paged(
+        eng: Arc<DecodeEngine>,
+        cfg: DecodeConfig,
+        pool: &PagedPool,
+        prefix: &[i32],
+        tail: Vec<i32>,
+        max_new: usize,
+        sampling: Sampling,
+    ) -> Self {
+        assert!(!tail.is_empty(), "paged generation needs a non-empty prompt tail");
+        let state = PagedDecodeState::new(eng, cfg, pool).with_prefix(prefix);
+        let fed = if state.attached() { prefix.len() } else { 0 };
+        let mut prompt = prefix.to_vec();
+        prompt.extend_from_slice(&tail);
+        Self {
+            state: SessionState::Paged(state),
+            prompt,
+            fed,
+            last_logits: None,
+            generated: Vec::with_capacity(max_new),
+            max_new,
+            sampler: Sampler::new(sampling),
+        }
+    }
+
     /// Route this session's step planning through a shared plan cache.
     pub fn with_plan_cache(mut self, cache: SharedPlanCache) -> Self {
-        self.state = self.state.with_plan_cache(cache);
+        self.state = match self.state {
+            SessionState::Contiguous(s) => SessionState::Contiguous(s.with_plan_cache(cache)),
+            SessionState::Paged(s) => SessionState::Paged(s.with_plan_cache(cache)),
+        };
         self
+    }
+
+    /// Whether the next step still feeds prompt tokens (the continuous
+    /// batcher dispatches prefilling sessions in chunked slices).
+    pub fn prefilling(&self) -> bool {
+        self.fed < self.prompt.len()
+    }
+
+    /// Whether this session's declared prefix was served from the pool.
+    pub fn attached_prefix(&self) -> bool {
+        match &self.state {
+            SessionState::Contiguous(_) => false,
+            SessionState::Paged(s) => s.attached(),
+        }
     }
 
     /// All tokens generated so far (excluding the prompt).
@@ -266,6 +339,43 @@ mod tests {
         });
         assert_eq!(seen, res.tokens);
         assert_eq!(res.stats.steps, 8 + 6 - 1, "final token is not pushed back");
+    }
+
+    #[test]
+    fn paged_session_matches_contiguous_and_attaches_on_replay() {
+        let eng = engine();
+        let p = prompt(5, 10);
+        let one = generate(&eng, DecodeConfig::default(), &p, 8, Sampling::Greedy, |_, _| {});
+        let pool = PagedPool::new(8, 256, eng.weights().cfg.d_head());
+        let paged = |eng: &Arc<DecodeEngine>| {
+            GenSession::new_paged(
+                Arc::clone(eng),
+                DecodeConfig::default(),
+                &pool,
+                &p[..4],
+                p[4..].to_vec(),
+                8,
+                Sampling::Greedy,
+            )
+        };
+        let mut s = paged(&eng);
+        assert!(!s.attached_prefix(), "cold pool: first session publishes");
+        let mut toks = Vec::new();
+        while !s.done() {
+            toks.extend(s.run_steps(3));
+        }
+        assert_eq!(toks, one.tokens, "paged must match the contiguous stream");
+        // an identical session now attaches, skips the prefix pushes,
+        // and still produces the same stream
+        let mut s2 = paged(&eng);
+        assert!(s2.attached_prefix());
+        let mut toks2 = Vec::new();
+        while !s2.done() {
+            toks2.extend(s2.run_steps(4));
+        }
+        assert_eq!(toks2, one.tokens);
+        assert_eq!(s2.stats().steps, one.stats.steps - 4, "prefix pushes were skipped");
+        assert_eq!(pool.stats().prefix_hits, 1);
     }
 
     #[test]

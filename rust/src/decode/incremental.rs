@@ -26,6 +26,7 @@
 
 use crate::config::SplsConfig;
 use crate::quant::requantize_sym8;
+use crate::spls::maskgen::{MaskGen, SplsTopK};
 use crate::spls::predict::predict_matmul;
 use crate::spls::similarity::l1_norm_dist;
 use crate::util::mat::MatI;
@@ -87,8 +88,25 @@ impl HeadPredictor {
 
     /// Run one step of incremental prediction. `hq` is the current
     /// token's LN'd activation row quantized to int8 (1×D); `wq8`/`wk8`
-    /// are this head's int8 prediction weights (D×Dh).
+    /// are this head's int8 prediction weights (D×Dh). Non-similar
+    /// steps build their keep-mask with the default SPLS top-k rule;
+    /// [`HeadPredictor::step_with`] takes any [`MaskGen`].
     pub fn step(&mut self, hq: &MatI, wq8: &MatI, wk8: &MatI, spls: &SplsConfig) -> HeadStepPlan {
+        self.step_with(hq, wq8, wk8, spls, &SplsTopK)
+    }
+
+    /// [`HeadPredictor::step`] with a pluggable keep-mask generator:
+    /// the prediction pipeline (K/Q rows, attention row, temporal
+    /// similarity) is identical; only the non-similar step's keep-mask
+    /// construction is delegated to `gen`.
+    pub fn step_with(
+        &mut self,
+        hq: &MatI,
+        wq8: &MatI,
+        wk8: &MatI,
+        spls: &SplsConfig,
+        gen: &dyn MaskGen,
+    ) -> HeadStepPlan {
         assert_eq!(hq.rows, 1, "decode predicts one row per step");
         // predicted K row for the new token → int8 cache
         let kp = predict_matmul(hq, wk8);
@@ -111,7 +129,7 @@ impl HeadPredictor {
             k.push(true); // the new diagonal slot is always visible
             k
         } else {
-            topk_keep_with_diagonal(&row, spls.top_k)
+            gen.keep(&row, spls)
         };
         let plan = HeadStepPlan { row: row.clone(), keep: keep.clone(), k8, similar };
         self.prev_row = row;
@@ -238,6 +256,29 @@ mod tests {
         for h in &rows[3..] {
             assert_eq!(a.step(h, &wq, &wk, &spls), b.step(h, &wq, &wk, &spls));
         }
+    }
+
+    #[test]
+    fn step_with_three_component_builds_structured_masks() {
+        use crate::spls::maskgen::ThreeComponent;
+        let mut rng = Xoshiro256pp::new(11);
+        let (d, dh) = (16, 4);
+        let wq = rand_mat(&mut rng, d, dh);
+        let wk = rand_mat(&mut rng, d, dh);
+        // similarity disabled: every step rebuilds its mask through the
+        // generator, so the structure is visible on every plan
+        let spls = SplsConfig { sim_threshold: -1.0, ..SplsConfig::default() };
+        let gen = ThreeComponent { window: 2, top_k: 0.0, global: 1 };
+        let mut p = HeadPredictor::new(dh);
+        let mut last = None;
+        for _ in 0..6 {
+            let h = rand_mat(&mut rng, 1, d);
+            last = Some(p.step_with(&h, &wq, &wk, &spls, &gen));
+        }
+        let plan = last.unwrap();
+        assert!(!plan.similar);
+        // n = 6: global sink slot 0 + local window slots 4, 5
+        assert_eq!(plan.keep, vec![true, false, false, false, true, true]);
     }
 
     #[test]

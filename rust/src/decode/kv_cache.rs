@@ -15,8 +15,86 @@
 //!
 //! Without scores (dense decode), ties resolve to the lowest slot, so a
 //! budgeted dense cache degrades gracefully to a sliding window.
+//!
+//! [`KvSlots`] is the storage interface the decode step reads K/V
+//! through: the contiguous [`HeadKv`] here and the block-table
+//! [`PagedHeadKv`](crate::decode::paged::PagedHeadKv) both implement
+//! it, and both are required to preserve the **exact per-slot
+//! accumulation order** of the attention kernels below — which is what
+//! makes a single-session paged decode bit-identical to the contiguous
+//! cache (`tests/integration_paged.rs`).
 
+use crate::model::sparse_kernels::{axpy_prob, dot_qk};
 use crate::util::mat::MatF;
+
+/// The K/V storage interface of one attention head, as consumed by the
+/// decode step (`decode::step`). Slots are logical token positions in
+/// insertion order; implementations own the physical layout (contiguous
+/// rows, paged blocks, …) but must run the attention accumulations in
+/// ascending-slot order with the same per-element chains as the
+/// reference kernels, so every implementation is bit-identical to
+/// [`HeadKv`] given the same push/evict history.
+pub trait KvSlots {
+    /// Number of cached token slots.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Append the new token's K and V rows (eviction score starts at 0).
+    fn push(&mut self, k_row: &[f32], v_row: &[f32], pos: usize);
+
+    /// Original absolute positions of the cached slots, in slot order.
+    fn positions(&self) -> &[usize];
+
+    /// Fold one predicted attention row into the cumulative eviction
+    /// scores (row-max-normalized `|PAM|` magnitudes).
+    fn accumulate(&mut self, row: &[i32]);
+
+    /// Evict the lowest-cumulative-score evictable slot outside the
+    /// protected `recent` tail; returns its index, or `None` when no
+    /// slot is evictable.
+    fn evict_lowest(&mut self, recent: usize) -> Option<usize>;
+
+    /// `srow[c] = q · k_c` for every slot `c` (zero-skip on `q`,
+    /// k-ascending accumulation — see [`scores_row`]).
+    fn scores_into(&self, q: &[f32], srow: &mut [f32]);
+
+    /// `orow += Σ_c s[c] · v_c` in ascending slot order, zero-skip on
+    /// `s[c]` (see [`attend_row`]); `orow` must be pre-zeroed.
+    fn attend_into(&self, s: &[f32], orow: &mut [f32]);
+
+    /// Gated SDDMM: `s[j] = dot_qk(q, k_idx[j]) · scale` over the kept
+    /// slots only.
+    fn dots_into(&self, q: &[f32], idx: &[usize], scale: f32, s: &mut [f32]);
+
+    /// Gated AV product: `orow += s[j] · v_idx[j]` (zero-skip on
+    /// `s[j]`); `orow` must be pre-zeroed.
+    fn attend_indexed_into(&self, s: &[f32], idx: &[usize], orow: &mut [f32]);
+}
+
+/// `srow[c] = Σ_k q[k] · K[c, k]` over row-major cached key slots — the
+/// reference's `matmul(q, Kᵀ)` with the identical k-ascending,
+/// zero-skip-on-q accumulation chain per element, minus the per-step
+/// K-matrix clone and transpose.
+pub(crate) fn scores_row(q: &[f32], kdata: &[f32], dh: usize, srow: &mut [f32]) {
+    for (c, o) in srow.iter_mut().enumerate() {
+        *o = dot_qk(q, &kdata[c * dh..(c + 1) * dh]);
+    }
+}
+
+/// `orow[c] = Σ_k s[k] · V[k, c]` (zero-skip on the masked scores, which
+/// is where the SPLS keep-mask's zeros actually save work) — the
+/// reference's `matmul(s, V)`; `orow` must be zeroed.
+pub(crate) fn attend_row(s: &[f32], vdata: &[f32], dh: usize, orow: &mut [f32]) {
+    for (k, &av) in s.iter().enumerate() {
+        if av == 0.0 {
+            continue;
+        }
+        axpy_prob(av, &vdata[k * dh..(k + 1) * dh], orow);
+    }
+}
 
 /// One attention head's append-only K/V cache plus eviction state.
 #[derive(Clone, Debug)]
@@ -134,6 +212,53 @@ impl HeadKv {
     }
 }
 
+impl KvSlots for HeadKv {
+    fn len(&self) -> usize {
+        HeadKv::len(self)
+    }
+
+    fn push(&mut self, k_row: &[f32], v_row: &[f32], pos: usize) {
+        HeadKv::push(self, k_row, v_row, pos);
+    }
+
+    fn positions(&self) -> &[usize] {
+        HeadKv::positions(self)
+    }
+
+    fn accumulate(&mut self, row: &[i32]) {
+        HeadKv::accumulate(self, row);
+    }
+
+    fn evict_lowest(&mut self, recent: usize) -> Option<usize> {
+        HeadKv::evict_lowest(self, recent)
+    }
+
+    fn scores_into(&self, q: &[f32], srow: &mut [f32]) {
+        scores_row(q, &self.k, self.dh, srow);
+    }
+
+    fn attend_into(&self, s: &[f32], orow: &mut [f32]) {
+        attend_row(s, &self.v, self.dh, orow);
+    }
+
+    fn dots_into(&self, q: &[f32], idx: &[usize], scale: f32, s: &mut [f32]) {
+        let d = self.dh;
+        for (o, &slot) in s.iter_mut().zip(idx) {
+            *o = dot_qk(q, &self.k[slot * d..(slot + 1) * d]) * scale;
+        }
+    }
+
+    fn attend_indexed_into(&self, s: &[f32], idx: &[usize], orow: &mut [f32]) {
+        let d = self.dh;
+        for (&pv, &slot) in s.iter().zip(idx) {
+            if pv == 0.0 {
+                continue;
+            }
+            axpy_prob(pv, &self.v[slot * d..(slot + 1) * d], orow);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -204,6 +329,74 @@ mod tests {
         assert!(kv.evict_lowest(0).is_some());
         assert_eq!(kv.len(), 2);
         assert!(kv.positions().contains(&2), "diagonal slot survived");
+    }
+
+    #[test]
+    fn budget_boundary_evicts_only_past_the_exact_budget() {
+        // Pins the decode engine's eviction contract (`while len > budget`)
+        // at the exact budget == seq_len boundary, so paged eviction can
+        // be diffed against this contiguous behavior.
+        let budget = 6usize;
+        let mut kv = HeadKv::new(2);
+        let mut evictions = 0usize;
+        for i in 0..budget {
+            let f = i as f32;
+            kv.push(&[f, f], &[f, -f], i);
+            while kv.len() > budget {
+                kv.evict_lowest(2).expect("over budget must evict");
+                evictions += 1;
+            }
+        }
+        assert_eq!(evictions, 0, "len == budget is in-budget: no eviction");
+        assert_eq!(kv.positions(), &[0, 1, 2, 3, 4, 5]);
+        // one token past the boundary: exactly one eviction, oldest slot
+        // (zero scores tie toward the lowest slot)
+        kv.push(&[9.0, 9.0], &[9.0, 9.0], budget);
+        while kv.len() > budget {
+            assert_eq!(kv.evict_lowest(2), Some(0));
+            evictions += 1;
+        }
+        assert_eq!(evictions, 1);
+        assert_eq!(kv.positions(), &[1, 2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn zero_scores_sliding_window_pins_surviving_positions() {
+        // The dense-mode degradation path end to end: never accumulating
+        // scores turns a budgeted cache into an exact sliding window.
+        let budget = 4usize;
+        let mut kv = HeadKv::new(2);
+        for i in 0..12 {
+            let f = i as f32;
+            kv.push(&[f, 0.0], &[0.0, f], i);
+            while kv.len() > budget {
+                assert_eq!(kv.evict_lowest(1), Some(0), "ties fall to the oldest slot");
+            }
+        }
+        assert_eq!(kv.positions(), &[8, 9, 10, 11]);
+    }
+
+    #[test]
+    fn kv_slots_attention_ops_match_the_reference_loops() {
+        // filled(3): k_i = [i, i+0.5], v_i = [-i, 2i]
+        let kv = filled(3);
+        let q = [0.5, 0.0]; // exercises the zero-skip-on-q chain
+        let mut srow = [0.0f32; 3];
+        kv.scores_into(&q, &mut srow);
+        assert_eq!(srow, [0.0, 0.5, 1.0]);
+
+        let s = [0.25, 0.0, 0.5];
+        let mut orow = [0.0f32; 2];
+        kv.attend_into(&s, &mut orow);
+        assert_eq!(orow, [-1.0, 2.0]);
+
+        let idx = [0usize, 2];
+        let mut sg = [0.0f32; 2];
+        kv.dots_into(&q, &idx, 2.0, &mut sg);
+        assert_eq!(sg, [0.0, 2.0]);
+        let mut og = [0.0f32; 2];
+        kv.attend_indexed_into(&sg, &idx, &mut og);
+        assert_eq!(og, [-4.0, 8.0]);
     }
 
     #[test]

@@ -15,16 +15,22 @@
 //!   budget) behind [`DecodeEngine`] / [`DecodeState`];
 //! * [`generate`] — greedy + seeded top-k generation, sliceable for the
 //!   serving tier's continuous decode batching
-//!   (`coordinator::Server::serve_generate`).
+//!   (`coordinator::Server::serve_generate`);
+//! * [`paged`] — the multi-session block-pool KV backend: fixed-size
+//!   refcounted blocks, prefix-trie sharing with copy-on-write
+//!   divergence, and a paged decode session whose single-session output
+//!   is bit-identical to the contiguous [`DecodeState`].
 
 pub mod generate;
 pub mod incremental;
 pub mod kv_cache;
+pub mod paged;
 pub mod step;
 
 pub use generate::{generate, GenResult, GenSession, Sampler, Sampling};
 pub use incremental::{
     topk_keep_with_diagonal, HeadPredictor, HeadStepPlan, LayerStepPlan, StepPlan,
 };
-pub use kv_cache::HeadKv;
-pub use step::{DecodeConfig, DecodeEngine, DecodeMode, DecodeState, DecodeStats};
+pub use kv_cache::{HeadKv, KvSlots};
+pub use paged::{PagedDecodeState, PagedHeadKv, PagedPool, PoolStats};
+pub use step::{DecodeConfig, DecodeEngine, DecodeMode, DecodeState, DecodeStateOf, DecodeStats};

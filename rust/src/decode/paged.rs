@@ -1,0 +1,866 @@
+//! Paged KV: a fixed-size-block, refcounted K/V pool shared by every
+//! decode session on a server, with prompt-prefix sharing and
+//! copy-on-write divergence — the multi-session workload class
+//! (thousands of sessions sharing one long system prompt) the
+//! contiguous per-session [`HeadKv`](crate::decode::kv_cache::HeadKv)
+//! cannot reach.
+//!
+//! Three layers:
+//!
+//! * [`PagedPool`] — the block pool: every block holds `block_size`
+//!   K and V rows of one head, allocation pops a free list under a hard
+//!   `max_blocks` cap, and a per-block refcount counts the **logical
+//!   slots** referencing it (session chains plus prefix-trie
+//!   snapshots). A block frees the instant its last reference drops.
+//! * [`PagedHeadKv`] — one head's block table: an ordered list of
+//!   `(block, row)` slot references plus the same positions/eviction
+//!   scores as the contiguous cache. Appends go to an *owned* tail
+//!   block; appending to a *shared* partial tail first copies it
+//!   (copy-on-write), so divergence after a shared prefix never
+//!   mutates another session's view. Score eviction only considers
+//!   slots in **private** blocks (refcount == this head's slot count in
+//!   the block): shared slots are pinned by refcount first, SpAtten
+//!   score eviction second — exactly the contiguous policy once every
+//!   block is private, which is the single-session case.
+//! * [`PagedDecodeState`] — a decode session over the pool, plus the
+//!   prefix trie protocol: the first session to complete a declared
+//!   prefix publishes a snapshot (block table + predictor + reuse rows,
+//!   refcounts bumped) under the token IDs; later sessions with the
+//!   same prefix and the same [`DecodeConfig`] attach to it — mapping
+//!   the same physical blocks and skipping the prefix forward passes
+//!   entirely. The decode forward is deterministic, so an attached
+//!   continuation is bit-identical to recomputing the prefix.
+//!
+//! **Bitwise-parity contract**: `PagedHeadKv` implements
+//! [`KvSlots`] with the same `dot_qk`/`axpy_prob` accumulation chains,
+//! in the same ascending-slot order, as the contiguous cache, and
+//! [`PagedDecodeState`] runs the *same* generic `push`
+//! (`DecodeStateOf`). A single uncontended session is therefore
+//! bit-identical to [`DecodeState`](crate::decode::DecodeState) at
+//! every step — asserted on the trained artifacts by
+//! `tests/integration_paged.rs`.
+//!
+//! Custom [`MaskGen`] sessions neither publish nor attach (snapshots
+//! encode the default SPLS rule), and sessions whose config differs
+//! from a published entry fall back to a plain miss. Trie snapshots pin
+//! their blocks for the pool's lifetime; a session whose shared prefix
+//! exceeds its KV budget simply stops evicting (refcount precedence),
+//! mirroring the contiguous `None`-break.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use crate::decode::incremental::HeadPredictor;
+use crate::decode::kv_cache::KvSlots;
+use crate::decode::step::{DecodeConfig, DecodeEngine, DecodeStateOf, DecodeStats};
+use crate::model::sparse_kernels::{axpy_prob, dot_qk};
+use crate::spls::maskgen::MaskGen;
+use crate::spls::plan_cache::SharedPlanCache;
+
+/// One fixed-size page of K/V rows for one head.
+struct Block {
+    /// Row-major `block_size × dh` key rows (rows ≥ `fill` are unset).
+    k: Vec<f32>,
+    /// Row-major `block_size × dh` value rows.
+    v: Vec<f32>,
+    /// Rows written so far; appends always land at `fill`.
+    fill: usize,
+    /// Logical slot references: one per session-chain slot plus one per
+    /// prefix-trie snapshot slot pointing at this block.
+    refs: usize,
+}
+
+/// One head-chain slot: which block, which row inside it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct SlotRef {
+    block: usize,
+    row: usize,
+}
+
+/// Prefix-trie node keyed on token IDs.
+#[derive(Default)]
+struct TrieNode {
+    children: HashMap<i32, TrieNode>,
+    entry: Option<Box<PrefixEntry>>,
+}
+
+/// Published snapshot of a completed prefix: everything a session needs
+/// to continue decoding as if it had pushed the prefix itself.
+#[derive(Clone)]
+struct PrefixEntry {
+    /// Sessions attach only under the exact same decode config.
+    cfg: DecodeConfig,
+    layers: Vec<LayerSnapshot>,
+}
+
+#[derive(Clone)]
+struct LayerSnapshot {
+    heads: Vec<HeadSnapshot>,
+    prev_ffn: Option<Vec<f32>>,
+}
+
+#[derive(Clone)]
+struct HeadSnapshot {
+    slots: Vec<SlotRef>,
+    positions: Vec<usize>,
+    scores: Vec<f64>,
+    /// The publisher's partially-filled tail block, if any; attachers
+    /// adopt it as a *shared* tail (their first append copies it).
+    tail: Option<usize>,
+    pred: HeadPredictor,
+    prev_out: Option<Vec<f32>>,
+}
+
+struct PoolInner {
+    block_size: usize,
+    dh: usize,
+    max_blocks: usize,
+    blocks: Vec<Option<Block>>,
+    free: Vec<usize>,
+    in_use: usize,
+    peak: usize,
+    allocated_total: usize,
+    cow_copies: usize,
+    prefix_hits: usize,
+    prefix_misses: usize,
+    shared_attach_tokens: usize,
+    trie: TrieNode,
+}
+
+impl PoolInner {
+    fn block(&self, b: usize) -> &Block {
+        self.blocks[b].as_ref().expect("live block reference")
+    }
+
+    fn block_mut(&mut self, b: usize) -> &mut Block {
+        self.blocks[b].as_mut().expect("live block reference")
+    }
+
+    /// Pop the free list (or grow, under the hard cap) and install a
+    /// zeroed block with no references yet.
+    fn alloc_block(&mut self) -> usize {
+        let b = match self.free.pop() {
+            Some(b) => b,
+            None => {
+                assert!(
+                    self.blocks.len() < self.max_blocks,
+                    "paged KV pool exhausted: {} blocks live (cap {}) — raise the pool cap \
+                     or end sessions",
+                    self.in_use,
+                    self.max_blocks
+                );
+                self.blocks.push(None);
+                self.blocks.len() - 1
+            }
+        };
+        let n = self.block_size * self.dh;
+        self.blocks[b] = Some(Block { k: vec![0.0; n], v: vec![0.0; n], fill: 0, refs: 0 });
+        self.in_use += 1;
+        self.allocated_total += 1;
+        self.peak = self.peak.max(self.in_use);
+        b
+    }
+
+    /// Copy-on-write: clone block `b`'s payload (rows + fill) into a
+    /// fresh block. References move separately via `add_refs`/`sub_refs`.
+    fn cow_block(&mut self, b: usize) -> usize {
+        let nb = self.alloc_block();
+        let (k, v, fill) = {
+            let src = self.block(b);
+            (src.k.clone(), src.v.clone(), src.fill)
+        };
+        let dst = self.block_mut(nb);
+        dst.k = k;
+        dst.v = v;
+        dst.fill = fill;
+        self.cow_copies += 1;
+        nb
+    }
+
+    fn add_refs(&mut self, b: usize, n: usize) {
+        self.block_mut(b).refs += n;
+    }
+
+    /// Drop `n` references; the block frees (free-list return) at zero.
+    fn sub_refs(&mut self, b: usize, n: usize) {
+        let blk = self.block_mut(b);
+        assert!(blk.refs >= n, "paged block refcount underflow");
+        blk.refs -= n;
+        if blk.refs == 0 {
+            self.blocks[b] = None;
+            self.free.push(b);
+            self.in_use -= 1;
+        }
+    }
+
+    fn is_freed(&self, b: usize) -> bool {
+        self.blocks[b].is_none()
+    }
+
+    /// Write one K/V row at the block's fill cursor; returns the row.
+    fn append_row(&mut self, b: usize, k_row: &[f32], v_row: &[f32]) -> usize {
+        let d = self.dh;
+        let blk = self.block_mut(b);
+        let row = blk.fill;
+        debug_assert!(row < self.block_size);
+        blk.k[row * d..(row + 1) * d].copy_from_slice(k_row);
+        blk.v[row * d..(row + 1) * d].copy_from_slice(v_row);
+        blk.fill += 1;
+        blk.refs += 1;
+        row
+    }
+
+    fn k_row(&self, s: SlotRef, d: usize) -> &[f32] {
+        &self.block(s.block).k[s.row * d..(s.row + 1) * d]
+    }
+
+    fn v_row(&self, s: SlotRef, d: usize) -> &[f32] {
+        &self.block(s.block).v[s.row * d..(s.row + 1) * d]
+    }
+
+    fn lookup(&self, prefix: &[i32]) -> Option<&PrefixEntry> {
+        let mut node = &self.trie;
+        for t in prefix {
+            node = node.children.get(t)?;
+        }
+        node.entry.as_deref()
+    }
+
+    fn insert(&mut self, prefix: &[i32], entry: PrefixEntry) {
+        let mut node = &mut self.trie;
+        for t in prefix {
+            node = node.children.entry(*t).or_default();
+        }
+        node.entry = Some(Box::new(entry));
+    }
+}
+
+/// Pool-level counters, snapshot for `/metrics` and BENCH_6.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PoolStats {
+    /// Rows per block.
+    pub block_size: usize,
+    /// Hard cap on live blocks (the fixed pool memory).
+    pub max_blocks: usize,
+    /// Blocks currently live.
+    pub in_use: usize,
+    /// High-water mark of live blocks.
+    pub peak: usize,
+    /// Blocks ever allocated (free-list reuse counts again).
+    pub allocated_total: usize,
+    /// Copy-on-write block copies (shared-tail divergences).
+    pub cow_copies: usize,
+    /// Prefix-trie attaches served.
+    pub prefix_hits: usize,
+    /// Prefix declarations that found no (matching) entry.
+    pub prefix_misses: usize,
+    /// Prefix tokens whose forward passes were skipped by attaching.
+    pub shared_attach_tokens: usize,
+}
+
+impl PoolStats {
+    /// Hit fraction over prefix declarations (0 when cold).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.prefix_hits + self.prefix_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.prefix_hits as f64 / total as f64
+        }
+    }
+}
+
+/// The shared block pool (cheap to clone: all clones are handles onto
+/// one pool). One pool serves every layer/head of every session on a
+/// server; `max_blocks` is the hard memory cap.
+#[derive(Clone)]
+pub struct PagedPool {
+    inner: Arc<Mutex<PoolInner>>,
+}
+
+impl PagedPool {
+    /// `block_size` rows per block, at most `max_blocks` live blocks,
+    /// `dh` values per K (and V) row.
+    pub fn new(block_size: usize, max_blocks: usize, dh: usize) -> Self {
+        assert!(block_size >= 1 && max_blocks >= 1 && dh >= 1);
+        Self {
+            inner: Arc::new(Mutex::new(PoolInner {
+                block_size,
+                dh,
+                max_blocks,
+                blocks: Vec::new(),
+                free: Vec::new(),
+                in_use: 0,
+                peak: 0,
+                allocated_total: 0,
+                cow_copies: 0,
+                prefix_hits: 0,
+                prefix_misses: 0,
+                shared_attach_tokens: 0,
+                trie: TrieNode::default(),
+            })),
+        }
+    }
+
+    /// Poison-tolerant lock: a panicked session (e.g. pool exhaustion
+    /// unwinding through a replica) must not wedge every other session.
+    fn lock(&self) -> MutexGuard<'_, PoolInner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        let g = self.lock();
+        PoolStats {
+            block_size: g.block_size,
+            max_blocks: g.max_blocks,
+            in_use: g.in_use,
+            peak: g.peak,
+            allocated_total: g.allocated_total,
+            cow_copies: g.cow_copies,
+            prefix_hits: g.prefix_hits,
+            prefix_misses: g.prefix_misses,
+            shared_attach_tokens: g.shared_attach_tokens,
+        }
+    }
+
+    /// Rows per block (the K/V granularity of sharing).
+    pub fn block_size(&self) -> usize {
+        self.lock().block_size
+    }
+}
+
+/// One attention head's block table over the shared pool — the paged
+/// counterpart of [`HeadKv`](crate::decode::kv_cache::HeadKv).
+pub struct PagedHeadKv {
+    pool: PagedPool,
+    dh: usize,
+    /// Ordered logical slots (one per cached token), each holding one
+    /// block reference.
+    slots: Vec<SlotRef>,
+    positions: Vec<usize>,
+    score: Vec<f64>,
+    /// Block this head appends into, while it has room.
+    tail: Option<usize>,
+    /// Whether the tail may be appended to in place. `false` after the
+    /// head's chain was published to (or attached from) the prefix
+    /// trie: the next append copies the tail first (CoW).
+    tail_owned: bool,
+}
+
+impl PagedHeadKv {
+    pub fn new(pool: PagedPool, dh: usize) -> Self {
+        assert!(dh >= 1);
+        debug_assert_eq!(pool.lock().dh, dh, "pool row width must match the head");
+        Self {
+            pool,
+            dh,
+            slots: Vec::new(),
+            positions: Vec::new(),
+            score: Vec::new(),
+            tail: None,
+            tail_owned: false,
+        }
+    }
+
+    /// Distinct live blocks this head references.
+    pub fn blocks_referenced(&self) -> usize {
+        let mut seen: Vec<usize> = self.slots.iter().map(|s| s.block).collect();
+        seen.sort_unstable();
+        seen.dedup();
+        seen.len()
+    }
+
+    /// Cumulative importance scores, in slot order.
+    pub fn scores(&self) -> &[f64] {
+        &self.score
+    }
+}
+
+impl KvSlots for PagedHeadKv {
+    fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    fn push(&mut self, k_row: &[f32], v_row: &[f32], pos: usize) {
+        assert_eq!(k_row.len(), self.dh);
+        assert_eq!(v_row.len(), self.dh);
+        let mut pool = self.pool.lock();
+        let bs = pool.block_size;
+        let tb = match self.tail {
+            Some(b) if self.tail_owned && pool.block(b).fill < bs => b,
+            Some(b) if !self.tail_owned && pool.block(b).fill < bs => {
+                // copy-on-write: first divergent append after sharing
+                let nb = pool.cow_block(b);
+                let mut moved = 0usize;
+                for s in self.slots.iter_mut().filter(|s| s.block == b) {
+                    s.block = nb;
+                    moved += 1;
+                }
+                pool.add_refs(nb, moved);
+                pool.sub_refs(b, moved);
+                self.tail = Some(nb);
+                self.tail_owned = true;
+                nb
+            }
+            _ => {
+                // no tail, or the tail is full: open a fresh block
+                let nb = pool.alloc_block();
+                self.tail = Some(nb);
+                self.tail_owned = true;
+                nb
+            }
+        };
+        let row = pool.append_row(tb, k_row, v_row);
+        self.slots.push(SlotRef { block: tb, row });
+        self.positions.push(pos);
+        self.score.push(0.0);
+    }
+
+    fn positions(&self) -> &[usize] {
+        &self.positions
+    }
+
+    fn accumulate(&mut self, row: &[i32]) {
+        assert_eq!(row.len(), self.slots.len(), "score row must cover the cache");
+        let max = row.iter().map(|r| r.unsigned_abs()).max().unwrap_or(0).max(1) as f64;
+        for (s, &r) in self.score.iter_mut().zip(row) {
+            *s += r.unsigned_abs() as f64 / max;
+        }
+    }
+
+    fn evict_lowest(&mut self, recent: usize) -> Option<usize> {
+        let n = self.slots.len();
+        let protected = recent.max(1);
+        if n <= protected {
+            return None;
+        }
+        let lim = n - protected;
+        let mut pool = self.pool.lock();
+        // refcount precedence: a block is evictable only when private —
+        // every reference to it is one of this head's own slots
+        let mut mine: HashMap<usize, usize> = HashMap::new();
+        for s in &self.slots {
+            *mine.entry(s.block).or_insert(0) += 1;
+        }
+        let mut best: Option<usize> = None;
+        for i in 0..lim {
+            let b = self.slots[i].block;
+            if pool.block(b).refs != mine[&b] {
+                continue; // shared (trie or sibling session): pinned
+            }
+            match best {
+                Some(j) if self.score[i] >= self.score[j] => {}
+                _ => best = Some(i),
+            }
+        }
+        let best = best?;
+        let b = self.slots[best].block;
+        pool.sub_refs(b, 1);
+        if pool.is_freed(b) && self.tail == Some(b) {
+            self.tail = None;
+        }
+        drop(pool);
+        self.slots.remove(best);
+        self.positions.remove(best);
+        self.score.remove(best);
+        Some(best)
+    }
+
+    fn scores_into(&self, q: &[f32], srow: &mut [f32]) {
+        let pool = self.pool.lock();
+        for (o, &s) in srow.iter_mut().zip(&self.slots) {
+            *o = dot_qk(q, pool.k_row(s, self.dh));
+        }
+    }
+
+    fn attend_into(&self, s: &[f32], orow: &mut [f32]) {
+        let pool = self.pool.lock();
+        for (&av, &sl) in s.iter().zip(&self.slots) {
+            if av == 0.0 {
+                continue;
+            }
+            axpy_prob(av, pool.v_row(sl, self.dh), orow);
+        }
+    }
+
+    fn dots_into(&self, q: &[f32], idx: &[usize], scale: f32, s: &mut [f32]) {
+        let pool = self.pool.lock();
+        for (o, &slot) in s.iter_mut().zip(idx) {
+            *o = dot_qk(q, pool.k_row(self.slots[slot], self.dh)) * scale;
+        }
+    }
+
+    fn attend_indexed_into(&self, s: &[f32], idx: &[usize], orow: &mut [f32]) {
+        let pool = self.pool.lock();
+        for (&pv, &slot) in s.iter().zip(idx) {
+            if pv == 0.0 {
+                continue;
+            }
+            axpy_prob(pv, pool.v_row(self.slots[slot], self.dh), orow);
+        }
+    }
+}
+
+impl Drop for PagedHeadKv {
+    fn drop(&mut self) {
+        let mut pool = self.pool.lock();
+        for s in &self.slots {
+            pool.sub_refs(s.block, 1);
+        }
+    }
+}
+
+/// A decode session over the shared block pool, with optional
+/// prefix-trie sharing. Single sessions are bit-identical to
+/// [`DecodeState`](crate::decode::DecodeState) (module docs).
+pub struct PagedDecodeState {
+    inner: DecodeStateOf<PagedHeadKv>,
+    pool: PagedPool,
+    /// Declared shared prefix (prompt head), if any.
+    prefix: Option<Vec<i32>>,
+    /// Whether this session restored the prefix from the trie.
+    attached: bool,
+    /// Whether this session already published (or raced) its prefix.
+    published: bool,
+}
+
+impl PagedDecodeState {
+    pub fn new(eng: Arc<DecodeEngine>, cfg: DecodeConfig, pool: &PagedPool) -> Self {
+        let dh = eng.weights().cfg.d_head();
+        let p = pool.clone();
+        let inner = DecodeStateOf::with_kv(eng, cfg, move || PagedHeadKv::new(p.clone(), dh));
+        Self {
+            inner,
+            pool: pool.clone(),
+            prefix: None,
+            attached: false,
+            published: false,
+        }
+    }
+
+    /// Attach a shared plan cache (see `DecodeStateOf::with_plan_cache`).
+    pub fn with_plan_cache(mut self, cache: SharedPlanCache) -> Self {
+        self.inner = self.inner.with_plan_cache(cache);
+        self
+    }
+
+    /// Swap in a custom keep-mask generator. Mask sessions opt out of
+    /// prefix sharing: snapshots encode the default SPLS rule.
+    pub fn with_mask_gen(mut self, gen: Arc<dyn MaskGen>) -> Self {
+        self.inner = self.inner.with_mask_gen(gen);
+        self
+    }
+
+    /// Declare the shared prompt prefix. On a trie hit (same tokens,
+    /// same config) the session maps the published blocks and skips the
+    /// prefix's forward passes; on a miss it remembers the prefix and
+    /// publishes once its pushes complete it.
+    pub fn with_prefix(mut self, prefix: &[i32]) -> Self {
+        if prefix.is_empty() || self.inner.has_mask_gen() {
+            return self;
+        }
+        let restored: Option<PrefixEntry> = {
+            let mut pool = self.pool.lock();
+            let found = pool
+                .lookup(prefix)
+                .filter(|e| e.cfg == *self.inner.config())
+                .cloned();
+            match found {
+                Some(e) => {
+                    for ls in &e.layers {
+                        for hs in &ls.heads {
+                            for s in &hs.slots {
+                                pool.add_refs(s.block, 1);
+                            }
+                        }
+                    }
+                    pool.prefix_hits += 1;
+                    pool.shared_attach_tokens += prefix.len();
+                    Some(e)
+                }
+                None => {
+                    pool.prefix_misses += 1;
+                    None
+                }
+            }
+        };
+        self.prefix = Some(prefix.to_vec());
+        if let Some(entry) = restored {
+            self.inner.set_tokens(prefix.to_vec());
+            let layers = self.inner.layers_mut();
+            assert_eq!(entry.layers.len(), layers.len(), "snapshot/model layer mismatch");
+            for (layer, ls) in layers.iter_mut().zip(entry.layers) {
+                assert_eq!(ls.heads.len(), layer.heads.len(), "snapshot/model head mismatch");
+                layer.prev_ffn = ls.prev_ffn;
+                for (head, hs) in layer.heads.iter_mut().zip(ls.heads) {
+                    head.kv.slots = hs.slots;
+                    head.kv.positions = hs.positions;
+                    head.kv.score = hs.scores;
+                    head.kv.tail = hs.tail;
+                    head.kv.tail_owned = false;
+                    head.pred = hs.pred;
+                    head.prev_out = hs.prev_out;
+                }
+            }
+            self.attached = true;
+            self.published = true; // the entry exists; nothing to publish
+        }
+        self
+    }
+
+    /// Push one token; returns the next-token logits. Completing a
+    /// declared (un-attached) prefix publishes its snapshot to the trie.
+    pub fn push(&mut self, token: i32) -> Vec<f32> {
+        let logits = self.inner.push(token);
+        if !self.published && !self.inner.has_mask_gen() {
+            if let Some(pfx) = &self.prefix {
+                if self.inner.len() == pfx.len() && self.inner.tokens() == &pfx[..] {
+                    self.publish();
+                    self.published = true;
+                }
+            }
+        }
+        logits
+    }
+
+    /// Snapshot the current (prefix-complete) state into the trie and
+    /// mark every tail shared, so this session's own next append CoWs
+    /// instead of mutating the published rows.
+    fn publish(&mut self) {
+        let pfx = self.prefix.clone().expect("publish requires a declared prefix");
+        {
+            let mut pool = self.pool.lock();
+            if pool.lookup(&pfx).is_some() {
+                return; // a racing publisher won; its snapshot stands
+            }
+            let mut layers = Vec::with_capacity(self.inner.layers().len());
+            for ls in self.inner.layers() {
+                let mut heads = Vec::with_capacity(ls.heads.len());
+                for hs in &ls.heads {
+                    for s in &hs.kv.slots {
+                        pool.add_refs(s.block, 1);
+                    }
+                    heads.push(HeadSnapshot {
+                        slots: hs.kv.slots.clone(),
+                        positions: hs.kv.positions.clone(),
+                        scores: hs.kv.score.clone(),
+                        tail: hs.kv.tail,
+                        pred: hs.pred.clone(),
+                        prev_out: hs.prev_out.clone(),
+                    });
+                }
+                layers.push(LayerSnapshot { heads, prev_ffn: ls.prev_ffn.clone() });
+            }
+            pool.insert(&pfx, PrefixEntry { cfg: *self.inner.config(), layers });
+        }
+        for ls in self.inner.layers_mut() {
+            for hs in &mut ls.heads {
+                hs.kv.tail_owned = false;
+            }
+        }
+    }
+
+    /// Tokens pushed or attached so far.
+    pub fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.is_empty()
+    }
+
+    pub fn tokens(&self) -> &[i32] {
+        self.inner.tokens()
+    }
+
+    pub fn stats(&self) -> DecodeStats {
+        self.inner.stats()
+    }
+
+    pub fn kv_len(&self, layer: usize, head: usize) -> usize {
+        self.inner.kv_len(layer, head)
+    }
+
+    /// Whether the declared prefix was served from the trie.
+    pub fn attached(&self) -> bool {
+        self.attached
+    }
+
+    /// Distinct live blocks referenced across every layer/head.
+    pub fn blocks_referenced(&self) -> usize {
+        let mut seen: Vec<usize> = Vec::new();
+        for ls in self.inner.layers() {
+            for hs in &ls.heads {
+                seen.extend(hs.kv.slots.iter().map(|s| s.block));
+            }
+        }
+        seen.sort_unstable();
+        seen.dedup();
+        seen.len()
+    }
+
+    pub fn pool(&self) -> &PagedPool {
+        &self.pool
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decode::kv_cache::HeadKv;
+
+    fn row(dh: usize, f: f32) -> Vec<f32> {
+        (0..dh).map(|i| f + i as f32 * 0.25).collect()
+    }
+
+    fn push_n(kv: &mut PagedHeadKv, n: usize, base: usize) {
+        for i in 0..n {
+            let f = (base + i) as f32;
+            kv.push(&row(2, f), &row(2, -f), base + i);
+        }
+    }
+
+    #[test]
+    fn blocks_allocate_fill_and_free() {
+        let pool = PagedPool::new(4, 8, 2);
+        let mut kv = PagedHeadKv::new(pool.clone(), 2);
+        push_n(&mut kv, 5, 0);
+        let s = pool.stats();
+        assert_eq!(kv.len(), 5);
+        assert_eq!(kv.blocks_referenced(), 2, "5 rows at block size 4 = 2 blocks");
+        assert_eq!((s.in_use, s.peak, s.allocated_total), (2, 2, 2));
+        drop(kv);
+        let s = pool.stats();
+        assert_eq!(s.in_use, 0, "dropping the head frees its blocks");
+        // the free list is reused, not regrown
+        let mut kv2 = PagedHeadKv::new(pool.clone(), 2);
+        push_n(&mut kv2, 8, 0);
+        let s = pool.stats();
+        assert_eq!((s.in_use, s.peak, s.allocated_total), (2, 2, 4));
+    }
+
+    #[test]
+    #[should_panic(expected = "paged KV pool exhausted")]
+    fn hard_cap_panics_on_exhaustion() {
+        let pool = PagedPool::new(2, 1, 2);
+        let mut kv = PagedHeadKv::new(pool, 2);
+        push_n(&mut kv, 3, 0); // third row needs a second block
+    }
+
+    #[test]
+    fn paged_head_matches_contiguous_reference() {
+        // same pushes + accumulate + evictions → same slots, scores and
+        // attention outputs as HeadKv, block boundaries notwithstanding
+        let pool = PagedPool::new(3, 16, 2);
+        let mut paged = PagedHeadKv::new(pool, 2);
+        let mut flat = HeadKv::new(2);
+        for i in 0..8 {
+            let f = i as f32;
+            let (k, v) = (row(2, f), row(2, -f));
+            KvSlots::push(&mut paged, &k, &v, i);
+            KvSlots::push(&mut flat, &k, &v, i);
+        }
+        let srow = [3, -1, 4, 1, -5, 9, 2, 6];
+        KvSlots::accumulate(&mut paged, &srow);
+        KvSlots::accumulate(&mut flat, &srow);
+        assert_eq!(
+            KvSlots::evict_lowest(&mut paged, 2),
+            KvSlots::evict_lowest(&mut flat, 2)
+        );
+        assert_eq!(KvSlots::positions(&paged), KvSlots::positions(&flat));
+        let q = [0.75, -0.5];
+        let (mut sp, mut sf) = (vec![0.0f32; 7], vec![0.0f32; 7]);
+        paged.scores_into(&q, &mut sp);
+        flat.scores_into(&q, &mut sf);
+        assert_eq!(sp, sf);
+        let (mut op, mut of) = (vec![0.0f32; 2], vec![0.0f32; 2]);
+        paged.attend_into(&sp, &mut op);
+        flat.attend_into(&sf, &mut of);
+        assert_eq!(op, of);
+        let idx = [0usize, 3, 6];
+        let (mut gp, mut gf) = (vec![0.0f32; 3], vec![0.0f32; 3]);
+        paged.dots_into(&q, &idx, 0.5, &mut gp);
+        flat.dots_into(&q, &idx, 0.5, &mut gf);
+        assert_eq!(gp, gf);
+        let (mut ap, mut af) = (vec![0.0f32; 2], vec![0.0f32; 2]);
+        paged.attend_indexed_into(&gp, &idx, &mut ap);
+        flat.attend_indexed_into(&gf, &idx, &mut af);
+        assert_eq!(ap, af);
+    }
+
+    #[test]
+    fn shared_partial_tail_copies_on_write() {
+        let pool = PagedPool::new(4, 8, 2);
+        let mut a = PagedHeadKv::new(pool.clone(), 2);
+        push_n(&mut a, 3, 0); // one partial block (fill 3)
+        // share a's chain, as a trie snapshot would: bump refs, hand b
+        // the same slots with an un-owned tail
+        let tail = a.tail.expect("partial block is the tail");
+        let mut b = PagedHeadKv::new(pool.clone(), 2);
+        {
+            let mut g = pool.lock();
+            g.add_refs(tail, a.slots.len());
+        }
+        b.slots = a.slots.clone();
+        b.positions = a.positions.clone();
+        b.score = a.score.clone();
+        b.tail = Some(tail);
+        b.tail_owned = false;
+        a.tail_owned = false;
+        // b diverges: its append must copy the shared block
+        b.push(&row(2, 50.0), &row(2, -50.0), 3);
+        let s = pool.stats();
+        assert_eq!(s.cow_copies, 1);
+        assert_eq!(s.in_use, 2, "original + copied block");
+        assert_ne!(b.slots[0].block, a.slots[0].block, "b repointed off the shared block");
+        // a's view is untouched; b sees the shared rows plus its own
+        let q = [1.0, 0.0];
+        let mut sa = vec![0.0f32; 3];
+        a.scores_into(&q, &mut sa);
+        assert_eq!(sa, [0.0, 1.0, 2.0]);
+        let mut sb = vec![0.0f32; 4];
+        b.scores_into(&q, &mut sb);
+        assert_eq!(sb, [0.0, 1.0, 2.0, 50.0]);
+        // a diverging later also CoWs (its tail went shared at publish)
+        a.push(&row(2, 9.0), &row(2, -9.0), 3);
+        assert_eq!(pool.stats().cow_copies, 2);
+    }
+
+    #[test]
+    fn eviction_pins_shared_blocks_and_drops_private_ones() {
+        let pool = PagedPool::new(2, 16, 2);
+        let mut kv = PagedHeadKv::new(pool.clone(), 2);
+        push_n(&mut kv, 6, 0); // blocks: [0,1] [2,3] [4,5]
+        // pin the first block as a trie snapshot would
+        let shared = kv.slots[0].block;
+        pool.lock().add_refs(shared, 1);
+        // zero scores tie toward the lowest slot — but slots 0 and 1
+        // live in the pinned block, so slot 2 goes first
+        assert_eq!(KvSlots::evict_lowest(&mut kv, 1), Some(2));
+        assert_eq!(KvSlots::positions(&kv), &[0, 1, 3, 4, 5]);
+        // nothing evictable → None (only pinned + protected slots left)
+        let mut small = PagedHeadKv::new(pool.clone(), 2);
+        push_n(&mut small, 2, 10);
+        let b = small.slots[0].block;
+        pool.lock().add_refs(b, 1);
+        assert_eq!(KvSlots::evict_lowest(&mut small, 1), None);
+        pool.lock().sub_refs(b, 1);
+    }
+
+    #[test]
+    fn evicting_a_whole_block_returns_it_to_the_free_list() {
+        let pool = PagedPool::new(1, 8, 2);
+        let mut kv = PagedHeadKv::new(pool.clone(), 2);
+        push_n(&mut kv, 3, 0); // one block per row
+        // evicting the newest-but-protected rows is impossible; evict
+        // slot 0 (its own block) and confirm the pool reclaims it
+        assert_eq!(KvSlots::evict_lowest(&mut kv, 1), Some(0));
+        assert_eq!(pool.stats().in_use, 2);
+        assert_eq!(kv.len(), 2);
+        // the tail block still belongs to the newest slot, so pushes
+        // keep working and reuse the freed block
+        kv.push(&row(2, 7.0), &row(2, 7.0), 3);
+        assert_eq!(pool.stats().in_use, 3);
+        assert_eq!(pool.stats().allocated_total, 4);
+    }
+}

@@ -33,16 +33,21 @@ use std::sync::Arc;
 
 use crate::config::SplsConfig;
 use crate::decode::incremental::{HeadPredictor, HeadStepPlan, LayerStepPlan, StepPlan};
-use crate::decode::kv_cache::HeadKv;
-use crate::model::sparse_kernels::{axpy_prob, dot_qk, softmax_row};
+use crate::decode::kv_cache::{HeadKv, KvSlots};
+use crate::model::sparse_kernels::softmax_row;
 use crate::model::tensor::{
     add_inplace, gelu_inplace, layernorm_into, linear_into, masked_softmax_row,
 };
 use crate::model::{lm_logits_row, PackedModel, TinyWeights};
 use crate::quant::quantize_sym8;
+use crate::spls::maskgen::{MaskGen, SplsTopK};
 use crate::spls::plan_cache::SharedPlanCache;
 use crate::util::mat::MatI;
 use crate::util::scratch::Scratch;
+
+/// The default keep-mask generator (static so the hot loop can borrow
+/// it alongside a custom `Arc<dyn MaskGen>`).
+static DEFAULT_MASK_GEN: SplsTopK = SplsTopK;
 
 /// Attention execution mode of a decode session.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -128,34 +133,59 @@ impl DecodeEngine {
     }
 }
 
-struct HeadState {
-    kv: HeadKv,
-    pred: HeadPredictor,
-    prev_out: Option<Vec<f32>>,
+pub(crate) struct HeadState<K> {
+    pub(crate) kv: K,
+    pub(crate) pred: HeadPredictor,
+    pub(crate) prev_out: Option<Vec<f32>>,
 }
 
-struct LayerState {
-    heads: Vec<HeadState>,
-    prev_ffn: Option<Vec<f32>>,
+pub(crate) struct LayerState<K> {
+    pub(crate) heads: Vec<HeadState<K>>,
+    pub(crate) prev_ffn: Option<Vec<f32>>,
 }
 
 /// One decode session's mutable state: the residual-stream position,
-/// per-layer/per-head caches, and optional plan-cache handle.
-pub struct DecodeState {
+/// per-layer/per-head caches, and optional plan-cache handle. Generic
+/// over the K/V storage ([`KvSlots`]): [`DecodeState`] is the
+/// contiguous [`HeadKv`] instantiation, and
+/// [`PagedDecodeState`](crate::decode::paged::PagedDecodeState) wraps
+/// the block-table one — both run this one `push`, which is what makes
+/// their outputs bit-identical for the same slot history.
+pub struct DecodeStateOf<K: KvSlots> {
     eng: Arc<DecodeEngine>,
     cfg: DecodeConfig,
     recent: usize,
     tokens: Vec<i32>,
-    layers: Vec<LayerState>,
+    layers: Vec<LayerState<K>>,
     cache: Option<SharedPlanCache>,
+    /// Custom keep-mask generator (None = the SPLS top-k rule). Custom
+    /// masks bypass the step-plan cache: plans are keyed on the SPLS
+    /// operating point only.
+    mask: Option<Arc<dyn MaskGen>>,
     stats: DecodeStats,
     /// Per-session scratch arena: steady-state steps reuse these
     /// buffers instead of allocating per-step matrices.
     scratch: Scratch,
 }
 
+/// The contiguous-cache decode session (the paper's serving baseline).
+pub type DecodeState = DecodeStateOf<HeadKv>;
+
 impl DecodeState {
     pub fn new(eng: Arc<DecodeEngine>, cfg: DecodeConfig) -> Self {
+        let dh = eng.weights().cfg.d_head();
+        Self::with_kv(eng, cfg, move || HeadKv::new(dh))
+    }
+}
+
+impl<K: KvSlots> DecodeStateOf<K> {
+    /// Build a session over caller-constructed head caches (one factory
+    /// call per layer × head, in layer-major order).
+    pub(crate) fn with_kv(
+        eng: Arc<DecodeEngine>,
+        cfg: DecodeConfig,
+        mut kv: impl FnMut() -> K,
+    ) -> Self {
         let mcfg = eng.weights().cfg;
         let dh = mcfg.d_head();
         if cfg.kv_budget != usize::MAX {
@@ -170,7 +200,7 @@ impl DecodeState {
             .map(|_| LayerState {
                 heads: (0..mcfg.n_heads)
                     .map(|_| HeadState {
-                        kv: HeadKv::new(dh),
+                        kv: kv(),
                         pred: HeadPredictor::new(dh),
                         prev_out: None,
                     })
@@ -185,6 +215,7 @@ impl DecodeState {
             tokens: Vec::new(),
             layers,
             cache: None,
+            mask: None,
             stats: DecodeStats::default(),
             scratch: Scratch::new(),
         }
@@ -195,6 +226,15 @@ impl DecodeState {
     /// across sessions replay planning from cache.
     pub fn with_plan_cache(mut self, cache: SharedPlanCache) -> Self {
         self.cache = Some(cache);
+        self
+    }
+
+    /// Swap in a custom keep-mask generator (e.g.
+    /// [`ThreeComponent`](crate::spls::maskgen::ThreeComponent)). The
+    /// session stops consulting the shared step-plan cache — memoized
+    /// plans encode the default SPLS rule.
+    pub fn with_mask_gen(mut self, gen: Arc<dyn MaskGen>) -> Self {
+        self.mask = Some(gen);
         self
     }
 
@@ -220,6 +260,27 @@ impl DecodeState {
         self.layers[layer].heads[head].kv.len()
     }
 
+    pub(crate) fn config(&self) -> &DecodeConfig {
+        &self.cfg
+    }
+
+    pub(crate) fn has_mask_gen(&self) -> bool {
+        self.mask.is_some()
+    }
+
+    pub(crate) fn layers(&self) -> &[LayerState<K>] {
+        &self.layers
+    }
+
+    pub(crate) fn layers_mut(&mut self) -> &mut [LayerState<K>] {
+        &mut self.layers
+    }
+
+    /// Overwrite the token history (prefix attach restores a snapshot).
+    pub(crate) fn set_tokens(&mut self, tokens: Vec<i32>) {
+        self.tokens = tokens;
+    }
+
     /// Push one token through the model; returns the next-token logits.
     pub fn push(&mut self, token: i32) -> Vec<f32> {
         let eng = Arc::clone(&self.eng);
@@ -230,14 +291,17 @@ impl DecodeState {
         let spls_mode = self.cfg.mode == DecodeMode::Spls;
         let p = self.tokens.len();
         self.tokens.push(token);
-        // memoized step plan for this exact prefix (Spls mode only)
-        let cached: Option<StepPlan> = match (&self.cache, spls_mode) {
+        // memoized step plan for this exact prefix (Spls mode only;
+        // custom mask generators bypass the cache — plans are keyed on
+        // the SPLS operating point, not the generator)
+        let memo = self.mask.is_none();
+        let cached: Option<StepPlan> = match (&self.cache, spls_mode && memo) {
             (Some(c), true) => {
                 c.get_step(&self.tokens, &self.cfg.spls, self.cfg.kv_budget, self.recent)
             }
             _ => None,
         };
-        let plan_fresh = spls_mode && self.cache.is_some() && cached.is_none();
+        let plan_fresh = spls_mode && memo && self.cache.is_some() && cached.is_none();
         let mut fresh: Option<StepPlan> = if plan_fresh {
             Some(StepPlan { layers: Vec::with_capacity(mcfg.n_layers) })
         } else {
@@ -286,11 +350,16 @@ impl DecodeState {
                             d.clone()
                         }
                         None => {
-                            let d = hs.pred.step(
+                            let gen: &dyn MaskGen = match &self.mask {
+                                Some(g) => g.as_ref(),
+                                None => &DEFAULT_MASK_GEN,
+                            };
+                            let d = hs.pred.step_with(
                                 hq.as_ref().expect("fresh Spls step quantizes h"),
                                 &el.pred_wq[hi],
                                 &el.pred_wk[hi],
                                 &self.cfg.spls,
+                                gen,
                             );
                             if let Some(lp) = layer_plan.as_mut() {
                                 lp.heads.push(d.clone());
@@ -347,47 +416,29 @@ impl DecodeState {
                                 );
                                 let nk = self.scratch.idx.len();
                                 self.scratch.s.reshape(1, nk);
-                                let kdata = hs.kv.k_data();
-                                for (j, &slot) in self.scratch.idx.iter().enumerate() {
-                                    self.scratch.s.data[j] = dot_qk(
-                                        &self.scratch.q.data,
-                                        &kdata[slot * dh..(slot + 1) * dh],
-                                    ) * scale;
-                                }
+                                hs.kv.dots_into(
+                                    &self.scratch.q.data,
+                                    &self.scratch.idx,
+                                    scale,
+                                    &mut self.scratch.s.data[..nk],
+                                );
                                 softmax_row(&mut self.scratch.s.data[..nk]);
-                                let vdata = hs.kv.v_data();
-                                for (j, &slot) in self.scratch.idx.iter().enumerate() {
-                                    let pv = self.scratch.s.data[j];
-                                    if pv == 0.0 {
-                                        continue;
-                                    }
-                                    axpy_prob(
-                                        pv,
-                                        &vdata[slot * dh..(slot + 1) * dh],
-                                        &mut self.scratch.out.data,
-                                    );
-                                }
+                                hs.kv.attend_indexed_into(
+                                    &self.scratch.s.data[..nk],
+                                    &self.scratch.idx,
+                                    &mut self.scratch.out.data,
+                                );
                             }
                             None => {
                                 self.scratch.s.reshape(1, n);
-                                scores_row(
-                                    &self.scratch.q.data,
-                                    hs.kv.k_data(),
-                                    dh,
-                                    &mut self.scratch.s.data,
-                                );
+                                hs.kv.scores_into(&self.scratch.q.data, &mut self.scratch.s.data);
                                 for v in &mut self.scratch.s.data {
                                     *v *= scale;
                                 }
                                 self.scratch.flags.clear();
                                 self.scratch.flags.resize(n, true);
                                 masked_softmax_row(&mut self.scratch.s.data, &self.scratch.flags);
-                                attend_row(
-                                    &self.scratch.s.data,
-                                    hs.kv.v_data(),
-                                    dh,
-                                    &mut self.scratch.out.data,
-                                );
+                                hs.kv.attend_into(&self.scratch.s.data, &mut self.scratch.out.data);
                             }
                         }
                         self.scratch.out.data.clone()
@@ -445,46 +496,13 @@ impl DecodeState {
         if let (Some(c), Some(plan)) = (&self.cache, fresh) {
             c.put_step(&self.tokens, &self.cfg.spls, self.cfg.kv_budget, self.recent, plan);
             self.stats.plan_misses += 1;
-        } else if spls_mode && self.cache.is_none() {
+        } else if spls_mode && (self.cache.is_none() || !memo) {
             self.stats.plan_misses += 1;
         }
         self.stats.steps += 1;
         self.scratch.h.reshape(1, d);
         layernorm_into(&self.scratch.x, &w.lnf_g, &w.lnf_b, &mut self.scratch.h);
         lm_logits_row(&w, self.scratch.h.row(0))
-    }
-}
-
-/// `srow[c] = Σ_k q[k] · K[c, k]` over the row-major cached key slots —
-/// the reference's `matmul(q, Kᵀ)` with the identical k-ascending,
-/// zero-skip-on-q accumulation chain per element, minus the per-step
-/// K-matrix clone and transpose.
-fn scores_row(q: &[f32], kdata: &[f32], dh: usize, srow: &mut [f32]) {
-    for (c, o) in srow.iter_mut().enumerate() {
-        let krow = &kdata[c * dh..(c + 1) * dh];
-        let mut acc = 0.0f32;
-        for (&a, &b) in q.iter().zip(krow) {
-            if a == 0.0 {
-                continue;
-            }
-            acc += a * b;
-        }
-        *o = acc;
-    }
-}
-
-/// `orow[c] = Σ_k s[k] · V[k, c]` (zero-skip on the masked scores, which
-/// is where the SPLS keep-mask's zeros actually save work) — the
-/// reference's `matmul(s, V)`; `orow` must be zeroed.
-fn attend_row(s: &[f32], vdata: &[f32], dh: usize, orow: &mut [f32]) {
-    for (k, &av) in s.iter().enumerate() {
-        if av == 0.0 {
-            continue;
-        }
-        let vrow = &vdata[k * dh..(k + 1) * dh];
-        for (o, &bv) in orow.iter_mut().zip(vrow) {
-            *o += av * bv;
-        }
     }
 }
 
@@ -605,6 +623,35 @@ mod tests {
             assert!(logits.iter().all(|v| v.is_finite()));
         }
         assert_eq!(st.len(), 96);
+    }
+
+    #[test]
+    fn three_component_full_window_equals_dense_decode() {
+        // a window covering every slot keeps everything, so the gated
+        // executor must reproduce dense logits exactly — and a custom
+        // generator must bypass the shared plan cache entirely
+        use crate::spls::maskgen::ThreeComponent;
+        let eng = engine();
+        let seq = toks(5, 12);
+        let spls = SplsConfig {
+            top_k: 0.0,
+            sim_threshold: -1.0,
+            ffn_threshold: usize::MAX,
+            window: 8,
+        };
+        let cfg = DecodeConfig { mode: DecodeMode::Spls, spls, ..DecodeConfig::default() };
+        let cache = SharedPlanCache::new(64);
+        let mut masked = DecodeState::new(Arc::clone(&eng), cfg)
+            .with_plan_cache(cache.clone())
+            .with_mask_gen(Arc::new(ThreeComponent { window: 64, top_k: 0.0, global: 0 }));
+        let mut dense = DecodeState::new(eng, DecodeConfig::default());
+        for &t in &seq {
+            assert_eq!(masked.push(t), dense.push(t));
+        }
+        let s = masked.stats();
+        assert_eq!(s.plan_hits, 0, "custom masks never read the plan cache");
+        assert_eq!(s.plan_misses, 12);
+        assert_eq!(cache.stats().step_misses, 0, "custom masks never probe the cache");
     }
 
     #[test]

@@ -395,8 +395,15 @@ fn generate(args: &[String]) -> Result<()> {
         } else {
             Sampling::Greedy
         };
-        tx.send(GenRequest { id: i as u64, prompt, max_new, sampling, arrived: Instant::now() })
-            .unwrap();
+        tx.send(GenRequest {
+            id: i as u64,
+            prompt,
+            prefix: None,
+            max_new,
+            sampling,
+            arrived: Instant::now(),
+        })
+        .unwrap();
     }
     drop(tx);
     let printer = std::thread::spawn(move || {

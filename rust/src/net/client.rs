@@ -317,6 +317,155 @@ pub fn generate_body(prompt: &[i32], max_new: usize, top_k: Option<(usize, f32, 
     body
 }
 
+/// Build a `/v1/generate` body with a declared shared prefix: the
+/// session decodes `prefix ++ prompt` through the gateway's paged KV
+/// pool, mapping the prefix's published blocks when another session
+/// already prefilled it.
+pub fn generate_body_with_prefix(
+    prefix: &[i32],
+    prompt: &[i32],
+    max_new: usize,
+    top_k: Option<(usize, f32, u64)>,
+) -> String {
+    let mut body = format!(
+        "{{\"prefix\":{},\"prompt\":{},\"max_new\":{max_new}",
+        json::i32_array(prefix),
+        json::i32_array(prompt)
+    );
+    if let Some((k, temperature, seed)) = top_k {
+        body.push_str(&format!(",\"top_k\":{k},\"temperature\":{temperature},\"seed\":{seed}"));
+    }
+    body.push('}');
+    body
+}
+
+/// Shared-prefix generate workload: `sessions` request bodies drawn
+/// round-robin from `prefixes` (K distinct shared prompt prefixes),
+/// each with its own `tail_len`-token random tail — the multi-session
+/// serving shape the paged KV pool's prefix trie is built for. Greedy
+/// sampling so replayed workloads are bit-deterministic.
+pub fn shared_prefix_bodies(
+    prefixes: &[Vec<i32>],
+    sessions: usize,
+    tail_len: usize,
+    max_new: usize,
+    vocab: usize,
+    seed: u64,
+) -> Vec<String> {
+    assert!(!prefixes.is_empty(), "need at least one shared prefix");
+    assert!(tail_len >= 1, "every session needs a non-empty tail");
+    let mut rng = Xoshiro256pp::new(seed);
+    (0..sessions)
+        .map(|i| {
+            let prefix = &prefixes[i % prefixes.len()];
+            let tail: Vec<i32> =
+                (0..tail_len).map(|_| rng.below(vocab as u64) as i32).collect();
+            generate_body_with_prefix(prefix, &tail, max_new, None)
+        })
+        .collect()
+}
+
+/// Aggregate results of one HTTP generate load run.
+#[derive(Debug, Default)]
+pub struct GenLoadReport {
+    pub sessions: usize,
+    pub ok: usize,
+    /// 4xx/5xx refusals plus transport failures.
+    pub errors: usize,
+    /// Tokens streamed across all completed sessions.
+    pub tokens: usize,
+    pub wall: Duration,
+    /// Time to first token of each OK session, seconds (sorted).
+    pub ttft: Vec<f64>,
+}
+
+impl GenLoadReport {
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.wall.is_zero() {
+            0.0
+        } else {
+            self.tokens as f64 / self.wall.as_secs_f64()
+        }
+    }
+
+    pub fn ttft_p50_ms(&self) -> f64 {
+        if self.ttft.is_empty() {
+            0.0
+        } else {
+            stats::percentile(&self.ttft, 0.50) * 1e3
+        }
+    }
+}
+
+/// Closed-loop generate load: `connections` keep-alive connections,
+/// each opening back-to-back generate streams over `bodies` (claimed
+/// in order, each exactly once) and draining every stream to the done
+/// chunk. Pair with [`shared_prefix_bodies`] for the prefix-sharing
+/// workload.
+pub fn closed_loop_generate(
+    addr: &str,
+    connections: usize,
+    bodies: &[String],
+) -> Result<GenLoadReport> {
+    assert!(!bodies.is_empty());
+    let connections = connections.max(1);
+    let issued = Arc::new(AtomicUsize::new(0));
+    let start = Instant::now();
+    let workers: Vec<_> = (0..connections)
+        .map(|_| {
+            let issued = Arc::clone(&issued);
+            let addr = addr.to_string();
+            let bodies = bodies.to_vec();
+            std::thread::spawn(move || -> Result<GenLoadReport> {
+                let mut client =
+                    HttpClient::connect_retry(&addr, 20, Duration::from_millis(50))?;
+                let mut report = GenLoadReport::default();
+                loop {
+                    let i = issued.fetch_add(1, Ordering::Relaxed);
+                    if i >= bodies.len() {
+                        break;
+                    }
+                    report.sessions += 1;
+                    let outcome = client
+                        .generate_stream(&bodies[i])
+                        .and_then(|stream| stream.collect());
+                    match outcome {
+                        Ok(res) => {
+                            report.ok += 1;
+                            report.tokens += res.tokens.len();
+                            if let Some(t) = res.ttft {
+                                report.ttft.push(t.as_secs_f64());
+                            }
+                        }
+                        Err(_) => {
+                            report.errors += 1;
+                            // reconnect once; give up on repeat failure
+                            client = HttpClient::connect_retry(
+                                &addr,
+                                5,
+                                Duration::from_millis(50),
+                            )?;
+                        }
+                    }
+                }
+                Ok(report)
+            })
+        })
+        .collect();
+    let mut merged = GenLoadReport::default();
+    for w in workers {
+        let r = w.join().expect("generate loadgen worker panicked")?;
+        merged.sessions += r.sessions;
+        merged.ok += r.ok;
+        merged.errors += r.errors;
+        merged.tokens += r.tokens;
+        merged.ttft.extend(r.ttft);
+    }
+    merged.wall = start.elapsed();
+    merged.ttft.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Ok(merged)
+}
+
 /// A herd of open-but-idle keep-alive connections — the C10K
 /// connection-sweep bench and the CI idle-churn probe hold one of
 /// these while foreground requests run, asserting the event loop's
@@ -611,4 +760,35 @@ pub fn poisson_classify(
     }
     merged.finish(start.elapsed());
     Ok(merged)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shared_prefix_bodies_round_robin_prefixes_with_distinct_tails() {
+        let prefixes = vec![vec![1, 2, 3], vec![4, 5, 6]];
+        let bodies = shared_prefix_bodies(&prefixes, 5, 4, 8, 64, 7);
+        assert_eq!(bodies.len(), 5);
+        for (i, body) in bodies.iter().enumerate() {
+            let want = if i % 2 == 0 { "\"prefix\":[1,2,3]" } else { "\"prefix\":[4,5,6]" };
+            assert!(body.contains(want), "session {i} wrong prefix: {body}");
+            assert!(body.contains("\"max_new\":8"), "{body}");
+        }
+        // sessions sharing a prefix still diverge in their tails (the
+        // CoW-exercising shape), and replays are deterministic
+        assert_ne!(bodies[0], bodies[2]);
+        assert_eq!(bodies, shared_prefix_bodies(&prefixes, 5, 4, 8, 64, 7));
+    }
+
+    #[test]
+    fn generate_body_with_prefix_is_valid_json_with_both_arrays() {
+        let body = generate_body_with_prefix(&[1, 2], &[3], 4, Some((2, 0.5, 9)));
+        let doc = Json::parse(&body).unwrap();
+        assert_eq!(json::to_i32_vec(doc.get("prefix").unwrap()).unwrap(), vec![1, 2]);
+        assert_eq!(json::to_i32_vec(doc.get("prompt").unwrap()).unwrap(), vec![3]);
+        assert_eq!(doc.get("max_new").unwrap().as_usize(), Some(4));
+        assert_eq!(doc.get("top_k").unwrap().as_usize(), Some(2));
+    }
 }

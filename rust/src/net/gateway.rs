@@ -63,8 +63,8 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::{
-    BatchPolicy, Completion, GenerateOutcome, MetricRow, Mode, ServeOutcome, Server, Submission,
-    SubmitError, Tier, TierConfig, TierHandle,
+    paged_rows, BatchPolicy, Completion, GenerateOutcome, MetricRow, Mode, ServeOutcome, Server,
+    Submission, SubmitError, Tier, TierConfig, TierHandle,
 };
 use crate::decode::{DecodeConfig, Sampling};
 use crate::net::conn::{Conn, ConnState};
@@ -122,6 +122,9 @@ pub struct GatewayConfig {
     pub decode: DecodeConfig,
     /// Decode steps per dispatched slice (continuous batching grain).
     pub steps_per_slice: usize,
+    /// Steps per dispatched slice while a session is still prefilling
+    /// its prompt (chunked prefill); 0 falls back to `steps_per_slice`.
+    pub prefill_chunk: usize,
     /// Live generate sessions admitted before 429.
     pub max_sessions: usize,
     /// Request-body cap (413 beyond it).
@@ -146,6 +149,7 @@ impl Default for GatewayConfig {
             policy: BatchPolicy::default(),
             decode: DecodeConfig::default(),
             steps_per_slice: 4,
+            prefill_chunk: 0,
             max_sessions: 16,
             max_body: http::DEFAULT_MAX_BODY,
             request_timeout: Duration::from_secs(30),
@@ -205,6 +209,11 @@ impl GatewayConfigBuilder {
 
     pub fn steps_per_slice(mut self, n: usize) -> Self {
         self.cfg.steps_per_slice = n;
+        self
+    }
+
+    pub fn prefill_chunk(mut self, n: usize) -> Self {
+        self.cfg.prefill_chunk = n;
         self
     }
 
@@ -440,6 +449,7 @@ impl Gateway {
                 replicas: cfg.replicas,
                 steps_per_slice: cfg.steps_per_slice,
                 max_sessions: cfg.max_sessions,
+                prefill_chunk: cfg.prefill_chunk,
             },
         )?;
         let handle = tier.handle();
@@ -822,14 +832,19 @@ impl EventLoop {
     /// head goes on the wire and the connection parks
     /// (`Pending::Generate`), chunks appending as the tier produces.
     fn dispatch_generate(&mut self, token: u64, req: &Request, keep: bool) {
-        let (prompt, max_new, sampling) = match parse_generate_body(&self.inner, &req.body) {
+        let (prompt, prefix, max_new, sampling) = match parse_generate_body(&self.inner, &req.body)
+        {
             Ok(parsed) => parsed,
             Err(msg) => return self.respond_error(token, 400, &msg, keep),
         };
         if self.inner.state() != RUNNING {
             return self.respond_error(token, 503, "gateway is draining", keep);
         }
-        match self.inner.tier.submit(vec![Submission::Generate { prompt, max_new, sampling }]) {
+        match self
+            .inner
+            .tier
+            .submit(vec![Submission::Generate { prompt, prefix, max_new, sampling }])
+        {
             Ok(ids) => {
                 let id = ids[0];
                 self.inner.stats.streams_total.fetch_add(1, Ordering::Relaxed);
@@ -1270,6 +1285,11 @@ fn metrics_body(inner: &Inner) -> String {
         out.push_str(&row.to_string());
         out.push('\n');
     }
+    for row in paged_rows(&inner.server.paged_stats()) {
+        out.push_str("esact_");
+        out.push_str(&row.to_string());
+        out.push('\n');
+    }
     for (i, shard) in inner.server.plan_cache_shard_stats().iter().enumerate() {
         let rows = [
             MetricRow::labeled("plan_cache_shard_entries", "shard", i, shard.entries as f64),
@@ -1322,10 +1342,13 @@ fn parse_classify_body(inner: &Inner, body: &[u8]) -> Result<Vec<Vec<i32>>, Stri
         .collect()
 }
 
-type GenerateParams = (Vec<i32>, usize, Sampling);
+type GenerateParams = (Vec<i32>, Option<Vec<i32>>, usize, Sampling);
 
 /// Validate `/v1/generate` bodies:
-/// `{"prompt": [...], "max_new": n, "top_k": k?, "temperature": t?, "seed": s?}`.
+/// `{"prompt": [...], "prefix": [...]?, "max_new": n, "top_k": k?,
+/// "temperature": t?, "seed": s?}`. With `"prefix"`, the prompt is the
+/// tail after the shared prefix and the session decodes through the
+/// server's paged KV pool (prefix-trie sharing).
 fn parse_generate_body(inner: &Inner, body: &[u8]) -> Result<GenerateParams, String> {
     let text =
         std::str::from_utf8(body).map_err(|_| "body is not valid UTF-8".to_string())?;
@@ -1342,6 +1365,20 @@ fn parse_generate_body(inner: &Inner, body: &[u8]) -> Result<GenerateParams, Str
     if let Some(bad) = prompt.iter().find(|&&t| t < 0 || t >= vocab) {
         return Err(format!("token id {bad} outside vocab 0..{vocab}"));
     }
+    let prefix = match doc.get("prefix") {
+        None => None,
+        Some(v) => {
+            let p = json::to_i32_vec(v).ok_or("\"prefix\" must be an array of integers")?;
+            if p.len() + prompt.len() > MAX_NEW_CAP {
+                return Err(format!("prefix + prompt longer than {MAX_NEW_CAP}"));
+            }
+            if let Some(bad) = p.iter().find(|&&t| t < 0 || t >= vocab) {
+                return Err(format!("token id {bad} outside vocab 0..{vocab}"));
+            }
+            // an empty prefix array is a no-op, same as omitting it
+            (!p.is_empty()).then_some(p)
+        }
+    };
     let max_new = match doc.get("max_new") {
         None => 16,
         Some(v) => v.as_usize().ok_or("\"max_new\" must be a non-negative integer")?,
@@ -1364,14 +1401,16 @@ fn parse_generate_body(inner: &Inner, body: &[u8]) -> Result<GenerateParams, Str
             Sampling::TopK { k, temperature, seed }
         }
     };
-    Ok((prompt, max_new, sampling))
+    Ok((prompt, prefix, max_new, sampling))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::SplsConfig;
-    use crate::net::client::{classify_body, HttpClient};
+    use crate::net::client::{
+        classify_body, generate_body, generate_body_with_prefix, metric_value, HttpClient,
+    };
     use crate::util::rng::Xoshiro256pp;
     use std::io::{Read, Write};
     use std::path::Path;
@@ -1741,6 +1780,87 @@ mod tests {
         // the gateway is healthy throughout
         assert_eq!(c.get("/healthz").unwrap().status, 200);
         drop(lorises);
+        gw.shutdown().unwrap();
+    }
+
+    #[test]
+    fn metrics_export_step_cache_and_paged_pool_rows() {
+        // satellite invariant: every decode-step plan-cache counter and
+        // every paged-pool counter is scrapeable end-to-end, not just
+        // present in internal structs
+        let (gw, addr) = start_gateway(default_cfg());
+        let mut c = HttpClient::connect(&addr).unwrap();
+        let text = String::from_utf8(c.get("/metrics").unwrap().body).unwrap();
+        for needle in [
+            "esact_plan_cache_step_hits_total",
+            "esact_plan_cache_step_misses_total",
+            "esact_plan_cache_step_hit_rate",
+            "esact_plan_cache_step_entries",
+            "esact_plan_cache_step_evictions_total",
+            "esact_paged_blocks_in_use",
+            "esact_paged_blocks_peak",
+            "esact_paged_blocks_capacity",
+            "esact_paged_blocks_allocated_total",
+            "esact_paged_cow_copies_total",
+            "esact_paged_prefix_hits_total",
+            "esact_paged_prefix_misses_total",
+            "esact_paged_prefix_hit_rate",
+            "esact_paged_shared_tokens_total",
+        ] {
+            assert!(text.contains(needle), "metrics missing {needle}:\n{text}");
+        }
+        // the capacity gauge reflects the server's configured pool
+        let cap = metric_value(&mut c, "esact_paged_blocks_capacity").unwrap().unwrap();
+        assert_eq!(cap as usize, crate::coordinator::DEFAULT_POOL_BLOCKS);
+        gw.shutdown().unwrap();
+    }
+
+    #[test]
+    fn generate_with_prefix_matches_concatenated_prompt_and_shares_blocks() {
+        let (gw, addr) = start_gateway(default_cfg());
+        let mut c = HttpClient::connect(&addr).unwrap();
+        let prompt = &seqs(1, 64)[0][..16];
+        let (prefix, tail) = prompt.split_at(12);
+        let max_new = 8;
+        // reference: the whole prompt as one private session
+        let want = c
+            .generate_stream(&generate_body(prompt, max_new, None))
+            .unwrap()
+            .collect()
+            .unwrap()
+            .tokens;
+        assert_eq!(want.len(), max_new);
+        // the same prompt split as prefix + tail must stream the same
+        // tokens — the paged path is bit-identical, and the first
+        // session publishes the prefix to the pool's trie
+        let split = c
+            .generate_stream(&generate_body_with_prefix(prefix, tail, max_new, None))
+            .unwrap()
+            .collect()
+            .unwrap()
+            .tokens;
+        assert_eq!(split, want, "declared prefix must not change the stream");
+        // a replayed split session attaches to the published blocks
+        let replay = c
+            .generate_stream(&generate_body_with_prefix(prefix, tail, max_new, None))
+            .unwrap()
+            .collect()
+            .unwrap()
+            .tokens;
+        assert_eq!(replay, want);
+        let hits = metric_value(&mut c, "esact_paged_prefix_hits_total").unwrap().unwrap();
+        assert!(hits >= 1.0, "replayed prefix must hit the trie: {hits}");
+        let shared =
+            metric_value(&mut c, "esact_paged_shared_tokens_total").unwrap().unwrap();
+        assert!(shared >= prefix.len() as f64, "attach must skip prefix tokens: {shared}");
+        // malformed prefixes are refused before they can reach a session
+        for bad in [
+            "{\"prompt\":[1,2],\"prefix\":3}".to_string(),
+            "{\"prompt\":[1,2],\"prefix\":[9999]}".to_string(),
+        ] {
+            let r = c.post_json("/v1/generate", &bad).unwrap();
+            assert_eq!(r.status, 400, "{bad}");
+        }
         gw.shutdown().unwrap();
     }
 

@@ -29,7 +29,9 @@ pub mod http;
 pub mod json;
 pub mod poll;
 
-pub use client::{ErrorEnvelope, HttpClient, IdleConns, LoadReport, StreamResult};
+pub use client::{
+    ErrorEnvelope, GenLoadReport, HttpClient, IdleConns, LoadReport, StreamResult,
+};
 pub use gateway::{
     Gateway, GatewayConfig, GatewayConfigBuilder, GatewayReport, ShutdownHandle,
 };

@@ -1,0 +1,161 @@
+//! Pluggable keep-mask generators for the incremental decode predictor.
+//!
+//! The SPLS decode path reduces every per-step sparsity decision to one
+//! question: *given the predicted attention row over the cached slots,
+//! which slots does this step attend to?* [`MaskGen`] isolates exactly
+//! that question so alternative structured-sparsity schemes can ride
+//! the same predictor, KV cache and gated-attention executor:
+//!
+//! * [`SplsTopK`] — the paper's rule: row top-k by predicted value with
+//!   the diagonal always kept (`spls::causal::topk_row_keep_with_diagonal`,
+//!   the single selection rule shared with the prefill causal mask).
+//! * [`ThreeComponent`] — the Spark/DeepSeek-style statically structured
+//!   mask (PAPERS.md; SNIPPETS.md §3): a **local window** of the newest
+//!   slots, a few **global** sink slots at the start of the sequence,
+//!   and a **learned top-k** component over the remaining middle ranked
+//!   by predicted `|PAM|` magnitude — the same magnitude signal the
+//!   eviction scores accumulate.
+//!
+//! Every generator must keep the diagonal (the newest slot): the decode
+//! engine's recovery-by-replication semantics and the keep-mask
+//! non-empty assertion both rely on it. Masks produced by a non-default
+//! generator are **not** memoized in the shared step-plan cache (plans
+//! are keyed on the SPLS operating point only), and prefix sharing
+//! publishes/attaches only under the default generator — both guards
+//! live in `decode::step`.
+
+use crate::config::SplsConfig;
+
+/// A keep-mask generator: maps one predicted attention row (int32 PAM
+/// row over the `n` cached slots, slot `n-1` = the new token's own
+/// diagonal) to the slots the step attends to.
+pub trait MaskGen: Send + Sync {
+    /// Short stable name (reports, logs).
+    fn name(&self) -> &'static str;
+
+    /// Build the keep-mask. `row` is never empty; implementations must
+    /// keep at least the diagonal (last slot).
+    fn keep(&self, row: &[i32], spls: &SplsConfig) -> Vec<bool>;
+}
+
+/// The default SPLS rule: row top-k (ties toward the higher predicted
+/// value, then the lower slot), diagonal always kept.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SplsTopK;
+
+impl MaskGen for SplsTopK {
+    fn name(&self) -> &'static str {
+        "spls-topk"
+    }
+
+    fn keep(&self, row: &[i32], spls: &SplsConfig) -> Vec<bool> {
+        crate::spls::causal::topk_row_keep_with_diagonal(row, spls.top_k)
+    }
+}
+
+/// Spark/DeepSeek-style three-component structured mask: local window +
+/// global sinks + learned top-k over the middle. Deterministic: the
+/// learned component ranks by `|row|` magnitude, ties toward the lower
+/// slot (stable sort).
+#[derive(Clone, Copy, Debug)]
+pub struct ThreeComponent {
+    /// Newest slots always kept (≥ 1; the diagonal is inside it).
+    pub window: usize,
+    /// Fraction of the visible slots granted to the learned component
+    /// (on top of the window and globals), `ceil(top_k · n)`.
+    pub top_k: f32,
+    /// Oldest slots always kept (attention sinks).
+    pub global: usize,
+}
+
+impl Default for ThreeComponent {
+    fn default() -> Self {
+        Self { window: 8, top_k: 0.12, global: 1 }
+    }
+}
+
+impl MaskGen for ThreeComponent {
+    fn name(&self) -> &'static str {
+        "three-component"
+    }
+
+    fn keep(&self, row: &[i32], _spls: &SplsConfig) -> Vec<bool> {
+        let n = row.len();
+        assert!(n >= 1);
+        let mut keep = vec![false; n];
+        // 1. local window: the newest `window` slots (clamped ≥ 1 so
+        //    the diagonal is always kept)
+        let w = self.window.max(1).min(n);
+        for k in keep.iter_mut().skip(n - w) {
+            *k = true;
+        }
+        // 2. global sinks: the oldest `global` slots
+        for k in keep.iter_mut().take(self.global.min(n)) {
+            *k = true;
+        }
+        // 3. learned top-k over the uncovered middle, ranked by
+        //    predicted |PAM| magnitude (the eviction-score signal)
+        let extra = ((self.top_k * n as f32).ceil()) as usize;
+        if extra > 0 {
+            let mut mid: Vec<usize> = (0..n).filter(|&i| !keep[i]).collect();
+            mid.sort_by(|&a, &b| row[b].unsigned_abs().cmp(&row[a].unsigned_abs()));
+            for &i in mid.iter().take(extra) {
+                keep[i] = true;
+            }
+        }
+        keep
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kept(keep: &[bool]) -> Vec<usize> {
+        keep.iter().enumerate().filter(|&(_, &k)| k).map(|(i, _)| i).collect()
+    }
+
+    #[test]
+    fn spls_topk_matches_the_shared_selection_rule() {
+        let spls = SplsConfig { top_k: 0.4, ..SplsConfig::default() };
+        let row = [50, -3, 40, 7, 1];
+        assert_eq!(
+            SplsTopK.keep(&row, &spls),
+            crate::spls::causal::topk_row_keep_with_diagonal(&row, 0.4)
+        );
+    }
+
+    #[test]
+    fn three_component_keeps_window_globals_and_learned_slots() {
+        let g = ThreeComponent { window: 2, top_k: 0.2, global: 1 };
+        // n = 10: window = slots 8..10, global = slot 0, learned
+        // ceil(0.2·10) = 2 from the middle by |row|: slots 3 (|-90|)
+        // and 5 (80)
+        let row = [1, 2, 3, -90, 4, 80, 5, 6, 7, 8];
+        let keep = g.keep(&row, &SplsConfig::default());
+        assert_eq!(kept(&keep), vec![0, 3, 5, 8, 9]);
+    }
+
+    #[test]
+    fn three_component_ties_resolve_to_the_lower_slot() {
+        let g = ThreeComponent { window: 1, top_k: 0.2, global: 0 };
+        // n = 5 → 1 learned slot; middle slots 0..4 all equal → slot 0
+        let keep = g.keep(&[7, 7, 7, 7, 7], &SplsConfig::default());
+        assert_eq!(kept(&keep), vec![0, 4]);
+    }
+
+    #[test]
+    fn three_component_always_keeps_the_diagonal() {
+        let g = ThreeComponent { window: 0, top_k: 0.0, global: 0 };
+        let keep = g.keep(&[9, 9, 9], &SplsConfig::default());
+        assert!(keep[2], "window clamps to ≥ 1: the diagonal survives");
+        assert_eq!(kept(&keep), vec![2]);
+    }
+
+    #[test]
+    fn three_component_window_covering_everything_is_full_keep() {
+        let g = ThreeComponent { window: 64, top_k: 0.0, global: 0 };
+        let keep = g.keep(&[1, -2, 3, -4], &SplsConfig::default());
+        assert_eq!(keep, vec![true; 4]);
+    }
+}

@@ -10,9 +10,13 @@
 //! 5. [`mfi`] — Most-Frequent-Index token similarity for the FFN;
 //! 6. [`plan`] — the combined `SparsityPlan` + FLOP accounting;
 //! 7. [`plan_cache`] — the serving tier's LRU memo of per-layer plans
-//!    (hits bit-identical to fresh planning).
+//!    (hits bit-identical to fresh planning);
+//! 8. [`maskgen`] — pluggable decode keep-mask generators: the SPLS
+//!    top-k rule plus the Spark/DeepSeek-style three-component
+//!    (window + top-k + global) structured mask.
 
 pub mod causal;
+pub mod maskgen;
 pub mod mfi;
 pub mod plan;
 pub mod plan_cache;
@@ -25,6 +29,7 @@ pub use causal::{
     apply_causal_mask, causal_local_similarity, causal_row_similarity, causal_topk_mask,
     topk_row_keep_with_diagonal,
 };
+pub use maskgen::{MaskGen, SplsTopK, ThreeComponent};
 pub use mfi::{ffn_plan, FfnPlan, MfiVote};
 pub use plan::{
     plan_layer_causal,

@@ -132,6 +132,7 @@ fn serve_generate_matches_offline_decode_and_streams_chunks() {
         tx.send(GenRequest {
             id: i as u64,
             prompt: p.clone(),
+            prefix: None,
             max_new,
             sampling: Sampling::Greedy,
             arrived: Instant::now(),

@@ -59,6 +59,7 @@ fn inprocess_generate(
     tx.send(GenRequest {
         id: 0,
         prompt: prompt.to_vec(),
+        prefix: None,
         max_new,
         sampling,
         arrived: Instant::now(),

@@ -37,6 +37,18 @@ Dispatches on the current report's `schema`:
   half-open connection must be reaped on the idle timer (structural,
   machine-independent) while active traffic holds its throughput
   floor.
+* schema 6 — the paged-KV bench's BENCH_6.json: per-session-count
+  aggregate tokens/sec floors at a fixed pool size, the headline
+  aggregate-throughput-rises-with-sessions check (prefix sharing
+  amortizes prefill, so 8 and 32 sessions must not fall below the
+  smaller cell — fail below 0.9x the previous cell, warn below 1.0x),
+  a prefix-sharing hit-rate floor at the largest session count, and
+  three structural (machine-speed independent) checks: the first
+  divergent append after an attach must copy-on-write at least one
+  block, a shared-prefix run must peak at strictly fewer blocks than
+  the same wave with private per-session prefixes, and every cell's
+  peak must fit the declared pool. The report's pool size must equal
+  the baseline's — floors at different pool memory don't compare.
 
 All compare against the same committed bench_baseline.json; the cell
 groups each schema reads are declared in BASELINE_GROUPS and validated
@@ -66,6 +78,7 @@ BASELINE_GROUPS = {
     3: ("decode",),
     4: ("forward", "crossover"),
     5: ("gateway", "streaming", "conn_sweep", "slow_loris"),
+    6: ("paged",),
 }
 
 
@@ -477,6 +490,121 @@ def check_gateway(cur: dict, base: dict) -> list:
     return failures
 
 
+def check_paged(cur: dict, base: dict) -> list:
+    failures = []
+    if "paged" not in cur:
+        die("current report missing 'paged'")
+    paged = cur["paged"]
+    for key in ("pool_blocks", "block_size", "cells", "prefix_hit_rate", "cow", "sharing"):
+        if key not in paged:
+            die(f"paged group missing '{key}': {sorted(paged)}")
+    for row in paged["cells"]:
+        for field in ("sessions", "tokens_per_sec", "blocks_peak", "prefix_hit_rate"):
+            if field not in row:
+                die(f"paged cell missing '{field}': {row}")
+    for field in ("sessions", "cow_copies", "shared_tokens"):
+        if field not in paged["cow"]:
+            die(f"paged cow missing '{field}': {paged['cow']}")
+    for field in ("sessions", "sharing_blocks_peak", "nosharing_blocks_peak"):
+        if field not in paged["sharing"]:
+            die(f"paged sharing missing '{field}': {paged['sharing']}")
+
+    bpaged = base["paged"]
+    for key in ("pool_blocks", "prefix_hit_rate_min", "cells"):
+        if key not in bpaged:
+            die(f"baseline 'paged' group lacks '{key}'")
+
+    # fixed-memory contract: floors only compare at the same pool size
+    if paged["pool_blocks"] != bpaged["pool_blocks"]:
+        failures.append(
+            f"pool size changed: report ran {paged['pool_blocks']} blocks, baseline "
+            f"floors assume {bpaged['pool_blocks']} — refresh the baseline"
+        )
+
+    current = {r["sessions"]: r for r in paged["cells"]}
+    print(f"{'cell':<16} {'baseline':>10} {'current':>10} {'floor':>10}  verdict")
+    for b in bpaged["cells"]:
+        c = current.get(b["sessions"])
+        if c is None:
+            failures.append(f"paged cell at {b['sessions']} sessions missing from report")
+            continue
+        floor = TOLERANCE * b["tokens_per_sec"]
+        ok = c["tokens_per_sec"] >= floor
+        label = f"{b['sessions']} sessions"
+        print(
+            f"{label:<16} {b['tokens_per_sec']:>10.1f} "
+            f"{c['tokens_per_sec']:>10.1f} {floor:>10.1f}  {'ok' if ok else 'REGRESSED'}"
+        )
+        if not ok:
+            failures.append(
+                f"{b['sessions']} sessions: {c['tokens_per_sec']:.1f} tok/s < floor "
+                f"{floor:.1f} (baseline {b['tokens_per_sec']:.1f})"
+            )
+
+    # headline: aggregate throughput must rise with session count at
+    # fixed pool memory (prefix sharing amortizes the common prefill);
+    # noise-tolerated like the other scaling checks
+    ordered = sorted(paged["cells"], key=lambda r: r["sessions"])
+    if len(ordered) < 2:
+        failures.append("paged report has fewer than 2 cells — nothing to compare")
+    for prev, nxt in zip(ordered, ordered[1:]):
+        tp, tn = prev["tokens_per_sec"], nxt["tokens_per_sec"]
+        trend = "rises" if tn > tp else "FLAT/FALLS"
+        print(
+            f"aggregate scaling {prev['sessions']} -> {nxt['sessions']} sessions: "
+            f"{tp:.1f} -> {tn:.1f} tok/s ({trend})"
+        )
+        if tn < 0.9 * tp:
+            failures.append(
+                f"aggregate throughput inversion: {nxt['sessions']} sessions "
+                f"{tn:.1f} tok/s < {prev['sessions']} sessions {tp:.1f}"
+            )
+        elif tn <= tp:
+            print(f"  ! warning: {tn:.1f} <= {tp:.1f} (within noise tolerance)")
+
+    # every cell must fit the declared pool (the hard memory cap held)
+    for row in paged["cells"]:
+        if row["blocks_peak"] > paged["pool_blocks"]:
+            failures.append(
+                f"{row['sessions']} sessions peaked at {row['blocks_peak']} blocks "
+                f"> pool {paged['pool_blocks']} — the cap did not hold"
+            )
+
+    # structural: sharing must be visible in the pool counters
+    hr = paged["prefix_hit_rate"]
+    hr_min = bpaged["prefix_hit_rate_min"]
+    print(f"prefix-sharing hit rate: {hr:.3f} (floor {hr_min:.3f})")
+    if hr < hr_min:
+        failures.append(
+            f"prefix-sharing hit rate {hr:.3f} below floor {hr_min:.3f} — "
+            "sessions replaying a published prefix are not attaching"
+        )
+    cow = paged["cow"]
+    print(
+        f"copy-on-write: {cow['cow_copies']} block copies across {cow['sessions']} "
+        f"sessions, {cow['shared_tokens']} prefix tokens served shared"
+    )
+    if cow["cow_copies"] <= 0:
+        failures.append(
+            "no copy-on-write block copies recorded — divergent appends are "
+            "either writing through shared blocks or never sharing a partial tail"
+        )
+    if cow["shared_tokens"] <= 0:
+        failures.append("no prefix tokens served shared — the trie never attached")
+    share = paged["sharing"]
+    print(
+        f"blocks peak @ {share['sessions']} sessions: sharing "
+        f"{share['sharing_blocks_peak']} vs private {share['nosharing_blocks_peak']}"
+    )
+    if share["sharing_blocks_peak"] >= share["nosharing_blocks_peak"]:
+        failures.append(
+            f"prefix sharing saved no memory: sharing peaked at "
+            f"{share['sharing_blocks_peak']} blocks vs {share['nosharing_blocks_peak']} "
+            "with private prefixes"
+        )
+    return failures
+
+
 def main() -> None:
     if len(sys.argv) != 3:
         die(f"usage: {sys.argv[0]} CURRENT.json BASELINE.json")
@@ -513,8 +641,10 @@ def main() -> None:
         failures = check_decode(cur, base)
     elif schema == 4:
         failures = check_forward(cur, base)
-    else:
+    elif schema == 5:
         failures = check_gateway(cur, base)
+    else:
+        failures = check_paged(cur, base)
 
     if failures:
         for f in failures:

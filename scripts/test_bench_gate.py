@@ -1,8 +1,9 @@
 #!/usr/bin/env python3
-"""Self-test for scripts/bench_gate.py's schema-5 checks.
+"""Self-test for scripts/bench_gate.py's schema-5 and schema-6 checks.
 
-Runs the gate as a subprocess against synthetic BENCH_5 reports and the
-committed bench_baseline.json, asserting the three verdict classes:
+Runs the gate as a subprocess against synthetic BENCH_5/BENCH_6 reports
+and the committed bench_baseline.json, asserting the three verdict
+classes:
 
 * pass  — a healthy report clears every check and exits 0;
 * warn  — a report inside the noise band (herd throughput dips but
@@ -10,7 +11,10 @@ committed bench_baseline.json, asserting the three verdict classes:
   cap) still exits 0 but prints the warning lines;
 * fail  — a collapsed conn-sweep floor, an idle-herd inversion, a
   blown per-connection memory cap, an unreaped loris, and a missing
-  group each exit 1 with the matching failure text.
+  group each exit 1 with the matching failure text; on the paged side,
+  an aggregate-throughput inversion, a collapsed prefix hit rate, a
+  sharing run that saves no blocks, a pool-size mismatch with the
+  baseline, and zero copy-on-write copies each exit 1 likewise.
 
 CI runs this before the real bench so a gate edit that silently stops
 gating (or starts failing healthy runs) is caught without needing a
@@ -75,6 +79,31 @@ def healthy_report() -> dict:
             ],
         },
         "slow_loris": {"lorises": 32, "reaped": 32, "throughput_rps": 40.0},
+    }
+
+
+def healthy_report6() -> dict:
+    """A BENCH_6 report comfortably above every committed paged floor."""
+    return {
+        "schema": 6,
+        "paged": {
+            "pool_blocks": 1024,
+            "block_size": 8,
+            "prefix_len": 48,
+            "cells": [
+                {"sessions": 1, "tokens_per_sec": 50.0, "blocks_peak": 72,
+                 "prefix_hit_rate": 0.0},
+                {"sessions": 8, "tokens_per_sec": 130.0, "blocks_peak": 240,
+                 "prefix_hit_rate": 0.875},
+                {"sessions": 32, "tokens_per_sec": 160.0, "blocks_peak": 816,
+                 "prefix_hit_rate": 0.969},
+            ],
+            "prefix_hit_rate": 0.969,
+            "cow": {"sessions": 8, "prefix_len": 50, "cow_copies": 64,
+                    "shared_tokens": 350},
+            "sharing": {"sessions": 8, "sharing_blocks_peak": 240,
+                        "nosharing_blocks_peak": 576},
+        },
     }
 
 
@@ -175,6 +204,78 @@ def main() -> None:
     code, out = run_gate(healthy_report(), stale)
     problems += expect(
         "stale baseline", code, out, 1, ["bench gate: FAIL", "baseline is missing"]
+    )
+
+    # --- schema 6 (paged KV) -----------------------------------------
+
+    # pass: a healthy paged report clears the gate
+    code, out = run_gate(healthy_report6(), baseline)
+    problems += expect("paged healthy", code, out, 0, ["bench gate: OK"])
+
+    # warn: a flat-but-not-inverted scaling step still exits 0
+    warn6 = healthy_report6()
+    warn6["paged"]["cells"][2]["tokens_per_sec"] = 125.0  # < 130 but > 0.9*130
+    code, out = run_gate(warn6, baseline)
+    problems += expect(
+        "paged scaling warn", code, out, 0,
+        ["bench gate: OK", "within noise tolerance"],
+    )
+
+    # fail: aggregate throughput inverts past the noise band
+    bad = healthy_report6()
+    bad["paged"]["cells"][2]["tokens_per_sec"] = 50.0  # < 0.9 * 130
+    code, out = run_gate(bad, baseline)
+    problems += expect(
+        "paged inversion", code, out, 1,
+        ["bench gate: FAIL", "aggregate throughput inversion"],
+    )
+
+    # fail: sessions stop attaching to the published prefix
+    bad = healthy_report6()
+    bad["paged"]["prefix_hit_rate"] = 0.4
+    code, out = run_gate(bad, baseline)
+    problems += expect(
+        "paged hit rate", code, out, 1, ["bench gate: FAIL", "hit rate"]
+    )
+
+    # fail: sharing saves no memory over private prefixes (structural)
+    bad = healthy_report6()
+    bad["paged"]["sharing"]["sharing_blocks_peak"] = 600
+    code, out = run_gate(bad, baseline)
+    problems += expect(
+        "paged no saving", code, out, 1, ["bench gate: FAIL", "saved no memory"]
+    )
+
+    # fail: divergence never copied a shared block (structural)
+    bad = healthy_report6()
+    bad["paged"]["cow"]["cow_copies"] = 0
+    code, out = run_gate(bad, baseline)
+    problems += expect(
+        "paged no cow", code, out, 1, ["bench gate: FAIL", "copy-on-write"]
+    )
+
+    # fail: the report ran at a different pool size than the baseline
+    bad = healthy_report6()
+    bad["paged"]["pool_blocks"] = 2048
+    code, out = run_gate(bad, baseline)
+    problems += expect(
+        "paged pool mismatch", code, out, 1, ["bench gate: FAIL", "pool size changed"]
+    )
+
+    # fail: a cell burst the declared pool cap
+    bad = healthy_report6()
+    bad["paged"]["cells"][2]["blocks_peak"] = 1500
+    code, out = run_gate(bad, baseline)
+    problems += expect(
+        "paged cap burst", code, out, 1, ["bench gate: FAIL", "cap did not hold"]
+    )
+
+    # fail: a baseline that lost the paged group dies up front
+    stale = copy.deepcopy(baseline)
+    del stale["paged"]
+    code, out = run_gate(healthy_report6(), stale)
+    problems += expect(
+        "paged stale baseline", code, out, 1, ["bench gate: FAIL", "baseline is missing"]
     )
 
     if problems:
