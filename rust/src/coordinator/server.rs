@@ -15,7 +15,7 @@
 //! Single-process deployment with std threads + channels (no tokio in
 //! the vendored crate set — see DESIGN.md §Environment).
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::fmt;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -44,8 +44,11 @@ use crate::util::stats::{self, LatencyWindow};
 pub const PAGED_BLOCK_SIZE: usize = 8;
 
 /// Default hard capacity of the server's paged KV pool, in blocks.
-/// The pool never allocates past it — exceeding it is a programming
-/// error (admission must bound live sessions), not an OOM.
+/// The pool never allocates past it: admission reserves each paged
+/// session's worst-case demand up front ([`Server::paged_session_demand`])
+/// and refuses sessions that don't fit, and if a live session still
+/// hits the cap the allocator sheds cold prefix snapshots and, failing
+/// that, aborts only that session (`PoolExhausted`) — never the tier.
 pub const DEFAULT_POOL_BLOCKS: usize = 8192;
 
 /// Serving statistics.
@@ -174,6 +177,9 @@ pub fn paged_rows(s: &PoolStats) -> Vec<MetricRow> {
         MetricRow::of("paged_prefix_misses_total", s.prefix_misses as f64),
         MetricRow::of("paged_prefix_hit_rate", s.hit_rate()),
         MetricRow::of("paged_shared_tokens_total", s.shared_attach_tokens as f64),
+        MetricRow::of("paged_blocks_reserved", s.reserved as f64),
+        MetricRow::of("paged_trie_entries", s.trie_entries as f64),
+        MetricRow::of("paged_trie_evictions_total", s.trie_evictions as f64),
     ]
 }
 
@@ -204,6 +210,8 @@ impl GenerateMetrics {
             MetricRow::of("generate_sessions_total", self.sessions as f64),
             MetricRow::of("generate_tokens_total", self.tokens as f64),
             MetricRow::of("generate_slices_total", self.slices as f64),
+            MetricRow::of("generate_rejected_total", self.rejected as f64),
+            MetricRow::of("generate_aborted_total", self.aborted as f64),
             MetricRow::of("generate_steals_total", self.steals as f64),
             MetricRow::of("generate_replicas", self.replicas as f64),
             MetricRow::of("generate_session_p50_seconds", self.p50_session.as_secs_f64()),
@@ -297,6 +305,15 @@ pub struct GenerateMetrics {
     pub tokens: usize,
     /// Decode slices dispatched (continuous-batching granularity).
     pub slices: usize,
+    /// Paged sessions refused at admission because their worst-case
+    /// block demand did not fit the pool's reservation ledger (the
+    /// client saw an immediate empty `done` chunk; the gateway's
+    /// preflight answers 429 before it gets this far).
+    pub rejected: usize,
+    /// Sessions aborted mid-decode by a recoverable per-session fault
+    /// (paged pool exhaustion); each ended with an empty `done` chunk
+    /// while the tier kept serving.
+    pub aborted: usize,
     /// Slices executed by a replica other than the dispatch target.
     pub steals: usize,
     pub wall: Duration,
@@ -597,6 +614,28 @@ impl Server {
         spls: SplsConfig,
         cache_capacity: usize,
     ) -> Result<Self> {
+        Self::build(artifact_dir, mode, spls, cache_capacity, DEFAULT_POOL_BLOCKS)
+    }
+
+    /// Like [`Server::new`] with an explicit paged-pool block capacity
+    /// (tests exercise exhaustion/rejection against a small pool; the
+    /// production default is [`DEFAULT_POOL_BLOCKS`]).
+    pub fn with_pool_blocks(
+        artifact_dir: &Path,
+        mode: Mode,
+        spls: SplsConfig,
+        pool_blocks: usize,
+    ) -> Result<Self> {
+        Self::build(artifact_dir, mode, spls, DEFAULT_CAPACITY, pool_blocks)
+    }
+
+    fn build(
+        artifact_dir: &Path,
+        mode: Mode,
+        spls: SplsConfig,
+        cache_capacity: usize,
+        pool_blocks: usize,
+    ) -> Result<Self> {
         let artifacts = ArtifactSet::load(artifact_dir)?;
         // one packing serves the whole coordinator: planner, decode
         // engine and (on the reference backend) every replica's executor
@@ -612,7 +651,7 @@ impl Server {
             (weights, packed)
         };
         let engine = Arc::new(DecodeEngine::from_packed(Arc::clone(&packed)));
-        let paged = PagedPool::new(PAGED_BLOCK_SIZE, DEFAULT_POOL_BLOCKS, weights.cfg.d_head());
+        let paged = PagedPool::new(PAGED_BLOCK_SIZE, pool_blocks, weights.cfg.d_head());
         Ok(Self {
             seq_len: weights.cfg.seq_len,
             core: Arc::new(ServerCore {
@@ -664,6 +703,16 @@ impl Server {
     /// Point-in-time counters of the paged KV pool (see [`paged_rows`]).
     pub fn paged_stats(&self) -> PoolStats {
         self.core.paged.stats()
+    }
+
+    /// Worst-case paged-pool block demand of one session whose prompt
+    /// plus generated tokens total `total_tokens`, over this model's
+    /// layer/head grid — the unit the generate leader reserves at
+    /// admission and the gateway preflights against
+    /// [`PagedPool::can_reserve`].
+    pub fn paged_session_demand(&self, total_tokens: usize) -> usize {
+        let cfg = &self.core.weights.cfg;
+        self.core.paged.session_demand(total_tokens, cfg.n_layers, cfg.n_heads)
     }
 
     /// Snapshot the live tier counters (see [`TierSnapshot`]). Live
@@ -908,6 +957,8 @@ impl Server {
             first_error: None,
             slice,
             prefill,
+            pool: self.core.paged.clone(),
+            reservations: HashMap::new(),
         };
         let mut open = true;
         // admission bound: cap live sessions (each owns KV/predictor
@@ -967,6 +1018,11 @@ impl Server {
         while let Ok(ev) = erx.try_recv() {
             st.absorb(ev, &replies, &queue, &self.core.live);
         }
+        // sessions cut short by an error path never completed: hand
+        // their reserved blocks back to the admission ledger
+        for (_, n) in st.reservations.drain() {
+            st.pool.release(n);
+        }
         if let Some(err) = st.first_error.take() {
             return Err(err);
         }
@@ -984,9 +1040,15 @@ impl Server {
     }
 
     /// Build a session for one generation request and dispatch its
-    /// first decode slice. A degenerate request (empty prompt) is
+    /// first decode slice. A degenerate request (empty prompt — which,
+    /// with a declared prefix, means an empty prompt *tail*) is
     /// rejected with an immediate empty `done` chunk instead of
-    /// panicking the leader (`GenSession::new` asserts on it).
+    /// panicking the leader (`GenSession::new`/`new_paged` assert on
+    /// it). Paged sessions additionally reserve their worst-case block
+    /// demand in the pool's admission ledger; a session the pool cannot
+    /// hold is rejected the same way (`generate_rejected_total`), so
+    /// one oversized request can never exhaust the shared pool mid-
+    /// decode and take other sessions down with it.
     fn admit_generate(
         &self,
         req: GenRequest,
@@ -1002,15 +1064,26 @@ impl Server {
         let mut session = match &req.prefix {
             // a declared prefix routes the session through the shared
             // paged pool: the prompt field is the tail after the prefix
-            Some(prefix) if !prefix.is_empty() => GenSession::new_paged(
-                Arc::clone(self.core.engine()),
-                decode,
-                &self.core.paged,
-                prefix,
-                req.prompt,
-                req.max_new,
-                req.sampling,
-            ),
+            Some(prefix) if !prefix.is_empty() => {
+                let total = prefix.len() + req.prompt.len() + req.max_new;
+                let need = self.paged_session_demand(total);
+                if !self.core.paged.try_reserve(need) {
+                    st.metrics.rejected += 1;
+                    self.core.live.lock().unwrap().generate.rejected += 1;
+                    let _ = replies.send(GenChunk { id: req.id, tokens: Vec::new(), done: true });
+                    return;
+                }
+                st.reservations.insert(req.id, need);
+                GenSession::new_paged(
+                    Arc::clone(self.core.engine()),
+                    decode,
+                    &self.core.paged,
+                    prefix,
+                    req.prompt,
+                    req.max_new,
+                    req.sampling,
+                )
+            }
             _ => GenSession::new(
                 Arc::clone(self.core.engine()),
                 decode,
@@ -1063,7 +1136,7 @@ impl LeaderState {
             }
             // the classify leader never dispatches decode jobs; absorb
             // defensively so a stray event cannot wedge the loop
-            ReplicaEvent::DecodeDone { .. } => {}
+            ReplicaEvent::DecodeDone { .. } | ReplicaEvent::DecodeAborted { .. } => {}
             ReplicaEvent::Failed { error, .. } => {
                 if self.first_error.is_none() {
                     self.first_error = Some(error);
@@ -1083,6 +1156,11 @@ struct GenLeader {
     /// Steps per dispatch while a session is still prefilling its
     /// prompt (chunked prefill); equals `slice` when not configured.
     prefill: usize,
+    /// Shared paged pool handle, for releasing admission reservations.
+    pool: PagedPool,
+    /// Outstanding admission reservations: blocks reserved per request
+    /// id, released when the session finishes or aborts.
+    reservations: HashMap<u64, usize>,
 }
 
 impl GenLeader {
@@ -1127,11 +1205,32 @@ impl GenLeader {
                 let _ = out.send(GenChunk { id: task.id, tokens: fresh, done });
                 if done {
                     self.session_latencies.push(task.arrived.elapsed().as_secs_f64());
+                    if let Some(n) = self.reservations.remove(&task.id) {
+                        self.pool.release(n);
+                    }
                 } else {
                     self.in_flight += 1;
                     let steps = self.steps_for(&task.session);
                     queue.push_least_loaded(Job::Decode { task, steps });
                 }
+            }
+            // a recoverable per-session fault (paged pool exhausted mid-
+            // slice): the session is gone but the replica and the tier
+            // keep serving — close the stream, hand the reservation
+            // back, and count the abort
+            ReplicaEvent::DecodeAborted { replica, id, stolen, busy, reason: _ } => {
+                self.metrics.aborted += 1;
+                if let Some(n) = self.reservations.remove(&id) {
+                    self.pool.release(n);
+                }
+                {
+                    let mut live = live.lock().unwrap();
+                    live.generate.aborted += 1;
+                    let r = live.replica_mut(replica);
+                    r.steals += usize::from(stolen);
+                    r.busy += busy;
+                }
+                let _ = out.send(GenChunk { id, tokens: Vec::new(), done: true });
             }
             ReplicaEvent::Done { .. } => {} // generate never dispatches classify jobs
             ReplicaEvent::Failed { error, .. } => {
@@ -1955,6 +2054,209 @@ mod tests {
             warm.shared_attach_tokens >= 2 * prefix.len(),
             "attaching skips prefix tokens: {warm:?}"
         );
+    }
+
+    #[test]
+    fn serve_generate_rejects_empty_tail_with_prefix_without_panicking() {
+        use crate::decode::{DecodeConfig, Sampling};
+        let srv = Server::new(&artifacts_dir(), Mode::Dense, SplsConfig::default()).unwrap();
+        let prompt = gen_prompts(1, 12).remove(0);
+        let (tx, rx) = mpsc::channel();
+        let (ctx, crx) = mpsc::channel();
+        // a declared prefix with an empty tail would trip
+        // `GenSession::new_paged`'s non-empty-tail assert on the leader
+        // thread (outside any catch_unwind); admission must answer it
+        // with an empty done chunk like the plain empty-prompt case
+        tx.send(GenRequest {
+            id: 0,
+            prompt: Vec::new(),
+            prefix: Some(prompt[..8].to_vec()),
+            max_new: 4,
+            sampling: Sampling::Greedy,
+            arrived: Instant::now(),
+        })
+        .unwrap();
+        tx.send(GenRequest {
+            id: 1,
+            prompt: prompt.clone(),
+            prefix: None,
+            max_new: 4,
+            sampling: Sampling::Greedy,
+            arrived: Instant::now(),
+        })
+        .unwrap();
+        drop(tx);
+        let drain = std::thread::spawn(move || {
+            let mut per_id: std::collections::HashMap<u64, (usize, bool)> = Default::default();
+            for c in crx.iter() {
+                let e = per_id.entry(c.id).or_default();
+                e.0 += c.tokens.len();
+                e.1 |= c.done;
+            }
+            per_id
+        });
+        let outcome = srv.serve_generate(rx, ctx, DecodeConfig::default(), 1, 4).unwrap();
+        let per_id = drain.join().unwrap();
+        assert_eq!(per_id[&0], (0, true), "empty tail → immediate empty done chunk");
+        assert_eq!(per_id[&1], (4, true), "valid session unaffected");
+        assert_eq!(outcome.metrics.sessions, 1, "rejected request is not a session");
+    }
+
+    #[test]
+    fn paged_admission_rejects_sessions_the_pool_cannot_hold() {
+        use crate::decode::{DecodeConfig, Sampling};
+        // a 16-block pool on the 2-layer × 4-head tiny model: a
+        // session's worst-case demand is 8·(⌈total/8⌉+1) blocks, so
+        // only sessions totalling ≤ 8 tokens fit
+        let srv =
+            Server::with_pool_blocks(&artifacts_dir(), Mode::Dense, SplsConfig::default(), 16)
+                .unwrap();
+        assert!(srv.paged_session_demand(24) > 16, "oversized demand exceeds the pool");
+        assert!(srv.paged_session_demand(8) <= 16, "small demand fits the pool");
+        let prompt = gen_prompts(1, 16).remove(0);
+        let (tx, rx) = mpsc::channel();
+        let (ctx, crx) = mpsc::channel();
+        // id 0: 12-token prefix + 4 tail + 8 new = 24 total → refused
+        tx.send(GenRequest {
+            id: 0,
+            prompt: prompt[12..16].to_vec(),
+            prefix: Some(prompt[..12].to_vec()),
+            max_new: 8,
+            sampling: Sampling::Greedy,
+            arrived: Instant::now(),
+        })
+        .unwrap();
+        // id 1: 4-token prefix + 2 tail + 2 new = 8 total → admitted
+        tx.send(GenRequest {
+            id: 1,
+            prompt: prompt[4..6].to_vec(),
+            prefix: Some(prompt[..4].to_vec()),
+            max_new: 2,
+            sampling: Sampling::Greedy,
+            arrived: Instant::now(),
+        })
+        .unwrap();
+        drop(tx);
+        let drain = std::thread::spawn(move || {
+            let mut per_id: std::collections::HashMap<u64, (usize, bool)> = Default::default();
+            for c in crx.iter() {
+                let e = per_id.entry(c.id).or_default();
+                e.0 += c.tokens.len();
+                e.1 |= c.done;
+            }
+            per_id
+        });
+        let outcome = srv.serve_generate(rx, ctx, DecodeConfig::default(), 1, 4).unwrap();
+        let per_id = drain.join().unwrap();
+        assert_eq!(per_id[&0], (0, true), "oversized paged session is refused, not served");
+        assert_eq!(per_id[&1], (2, true), "a session the pool can hold is admitted");
+        assert_eq!(outcome.metrics.rejected, 1, "refusal is counted");
+        assert_eq!(outcome.metrics.sessions, 1, "refused request is not a session");
+        let stats = srv.paged_stats();
+        assert_eq!(stats.reserved, 0, "reservations return to the ledger: {stats:?}");
+    }
+
+    #[test]
+    fn pool_exhaustion_aborts_the_session_and_the_replica_survives() {
+        use crate::decode::{PagedPool, Sampling};
+        let srv = Server::new(&artifacts_dir(), Mode::Dense, SplsConfig::default()).unwrap();
+        let prompt = gen_prompts(1, 12).remove(0);
+        // a one-block private pool can't even hold the first prefill
+        // step across the model's 8 layer-head slots, so PoolExhausted
+        // unwinds inside run_steps on the replica thread
+        let tiny = PagedPool::new(PAGED_BLOCK_SIZE, 1, srv.core.weights.cfg.d_head());
+        let doomed = GenSession::new_paged(
+            Arc::clone(srv.core.engine()),
+            DecodeConfig::default(),
+            &tiny,
+            &prompt[..4],
+            prompt[4..8].to_vec(),
+            2,
+            Sampling::Greedy,
+        );
+        let healthy = GenSession::new(
+            Arc::clone(srv.core.engine()),
+            DecodeConfig::default(),
+            prompt.clone(),
+            3,
+            Sampling::Greedy,
+        );
+        let queue = Arc::new(WorkQueue::new(1));
+        let (etx, erx) = mpsc::channel();
+        let handles = replica::spawn_replicas(Arc::clone(&srv.core), Arc::clone(&queue), etx, 1);
+        let job = |id, session, steps| Job::Decode {
+            task: Box::new(GenTask { id, arrived: Instant::now(), session }),
+            steps,
+        };
+        queue.push_to(0, job(7, doomed, 4));
+        // large slice so the healthy session finishes in one dispatch
+        // (no leader is running to requeue it)
+        queue.push_to(0, job(8, healthy, 64));
+        queue.close();
+        let (mut aborted, mut served) = (false, false);
+        for ev in erx.iter() {
+            match ev {
+                ReplicaEvent::DecodeAborted { id, reason, .. } => {
+                    assert_eq!(id, 7);
+                    assert!(reason.contains("paged KV pool exhausted"), "{reason}");
+                    aborted = true;
+                }
+                ReplicaEvent::DecodeDone { task, .. } => {
+                    assert_eq!(task.id, 8);
+                    assert!(aborted, "the abort precedes the healthy session's slice");
+                    assert!(task.session.done());
+                    served = true;
+                }
+                ReplicaEvent::Failed { error, .. } => {
+                    panic!("exhaustion must abort the session, not the replica: {error}")
+                }
+                _ => {}
+            }
+        }
+        assert!(aborted && served);
+        for h in handles {
+            h.join().expect("replica thread survives the session abort");
+        }
+    }
+
+    #[test]
+    fn generate_leader_releases_reservations_on_abort() {
+        let srv = Server::new(&artifacts_dir(), Mode::Dense, SplsConfig::default()).unwrap();
+        let pool = srv.core.paged.clone();
+        let need = srv.paged_session_demand(16);
+        assert!(pool.try_reserve(need));
+        let mut st = GenLeader {
+            metrics: GenerateMetrics::default(),
+            session_latencies: Vec::new(),
+            in_flight: 1,
+            first_error: None,
+            slice: 4,
+            prefill: 4,
+            pool: pool.clone(),
+            reservations: std::iter::once((3u64, need)).collect(),
+        };
+        let (otx, orx) = mpsc::channel();
+        let queue = WorkQueue::new(1);
+        let live = Mutex::new(LiveTier::default());
+        st.absorb(
+            ReplicaEvent::DecodeAborted {
+                replica: 0,
+                id: 3,
+                stolen: false,
+                busy: Duration::from_millis(1),
+                reason: "paged KV pool exhausted".into(),
+            },
+            &otx,
+            &queue,
+            &live,
+        );
+        assert_eq!(st.metrics.aborted, 1);
+        assert!(st.first_error.is_none(), "an abort is not a tier error");
+        assert!(st.reservations.is_empty());
+        assert_eq!(pool.stats().reserved, 0, "the reservation returns to the ledger");
+        let chunk = orx.try_recv().unwrap();
+        assert_eq!((chunk.id, chunk.done, chunk.tokens.len()), (3, true, 0));
+        assert_eq!(live.lock().unwrap().generate.aborted, 1, "mirrored into the live tier");
     }
 
     #[test]

@@ -32,5 +32,5 @@ pub use incremental::{
     topk_keep_with_diagonal, HeadPredictor, HeadStepPlan, LayerStepPlan, StepPlan,
 };
 pub use kv_cache::{HeadKv, KvSlots};
-pub use paged::{PagedDecodeState, PagedHeadKv, PagedPool, PoolStats};
+pub use paged::{PagedDecodeState, PagedHeadKv, PagedPool, PoolExhausted, PoolStats};
 pub use step::{DecodeConfig, DecodeEngine, DecodeMode, DecodeState, DecodeStateOf, DecodeStats};

@@ -41,11 +41,22 @@
 //! `tests/integration_paged.rs`.
 //!
 //! Custom [`MaskGen`] sessions neither publish nor attach (snapshots
-//! encode the default SPLS rule), and sessions whose config differs
-//! from a published entry fall back to a plain miss. Trie snapshots pin
-//! their blocks for the pool's lifetime; a session whose shared prefix
-//! exceeds its KV budget simply stops evicting (refcount precedence),
-//! mirroring the contiguous `None`-break.
+//! encode the default SPLS rule; [`PagedDecodeState::with_mask_gen`]
+//! refuses a session that already declared a prefix). Trie entries are
+//! keyed on **(prefix tokens, [`DecodeConfig`])** — distinct configs
+//! publish and share the same prefix independently — and the trie
+//! itself is bounded: at most `max_trie_entries` snapshots live at
+//! once, evicted least-recently-used (publish and attach both refresh
+//! an entry). Allocation failure is **recoverable**: when the pool is
+//! at its hard cap it first sheds cold trie snapshots (LRU), and only
+//! if nothing frees does the push unwind with a typed [`PoolExhausted`]
+//! payload — the replica worker downcasts it and fails just the
+//! offending session, never the tier. Admission can keep sessions
+//! inside the cap up front via the reservation ledger
+//! ([`PagedPool::try_reserve`] / [`PagedPool::session_demand`]). A
+//! session whose shared prefix exceeds its KV budget simply stops
+//! evicting (refcount precedence), mirroring the contiguous
+//! `None`-break.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, MutexGuard};
@@ -77,11 +88,12 @@ struct SlotRef {
     row: usize,
 }
 
-/// Prefix-trie node keyed on token IDs.
+/// Prefix-trie node keyed on token IDs. A node holds one entry per
+/// published [`DecodeConfig`], so distinct configs share independently.
 #[derive(Default)]
 struct TrieNode {
     children: HashMap<i32, TrieNode>,
-    entry: Option<Box<PrefixEntry>>,
+    entries: Vec<PrefixEntry>,
 }
 
 /// Published snapshot of a completed prefix: everything a session needs
@@ -90,6 +102,8 @@ struct TrieNode {
 struct PrefixEntry {
     /// Sessions attach only under the exact same decode config.
     cfg: DecodeConfig,
+    /// LRU stamp (the pool's `lru_clock` at last publish/attach).
+    last_used: u64,
     layers: Vec<LayerSnapshot>,
 }
 
@@ -125,6 +139,48 @@ struct PoolInner {
     prefix_misses: usize,
     shared_attach_tokens: usize,
     trie: TrieNode,
+    /// Monotone LRU clock; bumped on every publish/attach.
+    lru_clock: u64,
+    /// Live trie entries, bounded by `max_trie_entries` (LRU-evicted).
+    trie_entries: usize,
+    max_trie_entries: usize,
+    trie_evictions: usize,
+    /// Admission reservation ledger, in blocks (see
+    /// [`PagedPool::try_reserve`]). Independent of `in_use`: a
+    /// reservation is an upper bound a session may still allocate.
+    reserved: usize,
+}
+
+/// Recursive min-`last_used` scan; `best` is `(stamp, path, index)`.
+/// Stamps are unique (every publish/attach bumps the clock), so the
+/// result is deterministic despite `HashMap` iteration order.
+fn find_lru(node: &TrieNode, path: &mut Vec<i32>, best: &mut Option<(u64, Vec<i32>, usize)>) {
+    for (i, e) in node.entries.iter().enumerate() {
+        if best.as_ref().map_or(true, |(b, _, _)| e.last_used < *b) {
+            *best = Some((e.last_used, path.clone(), i));
+        }
+    }
+    for (&t, child) in &node.children {
+        path.push(t);
+        find_lru(child, path, best);
+        path.pop();
+    }
+}
+
+/// Remove the entry at `path`/`idx`, pruning now-empty trie nodes on
+/// the way back up.
+fn remove_entry_at(node: &mut TrieNode, path: &[i32], idx: usize) -> PrefixEntry {
+    match path.split_first() {
+        None => node.entries.remove(idx),
+        Some((&t, rest)) => {
+            let child = node.children.get_mut(&t).expect("trie path exists");
+            let e = remove_entry_at(child, rest, idx);
+            if child.entries.is_empty() && child.children.is_empty() {
+                node.children.remove(&t);
+            }
+            e
+        }
+    }
 }
 
 impl PoolInner {
@@ -137,20 +193,28 @@ impl PoolInner {
     }
 
     /// Pop the free list (or grow, under the hard cap) and install a
-    /// zeroed block with no references yet.
-    fn alloc_block(&mut self) -> usize {
-        let b = match self.free.pop() {
-            Some(b) => b,
-            None => {
-                assert!(
-                    self.blocks.len() < self.max_blocks,
-                    "paged KV pool exhausted: {} blocks live (cap {}) — raise the pool cap \
-                     or end sessions",
-                    self.in_use,
-                    self.max_blocks
-                );
-                self.blocks.push(None);
-                self.blocks.len() - 1
+    /// zeroed block with no references yet. At the cap with nothing
+    /// free, cold trie snapshots are shed (LRU) until a block frees;
+    /// if none does, the allocation fails recoverably.
+    fn alloc_block(&mut self) -> Result<usize, PoolExhausted> {
+        let b = if let Some(b) = self.free.pop() {
+            b
+        } else if self.blocks.len() < self.max_blocks {
+            self.blocks.push(None);
+            self.blocks.len() - 1
+        } else {
+            loop {
+                if !self.evict_lru_entry() {
+                    return Err(PoolExhausted {
+                        in_use: self.in_use,
+                        max_blocks: self.max_blocks,
+                    });
+                }
+                // an evicted snapshot only frees blocks no live session
+                // still references — keep shedding until one does
+                if let Some(b) = self.free.pop() {
+                    break b;
+                }
             }
         };
         let n = self.block_size * self.dh;
@@ -158,13 +222,13 @@ impl PoolInner {
         self.in_use += 1;
         self.allocated_total += 1;
         self.peak = self.peak.max(self.in_use);
-        b
+        Ok(b)
     }
 
     /// Copy-on-write: clone block `b`'s payload (rows + fill) into a
     /// fresh block. References move separately via `add_refs`/`sub_refs`.
-    fn cow_block(&mut self, b: usize) -> usize {
-        let nb = self.alloc_block();
+    fn cow_block(&mut self, b: usize) -> Result<usize, PoolExhausted> {
+        let nb = self.alloc_block()?;
         let (k, v, fill) = {
             let src = self.block(b);
             (src.k.clone(), src.v.clone(), src.fill)
@@ -174,7 +238,7 @@ impl PoolInner {
         dst.v = v;
         dst.fill = fill;
         self.cow_copies += 1;
-        nb
+        Ok(nb)
     }
 
     fn add_refs(&mut self, b: usize, n: usize) {
@@ -218,22 +282,102 @@ impl PoolInner {
         &self.block(s.block).v[s.row * d..(s.row + 1) * d]
     }
 
-    fn lookup(&self, prefix: &[i32]) -> Option<&PrefixEntry> {
-        let mut node = &self.trie;
+    /// Find the entry published for `(prefix, cfg)`, refreshing its LRU
+    /// stamp, and return a clone for the attaching session.
+    fn touch_lookup(&mut self, prefix: &[i32], cfg: &DecodeConfig) -> Option<PrefixEntry> {
+        self.lru_clock += 1;
+        let stamp = self.lru_clock;
+        let mut node = &mut self.trie;
         for t in prefix {
-            node = node.children.get(t)?;
+            node = node.children.get_mut(t)?;
         }
-        node.entry.as_deref()
+        let e = node.entries.iter_mut().find(|e| e.cfg == *cfg)?;
+        e.last_used = stamp;
+        Some(e.clone())
     }
 
-    fn insert(&mut self, prefix: &[i32], entry: PrefixEntry) {
+    /// Whether `(prefix, cfg)` is already published (publish-race check;
+    /// does not refresh the LRU stamp).
+    fn has_entry(&self, prefix: &[i32], cfg: &DecodeConfig) -> bool {
+        let mut node = &self.trie;
+        for t in prefix {
+            match node.children.get(t) {
+                Some(n) => node = n,
+                None => return false,
+            }
+        }
+        node.entries.iter().any(|e| e.cfg == *cfg)
+    }
+
+    /// Publish an entry under `(prefix, entry.cfg)`, evicting LRU
+    /// entries first while the trie is at its cap.
+    fn insert_entry(&mut self, prefix: &[i32], mut entry: PrefixEntry) {
+        while self.trie_entries >= self.max_trie_entries {
+            if !self.evict_lru_entry() {
+                break; // unreachable with a cap ≥ 1, but never spin
+            }
+        }
+        self.lru_clock += 1;
+        entry.last_used = self.lru_clock;
         let mut node = &mut self.trie;
         for t in prefix {
             node = node.children.entry(*t).or_default();
         }
-        node.entry = Some(Box::new(entry));
+        node.entries.push(entry);
+        self.trie_entries += 1;
+    }
+
+    /// Evict the least-recently-used trie entry, dropping its block
+    /// references (blocks free once no live session shares them).
+    /// Returns `false` when the trie is empty.
+    fn evict_lru_entry(&mut self) -> bool {
+        let mut best: Option<(u64, Vec<i32>, usize)> = None;
+        let mut path = Vec::new();
+        find_lru(&self.trie, &mut path, &mut best);
+        let Some((_, path, idx)) = best else {
+            return false;
+        };
+        let entry = remove_entry_at(&mut self.trie, &path, idx);
+        self.trie_entries -= 1;
+        self.trie_evictions += 1;
+        for ls in &entry.layers {
+            for hs in &ls.heads {
+                for s in &hs.slots {
+                    self.sub_refs(s.block, 1);
+                }
+            }
+        }
+        true
     }
 }
+
+/// Recoverable allocation failure: the pool is at its hard `max_blocks`
+/// cap and no block could be freed (every live block is referenced by a
+/// live session; cold trie snapshots were already shed). `KvSlots::push`
+/// is infallible by signature, so the paged cache raises this as a
+/// typed panic payload (`std::panic::panic_any`); the replica worker
+/// downcasts it and aborts only the offending session — the tier, and
+/// every other session, keeps serving.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PoolExhausted {
+    /// Blocks live at the failed allocation.
+    pub in_use: usize,
+    /// The pool's hard cap.
+    pub max_blocks: usize,
+}
+
+impl std::fmt::Display for PoolExhausted {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "paged KV pool exhausted: {} blocks live (cap {}) — the session was aborted; \
+             raise the pool cap or lower concurrent paged sessions",
+            self.in_use, self.max_blocks
+        )
+    }
+}
+
+impl std::error::Error for PoolExhausted {}
 
 /// Pool-level counters, snapshot for `/metrics` and BENCH_6.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -256,6 +400,13 @@ pub struct PoolStats {
     pub prefix_misses: usize,
     /// Prefix tokens whose forward passes were skipped by attaching.
     pub shared_attach_tokens: usize,
+    /// Blocks reserved by admission (upper bounds; see
+    /// [`PagedPool::try_reserve`]).
+    pub reserved: usize,
+    /// Live prefix-trie entries (bounded by the trie cap).
+    pub trie_entries: usize,
+    /// Trie entries evicted (LRU cap + emergency shedding).
+    pub trie_evictions: usize,
 }
 
 impl PoolStats {
@@ -279,10 +430,25 @@ pub struct PagedPool {
 }
 
 impl PagedPool {
+    /// Default bound on live prefix-trie entries ([`Self::with_trie_cap`]).
+    pub const DEFAULT_TRIE_ENTRIES: usize = 64;
+
     /// `block_size` rows per block, at most `max_blocks` live blocks,
-    /// `dh` values per K (and V) row.
+    /// `dh` values per K (and V) row, default trie cap.
     pub fn new(block_size: usize, max_blocks: usize, dh: usize) -> Self {
-        assert!(block_size >= 1 && max_blocks >= 1 && dh >= 1);
+        Self::with_trie_cap(block_size, max_blocks, dh, Self::DEFAULT_TRIE_ENTRIES)
+    }
+
+    /// [`Self::new`] with an explicit bound on live prefix-trie entries:
+    /// publishing past it evicts the least-recently-used snapshot, so
+    /// arbitrary client-declared prefixes cannot pin the pool forever.
+    pub fn with_trie_cap(
+        block_size: usize,
+        max_blocks: usize,
+        dh: usize,
+        max_trie_entries: usize,
+    ) -> Self {
+        assert!(block_size >= 1 && max_blocks >= 1 && dh >= 1 && max_trie_entries >= 1);
         Self {
             inner: Arc::new(Mutex::new(PoolInner {
                 block_size,
@@ -298,6 +464,11 @@ impl PagedPool {
                 prefix_misses: 0,
                 shared_attach_tokens: 0,
                 trie: TrieNode::default(),
+                lru_clock: 0,
+                trie_entries: 0,
+                max_trie_entries,
+                trie_evictions: 0,
+                reserved: 0,
             })),
         }
     }
@@ -320,12 +491,69 @@ impl PagedPool {
             prefix_hits: g.prefix_hits,
             prefix_misses: g.prefix_misses,
             shared_attach_tokens: g.shared_attach_tokens,
+            reserved: g.reserved,
+            trie_entries: g.trie_entries,
+            trie_evictions: g.trie_evictions,
         }
     }
 
     /// Rows per block (the K/V granularity of sharing).
     pub fn block_size(&self) -> usize {
         self.lock().block_size
+    }
+
+    /// Worst-case block demand of one session that will hold
+    /// `total_tokens` K/V rows in each of its `n_layers × n_heads`
+    /// chains: `⌈tokens/block_size⌉` blocks per chain plus one for a
+    /// copy-on-write divergence off a shared partial tail. An upper
+    /// bound — attached sessions allocate less (the shared prefix's
+    /// blocks already exist) and evicting sessions cap out at their KV
+    /// budget.
+    pub fn session_demand(&self, total_tokens: usize, n_layers: usize, n_heads: usize) -> usize {
+        let bs = self.lock().block_size;
+        n_layers * n_heads * (total_tokens.div_ceil(bs) + 1)
+    }
+
+    /// Reserve `n` blocks in the admission ledger: succeeds iff every
+    /// admitted session's worst-case demand still fits the hard cap
+    /// (`reserved + n ≤ max_blocks`). Admission that reserves before
+    /// dispatch and [`Self::release`]s at session end keeps sessions'
+    /// own allocations inside the cap, so mid-decode exhaustion can
+    /// only come from out-of-ledger users sharing the pool.
+    pub fn try_reserve(&self, n: usize) -> bool {
+        let mut g = self.lock();
+        if g.reserved + n <= g.max_blocks {
+            g.reserved += n;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Non-binding preview of [`Self::try_reserve`] (frontend preflight:
+    /// shed with a 429 before submitting to the tier).
+    pub fn can_reserve(&self, n: usize) -> bool {
+        let g = self.lock();
+        g.reserved + n <= g.max_blocks
+    }
+
+    /// Return `n` reserved blocks to the ledger.
+    pub fn release(&self, n: usize) {
+        let mut g = self.lock();
+        g.reserved = g.reserved.saturating_sub(n);
+    }
+}
+
+/// Unwind with the typed [`PoolExhausted`] payload: the `KvSlots`
+/// trait's `push` is infallible by signature (making it fallible would
+/// thread `Result` through every decode layer for an event that only
+/// the paged backend can raise), so exhaustion propagates as a panic
+/// the replica worker downcasts and contains to the one session. The
+/// pool mutex is poison-tolerant, so the unwind cannot wedge peers.
+fn or_unwind(r: Result<usize, PoolExhausted>) -> usize {
+    match r {
+        Ok(b) => b,
+        Err(e) => std::panic::panic_any(e),
     }
 }
 
@@ -386,11 +614,14 @@ impl KvSlots for PagedHeadKv {
         assert_eq!(v_row.len(), self.dh);
         let mut pool = self.pool.lock();
         let bs = pool.block_size;
+        // exhaustion unwinds with the typed payload *before* any of
+        // this head's state mutates, so the session stays consistent
+        // and its Drop releases every block reference it holds
         let tb = match self.tail {
             Some(b) if self.tail_owned && pool.block(b).fill < bs => b,
             Some(b) if !self.tail_owned && pool.block(b).fill < bs => {
                 // copy-on-write: first divergent append after sharing
-                let nb = pool.cow_block(b);
+                let nb = or_unwind(pool.cow_block(b));
                 let mut moved = 0usize;
                 for s in self.slots.iter_mut().filter(|s| s.block == b) {
                     s.block = nb;
@@ -404,7 +635,7 @@ impl KvSlots for PagedHeadKv {
             }
             _ => {
                 // no tail, or the tail is full: open a fresh block
-                let nb = pool.alloc_block();
+                let nb = or_unwind(pool.alloc_block());
                 self.tail = Some(nb);
                 self.tail_owned = true;
                 nb
@@ -545,8 +776,18 @@ impl PagedDecodeState {
     }
 
     /// Swap in a custom keep-mask generator. Mask sessions opt out of
-    /// prefix sharing: snapshots encode the default SPLS rule.
+    /// prefix sharing: snapshots encode the default SPLS rule, so a
+    /// prefix attached (or declared for publishing) *before* the
+    /// generator would silently mix KV computed under one rule with
+    /// decoding under another. Builder order is enforced: set the mask
+    /// generator first, then (never) declare a prefix.
     pub fn with_mask_gen(mut self, gen: Arc<dyn MaskGen>) -> Self {
+        assert!(
+            self.prefix.is_none(),
+            "set the mask generator before declaring a prefix: a prefix declared first \
+             attaches (or publishes) KV computed under the default SPLS rule, which a \
+             custom mask generator would then silently contradict"
+        );
         self.inner = self.inner.with_mask_gen(gen);
         self
     }
@@ -561,10 +802,7 @@ impl PagedDecodeState {
         }
         let restored: Option<PrefixEntry> = {
             let mut pool = self.pool.lock();
-            let found = pool
-                .lookup(prefix)
-                .filter(|e| e.cfg == *self.inner.config())
-                .cloned();
+            let found = pool.touch_lookup(prefix, self.inner.config());
             match found {
                 Some(e) => {
                     for ls in &e.layers {
@@ -630,8 +868,9 @@ impl PagedDecodeState {
         let pfx = self.prefix.clone().expect("publish requires a declared prefix");
         {
             let mut pool = self.pool.lock();
-            if pool.lookup(&pfx).is_some() {
-                return; // a racing publisher won; its snapshot stands
+            let cfg = *self.inner.config();
+            if pool.has_entry(&pfx, &cfg) {
+                return; // a racing publisher won this config; its snapshot stands
             }
             let mut layers = Vec::with_capacity(self.inner.layers().len());
             for ls in self.inner.layers() {
@@ -651,7 +890,7 @@ impl PagedDecodeState {
                 }
                 layers.push(LayerSnapshot { heads, prev_ffn: ls.prev_ffn.clone() });
             }
-            pool.insert(&pfx, PrefixEntry { cfg: *self.inner.config(), layers });
+            pool.insert_entry(&pfx, PrefixEntry { cfg, last_used: 0, layers });
         }
         for ls in self.inner.layers_mut() {
             for hs in &mut ls.heads {
@@ -740,11 +979,122 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "paged KV pool exhausted")]
-    fn hard_cap_panics_on_exhaustion() {
+    fn hard_cap_unwinds_with_a_typed_exhaustion_payload() {
         let pool = PagedPool::new(2, 1, 2);
-        let mut kv = PagedHeadKv::new(pool, 2);
-        push_n(&mut kv, 3, 0); // third row needs a second block
+        let mut kv = PagedHeadKv::new(pool.clone(), 2);
+        let panic = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            push_n(&mut kv, 3, 0); // third row needs a second block
+        }))
+        .expect_err("allocation past the cap must unwind");
+        let e = panic
+            .downcast_ref::<PoolExhausted>()
+            .expect("payload must be the typed PoolExhausted");
+        assert_eq!((e.in_use, e.max_blocks), (1, 1));
+        assert!(e.to_string().contains("paged KV pool exhausted"));
+        // the failed push mutated nothing: the session still holds its
+        // 2 cached rows and dropping it returns the pool to empty
+        assert_eq!(kv.len(), 2);
+        drop(kv);
+        assert_eq!(pool.stats().in_use, 0, "unwound session released its blocks");
+    }
+
+    /// Build a one-head trie snapshot of `kv`'s chain (as `publish`
+    /// would) and install it under `prefix`.
+    fn snapshot_into_trie(pool: &PagedPool, kv: &PagedHeadKv, prefix: &[i32]) {
+        let mut g = pool.lock();
+        for s in &kv.slots {
+            g.add_refs(s.block, 1);
+        }
+        let entry = PrefixEntry {
+            cfg: DecodeConfig::default(),
+            last_used: 0,
+            layers: vec![LayerSnapshot {
+                heads: vec![HeadSnapshot {
+                    slots: kv.slots.clone(),
+                    positions: kv.positions.clone(),
+                    scores: kv.score.clone(),
+                    tail: kv.tail,
+                    pred: HeadPredictor::new(2),
+                    prev_out: None,
+                }],
+                prev_ffn: None,
+            }],
+        };
+        g.insert_entry(prefix, entry);
+    }
+
+    #[test]
+    fn exhaustion_sheds_cold_trie_snapshots_before_failing() {
+        // a snapshot whose publisher is gone pins 2 of the 3 blocks;
+        // a new session needing a 3rd block must evict it, not die
+        let pool = PagedPool::new(2, 3, 2);
+        let mut kv = PagedHeadKv::new(pool.clone(), 2);
+        push_n(&mut kv, 4, 0); // 2 full blocks
+        snapshot_into_trie(&pool, &kv, &[9, 9]);
+        drop(kv); // only the snapshot's refs remain
+        let s = pool.stats();
+        assert_eq!((s.in_use, s.trie_entries), (2, 1));
+        let mut fresh = PagedHeadKv::new(pool.clone(), 2);
+        push_n(&mut fresh, 6, 0); // needs all 3 blocks
+        let s = pool.stats();
+        assert_eq!(s.trie_evictions, 1, "the cold snapshot was shed");
+        assert_eq!(s.trie_entries, 0);
+        assert_eq!(s.in_use, 3);
+        assert_eq!(fresh.len(), 6);
+    }
+
+    #[test]
+    fn trie_cap_evicts_least_recently_used_entry() {
+        let pool = PagedPool::with_trie_cap(2, 16, 2, 2);
+        let mut kvs: Vec<PagedHeadKv> = Vec::new();
+        for i in 0..3 {
+            let mut kv = PagedHeadKv::new(pool.clone(), 2);
+            push_n(&mut kv, 2, i * 10);
+            kvs.push(kv);
+        }
+        snapshot_into_trie(&pool, &kvs[0], &[1]);
+        snapshot_into_trie(&pool, &kvs[1], &[2]);
+        // touching entry [1] makes [2] the LRU victim of the next insert
+        assert!(pool.lock().touch_lookup(&[1], &DecodeConfig::default()).is_some());
+        snapshot_into_trie(&pool, &kvs[2], &[3]);
+        let s = pool.stats();
+        assert_eq!((s.trie_entries, s.trie_evictions), (2, 1));
+        let mut g = pool.lock();
+        assert!(g.touch_lookup(&[2], &DecodeConfig::default()).is_none(), "LRU entry [2] gone");
+        assert!(g.touch_lookup(&[1], &DecodeConfig::default()).is_some());
+        assert!(g.touch_lookup(&[3], &DecodeConfig::default()).is_some());
+    }
+
+    #[test]
+    fn trie_entries_are_keyed_on_config_too() {
+        let pool = PagedPool::new(2, 16, 2);
+        let mut kv = PagedHeadKv::new(pool.clone(), 2);
+        push_n(&mut kv, 2, 0);
+        snapshot_into_trie(&pool, &kv, &[5]);
+        let other = DecodeConfig { kv_budget: 7, ..DecodeConfig::default() };
+        let mut g = pool.lock();
+        assert!(g.touch_lookup(&[5], &DecodeConfig::default()).is_some());
+        assert!(
+            g.touch_lookup(&[5], &other).is_none(),
+            "a different config must miss, not adopt the default-config snapshot"
+        );
+        assert!(!g.has_entry(&[5], &other), "and may publish its own entry");
+    }
+
+    #[test]
+    fn reservation_ledger_enforces_the_cap_and_releases() {
+        let pool = PagedPool::new(8, 10, 2);
+        assert_eq!(pool.session_demand(16, 2, 2), 2 * 2 * (2 + 1));
+        assert!(pool.can_reserve(10));
+        assert!(pool.try_reserve(6));
+        assert!(!pool.can_reserve(5), "6 + 5 > 10");
+        assert!(!pool.try_reserve(5));
+        assert!(pool.try_reserve(4));
+        assert_eq!(pool.stats().reserved, 10);
+        pool.release(6);
+        assert_eq!(pool.stats().reserved, 4);
+        pool.release(100); // over-release saturates, never underflows
+        assert_eq!(pool.stats().reserved, 0);
     }
 
     #[test]

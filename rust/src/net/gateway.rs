@@ -840,6 +840,18 @@ impl EventLoop {
         if self.inner.state() != RUNNING {
             return self.respond_error(token, 503, "gateway is draining", keep);
         }
+        // paged preflight: a prefix session whose worst-case block
+        // demand can't be reserved right now would only be refused by
+        // the generate leader after queueing — answer 429 up front so
+        // clients back off. Advisory only (the leader's reservation is
+        // the authoritative check); a race just means a late refusal.
+        if let Some(p) = &prefix {
+            let demand =
+                self.inner.server.paged_session_demand(p.len() + prompt.len() + max_new);
+            if !self.inner.server.paged_pool().can_reserve(demand) {
+                return self.respond_error(token, 429, "paged KV pool is full", keep);
+            }
+        }
         match self
             .inner
             .tier
@@ -1861,6 +1873,41 @@ mod tests {
             let r = c.post_json("/v1/generate", &bad).unwrap();
             assert_eq!(r.status, 400, "{bad}");
         }
+        gw.shutdown().unwrap();
+    }
+
+    #[test]
+    fn generate_preflight_refuses_sessions_the_paged_pool_cannot_hold() {
+        // a 16-block pool: worst-case demand is 8·(⌈total/8⌉+1) blocks
+        // on the 2-layer × 4-head tiny model, so only prefix sessions
+        // totalling ≤ 8 tokens fit
+        let srv = Arc::new(
+            Server::with_pool_blocks(&artifacts_dir(), Mode::Dense, SplsConfig::default(), 16)
+                .unwrap(),
+        );
+        let gw = Gateway::start(srv, default_cfg()).unwrap();
+        let addr = gw.local_addr().to_string();
+        let mut c = HttpClient::connect(&addr).unwrap();
+        let prompt = &seqs(1, 64)[0][..16];
+        // 12-token prefix + 4 tail + 8 new = 24 total → demand 32 > 16
+        let r = c
+            .post_json(
+                "/v1/generate",
+                &generate_body_with_prefix(&prompt[..12], &prompt[12..16], 8, None),
+            )
+            .unwrap();
+        let body = String::from_utf8_lossy(&r.body).to_string();
+        assert_eq!(r.status, 429, "{body}");
+        assert!(body.contains("\"saturated\""), "{body}");
+        assert!(body.contains("paged KV pool is full"), "{body}");
+        // 4-token prefix + 2 tail + 2 new = 8 total → demand 16, fits
+        let small = c
+            .generate_stream(&generate_body_with_prefix(&prompt[..4], &prompt[4..6], 2, None))
+            .unwrap()
+            .collect()
+            .unwrap()
+            .tokens;
+        assert_eq!(small.len(), 2, "a session the pool can hold still streams");
         gw.shutdown().unwrap();
     }
 

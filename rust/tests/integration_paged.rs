@@ -184,3 +184,80 @@ fn attached_session_replays_the_cold_stream_and_sharing_saves_blocks() {
          (shared peak {shared_peak} vs private peak {private_peak})"
     );
 }
+
+#[test]
+fn distinct_decode_configs_share_independently() {
+    // trie entries are keyed on (tokens, DecodeConfig): a prefix
+    // published under the dense rule must not serve an SPLS session
+    // (its KV was computed under a different masking rule), and each
+    // config publishes and replays its own snapshot bit-identically
+    let eng = engine();
+    let p = prompt(29, 20);
+    let (prefix, tail) = p.split_at(16);
+    let max_new = 8usize;
+    let dense = DecodeConfig::default();
+    let spls = DecodeConfig {
+        mode: DecodeMode::Spls,
+        kv_budget: 64, // larger than the run: masking differs, eviction never kicks in
+        recent: 4,
+        spls: SplsConfig::default(),
+    };
+    let reference = |cfg: DecodeConfig| {
+        let mut s = GenSession::new(Arc::clone(&eng), cfg, p.clone(), max_new, Sampling::Greedy);
+        while !s.done() {
+            s.run_steps(8);
+        }
+        s.generated().to_vec()
+    };
+    let dense_want = reference(dense);
+    let spls_want = reference(spls);
+
+    let pool = pool_for(&eng, 8, 1024);
+    let run = |cfg: DecodeConfig, expect_attach: bool| {
+        let mut s = GenSession::new_paged(
+            Arc::clone(&eng),
+            cfg,
+            &pool,
+            prefix,
+            tail.to_vec(),
+            max_new,
+            Sampling::Greedy,
+        );
+        assert_eq!(s.attached_prefix(), expect_attach);
+        while !s.done() {
+            s.run_steps(8);
+        }
+        s.generated().to_vec()
+    };
+    // dense publishes first; the spls session misses (config differs)
+    // and publishes its own entry for the same tokens
+    assert_eq!(run(dense, false), dense_want);
+    assert_eq!(run(spls, false), spls_want);
+    // replays attach to their own config's entry, bit-identically
+    assert_eq!(run(dense, true), dense_want);
+    assert_eq!(run(spls, true), spls_want);
+    let stats = pool.stats();
+    assert_eq!(stats.prefix_hits, 2, "one hit per config replay: {stats:?}");
+    assert_eq!(stats.trie_entries, 2, "each config owns its own entry: {stats:?}");
+}
+
+#[test]
+#[should_panic(expected = "set the mask generator before declaring a prefix")]
+fn mask_gen_after_prefix_is_refused() {
+    // `.with_prefix(p).with_mask_gen(g)` would attach (or declare for
+    // publishing) KV computed under the default SPLS rule and then
+    // decode with the custom mask — silently wrong logits. The builder
+    // refuses the ordering outright.
+    let eng = engine();
+    let pool = pool_for(&eng, 8, 64);
+    let cfg = DecodeConfig {
+        mode: DecodeMode::Spls,
+        kv_budget: 64,
+        recent: 4,
+        spls: SplsConfig::default(),
+    };
+    let pfx = prompt(31, 8);
+    let _ = PagedDecodeState::new(Arc::clone(&eng), cfg, &pool)
+        .with_prefix(&pfx)
+        .with_mask_gen(Arc::new(esact::spls::maskgen::ThreeComponent::default()));
+}
