@@ -2,7 +2,7 @@
 
 ARTIFACTS := rust/artifacts
 
-.PHONY: build test bench bench-serving bench-decode bench-forward bench-gateway bench-paged bench-gate serve-http check-features artifacts clean-artifacts
+.PHONY: build test bench bench-serving bench-decode bench-forward bench-gateway bench-paged bench-gate serve-http check-features chaos artifacts clean-artifacts
 
 build:
 	cargo build --release
@@ -48,6 +48,17 @@ bench-gate: bench-serving bench-decode bench-forward bench-gateway bench-paged
 # Drain it with: curl -X POST localhost:8080/admin/shutdown
 serve-http:
 	cargo run --release --example serve_tiny -- 64 2 http
+
+# What CI's chaos-smoke job runs: a gateway with the deterministic
+# fault injector armed (every 23rd replica job panics its worker),
+# probed by a 64-request chaos burst. The tier must stay up, answer
+# every request (200 or a typed 500 `replica_fault` envelope), show
+# nonzero respawns on /metrics, and drain cleanly.
+chaos: build
+	ESACT_FAULT_SEED=7 ESACT_FAULT_EVERY=23 \
+		./target/release/esact serve 2 --http 127.0.0.1:8843 --max-conns 512 & \
+	sleep 1; \
+	./target/release/esact http-check 127.0.0.1:8843 --chaos 64 --shutdown
 
 # What CI's feature-matrix job runs.
 check-features:

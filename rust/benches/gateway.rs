@@ -33,6 +33,7 @@ use esact::net::client::{
 };
 use esact::net::poll::raise_nofile_limit;
 use esact::net::{Gateway, GatewayConfig};
+use esact::util::fault::{FaultPlan, FaultSite};
 use esact::util::rng::Xoshiro256pp;
 
 struct Cell {
@@ -89,6 +90,27 @@ fn start_gateway_with(
 ) -> anyhow::Result<(Gateway, String)> {
     let dir = esact::util::artifacts_dir();
     let srv = Arc::new(Server::new(&dir, Mode::Dense, SplsConfig::default())?);
+    start_with_server(srv, replicas, steps_per_slice, idle_timeout)
+}
+
+/// A gateway over a fault-armed server — the chaos cell's entry point.
+fn start_gateway_faulted(
+    replicas: usize,
+    steps_per_slice: usize,
+    plan: FaultPlan,
+) -> anyhow::Result<(Gateway, String)> {
+    let dir = esact::util::artifacts_dir();
+    let srv =
+        Arc::new(Server::with_fault_plan(&dir, Mode::Dense, SplsConfig::default(), plan)?);
+    start_with_server(srv, replicas, steps_per_slice, Duration::from_secs(60))
+}
+
+fn start_with_server(
+    srv: Arc<Server>,
+    replicas: usize,
+    steps_per_slice: usize,
+    idle_timeout: Duration,
+) -> anyhow::Result<(Gateway, String)> {
     // max_conns bounds concurrent *sockets* on the event loop — the
     // sweep below parks 1024 idle connections on one gateway
     let cfg = GatewayConfig::builder()
@@ -291,6 +313,47 @@ fn main() -> anyhow::Result<()> {
     drop(lorises);
     gw.shutdown()?;
 
+    // --- chaos: goodput under ~1% injected replica panics -----------
+    // classify jobs panic at a seeded ~1% rate plus a guaranteed
+    // every-20th trip: the 4-conn closed loop caps batches at 4
+    // requests, so the 96 requests produce at least 24 job executions
+    // and the deterministic trip always exercises the supervisor;
+    // retried batches must keep goodput within 20% of the fault-free
+    // 2-replica cell — the gate's BENCH_5 fault floor
+    println!("== HTTP classify under ~1% injected replica faults (2 replicas, 4 conns) ==");
+    let fault_free_rps = cells
+        .iter()
+        .find(|c| c.replicas == 2 && c.connections == 4)
+        .map(|c| c.throughput_rps)
+        .unwrap_or(capacity);
+    let fault_rate = 0.01f64;
+    let fault_requests = n_per_cell * 2;
+    let plan = FaultPlan::seeded(17)
+        .with_rate(FaultSite::ClassifyJob, fault_rate)
+        .with_every(FaultSite::ClassifyJob, 20);
+    let (gw, addr) = start_gateway_faulted(2, 4, plan)?;
+    let chaos = closed_loop_classify(&addr, 4, fault_requests, &pool)?;
+    let mut probe = HttpClient::connect(&addr)?;
+    let respawns =
+        metric_value(&mut probe, "esact_replica_respawns_total")?.unwrap_or(0.0) as usize;
+    let retried = metric_value(&mut probe, "esact_jobs_retried_total")?.unwrap_or(0.0) as usize;
+    drop(probe);
+    gw.shutdown()?;
+    assert_eq!(
+        chaos.ok + chaos.shed + chaos.errors,
+        fault_requests,
+        "every request must be answered under injected faults"
+    );
+    let goodput_rps = chaos.throughput_rps();
+    let goodput_frac = if fault_free_rps > 0.0 { goodput_rps / fault_free_rps } else { 1.0 };
+    println!(
+        "  {goodput_rps:.1} rps goodput ({:.0}% of fault-free {fault_free_rps:.1} rps) | \
+         {respawns} respawns {retried} retried | {} ok {} errors",
+        goodput_frac * 100.0,
+        chaos.ok,
+        chaos.errors
+    );
+
     // --- machine-readable report for the CI gate --------------------
     if let Ok(path) = std::env::var("ESACT_BENCH_JSON") {
         let mut out = String::from("{\n  \"schema\": 5,\n");
@@ -333,8 +396,16 @@ fn main() -> anyhow::Result<()> {
         let _ = writeln!(
             out,
             "  \"slow_loris\": {{\"lorises\": {n_lorises}, \"reaped\": {reaped}, \
-             \"throughput_rps\": {:.2}}}",
+             \"throughput_rps\": {:.2}}},",
             loris_report.throughput_rps()
+        );
+        let _ = writeln!(
+            out,
+            "  \"fault\": {{\"rate\": {fault_rate}, \"requests\": {fault_requests}, \
+             \"ok\": {}, \"errors\": {}, \"respawns\": {respawns}, \"retried\": {retried}, \
+             \"throughput_rps\": {goodput_rps:.2}, \"fault_free_rps\": {fault_free_rps:.2}, \
+             \"goodput_frac\": {goodput_frac:.3}}}",
+            chaos.ok, chaos.errors
         );
         out.push_str("}\n");
         std::fs::write(&path, out)?;

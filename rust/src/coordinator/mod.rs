@@ -15,10 +15,10 @@ pub mod server;
 pub use batcher::{BatchPolicy, Batcher, Request};
 pub use loadgen::{arrivals, trace_stats, Arrival, TraceStats};
 pub use partition::{partition_workload, ClusterAssignment, WorkItem};
-pub use replica::{ReplicaMetrics, WorkQueue};
+pub use replica::{JobFault, ReplicaMetrics, WorkQueue, MAX_JOB_ATTEMPTS};
 pub use server::{
     paged_rows, replica_rows, Completion, GenChunk, GenRequest, GenTask, GenerateMetrics,
-    GenerateOutcome, MetricRow, Mode, Reply, ServeMetrics, ServeOutcome, Server, Submission,
-    SubmitError, Tier, TierConfig, TierHandle, TierSnapshot, DEFAULT_POOL_BLOCKS,
+    GenerateOutcome, MetricRow, Mode, Reply, ServeMetrics, ServeOutcome, Server, StreamFault,
+    Submission, SubmitError, Tier, TierConfig, TierHandle, TierSnapshot, DEFAULT_POOL_BLOCKS,
     PAGED_BLOCK_SIZE,
 };

@@ -18,14 +18,48 @@ use std::time::{Duration, Instant};
 use crate::coordinator::batcher::Batch;
 use crate::coordinator::server::{GenTask, Reply, ServerCore};
 use crate::decode::paged::PoolExhausted;
+use crate::util::fault::FaultSite;
 
 /// One dispatched unit of work: a padded classification batch bound for
 /// an executor, or a slice of decode steps of one generation session
 /// (continuous decode batching — sessions interleave across the same
 /// work-stealing deques the classify path uses).
 pub enum Job {
-    Classify(Batch),
-    Decode { task: Box<GenTask>, steps: usize },
+    Classify {
+        batch: Batch,
+        /// Which delivery this is (1 on first dispatch). The leader
+        /// stamps it, the worker echoes it back on a fault, and retry
+        /// stops at `MAX_JOB_ATTEMPTS` — at-most-N execution, so a
+        /// poisoned batch degrades to a per-request error instead of a
+        /// crash loop (decode retries are tracked leader-side, on the
+        /// session record).
+        attempt: u32,
+    },
+    Decode {
+        task: Box<GenTask>,
+        steps: usize,
+    },
+}
+
+/// Retry budget for a faulted job: first dispatch plus one retry, then
+/// the leader answers the requests with a per-request fault outcome.
+pub const MAX_JOB_ATTEMPTS: u32 = 2;
+
+/// A typed per-job fault: the worker panicked (or an injected fault
+/// tripped) executing this job. Carried by [`ReplicaEvent::Faulted`] so
+/// the leader can retry, migrate, or answer in-band — [`ReplicaEvent::
+/// Failed`] stays reserved for genuinely unrecoverable states
+/// (executor-level errors, every replica dead).
+pub enum JobFault {
+    /// A classify batch's execution died before producing replies. The
+    /// batch rides along untouched (execution only borrows it), so the
+    /// leader can requeue it on a healthy replica.
+    Classify { batch: Batch, attempt: u32, message: String },
+    /// A decode slice died; the session's state was consumed by the
+    /// unwind (its Drop released any paged block refs), so only the id
+    /// travels. The leader migrates the session from its retained
+    /// record or aborts the stream in-band.
+    Decode { id: u64, message: String },
 }
 
 /// What a replica reports back to the leader after each job.
@@ -65,6 +99,18 @@ pub enum ReplicaEvent {
         stolen: bool,
         busy: Duration,
         reason: String,
+    },
+    /// The worker panicked executing one job and is exiting; the
+    /// supervisor (leader) respawns the replica and retries, migrates,
+    /// or answers the faulted job — queued work on the dead worker's
+    /// deque survives (peers steal it, and the respawned worker drains
+    /// its own deque). This is the recoverable counterpart of
+    /// [`ReplicaEvent::Failed`].
+    Faulted {
+        replica: usize,
+        fault: JobFault,
+        stolen: bool,
+        busy: Duration,
     },
     Failed {
         replica: usize,
@@ -170,6 +216,14 @@ impl WorkQueue {
         st.locals.iter().map(|q| q.len()).sum()
     }
 
+    /// Whether [`WorkQueue::close`] has been called — the leaders stop
+    /// requeueing faulted work during the shutdown drain (a retry
+    /// pushed after the last worker exits would be lost; answering the
+    /// fault in-band is always safe).
+    pub fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().closed
+    }
+
     /// Close the queue: workers drain what remains, then exit.
     /// Idempotent.
     pub fn close(&self) {
@@ -192,132 +246,199 @@ pub(crate) fn spawn_replicas(
     n_replicas: usize,
 ) -> Vec<JoinHandle<ReplicaMetrics>> {
     (0..n_replicas)
-        .map(|id| {
-            let core = Arc::clone(&core);
-            let queue = Arc::clone(&queue);
-            let events = events.clone();
-            std::thread::Builder::new()
-                .name(format!("esact-replica-{id}"))
-                .spawn(move || {
-                    let own_handle = core.artifacts().replica_handle().ok();
-                    let mut m = ReplicaMetrics { replica: id, ..Default::default() };
-                    while let Some((job, stolen)) = queue.pop(id) {
-                        m.steals += usize::from(stolen);
-                        let t0 = Instant::now();
-                        match job {
-                            Job::Classify(batch) => {
-                                let artifacts =
-                                    own_handle.as_ref().unwrap_or_else(|| core.artifacts());
-                                // a panic here (bad request shape,
-                                // poisoned planner) must still produce
-                                // an event, or the leader would wait on
-                                // this batch forever
-                                let result =
-                                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                                        core.execute_on(
-                                            artifacts,
-                                            &batch.requests,
-                                            batch.padding,
-                                        )
-                                    }))
-                                    .unwrap_or_else(|panic| {
-                                        Err(anyhow::anyhow!(
-                                            "replica {id} panicked executing a batch: {}",
-                                            panic_message(&panic)
-                                        ))
-                                    });
-                                let busy = t0.elapsed();
-                                m.busy += busy;
-                                match result {
-                                    Ok(replies) => {
-                                        m.batches += 1;
-                                        m.requests += replies.len();
-                                        let ev = ReplicaEvent::Done {
-                                            replica: id,
-                                            replies,
-                                            padding: batch.padding,
-                                            stolen,
-                                            busy,
-                                        };
-                                        if events.send(ev).is_err() {
-                                            break; // leader gone: shut down
-                                        }
-                                    }
-                                    Err(error) => {
-                                        let _ = events
-                                            .send(ReplicaEvent::Failed { replica: id, error });
-                                        break;
-                                    }
+        .map(|id| spawn_replica(Arc::clone(&core), Arc::clone(&queue), events.clone(), id))
+        .collect()
+}
+
+/// Spawn one replica worker — also the supervisor's respawn primitive:
+/// after a [`ReplicaEvent::Faulted`] worker exits, the leader joins the
+/// dead handle and spawns a fresh worker under the same id, which
+/// resumes draining the same deque (queued jobs survive a worker death
+/// untouched; peers can also steal them meanwhile).
+pub(crate) fn spawn_replica(
+    core: Arc<ServerCore>,
+    queue: Arc<WorkQueue>,
+    events: mpsc::Sender<ReplicaEvent>,
+    id: usize,
+) -> JoinHandle<ReplicaMetrics> {
+    std::thread::Builder::new()
+        .name(format!("esact-replica-{id}"))
+        .spawn(move || {
+            let own_handle = core.artifacts().replica_handle().ok();
+            let mut m = ReplicaMetrics { replica: id, ..Default::default() };
+            while let Some((job, stolen)) = queue.pop(id) {
+                m.steals += usize::from(stolen);
+                let t0 = Instant::now();
+                match job {
+                    Job::Classify { batch, attempt } => {
+                        // injected faults take the same exit as a real
+                        // panic — before the executor touches anything,
+                        // so the requeued batch replays bit-identically
+                        if core.fault_injector().is_some_and(|f| f.trip(FaultSite::ClassifyJob)) {
+                            let busy = t0.elapsed();
+                            m.busy += busy;
+                            let _ = events.send(ReplicaEvent::Faulted {
+                                replica: id,
+                                fault: JobFault::Classify {
+                                    batch,
+                                    attempt,
+                                    message: format!(
+                                        "injected fault: classify job on replica {id}"
+                                    ),
+                                },
+                                stolen,
+                                busy,
+                            });
+                            break;
+                        }
+                        let artifacts = own_handle.as_ref().unwrap_or_else(|| core.artifacts());
+                        // a panic here (bad request shape, poisoned
+                        // planner) must still produce an event, or the
+                        // leader would wait on this batch forever — and
+                        // execution only borrows the batch, so it
+                        // survives the unwind for the leader to retry
+                        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            core.execute_on(artifacts, &batch.requests, batch.padding)
+                        }));
+                        let busy = t0.elapsed();
+                        m.busy += busy;
+                        match result {
+                            Ok(Ok(replies)) => {
+                                m.batches += 1;
+                                m.requests += replies.len();
+                                let ev = ReplicaEvent::Done {
+                                    replica: id,
+                                    replies,
+                                    padding: batch.padding,
+                                    stolen,
+                                    busy,
+                                };
+                                if events.send(ev).is_err() {
+                                    break; // leader gone: shut down
                                 }
                             }
-                            Job::Decode { mut task, steps } => {
-                                // the unwind consumes the task box (its
-                                // Drop releases any paged block refs),
-                                // so keep the id for the abort event
-                                let task_id = task.id;
-                                let result =
-                                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(
-                                        move || {
-                                            let fresh = task.session.run_steps(steps);
-                                            (task, fresh)
-                                        },
-                                    ));
-                                let busy = t0.elapsed();
-                                m.busy += busy;
-                                match result {
-                                    Ok((task, fresh)) => {
-                                        m.decode_slices += 1;
-                                        m.tokens += fresh.len();
-                                        let ev = ReplicaEvent::DecodeDone {
-                                            replica: id,
-                                            task,
-                                            fresh,
-                                            stolen,
-                                            busy,
-                                        };
-                                        if events.send(ev).is_err() {
-                                            break;
-                                        }
-                                    }
-                                    // pool exhaustion indicts the one
-                                    // session, not the replica: report
-                                    // the abort and keep serving
-                                    Err(panic)
-                                        if panic.downcast_ref::<PoolExhausted>().is_some() =>
-                                    {
-                                        let e = panic
-                                            .downcast_ref::<PoolExhausted>()
-                                            .expect("guard checked the payload type");
-                                        let ev = ReplicaEvent::DecodeAborted {
-                                            replica: id,
-                                            id: task_id,
-                                            stolen,
-                                            busy,
-                                            reason: e.to_string(),
-                                        };
-                                        if events.send(ev).is_err() {
-                                            break;
-                                        }
-                                    }
-                                    Err(panic) => {
-                                        let _ = events.send(ReplicaEvent::Failed {
-                                            replica: id,
-                                            error: anyhow::anyhow!(
-                                                "replica {id} panicked in a decode slice: {}",
-                                                panic_message(&panic)
-                                            ),
-                                        });
-                                        break;
-                                    }
-                                }
+                            // a clean executor `Err` indicts the
+                            // artifacts/backend, not this batch —
+                            // retrying elsewhere would fail the same
+                            // way, so this stays a tier-level error
+                            Ok(Err(error)) => {
+                                let _ = events.send(ReplicaEvent::Failed { replica: id, error });
+                                break;
+                            }
+                            // a panic indicts this worker's execution
+                            // of this batch: hand the batch back for
+                            // retry on a healthy replica and exit (the
+                            // supervisor respawns this slot)
+                            Err(panic) => {
+                                let _ = events.send(ReplicaEvent::Faulted {
+                                    replica: id,
+                                    fault: JobFault::Classify {
+                                        batch,
+                                        attempt,
+                                        message: format!(
+                                            "replica {id} panicked executing a batch: {}",
+                                            panic_message(&panic)
+                                        ),
+                                    },
+                                    stolen,
+                                    busy,
+                                });
+                                break;
                             }
                         }
                     }
-                    m
-                })
-                .expect("spawn replica thread")
+                    Job::Decode { mut task, steps } => {
+                        // the unwind consumes the task box (its Drop
+                        // releases any paged block refs), so keep the
+                        // id for the abort/fault event
+                        let task_id = task.id;
+                        if core.fault_injector().is_some_and(|f| f.trip(FaultSite::DecodeJob)) {
+                            // drop first: the session's Drop releases
+                            // its paged block refs, exactly like a real
+                            // panic's unwind would
+                            drop(task);
+                            let busy = t0.elapsed();
+                            m.busy += busy;
+                            let _ = events.send(ReplicaEvent::Faulted {
+                                replica: id,
+                                fault: JobFault::Decode {
+                                    id: task_id,
+                                    message: format!(
+                                        "injected fault: decode slice on replica {id}"
+                                    ),
+                                },
+                                stolen,
+                                busy,
+                            });
+                            break;
+                        }
+                        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                            move || {
+                                let fresh = task.session.run_steps(steps);
+                                (task, fresh)
+                            },
+                        ));
+                        let busy = t0.elapsed();
+                        m.busy += busy;
+                        match result {
+                            Ok((task, fresh)) => {
+                                m.decode_slices += 1;
+                                m.tokens += fresh.len();
+                                let ev = ReplicaEvent::DecodeDone {
+                                    replica: id,
+                                    task,
+                                    fresh,
+                                    stolen,
+                                    busy,
+                                };
+                                if events.send(ev).is_err() {
+                                    break;
+                                }
+                            }
+                            // pool exhaustion indicts the one session,
+                            // not the replica: report the abort and
+                            // keep serving
+                            Err(panic) if panic.downcast_ref::<PoolExhausted>().is_some() => {
+                                let e = panic
+                                    .downcast_ref::<PoolExhausted>()
+                                    .expect("guard checked the payload type");
+                                let ev = ReplicaEvent::DecodeAborted {
+                                    replica: id,
+                                    id: task_id,
+                                    stolen,
+                                    busy,
+                                    reason: e.to_string(),
+                                };
+                                if events.send(ev).is_err() {
+                                    break;
+                                }
+                            }
+                            // any other panic: the session state is
+                            // gone, but the leader retains what it
+                            // needs to migrate the stream — report the
+                            // fault and exit for respawn
+                            Err(panic) => {
+                                let _ = events.send(ReplicaEvent::Faulted {
+                                    replica: id,
+                                    fault: JobFault::Decode {
+                                        id: task_id,
+                                        message: format!(
+                                            "replica {id} panicked in a decode slice: {}",
+                                            panic_message(&panic)
+                                        ),
+                                    },
+                                    stolen,
+                                    busy,
+                                });
+                                break;
+                            }
+                        }
+                    }
+                }
+            }
+            m
         })
-        .collect()
+        .expect("spawn replica thread")
 }
 
 /// Best-effort extraction of a panic payload's message.
@@ -338,12 +459,12 @@ mod tests {
 
     fn job(id: u64) -> Job {
         let req = Request { id, tokens: vec![0; 8], arrived: Instant::now() };
-        Job::Classify(Batch { requests: vec![req], padding: 0 })
+        Job::Classify { batch: Batch { requests: vec![req], padding: 0 }, attempt: 1 }
     }
 
     fn job_id(j: &Job) -> u64 {
         match j {
-            Job::Classify(b) => b.requests[0].id,
+            Job::Classify { batch, .. } => batch.requests[0].id,
             Job::Decode { task, .. } => task.id,
         }
     }

@@ -20,15 +20,18 @@ use std::fmt;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::thread;
+use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::config::SplsConfig;
 use crate::coordinator::batcher::{BatchPolicy, Batcher, Request};
-use crate::coordinator::replica::{self, Job, ReplicaEvent, ReplicaMetrics, WorkQueue};
+use crate::coordinator::replica::{
+    self, Job, JobFault, ReplicaEvent, ReplicaMetrics, WorkQueue, MAX_JOB_ATTEMPTS,
+};
 use crate::decode::{
     DecodeConfig, DecodeEngine, DecodeMode, GenSession, PagedPool, PoolStats, Sampling,
 };
@@ -36,6 +39,7 @@ use crate::model::{CompiledModelPlan, PackedModel, TinyWeights};
 use crate::quant::QuantMethod;
 use crate::runtime::{Arg, ArtifactSet};
 use crate::spls::plan_cache::{CacheStats, SharedPlanCache, DEFAULT_CAPACITY};
+use crate::util::fault::{FaultInjector, FaultPlan};
 use crate::util::stats::{self, LatencyWindow};
 
 /// Tokens per paged KV block (pool geometry; see `decode::paged`).
@@ -71,6 +75,15 @@ pub struct ServeMetrics {
     pub steals: usize,
     /// Replica count the run was served with.
     pub replicas: usize,
+    /// Classify batches requeued to a healthy replica after a worker
+    /// fault (attempt count below [`MAX_JOB_ATTEMPTS`]).
+    pub retried: usize,
+    /// Batches that exhausted their retry budget: every request in
+    /// them was answered with a per-request fault outcome (the gateway
+    /// renders `replica_fault`), never a tier error.
+    pub faulted: usize,
+    /// Replica workers respawned by the supervisor after a fault.
+    pub respawns: usize,
     /// Plan-cache counters (cumulative over the server's lifetime).
     pub plan_cache: CacheStats,
 }
@@ -193,6 +206,9 @@ impl ServeMetrics {
             MetricRow::of("serve_shed_total", self.shed as f64),
             MetricRow::of("serve_steals_total", self.steals as f64),
             MetricRow::of("serve_replicas", self.replicas as f64),
+            MetricRow::of("serve_jobs_retried_total", self.retried as f64),
+            MetricRow::of("serve_jobs_faulted_total", self.faulted as f64),
+            MetricRow::of("serve_replica_respawns_total", self.respawns as f64),
             MetricRow::of("serve_latency_p50_seconds", self.p50_latency.as_secs_f64()),
             MetricRow::of("serve_latency_p99_seconds", self.p99_latency.as_secs_f64()),
             MetricRow::of("serve_latency_max_seconds", self.max_latency.as_secs_f64()),
@@ -214,6 +230,9 @@ impl GenerateMetrics {
             MetricRow::of("generate_aborted_total", self.aborted as f64),
             MetricRow::of("generate_steals_total", self.steals as f64),
             MetricRow::of("generate_replicas", self.replicas as f64),
+            MetricRow::of("generate_sessions_migrated_total", self.migrated as f64),
+            MetricRow::of("generate_jobs_faulted_total", self.faulted as f64),
+            MetricRow::of("generate_replica_respawns_total", self.respawns as f64),
             MetricRow::of("generate_session_p50_seconds", self.p50_session.as_secs_f64()),
             MetricRow::of("generate_session_p99_seconds", self.p99_session.as_secs_f64()),
             MetricRow::of("generate_tokens_per_sec", self.tokens_per_sec()),
@@ -255,12 +274,37 @@ impl fmt::Display for ServeOutcome {
     }
 }
 
+/// A terminal per-request fault outcome: the request's job died on a
+/// replica more times than the retry budget allows. Delivered through
+/// the normal reply/chunk plumbing (never a tier error) with a stable
+/// machine-readable code the gateway renders into its error envelope —
+/// `replica_fault`, distinct from `tier_timeout`, so clients can tell
+/// "your request kept killing workers" from "the tier is slow".
+#[derive(Clone, Debug)]
+pub struct StreamFault {
+    pub code: &'static str,
+    pub message: String,
+}
+
+impl StreamFault {
+    /// The stable code for replica-fault outcomes.
+    pub const REPLICA_FAULT: &'static str = "replica_fault";
+
+    fn replica_fault(message: String) -> Self {
+        Self { code: Self::REPLICA_FAULT, message }
+    }
+}
+
 /// One served reply.
 #[derive(Clone, Debug)]
 pub struct Reply {
     pub id: u64,
     pub logits: Vec<f32>,
     pub latency: Duration,
+    /// Set when the request's batch exhausted its retry budget: the
+    /// logits are empty and the gateway answers a 500 `replica_fault`
+    /// envelope instead of a result.
+    pub fault: Option<StreamFault>,
 }
 
 /// One streaming generation request.
@@ -288,6 +332,10 @@ pub struct GenChunk {
     pub id: u64,
     pub tokens: Vec<i32>,
     pub done: bool,
+    /// Set on the final chunk of a stream that was aborted by a
+    /// replica fault (retry budget exhausted): the gateway emits the
+    /// in-band `replica_fault` abort envelope before closing.
+    pub fault: Option<StreamFault>,
 }
 
 /// A generation session in flight on the replica tier.
@@ -316,6 +364,16 @@ pub struct GenerateMetrics {
     pub aborted: usize,
     /// Slices executed by a replica other than the dispatch target.
     pub steals: usize,
+    /// Sessions migrated to a healthy replica after a worker fault:
+    /// re-prefilled from the retained prompt + emitted tokens through
+    /// the chunked-prefill path, sampling RNG fast-forwarded — the
+    /// continuation is bit-identical to an unfaulted run.
+    pub migrated: usize,
+    /// Decode jobs whose session exhausted its retry budget; the
+    /// stream ended with an in-band `replica_fault` abort envelope.
+    pub faulted: usize,
+    /// Replica workers respawned by the supervisor after a fault.
+    pub respawns: usize,
     pub wall: Duration,
     pub replicas: usize,
     pub p50_session: Duration,
@@ -464,6 +522,19 @@ impl TierSnapshot {
                 rows.push(row);
             }
         }
+        // tier-wide degradation counters: the per-lane rows above keep
+        // the breakdown, these sum both lanes under the stable names
+        // dashboards alert on
+        rows.push(MetricRow::of(
+            "replica_respawns_total",
+            (self.serve.respawns + self.generate.respawns) as f64,
+        ));
+        rows.push(MetricRow::of("jobs_retried_total", self.serve.retried as f64));
+        rows.push(MetricRow::of(
+            "jobs_faulted_total",
+            (self.serve.faulted + self.generate.faulted) as f64,
+        ));
+        rows.push(MetricRow::of("sessions_migrated_total", self.generate.migrated as f64));
         rows
     }
 }
@@ -494,6 +565,11 @@ pub(crate) struct ServerCore {
     /// Live tier counters (see [`LiveTier`]); leaders update it as
     /// they absorb replica events, `/metrics` scrapes it mid-run.
     live: Mutex<LiveTier>,
+    /// Optional deterministic fault injection (chaos testing): replica
+    /// workers consult it at job start, the paged pool holds its own
+    /// handle on the allocation path, and the gateway checks it on
+    /// socket writes. `None` (the default) costs one branch per job.
+    fault: Option<FaultInjector>,
 }
 
 impl ServerCore {
@@ -503,6 +579,18 @@ impl ServerCore {
 
     pub(crate) fn engine(&self) -> &Arc<DecodeEngine> {
         &self.engine
+    }
+
+    pub(crate) fn fault_injector(&self) -> Option<&FaultInjector> {
+        self.fault.as_ref()
+    }
+
+    /// Poison-tolerant lock on the live tier counters: a replica panic
+    /// unwinding while a leader held this lock would poison it, and
+    /// counters must never take down otherwise-healthy threads (the
+    /// counters are plain sums — every update leaves them consistent).
+    pub(crate) fn live(&self) -> MutexGuard<'_, LiveTier> {
+        live_lock(&self.live)
     }
 
     /// Plan one request's per-layer SPLS plans, serving repeated shapes
@@ -590,9 +678,18 @@ impl ServerCore {
                 id: r.id,
                 logits: logits[i * self.n_classes..(i + 1) * self.n_classes].to_vec(),
                 latency: now.duration_since(r.arrived),
+                fault: None,
             })
             .collect())
     }
+}
+
+/// Lock a [`LiveTier`] mutex, recovering from poisoning: the guarded
+/// value is a bag of monotonic counters, so a panic mid-update leaves
+/// it merely stale, never structurally broken — and the metrics path
+/// must not cascade a replica panic into the leader or the gateway.
+pub(crate) fn live_lock(live: &Mutex<LiveTier>) -> MutexGuard<'_, LiveTier> {
+    live.lock().unwrap_or_else(|e| e.into_inner())
 }
 
 /// The serving coordinator.
@@ -614,7 +711,7 @@ impl Server {
         spls: SplsConfig,
         cache_capacity: usize,
     ) -> Result<Self> {
-        Self::build(artifact_dir, mode, spls, cache_capacity, DEFAULT_POOL_BLOCKS)
+        Self::build(artifact_dir, mode, spls, cache_capacity, DEFAULT_POOL_BLOCKS, None)
     }
 
     /// Like [`Server::new`] with an explicit paged-pool block capacity
@@ -626,7 +723,27 @@ impl Server {
         spls: SplsConfig,
         pool_blocks: usize,
     ) -> Result<Self> {
-        Self::build(artifact_dir, mode, spls, DEFAULT_CAPACITY, pool_blocks)
+        Self::build(artifact_dir, mode, spls, DEFAULT_CAPACITY, pool_blocks, None)
+    }
+
+    /// Like [`Server::new`] with a deterministic [`FaultPlan`] armed:
+    /// replica workers, the paged pool and the gateway will consult the
+    /// shared injector at their respective sites. Chaos/CI entry point —
+    /// production callers use the plain constructors (injection off).
+    pub fn with_fault_plan(
+        artifact_dir: &Path,
+        mode: Mode,
+        spls: SplsConfig,
+        plan: FaultPlan,
+    ) -> Result<Self> {
+        Self::build(
+            artifact_dir,
+            mode,
+            spls,
+            DEFAULT_CAPACITY,
+            DEFAULT_POOL_BLOCKS,
+            Some(plan),
+        )
     }
 
     fn build(
@@ -635,6 +752,7 @@ impl Server {
         spls: SplsConfig,
         cache_capacity: usize,
         pool_blocks: usize,
+        fault: Option<FaultPlan>,
     ) -> Result<Self> {
         let artifacts = ArtifactSet::load(artifact_dir)?;
         // one packing serves the whole coordinator: planner, decode
@@ -652,6 +770,13 @@ impl Server {
         };
         let engine = Arc::new(DecodeEngine::from_packed(Arc::clone(&packed)));
         let paged = PagedPool::new(PAGED_BLOCK_SIZE, pool_blocks, weights.cfg.d_head());
+        let fault = fault.map(FaultInjector::new);
+        if let Some(inj) = &fault {
+            // One injector, shared by every site: call counters are
+            // per-site, so arming the pool does not perturb the job
+            // sites' deterministic schedules.
+            paged.set_fault_injector(inj.clone());
+        }
         Ok(Self {
             seq_len: weights.cfg.seq_len,
             core: Arc::new(ServerCore {
@@ -665,6 +790,7 @@ impl Server {
                 engine,
                 paged,
                 live: Mutex::new(LiveTier::default()),
+                fault,
             }),
         })
     }
@@ -682,6 +808,13 @@ impl Server {
     /// Classifier output width.
     pub fn n_classes(&self) -> usize {
         self.core.n_classes
+    }
+
+    /// The armed deterministic fault injector, if any — chaos/CI runs
+    /// arm one via [`Server::with_fault_plan`]; production servers
+    /// return `None` and every injection site is a single branch.
+    pub fn fault_injector(&self) -> Option<&FaultInjector> {
+        self.core.fault_injector()
     }
 
     /// Plan-cache counters (cumulative across serve runs).
@@ -719,7 +852,7 @@ impl Server {
     /// percentiles are estimated over a bounded sliding window of the
     /// most recent samples ([`LatencyWindow`]).
     pub fn live_snapshot(&self) -> TierSnapshot {
-        let live = self.core.live.lock().unwrap();
+        let live = self.core.live();
         let uptime = live.started.map(|t| t.elapsed()).unwrap_or_default();
         let mut serve = live.serve;
         let mut generate = live.generate;
@@ -779,11 +912,19 @@ impl Server {
         n_replicas: usize,
     ) -> Result<ServeOutcome> {
         assert!(n_replicas >= 1, "need at least one replica");
-        self.core.live.lock().unwrap().touch();
+        self.core.live().touch();
         let queue = Arc::new(WorkQueue::new(n_replicas));
         let (etx, erx) = mpsc::channel();
-        let workers =
-            replica::spawn_replicas(Arc::clone(&self.core), Arc::clone(&queue), etx, n_replicas);
+        // the leader keeps its own etx clone so it can hand fresh
+        // senders to respawned workers; every worker death is preceded
+        // by an event (Faulted/Failed), so the leader never depends on
+        // a channel disconnect to learn the tier is empty
+        let mut workers: Vec<Option<JoinHandle<ReplicaMetrics>>> =
+            replica::spawn_replicas(Arc::clone(&self.core), Arc::clone(&queue), etx.clone(), n_replicas)
+                .into_iter()
+                .map(Some)
+                .collect();
+        let mut dead_metrics: Vec<ReplicaMetrics> = Vec::new();
 
         let mut batcher = Batcher::new(policy);
         let mut st = LeaderState {
@@ -791,6 +932,7 @@ impl Server {
             latencies: Vec::new(),
             in_flight: 0,
             first_error: None,
+            pending_respawns: Vec::new(),
         };
         let start = Instant::now();
         let tick = Duration::from_micros(200);
@@ -827,7 +969,7 @@ impl Server {
                 }
             } else if st.in_flight > 0 {
                 match erx.recv_timeout(tick) {
-                    Ok(ev) => st.absorb(ev, &replies, &self.core.live),
+                    Ok(ev) => st.absorb(ev, &replies, &queue, &self.core.live),
                     Err(mpsc::RecvTimeoutError::Timeout) => {}
                     Err(mpsc::RecvTimeoutError::Disconnected) => {
                         // every worker exited without reporting the
@@ -839,9 +981,24 @@ impl Server {
                     }
                 }
             }
-            // 2. drain completion events without blocking
+            // 2. drain completion events without blocking, then
+            //    supervise: every Faulted event left a dead worker slot
+            //    behind — join its counters and respawn it on the same
+            //    deque (queued jobs survive a worker death untouched)
             while let Ok(ev) = erx.try_recv() {
-                st.absorb(ev, &replies, &self.core.live);
+                st.absorb(ev, &replies, &queue, &self.core.live);
+            }
+            let respawned = respawn_workers(
+                &self.core,
+                &queue,
+                &etx,
+                &mut workers,
+                &mut dead_metrics,
+                &mut st.pending_respawns,
+            );
+            if respawned > 0 {
+                st.metrics.respawns += respawned;
+                self.core.live().serve.respawns += respawned;
             }
             // 3. dispatch: full/stale batches while the pipeline has
             //    room (≤ 2 outstanding batches per replica, so
@@ -866,7 +1023,7 @@ impl Server {
                 match batch {
                     Some(batch) => {
                         st.in_flight += 1;
-                        queue.push_least_loaded(Job::Classify(batch));
+                        queue.push_least_loaded(Job::Classify { batch, attempt: 1 });
                     }
                     None => break,
                 }
@@ -882,13 +1039,18 @@ impl Server {
         queue.close(); // idempotent; reached early only on Failed
         let per_replica: Vec<ReplicaMetrics> = workers
             .into_iter()
+            .flatten()
             .map(|h| h.join().expect("replica thread panicked"))
             .collect();
         // absorb events that raced shutdown (workers drained the queue
-        // between our last poll and their exit)
+        // between our last poll and their exit); the queue is closed,
+        // so a raced Faulted is answered in-band, never requeued
         while let Ok(ev) = erx.try_recv() {
-            st.absorb(ev, &replies, &self.core.live);
+            st.absorb(ev, &replies, &queue, &self.core.live);
         }
+        // fold counters of mid-run casualties into their slot's final
+        // row: ServeOutcome keeps one row per replica slot
+        let per_replica = merge_replica_metrics(per_replica, dead_metrics);
         if let Some(err) = st.first_error.take() {
             return Err(err);
         }
@@ -941,13 +1103,18 @@ impl Server {
         prefill_chunk: usize,
     ) -> Result<GenerateOutcome> {
         assert!(n_replicas >= 1, "need at least one replica");
-        self.core.live.lock().unwrap().touch();
+        self.core.live().touch();
         let slice = steps_per_slice.max(1);
         let prefill = if prefill_chunk == 0 { slice } else { prefill_chunk };
         let queue = Arc::new(WorkQueue::new(n_replicas));
         let (etx, erx) = mpsc::channel();
-        let workers =
-            replica::spawn_replicas(Arc::clone(&self.core), Arc::clone(&queue), etx, n_replicas);
+        // etx clone retained for respawns — see serve_replicated
+        let mut workers: Vec<Option<JoinHandle<ReplicaMetrics>>> =
+            replica::spawn_replicas(Arc::clone(&self.core), Arc::clone(&queue), etx.clone(), n_replicas)
+                .into_iter()
+                .map(Some)
+                .collect();
+        let mut dead_metrics: Vec<ReplicaMetrics> = Vec::new();
         let start = Instant::now();
         let tick = Duration::from_micros(200);
         let mut st = GenLeader {
@@ -959,6 +1126,10 @@ impl Server {
             prefill,
             pool: self.core.paged.clone(),
             reservations: HashMap::new(),
+            sessions: HashMap::new(),
+            pending_respawns: Vec::new(),
+            core: Arc::clone(&self.core),
+            decode,
         };
         let mut open = true;
         // admission bound: cap live sessions (each owns KV/predictor
@@ -1006,6 +1177,20 @@ impl Server {
             } else {
                 break; // input closed, nothing in flight
             }
+            // supervise: respawn every worker slot a Faulted event left
+            // dead, so migrated slices have a replica to land on
+            let respawned = respawn_workers(
+                &self.core,
+                &queue,
+                &etx,
+                &mut workers,
+                &mut dead_metrics,
+                &mut st.pending_respawns,
+            );
+            if respawned > 0 {
+                st.metrics.respawns += respawned;
+                self.core.live().generate.respawns += respawned;
+            }
             if st.first_error.is_some() {
                 break;
             }
@@ -1013,11 +1198,13 @@ impl Server {
         queue.close();
         let per_replica: Vec<ReplicaMetrics> = workers
             .into_iter()
+            .flatten()
             .map(|h| h.join().expect("replica thread panicked"))
             .collect();
         while let Ok(ev) = erx.try_recv() {
             st.absorb(ev, &replies, &queue, &self.core.live);
         }
+        let per_replica = merge_replica_metrics(per_replica, dead_metrics);
         // sessions cut short by an error path never completed: hand
         // their reserved blocks back to the admission ledger
         for (_, n) in st.reservations.drain() {
@@ -1058,7 +1245,7 @@ impl Server {
         st: &mut GenLeader,
     ) {
         if req.prompt.is_empty() {
-            let _ = replies.send(GenChunk { id: req.id, tokens: Vec::new(), done: true });
+            let _ = replies.send(GenChunk { id: req.id, tokens: Vec::new(), done: true, fault: None });
             return;
         }
         let mut session = match &req.prefix {
@@ -1069,8 +1256,9 @@ impl Server {
                 let need = self.paged_session_demand(total);
                 if !self.core.paged.try_reserve(need) {
                     st.metrics.rejected += 1;
-                    self.core.live.lock().unwrap().generate.rejected += 1;
-                    let _ = replies.send(GenChunk { id: req.id, tokens: Vec::new(), done: true });
+                    self.core.live().generate.rejected += 1;
+                    let _ = replies
+                        .send(GenChunk { id: req.id, tokens: Vec::new(), done: true, fault: None });
                     return;
                 }
                 st.reservations.insert(req.id, need);
@@ -1079,7 +1267,7 @@ impl Server {
                     decode,
                     &self.core.paged,
                     prefix,
-                    req.prompt,
+                    req.prompt.clone(),
                     req.max_new,
                     req.sampling,
                 )
@@ -1087,7 +1275,7 @@ impl Server {
             _ => GenSession::new(
                 Arc::clone(self.core.engine()),
                 decode,
-                req.prompt,
+                req.prompt.clone(),
                 req.max_new,
                 req.sampling,
             ),
@@ -1095,8 +1283,22 @@ impl Server {
         if decode.mode == DecodeMode::Spls {
             session = session.with_plan_cache(self.core.cache.clone());
         }
+        // retain what migration needs: a replica fault destroys the
+        // session state, so the leader must be able to rebuild it
+        st.sessions.insert(
+            req.id,
+            SessionRecord {
+                prompt: req.prompt,
+                prefix: req.prefix,
+                max_new: req.max_new,
+                sampling: req.sampling,
+                arrived: req.arrived,
+                emitted: Vec::new(),
+                attempts: 1,
+            },
+        );
         st.metrics.sessions += 1;
-        self.core.live.lock().unwrap().generate.sessions += 1;
+        self.core.live().generate.sessions += 1;
         st.in_flight += 1;
         let steps = st.steps_for(&session);
         queue.push_least_loaded(Job::Decode {
@@ -1112,19 +1314,28 @@ struct LeaderState {
     latencies: Vec<f64>,
     in_flight: usize,
     first_error: Option<anyhow::Error>,
+    /// Replica slots whose worker died on a fault since the last
+    /// supervision pass; the leader loop joins + respawns them.
+    pending_respawns: Vec<usize>,
 }
 
 impl LeaderState {
     /// Fold one replica event in, forwarding replies to the caller and
     /// mirroring the counters into the shared live tier.
-    fn absorb(&mut self, ev: ReplicaEvent, out: &mpsc::Sender<Reply>, live: &Mutex<LiveTier>) {
+    fn absorb(
+        &mut self,
+        ev: ReplicaEvent,
+        out: &mpsc::Sender<Reply>,
+        queue: &WorkQueue,
+        live: &Mutex<LiveTier>,
+    ) {
         self.in_flight = self.in_flight.saturating_sub(1);
         match ev {
             ReplicaEvent::Done { replica, replies, padding, stolen, busy } => {
                 self.metrics.batches += 1;
                 self.metrics.padded_slots += padding;
                 self.metrics.steals += usize::from(stolen);
-                live.lock().unwrap().record_batch(replica, &replies, padding, stolen, busy);
+                live_lock(live).record_batch(replica, &replies, padding, stolen, busy);
                 for reply in replies {
                     self.metrics.requests += 1;
                     self.metrics.total_latency += reply.latency;
@@ -1132,6 +1343,51 @@ impl LeaderState {
                     self.latencies.push(reply.latency.as_secs_f64());
                     // receiver may have hung up at shutdown; fine
                     let _ = out.send(reply);
+                }
+            }
+            // a worker died executing one batch: queue the slot for
+            // respawn, then either requeue the batch (at-most-
+            // MAX_JOB_ATTEMPTS) or answer its requests with a typed
+            // per-request fault — never a tier error
+            ReplicaEvent::Faulted { replica, fault, stolen, busy } => {
+                self.metrics.steals += usize::from(stolen);
+                self.pending_respawns.push(replica);
+                {
+                    let mut live = live_lock(live);
+                    let r = live.replica_mut(replica);
+                    r.steals += usize::from(stolen);
+                    r.busy += busy;
+                }
+                match fault {
+                    JobFault::Classify { batch, attempt, message } => {
+                        if attempt < MAX_JOB_ATTEMPTS && !queue.is_closed() {
+                            self.metrics.retried += 1;
+                            live_lock(live).serve.retried += 1;
+                            self.in_flight += 1;
+                            queue.push_least_loaded(Job::Classify {
+                                batch,
+                                attempt: attempt + 1,
+                            });
+                        } else {
+                            // retry budget spent (or draining): fault
+                            // replies are delivered, not counted as
+                            // served requests — latency stats stay
+                            // honest
+                            self.metrics.faulted += 1;
+                            live_lock(live).serve.faulted += 1;
+                            let now = Instant::now();
+                            for req in batch.requests {
+                                let _ = out.send(Reply {
+                                    id: req.id,
+                                    logits: Vec::new(),
+                                    latency: now.duration_since(req.arrived),
+                                    fault: Some(StreamFault::replica_fault(message.clone())),
+                                });
+                            }
+                        }
+                    }
+                    // the classify leader never dispatches decode jobs
+                    JobFault::Decode { .. } => {}
                 }
             }
             // the classify leader never dispatches decode jobs; absorb
@@ -1144,6 +1400,80 @@ impl LeaderState {
             }
         }
     }
+}
+
+/// Join every worker slot queued for respawn — the dead worker sent its
+/// fault event and exited immediately after, so the join is prompt —
+/// bank its counters, and spawn a fresh worker under the same replica
+/// id (it resumes draining the same deque). Returns the respawn count
+/// for the degradation metrics. Always respawns, even mid-drain: with
+/// one replica, queued jobs behind the fault would otherwise never run.
+fn respawn_workers(
+    core: &Arc<ServerCore>,
+    queue: &Arc<WorkQueue>,
+    etx: &mpsc::Sender<ReplicaEvent>,
+    workers: &mut [Option<JoinHandle<ReplicaMetrics>>],
+    dead: &mut Vec<ReplicaMetrics>,
+    pending: &mut Vec<usize>,
+) -> usize {
+    let mut n = 0;
+    for id in pending.drain(..) {
+        if let Some(handle) = workers[id].take() {
+            if let Ok(m) = handle.join() {
+                dead.push(m);
+            }
+        }
+        workers[id] = Some(replica::spawn_replica(
+            Arc::clone(core),
+            Arc::clone(queue),
+            etx.clone(),
+            id,
+        ));
+        n += 1;
+    }
+    n
+}
+
+/// Fold the counters of workers that died mid-run (and were respawned
+/// under the same id) into the final joined rows — outcomes keep the
+/// "one row per replica slot" shape whether or not faults occurred.
+fn merge_replica_metrics(
+    mut per_replica: Vec<ReplicaMetrics>,
+    dead: Vec<ReplicaMetrics>,
+) -> Vec<ReplicaMetrics> {
+    for d in dead {
+        if let Some(m) = per_replica.iter_mut().find(|m| m.replica == d.replica) {
+            m.batches += d.batches;
+            m.requests += d.requests;
+            m.decode_slices += d.decode_slices;
+            m.tokens += d.tokens;
+            m.steals += d.steals;
+            m.busy += d.busy;
+        } else {
+            per_replica.push(d);
+        }
+    }
+    per_replica.sort_by_key(|m| m.replica);
+    per_replica
+}
+
+/// What the generate leader retains per live session so it can rebuild
+/// (migrate) the stream after a replica fault destroys the in-flight
+/// session state: re-prefill from prompt + already-emitted tokens,
+/// fast-forward the sampler, and keep streaming bit-identically.
+struct SessionRecord {
+    /// The original prompt (the tail after `prefix` for paged sessions).
+    prompt: Vec<i32>,
+    /// Declared shared-prefix tokens, when the session is paged.
+    prefix: Option<Vec<i32>>,
+    max_new: usize,
+    sampling: Sampling,
+    arrived: Instant,
+    /// Tokens already streamed to the client, in order.
+    emitted: Vec<i32>,
+    /// Dispatch attempts consumed (1 = first dispatch); migration
+    /// stops at [`MAX_JOB_ATTEMPTS`].
+    attempts: u32,
 }
 
 /// The generate leader's running state over decode-slice completions.
@@ -1161,6 +1491,14 @@ struct GenLeader {
     /// Outstanding admission reservations: blocks reserved per request
     /// id, released when the session finishes or aborts.
     reservations: HashMap<u64, usize>,
+    /// Migration records of every live session, keyed by request id.
+    sessions: HashMap<u64, SessionRecord>,
+    /// Replica slots whose worker died on a fault since the last
+    /// supervision pass (see [`LeaderState::pending_respawns`]).
+    pending_respawns: Vec<usize>,
+    /// Shared server state, for rebuilding migrated sessions.
+    core: Arc<ServerCore>,
+    decode: DecodeConfig,
 }
 
 impl GenLeader {
@@ -1194,16 +1532,17 @@ impl GenLeader {
                 self.metrics.tokens += fresh.len();
                 let done = task.session.done();
                 let session_latency = done.then(|| task.arrived.elapsed().as_secs_f64());
-                live.lock().unwrap().record_decode(
-                    replica,
-                    fresh.len(),
-                    stolen,
-                    busy,
-                    session_latency,
-                );
+                live_lock(live).record_decode(replica, fresh.len(), stolen, busy, session_latency);
+                // keep the migration record current *before* the tokens
+                // leave: a later fault re-prefills from exactly what the
+                // client has already seen
+                if let Some(rec) = self.sessions.get_mut(&task.id) {
+                    rec.emitted.extend_from_slice(&fresh);
+                }
                 // receiver may have hung up at shutdown; fine
-                let _ = out.send(GenChunk { id: task.id, tokens: fresh, done });
+                let _ = out.send(GenChunk { id: task.id, tokens: fresh, done, fault: None });
                 if done {
+                    self.sessions.remove(&task.id);
                     self.session_latencies.push(task.arrived.elapsed().as_secs_f64());
                     if let Some(n) = self.reservations.remove(&task.id) {
                         self.pool.release(n);
@@ -1220,17 +1559,75 @@ impl GenLeader {
             // back, and count the abort
             ReplicaEvent::DecodeAborted { replica, id, stolen, busy, reason: _ } => {
                 self.metrics.aborted += 1;
+                self.sessions.remove(&id);
                 if let Some(n) = self.reservations.remove(&id) {
                     self.pool.release(n);
                 }
                 {
-                    let mut live = live.lock().unwrap();
+                    let mut live = live_lock(live);
                     live.generate.aborted += 1;
                     let r = live.replica_mut(replica);
                     r.steals += usize::from(stolen);
                     r.busy += busy;
                 }
-                let _ = out.send(GenChunk { id, tokens: Vec::new(), done: true });
+                let _ = out.send(GenChunk { id, tokens: Vec::new(), done: true, fault: None });
+            }
+            // a worker died mid-slice: queue the slot for respawn, then
+            // migrate the session (rebuild from its record, at-most-
+            // MAX_JOB_ATTEMPTS) or abort the stream in-band with a
+            // typed fault envelope — never a tier error
+            ReplicaEvent::Faulted { replica, fault, stolen, busy } => {
+                self.metrics.steals += usize::from(stolen);
+                self.pending_respawns.push(replica);
+                {
+                    let mut live = live_lock(live);
+                    let r = live.replica_mut(replica);
+                    r.steals += usize::from(stolen);
+                    r.busy += busy;
+                }
+                match fault {
+                    JobFault::Decode { id, message } => {
+                        let terminal = queue.is_closed()
+                            || self
+                                .sessions
+                                .get(&id)
+                                .map_or(true, |rec| rec.attempts >= MAX_JOB_ATTEMPTS);
+                        if terminal {
+                            self.metrics.aborted += 1;
+                            self.metrics.faulted += 1;
+                            self.sessions.remove(&id);
+                            if let Some(n) = self.reservations.remove(&id) {
+                                self.pool.release(n);
+                            }
+                            {
+                                let mut live = live_lock(live);
+                                live.generate.aborted += 1;
+                                live.generate.faulted += 1;
+                            }
+                            let _ = out.send(GenChunk {
+                                id,
+                                tokens: Vec::new(),
+                                done: true,
+                                fault: Some(StreamFault::replica_fault(message)),
+                            });
+                        } else {
+                            if let Some(rec) = self.sessions.get_mut(&id) {
+                                rec.attempts += 1;
+                            }
+                            let task = {
+                                let rec = self.sessions.get(&id).expect("live record");
+                                self.rebuild_session(id, rec)
+                            };
+                            self.metrics.migrated += 1;
+                            live_lock(live).generate.migrated += 1;
+                            self.in_flight += 1;
+                            let steps = self.steps_for(&task.session);
+                            queue.push_least_loaded(Job::Decode { task, steps });
+                        }
+                    }
+                    // the generate leader never dispatches classify jobs
+                    JobFault::Classify { .. } => {}
+                }
             }
             ReplicaEvent::Done { .. } => {} // generate never dispatches classify jobs
             ReplicaEvent::Failed { error, .. } => {
@@ -1239,6 +1636,44 @@ impl GenLeader {
                 }
             }
         }
+    }
+
+    /// Rebuild a faulted session from its retained record: re-prefill
+    /// from the original prompt plus every token already streamed, ask
+    /// only for the remaining budget, and fast-forward the sampler past
+    /// the draws the emitted tokens consumed — the continuation is
+    /// bit-identical to the fault-free stream (tokens the faulted slice
+    /// generated but never delivered are re-drawn at the same indices).
+    /// Paged sessions re-declare the same prefix (the trie re-attaches
+    /// to the shared blocks) and keep their admission reservation:
+    /// total token demand is unchanged by migration.
+    fn rebuild_session(&self, id: u64, rec: &SessionRecord) -> Box<GenTask> {
+        let mut tail = rec.prompt.clone();
+        tail.extend_from_slice(&rec.emitted);
+        let remaining = rec.max_new.saturating_sub(rec.emitted.len());
+        let mut session = match &rec.prefix {
+            Some(prefix) if !prefix.is_empty() => GenSession::new_paged(
+                Arc::clone(self.core.engine()),
+                self.decode,
+                &self.core.paged,
+                prefix,
+                tail,
+                remaining,
+                rec.sampling,
+            ),
+            _ => GenSession::new(
+                Arc::clone(self.core.engine()),
+                self.decode,
+                tail,
+                remaining,
+                rec.sampling,
+            ),
+        };
+        if self.decode.mode == DecodeMode::Spls {
+            session = session.with_plan_cache(self.core.cache.clone());
+        }
+        session.fast_forward_sampling(rec.emitted.len());
+        Box::new(GenTask { id, arrived: rec.arrived, session })
     }
 }
 
@@ -1275,12 +1710,21 @@ pub enum Completion {
         logits: Vec<f32>,
         latency: Duration,
     },
+    /// A `Submission::Classify` that exhausted its retry budget on
+    /// faulted replicas: a typed per-request failure, delivered in the
+    /// completion stream like any answer (the tier itself stays up).
+    ClassifyFailed {
+        id: u64,
+        fault: StreamFault,
+    },
     /// One streamed slice of a `Submission::Generate`; `done` marks
-    /// the last.
+    /// the last. A stream cut short by an unrecoverable replica fault
+    /// carries the typed fault on its final chunk.
     Generate {
         id: u64,
         tokens: Vec<i32>,
         done: bool,
+        fault: Option<StreamFault>,
     },
 }
 
@@ -1539,10 +1983,13 @@ impl Tier {
             .spawn(move || {
                 for reply in crep_rx.iter() {
                     h.classify_in_flight.fetch_sub(1, Ordering::SeqCst);
-                    h.push(Completion::Classify {
-                        id: reply.id,
-                        logits: reply.logits,
-                        latency: reply.latency,
+                    h.push(match reply.fault {
+                        Some(fault) => Completion::ClassifyFailed { id: reply.id, fault },
+                        None => Completion::Classify {
+                            id: reply.id,
+                            logits: reply.logits,
+                            latency: reply.latency,
+                        },
                     });
                 }
             })?;
@@ -1558,6 +2005,7 @@ impl Tier {
                         id: chunk.id,
                         tokens: chunk.tokens,
                         done: chunk.done,
+                        fault: chunk.fault,
                     });
                 }
             })?;
@@ -2234,6 +2682,10 @@ mod tests {
             prefill: 4,
             pool: pool.clone(),
             reservations: std::iter::once((3u64, need)).collect(),
+            sessions: HashMap::new(),
+            pending_respawns: Vec::new(),
+            core: Arc::clone(&srv.core),
+            decode: DecodeConfig::default(),
         };
         let (otx, orx) = mpsc::channel();
         let queue = WorkQueue::new(1);
@@ -2400,12 +2852,15 @@ mod tests {
                         assert_eq!(logits.len(), 16);
                         done.insert(id, ());
                     }
-                    Completion::Generate { id, tokens, done: d } => {
+                    Completion::Generate { id, tokens, done: d, .. } => {
                         assert_eq!(id, ids[2]);
                         gen_tokens.extend(tokens);
                         if d {
                             done.insert(id, ());
                         }
+                    }
+                    Completion::ClassifyFailed { fault, .. } => {
+                        panic!("no faults injected, none expected: {}", fault.message)
                     }
                 }
             }

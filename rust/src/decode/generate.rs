@@ -65,6 +65,19 @@ impl Sampler {
             }
         }
     }
+
+    /// Advance the RNG stream as if `n` tokens had already been
+    /// sampled. [`Sampler::sample`] draws exactly one uniform per
+    /// sampled token, so skipping `n` draws puts a fresh sampler in the
+    /// same stream position as one that produced `n` tokens — the
+    /// session-migration primitive (a no-op for greedy).
+    pub fn skip(&mut self, n: usize) {
+        if let Some(rng) = self.rng.as_mut() {
+            for _ in 0..n {
+                rng.f64();
+            }
+        }
+    }
 }
 
 /// The session's KV backend: a private contiguous cache, or a paged
@@ -198,6 +211,17 @@ impl GenSession {
     /// Logits the next sample will draw from (None before prefill).
     pub fn last_logits(&self) -> Option<&[f32]> {
         self.last_logits.as_deref()
+    }
+
+    /// Fast-forward the sampling RNG past `n` already-emitted tokens.
+    /// Used when migrating a faulted session to a fresh replica: the
+    /// rebuilt session prefills `original prompt ++ emitted tokens`,
+    /// then this aligns its sampler with the stream position the dead
+    /// session had reached, so the continuation is bit-identical to an
+    /// unfaulted run (the decode forward is deterministic and each
+    /// sampled token consumes exactly one draw).
+    pub fn fast_forward_sampling(&mut self, n: usize) {
+        self.sampler.skip(n);
     }
 
     /// Run up to `n` decode steps (prompt tokens count as steps);
@@ -376,6 +400,34 @@ mod tests {
         assert_eq!(toks2, one.tokens);
         assert_eq!(s2.stats().steps, one.stats.steps - 4, "prefix pushes were skipped");
         assert_eq!(pool.stats().prefix_hits, 1);
+    }
+
+    #[test]
+    fn migrated_session_continues_bit_identically() {
+        // the generate leader's migration recipe: rebuild with
+        // prompt ++ emitted, reduced max_new, RNG fast-forwarded by the
+        // emitted count — the continuation must replay the unfaulted
+        // stream exactly, including through sampled (top-k) decode
+        let eng = engine();
+        let p = prompt(6, 10);
+        let cfg = DecodeConfig::default();
+        let sampling = Sampling::TopK { k: 4, temperature: 0.9, seed: 11 };
+        let want = generate(&eng, cfg, &p, 12, sampling, |_, _| {}).tokens;
+        let mut orig = GenSession::new(Arc::clone(&eng), cfg, p.clone(), 12, sampling);
+        let mut emitted = Vec::new();
+        while emitted.len() < 5 {
+            emitted.extend(orig.run_steps(3));
+        }
+        drop(orig); // the "replica panic": session state is gone
+        let mut replay = p.clone();
+        replay.extend_from_slice(&emitted);
+        let mut migrated =
+            GenSession::new(Arc::clone(&eng), cfg, replay, 12 - emitted.len(), sampling);
+        migrated.fast_forward_sampling(emitted.len());
+        while !migrated.done() {
+            emitted.extend(migrated.run_steps(4));
+        }
+        assert_eq!(emitted, want, "migration must not change the stream");
     }
 
     #[test]

@@ -67,6 +67,7 @@ use crate::decode::step::{DecodeConfig, DecodeEngine, DecodeStateOf, DecodeStats
 use crate::model::sparse_kernels::{axpy_prob, dot_qk};
 use crate::spls::maskgen::MaskGen;
 use crate::spls::plan_cache::SharedPlanCache;
+use crate::util::fault::{FaultInjector, FaultSite};
 
 /// One fixed-size page of K/V rows for one head.
 struct Block {
@@ -149,6 +150,10 @@ struct PoolInner {
     /// [`PagedPool::try_reserve`]). Independent of `in_use`: a
     /// reservation is an upper bound a session may still allocate.
     reserved: usize,
+    /// Optional deterministic fault injection (chaos testing): when a
+    /// scheduled allocation trips, it fails with [`PoolExhausted`] —
+    /// the pool's real recoverable failure path. Default off.
+    fault: Option<FaultInjector>,
 }
 
 /// Recursive min-`last_used` scan; `best` is `(stamp, path, index)`.
@@ -197,6 +202,11 @@ impl PoolInner {
     /// free, cold trie snapshots are shed (LRU) until a block frees;
     /// if none does, the allocation fails recoverably.
     fn alloc_block(&mut self) -> Result<usize, PoolExhausted> {
+        if let Some(f) = &self.fault {
+            if f.trip(FaultSite::PoolAlloc) {
+                return Err(PoolExhausted { in_use: self.in_use, max_blocks: self.max_blocks });
+            }
+        }
         let b = if let Some(b) = self.free.pop() {
             b
         } else if self.blocks.len() < self.max_blocks {
@@ -469,8 +479,16 @@ impl PagedPool {
                 max_trie_entries,
                 trie_evictions: 0,
                 reserved: 0,
+                fault: None,
             })),
         }
+    }
+
+    /// Install a deterministic fault injector on the allocation path
+    /// (chaos testing; see `util::fault`). Default off — without one
+    /// the allocator behaves exactly as before.
+    pub fn set_fault_injector(&self, fault: FaultInjector) {
+        self.lock().fault = Some(fault);
     }
 
     /// Poison-tolerant lock: a panicked session (e.g. pool exhaustion

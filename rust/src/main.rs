@@ -18,6 +18,7 @@ use esact::net::client::{classify_body, generate_body, HttpClient, IdleConns};
 use esact::net::{Gateway, GatewayConfig};
 use esact::quant::QuantMethod;
 use esact::report::{figures, tables};
+use esact::util::fault::FaultPlan;
 use esact::util::rng::Xoshiro256pp;
 
 const USAGE: &str = "\
@@ -39,11 +40,15 @@ USAGE:
                               streaming), GET /metrics, GET /healthz; drain
                               with POST /admin/shutdown. --max-conns bounds
                               concurrent sockets (default 1024), not threads
-  esact http-check <addr> [--shutdown] [--idle-churn N]
+  esact http-check <addr> [--shutdown] [--idle-churn N] [--chaos N]
                               probe a running gateway end to end (healthz,
                               classify, generate stream, metrics); with
                               --idle-churn N, hold N idle keep-alive
                               connections and churn them while probing; with
+                              --chaos N, fire N classify requests at a
+                              gateway launched under ESACT_FAULT_* knobs and
+                              assert the tier survives (nonzero respawns,
+                              typed replica_fault answers only); with
                               --shutdown, drain it afterwards
   esact generate [n] [dense|spls] [replicas] [--kv-budget B] [--prefix P]
                  [--new T] [--sample-topk K] [--seed S]
@@ -172,6 +177,18 @@ fn serve(args: &[String]) -> Result<()> {
     }
     let mode = if pos.iter().any(|s| s.as_str() == "spls") { Mode::Spls } else { Mode::Dense };
     let nums: Vec<usize> = pos.iter().filter_map(|s| s.parse().ok()).collect();
+    // deterministic chaos knobs (ESACT_FAULT_SEED / ESACT_FAULT_RATE /
+    // ESACT_FAULT_EVERY); unset ⇒ None ⇒ injection fully off
+    let fault_plan = FaultPlan::from_env();
+    let build_server = |mode| -> Result<Server> {
+        match fault_plan.clone() {
+            Some(plan) => {
+                eprintln!("fault injection armed: {plan:?}");
+                Server::with_fault_plan(&artifact_dir(), mode, SplsConfig::default(), plan)
+            }
+            None => Server::new(&artifact_dir(), mode, SplsConfig::default()),
+        }
+    };
     if let Some(addr) = http {
         // network mode: numbers are [replicas] (no request count — the
         // gateway serves until drained)
@@ -187,7 +204,7 @@ fn serve(args: &[String]) -> Result<()> {
             .mode(mode)
             .policy(policy)
             .build()?;
-        let srv = std::sync::Arc::new(Server::new(&artifact_dir(), mode, SplsConfig::default())?);
+        let srv = std::sync::Arc::new(build_server(mode)?);
         let gateway = Gateway::start(srv, cfg)?;
         println!("esact gateway listening on http://{}", gateway.local_addr());
         println!("  POST /v1/classify   POST /v1/generate (chunked stream)");
@@ -199,7 +216,7 @@ fn serve(args: &[String]) -> Result<()> {
     }
     let n = nums.first().copied().unwrap_or(64);
     let replicas = nums.get(1).copied().unwrap_or(1).max(1);
-    let srv = Server::new(&artifact_dir(), mode, SplsConfig::default())?;
+    let srv = build_server(mode)?;
     let (tx, rx) = mpsc::channel();
     let (rtx, rrx) = mpsc::channel();
     let seq_len = srv.seq_len();
@@ -229,15 +246,18 @@ fn serve(args: &[String]) -> Result<()> {
 fn http_check(args: &[String]) -> Result<()> {
     let addr = match args.first() {
         Some(a) if !a.starts_with("--") => a.clone(),
-        _ => bail!("usage: esact http-check <addr> [--shutdown] [--idle-churn N]"),
+        _ => bail!("usage: esact http-check <addr> [--shutdown] [--idle-churn N] [--chaos N]"),
     };
     let shutdown = args.iter().any(|a| a == "--shutdown");
-    let idle_churn = args
-        .iter()
-        .position(|a| a == "--idle-churn")
-        .and_then(|i| args.get(i + 1))
-        .and_then(|s| s.parse::<usize>().ok())
-        .unwrap_or(0);
+    let flag_n = |name: &str| {
+        args.iter()
+            .position(|a| a == name)
+            .and_then(|i| args.get(i + 1))
+            .and_then(|s| s.parse::<usize>().ok())
+            .unwrap_or(0)
+    };
+    let idle_churn = flag_n("--idle-churn");
+    let chaos = flag_n("--chaos");
     let mut client =
         HttpClient::connect_retry(&addr, 50, std::time::Duration::from_millis(100))?;
 
@@ -315,6 +335,60 @@ fn http_check(args: &[String]) -> Result<()> {
             bail!("idle-churn: only {ok}/{idle_churn} held connections answered healthz");
         }
         println!("idle-churn ok: {ok}/{idle_churn} held connections still serve requests");
+    }
+
+    // 5. chaos probe (CI's chaos-smoke job): the gateway was launched
+    // with ESACT_FAULT_* knobs armed, so a burst of classify requests
+    // must trip injected replica panics. Every request must still get
+    // an HTTP answer (200, or a typed 500 `replica_fault` once a batch
+    // exhausts its retry budget), the tier must keep serving, and the
+    // supervisor's respawn counter must show the recoveries.
+    if chaos > 0 {
+        let (mut ok200, mut faulted) = (0usize, 0usize);
+        for i in 0..chaos {
+            let seq: Vec<i32> =
+                (0..seq_len).map(|j| ((j * 11 + i * 5) % vocab) as i32).collect();
+            let r = client.post_json("/v1/classify", &classify_body(&[&seq[..]]))?;
+            match r.status {
+                200 => ok200 += 1,
+                500 => {
+                    let Some(env) = r.error_envelope() else {
+                        bail!("chaos: 500 without an error envelope");
+                    };
+                    if env.code != "replica_fault" {
+                        bail!("chaos: 500 carried code {:?}, wanted replica_fault", env.code);
+                    }
+                    faulted += 1;
+                }
+                other => bail!("chaos: classify returned {other}"),
+            }
+        }
+        let health = client.get("/healthz")?;
+        if health.status != 200 {
+            bail!("chaos: healthz returned {} after the fault burst", health.status);
+        }
+        let metrics = String::from_utf8_lossy(&client.get("/metrics")?.body).to_string();
+        let counter = |name: &str| -> f64 {
+            metrics
+                .lines()
+                .find(|l| l.starts_with(name))
+                .and_then(|l| l.split_whitespace().last())
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(-1.0)
+        };
+        let respawns = counter("esact_replica_respawns_total");
+        if respawns <= 0.0 {
+            bail!("chaos: expected injected faults to force respawns, counter = {respawns}");
+        }
+        let retried = counter("esact_jobs_retried_total");
+        let job_faults = counter("esact_jobs_faulted_total");
+        if retried + job_faults <= 0.0 {
+            bail!("chaos: no retries or terminal faults recorded (retried={retried}, faulted={job_faults})");
+        }
+        println!(
+            "chaos ok: {ok200}/{chaos} served, {faulted} typed replica_fault answers, \
+             respawns={respawns} retried={retried} faulted={job_faults}"
+        );
     }
 
     if shutdown {

@@ -64,13 +64,14 @@ use anyhow::{bail, Context, Result};
 
 use crate::coordinator::{
     paged_rows, BatchPolicy, Completion, GenerateOutcome, MetricRow, Mode, ServeOutcome, Server,
-    Submission, SubmitError, Tier, TierConfig, TierHandle,
+    StreamFault, Submission, SubmitError, Tier, TierConfig, TierHandle,
 };
 use crate::decode::{DecodeConfig, Sampling};
 use crate::net::conn::{Conn, ConnState};
 use crate::net::http::{self, Request};
 use crate::net::json::{self, Json};
 use crate::net::poll::{Event, Interest, Poller, Waker};
+use crate::util::fault::FaultSite;
 use crate::util::stats::LatencyWindow;
 
 /// Gateway lifecycle states.
@@ -336,8 +337,16 @@ fn error_code(status: u16) -> &'static str {
 /// `{"error":{"code":...,"message":...}}`, plus `retry_after_ms` on
 /// 429s so clients can back off without parsing headers.
 fn error_body(status: u16, msg: &str) -> String {
+    error_body_coded(status, error_code(status), msg)
+}
+
+/// [`error_body`] with an explicit code, for statuses that map to more
+/// than one failure class: a 500 is `tier_timeout` when the deadline
+/// expired but `replica_fault` when the tier answered with a typed job
+/// fault (retry budget exhausted on faulted replicas).
+fn error_body_coded(status: u16, code: &str, msg: &str) -> String {
     let mut body = String::from("{\"error\":{\"code\":");
-    body.push_str(&Json::Str(error_code(status).to_string()).encode());
+    body.push_str(&Json::Str(code.to_string()).encode());
     body.push_str(",\"message\":");
     body.push_str(&Json::Str(msg.to_string()).encode());
     if status == 429 {
@@ -889,10 +898,43 @@ impl EventLoop {
                 Completion::Classify { id, logits, latency } => {
                     self.finish_classify(id, logits, latency)
                 }
-                Completion::Generate { id, tokens, done } => self.stream_generate(id, tokens, done),
+                Completion::ClassifyFailed { id, fault } => self.finish_classify_failed(id, fault),
+                Completion::Generate { id, tokens, done, fault } => {
+                    self.stream_generate(id, tokens, done, fault)
+                }
             }
         }
         self.completions = completions;
+    }
+
+    /// One classify id came back as a typed fault (retry budget spent
+    /// on faulted replicas): the whole parked batch fails with a 500
+    /// carrying the stable `replica_fault` code — a per-request error,
+    /// distinct from `tier_timeout` (deadline) and never a tier crash.
+    fn finish_classify_failed(&mut self, id: u64, fault: StreamFault) {
+        let Some(&token) = self.jobs.get(&id) else { return };
+        let keep = {
+            let Some(entry) = self.conns.get_mut(&token) else {
+                self.jobs.remove(&id);
+                return;
+            };
+            match mem::replace(&mut entry.pending, Pending::None) {
+                Pending::Classify { ids, keep, .. } => {
+                    for id in ids {
+                        self.jobs.remove(&id);
+                    }
+                    keep
+                }
+                other => {
+                    entry.pending = other;
+                    self.jobs.remove(&id);
+                    return;
+                }
+            }
+        };
+        self.inner.active_requests.fetch_sub(1, Ordering::SeqCst);
+        self.respond_error_coded(token, 500, fault.code, &fault.message, keep);
+        self.advance_conn(token);
     }
 
     /// One classify id finished; when its whole batch has, render the
@@ -944,8 +986,12 @@ impl EventLoop {
 
     /// One generate slice arrived: append it to the stream (empty
     /// prefill slices stay off the wire), refresh the stall deadline,
-    /// and on `done` finish the chunked framing and resume.
-    fn stream_generate(&mut self, id: u64, tokens: Vec<i32>, done: bool) {
+    /// and on `done` finish the chunked framing and resume. A stream an
+    /// unrecoverable replica fault cut short ends with an in-band error
+    /// envelope line (`replica_fault`) instead of a token line — the
+    /// HTTP status is already on the wire, so faults mid-stream travel
+    /// in-band, mirroring the `tier_timeout` stall line.
+    fn stream_generate(&mut self, id: u64, tokens: Vec<i32>, done: bool, fault: Option<StreamFault>) {
         let Some(&token) = self.jobs.get(&id) else { return };
         self.inner.stats.stream_tokens_total.fetch_add(tokens.len(), Ordering::Relaxed);
         {
@@ -956,7 +1002,14 @@ impl EventLoop {
             let Pending::Generate { deadline, keep, .. } = &mut entry.pending else { return };
             *deadline = Instant::now() + self.inner.cfg.request_timeout;
             let keep = *keep;
-            if !tokens.is_empty() || done {
+            if let Some(fault) = &fault {
+                let line = format!(
+                    "{{\"error\":{{\"code\":{},\"message\":{}}},\"done\":true}}\n",
+                    Json::Str(fault.code.to_string()).encode(),
+                    Json::Str(fault.message.clone()).encode()
+                );
+                entry.conn.enqueue(&http::render_chunk(line.as_bytes()));
+            } else if !tokens.is_empty() || done {
                 let line = format!(
                     "{{\"tokens\":{},\"done\":{}}}\n",
                     json::i32_array(&tokens),
@@ -1101,7 +1154,18 @@ impl EventLoop {
         let mut dead = false;
         {
             let Some(entry) = self.conns.get_mut(&token) else { return };
-            if entry.conn.wants_write() && entry.conn.on_writable(&mut entry.stream).is_err() {
+            // injected socket-write fault (chaos): behave exactly like
+            // a peer reset mid-write — the conn is torn down, its jobs
+            // unrouted, and the loop keeps serving everyone else
+            let injected = entry.conn.wants_write()
+                && self
+                    .inner
+                    .server
+                    .fault_injector()
+                    .is_some_and(|f| f.trip(FaultSite::GatewayWrite));
+            if injected
+                || (entry.conn.wants_write() && entry.conn.on_writable(&mut entry.stream).is_err())
+            {
                 dead = true;
             }
             if !dead {
@@ -1198,17 +1262,23 @@ impl EventLoop {
     /// Answer with the unified error envelope; 429s carry both the
     /// `Retry-After` header and the envelope's `retry_after_ms`.
     fn respond_error(&mut self, token: u64, code: u16, msg: &str, keep: bool) {
-        let body = error_body(code, msg);
-        if code == 429 {
+        self.respond_error_coded(token, code, error_code(code), msg, keep);
+    }
+
+    /// [`respond_error`](Self::respond_error) with an explicit envelope
+    /// code (see [`error_body_coded`]).
+    fn respond_error_coded(&mut self, token: u64, status: u16, code: &str, msg: &str, keep: bool) {
+        let body = error_body_coded(status, code, msg);
+        if status == 429 {
             self.respond(
                 token,
-                code,
+                status,
                 &[("Retry-After", "1"), ("Content-Type", "application/json")],
                 body.as_bytes(),
                 keep,
             );
         } else {
-            self.respond_json(token, code, &body, keep);
+            self.respond_json(token, status, &body, keep);
         }
     }
 }

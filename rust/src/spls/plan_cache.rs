@@ -460,6 +460,16 @@ impl SharedPlanCache {
         &self.shards[(fp % self.shards.len() as u64) as usize]
     }
 
+    /// Lock a shard, recovering from poisoning: the cache is shared by
+    /// every replica worker, so a worker panicking mid-insert must not
+    /// take cache hits (or the whole tier) down with it. Every cached
+    /// value is a complete, immutable plan inserted after construction
+    /// — an unwind between `get` and `put` can at worst lose the
+    /// insert, never corrupt an entry.
+    fn lock(shard: &Mutex<PlanCache>) -> std::sync::MutexGuard<'_, PlanCache> {
+        shard.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
     /// Serve the plans from cache, or run `compute` (outside any lock)
     /// and insert the result. Two replicas racing on the same cold key
     /// both compute — plans are deterministic, so the duplicate insert
@@ -473,11 +483,11 @@ impl SharedPlanCache {
         compute: impl FnOnce() -> Vec<LayerPlan>,
     ) -> Vec<LayerPlan> {
         let shard = self.shard(fingerprint(tokens, spls));
-        if let Some(plans) = shard.lock().unwrap().get_model(tokens, spls, method, n_layers) {
+        if let Some(plans) = Self::lock(shard).get_model(tokens, spls, method, n_layers) {
             return plans;
         }
         let plans = compute();
-        shard.lock().unwrap().put_model(tokens, spls, method, &plans);
+        Self::lock(shard).put_model(tokens, spls, method, &plans);
         plans
     }
 
@@ -489,9 +499,7 @@ impl SharedPlanCache {
         budget: usize,
         recent: usize,
     ) -> Option<StepPlan> {
-        self.shard(fingerprint_step(tokens, spls, budget, recent))
-            .lock()
-            .unwrap()
+        Self::lock(self.shard(fingerprint_step(tokens, spls, budget, recent)))
             .get_step(tokens, spls, budget, recent)
     }
 
@@ -504,9 +512,7 @@ impl SharedPlanCache {
         recent: usize,
         plan: StepPlan,
     ) {
-        self.shard(fingerprint_step(tokens, spls, budget, recent))
-            .lock()
-            .unwrap()
+        Self::lock(self.shard(fingerprint_step(tokens, spls, budget, recent)))
             .put_step(tokens, spls, budget, recent, plan)
     }
 
@@ -516,14 +522,14 @@ impl SharedPlanCache {
     ///
     /// [`stats`]: SharedPlanCache::stats
     pub fn shard_stats(&self) -> Vec<CacheStats> {
-        self.shards.iter().map(|s| s.lock().unwrap().stats()).collect()
+        self.shards.iter().map(|s| Self::lock(s).stats()).collect()
     }
 
     /// Aggregate counters summed across every shard.
     pub fn stats(&self) -> CacheStats {
         let mut total = CacheStats::default();
         for shard in self.shards.iter() {
-            let s = shard.lock().unwrap().stats();
+            let s = Self::lock(shard).stats();
             total.hits += s.hits;
             total.misses += s.misses;
             total.evictions += s.evictions;
@@ -793,5 +799,40 @@ mod tests {
         assert_eq!(second, plans, "hit is bit-identical to the computed plans");
         let s = cache.stats();
         assert_eq!((s.hits, s.misses), (1, 1));
+    }
+
+    #[test]
+    fn shared_cache_keeps_serving_hits_after_a_holder_panics() {
+        // a replica worker panicking while it holds a shard lock
+        // poisons the mutex; the cache must recover (the guarded value
+        // is a complete, immutable map) and keep serving warm hits to
+        // the surviving replicas instead of cascading the panic
+        let cache = SharedPlanCache::with_shards(16, 1); // one shard: the panic poisons it for sure
+        let spls = SplsConfig::default();
+        let t = toks(7, 48);
+        let plans = vec![synth_plan(3), synth_plan(4)];
+        let computed = plans.clone();
+        cache.get_or_compute(&t, &spls, QuantMethod::Hlog, 2, move || computed);
+
+        let poisoner = cache.clone();
+        let tp = t.clone();
+        let spls2 = spls;
+        let result = std::thread::spawn(move || {
+            let _hit = poisoner.get_or_compute(&tp, &spls2, QuantMethod::Hlog, 2, || {
+                unreachable!("warm key")
+            });
+            // panic while a subsequent shard lock is held
+            let _guard = SharedPlanCache::lock(poisoner.shard(fingerprint(&tp, &spls2)));
+            panic!("poison the shard under load");
+        })
+        .join();
+        assert!(result.is_err(), "the holder thread must have panicked");
+
+        let got = cache.get_or_compute(&t, &spls, QuantMethod::Hlog, 2, || {
+            panic!("post-poison lookup must still be a cache hit")
+        });
+        assert_eq!(got, plans, "post-panic hits stay bit-identical");
+        assert!(cache.stats().hits >= 2, "stats path also tolerates the poison");
+        assert!(cache.get_step(&t[..8], &spls, 32, 4).is_none(), "step path tolerates it too");
     }
 }

@@ -5,6 +5,7 @@
 
 pub mod bench;
 pub mod eswt;
+pub mod fault;
 pub mod mat;
 pub mod prop;
 pub mod rng;

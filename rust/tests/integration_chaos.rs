@@ -1,0 +1,330 @@
+//! Chaos integration: seeded fault injection kills replica workers
+//! mid-run under classify and generate load, and the tier must survive
+//! — no tier-level error, surviving streams bit-identical to a
+//! fault-free run, faulted requests answered with typed in-band
+//! `replica_fault` envelopes, and the degradation counters reconciling
+//! exactly against the fault plan's trip counts.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use esact::config::SplsConfig;
+use esact::coordinator::server::Mode;
+use esact::coordinator::{
+    BatchPolicy, Completion, GenRequest, Reply, Request, Server, StreamFault, Submission, Tier,
+    TierConfig,
+};
+use esact::decode::{DecodeConfig, Sampling};
+use esact::model;
+use esact::util::fault::{FaultPlan, FaultSite};
+use esact::util::rng::Xoshiro256pp;
+
+fn artifacts() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn classify_requests(n: usize) -> Vec<Request> {
+    let mut rng = Xoshiro256pp::new(911);
+    (0..n)
+        .map(|i| Request {
+            id: i as u64,
+            tokens: model::synth::gen_example(&mut rng, 64).0,
+            arrived: Instant::now(),
+        })
+        .collect()
+}
+
+fn gen_requests(n: usize, max_new: usize) -> Vec<GenRequest> {
+    let mut rng = Xoshiro256pp::new(77);
+    (0..n)
+        .map(|i| GenRequest {
+            id: i as u64,
+            prompt: model::synth::gen_example(&mut rng, 64).0[..12].to_vec(),
+            prefix: None,
+            max_new,
+            sampling: Sampling::TopK { k: 4, temperature: 0.8, seed: 100 + i as u64 },
+            arrived: Instant::now(),
+        })
+        .collect()
+}
+
+fn run_classify(srv: &Server, reqs: Vec<Request>, replicas: usize) -> (Vec<Reply>, esact::coordinator::ServeOutcome) {
+    let (tx, rx) = mpsc::channel();
+    let (rtx, rrx) = mpsc::channel();
+    for r in reqs {
+        tx.send(r).unwrap();
+    }
+    drop(tx);
+    let collector = std::thread::spawn(move || {
+        let mut replies: Vec<Reply> = rrx.iter().collect();
+        replies.sort_by_key(|r| r.id);
+        replies
+    });
+    let outcome = srv.serve_replicated(rx, rtx, BatchPolicy::default(), replicas).unwrap();
+    (collector.join().unwrap(), outcome)
+}
+
+/// Drain one generate run: per-id concatenated tokens plus the typed
+/// fault (if any) that ended each stream.
+fn run_generate(
+    srv: &Server,
+    reqs: Vec<GenRequest>,
+    replicas: usize,
+) -> (HashMap<u64, (Vec<i32>, Option<StreamFault>)>, esact::coordinator::GenerateOutcome) {
+    let n = reqs.len();
+    let (tx, rx) = mpsc::channel();
+    let (ctx, crx) = mpsc::channel();
+    for r in reqs {
+        tx.send(r).unwrap();
+    }
+    drop(tx);
+    let collector = std::thread::spawn(move || {
+        let mut streams: HashMap<u64, (Vec<i32>, Option<StreamFault>)> = HashMap::new();
+        let mut done = 0usize;
+        for c in crx.iter() {
+            let entry = streams.entry(c.id).or_default();
+            entry.0.extend(&c.tokens);
+            if let Some(f) = c.fault {
+                entry.1 = Some(f);
+            }
+            if c.done {
+                done += 1;
+            }
+        }
+        assert_eq!(done, n, "every stream must end with a done chunk");
+        streams
+    });
+    let outcome = srv.serve_generate(rx, ctx, DecodeConfig::default(), replicas, 3).unwrap();
+    (collector.join().unwrap(), outcome)
+}
+
+#[test]
+fn classify_tier_survives_seeded_replica_panics() {
+    let dir = artifacts();
+    let n = 16usize;
+
+    // fault-free reference: classify logits depend only on the tokens,
+    // so every surviving reply must match these bit-for-bit
+    let clean = Server::new(&dir, Mode::Dense, SplsConfig::default()).unwrap();
+    let (want, _) = run_classify(&clean, classify_requests(n), 2);
+
+    // two seeded panics: the very first classify execution and the
+    // third — with ≥2 batches plus at least one retry, both explicit
+    // triggers fire, so the expected trip count is exactly 2
+    let plan = FaultPlan::seeded(7)
+        .with_trigger(FaultSite::ClassifyJob, 0)
+        .with_trigger(FaultSite::ClassifyJob, 2);
+    let srv = Server::with_fault_plan(&dir, Mode::Dense, SplsConfig::default(), plan).unwrap();
+    let (replies, outcome) = run_classify(&srv, classify_requests(n), 2);
+
+    let trips = srv.fault_injector().unwrap().trips(FaultSite::ClassifyJob) as usize;
+    assert_eq!(trips, 2, "both explicit triggers must fire exactly once");
+    assert_eq!(replies.len(), n, "every request is answered — success or typed fault");
+
+    let mut ok = 0usize;
+    let mut faulted_replies = 0usize;
+    for r in &replies {
+        match &r.fault {
+            None => {
+                assert_eq!(
+                    r.logits,
+                    want[r.id as usize].logits,
+                    "retried request {} diverged from the fault-free run",
+                    r.id
+                );
+                ok += 1;
+            }
+            Some(f) => {
+                assert_eq!(f.code, StreamFault::REPLICA_FAULT);
+                assert!(r.logits.is_empty(), "faulted replies carry no logits");
+                faulted_replies += 1;
+            }
+        }
+    }
+    assert_eq!(ok + faulted_replies, n);
+    assert!(ok > 0, "most of the wave must survive two panics");
+
+    // metrics reconcile exactly against the plan: one respawn per trip,
+    // and each trip either retried the batch or (budget exhausted)
+    // faulted it terminally
+    assert_eq!(outcome.metrics.respawns, trips);
+    assert_eq!(outcome.metrics.retried + outcome.metrics.faulted, trips);
+    assert_eq!(outcome.metrics.requests, ok, "only successes count as served requests");
+    assert_eq!(
+        outcome.metrics.faulted == 0,
+        faulted_replies == 0,
+        "terminal faults and fault replies appear together"
+    );
+    assert_eq!(outcome.per_replica.len(), 2, "per-replica rows keep the tier shape");
+
+    // the tier object survives for the next run: no poisoned state
+    let (again, _) = run_classify(&srv, classify_requests(n), 2);
+    assert_eq!(again.len(), n);
+}
+
+#[test]
+fn faulted_decode_session_migrates_bit_identically() {
+    let dir = artifacts();
+    let max_new = 10usize;
+
+    let clean = Server::new(&dir, Mode::Dense, SplsConfig::default()).unwrap();
+    let (want, _) = run_generate(&clean, gen_requests(4, max_new), 2);
+
+    // one seeded panic on the 4th decode slice: exactly one session
+    // faults once, migrates (re-prefill + RNG fast-forward), finishes
+    let plan = FaultPlan::seeded(3).with_trigger(FaultSite::DecodeJob, 3);
+    let srv = Server::with_fault_plan(&dir, Mode::Dense, SplsConfig::default(), plan).unwrap();
+    let (got, outcome) = run_generate(&srv, gen_requests(4, max_new), 2);
+
+    let trips = srv.fault_injector().unwrap().trips(FaultSite::DecodeJob) as usize;
+    assert_eq!(trips, 1, "the single explicit trigger fires exactly once");
+    assert_eq!(got.len(), 4);
+    for (id, (tokens, fault)) in &got {
+        assert!(fault.is_none(), "first fault is within budget: no stream may abort");
+        assert_eq!(
+            tokens, &want[id].0,
+            "migrated session {id} must continue bit-identically to the fault-free run"
+        );
+    }
+    assert_eq!(outcome.metrics.migrated, 1);
+    assert_eq!(outcome.metrics.faulted, 0);
+    assert_eq!(outcome.metrics.aborted, 0);
+    assert_eq!(outcome.metrics.respawns, 1);
+    assert_eq!(outcome.metrics.sessions, 4);
+    assert_eq!(outcome.metrics.tokens, 4 * max_new, "no token lost or duplicated");
+}
+
+#[test]
+fn decode_session_aborts_in_band_after_retry_budget() {
+    let dir = artifacts();
+    // a single session on a single replica, panicking on its first two
+    // slice executions: attempt 1 faults → migrate, attempt 2 faults →
+    // terminal. The stream must end with the typed in-band abort while
+    // the run itself completes cleanly.
+    let plan = FaultPlan::seeded(5)
+        .with_trigger(FaultSite::DecodeJob, 0)
+        .with_trigger(FaultSite::DecodeJob, 1);
+    let srv = Server::with_fault_plan(&dir, Mode::Dense, SplsConfig::default(), plan).unwrap();
+    let (got, outcome) = run_generate(&srv, gen_requests(1, 8), 1);
+
+    assert_eq!(srv.fault_injector().unwrap().trips(FaultSite::DecodeJob), 2);
+    let (tokens, fault) = &got[&0];
+    assert!(tokens.is_empty(), "both attempts died before emitting a token");
+    let fault = fault.as_ref().expect("exhausted retry budget must abort in-band");
+    assert_eq!(fault.code, StreamFault::REPLICA_FAULT);
+    assert_eq!(outcome.metrics.migrated, 1, "first fault migrated");
+    assert_eq!(outcome.metrics.faulted, 1, "second fault is terminal");
+    assert_eq!(outcome.metrics.aborted, 1, "terminal fault counts as an aborted session");
+    assert_eq!(outcome.metrics.respawns, 2, "the lone replica respawned after each panic");
+    assert_eq!(outcome.metrics.tokens, 0);
+}
+
+#[test]
+fn mixed_chaos_load_on_tier_handle_reconciles_metrics() {
+    let dir = artifacts();
+    let plan = FaultPlan::seeded(11)
+        .with_trigger(FaultSite::ClassifyJob, 1)
+        .with_trigger(FaultSite::DecodeJob, 2);
+    let srv =
+        Arc::new(Server::with_fault_plan(&dir, Mode::Dense, SplsConfig::default(), plan).unwrap());
+    let tier = Tier::start(
+        Arc::clone(&srv),
+        TierConfig {
+            policy: BatchPolicy::default(),
+            decode: DecodeConfig::default(),
+            replicas: 2,
+            steps_per_slice: 2,
+            max_sessions: 4,
+            prefill_chunk: 0,
+        },
+    )
+    .unwrap();
+    let handle = tier.handle();
+    let (ntx, nrx) = mpsc::channel();
+    handle.set_notify(move || {
+        let _ = ntx.send(());
+    });
+
+    let classify = classify_requests(8);
+    let mut batch: Vec<Submission> = classify
+        .iter()
+        .map(|r| Submission::Classify { tokens: r.tokens.clone() })
+        .collect();
+    for g in gen_requests(2, 6) {
+        batch.push(Submission::Generate {
+            prompt: g.prompt,
+            prefix: None,
+            max_new: 6,
+            sampling: g.sampling,
+        });
+    }
+    let total = batch.len();
+    let ids = handle.submit(batch).unwrap();
+    assert_eq!(ids.len(), total);
+
+    let mut finished = 0usize;
+    let mut fault_answers = 0usize;
+    let mut completions = Vec::new();
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while finished < total {
+        assert!(Instant::now() < deadline, "chaos tier stalled — a panic killed the tier");
+        let _ = nrx.recv_timeout(Duration::from_millis(200));
+        handle.take_completions(&mut completions);
+        for c in completions.drain(..) {
+            match c {
+                Completion::Classify { logits, .. } => {
+                    assert!(!logits.is_empty());
+                    finished += 1;
+                }
+                Completion::ClassifyFailed { fault, .. } => {
+                    assert_eq!(fault.code, StreamFault::REPLICA_FAULT);
+                    fault_answers += 1;
+                    finished += 1;
+                }
+                Completion::Generate { done, fault, .. } => {
+                    if let Some(f) = &fault {
+                        assert_eq!(f.code, StreamFault::REPLICA_FAULT);
+                        fault_answers += 1;
+                    }
+                    if done {
+                        finished += 1;
+                    }
+                }
+            }
+        }
+    }
+    assert!(handle.idle(), "every admission slot released under chaos");
+
+    handle.close();
+    let (serve, generate) = tier.join();
+    let serve = serve.expect("classify lane must survive injected panics").metrics;
+    let generate = generate.expect("generate lane must survive injected panics").metrics;
+
+    let inj = srv.fault_injector().unwrap();
+    let classify_trips = inj.trips(FaultSite::ClassifyJob) as usize;
+    let decode_trips = inj.trips(FaultSite::DecodeJob) as usize;
+    assert_eq!(classify_trips, 1);
+    assert_eq!(decode_trips, 1);
+    // every trip respawned exactly one worker, and every trip was
+    // either recovered (retry / migration) or terminal — nothing is
+    // double-counted and nothing vanishes
+    assert_eq!(serve.respawns + generate.respawns, classify_trips + decode_trips);
+    assert_eq!(serve.retried + serve.faulted, classify_trips);
+    assert_eq!(generate.migrated + generate.faulted, decode_trips);
+    // typed fault answers appear iff a fault was terminal (a terminal
+    // classify fault answers every request of its batch, so the reply
+    // count can exceed the batch count — never the reverse)
+    assert_eq!(serve.faulted + generate.faulted == 0, fault_answers == 0);
+    assert!(fault_answers >= serve.faulted + generate.faulted);
+
+    // the live snapshot the gateway scrapes must agree with the joined
+    // outcomes on the degradation counters
+    let snap = srv.live_snapshot();
+    assert_eq!(snap.serve.respawns, serve.respawns);
+    assert_eq!(snap.generate.respawns, generate.respawns);
+    assert_eq!(snap.serve.retried, serve.retried);
+    assert_eq!(snap.generate.migrated, generate.migrated);
+}

@@ -77,7 +77,7 @@ BASELINE_GROUPS = {
     2: ("saturated",),
     3: ("decode",),
     4: ("forward", "crossover"),
-    5: ("gateway", "streaming", "conn_sweep", "slow_loris"),
+    5: ("gateway", "streaming", "conn_sweep", "slow_loris", "fault"),
     6: ("paged",),
 }
 
@@ -486,6 +486,57 @@ def check_gateway(cur: dict, base: dict) -> list:
         failures.append(
             f"slow loris: {loris['throughput_rps']:.1f} rps under pressure "
             f"< floor {loris_floor:.1f}"
+        )
+
+    # --- fault cell: goodput under injected replica panics ----------
+    fault = cur["fault"]
+    for field in (
+        "rate",
+        "requests",
+        "ok",
+        "errors",
+        "respawns",
+        "retried",
+        "goodput_frac",
+    ):
+        if field not in fault:
+            die(f"fault cell missing '{field}': {fault}")
+    bfault = base.get("fault", {})
+    frac_min = bfault.get("goodput_frac_min")
+    if frac_min is None:
+        die("baseline 'fault' group lacks 'goodput_frac_min'")
+    print(
+        f"fault cell: {fault['ok']}/{fault['requests']} ok under {fault['rate']:.0%} "
+        f"injected faults | {fault['respawns']} respawns, {fault['retried']} retried | "
+        f"goodput {fault['goodput_frac']:.2f}x fault-free (floor {frac_min:.2f})"
+    )
+    # structural (machine-speed independent): the injector must have
+    # actually killed workers, and the supervisor must have respawned
+    # them — a run with zero respawns gates nothing
+    if fault["respawns"] < 1:
+        failures.append(
+            "fault cell recorded zero replica respawns — injection never "
+            "exercised the supervisor"
+        )
+    # retried batches make faults invisible to clients: terminal errors
+    # are allowed (a batch can trip twice) but must stay rare
+    if fault["errors"] > 0.1 * fault["requests"]:
+        failures.append(
+            f"fault cell: {fault['errors']}/{fault['requests']} requests answered "
+            "with terminal faults — the retry budget is not absorbing injected panics"
+        )
+    # headline: goodput under ~1% faults must hold the committed floor
+    # of the same run's fault-free cell (same machine, same moment — no
+    # cross-machine noise in the ratio)
+    if fault["goodput_frac"] < frac_min:
+        failures.append(
+            f"goodput under injected faults collapsed to "
+            f"{fault['goodput_frac']:.2f}x fault-free (floor {frac_min:.2f})"
+        )
+    elif fault["goodput_frac"] < frac_min + 0.1:
+        print(
+            f"  ! warning: goodput frac {fault['goodput_frac']:.2f} is within "
+            "0.1 of the floor"
         )
     return failures
 

@@ -10,8 +10,10 @@ classes:
   stays above 75% of the smallest cell; idle memory within 25% of the
   cap) still exits 0 but prints the warning lines;
 * fail  — a collapsed conn-sweep floor, an idle-herd inversion, a
-  blown per-connection memory cap, an unreaped loris, and a missing
-  group each exit 1 with the matching failure text; on the paged side,
+  blown per-connection memory cap, an unreaped loris, a collapsed
+  fault-cell goodput fraction, a fault cell with zero respawns or too
+  many terminal errors, and a missing group each exit 1 with the
+  matching failure text; on the paged side,
   an aggregate-throughput inversion, a collapsed prefix hit rate, a
   sharing run that saves no blocks, a pool-size mismatch with the
   baseline, and zero copy-on-write copies each exit 1 likewise.
@@ -79,6 +81,17 @@ def healthy_report() -> dict:
             ],
         },
         "slow_loris": {"lorises": 32, "reaped": 32, "throughput_rps": 40.0},
+        "fault": {
+            "rate": 0.01,
+            "requests": 96,
+            "ok": 96,
+            "errors": 0,
+            "respawns": 4,
+            "retried": 4,
+            "throughput_rps": 42.0,
+            "fault_free_rps": 45.0,
+            "goodput_frac": 0.93,
+        },
     }
 
 
@@ -188,6 +201,33 @@ def main() -> None:
     code, out = run_gate(bad, baseline)
     problems += expect(
         "unreaped loris", code, out, 1, ["bench gate: FAIL", "idle timer is not defending"]
+    )
+
+    # fail: goodput under injected faults collapses below the floor
+    bad = healthy_report()
+    bad["fault"]["goodput_frac"] = 0.5
+    code, out = run_gate(bad, baseline)
+    problems += expect(
+        "fault goodput", code, out, 1,
+        ["bench gate: FAIL", "goodput under injected faults collapsed"],
+    )
+
+    # fail: zero respawns means injection never exercised the supervisor
+    bad = healthy_report()
+    bad["fault"]["respawns"] = 0
+    code, out = run_gate(bad, baseline)
+    problems += expect(
+        "fault no respawns", code, out, 1,
+        ["bench gate: FAIL", "never exercised the supervisor"],
+    )
+
+    # fail: the retry budget stopped absorbing injected panics
+    bad = healthy_report()
+    bad["fault"]["errors"] = 20
+    code, out = run_gate(bad, baseline)
+    problems += expect(
+        "fault terminal errors", code, out, 1,
+        ["bench gate: FAIL", "retry budget is not absorbing"],
     )
 
     # fail: report without the new groups must die loudly
