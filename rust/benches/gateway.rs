@@ -124,6 +124,26 @@ fn start_with_server(
     Ok((gw, addr))
 }
 
+/// A gateway with an explicit trace sampling knob — the tracing
+/// overhead cell compares 1-in-1 sampling against tracing disabled.
+fn start_gateway_traced(
+    replicas: usize,
+    steps_per_slice: usize,
+    trace_sample: u64,
+) -> anyhow::Result<(Gateway, String)> {
+    let dir = esact::util::artifacts_dir();
+    let srv = Arc::new(Server::new(&dir, Mode::Dense, SplsConfig::default())?);
+    let cfg = GatewayConfig::builder()
+        .replicas(replicas)
+        .max_conns(2048)
+        .steps_per_slice(steps_per_slice)
+        .trace_sample(trace_sample)
+        .build()?;
+    let gw = Gateway::start(srv, cfg)?;
+    let addr = gw.local_addr().to_string();
+    Ok((gw, addr))
+}
+
 /// Resident set of this process (gateway + held client sockets live in
 /// the same address space) in kB, from /proc/self/status.
 fn rss_kb() -> anyhow::Result<f64> {
@@ -354,6 +374,37 @@ fn main() -> anyhow::Result<()> {
         chaos.errors
     );
 
+    // --- tracing overhead: 1-in-1 spans + histograms vs disabled ----
+    // same closed-loop cell twice: once with every request traced
+    // (span ring writes + histogram observes on the hot path), once
+    // with the sampler off. The gate's BENCH_5 tracing cell fails if
+    // full tracing costs more than 10% of throughput. The traced run
+    // also scrapes its own /metrics and reports the queue-wait and
+    // execute stage medians recovered from the exported histograms.
+    println!("== HTTP classify tracing overhead (2 replicas, 4 conns) ==");
+    let trace_requests = n_per_cell * 2;
+    let (gw, addr) = start_gateway_traced(2, 4, 1)?;
+    let mut traced = closed_loop_classify(&addr, 4, trace_requests, &pool)?;
+    assert_eq!(traced.errors, 0, "traced closed loop must not error");
+    let mut probe = HttpClient::connect(&addr)?;
+    traced.scrape_stages(&mut probe)?;
+    drop(probe);
+    gw.shutdown()?;
+    let (gw, addr) = start_gateway_traced(2, 4, 0)?;
+    let untraced = closed_loop_classify(&addr, 4, trace_requests, &pool)?;
+    assert_eq!(untraced.errors, 0, "untraced closed loop must not error");
+    gw.shutdown()?;
+    let rps_on = traced.throughput_rps();
+    let rps_off = untraced.throughput_rps();
+    let overhead_frac = if rps_off > 0.0 { (rps_off - rps_on) / rps_off } else { 0.0 };
+    let queue_wait_p50_ms = traced.queue_wait_p50_ms.unwrap_or(0.0);
+    let execute_p50_ms = traced.execute_p50_ms.unwrap_or(0.0);
+    println!(
+        "  traced {rps_on:.1} rps vs untraced {rps_off:.1} rps ({:+.1}% overhead) | \
+         stage medians: queue-wait {queue_wait_p50_ms:.2} ms execute {execute_p50_ms:.2} ms",
+        overhead_frac * 100.0
+    );
+
     // --- machine-readable report for the CI gate --------------------
     if let Ok(path) = std::env::var("ESACT_BENCH_JSON") {
         let mut out = String::from("{\n  \"schema\": 5,\n");
@@ -404,8 +455,15 @@ fn main() -> anyhow::Result<()> {
             "  \"fault\": {{\"rate\": {fault_rate}, \"requests\": {fault_requests}, \
              \"ok\": {}, \"errors\": {}, \"respawns\": {respawns}, \"retried\": {retried}, \
              \"throughput_rps\": {goodput_rps:.2}, \"fault_free_rps\": {fault_free_rps:.2}, \
-             \"goodput_frac\": {goodput_frac:.3}}}",
+             \"goodput_frac\": {goodput_frac:.3}}},",
             chaos.ok, chaos.errors
+        );
+        let _ = writeln!(
+            out,
+            "  \"tracing\": {{\"requests\": {trace_requests}, \"rps_on\": {rps_on:.2}, \
+             \"rps_off\": {rps_off:.2}, \"overhead_frac\": {overhead_frac:.3}, \
+             \"queue_wait_p50_ms\": {queue_wait_p50_ms:.3}, \
+             \"execute_p50_ms\": {execute_p50_ms:.3}}}"
         );
         out.push_str("}\n");
         std::fs::write(&path, out)?;

@@ -18,6 +18,7 @@ use std::time::{Duration, Instant};
 use crate::coordinator::batcher::Batch;
 use crate::coordinator::server::{GenTask, Reply, ServerCore};
 use crate::decode::paged::PoolExhausted;
+use crate::obs::Stage;
 use crate::util::fault::FaultSite;
 
 /// One dispatched unit of work: a padded classification batch bound for
@@ -84,6 +85,11 @@ pub enum ReplicaEvent {
         stolen: bool,
         /// Execution wall time of this slice (see [`ReplicaEvent::Done::busy`]).
         busy: Duration,
+        /// Admission-to-execution wait, measured at this slice's exec
+        /// start. The leader observes only the session's *first* slice
+        /// into the queue-wait histogram (later slices re-queue by
+        /// design under continuous batching).
+        queue_wait: Duration,
     },
     /// One decode session died of a recoverable, per-session fault
     /// (paged KV pool exhaustion): the session's state dropped during
@@ -269,8 +275,14 @@ pub(crate) fn spawn_replica(
             while let Some((job, stolen)) = queue.pop(id) {
                 m.steals += usize::from(stolen);
                 let t0 = Instant::now();
+                let trace = &core.obs().trace;
                 match job {
                     Job::Classify { batch, attempt } => {
+                        // exec_start is earliest-wins, so a retried
+                        // batch keeps its first attempt's start stamp
+                        for r in &batch.requests {
+                            trace.event(r.id, Stage::ExecStart);
+                        }
                         // injected faults take the same exit as a real
                         // panic — before the executor touches anything,
                         // so the requeued batch replays bit-identically
@@ -306,6 +318,9 @@ pub(crate) fn spawn_replica(
                             Ok(Ok(replies)) => {
                                 m.batches += 1;
                                 m.requests += replies.len();
+                                for r in &replies {
+                                    trace.event(r.id, Stage::ExecEnd);
+                                }
                                 let ev = ReplicaEvent::Done {
                                     replica: id,
                                     replies,
@@ -352,6 +367,8 @@ pub(crate) fn spawn_replica(
                         // releases any paged block refs), so keep the
                         // id for the abort/fault event
                         let task_id = task.id;
+                        let queue_wait = t0.saturating_duration_since(task.arrived);
+                        trace.event(task_id, Stage::ExecStart);
                         if core.fault_injector().is_some_and(|f| f.trip(FaultSite::DecodeJob)) {
                             // drop first: the session's Drop releases
                             // its paged block refs, exactly like a real
@@ -384,12 +401,14 @@ pub(crate) fn spawn_replica(
                             Ok((task, fresh)) => {
                                 m.decode_slices += 1;
                                 m.tokens += fresh.len();
+                                trace.event(task_id, Stage::ExecEnd);
                                 let ev = ReplicaEvent::DecodeDone {
                                     replica: id,
                                     task,
                                     fresh,
                                     stolen,
                                     busy,
+                                    queue_wait,
                                 };
                                 if events.send(ev).is_err() {
                                     break;
@@ -402,6 +421,7 @@ pub(crate) fn spawn_replica(
                                 let e = panic
                                     .downcast_ref::<PoolExhausted>()
                                     .expect("guard checked the payload type");
+                                trace.event(task_id, Stage::ExecEnd);
                                 let ev = ReplicaEvent::DecodeAborted {
                                     replica: id,
                                     id: task_id,

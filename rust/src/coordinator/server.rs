@@ -36,11 +36,12 @@ use crate::decode::{
     DecodeConfig, DecodeEngine, DecodeMode, GenSession, PagedPool, PoolStats, Sampling,
 };
 use crate::model::{CompiledModelPlan, PackedModel, TinyWeights};
+use crate::obs::{Lane, LatencyHistogram, Obs, Stage};
 use crate::quant::QuantMethod;
 use crate::runtime::{Arg, ArtifactSet};
 use crate::spls::plan_cache::{CacheStats, SharedPlanCache, DEFAULT_CAPACITY};
 use crate::util::fault::{FaultInjector, FaultPlan};
-use crate::util::stats::{self, LatencyWindow};
+use crate::util::stats::LatencyWindow;
 
 /// Tokens per paged KV block (pool geometry; see `decode::paged`).
 /// Small enough that a shared prompt prefix maps mostly-full blocks,
@@ -65,6 +66,13 @@ pub struct ServeMetrics {
     pub max_latency: Duration,
     pub p50_latency: Duration,
     pub p99_latency: Duration,
+    /// Queue-wait percentiles: admission → replica pickup, per served
+    /// request (log2-bucketed, see `obs::hist`).
+    pub queue_wait_p50: Duration,
+    pub queue_wait_p99: Duration,
+    /// Execute percentiles: replica pickup → reply, per served request.
+    pub execute_p50: Duration,
+    pub execute_p99: Duration,
     pub wall: Duration,
     /// Requests rejected by `Batcher::admit` (never replied to). The
     /// in-process leader applies channel backpressure instead of
@@ -211,6 +219,10 @@ impl ServeMetrics {
             MetricRow::of("serve_replica_respawns_total", self.respawns as f64),
             MetricRow::of("serve_latency_p50_seconds", self.p50_latency.as_secs_f64()),
             MetricRow::of("serve_latency_p99_seconds", self.p99_latency.as_secs_f64()),
+            MetricRow::of("serve_queue_wait_p50_seconds", self.queue_wait_p50.as_secs_f64()),
+            MetricRow::of("serve_queue_wait_p99_seconds", self.queue_wait_p99.as_secs_f64()),
+            MetricRow::of("serve_execute_p50_seconds", self.execute_p50.as_secs_f64()),
+            MetricRow::of("serve_execute_p99_seconds", self.execute_p99.as_secs_f64()),
             MetricRow::of("serve_latency_max_seconds", self.max_latency.as_secs_f64()),
             MetricRow::of("serve_throughput_rps", self.throughput_rps()),
         ];
@@ -235,6 +247,10 @@ impl GenerateMetrics {
             MetricRow::of("generate_replica_respawns_total", self.respawns as f64),
             MetricRow::of("generate_session_p50_seconds", self.p50_session.as_secs_f64()),
             MetricRow::of("generate_session_p99_seconds", self.p99_session.as_secs_f64()),
+            MetricRow::of("generate_ttft_p50_seconds", self.ttft_p50.as_secs_f64()),
+            MetricRow::of("generate_ttft_p99_seconds", self.ttft_p99.as_secs_f64()),
+            MetricRow::of("generate_queue_wait_p50_seconds", self.queue_wait_p50.as_secs_f64()),
+            MetricRow::of("generate_queue_wait_p99_seconds", self.queue_wait_p99.as_secs_f64()),
             MetricRow::of("generate_tokens_per_sec", self.tokens_per_sec()),
         ];
         rows.extend(cache_rows(&self.plan_cache));
@@ -301,6 +317,9 @@ pub struct Reply {
     pub id: u64,
     pub logits: Vec<f32>,
     pub latency: Duration,
+    /// Admission → replica pickup for this request (zero on the fault
+    /// path, where no execution started on the final attempt).
+    pub queue_wait: Duration,
     /// Set when the request's batch exhausted its retry budget: the
     /// logits are empty and the gateway answers a 500 `replica_fault`
     /// envelope instead of a result.
@@ -378,6 +397,14 @@ pub struct GenerateMetrics {
     pub replicas: usize,
     pub p50_session: Duration,
     pub p99_session: Duration,
+    /// Time-to-first-token percentiles: admission → first fresh token
+    /// forwarded to the client.
+    pub ttft_p50: Duration,
+    pub ttft_p99: Duration,
+    /// Queue-wait percentiles: admission → first decode slice picked
+    /// up by a replica.
+    pub queue_wait_p50: Duration,
+    pub queue_wait_p99: Duration,
     /// Plan-cache counters (step hits/misses live here too).
     pub plan_cache: CacheStats,
 }
@@ -570,6 +597,11 @@ pub(crate) struct ServerCore {
     /// handle on the allocation path, and the gateway checks it on
     /// socket writes. `None` (the default) costs one branch per job.
     fault: Option<FaultInjector>,
+    /// Tier-wide observability: the trace hub (per-request stage spans)
+    /// and the shared per-lane latency histograms `/metrics` exports.
+    /// Atomic counters + sharded span buffers — replicas and leaders
+    /// record into it without coordination (`obs::`).
+    obs: Arc<Obs>,
 }
 
 impl ServerCore {
@@ -583,6 +615,11 @@ impl ServerCore {
 
     pub(crate) fn fault_injector(&self) -> Option<&FaultInjector> {
         self.fault.as_ref()
+    }
+
+    /// The tier's observability state (trace hub + latency histograms).
+    pub(crate) fn obs(&self) -> &Obs {
+        &self.obs
     }
 
     /// Poison-tolerant lock on the live tier counters: a replica panic
@@ -625,6 +662,7 @@ impl ServerCore {
         requests: &[Request],
         padding: usize,
     ) -> Result<Vec<Reply>> {
+        let t_exec = Instant::now();
         let batch = requests.len() + padding;
         let cfg = &self.weights.cfg;
         let l = cfg.seq_len;
@@ -678,6 +716,7 @@ impl ServerCore {
                 id: r.id,
                 logits: logits[i * self.n_classes..(i + 1) * self.n_classes].to_vec(),
                 latency: now.duration_since(r.arrived),
+                queue_wait: t_exec.saturating_duration_since(r.arrived),
                 fault: None,
             })
             .collect())
@@ -791,6 +830,7 @@ impl Server {
                 paged,
                 live: Mutex::new(LiveTier::default()),
                 fault,
+                obs: Arc::new(Obs::new()),
             }),
         })
     }
@@ -833,6 +873,13 @@ impl Server {
         &self.core.paged
     }
 
+    /// The tier's observability state: per-request trace spans and the
+    /// shared per-lane latency histograms (`obs::`). The gateway reads
+    /// it to render `/metrics` histograms and `/debug/trace`.
+    pub fn obs(&self) -> &Obs {
+        self.core.obs()
+    }
+
     /// Point-in-time counters of the paged KV pool (see [`paged_rows`]).
     pub fn paged_stats(&self) -> PoolStats {
         self.core.paged.stats()
@@ -869,6 +916,20 @@ impl Server {
         (serve.p50_latency, serve.p99_latency) = as_durations(live.latencies.percentiles());
         (generate.p50_session, generate.p99_session) =
             as_durations(live.session_latencies.percentiles());
+        // Stage breakdowns come from the shared lifetime histograms
+        // (exact log2-bucket quantiles, not a sliding window).
+        let obs = self.core.obs();
+        let q = |h: &LatencyHistogram| {
+            let s = h.snapshot();
+            (
+                Duration::from_secs_f64(s.quantile(0.50)),
+                Duration::from_secs_f64(s.quantile(0.99)),
+            )
+        };
+        (serve.queue_wait_p50, serve.queue_wait_p99) = q(&obs.classify.queue_wait);
+        (serve.execute_p50, serve.execute_p99) = q(&obs.classify.execute);
+        (generate.ttft_p50, generate.ttft_p99) = q(&obs.generate.ttft);
+        (generate.queue_wait_p50, generate.queue_wait_p99) = q(&obs.generate.queue_wait);
         TierSnapshot { serve, generate, per_replica: live.per_replica.clone(), uptime }
     }
 
@@ -929,10 +990,13 @@ impl Server {
         let mut batcher = Batcher::new(policy);
         let mut st = LeaderState {
             metrics: ServeMetrics { replicas: n_replicas, ..Default::default() },
-            latencies: Vec::new(),
+            total_hist: LatencyHistogram::new(),
+            queue_wait_hist: LatencyHistogram::new(),
+            execute_hist: LatencyHistogram::new(),
             in_flight: 0,
             first_error: None,
             pending_respawns: Vec::new(),
+            core: Arc::clone(&self.core),
         };
         let start = Instant::now();
         let tick = Duration::from_micros(200);
@@ -950,14 +1014,24 @@ impl Server {
             if open && batcher.pending() < max_queue {
                 match requests.recv_timeout(tick) {
                     Ok(r) => {
-                        if !batcher.admit(r) {
+                        let id = r.id;
+                        if batcher.admit(r) {
+                            self.core.obs().trace.event(id, Stage::Queued);
+                        } else {
                             st.metrics.shed += 1;
+                            self.core.obs().trace.fault(id, "shed");
+                            self.core.obs().trace.finish(id, Stage::Faulted);
                         }
                         while batcher.pending() < max_queue {
                             match requests.try_recv() {
                                 Ok(r) => {
-                                    if !batcher.admit(r) {
+                                    let id = r.id;
+                                    if batcher.admit(r) {
+                                        self.core.obs().trace.event(id, Stage::Queued);
+                                    } else {
                                         st.metrics.shed += 1;
+                                        self.core.obs().trace.fault(id, "shed");
+                                        self.core.obs().trace.finish(id, Stage::Faulted);
                                     }
                                 }
                                 Err(_) => break,
@@ -1023,6 +1097,9 @@ impl Server {
                 match batch {
                     Some(batch) => {
                         st.in_flight += 1;
+                        for r in &batch.requests {
+                            self.core.obs().trace.event(r.id, Stage::Dispatched);
+                        }
                         queue.push_least_loaded(Job::Classify { batch, attempt: 1 });
                     }
                     None => break,
@@ -1055,11 +1132,17 @@ impl Server {
             return Err(err);
         }
 
-        let LeaderState { mut metrics, mut latencies, .. } = st;
-        if !latencies.is_empty() {
-            latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
-            metrics.p50_latency = Duration::from_secs_f64(stats::percentile(&latencies, 0.50));
-            metrics.p99_latency = Duration::from_secs_f64(stats::percentile(&latencies, 0.99));
+        let LeaderState { mut metrics, total_hist, queue_wait_hist, execute_hist, .. } = st;
+        let total = total_hist.snapshot();
+        if !total.is_empty() {
+            metrics.p50_latency = Duration::from_secs_f64(total.quantile(0.50));
+            metrics.p99_latency = Duration::from_secs_f64(total.quantile(0.99));
+            let qw = queue_wait_hist.snapshot();
+            metrics.queue_wait_p50 = Duration::from_secs_f64(qw.quantile(0.50));
+            metrics.queue_wait_p99 = Duration::from_secs_f64(qw.quantile(0.99));
+            let ex = execute_hist.snapshot();
+            metrics.execute_p50 = Duration::from_secs_f64(ex.quantile(0.50));
+            metrics.execute_p99 = Duration::from_secs_f64(ex.quantile(0.99));
         }
         metrics.wall = start.elapsed();
         metrics.plan_cache = self.core.cache.stats();
@@ -1119,7 +1202,9 @@ impl Server {
         let tick = Duration::from_micros(200);
         let mut st = GenLeader {
             metrics: GenerateMetrics { replicas: n_replicas, ..Default::default() },
-            session_latencies: Vec::new(),
+            total_hist: LatencyHistogram::new(),
+            ttft_hist: LatencyHistogram::new(),
+            queue_wait_hist: LatencyHistogram::new(),
             in_flight: 0,
             first_error: None,
             slice,
@@ -1213,13 +1298,21 @@ impl Server {
         if let Some(err) = st.first_error.take() {
             return Err(err);
         }
-        let GenLeader { mut metrics, mut session_latencies, .. } = st;
-        if !session_latencies.is_empty() {
-            session_latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
-            metrics.p50_session =
-                Duration::from_secs_f64(stats::percentile(&session_latencies, 0.50));
-            metrics.p99_session =
-                Duration::from_secs_f64(stats::percentile(&session_latencies, 0.99));
+        let GenLeader { mut metrics, total_hist, ttft_hist, queue_wait_hist, .. } = st;
+        let total = total_hist.snapshot();
+        if !total.is_empty() {
+            metrics.p50_session = Duration::from_secs_f64(total.quantile(0.50));
+            metrics.p99_session = Duration::from_secs_f64(total.quantile(0.99));
+        }
+        let ttft = ttft_hist.snapshot();
+        if !ttft.is_empty() {
+            metrics.ttft_p50 = Duration::from_secs_f64(ttft.quantile(0.50));
+            metrics.ttft_p99 = Duration::from_secs_f64(ttft.quantile(0.99));
+        }
+        let qw = queue_wait_hist.snapshot();
+        if !qw.is_empty() {
+            metrics.queue_wait_p50 = Duration::from_secs_f64(qw.quantile(0.50));
+            metrics.queue_wait_p99 = Duration::from_secs_f64(qw.quantile(0.99));
         }
         metrics.wall = start.elapsed();
         metrics.plan_cache = self.core.cache.stats();
@@ -1295,11 +1388,16 @@ impl Server {
                 arrived: req.arrived,
                 emitted: Vec::new(),
                 attempts: 1,
+                queue_wait_seen: false,
             },
         );
         st.metrics.sessions += 1;
         self.core.live().generate.sessions += 1;
         st.in_flight += 1;
+        // admission and first dispatch are one step in this lane
+        let trace = &self.core.obs().trace;
+        trace.event(req.id, Stage::Queued);
+        trace.event(req.id, Stage::Dispatched);
         let steps = st.steps_for(&session);
         queue.push_least_loaded(Job::Decode {
             task: Box::new(GenTask { id: req.id, arrived: req.arrived, session }),
@@ -1311,12 +1409,19 @@ impl Server {
 /// The leader's running aggregates over replica completion events.
 struct LeaderState {
     metrics: ServeMetrics,
-    latencies: Vec<f64>,
+    /// Run-local log2 histograms backing this outcome's percentiles
+    /// (total / queue-wait / execute). The shared tier-lifetime copies
+    /// on `ServerCore::obs` are fed in the same place.
+    total_hist: LatencyHistogram,
+    queue_wait_hist: LatencyHistogram,
+    execute_hist: LatencyHistogram,
     in_flight: usize,
     first_error: Option<anyhow::Error>,
     /// Replica slots whose worker died on a fault since the last
     /// supervision pass; the leader loop joins + respawns them.
     pending_respawns: Vec<usize>,
+    /// Shared server state — the trace hub and lifetime histograms.
+    core: Arc<ServerCore>,
 }
 
 impl LeaderState {
@@ -1336,11 +1441,23 @@ impl LeaderState {
                 self.metrics.padded_slots += padding;
                 self.metrics.steals += usize::from(stolen);
                 live_lock(live).record_batch(replica, &replies, padding, stolen, busy);
+                let obs = self.core.obs();
                 for reply in replies {
                     self.metrics.requests += 1;
                     self.metrics.total_latency += reply.latency;
                     self.metrics.max_latency = self.metrics.max_latency.max(reply.latency);
-                    self.latencies.push(reply.latency.as_secs_f64());
+                    // only served requests are observed: histogram
+                    // counts reconcile with serve_requests_total
+                    let execute = reply.latency.saturating_sub(reply.queue_wait);
+                    self.total_hist.observe(reply.latency);
+                    self.queue_wait_hist.observe(reply.queue_wait);
+                    self.execute_hist.observe(execute);
+                    obs.classify.total.observe(reply.latency);
+                    obs.classify.queue_wait.observe(reply.queue_wait);
+                    obs.classify.execute.observe(execute);
+                    // classify's first output is the full response
+                    obs.classify.ttft.observe(reply.latency);
+                    obs.trace.finish(reply.id, Stage::Done);
                     // receiver may have hung up at shutdown; fine
                     let _ = out.send(reply);
                 }
@@ -1364,6 +1481,9 @@ impl LeaderState {
                             self.metrics.retried += 1;
                             live_lock(live).serve.retried += 1;
                             self.in_flight += 1;
+                            for r in &batch.requests {
+                                self.core.obs().trace.attempt(r.id);
+                            }
                             queue.push_least_loaded(Job::Classify {
                                 batch,
                                 attempt: attempt + 1,
@@ -1376,11 +1496,15 @@ impl LeaderState {
                             self.metrics.faulted += 1;
                             live_lock(live).serve.faulted += 1;
                             let now = Instant::now();
+                            let obs = self.core.obs();
                             for req in batch.requests {
+                                obs.trace.fault(req.id, StreamFault::REPLICA_FAULT);
+                                obs.trace.finish(req.id, Stage::Faulted);
                                 let _ = out.send(Reply {
                                     id: req.id,
                                     logits: Vec::new(),
                                     latency: now.duration_since(req.arrived),
+                                    queue_wait: Duration::ZERO,
                                     fault: Some(StreamFault::replica_fault(message.clone())),
                                 });
                             }
@@ -1474,12 +1598,21 @@ struct SessionRecord {
     /// Dispatch attempts consumed (1 = first dispatch); migration
     /// stops at [`MAX_JOB_ATTEMPTS`].
     attempts: u32,
+    /// Whether the session's first slice pickup has already been
+    /// observed into the queue-wait histograms (only the first counts;
+    /// later slices requeue instantly and would skew the stat).
+    queue_wait_seen: bool,
 }
 
 /// The generate leader's running state over decode-slice completions.
 struct GenLeader {
     metrics: GenerateMetrics,
-    session_latencies: Vec<f64>,
+    /// Run-local log2 histograms backing this outcome's percentiles
+    /// (session total / ttft / queue-wait); the shared tier-lifetime
+    /// copies on `ServerCore::obs` are fed in the same place.
+    total_hist: LatencyHistogram,
+    ttft_hist: LatencyHistogram,
+    queue_wait_hist: LatencyHistogram,
     in_flight: usize,
     first_error: Option<anyhow::Error>,
     slice: usize,
@@ -1526,24 +1659,53 @@ impl GenLeader {
     ) {
         self.in_flight = self.in_flight.saturating_sub(1);
         match ev {
-            ReplicaEvent::DecodeDone { replica, task, fresh, stolen, busy } => {
+            ReplicaEvent::DecodeDone { replica, task, fresh, stolen, busy, queue_wait } => {
                 self.metrics.slices += 1;
                 self.metrics.steals += usize::from(stolen);
                 self.metrics.tokens += fresh.len();
                 let done = task.session.done();
                 let session_latency = done.then(|| task.arrived.elapsed().as_secs_f64());
                 live_lock(live).record_decode(replica, fresh.len(), stolen, busy, session_latency);
-                // keep the migration record current *before* the tokens
-                // leave: a later fault re-prefills from exactly what the
-                // client has already seen
+                let obs = self.core.obs();
+                // per-slice execution time; slices are the execute
+                // unit of this lane (count = generate_slices_total)
+                obs.generate.execute.observe(busy);
                 if let Some(rec) = self.sessions.get_mut(&task.id) {
+                    if !rec.queue_wait_seen {
+                        // admission → first pickup only: later slices
+                        // requeue instantly and would skew the stat
+                        rec.queue_wait_seen = true;
+                        self.queue_wait_hist.observe(queue_wait);
+                        obs.generate.queue_wait.observe(queue_wait);
+                    }
+                    if rec.emitted.is_empty() && !fresh.is_empty() {
+                        let ttft = task.arrived.elapsed();
+                        self.ttft_hist.observe(ttft);
+                        obs.generate.ttft.observe(ttft);
+                        obs.trace.event(task.id, Stage::FirstChunk);
+                    }
+                    // keep the migration record current *before* the
+                    // tokens leave: a later fault re-prefills from
+                    // exactly what the client has already seen
                     rec.emitted.extend_from_slice(&fresh);
+                }
+                if done {
+                    // observe + finish the span *before* the chunk
+                    // leaves (mirroring the classify lane), so a
+                    // client that has seen `done` always finds the
+                    // completed span on /debug/trace and the session
+                    // in the histogram counts
+                    self.sessions.remove(&task.id);
+                    let total = task.arrived.elapsed();
+                    self.total_hist.observe(total);
+                    obs.generate.total.observe(total);
+                    let (prefill, decode) = task.session.phase_times();
+                    obs.trace.phases(task.id, prefill, decode);
+                    obs.trace.finish(task.id, Stage::Done);
                 }
                 // receiver may have hung up at shutdown; fine
                 let _ = out.send(GenChunk { id: task.id, tokens: fresh, done, fault: None });
                 if done {
-                    self.sessions.remove(&task.id);
-                    self.session_latencies.push(task.arrived.elapsed().as_secs_f64());
                     if let Some(n) = self.reservations.remove(&task.id) {
                         self.pool.release(n);
                     }
@@ -1559,6 +1721,9 @@ impl GenLeader {
             // back, and count the abort
             ReplicaEvent::DecodeAborted { replica, id, stolen, busy, reason: _ } => {
                 self.metrics.aborted += 1;
+                let obs = self.core.obs();
+                obs.trace.fault(id, "decode_aborted");
+                obs.trace.finish(id, Stage::Faulted);
                 self.sessions.remove(&id);
                 if let Some(n) = self.reservations.remove(&id) {
                     self.pool.release(n);
@@ -1595,6 +1760,9 @@ impl GenLeader {
                         if terminal {
                             self.metrics.aborted += 1;
                             self.metrics.faulted += 1;
+                            let obs = self.core.obs();
+                            obs.trace.fault(id, StreamFault::REPLICA_FAULT);
+                            obs.trace.finish(id, Stage::Faulted);
                             self.sessions.remove(&id);
                             if let Some(n) = self.reservations.remove(&id) {
                                 self.pool.release(n);
@@ -1620,6 +1788,7 @@ impl GenLeader {
                             };
                             self.metrics.migrated += 1;
                             live_lock(live).generate.migrated += 1;
+                            self.core.obs().trace.migrated(id);
                             self.in_flight += 1;
                             let steps = self.steps_for(&task.session);
                             queue.push_least_loaded(Job::Decode { task, steps });
@@ -1751,6 +1920,10 @@ pub struct TierConfig {
     /// Steps per dispatch while a session is prefilling its prompt
     /// (chunked prefill); 0 falls back to `steps_per_slice`.
     pub prefill_chunk: usize,
+    /// Trace-span sampling: record a span for 1-in-N submissions
+    /// (1 = every request, 0 = tracing off). Latency histograms are
+    /// never sampled — this knob only bounds span bookkeeping.
+    pub trace_sample: u64,
 }
 
 /// The submit/complete face of a running tier. Frontends hold this:
@@ -1768,6 +1941,9 @@ pub struct TierHandle {
     next_id: AtomicU64,
     completions: Mutex<VecDeque<Completion>>,
     notify: Mutex<Option<Box<dyn Fn() + Send + Sync>>>,
+    /// The tier's observability state: `submit` mints each job's trace
+    /// span here (in-process callers get spans without a gateway).
+    obs: Arc<Obs>,
 }
 
 impl TierHandle {
@@ -1776,6 +1952,7 @@ impl TierHandle {
         generate_tx: mpsc::Sender<GenRequest>,
         classify_bound: usize,
         generate_bound: usize,
+        obs: Arc<Obs>,
     ) -> TierHandle {
         TierHandle {
             classify_tx: Mutex::new(Some(classify_tx)),
@@ -1787,6 +1964,7 @@ impl TierHandle {
             next_id: AtomicU64::new(0),
             completions: Mutex::new(VecDeque::new()),
             notify: Mutex::new(None),
+            obs,
         }
     }
 
@@ -1867,6 +2045,14 @@ impl TierHandle {
         let (mut sent_classify, mut sent_generate) = (0usize, 0usize);
         let mut ok = true;
         for (sub, id) in batch.into_iter().zip(&ids) {
+            // mint the job's trace span at admission (the gateway
+            // backdates accepted/parsed onto it afterwards; in-process
+            // callers get spans that start here)
+            let lane = match sub {
+                Submission::Classify { .. } => Lane::Classify,
+                Submission::Generate { .. } => Lane::Generate,
+            };
+            self.obs.trace.begin(*id, lane, Stage::Admitted);
             match sub {
                 Submission::Classify { tokens } => {
                     ok = ctx
@@ -1956,11 +2142,13 @@ impl Tier {
         let (crep_tx, crep_rx) = mpsc::channel::<Reply>();
         let (greq_tx, greq_rx) = mpsc::channel();
         let (gchk_tx, gchk_rx) = mpsc::channel::<GenChunk>();
+        server.obs().trace.set_sample_every(cfg.trace_sample);
         let handle = Arc::new(TierHandle::new(
             creq_tx,
             greq_tx,
             cfg.policy.max_queue,
             cfg.max_sessions,
+            Arc::clone(&server.core.obs),
         ));
 
         let srv = Arc::clone(&server);
@@ -2675,7 +2863,9 @@ mod tests {
         assert!(pool.try_reserve(need));
         let mut st = GenLeader {
             metrics: GenerateMetrics::default(),
-            session_latencies: Vec::new(),
+            total_hist: LatencyHistogram::new(),
+            ttft_hist: LatencyHistogram::new(),
+            queue_wait_hist: LatencyHistogram::new(),
             in_flight: 1,
             first_error: None,
             slice: 4,
@@ -2807,6 +2997,7 @@ mod tests {
                 steps_per_slice: 2,
                 max_sessions: 2,
                 prefill_chunk: 0,
+                trace_sample: 1,
             },
         )
         .unwrap();
@@ -2880,5 +3071,38 @@ mod tests {
         assert_eq!(classify.metrics.requests, 2);
         assert_eq!(generate.metrics.sessions, 1);
         assert_eq!(generate.metrics.tokens, 3);
+
+        // the tier recorded spans + histograms along the way: one span
+        // per submission, one histogram sample per served request /
+        // session, exec stages stamped by the replica worker
+        let obs = srv.obs();
+        assert_eq!(obs.trace.completed(), 3, "one completed span per submission");
+        assert_eq!(obs.classify.total.snapshot().count, 2);
+        assert_eq!(obs.classify.queue_wait.snapshot().count, 2);
+        assert_eq!(obs.classify.execute.snapshot().count, 2);
+        assert_eq!(obs.generate.total.snapshot().count, 1);
+        assert_eq!(obs.generate.ttft.snapshot().count, 1);
+        assert_eq!(obs.generate.queue_wait.snapshot().count, 1);
+        assert_eq!(obs.generate.execute.snapshot().count, generate.metrics.slices as u64);
+        let spans = obs.trace.recent(8);
+        assert_eq!(spans.len(), 3);
+        for span in &spans {
+            assert!(span.fault.is_none(), "clean run, no faulted spans");
+            let order: Vec<u64> = [
+                Stage::Admitted,
+                Stage::Queued,
+                Stage::Dispatched,
+                Stage::ExecStart,
+                Stage::ExecEnd,
+                Stage::Done,
+            ]
+            .iter()
+            .map(|s| span.stage(*s).expect("full pipeline stamped"))
+            .collect();
+            assert!(order.windows(2).all(|w| w[0] <= w[1]), "stages monotone: {order:?}");
+        }
+        let gen_span = spans.iter().find(|s| s.id == ids[2]).expect("generate span retained");
+        assert!(gen_span.stage(Stage::FirstChunk).is_some(), "ttft stage stamped");
+        assert!(gen_span.prefill_ns.is_some() && gen_span.decode_ns.is_some());
     }
 }

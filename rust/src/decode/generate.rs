@@ -5,6 +5,7 @@
 //! tier's continuous decode batching dispatches onto the replica pool.
 
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use crate::decode::paged::{PagedDecodeState, PagedPool};
 use crate::decode::step::{DecodeConfig, DecodeEngine, DecodeState, DecodeStats};
@@ -116,6 +117,11 @@ pub struct GenSession {
     generated: Vec<i32>,
     max_new: usize,
     sampler: Sampler,
+    /// Wall time spent pushing prompt tokens (ESACT-style stage
+    /// accounting, surfaced per request in trace spans).
+    prefill_time: Duration,
+    /// Wall time spent sampling + pushing generated tokens.
+    decode_time: Duration,
 }
 
 impl GenSession {
@@ -135,6 +141,8 @@ impl GenSession {
             generated: Vec::with_capacity(max_new),
             max_new,
             sampler: Sampler::new(sampling),
+            prefill_time: Duration::ZERO,
+            decode_time: Duration::ZERO,
         }
     }
 
@@ -165,6 +173,8 @@ impl GenSession {
             generated: Vec::with_capacity(max_new),
             max_new,
             sampler: Sampler::new(sampling),
+            prefill_time: Duration::ZERO,
+            decode_time: Duration::ZERO,
         }
     }
 
@@ -234,10 +244,12 @@ impl GenSession {
             if self.done() {
                 break;
             }
+            let t0 = Instant::now();
             if self.fed < self.prompt.len() {
                 let t = self.prompt[self.fed];
                 self.fed += 1;
                 self.last_logits = Some(self.state.push(t));
+                self.prefill_time += t0.elapsed();
             } else {
                 let logits = self.last_logits.as_ref().expect("prefill precedes sampling");
                 let t = self.sampler.sample(logits);
@@ -246,9 +258,18 @@ impl GenSession {
                 if !self.done() {
                     self.last_logits = Some(self.state.push(t));
                 }
+                self.decode_time += t0.elapsed();
             }
         }
         out
+    }
+
+    /// Cumulative wall time spent in the two execution phases —
+    /// `(prefill, decode)` — across every slice this session has run.
+    /// Migration resets the split (the rebuilt session re-prefills),
+    /// which matches what its replacement replica actually paid.
+    pub fn phase_times(&self) -> (Duration, Duration) {
+        (self.prefill_time, self.decode_time)
     }
 }
 
@@ -428,6 +449,21 @@ mod tests {
             emitted.extend(migrated.run_steps(4));
         }
         assert_eq!(emitted, want, "migration must not change the stream");
+    }
+
+    #[test]
+    fn phase_times_split_prefill_from_decode() {
+        let eng = engine();
+        let p = prompt(7, 8);
+        let mut s =
+            GenSession::new(Arc::clone(&eng), DecodeConfig::default(), p, 6, Sampling::Greedy);
+        assert_eq!(s.phase_times(), (Duration::ZERO, Duration::ZERO));
+        while !s.done() {
+            s.run_steps(3);
+        }
+        let (prefill, decode) = s.phase_times();
+        assert!(prefill > Duration::ZERO, "8 prompt pushes were timed");
+        assert!(decode > Duration::ZERO, "6 sampled steps were timed");
     }
 
     #[test]

@@ -51,6 +51,7 @@ pub mod decode;
 pub mod energy;
 pub mod model;
 pub mod net;
+pub mod obs;
 pub mod quant;
 pub mod report;
 pub mod runtime;

@@ -16,6 +16,7 @@ use esact::decode::{DecodeConfig, DecodeMode, Sampling};
 use esact::model;
 use esact::net::client::{classify_body, generate_body, HttpClient, IdleConns};
 use esact::net::{Gateway, GatewayConfig};
+use esact::obs::prom;
 use esact::quant::QuantMethod;
 use esact::report::{figures, tables};
 use esact::util::fault::FaultPlan;
@@ -328,6 +329,64 @@ fn http_check(args: &[String]) -> Result<()> {
         }
     }
     println!("metrics ok: {} lines", text.lines().count());
+
+    // 4b. parse the full exposition with the in-repo parser: every
+    // sample name must be Prometheus-legal and covered by a # TYPE,
+    // and all eight per-lane latency histograms must be well-formed
+    let scrape = prom::parse(&text)
+        .map_err(|e| anyhow::anyhow!("/metrics is not valid exposition: {e}"))?;
+    for s in &scrape.samples {
+        if !prom::valid_metric_name(&s.name) {
+            bail!("metrics sample has an illegal name: {:?}", s.name);
+        }
+        if scrape.type_of(&s.name).is_none() {
+            bail!("metrics sample {} has no # TYPE declaration", s.name);
+        }
+    }
+    for lane in ["classify", "generate"] {
+        for stem in ["latency", "queue_wait", "execute", "ttft"] {
+            let name = format!("esact_{lane}_{stem}_seconds");
+            let h = scrape
+                .histogram(&name)
+                .ok_or_else(|| anyhow::anyhow!("metrics missing histogram {name}"))?;
+            if !h.is_well_formed() {
+                bail!("histogram {name} is malformed (non-monotone or unclosed buckets)");
+            }
+        }
+    }
+    // faulted replies are never observed, so the classify histogram
+    // count must reconcile exactly with requests served
+    let served = scrape.value("esact_serve_requests_total").unwrap_or(-1.0);
+    let lat = scrape.histogram("esact_classify_latency_seconds").expect("checked above");
+    if lat.count as f64 != served {
+        bail!("classify histogram count {} != serve_requests_total {served}", lat.count);
+    }
+    println!("exposition ok: {} samples, 8 histograms well-formed", scrape.samples.len());
+
+    // 4c. /debug/trace: the spans for the probes above must be there
+    // with monotone stage timestamps (faulted spans are fine — the
+    // chaos job launches the gateway with fault injection armed)
+    let tr = client.get("/debug/trace?n=8")?;
+    if tr.status != 200 {
+        bail!("/debug/trace returned {}", tr.status);
+    }
+    let doc = tr.json()?;
+    let completed = doc.get("completed").and_then(|v| v.as_usize()).unwrap_or(0);
+    let spans = doc.get("spans").and_then(|s| s.as_arr()).map(<[_]>::to_vec).unwrap_or_default();
+    if completed < 3 || spans.is_empty() {
+        bail!("/debug/trace shows {completed} completed spans ({} returned)", spans.len());
+    }
+    for span in &spans {
+        let stages = span.get("stages").ok_or_else(|| anyhow::anyhow!("span without stages"))?;
+        let ts: Vec<usize> = ["admitted", "queued", "dispatched", "exec_start"]
+            .iter()
+            .filter_map(|s| stages.get(s).and_then(|v| v.as_usize()))
+            .collect();
+        if ts.windows(2).any(|w| w[0] > w[1]) {
+            bail!("span stages out of order: {ts:?}");
+        }
+    }
+    println!("trace ok: {completed} spans completed, {} returned", spans.len());
 
     if let Some(mut herd) = herd.take() {
         let ok = herd.probe_all()?;

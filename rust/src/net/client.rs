@@ -588,9 +588,36 @@ pub struct LoadReport {
     pub wall: Duration,
     /// Client-side latency of each OK request, seconds (sorted).
     pub latencies: Vec<f64>,
+    /// Server-side median queue wait (ms), scraped from the gateway's
+    /// classify histograms by [`LoadReport::scrape_stages`] — `None`
+    /// until scraped. Lets bench cells assert *where* time went.
+    pub queue_wait_p50_ms: Option<f64>,
+    /// Server-side median execute time (ms); see `queue_wait_p50_ms`.
+    pub execute_p50_ms: Option<f64>,
 }
 
 impl LoadReport {
+    /// Fill the per-stage medians from the gateway's `/metrics`
+    /// histograms (`esact_classify_queue_wait_seconds` /
+    /// `esact_classify_execute_seconds`), parsed with the in-repo
+    /// Prometheus text parser. Call once after the run completes so
+    /// the scrape reflects every request this report counted.
+    pub fn scrape_stages(&mut self, client: &mut HttpClient) -> Result<()> {
+        let resp = client.get("/metrics")?;
+        let text = std::str::from_utf8(&resp.body).context("metrics body is not UTF-8")?;
+        let scrape = crate::obs::prom::parse(text)
+            .map_err(|e| anyhow::anyhow!("bad /metrics exposition: {e}"))?;
+        self.queue_wait_p50_ms = scrape
+            .histogram("esact_classify_queue_wait_seconds")
+            .filter(|h| h.count > 0)
+            .map(|h| h.quantile(0.5) * 1e3);
+        self.execute_p50_ms = scrape
+            .histogram("esact_classify_execute_seconds")
+            .filter(|h| h.count > 0)
+            .map(|h| h.quantile(0.5) * 1e3);
+        Ok(())
+    }
+
     pub fn throughput_rps(&self) -> f64 {
         if self.wall.is_zero() {
             0.0

@@ -20,6 +20,12 @@
 //! *completed* request (connect time for a fresh socket), so a peer
 //! trickling header bytes forever — the slow-loris shape — is reaped
 //! by the same expiry as a silent one.
+//!
+//! Tracing: the `Reading → Dispatched` transition (a complete request
+//! taken off the socket) is the moment the gateway stamps a span's
+//! `accepted` stage; this state machine stays clock- and span-free by
+//! design (sans-io), so the gateway backdates stages onto the span ids
+//! the tier mints at submit (`crate::obs::span`).
 
 use std::io::{self, Read, Write};
 use std::time::{Duration, Instant};

@@ -28,6 +28,8 @@
 //!   (one source of truth), plus gateway-level counters and per-shard
 //!   plan-cache stats.
 //! * `GET /healthz` — readiness (flips to `503 draining` on shutdown).
+//! * `GET /debug/trace?n=` — the last N completed request trace spans
+//!   (stage timestamps, retry lineage) as JSON, newest first.
 //! * `POST /admin/shutdown` — begin a graceful drain remotely.
 //!
 //! **Backpressure is wired to the real bound**: [`TierHandle`] admits
@@ -71,6 +73,7 @@ use crate::net::conn::{Conn, ConnState};
 use crate::net::http::{self, Request};
 use crate::net::json::{self, Json};
 use crate::net::poll::{Event, Interest, Poller, Waker};
+use crate::obs::prom::{help_for, PromWriter};
 use crate::util::fault::FaultSite;
 use crate::util::stats::LatencyWindow;
 
@@ -102,6 +105,11 @@ const DRAIN_GRACE: Duration = Duration::from_millis(100);
 /// shape as the HTTP-level errors, delivered as the final NDJSON line.
 const STREAM_STALL_LINE: &str =
     "{\"error\":{\"code\":\"tier_timeout\",\"message\":\"decode tier stalled\"},\"done\":true}\n";
+
+/// Default 429 back-off hint (milliseconds) — used by
+/// [`GatewayConfig`] and by error bodies rendered outside a request
+/// context (before the config is reachable).
+const DEFAULT_RETRY_AFTER_MS: u64 = 1000;
 
 /// Gateway deployment knobs. Build via [`GatewayConfig::builder`],
 /// which validates every bound before the gateway can bind a socket.
@@ -138,6 +146,14 @@ pub struct GatewayConfig {
     pub idle_timeout: Duration,
     /// Kernel events decoded per `epoll_wait` call. Default 256.
     pub max_events: usize,
+    /// Back-off hint carried by 429 responses: the `retry_after_ms`
+    /// envelope field verbatim, and the `Retry-After` header rounded
+    /// up to whole seconds. Default 1000.
+    pub retry_after_ms: u64,
+    /// Trace-span sampling: record a span for 1-in-N requests (1 =
+    /// every request, 0 = tracing off). Latency histograms are never
+    /// sampled. Default 1.
+    pub trace_sample: u64,
 }
 
 impl Default for GatewayConfig {
@@ -156,6 +172,8 @@ impl Default for GatewayConfig {
             request_timeout: Duration::from_secs(30),
             idle_timeout: Duration::from_secs(10),
             max_events: 256,
+            retry_after_ms: DEFAULT_RETRY_AFTER_MS,
+            trace_sample: 1,
         }
     }
 }
@@ -243,6 +261,16 @@ impl GatewayConfigBuilder {
         self
     }
 
+    pub fn retry_after_ms(mut self, ms: u64) -> Self {
+        self.cfg.retry_after_ms = ms;
+        self
+    }
+
+    pub fn trace_sample(mut self, n: u64) -> Self {
+        self.cfg.trace_sample = n;
+        self
+    }
+
     /// Validate every knob. Zero-valued bounds are configuration bugs
     /// (a `max_conns` of 0 accepts nothing; a zero timeout reaps every
     /// socket on the first tick) and are refused here, not discovered
@@ -275,6 +303,9 @@ impl GatewayConfigBuilder {
         }
         if cfg.max_events == 0 {
             bail!("max_events must be >= 1");
+        }
+        if cfg.retry_after_ms == 0 {
+            bail!("retry_after_ms must be >= 1 (a zero hint tells clients to hammer the gateway)");
         }
         Ok(cfg)
     }
@@ -337,20 +368,21 @@ fn error_code(status: u16) -> &'static str {
 /// `{"error":{"code":...,"message":...}}`, plus `retry_after_ms` on
 /// 429s so clients can back off without parsing headers.
 fn error_body(status: u16, msg: &str) -> String {
-    error_body_coded(status, error_code(status), msg)
+    error_body_coded(status, error_code(status), msg, DEFAULT_RETRY_AFTER_MS)
 }
 
 /// [`error_body`] with an explicit code, for statuses that map to more
 /// than one failure class: a 500 is `tier_timeout` when the deadline
 /// expired but `replica_fault` when the tier answered with a typed job
-/// fault (retry budget exhausted on faulted replicas).
-fn error_body_coded(status: u16, code: &str, msg: &str) -> String {
+/// fault (retry budget exhausted on faulted replicas). The configured
+/// `retry_after_ms` is rendered into 429 envelopes only.
+fn error_body_coded(status: u16, code: &str, msg: &str, retry_after_ms: u64) -> String {
     let mut body = String::from("{\"error\":{\"code\":");
     body.push_str(&Json::Str(code.to_string()).encode());
     body.push_str(",\"message\":");
     body.push_str(&Json::Str(msg.to_string()).encode());
     if status == 429 {
-        body.push_str(",\"retry_after_ms\":1000");
+        body.push_str(&format!(",\"retry_after_ms\":{retry_after_ms}"));
     }
     body.push_str("}}");
     body
@@ -459,6 +491,7 @@ impl Gateway {
                 steps_per_slice: cfg.steps_per_slice,
                 max_sessions: cfg.max_sessions,
                 prefill_chunk: cfg.prefill_chunk,
+                trace_sample: cfg.trace_sample,
             },
         )?;
         let handle = tier.handle();
@@ -760,12 +793,22 @@ impl EventLoop {
     fn dispatch(&mut self, token: u64, req: Request) {
         self.inner.stats.http_requests_total.fetch_add(1, Ordering::Relaxed);
         let keep = req.keep_alive();
-        const ROUTES: [&str; 5] =
-            ["/healthz", "/metrics", "/v1/classify", "/v1/generate", "/admin/shutdown"];
+        const ROUTES: [&str; 6] = [
+            "/healthz",
+            "/metrics",
+            "/debug/trace",
+            "/v1/classify",
+            "/v1/generate",
+            "/admin/shutdown",
+        ];
         match (req.method.as_str(), req.path()) {
             ("GET", "/healthz") => {
                 let (code, body) = healthz_body(&self.inner);
                 self.respond_json(token, code, &body, keep);
+            }
+            ("GET", "/debug/trace") => {
+                let body = trace_body(&self.inner, &req);
+                self.respond_json(token, 200, &body, keep);
             }
             ("GET", "/metrics") => {
                 let body = metrics_body(&self.inner);
@@ -794,10 +837,14 @@ impl EventLoop {
     /// parks (`Pending::Classify`) until every id completes.
     fn dispatch_classify(&mut self, token: u64, req: &Request, keep: bool) {
         let t0 = Instant::now();
+        // span ids are minted at submit; backdate the gateway stages
+        // (request accepted, body parsed) onto them afterwards
+        let t_accept = self.inner.server.obs().trace.now_ns();
         let batch = match parse_classify_body(&self.inner, &req.body) {
             Ok(batch) => batch,
             Err(msg) => return self.respond_error(token, 400, &msg, keep),
         };
+        let t_parsed = self.inner.server.obs().trace.now_ns();
         if self.inner.state() != RUNNING {
             return self.respond_error(token, 503, "gateway is draining", keep);
         }
@@ -813,7 +860,10 @@ impl EventLoop {
             batch.into_iter().map(|tokens| Submission::Classify { tokens }).collect();
         match self.inner.tier.submit(subs) {
             Ok(ids) => {
+                let trace = &self.inner.server.obs().trace;
                 for &id in &ids {
+                    trace.event_at(id, crate::obs::Stage::Accepted, t_accept);
+                    trace.event_at(id, crate::obs::Stage::Parsed, t_parsed);
                     self.jobs.insert(id, token);
                 }
                 self.inner.active_requests.fetch_add(1, Ordering::SeqCst);
@@ -841,11 +891,13 @@ impl EventLoop {
     /// head goes on the wire and the connection parks
     /// (`Pending::Generate`), chunks appending as the tier produces.
     fn dispatch_generate(&mut self, token: u64, req: &Request, keep: bool) {
+        let t_accept = self.inner.server.obs().trace.now_ns();
         let (prompt, prefix, max_new, sampling) = match parse_generate_body(&self.inner, &req.body)
         {
             Ok(parsed) => parsed,
             Err(msg) => return self.respond_error(token, 400, &msg, keep),
         };
+        let t_parsed = self.inner.server.obs().trace.now_ns();
         if self.inner.state() != RUNNING {
             return self.respond_error(token, 503, "gateway is draining", keep);
         }
@@ -868,6 +920,9 @@ impl EventLoop {
         {
             Ok(ids) => {
                 let id = ids[0];
+                let trace = &self.inner.server.obs().trace;
+                trace.event_at(id, crate::obs::Stage::Accepted, t_accept);
+                trace.event_at(id, crate::obs::Stage::Parsed, t_parsed);
                 self.inner.stats.streams_total.fetch_add(1, Ordering::Relaxed);
                 self.inner.stats.record_status(200);
                 self.jobs.insert(id, token);
@@ -1268,12 +1323,16 @@ impl EventLoop {
     /// [`respond_error`](Self::respond_error) with an explicit envelope
     /// code (see [`error_body_coded`]).
     fn respond_error_coded(&mut self, token: u64, status: u16, code: &str, msg: &str, keep: bool) {
-        let body = error_body_coded(status, code, msg);
+        let retry_ms = self.inner.cfg.retry_after_ms;
+        let body = error_body_coded(status, code, msg, retry_ms);
         if status == 429 {
+            // header granularity is whole seconds — round up so a
+            // sub-second hint never becomes "retry immediately"
+            let retry_after = ((retry_ms + 999) / 1000).to_string();
             self.respond(
                 token,
                 status,
-                &[("Retry-After", "1"), ("Content-Type", "application/json")],
+                &[("Retry-After", &retry_after), ("Content-Type", "application/json")],
                 body.as_bytes(),
                 keep,
             );
@@ -1302,13 +1361,13 @@ fn healthz_body(inner: &Inner) -> (u16, String) {
 
 /// Render the Prometheus exposition: tier rows straight from
 /// [`Server::live_snapshot`] (the same [`MetricRow`]s the CLI prints),
-/// then gateway-level counters, then per-shard plan-cache stats.
+/// then gateway-level counters, per-shard plan-cache stats, and the
+/// per-lane latency histograms (`_bucket`/`_sum`/`_count`). Every
+/// family carries `# HELP`/`# TYPE` through [`PromWriter`].
 fn metrics_body(inner: &Inner) -> String {
-    let mut out = String::new();
+    let mut w = PromWriter::new("esact_");
     for row in inner.server.live_snapshot().rows() {
-        out.push_str("esact_");
-        out.push_str(&row.to_string());
-        out.push('\n');
+        w.scalar(row.name, &row.to_string(), help_for(row.name));
     }
     let s = &inner.stats;
     let http_lat = inner.classify_latencies.lock().unwrap().percentiles();
@@ -1363,14 +1422,10 @@ fn metrics_body(inner: &Inner) -> String {
         MetricRow::of("gateway_classify_http_p99_seconds", http_lat.1),
     ];
     for row in gw_rows {
-        out.push_str("esact_");
-        out.push_str(&row.to_string());
-        out.push('\n');
+        w.scalar(row.name, &row.to_string(), help_for(row.name));
     }
     for row in paged_rows(&inner.server.paged_stats()) {
-        out.push_str("esact_");
-        out.push_str(&row.to_string());
-        out.push('\n');
+        w.scalar(row.name, &row.to_string(), help_for(row.name));
     }
     for (i, shard) in inner.server.plan_cache_shard_stats().iter().enumerate() {
         let rows = [
@@ -1385,12 +1440,52 @@ fn metrics_body(inner: &Inner) -> String {
             ),
         ];
         for row in rows {
-            out.push_str("esact_");
-            out.push_str(&row.to_string());
-            out.push('\n');
+            w.scalar(row.name, &row.to_string(), help_for(row.name));
         }
     }
-    out
+    let obs = inner.server.obs();
+    for (lane, hists) in [("classify", &obs.classify), ("generate", &obs.generate)] {
+        let families = [
+            ("latency", &hists.total),
+            ("queue_wait", &hists.queue_wait),
+            ("execute", &hists.execute),
+            ("ttft", &hists.ttft),
+        ];
+        for (stem, h) in families {
+            let name = format!("{lane}_{stem}_seconds");
+            w.histogram(&name, &h.snapshot(), help_for(&name));
+        }
+    }
+    let completed = obs.trace.completed();
+    w.scalar(
+        "trace_spans_completed_total",
+        &format!("trace_spans_completed_total {completed}"),
+        help_for("trace_spans_completed_total"),
+    );
+    w.into_string()
+}
+
+/// Render `GET /debug/trace`: the last `n` (default 32, cap 256)
+/// completed spans newest-first, plus the all-time completed count.
+fn trace_body(inner: &Inner, req: &Request) -> String {
+    let n = req
+        .query_param("n")
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(32)
+        .min(256);
+    let trace = &inner.server.obs().trace;
+    let spans = trace.recent(n);
+    let mut body = String::from("{\"spans\":[");
+    for (i, span) in spans.iter().enumerate() {
+        if i > 0 {
+            body.push(',');
+        }
+        body.push_str(&span.to_json());
+    }
+    body.push_str("],\"completed\":");
+    body.push_str(&trace.completed().to_string());
+    body.push('}');
+    body
 }
 
 /// Validate and extract the classify batch: `{"tokens": [[...], ...]}`
@@ -1564,6 +1659,9 @@ mod tests {
         assert!(GatewayConfig::builder().max_events(0).build().is_err());
         assert!(GatewayConfig::builder().request_timeout(Duration::ZERO).build().is_err());
         assert!(GatewayConfig::builder().idle_timeout(Duration::ZERO).build().is_err());
+        assert!(GatewayConfig::builder().retry_after_ms(0).build().is_err());
+        // trace_sample 0 is valid: it means tracing off, not a wedge
+        assert!(GatewayConfig::builder().trace_sample(0).build().is_ok());
         let cfg = GatewayConfig::builder()
             .addr("127.0.0.1:0")
             .max_conns(64)
@@ -1575,6 +1673,8 @@ mod tests {
         // untouched knobs keep the documented defaults
         assert_eq!(cfg.max_events, 256);
         assert_eq!(cfg.request_timeout, Duration::from_secs(30));
+        assert_eq!(cfg.retry_after_ms, 1000);
+        assert_eq!(cfg.trace_sample, 1);
     }
 
     #[test]
@@ -1588,6 +1688,12 @@ mod tests {
         let err = doc.get("error").unwrap();
         assert_eq!(err.get("code").unwrap().as_str(), Some("not_found"));
         assert!(err.get("retry_after_ms").is_none(), "only 429 carries the hint");
+        // the hint tracks the configured value, not a baked-in constant
+        let doc = Json::parse(&error_body_coded(429, "saturated", "busy", 250)).unwrap();
+        assert_eq!(
+            doc.get("error").unwrap().get("retry_after_ms").unwrap().as_usize(),
+            Some(250)
+        );
         // messages with quotes stay valid JSON
         let doc = Json::parse(&error_body(400, "missing \"tokens\" field")).unwrap();
         assert_eq!(
@@ -1999,5 +2105,106 @@ mod tests {
             assert!(Instant::now() < deadline, "listener still accepting after drain");
             std::thread::sleep(Duration::from_millis(50));
         }
+    }
+
+    #[test]
+    fn configured_retry_after_reaches_envelope_and_header() {
+        // the paged-pool preflight 429 is deterministic (no racing
+        // needed): a session the 16-block pool cannot hold is refused
+        let srv = Arc::new(
+            Server::with_pool_blocks(&artifacts_dir(), Mode::Dense, SplsConfig::default(), 16)
+                .unwrap(),
+        );
+        let cfg = GatewayConfig::builder().retry_after_ms(2500).build().unwrap();
+        let gw = Gateway::start(srv, cfg).unwrap();
+        let addr = gw.local_addr().to_string();
+        let mut c = HttpClient::connect(&addr).unwrap();
+        let prompt = &seqs(1, 64)[0][..16];
+        let r = c
+            .post_json(
+                "/v1/generate",
+                &generate_body_with_prefix(&prompt[..12], &prompt[12..16], 8, None),
+            )
+            .unwrap();
+        assert_eq!(r.status, 429);
+        // header rounds 2500 ms up to whole seconds
+        assert_eq!(r.header("retry-after"), Some("3"));
+        let err = r.json().unwrap();
+        assert_eq!(
+            err.get("error").unwrap().get("retry_after_ms").unwrap().as_usize(),
+            Some(2500)
+        );
+        gw.shutdown().unwrap();
+    }
+
+    #[test]
+    fn debug_trace_and_prometheus_histograms_round_trip() {
+        use crate::obs::prom;
+        let (gw, addr) = start_gateway(default_cfg());
+        let mut c = HttpClient::connect(&addr).unwrap();
+        let pool = seqs(2, 64);
+        for s in &pool {
+            assert_eq!(c.post_json("/v1/classify", &classify_body(&[&s[..]])).unwrap().status, 200);
+        }
+        let tokens = c
+            .generate_stream(&generate_body(&pool[0][..8], 4, None))
+            .unwrap()
+            .collect()
+            .unwrap()
+            .tokens;
+        assert_eq!(tokens.len(), 4);
+        // the exposition parses and every lane histogram is well-formed
+        let text = String::from_utf8(c.get("/metrics").unwrap().body).unwrap();
+        let scrape = prom::parse(&text).unwrap_or_else(|e| panic!("bad exposition: {e}\n{text}"));
+        // the audit: every sample has a valid name and a TYPE family
+        for s in &scrape.samples {
+            assert!(prom::valid_metric_name(&s.name), "bad metric name {:?}", s.name);
+            assert!(scrape.type_of(&s.name).is_some(), "{} missing # TYPE", s.name);
+        }
+        for lane in ["classify", "generate"] {
+            for stem in ["latency", "queue_wait", "execute", "ttft"] {
+                let name = format!("esact_{lane}_{stem}_seconds");
+                let h = scrape
+                    .histogram(&name)
+                    .unwrap_or_else(|| panic!("missing histogram {name}"));
+                assert!(h.is_well_formed(), "{name} buckets are malformed");
+                assert_eq!(scrape.type_of(&format!("{name}_bucket")), Some("histogram"));
+            }
+        }
+        // histogram counts reconcile with the tier's own counters
+        let served = scrape.value("esact_serve_requests_total").unwrap();
+        let total = scrape.histogram("esact_classify_latency_seconds").unwrap();
+        assert_eq!(total.count, served as u64, "classify count must match requests served");
+        assert!(total.sum > 0.0, "two served requests took nonzero time");
+        let sessions = scrape.value("esact_generate_sessions_total").unwrap();
+        let gen_total = scrape.histogram("esact_generate_latency_seconds").unwrap();
+        assert_eq!(gen_total.count, sessions as u64);
+        assert!(scrape.value("esact_trace_spans_completed_total").unwrap() >= 3.0);
+        // /debug/trace returns the spans, newest first, stages monotone
+        let tr = c.get("/debug/trace?n=8").unwrap();
+        assert_eq!(tr.status, 200);
+        let doc = tr.json().unwrap();
+        assert!(doc.get("completed").unwrap().as_usize().unwrap() >= 3);
+        let spans = doc.get("spans").unwrap().as_arr().unwrap();
+        assert!(spans.len() >= 3, "expected 3 completed spans, got {}", spans.len());
+        for span in spans {
+            assert!(span.get("fault").unwrap().as_str().is_none(), "no faults expected");
+            let stages = span.get("stages").unwrap();
+            let order = ["admitted", "queued", "dispatched", "exec_start", "exec_end", "done"];
+            let ts: Vec<usize> = order
+                .iter()
+                .map(|s| {
+                    stages
+                        .get(s)
+                        .and_then(|v| v.as_usize())
+                        .unwrap_or_else(|| panic!("span missing stage {s}"))
+                })
+                .collect();
+            assert!(ts.windows(2).all(|w| w[0] <= w[1]), "stages out of order: {ts:?}");
+        }
+        // n=1 caps the page size
+        let one = c.get("/debug/trace?n=1").unwrap().json().unwrap();
+        assert_eq!(one.get("spans").unwrap().as_arr().unwrap().len(), 1);
+        gw.shutdown().unwrap();
     }
 }

@@ -85,6 +85,19 @@ impl Request {
         self.target.split('?').next().unwrap_or(&self.target)
     }
 
+    /// One query parameter's value (`/debug/trace?n=8` → `"8"` for
+    /// `n`). First match wins; a bare key yields an empty string.
+    pub fn query_param(&self, name: &str) -> Option<&str> {
+        let query = self.target.split_once('?')?.1;
+        query.split('&').find_map(|pair| {
+            let (k, v) = match pair.split_once('=') {
+                Some((k, v)) => (k, v),
+                None => (pair, ""),
+            };
+            (k == name).then_some(v)
+        })
+    }
+
     /// HTTP/1.1 defaults to keep-alive; `Connection: close` (or
     /// HTTP/1.0 without `keep-alive`) closes after the response.
     pub fn keep_alive(&self) -> bool {
@@ -510,6 +523,24 @@ mod tests {
         let bytes: Vec<&[u8]> = POST.chunks(1).collect();
         let trickled = parse_all(&bytes, DEFAULT_MAX_BODY).unwrap();
         assert_eq!(trickled[0].body, whole[0].body);
+    }
+
+    #[test]
+    fn query_params_parse_from_the_target() {
+        let reqs = parse_all(
+            &[b"GET /debug/trace?n=8&lane=classify&raw HTTP/1.1\r\n\r\n"],
+            DEFAULT_MAX_BODY,
+        )
+        .unwrap();
+        let r = &reqs[0];
+        assert_eq!(r.path(), "/debug/trace");
+        assert_eq!(r.query_param("n"), Some("8"));
+        assert_eq!(r.query_param("lane"), Some("classify"));
+        assert_eq!(r.query_param("raw"), Some(""), "bare key yields empty value");
+        assert_eq!(r.query_param("missing"), None);
+
+        let no_query = parse_all(&[b"GET /metrics HTTP/1.1\r\n\r\n"], DEFAULT_MAX_BODY).unwrap();
+        assert_eq!(no_query[0].query_param("n"), None);
     }
 
     #[test]

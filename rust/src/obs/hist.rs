@@ -1,0 +1,206 @@
+//! Fixed-bucket log2 latency histograms: 28 power-of-two bucket bounds
+//! from ~1 µs (1024 ns) to ~137 s plus an overflow bucket, recorded
+//! with relaxed atomics so every request can be observed on the hot
+//! path without locks or sampling. Quantiles are extracted from a
+//! snapshot by linear interpolation inside the covering bucket and
+//! clamped to the observed min/max, so `p50 ≤ p99 ≤ max` holds exactly
+//! — the replacement for the sorted-vector percentile math the leader
+//! lanes used to carry (`ServeOutcome`/`GenerateOutcome`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Number of finite buckets; bucket `i` covers `(BOUNDS_NS[i-1],
+/// BOUNDS_NS[i]]` nanoseconds (the first covers `[0, 1024]`).
+pub const N_BUCKETS: usize = 28;
+
+/// Upper bounds in nanoseconds: `1024 << i`, ~1 µs … ~137 s.
+pub const BOUNDS_NS: [u64; N_BUCKETS] = {
+    let mut b = [0u64; N_BUCKETS];
+    let mut i = 0;
+    while i < N_BUCKETS {
+        b[i] = 1024u64 << i;
+        i += 1;
+    }
+    b
+};
+
+/// Lock-free latency histogram. One extra slot past [`N_BUCKETS`]
+/// counts overflow (`+Inf` in the Prometheus exposition).
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; N_BUCKETS + 1],
+    sum_ns: AtomicU64,
+    /// Smallest observation (u64::MAX while empty) — quantile clamp.
+    min_ns: AtomicU64,
+    /// Largest observation — quantile clamp.
+    max_ns: AtomicU64,
+}
+
+impl LatencyHistogram {
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_ns: AtomicU64::new(0),
+            min_ns: AtomicU64::new(u64::MAX),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+
+    pub fn observe(&self, d: Duration) {
+        self.observe_ns(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    pub fn observe_ns(&self, ns: u64) {
+        // first bound >= ns; everything past the last bound overflows
+        let idx = BOUNDS_NS.partition_point(|&b| b < ns);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.min_ns.fetch_min(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    /// A point-in-time copy for rendering/quantiles. The snapshot's
+    /// `count` is derived from the bucket counts, so `_count` always
+    /// equals the bucket sum even if a concurrent observe lands
+    /// between the individual loads.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let buckets: Vec<u64> =
+            self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let count = buckets.iter().sum();
+        HistSnapshot {
+            buckets,
+            count,
+            sum_ns: self.sum_ns.load(Ordering::Relaxed),
+            min_ns: self.min_ns.load(Ordering::Relaxed),
+            max_ns: self.max_ns.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A consistent copy of one histogram's state.
+#[derive(Clone, Debug)]
+pub struct HistSnapshot {
+    /// Per-bucket (non-cumulative) counts, length [`N_BUCKETS`] + 1
+    /// (the last slot is the overflow bucket).
+    pub buckets: Vec<u64>,
+    pub count: u64,
+    pub sum_ns: u64,
+    pub min_ns: u64,
+    pub max_ns: u64,
+}
+
+impl HistSnapshot {
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Mean observation in seconds (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / self.count as f64 / 1e9
+        }
+    }
+
+    /// Quantile in seconds by linear interpolation inside the covering
+    /// bucket, clamped to the observed `[min, max]` — so reported
+    /// percentiles never exceed the largest real sample and are
+    /// monotone in `q`. Returns 0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = q.clamp(0.0, 1.0) * self.count as f64;
+        let mut cum = 0u64;
+        let mut ns = self.max_ns as f64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let before = cum as f64;
+            cum += c;
+            if cum as f64 >= target {
+                let lower = if i == 0 { 0.0 } else { BOUNDS_NS[i - 1] as f64 };
+                let upper =
+                    if i < N_BUCKETS { BOUNDS_NS[i] as f64 } else { self.max_ns as f64 };
+                let frac = ((target - before) / c as f64).clamp(0.0, 1.0);
+                ns = lower + frac * (upper - lower);
+                break;
+            }
+        }
+        ns.clamp(self.min_ns as f64, self.max_ns as f64) / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounds_are_log2_from_a_microsecond() {
+        assert_eq!(BOUNDS_NS[0], 1024);
+        assert_eq!(BOUNDS_NS[1], 2048);
+        assert_eq!(BOUNDS_NS[N_BUCKETS - 1], 137_438_953_472, "~137 s cap");
+        assert!(BOUNDS_NS.windows(2).all(|w| w[1] == 2 * w[0]));
+    }
+
+    #[test]
+    fn observations_land_in_the_covering_bucket() {
+        let h = LatencyHistogram::new();
+        h.observe_ns(1000); // <= 1024       -> bucket 0
+        h.observe_ns(1024); // boundary      -> bucket 0
+        h.observe_ns(1025); // just past     -> bucket 1
+        h.observe(Duration::from_secs(200)); // past the last bound -> overflow
+        let s = h.snapshot();
+        assert_eq!(s.buckets[0], 2);
+        assert_eq!(s.buckets[1], 1);
+        assert_eq!(s.buckets[N_BUCKETS], 1);
+        assert_eq!(s.count, 4);
+        assert_eq!(s.min_ns, 1000);
+        assert_eq!(s.max_ns, 200_000_000_000);
+    }
+
+    #[test]
+    fn quantiles_interpolate_and_clamp_to_observed_extremes() {
+        // 3×1 ms (bucket (524288, 1048576]) + 1×4 ms (bucket
+        // (2097152, 4194304]): interpolation below the real minimum
+        // must clamp up to it, and q=1 must clamp down to the maximum
+        let h = LatencyHistogram::new();
+        for _ in 0..3 {
+            h.observe(Duration::from_millis(1));
+        }
+        h.observe(Duration::from_millis(4));
+        let s = h.snapshot();
+        assert_eq!(s.quantile(0.5), 0.001, "interpolant 873813.3 ns clamps to min");
+        assert_eq!(s.quantile(1.0), 0.004, "top quantile clamps to max");
+        let p90 = s.quantile(0.9);
+        assert!((p90 - 0.003_355_443_2).abs() < 1e-12, "p90 interpolates: {p90}");
+        // monotone in q, bounded by the extremes
+        let qs: Vec<f64> = (0..=10).map(|i| s.quantile(i as f64 / 10.0)).collect();
+        assert!(qs.windows(2).all(|w| w[0] <= w[1]));
+        assert!(qs.iter().all(|&v| (0.001..=0.004).contains(&v)));
+    }
+
+    #[test]
+    fn empty_histogram_reads_zeros() {
+        let s = LatencyHistogram::new().snapshot();
+        assert!(s.is_empty());
+        assert_eq!(s.quantile(0.5), 0.0);
+        assert_eq!(s.mean(), 0.0);
+    }
+
+    #[test]
+    fn mean_is_sum_over_count() {
+        let h = LatencyHistogram::new();
+        h.observe(Duration::from_millis(2));
+        h.observe(Duration::from_millis(4));
+        assert!((h.snapshot().mean() - 0.003).abs() < 1e-12);
+    }
+}

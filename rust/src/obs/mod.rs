@@ -1,0 +1,102 @@
+//! Observability for the serving tier: per-request trace spans with
+//! monotonic stage events, fixed-bucket log2 latency histograms, and a
+//! Prometheus text-format renderer/parser — std-only, like the rest of
+//! the networking stack.
+//!
+//! Three pieces (see DESIGN.md §Observability):
+//!
+//! * [`clock`] — an injectable nanosecond clock ([`Clock`]): monotonic
+//!   in production, manually advanced under test, so every histogram
+//!   and span assertion is deterministic.
+//! * [`hist`] — [`LatencyHistogram`], lock-free fixed log2 buckets
+//!   (~1 µs … ~137 s) with min/max-clamped quantile extraction. Every
+//!   request is observed (cheap atomics); histograms are never sampled.
+//! * [`span`] — [`TraceHub`], sharded fixed-capacity ring buffers of
+//!   per-request [`Span`]s (stage timestamps + retry lineage), behind a
+//!   1-in-N sampling knob so tracing overhead is bounded and droppable.
+//!   Completed spans feed `GET /debug/trace` and the opt-in
+//!   `ESACT_TRACE_FILE` JSONL sink.
+//! * [`prom`] — Prometheus exposition writer (`# HELP`/`# TYPE`,
+//!   `_bucket`/`_sum`/`_count`) plus the text-format parser the
+//!   integration tests and the loadgen client scrape with.
+
+pub mod clock;
+pub mod hist;
+pub mod prom;
+pub mod span;
+
+pub use clock::Clock;
+pub use hist::{HistSnapshot, LatencyHistogram};
+pub use prom::PromWriter;
+pub use span::{Lane, Span, Stage, TraceHub};
+
+/// The four latency families exported per lane: end-to-end total,
+/// admission-to-execution queue wait, execution time, and time to
+/// first output (for classify, first output *is* the full response).
+pub struct LaneHists {
+    pub total: LatencyHistogram,
+    pub queue_wait: LatencyHistogram,
+    pub execute: LatencyHistogram,
+    pub ttft: LatencyHistogram,
+}
+
+impl LaneHists {
+    pub fn new() -> LaneHists {
+        LaneHists {
+            total: LatencyHistogram::new(),
+            queue_wait: LatencyHistogram::new(),
+            execute: LatencyHistogram::new(),
+            ttft: LatencyHistogram::new(),
+        }
+    }
+}
+
+impl Default for LaneHists {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The server-wide observability state: one [`TraceHub`] plus the
+/// per-lane histogram families, shared by the gateway, the leader
+/// lanes, and the replica workers (it lives on `ServerCore`).
+pub struct Obs {
+    pub trace: TraceHub,
+    pub classify: LaneHists,
+    pub generate: LaneHists,
+}
+
+/// Per-shard capacity of completed-span ring buffers (total retained
+/// spans = this × the shard count).
+pub const DEFAULT_SPAN_CAPACITY: usize = 128;
+
+impl Obs {
+    /// Production state: monotonic clock, 1-in-1 sampling (the knob is
+    /// re-set by `TierConfig`/`GatewayConfig` at tier/gateway start).
+    pub fn new() -> Obs {
+        Obs::with_clock(Clock::monotonic())
+    }
+
+    /// Test state under an injected clock.
+    pub fn with_clock(clock: Clock) -> Obs {
+        Obs {
+            trace: TraceHub::new(clock, 1, DEFAULT_SPAN_CAPACITY),
+            classify: LaneHists::new(),
+            generate: LaneHists::new(),
+        }
+    }
+
+    /// The histogram family for one lane.
+    pub fn lane(&self, lane: Lane) -> &LaneHists {
+        match lane {
+            Lane::Classify => &self.classify,
+            Lane::Generate => &self.generate,
+        }
+    }
+}
+
+impl Default for Obs {
+    fn default() -> Self {
+        Self::new()
+    }
+}

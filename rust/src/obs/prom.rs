@@ -1,0 +1,418 @@
+//! Prometheus text exposition: a writer that renders the tier's metric
+//! rows and latency histograms with `# HELP`/`# TYPE` headers, and a
+//! small parser for the same format used by the integration tests, the
+//! `http-check` smoke probe, and the loadgen client to round-trip what
+//! a live gateway serves. Both ends are deliberately minimal — exactly
+//! the subset of the exposition format this repo emits.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::obs::hist::{HistSnapshot, BOUNDS_NS, N_BUCKETS};
+
+/// Prometheus metric-name charset: `[a-zA-Z_:][a-zA-Z0-9_:]*`.
+pub fn valid_metric_name(name: &str) -> bool {
+    let mut chars = name.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+/// Renders the `/metrics` body. Emits `# HELP`/`# TYPE` once per metric
+/// name (counter when the name ends in `_total`, gauge otherwise,
+/// histogram via [`PromWriter::histogram`]) and prefixes every name on
+/// the wire (`esact_`). Scalar rows are passed through pre-rendered so
+/// the wire format stays byte-identical to the CLI `Display` rows the
+/// existing scrapers parse (name first, value last, padded).
+pub struct PromWriter {
+    prefix: &'static str,
+    out: String,
+    described: HashSet<String>,
+}
+
+impl PromWriter {
+    pub fn new(prefix: &'static str) -> PromWriter {
+        PromWriter { prefix, out: String::with_capacity(4096), described: HashSet::new() }
+    }
+
+    fn describe(&mut self, name: &str, kind: &str, help: &str) {
+        debug_assert!(valid_metric_name(name), "invalid metric name: {name}");
+        if self.described.insert(name.to_string()) {
+            self.out.push_str(&format!("# HELP {}{} {}\n", self.prefix, name, help));
+            self.out.push_str(&format!("# TYPE {}{} {}\n", self.prefix, name, kind));
+        }
+    }
+
+    /// One scalar sample. `rendered` is the row's existing `Display`
+    /// output (`name{label="i"}   value`), emitted verbatim after the
+    /// prefix; `name` is the bare metric name for the header lines.
+    pub fn scalar(&mut self, name: &str, rendered: &str, help: &str) {
+        let kind = if name.ends_with("_total") { "counter" } else { "gauge" };
+        self.describe(name, kind, help);
+        self.out.push_str(self.prefix);
+        self.out.push_str(rendered);
+        self.out.push('\n');
+    }
+
+    /// One full histogram family: cumulative `_bucket{le="…"}` rows in
+    /// seconds, the `+Inf` bucket, `_sum`, and `_count`.
+    pub fn histogram(&mut self, name: &str, snap: &HistSnapshot, help: &str) {
+        self.describe(name, "histogram", help);
+        let mut cum = 0u64;
+        for i in 0..N_BUCKETS {
+            cum += snap.buckets.get(i).copied().unwrap_or(0);
+            // f64 Display never uses an exponent, so 1024 ns renders
+            // as le="0.000001024" — parseable by str::parse::<f64>
+            let le = BOUNDS_NS[i] as f64 / 1e9;
+            self.out.push_str(&format!(
+                "{}{}_bucket{{le=\"{}\"}} {}\n",
+                self.prefix, name, le, cum
+            ));
+        }
+        cum += snap.buckets.get(N_BUCKETS).copied().unwrap_or(0);
+        self.out
+            .push_str(&format!("{}{}_bucket{{le=\"+Inf\"}} {}\n", self.prefix, name, cum));
+        self.out.push_str(&format!(
+            "{}{}_sum {}\n",
+            self.prefix,
+            name,
+            snap.sum_ns as f64 / 1e9
+        ));
+        self.out.push_str(&format!("{}{}_count {}\n", self.prefix, name, snap.count));
+    }
+
+    pub fn into_string(self) -> String {
+        self.out
+    }
+}
+
+/// Curated `# HELP` text for the tier's exported rows; anything not in
+/// the table gets a generic line (the exposition stays well-formed).
+pub fn help_for(name: &str) -> &'static str {
+    match name {
+        "serve_requests_total" => "Classify requests served to completion.",
+        "serve_batches_total" => "Classify batches executed across replicas.",
+        "serve_shed_total" => "Classify requests shed at admission.",
+        "serve_jobs_retried_total" => "Classify jobs retried after a replica fault.",
+        "serve_jobs_faulted_total" => "Classify jobs terminally faulted.",
+        "serve_replica_respawns_total" => "Classify replica workers respawned.",
+        "generate_sessions_total" => "Generate sessions run to completion.",
+        "generate_tokens_total" => "Tokens emitted across generate sessions.",
+        "generate_rejected_total" => "Generate sessions rejected at admission.",
+        "generate_aborted_total" => "Generate sessions aborted mid-stream.",
+        "generate_sessions_migrated_total" => "Sessions migrated off a faulted replica.",
+        "generate_jobs_faulted_total" => "Decode jobs terminally faulted.",
+        "generate_replica_respawns_total" => "Decode replica workers respawned.",
+        "jobs_retried_total" => "Jobs retried after replica faults (all lanes).",
+        "fault_injected_total" => "Faults injected by the seeded fault plan.",
+        "http_requests_total" => "HTTP requests accepted by the gateway.",
+        "http_active_connections" => "Connections currently open at the gateway.",
+        "trace_spans_completed_total" => "Trace spans completed since startup.",
+        "classify_latency_seconds" => "End-to-end classify request latency.",
+        "classify_queue_wait_seconds" => "Classify admission-to-execution queue wait.",
+        "classify_execute_seconds" => "Classify replica execution time.",
+        "classify_ttft_seconds" => "Classify time to first (and only) output.",
+        "generate_latency_seconds" => "End-to-end generate session latency.",
+        "generate_queue_wait_seconds" => "Generate admission-to-first-execution queue wait.",
+        "generate_execute_seconds" => "Decode slice execution time (one sample per slice).",
+        "generate_ttft_seconds" => "Generate time to first streamed chunk.",
+        _ => "ESACT serving tier metric (see DESIGN.md, Observability).",
+    }
+}
+
+/// One parsed sample line.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Sample {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub value: f64,
+}
+
+impl Sample {
+    /// The label's value, if present.
+    pub fn label(&self, key: &str) -> Option<&str> {
+        self.labels.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+}
+
+/// A parsed `/metrics` body.
+#[derive(Debug, Default)]
+pub struct Scrape {
+    pub samples: Vec<Sample>,
+    /// `# TYPE` declarations by (base) metric name.
+    pub types: HashMap<String, String>,
+    /// `# HELP` declarations by (base) metric name.
+    pub helps: HashMap<String, String>,
+}
+
+impl Scrape {
+    /// First unlabeled sample with this exact name.
+    pub fn value(&self, name: &str) -> Option<f64> {
+        self.samples
+            .iter()
+            .find(|s| s.name == name && s.labels.is_empty())
+            .map(|s| s.value)
+    }
+
+    /// All samples with this exact name (labeled families).
+    pub fn all(&self, name: &str) -> Vec<&Sample> {
+        self.samples.iter().filter(|s| s.name == name).collect()
+    }
+
+    /// The declared type for a sample name; `_bucket`/`_sum`/`_count`
+    /// children resolve to their base histogram declaration.
+    pub fn type_of(&self, sample_name: &str) -> Option<&str> {
+        if let Some(t) = self.types.get(sample_name) {
+            return Some(t);
+        }
+        for suffix in ["_bucket", "_sum", "_count"] {
+            if let Some(base) = sample_name.strip_suffix(suffix) {
+                if let Some(t) = self.types.get(base) {
+                    if t == "histogram" {
+                        return Some(t);
+                    }
+                }
+            }
+        }
+        None
+    }
+
+    /// Reassemble one histogram family from its child samples.
+    pub fn histogram(&self, name: &str) -> Option<Histogram> {
+        let bucket_name = format!("{name}_bucket");
+        let mut buckets: Vec<(f64, u64)> = Vec::new();
+        for s in self.samples.iter().filter(|s| s.name == bucket_name) {
+            let le = s.label("le")?;
+            let le = if le == "+Inf" { f64::INFINITY } else { le.parse().ok()? };
+            buckets.push((le, s.value as u64));
+        }
+        if buckets.is_empty() {
+            return None;
+        }
+        buckets.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        Some(Histogram {
+            buckets,
+            sum: self.value(&format!("{name}_sum"))?,
+            count: self.value(&format!("{name}_count"))? as u64,
+        })
+    }
+}
+
+/// A histogram reassembled from a scrape: cumulative `(le_seconds,
+/// count)` buckets sorted by bound, plus `_sum`/`_count`.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub buckets: Vec<(f64, u64)>,
+    pub sum: f64,
+    pub count: u64,
+}
+
+impl Histogram {
+    /// Buckets must be non-decreasing in cumulative count and the
+    /// `+Inf` bucket must equal `_count`.
+    pub fn is_well_formed(&self) -> bool {
+        let monotone = self.buckets.windows(2).all(|w| w[0].1 <= w[1].1);
+        let closed = self
+            .buckets
+            .last()
+            .map(|&(le, c)| le.is_infinite() && c == self.count)
+            .unwrap_or(false);
+        monotone && closed
+    }
+
+    /// Quantile in seconds by linear interpolation over the cumulative
+    /// buckets (the scrape-side mirror of `HistSnapshot::quantile`,
+    /// minus the min/max clamp a scrape cannot see). 0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = q.clamp(0.0, 1.0) * self.count as f64;
+        let mut prev_le = 0.0f64;
+        let mut prev_cum = 0u64;
+        for &(le, cum) in &self.buckets {
+            if cum > prev_cum && cum as f64 >= target {
+                let upper = if le.is_infinite() { prev_le } else { le };
+                let frac =
+                    ((target - prev_cum as f64) / (cum - prev_cum) as f64).clamp(0.0, 1.0);
+                return prev_le + frac * (upper - prev_le);
+            }
+            prev_cum = cum;
+            if !le.is_infinite() {
+                prev_le = le;
+            }
+        }
+        prev_le
+    }
+}
+
+/// Parse a text-format exposition body. Handles `# HELP`/`# TYPE`
+/// headers, other comments, and sample lines with an optional single
+/// `{k="v",…}` label set — label values must not contain `"` or `}`
+/// (ours never do). Errors name the offending line.
+pub fn parse(text: &str) -> Result<Scrape, String> {
+    let mut scrape = Scrape::default();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('#') {
+            let rest = rest.trim_start();
+            for (tag, map) in
+                [("HELP ", &mut scrape.helps), ("TYPE ", &mut scrape.types)]
+            {
+                if let Some(decl) = rest.strip_prefix(tag) {
+                    let mut it = decl.splitn(2, char::is_whitespace);
+                    let name = it.next().unwrap_or("").to_string();
+                    if name.is_empty() {
+                        return Err(format!("line {}: empty {} name", lineno + 1, tag.trim()));
+                    }
+                    map.insert(name, it.next().unwrap_or("").trim().to_string());
+                }
+            }
+            continue;
+        }
+        scrape.samples.push(parse_sample(line, lineno + 1)?);
+    }
+    Ok(scrape)
+}
+
+fn parse_sample(line: &str, lineno: usize) -> Result<Sample, String> {
+    let (name, labels, value_part) = match line.find('{') {
+        Some(open) => {
+            let close = line[open..]
+                .find('}')
+                .map(|i| open + i)
+                .ok_or_else(|| format!("line {lineno}: unterminated label set"))?;
+            let mut labels = Vec::new();
+            let inner = &line[open + 1..close];
+            for pair in inner.split(',').filter(|p| !p.trim().is_empty()) {
+                let (k, v) = pair
+                    .split_once('=')
+                    .ok_or_else(|| format!("line {lineno}: bad label pair {pair:?}"))?;
+                let v = v.trim().trim_matches('"');
+                labels.push((k.trim().to_string(), v.to_string()));
+            }
+            (&line[..open], labels, &line[close + 1..])
+        }
+        None => {
+            let name_end = line
+                .find(char::is_whitespace)
+                .ok_or_else(|| format!("line {lineno}: no value in {line:?}"))?;
+            (&line[..name_end], Vec::new(), &line[name_end..])
+        }
+    };
+    if name.is_empty() {
+        return Err(format!("line {lineno}: empty metric name"));
+    }
+    // value is the last whitespace token — rows pad the name column
+    let value_str = value_part
+        .split_whitespace()
+        .last()
+        .ok_or_else(|| format!("line {lineno}: no value in {line:?}"))?;
+    let value = value_str
+        .parse::<f64>()
+        .map_err(|_| format!("line {lineno}: bad value {value_str:?}"))?;
+    Ok(Sample { name: name.to_string(), labels, value })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::hist::LatencyHistogram;
+    use std::time::Duration;
+
+    #[test]
+    fn metric_name_charset() {
+        assert!(valid_metric_name("esact_serve_requests_total"));
+        assert!(valid_metric_name("_x:y9"));
+        assert!(!valid_metric_name(""));
+        assert!(!valid_metric_name("9leading_digit"));
+        assert!(!valid_metric_name("has-dash"));
+        assert!(!valid_metric_name("has space"));
+    }
+
+    #[test]
+    fn writer_emits_help_and_type_once_per_name() {
+        let mut w = PromWriter::new("esact_");
+        w.scalar("serve_requests_total", "serve_requests_total    42", "Requests.");
+        w.scalar(
+            "replica_busy_seconds",
+            "replica_busy_seconds{replica=\"0\"}     0.5",
+            "Busy.",
+        );
+        w.scalar(
+            "replica_busy_seconds",
+            "replica_busy_seconds{replica=\"1\"}     0.25",
+            "Busy.",
+        );
+        let text = w.into_string();
+        assert_eq!(text.matches("# HELP esact_replica_busy_seconds").count(), 1);
+        assert_eq!(text.matches("# TYPE esact_replica_busy_seconds gauge").count(), 1);
+        assert_eq!(text.matches("# TYPE esact_serve_requests_total counter").count(), 1);
+
+        let scrape = parse(&text).unwrap();
+        assert_eq!(scrape.value("esact_serve_requests_total"), Some(42.0));
+        assert_eq!(scrape.type_of("esact_serve_requests_total"), Some("counter"));
+        let busy = scrape.all("esact_replica_busy_seconds");
+        assert_eq!(busy.len(), 2);
+        assert_eq!(busy[1].label("replica"), Some("1"));
+        assert_eq!(busy[1].value, 0.25);
+    }
+
+    #[test]
+    fn histogram_round_trips_through_the_parser() {
+        let h = LatencyHistogram::new();
+        for ms in [1u64, 1, 2, 4, 8, 150_000] {
+            h.observe(Duration::from_millis(ms));
+        }
+        let mut w = PromWriter::new("esact_");
+        w.histogram("classify_latency_seconds", &h.snapshot(), "Latency.");
+        let text = w.into_string();
+        let scrape = parse(&text).unwrap();
+
+        assert_eq!(scrape.type_of("esact_classify_latency_seconds"), Some("histogram"));
+        assert_eq!(
+            scrape.type_of("esact_classify_latency_seconds_bucket"),
+            Some("histogram")
+        );
+        let hist = scrape.histogram("esact_classify_latency_seconds").unwrap();
+        assert_eq!(hist.count, 6);
+        assert_eq!(hist.buckets.len(), N_BUCKETS + 1);
+        assert!(hist.is_well_formed());
+        assert!((hist.sum - 150.016).abs() < 1e-9);
+        // 150 s exceeds the ~137 s cap, so only the +Inf bucket holds it
+        assert_eq!(hist.buckets[N_BUCKETS - 1].1, 5);
+        assert_eq!(hist.buckets[N_BUCKETS].1, 6);
+        // the median lands in the (1.048576 ms, 2.097152 ms] bucket
+        let p50 = hist.quantile(0.5);
+        assert!((0.0008..=0.0022).contains(&p50), "p50 = {p50}");
+        // quantiles are monotone in q
+        let qs: Vec<f64> = (0..=10).map(|i| hist.quantile(i as f64 / 10.0)).collect();
+        assert!(qs.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn parser_reads_padded_rows_and_rejects_garbage() {
+        let scrape = parse("esact_x                                 7\n").unwrap();
+        assert_eq!(scrape.value("esact_x"), Some(7.0));
+        assert!(parse("just_a_name_no_value\n").is_err());
+        assert!(parse("name 12.5.7\n").is_err());
+        assert!(parse("open{le=\"1\" 3\n").is_err());
+        // non-HELP/TYPE comments are ignored
+        assert!(parse("# a free-form comment\n").unwrap().samples.is_empty());
+    }
+
+    #[test]
+    fn empty_histogram_is_well_formed_and_quantile_is_zero() {
+        let mut w = PromWriter::new("");
+        w.histogram("h_seconds", &LatencyHistogram::new().snapshot(), "Empty.");
+        let scrape = parse(&w.into_string()).unwrap();
+        let hist = scrape.histogram("h_seconds").unwrap();
+        assert_eq!(hist.count, 0);
+        assert!(hist.is_well_formed());
+        assert_eq!(hist.quantile(0.5), 0.0);
+    }
+}

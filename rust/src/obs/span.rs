@@ -1,0 +1,572 @@
+//! Per-request trace spans. A span is minted at admission
+//! (`TierHandle::submit`) — the gateway backdates its `accepted`/
+//! `parsed` stamps once the ids come back — and accumulates monotonic
+//! stage timestamps as the request moves through the tier: admission,
+//! batcher queue, replica dispatch, execution, first streamed output,
+//! completion or fault. Completed spans land in sharded fixed-capacity
+//! ring buffers (oldest dropped), feed `GET /debug/trace?n=`, and are
+//! optionally appended as JSONL to `ESACT_TRACE_FILE`.
+//!
+//! Sampling: 1-in-N by request id (`id % n == 0`; `n = 0` disables
+//! tracing entirely). Histograms are *not* behind this knob — they
+//! observe every request; spans are the bounded, droppable artifact.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::Write;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::obs::clock::Clock;
+
+/// Stage-event taxonomy, in nominal lifecycle order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// The gateway read a complete request off the socket.
+    Accepted,
+    /// The request body parsed into tier submissions.
+    Parsed,
+    /// `TierHandle::submit` admitted it (span birth for in-process
+    /// callers; the gateway backdates the two stages above).
+    Admitted,
+    /// The leader queued it (classify: into the batcher; generate:
+    /// session admitted to the decode lane).
+    Queued,
+    /// The leader pushed its job onto a replica deque.
+    Dispatched,
+    /// A replica worker began executing it (earliest attempt wins).
+    ExecStart,
+    /// A replica worker finished executing it (latest attempt wins).
+    ExecEnd,
+    /// First streamed output reached the leader (generate lane).
+    FirstChunk,
+    /// Final success: reply forwarded / `done` chunk sent.
+    Done,
+    /// Terminal fault: retry budget spent, abort, or stream fault.
+    Faulted,
+}
+
+/// Number of distinct stages (span array sizing).
+pub const N_STAGES: usize = 10;
+
+impl Stage {
+    pub const ALL: [Stage; N_STAGES] = [
+        Stage::Accepted,
+        Stage::Parsed,
+        Stage::Admitted,
+        Stage::Queued,
+        Stage::Dispatched,
+        Stage::ExecStart,
+        Stage::ExecEnd,
+        Stage::FirstChunk,
+        Stage::Done,
+        Stage::Faulted,
+    ];
+
+    fn index(self) -> usize {
+        match self {
+            Stage::Accepted => 0,
+            Stage::Parsed => 1,
+            Stage::Admitted => 2,
+            Stage::Queued => 3,
+            Stage::Dispatched => 4,
+            Stage::ExecStart => 5,
+            Stage::ExecEnd => 6,
+            Stage::FirstChunk => 7,
+            Stage::Done => 8,
+            Stage::Faulted => 9,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Accepted => "accepted",
+            Stage::Parsed => "parsed",
+            Stage::Admitted => "admitted",
+            Stage::Queued => "queued",
+            Stage::Dispatched => "dispatched",
+            Stage::ExecStart => "exec_start",
+            Stage::ExecEnd => "exec_end",
+            Stage::FirstChunk => "first_chunk",
+            Stage::Done => "done",
+            Stage::Faulted => "faulted",
+        }
+    }
+
+    /// Merge policy for repeated recordings (retries/migrations replay
+    /// stages): completion-flavored stages keep the latest stamp, the
+    /// rest keep the earliest — so `exec_start` is the first attempt's
+    /// start and `exec_end` the last attempt's end, bracketing the
+    /// whole retry lineage.
+    fn latest_wins(self) -> bool {
+        matches!(self, Stage::ExecEnd | Stage::Done | Stage::Faulted)
+    }
+}
+
+/// Which leader lane served the request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Lane {
+    Classify,
+    Generate,
+}
+
+impl Lane {
+    pub fn name(self) -> &'static str {
+        match self {
+            Lane::Classify => "classify",
+            Lane::Generate => "generate",
+        }
+    }
+}
+
+/// One request's trace: stage timestamps (ns on the hub's clock) plus
+/// retry lineage and, for generate sessions, the prefill/decode
+/// execution split (the paper's stage-level accounting, per request).
+#[derive(Clone, Debug)]
+pub struct Span {
+    pub id: u64,
+    pub lane: Lane,
+    stages: [Option<u64>; N_STAGES],
+    /// Dispatch attempts consumed (1 = served first try).
+    pub attempts: u32,
+    /// Session migrations (generate lane) absorbed by this request.
+    pub migrated: u32,
+    /// Terminal fault code (`replica_fault`, `decode_aborted`, …).
+    pub fault: Option<&'static str>,
+    /// Cumulative prefill execution time (generate sessions).
+    pub prefill_ns: Option<u64>,
+    /// Cumulative decode execution time (generate sessions).
+    pub decode_ns: Option<u64>,
+}
+
+impl Span {
+    fn new(id: u64, lane: Lane) -> Span {
+        Span {
+            id,
+            lane,
+            stages: [None; N_STAGES],
+            attempts: 1,
+            migrated: 0,
+            fault: None,
+            prefill_ns: None,
+            decode_ns: None,
+        }
+    }
+
+    fn record(&mut self, stage: Stage, t_ns: u64) {
+        let slot = &mut self.stages[stage.index()];
+        if slot.is_none() || stage.latest_wins() {
+            *slot = Some(t_ns);
+        }
+    }
+
+    /// Timestamp of one stage, if recorded.
+    pub fn stage(&self, s: Stage) -> Option<u64> {
+        self.stages[s.index()]
+    }
+
+    /// Terminal timestamp: `done`, else `faulted`.
+    pub fn finished_at(&self) -> Option<u64> {
+        self.stage(Stage::Done).or_else(|| self.stage(Stage::Faulted))
+    }
+
+    /// End-to-end ns from the earliest recorded stage to the terminal
+    /// one, when both exist.
+    pub fn total_ns(&self) -> Option<u64> {
+        let first = self.stages.iter().flatten().min()?;
+        Some(self.finished_at()?.saturating_sub(*first))
+    }
+
+    /// Render as a single JSON object (one JSONL line / one element of
+    /// the `/debug/trace` array). Stage names map to ns timestamps;
+    /// absent stages are omitted.
+    pub fn to_json(&self) -> String {
+        let mut out = String::with_capacity(256);
+        out.push_str(&format!(
+            "{{\"id\":{},\"lane\":\"{}\",\"attempts\":{},\"migrated\":{}",
+            self.id,
+            self.lane.name(),
+            self.attempts,
+            self.migrated
+        ));
+        match self.fault {
+            Some(code) => out.push_str(&format!(",\"fault\":\"{code}\"")),
+            None => out.push_str(",\"fault\":null"),
+        }
+        if let Some(p) = self.prefill_ns {
+            out.push_str(&format!(",\"prefill_ns\":{p}"));
+        }
+        if let Some(d) = self.decode_ns {
+            out.push_str(&format!(",\"decode_ns\":{d}"));
+        }
+        if let Some(t) = self.total_ns() {
+            out.push_str(&format!(",\"total_ns\":{t}"));
+        }
+        out.push_str(",\"stages\":{");
+        let mut first = true;
+        for s in Stage::ALL {
+            if let Some(t) = self.stage(s) {
+                if !first {
+                    out.push(',');
+                }
+                first = false;
+                out.push_str(&format!("\"{}\":{}", s.name(), t));
+            }
+        }
+        out.push_str("}}");
+        out
+    }
+}
+
+/// Spans in flight never outgrow this per-shard bound (a begun span
+/// whose request is orphaned by a tier error would otherwise leak).
+const MAX_ACTIVE_PER_SHARD: usize = 4096;
+
+const N_SHARDS: usize = 8;
+
+#[derive(Default)]
+struct Shard {
+    active: HashMap<u64, Span>,
+    done: VecDeque<Span>,
+}
+
+/// The process-wide span store: sharded by request id (8 shards, one
+/// mutex each — submit ids are sequential, so consecutive requests hit
+/// different shards), fixed-capacity completed rings, 1-in-N sampling.
+pub struct TraceHub {
+    clock: Clock,
+    sample_every: AtomicU64,
+    capacity: usize,
+    shards: [Mutex<Shard>; N_SHARDS],
+    completed: AtomicU64,
+    sink: Option<Mutex<std::fs::File>>,
+}
+
+impl TraceHub {
+    /// `sample_every = 1` traces everything, `n` traces 1-in-n by id,
+    /// `0` disables tracing. `capacity` bounds completed spans kept
+    /// per shard. An `ESACT_TRACE_FILE` env var arms the JSONL sink.
+    pub fn new(clock: Clock, sample_every: u64, capacity: usize) -> TraceHub {
+        let sink = std::env::var("ESACT_TRACE_FILE")
+            .ok()
+            .filter(|p| !p.is_empty())
+            .and_then(|p| {
+                std::fs::OpenOptions::new().create(true).append(true).open(p).ok()
+            })
+            .map(Mutex::new);
+        TraceHub {
+            clock,
+            sample_every: AtomicU64::new(sample_every),
+            capacity: capacity.max(1),
+            shards: std::array::from_fn(|_| Mutex::new(Shard::default())),
+            completed: AtomicU64::new(0),
+            sink,
+        }
+    }
+
+    /// Route the JSONL sink to an explicit path (tests; the env knob
+    /// is process-global and races under the parallel test harness).
+    pub fn with_sink_path(mut self, path: &std::path::Path) -> std::io::Result<TraceHub> {
+        let f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        self.sink = Some(Mutex::new(f));
+        Ok(self)
+    }
+
+    /// Reconfigure the sampling knob (set from `TierConfig` /
+    /// `GatewayConfig` at tier start).
+    pub fn set_sample_every(&self, n: u64) {
+        self.sample_every.store(n, Ordering::SeqCst);
+    }
+
+    pub fn sample_every(&self) -> u64 {
+        self.sample_every.load(Ordering::SeqCst)
+    }
+
+    /// Whether this request id is traced under the current knob.
+    pub fn sampled(&self, id: u64) -> bool {
+        let n = self.sample_every.load(Ordering::Relaxed);
+        n != 0 && id % n == 0
+    }
+
+    /// Now on the hub's clock (callers that must backdate a stage
+    /// capture this before doing the work, then use [`Self::event_at`]).
+    pub fn now_ns(&self) -> u64 {
+        self.clock.now_ns()
+    }
+
+    fn shard(&self, id: u64) -> &Mutex<Shard> {
+        &self.shards[(id % N_SHARDS as u64) as usize]
+    }
+
+    fn lock(&self, id: u64) -> std::sync::MutexGuard<'_, Shard> {
+        // tracing must never take the tier down: recover from poison
+        self.shard(id).lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Mint the span for a sampled request and stamp `stage` now.
+    pub fn begin(&self, id: u64, lane: Lane, stage: Stage) {
+        if !self.sampled(id) {
+            return;
+        }
+        let t = self.clock.now_ns();
+        let mut sh = self.lock(id);
+        if sh.active.len() >= MAX_ACTIVE_PER_SHARD {
+            return;
+        }
+        let span = sh.active.entry(id).or_insert_with(|| Span::new(id, lane));
+        span.record(stage, t);
+    }
+
+    /// Stamp `stage` now on an active span (no-op if unsampled/unknown).
+    pub fn event(&self, id: u64, stage: Stage) {
+        self.event_at(id, stage, self.clock.now_ns());
+    }
+
+    /// Stamp `stage` at an explicit time — how the gateway backdates
+    /// `accepted`/`parsed` once `submit` has returned the ids.
+    pub fn event_at(&self, id: u64, stage: Stage, t_ns: u64) {
+        if !self.sampled(id) {
+            return;
+        }
+        if let Some(span) = self.lock(id).active.get_mut(&id) {
+            span.record(stage, t_ns);
+        }
+    }
+
+    /// Record one more dispatch attempt (classify retry).
+    pub fn attempt(&self, id: u64) {
+        if !self.sampled(id) {
+            return;
+        }
+        if let Some(span) = self.lock(id).active.get_mut(&id) {
+            span.attempts += 1;
+        }
+    }
+
+    /// Record a session migration (generate lane fault recovery).
+    pub fn migrated(&self, id: u64) {
+        if !self.sampled(id) {
+            return;
+        }
+        if let Some(span) = self.lock(id).active.get_mut(&id) {
+            span.migrated += 1;
+            span.attempts += 1;
+        }
+    }
+
+    /// Attach the terminal fault code.
+    pub fn fault(&self, id: u64, code: &'static str) {
+        if !self.sampled(id) {
+            return;
+        }
+        if let Some(span) = self.lock(id).active.get_mut(&id) {
+            span.fault = Some(code);
+        }
+    }
+
+    /// Attach the prefill/decode execution split (generate sessions).
+    pub fn phases(&self, id: u64, prefill: Duration, decode: Duration) {
+        if !self.sampled(id) {
+            return;
+        }
+        if let Some(span) = self.lock(id).active.get_mut(&id) {
+            span.prefill_ns = Some(prefill.as_nanos() as u64);
+            span.decode_ns = Some(decode.as_nanos() as u64);
+        }
+    }
+
+    /// Terminal stamp (`Done` or `Faulted`): move the span to the
+    /// completed ring (dropping the oldest at capacity) and append it
+    /// to the JSONL sink when armed.
+    pub fn finish(&self, id: u64, stage: Stage) {
+        if !self.sampled(id) {
+            return;
+        }
+        let t = self.clock.now_ns();
+        let mut sh = self.lock(id);
+        if let Some(mut span) = sh.active.remove(&id) {
+            span.record(stage, t);
+            if sh.done.len() >= self.capacity {
+                sh.done.pop_front();
+            }
+            sh.done.push_back(span.clone());
+            drop(sh);
+            self.completed.fetch_add(1, Ordering::Relaxed);
+            if let Some(f) = &self.sink {
+                let mut f = f.lock().unwrap_or_else(|e| e.into_inner());
+                let _ = writeln!(f, "{}", span.to_json());
+            }
+        }
+    }
+
+    /// The most recently completed `n` spans, newest first (merged
+    /// across shards by terminal timestamp).
+    pub fn recent(&self, n: usize) -> Vec<Span> {
+        let mut all: Vec<Span> = Vec::new();
+        for sh in &self.shards {
+            let sh = sh.lock().unwrap_or_else(|e| e.into_inner());
+            all.extend(sh.done.iter().cloned());
+        }
+        all.sort_by_key(|s| std::cmp::Reverse((s.finished_at().unwrap_or(0), s.id)));
+        all.truncate(n);
+        all
+    }
+
+    /// Completed spans since startup (spans can age out of the rings;
+    /// this counter does not).
+    pub fn completed(&self) -> u64 {
+        self.completed.load(Ordering::Relaxed)
+    }
+
+    /// Spans currently in flight.
+    pub fn active_count(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|sh| sh.lock().unwrap_or_else(|e| e.into_inner()).active.len())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::json::Json;
+
+    fn manual_hub(sample_every: u64, cap: usize) -> (TraceHub, Clock) {
+        let clock = Clock::manual();
+        (TraceHub::new(clock.clone(), sample_every, cap), clock)
+    }
+
+    #[test]
+    fn span_lifecycle_is_deterministic_under_a_manual_clock() {
+        let (hub, clock) = manual_hub(1, 16);
+        hub.begin(7, Lane::Classify, Stage::Admitted);
+        clock.advance(Duration::from_micros(10));
+        hub.event(7, Stage::Queued);
+        clock.advance(Duration::from_micros(5));
+        hub.event(7, Stage::Dispatched);
+        clock.advance(Duration::from_micros(20));
+        hub.event(7, Stage::ExecStart);
+        clock.advance(Duration::from_micros(100));
+        hub.event(7, Stage::ExecEnd);
+        clock.advance(Duration::from_micros(1));
+        hub.finish(7, Stage::Done);
+
+        let spans = hub.recent(8);
+        assert_eq!(spans.len(), 1);
+        let s = &spans[0];
+        assert_eq!(s.id, 7);
+        assert_eq!(s.stage(Stage::Admitted), Some(0));
+        assert_eq!(s.stage(Stage::Queued), Some(10_000));
+        assert_eq!(s.stage(Stage::Dispatched), Some(15_000));
+        assert_eq!(s.stage(Stage::ExecStart), Some(35_000));
+        assert_eq!(s.stage(Stage::ExecEnd), Some(135_000));
+        assert_eq!(s.stage(Stage::Done), Some(136_000));
+        assert_eq!(s.total_ns(), Some(136_000));
+        assert_eq!(s.attempts, 1);
+        assert_eq!(hub.completed(), 1);
+        assert_eq!(hub.active_count(), 0);
+    }
+
+    #[test]
+    fn merge_policy_keeps_first_start_and_last_end_across_retries() {
+        let (hub, clock) = manual_hub(1, 16);
+        hub.begin(0, Lane::Classify, Stage::Admitted);
+        clock.advance(Duration::from_micros(1));
+        hub.event(0, Stage::ExecStart); // attempt 1 @ 1000
+        clock.advance(Duration::from_micros(1));
+        hub.attempt(0);
+        hub.event(0, Stage::ExecStart); // attempt 2 @ 2000: earliest wins
+        clock.advance(Duration::from_micros(1));
+        hub.event(0, Stage::ExecEnd); // @ 3000
+        clock.advance(Duration::from_micros(1));
+        hub.event(0, Stage::ExecEnd); // @ 4000: latest wins
+        hub.finish(0, Stage::Done);
+        let s = &hub.recent(1)[0];
+        assert_eq!(s.stage(Stage::ExecStart), Some(1_000));
+        assert_eq!(s.stage(Stage::ExecEnd), Some(4_000));
+        assert_eq!(s.attempts, 2);
+    }
+
+    #[test]
+    fn sampling_knob_drops_unselected_ids_and_zero_disables() {
+        let (hub, _clock) = manual_hub(4, 16);
+        for id in 0..8u64 {
+            hub.begin(id, Lane::Classify, Stage::Admitted);
+            hub.finish(id, Stage::Done);
+        }
+        assert_eq!(hub.completed(), 2, "ids 0 and 4 out of 0..8 at 1-in-4");
+        hub.set_sample_every(0);
+        hub.begin(8, Lane::Classify, Stage::Admitted);
+        hub.finish(8, Stage::Done);
+        assert_eq!(hub.completed(), 2, "0 disables tracing");
+        assert_eq!(hub.active_count(), 0);
+    }
+
+    #[test]
+    fn completed_ring_is_bounded_and_recent_returns_newest_first() {
+        let (hub, clock) = manual_hub(1, 2); // 2 per shard × 8 shards
+        for id in 0..64u64 {
+            hub.begin(id, Lane::Classify, Stage::Admitted);
+            clock.advance(Duration::from_nanos(1));
+            hub.finish(id, Stage::Done);
+        }
+        let spans = hub.recent(1000);
+        assert_eq!(spans.len(), 16, "rings cap retention at 2 × 8 shards");
+        assert_eq!(spans[0].id, 63, "newest first");
+        assert!(spans.windows(2).all(|w| {
+            w[0].finished_at().unwrap() >= w[1].finished_at().unwrap()
+        }));
+        assert_eq!(hub.completed(), 64, "the counter outlives the rings");
+    }
+
+    #[test]
+    fn fault_lineage_and_phases_land_in_the_json() {
+        let (hub, clock) = manual_hub(1, 16);
+        hub.begin(3, Lane::Generate, Stage::Admitted);
+        clock.advance(Duration::from_micros(2));
+        hub.migrated(3);
+        hub.fault(3, "replica_fault");
+        hub.phases(3, Duration::from_micros(7), Duration::from_micros(9));
+        hub.finish(3, Stage::Faulted);
+        let s = &hub.recent(1)[0];
+        assert_eq!(s.fault, Some("replica_fault"));
+        assert_eq!(s.migrated, 1);
+        assert_eq!(s.attempts, 2);
+
+        let doc = Json::parse(&s.to_json()).expect("span JSON parses");
+        assert_eq!(doc.get("id").unwrap().as_f64(), Some(3.0));
+        assert_eq!(doc.get("lane").unwrap().as_str(), Some("generate"));
+        assert_eq!(doc.get("fault").unwrap().as_str(), Some("replica_fault"));
+        assert_eq!(doc.get("prefill_ns").unwrap().as_f64(), Some(7_000.0));
+        assert_eq!(doc.get("decode_ns").unwrap().as_f64(), Some(9_000.0));
+        let stages = doc.get("stages").unwrap();
+        assert_eq!(stages.get("admitted").unwrap().as_f64(), Some(0.0));
+        assert_eq!(stages.get("faulted").unwrap().as_f64(), Some(2_000.0));
+        assert!(stages.get("done").is_none(), "absent stages are omitted");
+    }
+
+    #[test]
+    fn jsonl_sink_appends_one_parseable_line_per_span() {
+        let path = std::env::temp_dir()
+            .join(format!("esact_trace_test_{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        {
+            let clock = Clock::manual();
+            let hub = TraceHub::new(clock.clone(), 1, 16).with_sink_path(&path).unwrap();
+            for id in 0..3u64 {
+                hub.begin(id, Lane::Classify, Stage::Admitted);
+                clock.advance(Duration::from_micros(1));
+                hub.finish(id, Stage::Done);
+            }
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        for (i, line) in lines.iter().enumerate() {
+            let doc = Json::parse(line).expect("JSONL line parses");
+            assert_eq!(doc.get("id").unwrap().as_f64(), Some(i as f64));
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -239,6 +239,7 @@ fn mixed_chaos_load_on_tier_handle_reconciles_metrics() {
             steps_per_slice: 2,
             max_sessions: 4,
             prefill_chunk: 0,
+            trace_sample: 1,
         },
     )
     .unwrap();
@@ -327,4 +328,20 @@ fn mixed_chaos_load_on_tier_handle_reconciles_metrics() {
     assert_eq!(snap.generate.respawns, generate.respawns);
     assert_eq!(snap.serve.retried, serve.retried);
     assert_eq!(snap.generate.migrated, generate.migrated);
+
+    // the fault path lands in trace spans with its retry lineage:
+    // every submission completed a span, terminal faults carry a fault
+    // code, recovered faults show up as extra attempts / migrations
+    let spans = srv.obs().trace.recent(total);
+    assert_eq!(spans.len(), total, "one completed span per submission");
+    let faulted_spans = spans.iter().filter(|s| s.fault.is_some()).count();
+    assert_eq!(faulted_spans, fault_answers, "typed fault answers and faulted spans agree");
+    if serve.retried + generate.migrated > 0 {
+        assert!(
+            spans.iter().any(|s| s.attempts > 1),
+            "recovered faults must leave attempt lineage in spans"
+        );
+    }
+    let migrated_spans = spans.iter().filter(|s| s.migrated > 0).count();
+    assert_eq!(migrated_spans, generate.migrated, "migrations land in spans");
 }

@@ -36,7 +36,11 @@ Dispatches on the current report's `schema`:
   marginal per-idle-connection memory cap — and `slow_loris` — every
   half-open connection must be reaped on the idle timer (structural,
   machine-independent) while active traffic holds its throughput
-  floor.
+  floor. The observability PR adds a `tracing` cell: the same
+  closed-loop run with 1-in-1 span tracing + histogram observation vs
+  tracing disabled must not cost more than the baseline's
+  `overhead_frac_max` of throughput (a same-machine, same-moment
+  ratio, so no cross-runner noise).
 * schema 6 — the paged-KV bench's BENCH_6.json: per-session-count
   aggregate tokens/sec floors at a fixed pool size, the headline
   aggregate-throughput-rises-with-sessions check (prefix sharing
@@ -77,7 +81,7 @@ BASELINE_GROUPS = {
     2: ("saturated",),
     3: ("decode",),
     4: ("forward", "crossover"),
-    5: ("gateway", "streaming", "conn_sweep", "slow_loris", "fault"),
+    5: ("gateway", "streaming", "conn_sweep", "slow_loris", "fault", "tracing"),
     6: ("paged",),
 }
 
@@ -318,7 +322,7 @@ def check_forward(cur: dict, base: dict) -> list:
 
 def check_gateway(cur: dict, base: dict) -> list:
     failures = []
-    for key in ("gateway", "streaming", "conn_sweep", "slow_loris"):
+    for key in ("gateway", "streaming", "conn_sweep", "slow_loris", "fault", "tracing"):
         if key not in cur:
             die(f"current report missing '{key}'")
     for row in cur["gateway"]:
@@ -537,6 +541,39 @@ def check_gateway(cur: dict, base: dict) -> list:
         print(
             f"  ! warning: goodput frac {fault['goodput_frac']:.2f} is within "
             "0.1 of the floor"
+        )
+
+    # --- tracing cell: full observability must be nearly free -------
+    tracing = cur["tracing"]
+    for field in ("requests", "rps_on", "rps_off", "overhead_frac"):
+        if field not in tracing:
+            die(f"tracing cell missing '{field}': {tracing}")
+    btracing = base.get("tracing", {})
+    overhead_max = btracing.get("overhead_frac_max")
+    if overhead_max is None:
+        die("baseline 'tracing' group lacks 'overhead_frac_max'")
+    print(
+        f"tracing cell: {tracing['rps_on']:.1f} rps traced vs "
+        f"{tracing['rps_off']:.1f} rps untraced | overhead "
+        f"{tracing['overhead_frac']:+.1%} (cap {overhead_max:.0%})"
+    )
+    # structural: the traced run must actually have served traffic —
+    # an empty cell would make any overhead ratio meaningless
+    if tracing["rps_on"] <= 0.0:
+        failures.append("tracing cell served zero traced throughput — nothing measured")
+    # headline: 1-in-1 span tracing + histogram observation is a
+    # same-machine, same-moment ratio against the untraced run and
+    # must stay under the committed overhead cap
+    if tracing["overhead_frac"] > overhead_max:
+        failures.append(
+            f"tracing overhead {tracing['overhead_frac']:.1%} exceeds the "
+            f"{overhead_max:.0%} cap — span/histogram writes are on the hot "
+            "path's critical section"
+        )
+    elif tracing["overhead_frac"] > 0.75 * overhead_max:
+        print(
+            f"  ! warning: tracing overhead {tracing['overhead_frac']:.1%} is "
+            "within 25% of the cap"
         )
     return failures
 

@@ -12,8 +12,9 @@ classes:
 * fail  — a collapsed conn-sweep floor, an idle-herd inversion, a
   blown per-connection memory cap, an unreaped loris, a collapsed
   fault-cell goodput fraction, a fault cell with zero respawns or too
-  many terminal errors, and a missing group each exit 1 with the
-  matching failure text; on the paged side,
+  many terminal errors, a tracing cell whose overhead blows the cap
+  (or that served zero traced throughput), and a missing group each
+  exit 1 with the matching failure text; on the paged side,
   an aggregate-throughput inversion, a collapsed prefix hit rate, a
   sharing run that saves no blocks, a pool-size mismatch with the
   baseline, and zero copy-on-write copies each exit 1 likewise.
@@ -91,6 +92,14 @@ def healthy_report() -> dict:
             "throughput_rps": 42.0,
             "fault_free_rps": 45.0,
             "goodput_frac": 0.93,
+        },
+        "tracing": {
+            "requests": 96,
+            "rps_on": 44.0,
+            "rps_off": 45.0,
+            "overhead_frac": 0.022,
+            "queue_wait_p50_ms": 4.0,
+            "execute_p50_ms": 18.0,
         },
     }
 
@@ -228,6 +237,45 @@ def main() -> None:
     problems += expect(
         "fault terminal errors", code, out, 1,
         ["bench gate: FAIL", "retry budget is not absorbing"],
+    )
+
+    # warn: tracing overhead within 25% of the cap still exits 0
+    warn = healthy_report()
+    warn["tracing"]["rps_on"] = 41.4  # overhead 0.08, > 0.75 * 0.10 cap
+    warn["tracing"]["overhead_frac"] = 0.08
+    code, out = run_gate(warn, baseline)
+    problems += expect(
+        "tracing warn", code, out, 0,
+        ["bench gate: OK", "within 25% of the cap"],
+    )
+
+    # fail: tracing costs more than the overhead cap
+    bad = healthy_report()
+    bad["tracing"]["rps_on"] = 36.0  # overhead 0.2 vs cap 0.10
+    bad["tracing"]["overhead_frac"] = 0.20
+    code, out = run_gate(bad, baseline)
+    problems += expect(
+        "tracing overhead", code, out, 1,
+        ["bench gate: FAIL", "tracing overhead"],
+    )
+
+    # fail: a traced run that served nothing gates nothing (structural)
+    bad = healthy_report()
+    bad["tracing"]["rps_on"] = 0.0
+    bad["tracing"]["overhead_frac"] = 1.0
+    code, out = run_gate(bad, baseline)
+    problems += expect(
+        "tracing empty", code, out, 1,
+        ["bench gate: FAIL", "zero traced throughput"],
+    )
+
+    # fail: a baseline that lost the tracing group dies up front
+    stale = copy.deepcopy(baseline)
+    del stale["tracing"]
+    code, out = run_gate(healthy_report(), stale)
+    problems += expect(
+        "tracing stale baseline", code, out, 1,
+        ["bench gate: FAIL", "baseline is missing"],
     )
 
     # fail: report without the new groups must die loudly
